@@ -1,0 +1,56 @@
+//! Precision ablation — the paper's future-work direction ("future
+//! work can easily use other number representations") and the
+//! StreamBrain custom-float results: accuracy vs storage format for
+//! the streamed BCPNN state, plus the bandwidth/latency headroom
+//! narrower words buy on the memory-bound kernels.
+//!
+//!     cargo bench --bench ablation_precision
+
+use bcpnn_accel::config::by_name;
+use bcpnn_accel::data::synth;
+use bcpnn_accel::fpga::quant::{run_experiment, Format};
+use bcpnn_accel::fpga::timing::active_synapses;
+
+fn main() {
+    println!("== precision ablation (quantize-on-write training) ==\n");
+
+    let formats = [
+        Format::F32,
+        Format::Bf16,
+        Format::F16,
+        Format::Fixed { int_bits: 3, frac_bits: 12 },
+        Format::Fixed { int_bits: 2, frac_bits: 6 },
+        Format::Fixed { int_bits: 1, frac_bits: 3 },
+    ];
+
+    for name in ["tiny", "edge"] {
+        let cfg = by_name(name).unwrap();
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 384, 11, 0.15);
+        let (train, test) = d.split(256);
+        println!("{name} ({} classes, chance {:.0}%):", cfg.n_classes,
+                 100.0 / cfg.n_classes as f64);
+        println!("  format  bits  test_acc  joint-array MB/img (vs f32)");
+        let mb_f32 =
+            16.0 * active_synapses(&cfg) as f64 / 1e6; // 4 arrays x 4 B
+        for fmt in formats {
+            let r = run_experiment(&cfg, &train, &test, 2, fmt, 42);
+            println!(
+                "  {:<6} {:>4}  {:>7.1}%  {:>6.2} ({:.2}x)",
+                r.format.name(),
+                r.format.bits(),
+                r.test_acc * 100.0,
+                mb_f32 * r.traffic_ratio,
+                r.traffic_ratio
+            );
+        }
+        println!();
+    }
+
+    println!(
+        "reading: bf16/f16/q3.12 halve the streamed joint arrays — the \
+         memory-bound\ntrain kernels (Fig 6) would move ~2x up the \
+         bandwidth roof; accuracy cost is\nwithin noise until aggressive \
+         fixed-point (q1.3), matching the fixed-point\nBCPNN literature \
+         (Johansson & Lansner 2004) and StreamBrain's custom floats."
+    );
+}

@@ -1,0 +1,73 @@
+//! Stream-runtime microbenchmarks: FIFO ops/sec, pipeline dispatch
+//! overhead, and depth-analysis cost — the L3 hot-path numbers the
+//! §Perf pass tracks.
+//!
+//!     cargo bench --bench stream_runtime
+
+use bcpnn_accel::bench_harness as bh;
+use bcpnn_accel::stream::depth::{minimal_depths, simulate, StageSpec};
+use bcpnn_accel::stream::{Fifo, Pipeline};
+
+fn main() {
+    println!("== stream runtime microbenches ==");
+    println!("{}", bh::header());
+
+    // FIFO send/recv round trip, single thread (pure channel cost;
+    // interleaved so the bounded FIFO never fills).
+    let f = Fifo::with_capacity(64);
+    let r = bh::bench("fifo send+recv same-thread (1k items)", 3, 20, || {
+        for i in 0..1000u64 {
+            f.send(i).unwrap();
+            f.recv().unwrap();
+        }
+    });
+    println!("{}  ({:.0} Mops/s)", r.row(), 2000.0 / r.mean.as_secs_f64() / 1e6);
+
+    // Cross-thread streaming throughput.
+    let r = bh::bench("fifo producer->consumer (10k items)", 1, 10, || {
+        let f: Fifo<u64> = Fifo::with_capacity(256);
+        let tx = f.clone();
+        let h = std::thread::spawn(move || {
+            for i in 0..10_000u64 {
+                tx.send(i).unwrap();
+            }
+            tx.close();
+        });
+        let mut sum = 0u64;
+        while let Ok(v) = f.recv() {
+            sum = sum.wrapping_add(v);
+        }
+        std::hint::black_box(sum);
+        h.join().unwrap();
+    });
+    println!("{}  ({:.2} Mitems/s)", r.row(), 10_000.0 / r.mean.as_secs_f64() / 1e6);
+
+    // Pipeline dispatch overhead: empty stages.
+    for n_stages in [1usize, 2, 4] {
+        let r = bh::bench(&format!("pipeline {} no-op stages (5k items)", n_stages), 1, 5, || {
+            let mut p = Pipeline::source("src", 64, 0..5000u64);
+            for i in 0..n_stages {
+                p = p.stage(&format!("s{i}"), 64, |x: u64| x);
+            }
+            let (out, _) = p.collect();
+            std::hint::black_box(out.len());
+        });
+        println!("{}  ({:.0} ns/item/stage)", r.row(),
+                 r.mean.as_nanos() as f64 / 5000.0 / n_stages as f64);
+    }
+
+    // Depth analysis cost (the build-time cosim analogue).
+    let stages = vec![
+        StageSpec::streaming("read", 1),
+        StageSpec::with_barrier("softmax", 2, 8),
+        StageSpec::streaming("write", 1),
+    ];
+    let r = bh::bench("depth simulate (3 stages, 4k items)", 1, 10, || {
+        std::hint::black_box(simulate(&stages, &[8, 8], 4096));
+    });
+    println!("{}", r.row());
+    let r = bh::bench("minimal_depths search (3 stages)", 1, 5, || {
+        std::hint::black_box(minimal_depths(&stages, 1024, 0.05));
+    });
+    println!("{}", r.row());
+}

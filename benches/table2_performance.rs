@@ -1,0 +1,79 @@
+//! Table 2 bench: regenerates the paper's performance comparison.
+//!
+//! Two kinds of rows:
+//!  - **modeled** (paper shapes, models 1-3): the calibrated CPU/GPU/
+//!    FPGA models — printed with the paper's values for comparison;
+//!  - **measured** (reduced shapes): real timings on this host for the
+//!    pure-rust CPU baseline and the PJRT artifact path.
+//!
+//!     cargo bench --bench table2_performance
+
+use std::path::Path;
+
+use bcpnn_accel::baseline::cpu;
+use bcpnn_accel::bcpnn::Network;
+use bcpnn_accel::bench_harness as bh;
+use bcpnn_accel::config::by_name;
+use bcpnn_accel::coordinator::Driver;
+use bcpnn_accel::data::synth;
+use bcpnn_accel::report;
+use bcpnn_accel::runtime::Session;
+
+fn main() {
+    // Part 1: modeled Table 2 at paper shapes.
+    println!("{}", report::table2(&["model1", "model2", "model3"]).unwrap());
+    println!("{}", report::table2_totals(&["model1", "model2", "model3"]).unwrap());
+
+    // Part 2: measured rows at reduced shapes on this host.
+    println!("measured on this host (single core):");
+    println!("{}", bh::header());
+    for name in ["tiny", "small", "edge"] {
+        let cfg = by_name(name).unwrap();
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 256, 3, 0.15);
+
+        // CPU baseline: pure-rust sequential network.
+        let net = Network::new(cfg.clone(), 1);
+        let images = d.images.clone();
+        let r = bh::bench(&format!("{name}/cpu-rust/infer (256 img)"), 1, 5, || {
+            std::hint::black_box(cpu::measure_infer_ms(&net, &images));
+        });
+        println!("{}", r.row());
+        let mut net2 = Network::new(cfg.clone(), 1);
+        let images2 = d.images.clone();
+        let r = bh::bench(&format!("{name}/cpu-rust/train (256 img)"), 1, 3, || {
+            std::hint::black_box(cpu::measure_train_ms(&mut net2, &images2));
+        });
+        println!("{}", r.row());
+
+        // PJRT path (the accelerator stand-in): batched infer + train.
+        if Path::new("artifacts/manifest.json").exists() {
+            if let Ok(session) = Session::load(Path::new("artifacts"), name) {
+                let mut driver = Driver::new(session, name, 1).unwrap();
+                let batch: Vec<Vec<f32>> = d.images[..cfg.batch].to_vec();
+                let r = bh::bench(
+                    &format!("{name}/pjrt/infer_batch ({} img)", cfg.batch),
+                    2,
+                    10,
+                    || {
+                        std::hint::black_box(driver.infer_batch(&batch).unwrap());
+                    },
+                );
+                println!("{}  ({:.3} ms/img)", r.row(),
+                         r.mean.as_secs_f64() * 1e3 / cfg.batch as f64);
+                let batch2 = batch.clone();
+                let r = bh::bench(
+                    &format!("{name}/pjrt/unsup_batch ({} img)", cfg.batch),
+                    1,
+                    5,
+                    || {
+                        driver.unsup_batch(&batch2).unwrap();
+                    },
+                );
+                println!("{}  ({:.3} ms/img)", r.row(),
+                         r.mean.as_secs_f64() * 1e3 / cfg.batch as f64);
+            }
+        } else {
+            println!("(artifacts missing — PJRT rows skipped; run `make artifacts`)");
+        }
+    }
+}

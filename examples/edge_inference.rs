@@ -1,0 +1,105 @@
+//! Edge inference serving — the deployment scenario the paper's
+//! inference-only kernel targets ("particularly beneficial for
+//! energy-sensitive edge deployments").
+//!
+//! Trains briefly, then serves a stream of requests through the
+//! dynamic-batching inference server, reporting latency percentiles,
+//! throughput, batching efficiency, and the projected on-FPGA
+//! latency/energy for the same workload from the device model.
+//!
+//!     cargo run --release --example edge_inference -- --config edge
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use bcpnn_accel::config::{by_name, dataset_spec};
+use bcpnn_accel::coordinator::{Driver, InferenceServer, ServerConfig, TrainOptions};
+use bcpnn_accel::data::synth;
+use bcpnn_accel::fpga::device::{FpgaDevice, KernelVersion};
+use bcpnn_accel::fpga::{power, timing};
+use bcpnn_accel::runtime::Session;
+use bcpnn_accel::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let name = args.get_or("config", "edge").to_string();
+    let cfg = by_name(&name)?;
+    let n_requests: usize = args.get_parse("requests", 1024usize)?;
+    let seed: u64 = args.get_parse("seed", 42u64)?;
+    let spec = dataset_spec(&name);
+
+    println!("== edge inference serving ({name}) ==");
+
+    // Phase 1: train the model (full session), then hand the trained
+    // parameters to a fresh infer-only server — mirroring the paper's
+    // flow of deploying a trained network into the inference build.
+    let session = Session::load(std::path::Path::new("artifacts"), &name)?;
+    let mut driver = Driver::new(session, &name, seed)?;
+    let data = synth::generate(cfg.img_side, cfg.n_classes, spec.train + spec.test, seed, 0.15);
+    let (train, test) = data.split(spec.train);
+    let out = driver.train(
+        &train,
+        &test,
+        &TrainOptions { epochs: spec.epochs.min(3), ..Default::default() },
+    )?;
+    println!(
+        "trained: {:.1}% test accuracy ({} epochs)",
+        out.test_acc * 100.0,
+        spec.epochs.min(3)
+    );
+    let trained = driver.params.clone();
+
+    // Phase 2: serve. The server thread owns its own session (PJRT
+    // handles are not Send); we inject the trained parameters.
+    let name2 = name.clone();
+    let server = InferenceServer::start(
+        move || {
+            let session =
+                Session::load_modes(std::path::Path::new("artifacts"), &name2, &["infer"])?;
+            let mut d = Driver::new(session, &name2, seed)?;
+            d.set_params(trained);
+            Ok(d)
+        },
+        ServerConfig { queue_depth: 256, flush_timeout: Duration::from_millis(1) },
+    )?;
+
+    let reqs = synth::generate(cfg.img_side, cfg.n_classes, n_requests, seed + 1, 0.15);
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(n_requests);
+    for img in &reqs.images {
+        handles.push(server.submit(img.clone())?);
+    }
+    let mut correct = 0usize;
+    for (rx, &label) in handles.iter().zip(&reqs.labels) {
+        let probs = rx.recv_timeout(Duration::from_secs(60))?;
+        let pred = probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if pred as u32 == label {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let rep = server.shutdown();
+
+    println!("\nserved {} requests in {:.2}s  ({:.0} req/s)",
+             rep.served, wall.as_secs_f64(), rep.served as f64 / wall.as_secs_f64());
+    println!("batches: {} (mean fill {:.1}/{})", rep.batches, rep.mean_fill, cfg.batch);
+    println!(
+        "latency: mean {:.3} ms  p50 {:.3}  p99 {:.3}  max {:.3}",
+        rep.latency.mean_ms, rep.latency.p50_ms, rep.latency.p99_ms, rep.latency.max_ms
+    );
+    println!("accuracy under serving: {:.1}%", 100.0 * correct as f64 / n_requests as f64);
+
+    // Device-model projection for the same workload on the U55C.
+    let dev = FpgaDevice::u55c();
+    let f_ms = timing::latency_ms(&cfg, KernelVersion::Infer, &dev);
+    let f_w = power::power_watts(&cfg, KernelVersion::Infer, &dev);
+    println!("\nU55C projection (infer build): {:.3} ms/img, {:.1} W, {:.2} mJ/img",
+             f_ms, f_w, f_ms * f_w);
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Quickstart — the end-to-end driver (DESIGN.md "End-to-end
+//! validation"): trains a full BCPNN through the real three-layer
+//! stack (Pallas kernels -> JAX model -> AOT HLO -> PJRT from rust),
+//! logging the accuracy curve per epoch, then evaluates and reports
+//! per-image latencies.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!     # options: --config small --epochs 5 --struct --seed 7
+//!
+//! The run recorded in EXPERIMENTS.md §E2E used the defaults.
+
+use anyhow::Result;
+
+use bcpnn_accel::config::{by_name, dataset_spec};
+use bcpnn_accel::coordinator::{Driver, TrainOptions};
+use bcpnn_accel::data::synth;
+use bcpnn_accel::runtime::Session;
+use bcpnn_accel::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["struct"])?;
+    let name = args.get_or("config", "small").to_string();
+    let cfg = by_name(&name)?;
+    let spec = dataset_spec(&name);
+    let epochs: usize = args.get_parse("epochs", spec.epochs)?;
+    let seed: u64 = args.get_parse("seed", 42u64)?;
+
+    println!("== BCPNN quickstart ==");
+    println!(
+        "config {name}: {}x{} input, {}x{} hidden, {} classes, nactHi {}",
+        cfg.img_side, cfg.img_side, cfg.hc_h, cfg.mc_h, cfg.n_classes, cfg.nact_hi
+    );
+
+    let t0 = std::time::Instant::now();
+    let session = Session::load(std::path::Path::new("artifacts"), &name)?;
+    println!(
+        "artifacts compiled on {} in {:.2}s (python is done — rust only from here)",
+        session.platform(),
+        t0.elapsed().as_secs_f64()
+    );
+    let mut driver = Driver::new(session, &name, seed)?;
+
+    let data = synth::generate(
+        cfg.img_side, cfg.n_classes, spec.train + spec.test, seed, 0.15,
+    );
+    let (train, test) = data.split(spec.train);
+    println!("data: {} train / {} test synthetic images\n", train.len(), test.len());
+
+    // Epoch loop with an accuracy curve: train one epoch at a time so
+    // we can log the curve (the paper's semi-unsupervised protocol:
+    // unsupervised epochs, then one supervised pass).
+    let structural = args.flag("struct");
+    println!("epoch  unsup_ms/img  train_acc  test_acc");
+    let mut last = None;
+    for e in 1..=epochs {
+        let out = driver.train(
+            &train,
+            &test,
+            &TrainOptions { epochs: 1, structural, struct_interval: 4, seed },
+        )?;
+        println!(
+            "{e:>5}  {:>12.3}  {:>8.1}%  {:>7.1}%",
+            out.unsup.mean_ms,
+            out.train_acc * 100.0,
+            out.test_acc * 100.0
+        );
+        last = Some(out);
+    }
+
+    let out = last.expect("at least one epoch");
+    println!("\nfinal: train {:.1}%  test {:.1}%  (chance {:.1}%)",
+             out.train_acc * 100.0, out.test_acc * 100.0,
+             100.0 / cfg.n_classes as f64);
+    println!(
+        "per-image latency: unsup {:.3} ms  sup {:.3} ms  infer {:.3} ms (p99 {:.3} ms)",
+        out.unsup.mean_ms, out.sup.mean_ms, out.infer.mean_ms, out.infer.p99_ms
+    );
+    if structural {
+        println!(
+            "structural plasticity: {} rewires, {} swaps, {:.3}s host time",
+            out.rewire_passes, out.rewire_swaps, out.struct_host_s
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Fig. 6 reproduction + exploration: the FPGA roofline (Eqs. 2-5)
+//! with the operating points of every built-in model, plus a what-if
+//! sweep over kernel frequency and HBM partitioning that shows where
+//! the design's headroom is.
+//!
+//!     cargo run --release --example roofline_analysis
+
+use anyhow::Result;
+
+use bcpnn_accel::config::registry;
+use bcpnn_accel::fpga::device::{FpgaDevice, KernelVersion};
+use bcpnn_accel::fpga::hbm::HbmModel;
+use bcpnn_accel::report;
+use bcpnn_accel::roofline;
+
+fn main() -> Result<()> {
+    let dev = FpgaDevice::u55c();
+
+    println!("== Fig 6: roofline analysis ({}) ==\n", dev.name);
+    println!(
+        "Eq.4  B_HBM  = {:.1} GB/s  (32 ch x 256 b x 450 MHz)",
+        dev.hbm_bandwidth() / 1e9
+    );
+    println!(
+        "Eq.3  C_FPGA = {:.2} GF/s at 100 MHz (paper: 288.77 GF/s)",
+        roofline::peak_compute_flops(&dev, 100e6) / 1e9
+    );
+    println!(
+        "Eq.5  M_b    = {:.3} FLOP/byte at 100 MHz\n",
+        roofline::machine_balance(&dev, 100e6)
+    );
+
+    // The paper's Fig 6 table (train + struct builds of models 1-3).
+    println!("{}", report::fig6(&["model1", "model2", "model3"])?);
+
+    // Roofline curve series (for plotting): attainable GF/s vs AI at
+    // the three train-build frequencies.
+    println!("roofline series (AI, attainable GF/s) per frequency:");
+    for mhz in [60.0, 110.0, 150.0] {
+        print!("  {mhz:>5.0} MHz:");
+        for ai in [0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0] {
+            let gf = roofline::attainable_flops(&dev, mhz * 1e6, ai) / 1e9;
+            print!(" ({ai},{gf:.0})");
+        }
+        println!();
+    }
+
+    // What-if: how the operating point moves with HBM partitioning —
+    // the knob Fig. 4 is about.
+    println!("\nHBM partition sweep (model1 train): floats/cycle and stream GB/s at 150 MHz");
+    for p in [1u32, 2, 4, 8] {
+        let m = HbmModel { partitions: p, burst_bits: 512, kernel_freq_hz: 150e6 };
+        println!(
+            "  p={p}: {:>3} floats/cycle, {:>6.1} GB/s{}",
+            m.floats_per_cycle(),
+            m.stream_bandwidth(&dev) / 1e9,
+            if p == 4 { "   <- paper's choice (64-float packets)" } else { "" }
+        );
+    }
+
+    // All built-in configs, for completeness.
+    println!("\nall configs (train build):");
+    println!("config   AI(F/B)  attained(GF/s)  % of own roof");
+    for (name, cfg) in registry() {
+        let op = roofline::operating_point(&cfg, KernelVersion::Train, &dev);
+        println!(
+            "{name:<8} {:>6.3}  {:>13.2}  {:>6.1}%",
+            op.ai,
+            op.attained_flops / 1e9,
+            100.0 * op.efficiency()
+        );
+    }
+    Ok(())
+}

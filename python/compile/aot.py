@@ -1,0 +1,130 @@
+"""AOT lowering: JAX/Pallas BCPNN -> HLO text artifacts + manifest.
+
+Emits HLO *text* (NOT .serialize()): jax >= 0.5 serializes HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` 0.1.6 crate links) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+For each (config x mode) this writes ``artifacts/<cfg>_<mode>.hlo.txt``
+and records the exact positional input/output signature in
+``artifacts/manifest.json`` — the Rust runtime marshals Literals strictly
+by that manifest, so python and rust can never drift silently.
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts [--full]
+    python -m compile.aot --configs tiny small --modes infer
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, DATASETS, DEFAULT_AOT_CONFIGS, MODES, ModelConfig
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+_INPUT_NAMES = {
+    "infer": ("wij", "bj", "who", "bk", "mask_hc", "imgs"),
+    "train_unsup": ("pi", "pj", "pij", "mask_hc", "imgs"),
+    "train_sup": ("wij", "bj", "mask_hc", "qi", "qk", "qik", "who", "bk",
+                  "imgs", "labels"),
+}
+
+_OUTPUT_NAMES = {
+    "infer": ("probs",),
+    "train_unsup": ("pi", "pj", "pij", "wij", "bj"),
+    "train_sup": ("qi", "qk", "qik", "who", "bk"),
+}
+
+
+def _sig(args):
+    return [
+        {"shape": list(a.shape), "dtype": a.dtype.name} for a in args
+    ]
+
+
+def lower_artifact(cfg: ModelConfig, mode: str):
+    """Lower one (config, mode) pair; returns (hlo_text, manifest_entry)."""
+    fn = model.build_fn(cfg, mode, use_pallas=True)
+    args = model.example_args(cfg, mode)
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    out_shapes = [
+        {"shape": list(s.shape), "dtype": s.dtype.name}
+        for s in jax.eval_shape(fn, *args)
+    ]
+    entry = {
+        "mode": mode,
+        "config": {
+            "name": cfg.name, "img_side": cfg.img_side, "hc_in": cfg.hc_in,
+            "mc_in": cfg.mc_in, "hc_h": cfg.hc_h, "mc_h": cfg.mc_h,
+            "n_in": cfg.n_in, "n_h": cfg.n_h, "n_classes": cfg.n_classes,
+            "nact_hi": cfg.nact_hi, "alpha": cfg.alpha, "eps": cfg.eps,
+            "gain": cfg.gain, "batch": cfg.batch,
+            "tile_in": cfg.resolved_tile_in(), "tile_h": cfg.resolved_tile_h(),
+        },
+        "dataset": DATASETS.get(cfg.name, {}),
+        "inputs": [
+            {"name": n, **s}
+            for n, s in zip(_INPUT_NAMES[mode], _sig(args))
+        ],
+        "outputs": [
+            {"name": n, **s}
+            for n, s in zip(_OUTPUT_NAMES[mode], out_shapes)
+        ],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", nargs="*", default=None,
+                    help="config names (default: tiny small edge)")
+    ap.add_argument("--modes", nargs="*", default=list(MODES))
+    ap.add_argument("--full", action="store_true",
+                    help="also lower the paper-shape models 1-3")
+    args = ap.parse_args()
+
+    names = list(args.configs or DEFAULT_AOT_CONFIGS)
+    if args.full:
+        names += [n for n in ("model1", "model2", "model3") if n not in names]
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_path = out_dir / "manifest.json"
+    manifest = {"artifacts": {}}
+    if manifest_path.exists():
+        manifest = json.loads(manifest_path.read_text())
+
+    for name in names:
+        cfg = CONFIGS[name]
+        for mode in args.modes:
+            key = f"{name}_{mode}"
+            text, entry = lower_artifact(cfg, mode)
+            entry["file"] = f"{key}.hlo.txt"
+            (out_dir / entry["file"]).write_text(text)
+            manifest["artifacts"][key] = entry
+            print(f"wrote {key}: {len(text)} chars "
+                  f"({len(entry['inputs'])} in / {len(entry['outputs'])} out)")
+
+    manifest_path.write_text(json.dumps(manifest, indent=2))
+    print(f"manifest: {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

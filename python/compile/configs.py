@@ -1,0 +1,134 @@
+"""Model configurations for the BCPNN accelerator reproduction.
+
+Mirrors Table 1 of the paper plus reduced configs used for measured
+(interpret-mode Pallas) execution. The Rust side carries the same set in
+`rust/src/config/`; the two must stay in sync (checked by
+python/tests/test_configs.py against configs/models.toml).
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One BCPNN network configuration (paper Table 1 row or reduced).
+
+    Layout conventions (shared with ref.py / kernels / rust):
+      - input layer:  ``hc_in`` hypercolumns x ``mc_in`` minicolumns
+        (one HC per pixel, mc_in=2 intensity coding [v, 1-v]);
+        ``n_in = hc_in * mc_in`` units.
+      - hidden layer: ``hc_h`` x ``mc_h``; ``n_h = hc_h * mc_h`` units.
+      - output layer: 1 hypercolumn x ``n_classes`` minicolumns.
+      - input->hidden weights / joint traces: shape ``(n_in, n_h)``.
+      - structural-plasticity mask: ``(hc_in, hc_h)`` 0/1, ``nact_hi``
+        active input HCs per hidden HC.
+    """
+
+    name: str
+    img_side: int          # square input image side (hc_in = img_side**2)
+    hc_h: int              # hidden hypercolumns
+    mc_h: int              # hidden minicolumns per HC
+    n_classes: int
+    nact_hi: int           # active input HCs per hidden HC (sparsity)
+    alpha: float = 1e-2    # EMA learning time constant for p-traces
+    batch: int = 32        # images per AOT artifact invocation (scan len)
+    mc_in: int = 2         # minicolumns per input HC (intensity coding)
+    eps: float = 1e-8      # probability floor inside log()
+    gain: float = 1.0      # softmax gain on support values
+    # Tile sizes for the Pallas kernels (the "HBM packet" analogue).
+    #
+    # 0 = auto. Auto resolves to the FULL array dimension: under
+    # interpret=True (the only executable path on CPU PJRT) every grid
+    # step is emulated with dynamic slices, so grid=1 is fastest — the
+    # §Perf sweep measured 7-80x vs 128-wide tiles (EXPERIMENTS.md).
+    # For a real-TPU build set explicit tiles that fit VMEM (e.g.
+    # 256x512: 3 f32 buffers = 1.5 MB << 16 MB; DESIGN.md §Hardware-
+    # Adaptation) — the kernels honour any divisor.
+    tile_in: int = 0       # 0 = auto (full n_in on the interpret path)
+    tile_h: int = 0        # 0 = auto (full n_h on the interpret path)
+
+    @property
+    def hc_in(self) -> int:
+        return self.img_side * self.img_side
+
+    @property
+    def n_in(self) -> int:
+        return self.hc_in * self.mc_in
+
+    @property
+    def n_h(self) -> int:
+        return self.hc_h * self.mc_h
+
+    @property
+    def n_out(self) -> int:
+        return self.n_classes
+
+    def resolved_tile_in(self) -> int:
+        return self.tile_in or self.n_in
+
+    def resolved_tile_h(self) -> int:
+        return self.tile_h or self.n_h
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# The configuration registry.
+#
+# tiny / small / edge are reduced shapes for measured interpret-mode runs
+# (tests, examples, e2e benches). model1/2/3 are the paper's Table 1 shapes,
+# used by the analytical paths (resource estimator, roofline, timing model)
+# and AOT-lowerable with --full.
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    # Reduced, measured configs -------------------------------------------
+    "tiny": ModelConfig(
+        name="tiny", img_side=8, hc_h=4, mc_h=16, n_classes=4,
+        nact_hi=32, alpha=2e-2, batch=16,
+    ),
+    "small": ModelConfig(
+        name="small", img_side=12, hc_h=8, mc_h=16, n_classes=10,
+        nact_hi=64, alpha=1e-2, batch=32,
+    ),
+    # edge alpha=5e-2: the 2-class readout needs a short trace time
+    # constant at this dataset size (1e-2 stalls at chance — see
+    # EXPERIMENTS.md §E2E notes).
+    "edge": ModelConfig(
+        name="edge", img_side=16, hc_h=8, mc_h=32, n_classes=2,
+        nact_hi=96, alpha=5e-2, batch=32,
+    ),
+    # Paper Table 1 shapes --------------------------------------------------
+    "model1": ModelConfig(  # MNIST
+        name="model1", img_side=28, hc_h=32, mc_h=128, n_classes=10,
+        nact_hi=128, alpha=1e-3, batch=32,
+    ),
+    "model2": ModelConfig(  # PneumoniaMNIST
+        name="model2", img_side=28, hc_h=32, mc_h=256, n_classes=2,
+        nact_hi=128, alpha=1e-3, batch=32,
+    ),
+    "model3": ModelConfig(  # BreastMNIST
+        name="model3", img_side=64, hc_h=32, mc_h=128, n_classes=2,
+        nact_hi=128, alpha=1e-3, batch=32,
+    ),
+}
+
+# Dataset sizes per paper Table 1 (train, test, unsupervised epochs).
+DATASETS = {
+    "model1": {"train": 60000, "test": 10000, "epochs": 5},
+    "model2": {"train": 4708, "test": 624, "epochs": 20},
+    "model3": {"train": 546, "test": 156, "epochs": 100},
+    "tiny": {"train": 256, "test": 64, "epochs": 3},
+    "small": {"train": 512, "test": 128, "epochs": 3},
+    "edge": {"train": 512, "test": 128, "epochs": 5},
+}
+
+MODES = ("infer", "train_unsup", "train_sup")
+
+DEFAULT_AOT_CONFIGS = ("tiny", "small", "edge")
+FULL_AOT_CONFIGS = tuple(CONFIGS)

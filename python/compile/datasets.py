@@ -1,0 +1,88 @@
+"""Synthetic structured datasets (build-time python mirror).
+
+The paper evaluates MNIST / PneumoniaMNIST / BreastMNIST; neither is
+available offline here, so (per the substitution rule) we generate
+class-conditional structured images with the same shapes and sizes. The
+generator produces per-class "prototype" blob/stroke patterns plus pixel
+noise and random intensity jitter — enough class structure for BCPNN's
+unsupervised representation learning to separate classes well above
+chance, while exercising exactly the tensor shapes of Table 1.
+
+The Rust side (`rust/src/data/`) implements the same generator with the
+same xorshift PRNG so python tests and rust runs see identical data for
+identical seeds (cross-checked in python/tests/test_datasets.py against
+vectors in rust tests).
+"""
+
+import numpy as np
+
+
+_MASK64 = (1 << 64) - 1
+
+
+class XorShift64:
+    """xorshift64* PRNG — tiny, portable, identical in rust/src/data/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = (seed & _MASK64) or 0x9E3779B97F4A7C15
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= x >> 12
+        x ^= (x << 25) & _MASK64
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & _MASK64
+
+    def next_f32(self) -> float:
+        """Uniform in [0, 1) with 24 bits of mantissa (matches rust)."""
+        return (self.next_u64() >> 40) / float(1 << 24)
+
+    def next_range(self, n: int) -> int:
+        return self.next_u64() % n
+
+
+def class_prototypes(side: int, n_classes: int, seed: int) -> np.ndarray:
+    """Per-class prototype images: a few gaussian blobs per class.
+
+    Returns (n_classes, side*side) f32 in [0,1].
+    """
+    rng = XorShift64(seed)
+    protos = np.zeros((n_classes, side, side), np.float32)
+    n_blobs = 3
+    for c in range(n_classes):
+        for _ in range(n_blobs):
+            cx = rng.next_f32() * side
+            cy = rng.next_f32() * side
+            sigma = 1.0 + rng.next_f32() * (side / 6.0)
+            amp = 0.5 + rng.next_f32() * 0.5
+            ys, xs = np.mgrid[0:side, 0:side].astype(np.float32)
+            d2 = (xs - cx) ** 2 + (ys - cy) ** 2
+            protos[c] += amp * np.exp(-d2 / (2.0 * sigma * sigma))
+    protos = np.clip(protos, 0.0, 1.0)
+    return protos.reshape(n_classes, side * side)
+
+
+def generate(side: int, n_classes: int, n: int, seed: int,
+             noise: float = 0.15):
+    """Generate n labelled images.
+
+    Each image = class prototype * intensity jitter + uniform pixel noise,
+    clipped to [0,1]. Labels cycle deterministically (balanced classes)
+    with order shuffled by the PRNG — same procedure as rust.
+
+    Returns (images (n, side*side) f32, labels (n,) i32).
+    """
+    protos = class_prototypes(side, n_classes, seed)
+    rng = XorShift64(seed ^ 0xDEADBEEF)
+    imgs = np.zeros((n, side * side), np.float32)
+    labels = np.zeros((n,), np.int32)
+    for i in range(n):
+        c = rng.next_range(n_classes)
+        labels[i] = c
+        jitter = 0.7 + 0.3 * rng.next_f32()
+        img = protos[c] * jitter
+        for p in range(img.shape[0]):
+            img[p] += noise * (rng.next_f32() - 0.5)
+        imgs[i] = np.clip(img, 0.0, 1.0)
+    return imgs, labels

@@ -1,0 +1,14 @@
+"""L1 Pallas kernels for the BCPNN hot-spots + pure-jnp reference.
+
+Kernels (all interpret=True so they lower to portable HLO):
+  - support.support       masked support mat-vec  s = b + (w*m)^T x
+  - softmax.hc_softmax    per-hypercolumn softmax (divisive normalization)
+  - plasticity.plasticity fused joint-trace EMA + Bayesian weight map
+
+``ref`` holds the jnp oracles used by pytest and by the A/B model build.
+"""
+
+from . import ref  # noqa: F401
+from .plasticity import plasticity  # noqa: F401
+from .softmax import hc_softmax  # noqa: F401
+from .support import support  # noqa: F401

@@ -1,0 +1,85 @@
+"""Pallas kernel: fused Hebbian-Bayesian plasticity update.
+
+The paper's synaptic-plasticity hot-spot: per training image the
+(n_in, n_h) joint-probability trace is EMA-updated with the outer product
+of pre/post activity and the Bayesian log-weights are recomputed from the
+traces. The FPGA fuses these into a single streamed pass over the joint
+arrays (read p_ij packet -> update -> write p_ij' and w packets, one HBM
+round trip); this kernel expresses the same fusion: one grid pass over
+(TILE_IN, TILE_H) blocks producing both outputs, so the joint trace is
+touched exactly once per image.
+
+The cheap O(n) marginal-trace EMAs (p_i, p_j) stay in L2 jnp; the kernel
+receives the already-updated marginals, mirroring the FPGA pipeline where
+the small population arrays live on-chip while the joint arrays stream
+through the 4-way partitioned HBM channels.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _plasticity_kernel(alpha, eps, pij_ref, pi_ref, pj_ref, x_ref, y_ref,
+                       pij_out_ref, w_out_ref):
+    """One (TILE_IN, TILE_H) packet: EMA joint update + log-weight map."""
+    x = x_ref[...]          # (TILE_IN,)
+    y = y_ref[...]          # (TILE_H,)
+    pij = pij_ref[...]      # (TILE_IN, TILE_H)
+    pij_new = (1.0 - alpha) * pij + alpha * (x[:, None] * y[None, :])
+    pij_out_ref[...] = pij_new
+    pi = pi_ref[...]        # (TILE_IN,) updated marginals
+    pj = pj_ref[...]        # (TILE_H,)
+    w_out_ref[...] = jnp.log(
+        (pij_new + eps * eps) / ((pi[:, None] + eps) * (pj[None, :] + eps))
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "eps", "tile_in", "tile_h")
+)
+def plasticity(pij, pi_new, pj_new, x, y, *, alpha, eps,
+               tile_in=0, tile_h=0):
+    """Fused joint-trace EMA + Bayesian weight recompute via Pallas.
+
+    Args:
+      pij: (n_in, n_h) f32 joint probability trace.
+      pi_new: (n_in,) f32 updated presynaptic marginal trace.
+      pj_new: (n_h,) f32 updated postsynaptic marginal trace.
+      x: (n_in,) f32 presynaptic activity.
+      y: (n_h,) f32 postsynaptic activity.
+      alpha: EMA learning rate (static).
+      eps: probability floor (static).
+    Returns: (pij_new, w), both (n_in, n_h) f32.
+    """
+    n_in, n_h = pij.shape
+    tile_in = tile_in or _auto_tile(n_in)
+    tile_h = tile_h or _auto_tile(n_h)
+    assert n_in % tile_in == 0 and n_h % tile_h == 0, (
+        f"tiles ({tile_in},{tile_h}) must divide ({n_in},{n_h})"
+    )
+    grid = (n_in // tile_in, n_h // tile_h)
+    vec_in = pl.BlockSpec((tile_in,), lambda i, h: (i,))
+    vec_h = pl.BlockSpec((tile_h,), lambda i, h: (h,))
+    mat = pl.BlockSpec((tile_in, tile_h), lambda i, h: (i, h))
+    return pl.pallas_call(
+        functools.partial(
+            _plasticity_kernel, float(alpha), float(eps)
+        ),
+        grid=grid,
+        in_specs=[mat, vec_in, vec_h, vec_in, vec_h],
+        out_specs=[mat, mat],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_in, n_h), jnp.float32),
+            jax.ShapeDtypeStruct((n_in, n_h), jnp.float32),
+        ],
+        interpret=True,
+    )(pij, pi_new, pj_new, x, y)
+
+
+def _auto_tile(n):
+    # Full-array tile: fastest under interpret=True (grid emulation
+    # dominates otherwise); pass explicit tiles for a real-TPU build.
+    return n

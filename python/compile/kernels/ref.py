@@ -1,0 +1,81 @@
+"""Pure-jnp correctness oracle for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact reference here, written
+with plain jax.numpy ops only. pytest (python/tests/test_kernels.py)
+asserts allclose between kernel and reference across shape/dtype sweeps;
+the L2 model can also be built entirely on these functions
+(``model.build_steps(cfg, use_pallas=False)``) which is how we A/B the
+kernels end-to-end.
+
+Math (rate-based feedforward BCPNN, Ravichandran et al. 2024):
+
+  support   s_j  = b_j + sum_i m_ij w_ij x_i
+  activity  y    = softmax_per_hypercolumn(G * s)
+  traces    p_i  <- (1-a) p_i  + a x_i
+            p_j  <- (1-a) p_j  + a y_j
+            p_ij <- (1-a) p_ij + a x_i y_j
+  weights   w_ij = log((p_ij + eps^2) / ((p_i + eps)(p_j + eps)))
+  bias      b_j  = log(p_j + eps)
+"""
+
+import jax.numpy as jnp
+
+
+def support_ref(w, x, m, b):
+    """Masked support mat-vec.
+
+    Args:
+      w: (n_in, n_h) f32 weights.
+      x: (n_in,) f32 presynaptic activity.
+      m: (n_in, n_h) f32 0/1 unit-level connection mask.
+      b: (n_h,) f32 bias.
+    Returns: (n_h,) f32 support values.
+    """
+    return b + (w * m).T @ x
+
+
+def hc_softmax_ref(s, n_hc, n_mc, gain=1.0):
+    """Softmax within each hypercolumn.
+
+    Args:
+      s: (n_hc * n_mc,) f32 support.
+    Returns: (n_hc * n_mc,) f32 activity; each HC's slice sums to 1.
+    """
+    s2 = (gain * s).reshape(n_hc, n_mc)
+    s2 = s2 - jnp.max(s2, axis=1, keepdims=True)
+    e = jnp.exp(s2)
+    y = e / jnp.sum(e, axis=1, keepdims=True)
+    return y.reshape(-1)
+
+
+def plasticity_ref(pij, pi_new, pj_new, x, y, alpha, eps):
+    """Fused joint-trace EMA update + Bayesian weight recompute.
+
+    ``pi_new``/``pj_new`` are the *already updated* marginal traces (the
+    cheap vector EMAs run in L2); the kernel fuses the expensive
+    (n_in, n_h) part: the joint trace update and the log-weight map.
+
+    Args:
+      pij: (n_in, n_h) f32 joint probability trace.
+      pi_new: (n_in,) f32 updated presynaptic trace.
+      pj_new: (n_h,) f32 updated postsynaptic trace.
+      x: (n_in,) f32 presynaptic activity.
+      y: (n_h,) f32 postsynaptic activity.
+    Returns: (pij_new, w) both (n_in, n_h) f32.
+    """
+    pij_new = (1.0 - alpha) * pij + alpha * jnp.outer(x, y)
+    w = jnp.log(
+        (pij_new + eps * eps)
+        / ((pi_new[:, None] + eps) * (pj_new[None, :] + eps))
+    )
+    return pij_new, w
+
+
+def marginal_update_ref(p, v, alpha):
+    """EMA update of a marginal probability trace (vector)."""
+    return (1.0 - alpha) * p + alpha * v
+
+
+def bias_ref(pj, eps):
+    """Bias from the postsynaptic trace: b_j = log(p_j + eps)."""
+    return jnp.log(pj + eps)

@@ -1,0 +1,57 @@
+"""Pallas kernel: per-hypercolumn softmax.
+
+The paper's divisive-normalization stage: minicolumns within a
+hypercolumn compete via softmax, producing a probability distribution per
+HC. On the FPGA this is the stage that "requires waiting until all
+relevant data arrives" (the reduction barrier that sizes the FIFOs); in
+Pallas the analogous structure is a grid over hypercolumns with each
+block holding one HC's full minicolumn vector in VMEM — block-local
+max/exp/sum with no cross-block traffic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hc_softmax_kernel(gain, s_ref, o_ref):
+    """One hypercolumn block: numerically-stable softmax over its MCs."""
+    s = gain * s_ref[...]                     # (hc_block, n_mc)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("n_hc", "n_mc", "gain", "hc_block"))
+def hc_softmax(s, *, n_hc, n_mc, gain=1.0, hc_block=0):
+    """Softmax within each hypercolumn.
+
+    Args:
+      s: (n_hc * n_mc,) f32 support values.
+      n_hc: number of hypercolumns.
+      n_mc: minicolumns per hypercolumn.
+      gain: softmax gain G (support scaling).
+      hc_block: hypercolumns per grid block (0 = auto divisor <= 8).
+    Returns: (n_hc * n_mc,) f32 activity; each HC slice sums to 1.
+    """
+    assert s.shape == (n_hc * n_mc,), (s.shape, n_hc, n_mc)
+    hc_block = hc_block or _auto_block(n_hc)
+    grid = (n_hc // hc_block,)
+    out = pl.pallas_call(
+        functools.partial(_hc_softmax_kernel, float(gain)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((hc_block, n_mc), lambda h: (h, 0))],
+        out_specs=pl.BlockSpec((hc_block, n_mc), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_hc, n_mc), jnp.float32),
+        interpret=True,
+    )(s.reshape(n_hc, n_mc))
+    return out.reshape(-1)
+
+
+def _auto_block(n_hc, cap=64):
+    for d in range(min(cap, n_hc), 0, -1):
+        if n_hc % d == 0:
+            return d
+    return 1

@@ -1,0 +1,78 @@
+"""Pallas kernel: masked support mat-vec  s = b + (w*m)^T x.
+
+This is the activation hot-spot of the paper's accelerator (the
+input->hidden projection stream). The FPGA version streams the weight
+matrix HBM->FIFO in 64-float merged packets (Fig. 4); here the analogous
+schedule is expressed with BlockSpec: the (n_in, n_h) weight and mask
+arrays are tiled into (TILE_IN, TILE_H) VMEM blocks — the "packet" — and
+partial supports are accumulated into the output block across the
+reduction grid dimension.
+
+Grid layout: (n_h/TILE_H, n_in/TILE_IN); the inner (last) grid axis is
+the reduction over input tiles so the output block stays resident in
+VMEM while partials accumulate (revisited-output accumulation pattern).
+
+interpret=True always: CPU PJRT cannot run Mosaic custom-calls; the
+interpret path lowers to plain HLO so the AOT artifact is portable.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _support_kernel(x_ref, w_ref, m_ref, b_ref, o_ref):
+    """One (TILE_IN, TILE_H) packet: accumulate partial masked mat-vec."""
+    ri = pl.program_id(1)  # reduction step over input tiles
+
+    # First reduction step seeds the accumulator with the bias.
+    @pl.when(ri == 0)
+    def _():
+        o_ref[...] = b_ref[...]
+
+    x = x_ref[...]                      # (TILE_IN,)
+    wm = w_ref[...] * m_ref[...]        # (TILE_IN, TILE_H) masked packet
+    # Partial support for this packet; accumulate into the output block.
+    o_ref[...] += jnp.dot(x, wm)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_in", "tile_h"))
+def support(w, x, m, b, *, tile_in=0, tile_h=0):
+    """Masked support mat-vec via Pallas.
+
+    Args:
+      w: (n_in, n_h) f32 weights.
+      x: (n_in,) f32 input activity.
+      m: (n_in, n_h) f32 0/1 unit mask.
+      b: (n_h,) f32 bias.
+      tile_in/tile_h: packet dims; must divide n_in / n_h (0 = auto).
+    Returns: (n_h,) f32 support.
+    """
+    n_in, n_h = w.shape
+    tile_in = tile_in or _auto_tile(n_in)
+    tile_h = tile_h or _auto_tile(n_h)
+    assert n_in % tile_in == 0 and n_h % tile_h == 0, (
+        f"tiles ({tile_in},{tile_h}) must divide ({n_in},{n_h})"
+    )
+    grid = (n_h // tile_h, n_in // tile_in)
+    return pl.pallas_call(
+        _support_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_in,), lambda h, i: (i,)),            # x
+            pl.BlockSpec((tile_in, tile_h), lambda h, i: (i, h)),   # w
+            pl.BlockSpec((tile_in, tile_h), lambda h, i: (i, h)),   # m
+            pl.BlockSpec((tile_h,), lambda h, i: (h,)),             # b
+        ],
+        out_specs=pl.BlockSpec((tile_h,), lambda h, i: (h,)),
+        out_shape=jax.ShapeDtypeStruct((n_h,), jnp.float32),
+        interpret=True,
+    )(x, w, m, b)
+
+
+def _auto_tile(n):
+    # Full-array tile: fastest under interpret=True (grid emulation
+    # dominates otherwise); pass explicit tiles for a real-TPU build.
+    return n

@@ -1,0 +1,278 @@
+"""L2: the feedforward BCPNN model (build-time JAX, calls kernels.*).
+
+The full network of the paper: input population (one hypercolumn per
+pixel, 2 minicolumns of intensity coding), hidden population (hc_h x
+mc_h), output population (1 HC x n_classes). Two plastic projections:
+
+  input  -> hidden : unsupervised Hebbian-Bayesian (+ structural mask)
+  hidden -> output : supervised (labels as postsynaptic one-hot)
+
+Everything here is traced once by aot.py and lowered to HLO text; at run
+time the Rust coordinator executes the artifacts via PJRT and performs
+the host-side structural-plasticity step between calls (as in the paper:
+"the structural plasticity ... happens in the host").
+
+Three artifact entry points per model config, each scanning a fixed-size
+batch (the paper's streaming semantics: strictly online, one image at a
+time — the scan only amortizes dispatch):
+
+  infer        (wij, bj, who, bk, mask_hc, imgs)          -> probs
+  train_unsup  (pi, pj, pij, mask_hc, imgs)               -> traces', w', b'
+  train_sup    (wij, bj, mask_hc, qi, qk, qik, imgs, lbl) -> traces', who', bk'
+
+All params are explicit positional arrays (no pytrees at the boundary)
+so the Rust side can marshal Literals by position; the exact signatures
+are recorded in artifacts/manifest.json by aot.py.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .configs import ModelConfig
+from .kernels import ref
+
+
+def encode_image(img, cfg: ModelConfig):
+    """Intensity coding: pixel v -> input HC activity [v, 1-v].
+
+    Args:
+      img: (hc_in,) f32 in [0,1].
+    Returns: (n_in,) f32; each input HC's minicolumn pair sums to 1.
+    """
+    assert cfg.mc_in == 2, "intensity coding requires mc_in == 2"
+    v = jnp.clip(img, 0.0, 1.0)
+    return jnp.stack([v, 1.0 - v], axis=-1).reshape(-1)
+
+
+def expand_mask(mask_hc, cfg: ModelConfig):
+    """Expand the (hc_in, hc_h) HC-level mask to unit level (n_in, n_h)."""
+    m = jnp.repeat(mask_hc, cfg.mc_in, axis=0)
+    return jnp.repeat(m, cfg.mc_h, axis=1)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0, jitter: float = 0.2):
+    """Initial traces (uniform independence + symmetry-breaking jitter)
+    and the weights/biases derived from them.
+
+    ``jitter`` multiplies the joint trace by U(1-j, 1+j): with exactly
+    uniform traces every minicolumn of a hidden hypercolumn is identical
+    and Hebbian learning can never differentiate them (all MCs share the
+    receptive field and the softmax ties); the BCPNN literature breaks
+    the tie with random initial weights/noise — we jitter p_ij, which is
+    equivalent and keeps traces interpretable as probabilities. The Rust
+    side mirrors this in ``bcpnn::params`` with the shared xorshift PRNG.
+    """
+    n_in, n_h, n_out = cfg.n_in, cfg.n_h, cfg.n_out
+    pi = jnp.full((n_in,), 1.0 / cfg.mc_in, jnp.float32)
+    pj = jnp.full((n_h,), 1.0 / cfg.mc_h, jnp.float32)
+    pij = jnp.full((n_in, n_h), 1.0 / (cfg.mc_in * cfg.mc_h), jnp.float32)
+    if jitter > 0.0:
+        u = jax.random.uniform(jax.random.PRNGKey(seed), (n_in, n_h),
+                               minval=1.0 - jitter, maxval=1.0 + jitter)
+        pij = pij * u
+    qi = jnp.full((n_h,), 1.0 / cfg.mc_h, jnp.float32)
+    qk = jnp.full((n_out,), 1.0 / n_out, jnp.float32)
+    qik = jnp.full((n_h, n_out), 1.0 / (cfg.mc_h * n_out), jnp.float32)
+    eps = cfg.eps
+    wij = jnp.log((pij + eps * eps) / ((pi[:, None] + eps) * (pj[None, :] + eps)))
+    bj = jnp.log(pj + eps)
+    who = jnp.log((qik + eps * eps) / ((qi[:, None] + eps) * (qk[None, :] + eps)))
+    bk = jnp.log(qk + eps)
+    return {
+        "pi": pi, "pj": pj, "pij": pij, "wij": wij, "bj": bj,
+        "qi": qi, "qk": qk, "qik": qik, "who": who, "bk": bk,
+    }
+
+
+def init_mask(cfg: ModelConfig, seed: int = 0):
+    """Random structural mask: nact_hi active input HCs per hidden HC."""
+    key = jax.random.PRNGKey(seed)
+    cols = []
+    for h in range(cfg.hc_h):
+        key, sub = jax.random.split(key)
+        perm = jax.random.permutation(sub, cfg.hc_in)
+        col = jnp.zeros((cfg.hc_in,), jnp.float32).at[perm[: cfg.nact_hi]].set(1.0)
+        cols.append(col)
+    return jnp.stack(cols, axis=1)  # (hc_in, hc_h)
+
+
+# ---------------------------------------------------------------------------
+# Single-image steps (the streaming element the FPGA pipeline processes).
+# ---------------------------------------------------------------------------
+
+
+def build_steps(cfg: ModelConfig, use_pallas: bool = True):
+    """Build the per-image step functions for a config.
+
+    use_pallas=False swaps every kernel for its jnp oracle — the A/B used
+    by pytest to validate the Pallas path end-to-end.
+    """
+    ti, th = cfg.resolved_tile_in(), cfg.resolved_tile_h()
+
+    def _support(w, x, m, b):
+        if use_pallas:
+            return kernels.support(w, x, m, b, tile_in=ti, tile_h=th)
+        return ref.support_ref(w, x, m, b)
+
+    def _hidden_softmax(s):
+        if use_pallas:
+            return kernels.hc_softmax(
+                s, n_hc=cfg.hc_h, n_mc=cfg.mc_h, gain=cfg.gain
+            )
+        return ref.hc_softmax_ref(s, cfg.hc_h, cfg.mc_h, cfg.gain)
+
+    def _plasticity(pij, pi_new, pj_new, x, y):
+        if use_pallas:
+            return kernels.plasticity(
+                pij, pi_new, pj_new, x, y,
+                alpha=cfg.alpha, eps=cfg.eps, tile_in=ti, tile_h=th,
+            )
+        return ref.plasticity_ref(pij, pi_new, pj_new, x, y, cfg.alpha, cfg.eps)
+
+    def hidden_activity(wij, bj, mask_hc, img):
+        """Input encoding -> masked support -> per-HC softmax."""
+        x = encode_image(img, cfg)
+        m = expand_mask(mask_hc, cfg)
+        s = _support(wij, x, m, b=bj)
+        return x, _hidden_softmax(s)
+
+    def output_activity(who, bk, y):
+        """hidden->output projection: single output HC softmax (no mask)."""
+        sk = bk + who.T @ y
+        sk = sk - jnp.max(sk)
+        e = jnp.exp(sk)
+        return e / jnp.sum(e)
+
+    def infer_step(wij, bj, who, bk, mask_hc, img):
+        _, y = hidden_activity(wij, bj, mask_hc, img)
+        return output_activity(who, bk, y)
+
+    def train_unsup_step(pi, pj, pij, wij, bj, mask_hc, img):
+        """One online Hebbian-Bayesian update of the input->hidden projection."""
+        x, y = hidden_activity(wij, bj, mask_hc, img)
+        pi_new = ref.marginal_update_ref(pi, x, cfg.alpha)
+        pj_new = ref.marginal_update_ref(pj, y, cfg.alpha)
+        pij_new, wij_new = _plasticity(pij, pi_new, pj_new, x, y)
+        bj_new = ref.bias_ref(pj_new, cfg.eps)
+        return pi_new, pj_new, pij_new, wij_new, bj_new
+
+    def train_sup_step(wij, bj, mask_hc, qi, qk, qik, who, bk, img, label):
+        """Supervised hidden->output update: label one-hot as post activity."""
+        _, y = hidden_activity(wij, bj, mask_hc, img)
+        t = jax.nn.one_hot(label, cfg.n_out, dtype=jnp.float32)
+        qi_new = ref.marginal_update_ref(qi, y, cfg.alpha)
+        qk_new = ref.marginal_update_ref(qk, t, cfg.alpha)
+        qik_new = (1.0 - cfg.alpha) * qik + cfg.alpha * jnp.outer(y, t)
+        eps = cfg.eps
+        who_new = jnp.log(
+            (qik_new + eps * eps)
+            / ((qi_new[:, None] + eps) * (qk_new[None, :] + eps))
+        )
+        bk_new = ref.bias_ref(qk_new, eps)
+        return qi_new, qk_new, qik_new, who_new, bk_new
+
+    return {
+        "hidden_activity": hidden_activity,
+        "output_activity": output_activity,
+        "infer_step": infer_step,
+        "train_unsup_step": train_unsup_step,
+        "train_sup_step": train_sup_step,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Batched artifact entry points (lax.scan over the fixed batch dimension).
+# ---------------------------------------------------------------------------
+
+
+def build_infer(cfg: ModelConfig, use_pallas: bool = True):
+    steps = build_steps(cfg, use_pallas)
+
+    def infer(wij, bj, who, bk, mask_hc, imgs):
+        """imgs: (B, hc_in) -> probs: (B, n_out)."""
+        def body(carry, img):
+            probs = steps["infer_step"](wij, bj, who, bk, mask_hc, img)
+            return carry, probs
+
+        _, probs = jax.lax.scan(body, 0, imgs)
+        return (probs,)
+
+    return infer
+
+
+def build_train_unsup(cfg: ModelConfig, use_pallas: bool = True):
+    steps = build_steps(cfg, use_pallas)
+    eps = cfg.eps
+
+    def train_unsup(pi, pj, pij, mask_hc, imgs):
+        """Online unsupervised pass over a batch; returns updated traces
+        and the weights/bias derived from the final traces."""
+        wij0 = jnp.log(
+            (pij + eps * eps) / ((pi[:, None] + eps) * (pj[None, :] + eps))
+        )
+        bj0 = jnp.log(pj + eps)
+
+        def body(carry, img):
+            pi_c, pj_c, pij_c, wij_c, bj_c = carry
+            out = steps["train_unsup_step"](pi_c, pj_c, pij_c, wij_c, bj_c,
+                                            mask_hc, img)
+            return out, 0
+
+        (pi_n, pj_n, pij_n, wij_n, bj_n), _ = jax.lax.scan(
+            body, (pi, pj, pij, wij0, bj0), imgs
+        )
+        return pi_n, pj_n, pij_n, wij_n, bj_n
+
+    return train_unsup
+
+
+def build_train_sup(cfg: ModelConfig, use_pallas: bool = True):
+    steps = build_steps(cfg, use_pallas)
+
+    def train_sup(wij, bj, mask_hc, qi, qk, qik, who, bk, imgs, labels):
+        """Supervised pass (input->hidden frozen): update output projection."""
+        def body(carry, xs):
+            qi_c, qk_c, qik_c, who_c, bk_c = carry
+            img, label = xs
+            out = steps["train_sup_step"](wij, bj, mask_hc, qi_c, qk_c,
+                                          qik_c, who_c, bk_c, img, label)
+            return out, 0
+
+        (qi_n, qk_n, qik_n, who_n, bk_n), _ = jax.lax.scan(
+            body, (qi, qk, qik, who, bk), (imgs, labels)
+        )
+        return qi_n, qk_n, qik_n, who_n, bk_n
+
+    return train_sup
+
+
+def example_args(cfg: ModelConfig, mode: str):
+    """ShapeDtypeStructs for jax.jit(...).lower() per artifact mode."""
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    n_in, n_h, n_out, b = cfg.n_in, cfg.n_h, cfg.n_out, cfg.batch
+    mask = sds((cfg.hc_in, cfg.hc_h), f32)
+    imgs = sds((b, cfg.hc_in), f32)
+    if mode == "infer":
+        return (sds((n_in, n_h), f32), sds((n_h,), f32),
+                sds((n_h, n_out), f32), sds((n_out,), f32), mask, imgs)
+    if mode == "train_unsup":
+        return (sds((n_in,), f32), sds((n_h,), f32), sds((n_in, n_h), f32),
+                mask, imgs)
+    if mode == "train_sup":
+        return (sds((n_in, n_h), f32), sds((n_h,), f32), mask,
+                sds((n_h,), f32), sds((n_out,), f32), sds((n_h, n_out), f32),
+                sds((n_h, n_out), f32), sds((n_out,), f32),
+                imgs, sds((b,), jnp.int32))
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def build_fn(cfg: ModelConfig, mode: str, use_pallas: bool = True):
+    if mode == "infer":
+        return build_infer(cfg, use_pallas)
+    if mode == "train_unsup":
+        return build_train_unsup(cfg, use_pallas)
+    if mode == "train_sup":
+        return build_train_sup(cfg, use_pallas)
+    raise ValueError(f"unknown mode {mode!r}")

@@ -1,0 +1,17 @@
+"""Shared fixtures for the build-time python test suite."""
+
+import os
+import sys
+
+import jax
+import pytest
+
+# Make `compile` importable when pytest runs from python/ or repo root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(1234)

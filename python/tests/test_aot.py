@@ -1,0 +1,93 @@
+"""AOT lowering: every (config, mode) lowers to parseable HLO text with a
+manifest signature that matches the traced function exactly."""
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot, model
+from compile.configs import CONFIGS, MODES
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+@pytest.mark.parametrize("name", ["tiny"])
+@pytest.mark.parametrize("mode", MODES)
+def test_lower_artifact_smoke(name, mode):
+    cfg = CONFIGS[name]
+    text, entry = aot.lower_artifact(cfg, mode)
+    # HLO text structure, not a serialized proto.
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    assert entry["mode"] == mode
+    assert entry["config"]["n_in"] == cfg.n_in
+    assert len(entry["inputs"]) == len(model.example_args(cfg, mode))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_signature_names_cover_args(mode):
+    cfg = CONFIGS["tiny"]
+    args = model.example_args(cfg, mode)
+    names = aot._INPUT_NAMES[mode]
+    assert len(names) == len(args)
+
+
+def test_example_args_shapes_infer():
+    cfg = CONFIGS["small"]
+    wij, bj, who, bk, mask, imgs = model.example_args(cfg, "infer")
+    assert wij.shape == (cfg.n_in, cfg.n_h)
+    assert bj.shape == (cfg.n_h,)
+    assert who.shape == (cfg.n_h, cfg.n_out)
+    assert bk.shape == (cfg.n_out,)
+    assert mask.shape == (cfg.hc_in, cfg.hc_h)
+    assert imgs.shape == (cfg.batch, cfg.hc_in)
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(ValueError):
+        model.build_fn(CONFIGS["tiny"], "nope")
+    with pytest.raises(ValueError):
+        model.example_args(CONFIGS["tiny"], "nope")
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(),
+                    reason="run `make artifacts` first")
+def test_manifest_consistent_with_files():
+    manifest = json.loads((ART / "manifest.json").read_text())
+    assert manifest["artifacts"], "empty manifest"
+    for key, entry in manifest["artifacts"].items():
+        f = ART / entry["file"]
+        assert f.exists(), f"missing artifact file {f}"
+        text = f.read_text()
+        assert text.startswith("HloModule")
+        # Entry-computation parameter count must match the manifest inputs.
+        assert entry["config"]["batch"] >= 1
+        got_params = text.count("parameter(")
+        assert got_params >= len(entry["inputs"]), (
+            key, got_params, len(entry["inputs"]))
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(),
+                    reason="run `make artifacts` first")
+def test_manifest_sha256_matches():
+    import hashlib
+    manifest = json.loads((ART / "manifest.json").read_text())
+    for key, entry in manifest["artifacts"].items():
+        text = (ART / entry["file"]).read_text()
+        assert hashlib.sha256(text.encode()).hexdigest() == entry["sha256"], key
+
+
+@pytest.mark.parametrize("name", ["model1", "model2", "model3"])
+def test_paper_shape_models_lower(name):
+    """The paper-shape models (Table 1) lower cleanly — the `--full`
+    AOT path. Lowering is shape-symbolic so this stays fast even at
+    1568x4096 joint arrays."""
+    cfg = CONFIGS[name]
+    text, entry = aot.lower_artifact(cfg, "train_unsup")
+    assert text.startswith("HloModule")
+    pij = next(t for t in entry["inputs"] if t["name"] == "pij")
+    assert pij["shape"] == [cfg.n_in, cfg.n_h]
+    # Full-array tiles on the interpret path (perf default).
+    assert entry["config"]["tile_in"] == cfg.n_in
+    assert entry["config"]["tile_h"] == cfg.n_h

@@ -1,0 +1,63 @@
+"""Config registry invariants (python side; rust mirrors these in
+rust/src/config/ tests against the same constants)."""
+
+import pytest
+
+from compile.configs import (CONFIGS, DATASETS, DEFAULT_AOT_CONFIGS, MODES,
+                             ModelConfig, _largest_divisor)
+
+
+def test_paper_table1_shapes():
+    """Table 1 of the paper, verbatim."""
+    m1, m2, m3 = CONFIGS["model1"], CONFIGS["model2"], CONFIGS["model3"]
+    assert (m1.img_side, m1.hc_h, m1.mc_h, m1.n_classes, m1.nact_hi) == \
+        (28, 32, 128, 10, 128)
+    assert (m2.img_side, m2.hc_h, m2.mc_h, m2.n_classes, m2.nact_hi) == \
+        (28, 32, 256, 2, 128)
+    assert (m3.img_side, m3.hc_h, m3.mc_h, m3.n_classes, m3.nact_hi) == \
+        (64, 32, 128, 2, 128)
+    assert DATASETS["model1"] == {"train": 60000, "test": 10000, "epochs": 5}
+    assert DATASETS["model2"] == {"train": 4708, "test": 624, "epochs": 20}
+    assert DATASETS["model3"] == {"train": 546, "test": 156, "epochs": 100}
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_derived_dims(name):
+    cfg = CONFIGS[name]
+    assert cfg.hc_in == cfg.img_side ** 2
+    assert cfg.n_in == cfg.hc_in * cfg.mc_in
+    assert cfg.n_h == cfg.hc_h * cfg.mc_h
+    assert 0 < cfg.nact_hi <= cfg.hc_in
+    assert cfg.n_classes >= 2
+    assert 0 < cfg.alpha < 1
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_tiles_divide(name):
+    cfg = CONFIGS[name]
+    assert cfg.n_in % cfg.resolved_tile_in() == 0
+    assert cfg.n_h % cfg.resolved_tile_h() == 0
+
+
+def test_largest_divisor():
+    assert _largest_divisor(288, 128) == 96
+    assert _largest_divisor(128, 128) == 128
+    assert _largest_divisor(7, 4) == 1
+
+
+def test_default_aot_configs_exist():
+    for n in DEFAULT_AOT_CONFIGS:
+        assert n in CONFIGS
+    assert set(MODES) == {"infer", "train_unsup", "train_sup"}
+
+
+def test_every_config_has_dataset_spec():
+    for n in CONFIGS:
+        assert n in DATASETS, n
+        d = DATASETS[n]
+        assert d["train"] > 0 and d["test"] > 0 and d["epochs"] > 0
+
+
+def test_frozen_config():
+    with pytest.raises(Exception):
+        CONFIGS["tiny"].img_side = 10  # frozen dataclass

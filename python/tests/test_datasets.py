@@ -1,0 +1,82 @@
+"""Synthetic dataset generator: PRNG golden vectors (shared with rust)
+and statistical/structural properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import datasets
+
+
+def test_xorshift_golden_vector():
+    """Golden values — rust/src/data/rng.rs asserts the same sequence."""
+    rng = datasets.XorShift64(42)
+    got = [rng.next_u64() for _ in range(4)]
+    want = [6255019084209693600, 14430073426741505498,
+            14575455857230217846, 17414512882241728735]
+    assert got == want, got
+
+
+def test_xorshift_zero_seed_remapped():
+    rng = datasets.XorShift64(0)
+    assert rng.state != 0
+    assert rng.next_u64() != 0
+
+
+def test_next_f32_in_unit_interval():
+    rng = datasets.XorShift64(7)
+    vals = [rng.next_f32() for _ in range(1000)]
+    assert all(0.0 <= v < 1.0 for v in vals)
+    assert 0.4 < float(np.mean(vals)) < 0.6  # roughly uniform
+
+
+def test_prototypes_deterministic_and_bounded():
+    p1 = datasets.class_prototypes(8, 4, seed=1)
+    p2 = datasets.class_prototypes(8, 4, seed=1)
+    np.testing.assert_array_equal(p1, p2)
+    assert p1.shape == (4, 64)
+    assert p1.min() >= 0.0 and p1.max() <= 1.0
+
+
+def test_prototypes_distinct_across_classes():
+    p = datasets.class_prototypes(8, 4, seed=2)
+    for a in range(4):
+        for b in range(a + 1, 4):
+            assert not np.allclose(p[a], p[b], atol=1e-3)
+
+
+def test_generate_shapes_labels_balanced():
+    imgs, labels = datasets.generate(8, 4, 400, seed=3)
+    assert imgs.shape == (400, 64) and labels.shape == (400,)
+    assert imgs.min() >= 0.0 and imgs.max() <= 1.0
+    counts = np.bincount(labels, minlength=4)
+    assert counts.min() > 50  # roughly balanced random classes
+
+
+def test_generate_deterministic():
+    a = datasets.generate(8, 2, 32, seed=9)
+    b = datasets.generate(8, 2, 32, seed=9)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_generate_classes_separable():
+    """Nearest-prototype classification of generated data ~ near-perfect:
+    the structure BCPNN is expected to discover exists."""
+    side, ncls = 8, 4
+    imgs, labels = datasets.generate(side, ncls, 200, seed=4, noise=0.1)
+    protos = datasets.class_prototypes(side, ncls, seed=4)
+    d = ((imgs[:, None, :] - protos[None, :, :]) ** 2).sum(-1)
+    pred = np.argmin(d, axis=1)
+    acc = float(np.mean(pred == labels))
+    assert acc > 0.9, acc
+
+
+@settings(max_examples=10, deadline=None)
+@given(side=st.sampled_from([4, 8, 12]), ncls=st.integers(2, 6),
+       seed=st.integers(0, 2**32 - 1))
+def test_generate_hypothesis(side, ncls, seed):
+    imgs, labels = datasets.generate(side, ncls, 16, seed=seed)
+    assert imgs.shape == (16, side * side)
+    assert np.all((labels >= 0) & (labels < ncls))
+    assert np.all(np.isfinite(imgs))

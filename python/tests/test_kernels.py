@@ -1,0 +1,219 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer: the AOT
+artifacts embed exactly these kernels, so allclose here + the rust
+runtime loading the artifacts = end-to-end numerics coverage.
+
+hypothesis sweeps the shape/dtype/parameter space (hypercolumn counts,
+minicolumn widths, tile sizes, alpha/eps/gain) beyond the hand-picked
+cases.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import CONFIGS
+from compile.kernels import hc_softmax, plasticity, ref, support
+
+ATOL = 1e-5
+RTOL = 1e-5
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _mk_support_inputs(seed, n_in, n_h, density=0.5):
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    w = _rand(k[0], n_in, n_h)
+    x = jax.nn.softmax(_rand(k[1], n_in))
+    m = (jax.random.uniform(k[2], (n_in, n_h)) < density).astype(jnp.float32)
+    b = _rand(k[3], n_h)
+    return w, x, m, b
+
+
+# ---------------------------------------------------------------- support
+
+
+@pytest.mark.parametrize("n_in,n_h", [(16, 16), (128, 64), (288, 128),
+                                      (64, 256), (96, 32)])
+def test_support_matches_ref(n_in, n_h):
+    w, x, m, b = _mk_support_inputs(0, n_in, n_h)
+    got = support(w, x, m, b)
+    want = ref.support_ref(w, x, m, b)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("tile_in,tile_h", [(8, 8), (16, 64), (64, 16),
+                                            (128, 128), (32, 8)])
+def test_support_tile_invariance(tile_in, tile_h):
+    """Result must not depend on the packet (tile) decomposition."""
+    n_in, n_h = 128, 128
+    w, x, m, b = _mk_support_inputs(1, n_in, n_h)
+    got = support(w, x, m, b, tile_in=tile_in, tile_h=tile_h)
+    want = ref.support_ref(w, x, m, b)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_support_empty_mask_gives_bias():
+    n_in, n_h = 32, 16
+    w, x, _, b = _mk_support_inputs(2, n_in, n_h)
+    m = jnp.zeros((n_in, n_h), jnp.float32)
+    np.testing.assert_allclose(support(w, x, m, b), b, rtol=RTOL, atol=ATOL)
+
+
+def test_support_full_mask_is_matvec():
+    n_in, n_h = 32, 16
+    w, x, _, b = _mk_support_inputs(3, n_in, n_h)
+    m = jnp.ones((n_in, n_h), jnp.float32)
+    np.testing.assert_allclose(
+        support(w, x, m, b), b + w.T @ x, rtol=RTOL, atol=ATOL
+    )
+
+
+def test_support_rejects_nondividing_tiles():
+    w, x, m, b = _mk_support_inputs(4, 30, 16)
+    with pytest.raises(AssertionError):
+        support(w, x, m, b, tile_in=16, tile_h=16)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    hc=st.integers(2, 8), mc=st.integers(2, 16),
+    nh=st.sampled_from([8, 16, 32, 64]), seed=st.integers(0, 2**16),
+)
+def test_support_hypothesis_shapes(hc, mc, nh, seed):
+    n_in = hc * mc
+    w, x, m, b = _mk_support_inputs(seed, n_in, nh)
+    got = support(w, x, m, b)
+    want = ref.support_ref(w, x, m, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- softmax
+
+
+@pytest.mark.parametrize("n_hc,n_mc", [(1, 4), (4, 16), (32, 128), (8, 2),
+                                       (16, 32)])
+def test_softmax_matches_ref(n_hc, n_mc):
+    s = _rand(jax.random.PRNGKey(5), n_hc * n_mc)
+    got = hc_softmax(s, n_hc=n_hc, n_mc=n_mc)
+    want = ref.hc_softmax_ref(s, n_hc, n_mc)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_softmax_each_hc_sums_to_one():
+    n_hc, n_mc = 8, 16
+    s = 10.0 * _rand(jax.random.PRNGKey(6), n_hc * n_mc)
+    y = hc_softmax(s, n_hc=n_hc, n_mc=n_mc).reshape(n_hc, n_mc)
+    np.testing.assert_allclose(np.sum(y, axis=1), np.ones(n_hc),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_softmax_gain_sharpens():
+    """Higher gain concentrates mass on the max minicolumn."""
+    n_hc, n_mc = 4, 8
+    s = _rand(jax.random.PRNGKey(7), n_hc * n_mc)
+    y1 = hc_softmax(s, n_hc=n_hc, n_mc=n_mc, gain=1.0).reshape(n_hc, n_mc)
+    y4 = hc_softmax(s, n_hc=n_hc, n_mc=n_mc, gain=4.0).reshape(n_hc, n_mc)
+    assert np.all(np.max(y4, axis=1) >= np.max(y1, axis=1) - 1e-6)
+
+
+def test_softmax_extreme_supports_stable():
+    """Numerical stability: huge positive/negative supports, no NaN."""
+    s = jnp.array([1e4, -1e4, 0.0, 1e4, -30.0, 30.0, 0.0, 0.0], jnp.float32)
+    y = hc_softmax(s, n_hc=2, n_mc=4)
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_hc=st.integers(1, 12), n_mc=st.sampled_from([2, 4, 8, 16, 64]),
+       gain=st.floats(0.25, 4.0), seed=st.integers(0, 2**16))
+def test_softmax_hypothesis(n_hc, n_mc, gain, seed):
+    s = _rand(jax.random.PRNGKey(seed), n_hc * n_mc)
+    got = hc_softmax(s, n_hc=n_hc, n_mc=n_mc, gain=gain)
+    want = ref.hc_softmax_ref(s, n_hc, n_mc, gain)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------- plasticity
+
+
+def _mk_plasticity_inputs(seed, n_in, n_h):
+    k = jax.random.split(jax.random.PRNGKey(seed), 5)
+    pij = jax.random.uniform(k[0], (n_in, n_h)) * 0.2 + 0.001
+    pi = jax.random.uniform(k[1], (n_in,)) * 0.5 + 0.01
+    pj = jax.random.uniform(k[2], (n_h,)) * 0.5 + 0.01
+    x = jax.nn.softmax(_rand(k[3], n_in))
+    y = jax.nn.softmax(_rand(k[4], n_h))
+    return pij, pi, pj, x, y
+
+
+@pytest.mark.parametrize("n_in,n_h", [(16, 16), (288, 128), (64, 256)])
+def test_plasticity_matches_ref(n_in, n_h):
+    pij, pi, pj, x, y = _mk_plasticity_inputs(8, n_in, n_h)
+    got_p, got_w = plasticity(pij, pi, pj, x, y, alpha=1e-2, eps=1e-8)
+    want_p, want_w = ref.plasticity_ref(pij, pi, pj, x, y, 1e-2, 1e-8)
+    np.testing.assert_allclose(got_p, want_p, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(got_w, want_w, rtol=RTOL, atol=ATOL)
+
+
+def test_plasticity_zero_alpha_keeps_traces():
+    pij, pi, pj, x, y = _mk_plasticity_inputs(9, 32, 16)
+    got_p, _ = plasticity(pij, pi, pj, x, y, alpha=0.0, eps=1e-8)
+    np.testing.assert_allclose(got_p, pij, rtol=1e-6, atol=1e-7)
+
+
+def test_plasticity_traces_stay_probabilities():
+    """After many updates with activities in [0,1], traces remain in (0,1)."""
+    pij, pi, pj, x, y = _mk_plasticity_inputs(10, 32, 16)
+    p = pij
+    for _ in range(50):
+        p, _ = plasticity(p, pi, pj, x, y, alpha=0.1, eps=1e-8)
+    p = np.asarray(p)
+    assert np.all(p > 0.0) and np.all(p < 1.0)
+
+
+def test_plasticity_weight_sign_semantics():
+    """w_ij > 0 iff p_ij > p_i p_j (mutual information sign)."""
+    n_in, n_h = 8, 8
+    pi = jnp.full((n_in,), 0.5)
+    pj = jnp.full((n_h,), 0.5)
+    pij = jnp.full((n_in, n_h), 0.25)  # exactly independent
+    x = jnp.zeros((n_in,))
+    y = jnp.zeros((n_h,))
+    _, w = plasticity(pij, pi, pj, x, y, alpha=0.0, eps=1e-8)
+    np.testing.assert_allclose(w, np.zeros((n_in, n_h)), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_in=st.sampled_from([8, 32, 96]), n_h=st.sampled_from([8, 64]),
+       alpha=st.floats(1e-4, 0.5), seed=st.integers(0, 2**16))
+def test_plasticity_hypothesis(n_in, n_h, alpha, seed):
+    pij, pi, pj, x, y = _mk_plasticity_inputs(seed, n_in, n_h)
+    got_p, got_w = plasticity(pij, pi, pj, x, y, alpha=alpha, eps=1e-8)
+    want_p, want_w = ref.plasticity_ref(pij, pi, pj, x, y, alpha, 1e-8)
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(got_w, want_w, rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------- config-driven kernels
+
+
+@pytest.mark.parametrize("name", ["tiny", "small", "edge"])
+def test_kernels_at_config_shapes(name):
+    """Kernels agree with oracle at every AOT'd config's exact shapes."""
+    cfg = CONFIGS[name]
+    w, x, m, b = _mk_support_inputs(11, cfg.n_in, cfg.n_h)
+    got = support(w, x, m, b, tile_in=cfg.resolved_tile_in(),
+                  tile_h=cfg.resolved_tile_h())
+    np.testing.assert_allclose(got, ref.support_ref(w, x, m, b),
+                               rtol=RTOL, atol=ATOL)
+    s = ref.support_ref(w, x, m, b)
+    got_y = hc_softmax(s, n_hc=cfg.hc_h, n_mc=cfg.mc_h, gain=cfg.gain)
+    np.testing.assert_allclose(
+        got_y, ref.hc_softmax_ref(s, cfg.hc_h, cfg.mc_h, cfg.gain),
+        rtol=RTOL, atol=ATOL)

@@ -1,0 +1,206 @@
+"""L2 correctness: the full BCPNN model, Pallas path vs oracle path.
+
+Covers: pallas/ref A/B at every batched entry point, probabilistic
+invariants of the dynamics, and an end-to-end learning sanity check
+(unsupervised + supervised training separates synthetic classes well
+above chance) — the python mirror of the rust quickstart example.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets, model
+from compile.configs import CONFIGS
+
+CFG = CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG)
+
+
+@pytest.fixture(scope="module")
+def mask():
+    return model.init_mask(CFG, seed=3)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    imgs, labels = datasets.generate(CFG.img_side, CFG.n_classes,
+                                     CFG.batch, seed=7)
+    return jnp.asarray(imgs), jnp.asarray(labels)
+
+
+# ------------------------------------------------------------ encoding
+
+
+def test_encode_image_hc_sums_to_one():
+    img = jnp.linspace(0, 1, CFG.hc_in)
+    x = model.encode_image(img, CFG).reshape(CFG.hc_in, CFG.mc_in)
+    np.testing.assert_allclose(np.sum(x, axis=1), np.ones(CFG.hc_in),
+                               atol=1e-6)
+
+
+def test_encode_image_clips_out_of_range():
+    img = jnp.array([-0.5, 1.5] + [0.0] * (CFG.hc_in - 2))
+    x = model.encode_image(img, CFG)
+    assert float(x.min()) >= 0.0 and float(x.max()) <= 1.0
+
+
+def test_expand_mask_shape_and_blocks(mask):
+    m = model.expand_mask(mask, CFG)
+    assert m.shape == (CFG.n_in, CFG.n_h)
+    # Unit-level mask is constant within each (input HC, hidden HC) block.
+    m4 = np.asarray(m).reshape(CFG.hc_in, CFG.mc_in, CFG.hc_h, CFG.mc_h)
+    assert np.all(m4 == m4[:, :1, :, :1])
+
+
+def test_init_mask_exact_sparsity(mask):
+    col_sums = np.asarray(mask).sum(axis=0)
+    assert np.all(col_sums == CFG.nact_hi)
+
+
+def test_init_params_uniform_weights_are_zero():
+    """With jitter off: independent uniform traces => w ~ 0."""
+    p = model.init_params(CFG, jitter=0.0)
+    assert float(jnp.max(jnp.abs(p["wij"]))) < 1e-3
+
+
+def test_init_params_jitter_breaks_symmetry(params):
+    """Default init must differentiate minicolumns within each hidden HC."""
+    w = np.asarray(params["wij"]).reshape(CFG.n_in, CFG.hc_h, CFG.mc_h)
+    assert np.std(w, axis=2).max() > 1e-3
+
+
+# ------------------------------------------------ pallas vs oracle A/B
+
+
+@pytest.mark.parametrize("mode", ["infer", "train_unsup", "train_sup"])
+def test_pallas_vs_ref_entry_points(mode, params, mask, batch):
+    imgs, labels = batch
+    args_by_mode = {
+        "infer": (params["wij"], params["bj"], params["who"], params["bk"],
+                  mask, imgs),
+        "train_unsup": (params["pi"], params["pj"], params["pij"], mask,
+                        imgs),
+        "train_sup": (params["wij"], params["bj"], mask, params["qi"],
+                      params["qk"], params["qik"], params["who"],
+                      params["bk"], imgs, labels),
+    }
+    f_pallas = jax.jit(model.build_fn(CFG, mode, use_pallas=True))
+    f_ref = jax.jit(model.build_fn(CFG, mode, use_pallas=False))
+    got = f_pallas(*args_by_mode[mode])
+    want = f_ref(*args_by_mode[mode])
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-4, atol=2e-5)
+
+
+# ----------------------------------------------------------- invariants
+
+
+def test_infer_probs_are_distributions(params, mask, batch):
+    imgs, _ = batch
+    (probs,) = jax.jit(model.build_fn(CFG, "infer"))(
+        params["wij"], params["bj"], params["who"], params["bk"], mask, imgs)
+    probs = np.asarray(probs)
+    assert probs.shape == (CFG.batch, CFG.n_out)
+    np.testing.assert_allclose(probs.sum(axis=1), np.ones(CFG.batch),
+                               atol=1e-5)
+    assert np.all(probs >= 0)
+
+
+def test_train_unsup_traces_remain_probabilities(params, mask, batch):
+    imgs, _ = batch
+    out = jax.jit(model.build_fn(CFG, "train_unsup"))(
+        params["pi"], params["pj"], params["pij"], mask, imgs)
+    pi, pj, pij = (np.asarray(o) for o in out[:3])
+    for arr in (pi, pj, pij):
+        assert np.all(arr > 0) and np.all(arr < 1)
+    # Marginals still sum to ~1 within each hypercolumn.
+    np.testing.assert_allclose(
+        pi.reshape(CFG.hc_in, CFG.mc_in).sum(axis=1),
+        np.ones(CFG.hc_in), atol=1e-4)
+    np.testing.assert_allclose(
+        pj.reshape(CFG.hc_h, CFG.mc_h).sum(axis=1),
+        np.ones(CFG.hc_h), atol=1e-4)
+
+
+def test_train_unsup_is_online_not_batch(params, mask, batch):
+    """Order sensitivity: streaming semantics => permuting the batch
+    changes the final traces (unlike a batch-gradient method)."""
+    imgs, _ = batch
+    f = jax.jit(model.build_fn(CFG, "train_unsup"))
+    out1 = f(params["pi"], params["pj"], params["pij"], mask, imgs)
+    out2 = f(params["pi"], params["pj"], params["pij"], mask, imgs[::-1])
+    assert not np.allclose(np.asarray(out1[2]), np.asarray(out2[2]),
+                           atol=1e-7)
+
+
+def test_masked_connections_keep_zero_weightless_support(params, mask, batch):
+    """Hidden activity must not depend on weights of masked connections."""
+    imgs, _ = batch
+    f = jax.jit(model.build_fn(CFG, "infer"))
+    (p1,) = f(params["wij"], params["bj"], params["who"], params["bk"],
+              mask, imgs)
+    # Corrupt weights only where the mask is 0 -> identical output.
+    m_unit = np.asarray(model.expand_mask(mask, CFG))
+    wij = np.asarray(params["wij"]).copy()
+    wij[m_unit == 0] = 1e3
+    (p2,) = f(jnp.asarray(wij), params["bj"], params["who"], params["bk"],
+              mask, imgs)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-6)
+
+
+# ------------------------------------------------------- learning sanity
+
+
+def _train(cfg, epochs, n_train, n_test, seed=11):
+    imgs, labels = datasets.generate(cfg.img_side, cfg.n_classes,
+                                     n_train + n_test, seed=seed)
+    imgs, labels = jnp.asarray(imgs), jnp.asarray(labels)
+    tr_i, te_i = imgs[:n_train], imgs[n_train:]
+    tr_l, te_l = labels[:n_train], labels[n_train:]
+
+    params = model.init_params(cfg)
+    mask = model.init_mask(cfg, seed=seed)
+    unsup = jax.jit(model.build_fn(cfg, "train_unsup"))
+    sup = jax.jit(model.build_fn(cfg, "train_sup"))
+    infer = jax.jit(model.build_fn(cfg, "infer"))
+
+    pi, pj, pij = params["pi"], params["pj"], params["pij"]
+    wij, bj = params["wij"], params["bj"]
+    nb = n_train // cfg.batch
+    for _ in range(epochs):
+        for b in range(nb):
+            sl = slice(b * cfg.batch, (b + 1) * cfg.batch)
+            pi, pj, pij, wij, bj = unsup(pi, pj, pij, mask, tr_i[sl])
+    qi, qk, qik = params["qi"], params["qk"], params["qik"]
+    who, bk = params["who"], params["bk"]
+    for b in range(nb):
+        sl = slice(b * cfg.batch, (b + 1) * cfg.batch)
+        qi, qk, qik, who, bk = sup(wij, bj, mask, qi, qk, qik, who, bk,
+                                   tr_i[sl], tr_l[sl])
+
+    def acc(xs, ys):
+        correct = 0
+        for b in range(len(ys) // cfg.batch):
+            sl = slice(b * cfg.batch, (b + 1) * cfg.batch)
+            (probs,) = infer(wij, bj, who, bk, mask, xs[sl])
+            correct += int(np.sum(np.argmax(np.asarray(probs), 1)
+                                  == np.asarray(ys[sl])))
+        return correct / (len(ys) // cfg.batch * cfg.batch)
+
+    return acc(tr_i, tr_l), acc(te_i, te_l)
+
+
+def test_learning_beats_chance():
+    """End-to-end learning: synthetic classes separated well above chance
+    (the python mirror of examples/quickstart.rs)."""
+    tr, te = _train(CFG, epochs=2, n_train=128, n_test=64)
+    chance = 1.0 / CFG.n_classes
+    assert tr > chance + 0.15, f"train acc {tr} vs chance {chance}"
+    assert te > chance + 0.10, f"test acc {te} vs chance {chance}"

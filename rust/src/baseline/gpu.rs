@@ -1,0 +1,150 @@
+//! Nvidia A100 analytical cost model — the GPU columns of Table 2.
+//!
+//! We have no A100 (DESIGN.md §2); the paper's measurements show the
+//! GPU is *launch-overhead dominated* for online BCPNN (latency nearly
+//! flat at ~1.5-1.65 ms across models and modes, because strictly
+//! online learning processes one image per kernel sequence and cannot
+//! batch). The model is: fixed launch/dispatch overhead + DMA terms
+//! proportional to the activity arrays + memory-throughput term for
+//! the joint arrays. Coefficients calibrated to the paper's Table 2
+//! (every latency row lands within ~3%); power uses the paper's
+//! per-model telemetry with a capacity-based fallback for non-paper
+//! configs.
+
+use crate::config::ModelConfig;
+use crate::fpga::device::KernelVersion;
+use crate::fpga::timing::active_synapses;
+
+/// A100 cost-model parameters.
+#[derive(Debug, Clone)]
+pub struct GpuModel {
+    /// Fixed per-image kernel-sequence launch overhead, seconds.
+    pub launch_s: f64,
+    /// Per-hidden-unit dispatch/DMA cost, seconds.
+    pub per_nh_s: f64,
+    /// Per-input-pixel transfer cost, seconds.
+    pub per_pixel_s: f64,
+    /// Extra per-image cost of the training kernels, seconds.
+    pub train_extra_s: f64,
+    /// Extra per-image cost with structural plasticity, seconds.
+    pub struct_extra_s: f64,
+    /// Effective HBM2e throughput for the joint-array traffic, B/s.
+    pub mem_bw: f64,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        GpuModel {
+            launch_s: 1.39e-3,
+            per_nh_s: 23.3e-9,
+            per_pixel_s: 13.7e-9,
+            train_extra_s: 8e-6,
+            struct_extra_s: 15e-6,
+            mem_bw: 600e9, // ~40% of peak 1555 GB/s for strided access
+        }
+    }
+}
+
+impl GpuModel {
+    /// Per-image latency in ms (Table 2 GPU "Latency" rows).
+    pub fn latency_ms(&self, cfg: &ModelConfig, version: KernelVersion) -> f64 {
+        let base = self.launch_s
+            + self.per_nh_s * cfg.n_h() as f64
+            + self.per_pixel_s * cfg.hc_in() as f64;
+        let traffic = match version {
+            KernelVersion::Infer => 4.0 * active_synapses(cfg) as f64,
+            _ => 16.0 * active_synapses(cfg) as f64,
+        };
+        let extra = match version {
+            KernelVersion::Infer => 0.0,
+            KernelVersion::Train => self.train_extra_s,
+            KernelVersion::Struct => self.struct_extra_s,
+        };
+        (base + traffic / self.mem_bw + extra) * 1e3
+    }
+
+    /// Board power in watts. Paper telemetry for the three paper
+    /// models; occupancy-scaled fallback otherwise.
+    pub fn power_watts(&self, cfg: &ModelConfig) -> f64 {
+        match cfg.name.as_str() {
+            "model1" => 83.2,
+            "model2" => 89.8,
+            "model3" => 68.4,
+            // Fallback: idle 55 W + utilization term, capped at 90 W.
+            _ => (55.0 + 28.0 * (active_synapses(cfg) as f64 / 1.05e6)).min(90.0),
+        }
+    }
+
+    /// Energy per image in mJ (power x latency, the paper's accounting).
+    pub fn energy_per_image_mj(&self, cfg: &ModelConfig, version: KernelVersion) -> f64 {
+        self.power_watts(cfg) * self.latency_ms(cfg, version)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+
+    /// Paper Table 2 GPU latency rows (model, version, ms).
+    const TABLE2_GPU_MS: &[(&str, KernelVersion, f64)] = &[
+        ("model1", KernelVersion::Infer, 1.495),
+        ("model1", KernelVersion::Train, 1.497),
+        ("model1", KernelVersion::Struct, 1.520),
+        ("model2", KernelVersion::Infer, 1.633),
+        ("model2", KernelVersion::Train, 1.646),
+        ("model2", KernelVersion::Struct, 1.631),
+        ("model3", KernelVersion::Infer, 1.541),
+        ("model3", KernelVersion::Train, 1.554),
+        ("model3", KernelVersion::Struct, 1.556),
+    ];
+
+    #[test]
+    fn latency_within_5pct_of_paper() {
+        let g = GpuModel::default();
+        for &(m, v, want) in TABLE2_GPU_MS {
+            let got = g.latency_ms(&by_name(m).unwrap(), v);
+            let e = (got - want).abs() / want;
+            assert!(e < 0.05, "{m}/{}: {got:.3} vs paper {want} ({:.1}%)",
+                    v.name(), e * 100.0);
+        }
+    }
+
+    #[test]
+    fn power_matches_paper_telemetry() {
+        let g = GpuModel::default();
+        assert_eq!(g.power_watts(&by_name("model1").unwrap()), 83.2);
+        assert_eq!(g.power_watts(&by_name("model2").unwrap()), 89.8);
+        assert_eq!(g.power_watts(&by_name("model3").unwrap()), 68.4);
+    }
+
+    #[test]
+    fn fallback_power_in_band() {
+        let g = GpuModel::default();
+        for m in ["tiny", "small", "edge"] {
+            let p = g.power_watts(&by_name(m).unwrap());
+            assert!((55.0..=90.0).contains(&p), "{m}: {p}");
+        }
+    }
+
+    #[test]
+    fn energy_matches_paper_accounting() {
+        // Paper M1 infer: 83.2 W x 1.495 ms = 124.4 mJ.
+        let g = GpuModel::default();
+        let e = g.energy_per_image_mj(&by_name("model1").unwrap(), KernelVersion::Infer);
+        assert!((e - 124.4).abs() / 124.4 < 0.05, "{e}");
+    }
+
+    #[test]
+    fn launch_overhead_dominates_all_modes() {
+        // The structural observation that justifies the model.
+        let g = GpuModel::default();
+        for m in ["model1", "model2", "model3"] {
+            let cfg = by_name(m).unwrap();
+            for v in KernelVersion::all() {
+                let total = g.latency_ms(&cfg, v) * 1e-3;
+                assert!(g.launch_s / total > 0.75, "{m}/{}", v.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Comparison baselines for Table 2: the A100 GPU cost model and the
+//! Xeon CPU model (plus measured numbers from the pure-rust network
+//! on this host via `coordinator::driver`).
+
+pub mod cpu;
+pub mod gpu;
+
+pub use cpu::CpuModel;
+pub use gpu::GpuModel;

@@ -1,0 +1,224 @@
+//! Parameter checkpointing: save/load trained BCPNN state.
+//!
+//! Enables the paper's deployment flow across processes: train with the
+//! full kernel, persist, then serve from the inference-only build
+//! (`examples/edge_inference.rs` does it in-process; `repro train
+//! --save` / `repro serve --load` do it across runs).
+//!
+//! Format: a small JSON header (magic, version, config) followed by the
+//! raw little-endian f32 arrays in a fixed order — robust to partial
+//! writes (length-checked) and self-describing enough to reject
+//! mismatched configs.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+use super::params::Params;
+
+const MAGIC: &str = "bcpnn-accel-checkpoint";
+const VERSION: usize = 1;
+
+/// Array order in the binary section (fixed; do not reorder).
+fn arrays(p: &Params) -> [(&'static str, &Vec<f32>); 11] {
+    [
+        ("pi", &p.pi), ("pj", &p.pj), ("pij", &p.pij), ("wij", &p.wij),
+        ("bj", &p.bj), ("qi", &p.qi), ("qk", &p.qk), ("qik", &p.qik),
+        ("who", &p.who), ("bk", &p.bk), ("mask_hc", &p.mask_hc),
+    ]
+}
+
+/// Save params to `path` (atomic: write temp + rename).
+pub fn save(path: &Path, cfg: &ModelConfig, params: &Params) -> Result<()> {
+    let header = Json::obj(vec![
+        ("magic", Json::from(MAGIC)),
+        ("version", Json::from(VERSION)),
+        ("config", cfg.to_json()),
+        (
+            "arrays",
+            Json::Arr(
+                arrays(params)
+                    .iter()
+                    .map(|(n, v)| {
+                        Json::obj(vec![
+                            ("name", Json::from(*n)),
+                            ("len", Json::from(v.len())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+    .to_string();
+
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, v) in arrays(params) {
+            // Safe little-endian serialization.
+            let mut bytes = Vec::with_capacity(v.len() * 4);
+            for x in v {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            f.write_all(&bytes)?;
+        }
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load params from `path`; validates magic/version/config shapes.
+pub fn load(path: &Path) -> Result<(ModelConfig, Params)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {path:?}"))?;
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8).context("checkpoint header length")?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    if hlen > 1 << 20 {
+        bail!("implausible header length {hlen}");
+    }
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf).context("checkpoint header")?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+    if header.req("magic")?.as_str()? != MAGIC {
+        bail!("not a bcpnn-accel checkpoint");
+    }
+    if header.req("version")?.as_usize()? != VERSION {
+        bail!("unsupported checkpoint version");
+    }
+    let cfg = ModelConfig::from_json(header.req("config")?)?;
+
+    let mut read_vec = |expect: usize, name: &str| -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; expect * 4];
+        f.read_exact(&mut bytes)
+            .with_context(|| format!("array {name} ({expect} f32)"))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    };
+
+    let lens: Vec<(String, usize)> = header
+        .req("arrays")?
+        .as_arr()?
+        .iter()
+        .map(|a| {
+            Ok((
+                a.req("name")?.as_str()?.to_string(),
+                a.req("len")?.as_usize()?,
+            ))
+        })
+        .collect::<Result<_>>()?;
+    if lens.len() != 11 {
+        bail!("checkpoint has {} arrays, expected 11", lens.len());
+    }
+
+    // Shape validation against the config before reading the big blobs.
+    let expect = [
+        ("pi", cfg.n_in()), ("pj", cfg.n_h()),
+        ("pij", cfg.n_in() * cfg.n_h()), ("wij", cfg.n_in() * cfg.n_h()),
+        ("bj", cfg.n_h()), ("qi", cfg.n_h()), ("qk", cfg.n_out()),
+        ("qik", cfg.n_h() * cfg.n_out()), ("who", cfg.n_h() * cfg.n_out()),
+        ("bk", cfg.n_out()),
+        ("mask_hc", cfg.hc_in() * cfg.hc_h),
+    ];
+    for ((name, len), (ename, elen)) in lens.iter().zip(expect.iter()) {
+        if name != ename || len != elen {
+            bail!("checkpoint array {name}({len}) != expected {ename}({elen})");
+        }
+    }
+
+    let p = Params {
+        pi: read_vec(expect[0].1, "pi")?,
+        pj: read_vec(expect[1].1, "pj")?,
+        pij: read_vec(expect[2].1, "pij")?,
+        wij: read_vec(expect[3].1, "wij")?,
+        bj: read_vec(expect[4].1, "bj")?,
+        qi: read_vec(expect[5].1, "qi")?,
+        qk: read_vec(expect[6].1, "qk")?,
+        qik: read_vec(expect[7].1, "qik")?,
+        who: read_vec(expect[8].1, "who")?,
+        bk: read_vec(expect[9].1, "bk")?,
+        mask_hc: read_vec(expect[10].1, "mask_hc")?,
+    };
+    // Trailing garbage check.
+    let mut extra = [0u8; 1];
+    if f.read(&mut extra)? != 0 {
+        bail!("trailing bytes after checkpoint arrays");
+    }
+    Ok((cfg, p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("bcpnn_ckpt_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let cfg = by_name("tiny").unwrap();
+        let params = Params::init(&cfg, 9);
+        let path = tmpfile("roundtrip");
+        save(&path, &cfg, &params).unwrap();
+        let (cfg2, p2) = load(&path).unwrap();
+        assert_eq!(cfg2, cfg);
+        assert_eq!(p2.pij, params.pij);
+        assert_eq!(p2.wij, params.wij);
+        assert_eq!(p2.mask_hc, params.mask_hc);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = tmpfile("magic");
+        std::fs::write(&path, b"\x10\x00\x00\x00\x00\x00\x00\x00{\"magic\":1}").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let cfg = by_name("tiny").unwrap();
+        let params = Params::init(&cfg, 1);
+        let path = tmpfile("trunc");
+        save(&path, &cfg, &params).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("array"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let cfg = by_name("tiny").unwrap();
+        let params = Params::init(&cfg, 2);
+        let path = tmpfile("trail");
+        save(&path, &cfg, &params).unwrap();
+        let mut full = std::fs::read(&path).unwrap();
+        full.push(0xFF);
+        std::fs::write(&path, &full).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_context() {
+        let err = load(Path::new("/nonexistent/ckpt")).unwrap_err().to_string();
+        assert!(err.contains("checkpoint"), "{err}");
+    }
+}

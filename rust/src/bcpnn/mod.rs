@@ -1,0 +1,19 @@
+//! Pure-rust feedforward BCPNN — the reference/baseline implementation.
+//!
+//! Three roles (DESIGN.md §2/§3):
+//!  1. the **CPU baseline** of the paper's Table 2 (single-core,
+//!     sequential — the Xeon stand-in, measured for real);
+//!  2. the **numeric oracle** for integration tests of the PJRT path
+//!     (same math as L1/L2, so artifact outputs are cross-checked);
+//!  3. the **host side** of the real system: structural plasticity runs
+//!     here between artifact invocations, exactly as the paper runs it
+//!     on the host CPU next to the FPGA.
+
+pub mod checkpoint;
+pub mod network;
+pub mod params;
+pub mod structural;
+
+pub use network::Network;
+pub use params::Params;
+pub use structural::{mutual_information, receptive_field, StructuralPlasticity};

@@ -1,0 +1,315 @@
+//! The pure-rust BCPNN network: activation + plasticity, sequential.
+//!
+//! Math identical to `python/compile/kernels/ref.py` (the jnp oracle)
+//! and therefore to the Pallas kernels in the AOT artifacts. This is
+//! the paper's "CPU implementation, single core, -O3" baseline: a
+//! straightforward sequential implementation with no task parallelism —
+//! deliberately, because Table 2's CPU column is exactly that.
+
+use crate::config::ModelConfig;
+use crate::data::encode::{encode_image, one_hot};
+
+use super::params::Params;
+
+/// A BCPNN network bound to a config; owns its parameter state.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub cfg: ModelConfig,
+    pub params: Params,
+    /// Unit-level mask cache, invalidated on structural updates.
+    mask_unit: Vec<f32>,
+}
+
+impl Network {
+    pub fn new(cfg: ModelConfig, seed: u64) -> Network {
+        let params = Params::init(&cfg, seed);
+        let mask_unit = params.expand_mask(&cfg);
+        Network { cfg, params, mask_unit }
+    }
+
+    /// Re-derive the unit-level mask (call after structural rewiring).
+    pub fn refresh_mask(&mut self) {
+        self.mask_unit = self.params.expand_mask(&self.cfg);
+    }
+
+    // ------------------------------------------------------ activation
+
+    /// Masked support: s_j = b_j + sum_i m_ij w_ij x_i.
+    pub fn support(&self, x: &[f32]) -> Vec<f32> {
+        let n_h = self.cfg.n_h();
+        let mut s = self.params.bj.clone();
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let wrow = &self.params.wij[i * n_h..(i + 1) * n_h];
+            let mrow = &self.mask_unit[i * n_h..(i + 1) * n_h];
+            for j in 0..n_h {
+                s[j] += xi * wrow[j] * mrow[j];
+            }
+        }
+        s
+    }
+
+    /// Masked support restricted to hidden columns `lo..hi` — lets the
+    /// dataflow pipeline split the mat-vec across parallel stages the
+    /// way the FPGA splits it across HBM channel groups.
+    pub fn support_cols(&self, x: &[f32], lo: usize, hi: usize) -> Vec<f32> {
+        let n_h = self.cfg.n_h();
+        debug_assert!(lo <= hi && hi <= n_h);
+        let mut s = self.params.bj[lo..hi].to_vec();
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let wrow = &self.params.wij[i * n_h + lo..i * n_h + hi];
+            let mrow = &self.mask_unit[i * n_h + lo..i * n_h + hi];
+            for j in 0..(hi - lo) {
+                s[j] += xi * wrow[j] * mrow[j];
+            }
+        }
+        s
+    }
+
+    /// Per-hypercolumn softmax with gain (in place).
+    pub fn hc_softmax(s: &mut [f32], n_hc: usize, n_mc: usize, gain: f32) {
+        debug_assert_eq!(s.len(), n_hc * n_mc);
+        for hc in s.chunks_mut(n_mc) {
+            let mut mx = f32::NEG_INFINITY;
+            for v in hc.iter_mut() {
+                *v *= gain;
+                mx = mx.max(*v);
+            }
+            let mut sum = 0.0;
+            for v in hc.iter_mut() {
+                *v = (*v - mx).exp();
+                sum += *v;
+            }
+            for v in hc.iter_mut() {
+                *v /= sum;
+            }
+        }
+    }
+
+    /// Hidden activity for a raw image: encode -> support -> softmax.
+    pub fn hidden_activity(&self, img: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let x = encode_image(img);
+        debug_assert_eq!(x.len(), self.cfg.n_in());
+        let mut y = self.support(&x);
+        Self::hc_softmax(&mut y, self.cfg.hc_h, self.cfg.mc_h, self.cfg.gain);
+        (x, y)
+    }
+
+    /// Output probabilities from hidden activity (single output HC).
+    pub fn output_activity(&self, y: &[f32]) -> Vec<f32> {
+        let n_out = self.cfg.n_out();
+        let mut s = self.params.bk.clone();
+        for (j, &yj) in y.iter().enumerate() {
+            let row = &self.params.who[j * n_out..(j + 1) * n_out];
+            for k in 0..n_out {
+                s[k] += yj * row[k];
+            }
+        }
+        Self::hc_softmax(&mut s, 1, n_out, 1.0);
+        s
+    }
+
+    /// Full inference: class probabilities for one image.
+    pub fn infer(&self, img: &[f32]) -> Vec<f32> {
+        let (_, y) = self.hidden_activity(img);
+        self.output_activity(&y)
+    }
+
+    /// Argmax prediction.
+    pub fn predict(&self, img: &[f32]) -> usize {
+        argmax(&self.infer(img))
+    }
+
+    // ------------------------------------------------------ plasticity
+
+    /// One online unsupervised update (input->hidden projection):
+    /// EMA traces + fused Bayesian weight recompute — the rust mirror
+    /// of the Pallas plasticity kernel.
+    pub fn train_unsup_step(&mut self, img: &[f32]) {
+        let (x, y) = self.hidden_activity(img);
+        let a = self.cfg.alpha;
+        let eps = self.cfg.eps;
+        let n_h = self.cfg.n_h();
+        let p = &mut self.params;
+        for (pi, &xi) in p.pi.iter_mut().zip(&x) {
+            *pi = (1.0 - a) * *pi + a * xi;
+        }
+        for (pj, &yj) in p.pj.iter_mut().zip(&y) {
+            *pj = (1.0 - a) * *pj + a * yj;
+        }
+        // Fused joint update + weight map (one pass over the big arrays,
+        // exactly like the streamed FPGA pipeline / Pallas kernel).
+        for i in 0..x.len() {
+            let xi = x[i];
+            let pi_eps = p.pi[i] + eps;
+            let prow = &mut p.pij[i * n_h..(i + 1) * n_h];
+            let wrow = &mut p.wij[i * n_h..(i + 1) * n_h];
+            for j in 0..n_h {
+                let pij_new = (1.0 - a) * prow[j] + a * xi * y[j];
+                prow[j] = pij_new;
+                wrow[j] = ((pij_new + eps * eps) / (pi_eps * (p.pj[j] + eps))).ln();
+            }
+        }
+        for (b, &pj) in p.bj.iter_mut().zip(&p.pj) {
+            *b = (pj + eps).ln();
+        }
+    }
+
+    /// One online supervised update (hidden->output projection).
+    pub fn train_sup_step(&mut self, img: &[f32], label: usize) {
+        let (_, y) = self.hidden_activity(img);
+        let t = one_hot(label, self.cfg.n_out());
+        let a = self.cfg.alpha;
+        let eps = self.cfg.eps;
+        let n_out = self.cfg.n_out();
+        let p = &mut self.params;
+        for (qi, &yj) in p.qi.iter_mut().zip(&y) {
+            *qi = (1.0 - a) * *qi + a * yj;
+        }
+        for (qk, &tk) in p.qk.iter_mut().zip(&t) {
+            *qk = (1.0 - a) * *qk + a * tk;
+        }
+        for j in 0..y.len() {
+            let yj = y[j];
+            let qi_eps = p.qi[j] + eps;
+            let qrow = &mut p.qik[j * n_out..(j + 1) * n_out];
+            let wrow = &mut p.who[j * n_out..(j + 1) * n_out];
+            for k in 0..n_out {
+                let q_new = (1.0 - a) * qrow[k] + a * yj * t[k];
+                qrow[k] = q_new;
+                wrow[k] = ((q_new + eps * eps) / (qi_eps * (p.qk[k] + eps))).ln();
+            }
+        }
+        for (b, &qk) in p.bk.iter_mut().zip(&p.qk) {
+            *b = (qk + eps).ln();
+        }
+    }
+
+    /// Accuracy over a labelled set.
+    pub fn accuracy(&self, images: &[Vec<f32>], labels: &[u32]) -> f64 {
+        let correct = images
+            .iter()
+            .zip(labels)
+            .filter(|(img, &l)| self.predict(img) as u32 == l)
+            .count();
+        correct as f64 / labels.len().max(1) as f64
+    }
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+    use crate::data::synth;
+
+    fn net() -> Network {
+        Network::new(by_name("tiny").unwrap(), 42)
+    }
+
+    #[test]
+    fn hidden_activity_is_distribution_per_hc() {
+        let n = net();
+        let img = vec![0.3; n.cfg.hc_in()];
+        let (_, y) = n.hidden_activity(&img);
+        for hc in y.chunks(n.cfg.mc_h) {
+            let s: f32 = hc.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "{s}");
+            assert!(hc.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn infer_probs_sum_to_one() {
+        let n = net();
+        let img = vec![0.5; n.cfg.hc_in()];
+        let p = n.infer(&img);
+        assert_eq!(p.len(), n.cfg.n_out());
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn softmax_stable_at_extremes() {
+        let mut s = vec![1e4, -1e4, 0.0, 30.0];
+        Network::hc_softmax(&mut s, 1, 4, 1.0);
+        assert!(s.iter().all(|v| v.is_finite()));
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn unsup_step_keeps_traces_probabilistic() {
+        let mut n = net();
+        let d = synth::generate(n.cfg.img_side, n.cfg.n_classes, 20, 1, 0.15);
+        for img in &d.images {
+            n.train_unsup_step(img);
+        }
+        assert!(n.params.pij.iter().all(|&v| v > 0.0 && v < 1.0));
+        // marginals per HC still sum to ~1
+        for hc in n.params.pi.chunks(n.cfg.mc_in) {
+            let s: f32 = hc.iter().sum();
+            assert!((s - 1.0).abs() < 1e-3, "{s}");
+        }
+    }
+
+    #[test]
+    fn masked_weights_do_not_affect_support() {
+        let n = net();
+        let img = vec![0.7; n.cfg.hc_in()];
+        let p1 = n.infer(&img);
+        let mut n2 = n.clone();
+        // Corrupt weights where mask = 0; output must be unchanged.
+        let n_h = n2.cfg.n_h();
+        let mask = n2.params.expand_mask(&n2.cfg);
+        for (idx, w) in n2.params.wij.iter_mut().enumerate() {
+            if mask[idx] == 0.0 {
+                *w = 1e3;
+            }
+        }
+        let _ = n_h;
+        let p2 = n2.infer(&img);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn end_to_end_learning_beats_chance() {
+        // The rust mirror of python test_learning_beats_chance.
+        let cfg = by_name("tiny").unwrap();
+        let mut n = Network::new(cfg.clone(), 42);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 192, 11, 0.15);
+        let (tr, te) = d.split(128);
+        for _ in 0..2 {
+            for img in &tr.images {
+                n.train_unsup_step(img);
+            }
+        }
+        for (img, &l) in tr.images.iter().zip(&tr.labels) {
+            n.train_sup_step(img, l as usize);
+        }
+        let acc = n.accuracy(&te.images, &te.labels);
+        let chance = 1.0 / cfg.n_classes as f64;
+        assert!(acc > chance + 0.15, "test acc {acc} vs chance {chance}");
+    }
+
+    #[test]
+    fn argmax_ties_take_first() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

@@ -1,0 +1,202 @@
+//! BCPNN parameter state: probability traces, derived weights/biases,
+//! and the structural-plasticity mask.
+//!
+//! Layout matches the AOT artifact signatures exactly (row-major
+//! (n_in, n_h) joint arrays, HC-level mask) so `runtime::session` can
+//! marshal these buffers into PJRT Literals without reshaping.
+
+use crate::config::ModelConfig;
+use crate::data::rng::XorShift64;
+
+/// All learnable state of the two projections + mask.
+#[derive(Debug, Clone)]
+pub struct Params {
+    // input -> hidden projection (unsupervised)
+    pub pi: Vec<f32>,   // (n_in)
+    pub pj: Vec<f32>,   // (n_h)
+    pub pij: Vec<f32>,  // (n_in, n_h) row-major
+    pub wij: Vec<f32>,  // (n_in, n_h)
+    pub bj: Vec<f32>,   // (n_h)
+    // hidden -> output projection (supervised)
+    pub qi: Vec<f32>,   // (n_h)
+    pub qk: Vec<f32>,   // (n_out)
+    pub qik: Vec<f32>,  // (n_h, n_out) row-major
+    pub who: Vec<f32>,  // (n_h, n_out)
+    pub bk: Vec<f32>,   // (n_out)
+    /// HC-level structural mask (hc_in, hc_h) row-major, 0.0/1.0.
+    pub mask_hc: Vec<f32>,
+}
+
+impl Params {
+    /// Initial traces: uniform independence + symmetry-breaking jitter
+    /// on the joint trace (see python `model.init_params` for why), and
+    /// a random mask with exactly `nact_hi` active input HCs per hidden
+    /// HC. Deterministic in `seed`.
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Params {
+        let (n_in, n_h, n_out) = (cfg.n_in(), cfg.n_h(), cfg.n_out());
+        let eps = cfg.eps;
+        let jitter = 0.2f32;
+
+        let pi = vec![1.0 / cfg.mc_in as f32; n_in];
+        let pj = vec![1.0 / cfg.mc_h as f32; n_h];
+        let base_pij = 1.0 / (cfg.mc_in * cfg.mc_h) as f32;
+        let mut rng = XorShift64::new(seed.wrapping_add(0x5EED));
+        let pij: Vec<f32> = (0..n_in * n_h)
+            .map(|_| base_pij * (1.0 - jitter + 2.0 * jitter * rng.next_f32()))
+            .collect();
+
+        let qi = vec![1.0 / cfg.mc_h as f32; n_h];
+        let qk = vec![1.0 / n_out as f32; n_out];
+        let qik = vec![1.0 / (cfg.mc_h * n_out) as f32; n_h * n_out];
+
+        let mut p = Params {
+            pi, pj, pij,
+            wij: vec![0.0; n_in * n_h],
+            bj: vec![0.0; n_h],
+            qi, qk, qik,
+            who: vec![0.0; n_h * n_out],
+            bk: vec![0.0; n_out],
+            mask_hc: init_mask(cfg, seed),
+        };
+        p.recompute_ih_weights(eps);
+        p.recompute_ho_weights(eps);
+        p
+    }
+
+    /// Derive w_ij / b_j from the input->hidden traces.
+    pub fn recompute_ih_weights(&mut self, eps: f32) {
+        let n_h = self.pj.len();
+        for i in 0..self.pi.len() {
+            let pi = self.pi[i] + eps;
+            let row = &mut self.wij[i * n_h..(i + 1) * n_h];
+            let prow = &self.pij[i * n_h..(i + 1) * n_h];
+            for j in 0..n_h {
+                row[j] = ((prow[j] + eps * eps) / (pi * (self.pj[j] + eps))).ln();
+            }
+        }
+        for (b, &p) in self.bj.iter_mut().zip(&self.pj) {
+            *b = (p + eps).ln();
+        }
+    }
+
+    /// Derive w_ho / b_k from the hidden->output traces.
+    pub fn recompute_ho_weights(&mut self, eps: f32) {
+        let n_out = self.qk.len();
+        for i in 0..self.qi.len() {
+            let qi = self.qi[i] + eps;
+            let row = &mut self.who[i * n_out..(i + 1) * n_out];
+            let qrow = &self.qik[i * n_out..(i + 1) * n_out];
+            for k in 0..n_out {
+                row[k] = ((qrow[k] + eps * eps) / (qi * (self.qk[k] + eps))).ln();
+            }
+        }
+        for (b, &q) in self.bk.iter_mut().zip(&self.qk) {
+            *b = (q + eps).ln();
+        }
+    }
+
+    /// Expand the HC-level mask to unit level (n_in, n_h) row-major.
+    pub fn expand_mask(&self, cfg: &ModelConfig) -> Vec<f32> {
+        let (n_in, n_h) = (cfg.n_in(), cfg.n_h());
+        let mut m = vec![0.0f32; n_in * n_h];
+        for i in 0..n_in {
+            let hc_i = i / cfg.mc_in;
+            for j in 0..n_h {
+                let hc_j = j / cfg.mc_h;
+                m[i * n_h + j] = self.mask_hc[hc_i * cfg.hc_h + hc_j];
+            }
+        }
+        m
+    }
+}
+
+/// Random structural mask: exactly `nact_hi` active input HCs per
+/// hidden HC (column-wise sparsity, as in the paper's nactHi).
+pub fn init_mask(cfg: &ModelConfig, seed: u64) -> Vec<f32> {
+    let mut rng = XorShift64::new(seed.wrapping_add(0x3A5C));
+    let mut mask = vec![0.0f32; cfg.hc_in() * cfg.hc_h];
+    for h in 0..cfg.hc_h {
+        for idx in rng.sample_indices(cfg.hc_in(), cfg.nact_hi) {
+            mask[idx * cfg.hc_h + h] = 1.0;
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+
+    #[test]
+    fn init_shapes() {
+        let cfg = by_name("tiny").unwrap();
+        let p = Params::init(&cfg, 1);
+        assert_eq!(p.pi.len(), cfg.n_in());
+        assert_eq!(p.pij.len(), cfg.n_in() * cfg.n_h());
+        assert_eq!(p.wij.len(), cfg.n_in() * cfg.n_h());
+        assert_eq!(p.qik.len(), cfg.n_h() * cfg.n_out());
+        assert_eq!(p.mask_hc.len(), cfg.hc_in() * cfg.hc_h);
+    }
+
+    #[test]
+    fn mask_column_sparsity_exact() {
+        let cfg = by_name("tiny").unwrap();
+        let p = Params::init(&cfg, 2);
+        for h in 0..cfg.hc_h {
+            let active: f32 =
+                (0..cfg.hc_in()).map(|i| p.mask_hc[i * cfg.hc_h + h]).sum();
+            assert_eq!(active as usize, cfg.nact_hi);
+        }
+    }
+
+    #[test]
+    fn jitter_breaks_minicolumn_symmetry() {
+        let cfg = by_name("tiny").unwrap();
+        let p = Params::init(&cfg, 3);
+        // Weights must differ across minicolumns of the same hidden HC.
+        let n_h = cfg.n_h();
+        let w0 = p.wij[0];
+        assert!((0..cfg.mc_h).any(|j| (p.wij[j] - w0).abs() > 1e-6));
+        let _ = n_h;
+    }
+
+    #[test]
+    fn traces_are_probabilities() {
+        let cfg = by_name("tiny").unwrap();
+        let p = Params::init(&cfg, 4);
+        assert!(p.pij.iter().all(|&v| v > 0.0 && v < 1.0));
+        assert!(p.pi.iter().all(|&v| v > 0.0 && v <= 0.5 + 1e-6));
+    }
+
+    #[test]
+    fn expand_mask_blocks_constant() {
+        let cfg = by_name("tiny").unwrap();
+        let p = Params::init(&cfg, 5);
+        let m = p.expand_mask(&cfg);
+        let n_h = cfg.n_h();
+        for hc_i in 0..cfg.hc_in() {
+            for hc_j in 0..cfg.hc_h {
+                let expect = p.mask_hc[hc_i * cfg.hc_h + hc_j];
+                for a in 0..cfg.mc_in {
+                    for b in 0..cfg.mc_h {
+                        let i = hc_i * cfg.mc_in + a;
+                        let j = hc_j * cfg.mc_h + b;
+                        assert_eq!(m[i * n_h + j], expect);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let cfg = by_name("tiny").unwrap();
+        let a = Params::init(&cfg, 7);
+        let b = Params::init(&cfg, 7);
+        assert_eq!(a.pij, b.pij);
+        assert_eq!(a.mask_hc, b.mask_hc);
+        let c = Params::init(&cfg, 8);
+        assert_ne!(a.pij, c.pij);
+    }
+}

@@ -1,0 +1,215 @@
+//! Structural plasticity — the host-side rewiring step.
+//!
+//! The paper runs this on the host CPU between FPGA batches ("every
+//! certain training computes the structural plasticity that happens in
+//! the host"); we run it between PJRT artifact invocations. Following
+//! Ravichandran et al. 2024: score every (input HC, hidden HC) pair by
+//! the mutual information carried by the probability traces, then for
+//! each hidden HC swap the weakest *active* connection for the
+//! strongest *silent* one (one swap per update, hysteresis via a margin
+//! so wiring settles).
+
+use crate::config::ModelConfig;
+
+use super::params::Params;
+
+/// Mutual information between input HC `hc_i` and hidden HC `hc_j`
+/// estimated from the (full, unmasked) probability traces:
+///   MI = sum_{i in hc_i} sum_{j in hc_j} p_ij log(p_ij / (p_i p_j)).
+pub fn mutual_information(
+    params: &Params, cfg: &ModelConfig, hc_i: usize, hc_j: usize,
+) -> f64 {
+    let eps = cfg.eps;
+    let n_h = cfg.n_h();
+    let mut mi = 0.0f64;
+    for a in 0..cfg.mc_in {
+        let i = hc_i * cfg.mc_in + a;
+        let pi = params.pi[i] + eps;
+        for b in 0..cfg.mc_h {
+            let j = hc_j * cfg.mc_h + b;
+            let pij = params.pij[i * n_h + j] + eps * eps;
+            let pj = params.pj[j] + eps;
+            mi += pij as f64 * (pij as f64 / (pi as f64 * pj as f64)).ln();
+        }
+    }
+    mi
+}
+
+/// Extract hidden HC `hc_j`'s receptive field as an image-shaped map of
+/// per-pixel MI, with silent connections zeroed — Fig. 5's visual field.
+pub fn receptive_field(params: &Params, cfg: &ModelConfig, hc_j: usize) -> Vec<f64> {
+    (0..cfg.hc_in())
+        .map(|hc_i| {
+            if params.mask_hc[hc_i * cfg.hc_h + hc_j] > 0.0 {
+                mutual_information(params, cfg, hc_i, hc_j)
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// Outcome of one rewiring pass.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RewireStats {
+    /// Swaps performed (at most one per hidden HC per pass).
+    pub swaps: usize,
+    /// Hidden HCs whose wiring was already MI-optimal (within margin).
+    pub stable: usize,
+}
+
+/// Host-side structural plasticity state/step.
+#[derive(Debug, Clone)]
+pub struct StructuralPlasticity {
+    /// Relative MI margin a silent candidate must exceed the worst
+    /// active connection by (hysteresis; prevents oscillation).
+    pub margin: f64,
+}
+
+impl Default for StructuralPlasticity {
+    fn default() -> Self {
+        Self { margin: 0.02 }
+    }
+}
+
+impl StructuralPlasticity {
+    /// One rewiring pass over all hidden HCs. Mutates `params.mask_hc`;
+    /// the caller must re-expand unit masks afterwards.
+    pub fn rewire(&self, params: &mut Params, cfg: &ModelConfig) -> RewireStats {
+        let mut stats = RewireStats::default();
+        for hc_j in 0..cfg.hc_h {
+            // Score all input HCs for this hidden HC.
+            let mi: Vec<f64> = (0..cfg.hc_in())
+                .map(|hc_i| mutual_information(params, cfg, hc_i, hc_j))
+                .collect();
+            let mut worst_active: Option<(usize, f64)> = None;
+            let mut best_silent: Option<(usize, f64)> = None;
+            for hc_i in 0..cfg.hc_in() {
+                let active = params.mask_hc[hc_i * cfg.hc_h + hc_j] > 0.0;
+                let v = mi[hc_i];
+                if active {
+                    if worst_active.map_or(true, |(_, w)| v < w) {
+                        worst_active = Some((hc_i, v));
+                    }
+                } else if best_silent.map_or(true, |(_, b)| v > b) {
+                    best_silent = Some((hc_i, v));
+                }
+            }
+            match (worst_active, best_silent) {
+                (Some((wa, wv)), Some((bs, bv)))
+                    if bv > wv * (1.0 + self.margin) + 1e-12 =>
+                {
+                    params.mask_hc[wa * cfg.hc_h + hc_j] = 0.0;
+                    params.mask_hc[bs * cfg.hc_h + hc_j] = 1.0;
+                    stats.swaps += 1;
+                }
+                _ => stats.stable += 1,
+            }
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bcpnn::network::Network;
+    use crate::config::by_name;
+    use crate::data::synth;
+
+    #[test]
+    fn mi_nonnegative_for_learned_traces() {
+        let cfg = by_name("tiny").unwrap();
+        let mut n = Network::new(cfg.clone(), 1);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 64, 2, 0.15);
+        for img in &d.images {
+            n.train_unsup_step(img);
+        }
+        // MI of a self-consistent joint distribution is >= 0 up to eps
+        // effects; allow tiny negative numerical slack.
+        for hc_i in (0..cfg.hc_in()).step_by(7) {
+            for hc_j in 0..cfg.hc_h {
+                let mi = mutual_information(&n.params, &cfg, hc_i, hc_j);
+                assert!(mi > -1e-3, "MI({hc_i},{hc_j}) = {mi}");
+            }
+        }
+    }
+
+    #[test]
+    fn rewire_preserves_column_sparsity() {
+        let cfg = by_name("tiny").unwrap();
+        let mut n = Network::new(cfg.clone(), 3);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 64, 4, 0.15);
+        for img in &d.images {
+            n.train_unsup_step(img);
+        }
+        let sp = StructuralPlasticity::default();
+        let stats = sp.rewire(&mut n.params, &cfg);
+        assert_eq!(stats.swaps + stats.stable, cfg.hc_h);
+        for h in 0..cfg.hc_h {
+            let active: f32 =
+                (0..cfg.hc_in()).map(|i| n.params.mask_hc[i * cfg.hc_h + h]).sum();
+            assert_eq!(active as usize, cfg.nact_hi, "hidden HC {h}");
+        }
+    }
+
+    #[test]
+    fn rewire_converges_to_stability() {
+        let cfg = by_name("tiny").unwrap();
+        let mut n = Network::new(cfg.clone(), 5);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 128, 6, 0.15);
+        for img in &d.images {
+            n.train_unsup_step(img);
+        }
+        // Repeated rewiring with frozen traces must reach a fixed point.
+        let sp = StructuralPlasticity::default();
+        let mut last = usize::MAX;
+        for _ in 0..cfg.hc_in() {
+            let stats = sp.rewire(&mut n.params, &cfg);
+            if stats.swaps == 0 {
+                last = 0;
+                break;
+            }
+            last = stats.swaps;
+        }
+        assert_eq!(last, 0, "rewiring did not converge");
+    }
+
+    #[test]
+    fn receptive_field_zeroes_silent_connections() {
+        let cfg = by_name("tiny").unwrap();
+        let n = Network::new(cfg.clone(), 8);
+        let rf = receptive_field(&n.params, &cfg, 0);
+        assert_eq!(rf.len(), cfg.hc_in());
+        for (hc_i, v) in rf.iter().enumerate() {
+            if n.params.mask_hc[hc_i * cfg.hc_h] == 0.0 {
+                assert_eq!(*v, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rewire_moves_field_toward_informative_pixels() {
+        // Fig 5 semantics: after training on data whose information is
+        // concentrated in prototype blobs, rewiring should increase the
+        // total MI captured by the active connections.
+        let cfg = by_name("tiny").unwrap();
+        let mut n = Network::new(cfg.clone(), 9);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 128, 10, 0.1);
+        for img in &d.images {
+            n.train_unsup_step(img);
+        }
+        let total_mi = |p: &crate::bcpnn::Params| -> f64 {
+            (0..cfg.hc_h)
+                .map(|h| receptive_field(p, &cfg, h).iter().sum::<f64>())
+                .sum()
+        };
+        let before = total_mi(&n.params);
+        let sp = StructuralPlasticity::default();
+        for _ in 0..8 {
+            sp.rewire(&mut n.params, &cfg);
+        }
+        let after = total_mi(&n.params);
+        assert!(after >= before, "MI decreased: {before} -> {after}");
+    }
+}

@@ -1,0 +1,155 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Measured the classic way: warmup, then `iters` timed runs, reporting
+//! mean / stddev / min / max / throughput. Benches under `benches/` are
+//! `harness = false` binaries built on this module; output is
+//! markdown-ish rows so `cargo bench | tee bench_output.txt` reads well.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    /// Items/sec given items-per-iteration.
+    pub fn throughput(&self, items_per_iter: u64) -> f64 {
+        items_per_iter as f64 / self.mean.as_secs_f64().max(1e-12)
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>6}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.min),
+            fmt_dur(self.max),
+            self.iters,
+        )
+    }
+}
+
+/// Format a duration adaptively (ns/us/ms/s).
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Print the header matching [`BenchResult::row`].
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>12} {:>12} {:>12} {:>6}",
+        "benchmark", "mean", "min", "max", "iters"
+    )
+}
+
+/// Run `f` with `warmup` unmeasured and `iters` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(name, &samples)
+}
+
+/// Adaptive variant: runs until `budget` is spent (at least 3 iters).
+pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // One calibration run.
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed();
+    let mut samples = vec![first];
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    summarize(name, &samples)
+}
+
+fn summarize(name: &str, samples: &[Duration]) -> BenchResult {
+    let n = samples.len() as f64;
+    let mean_s = samples.iter().map(|d| d.as_secs_f64()).sum::<f64>() / n;
+    let var = samples
+        .iter()
+        .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+        .sum::<f64>()
+        / n;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len() as u32,
+        mean: Duration::from_secs_f64(mean_s),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: *samples.iter().min().unwrap(),
+        max: *samples.iter().max().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0u64;
+        let r = bench("x", 2, 10, || n += 1);
+        assert_eq!(r.iters, 10);
+        assert_eq!(n, 12); // warmup + iters
+        assert!(r.min <= r.mean && r.mean <= r.max);
+    }
+
+    #[test]
+    fn bench_for_runs_at_least_three() {
+        let r = bench_for("x", Duration::from_millis(1), || {
+            std::thread::sleep(Duration::from_micros(100))
+        });
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let r = bench("x", 0, 3, || std::thread::sleep(Duration::from_micros(200)));
+        let tp = r.throughput(100);
+        assert!(tp > 0.0 && tp < 1e9, "{tp}");
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).ends_with("us"));
+        assert!(fmt_dur(Duration::from_millis(50)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with(" s"));
+    }
+
+    #[test]
+    fn row_and_header_align() {
+        let r = bench("alignment-check", 0, 1, || {});
+        assert_eq!(header().split_whitespace().count() >= 5, true);
+        assert!(r.row().contains("alignment-check"));
+    }
+}

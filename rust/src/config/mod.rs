@@ -1,0 +1,281 @@
+//! Model configuration system — the rust mirror of
+//! `python/compile/configs.py` (paper Table 1 + reduced configs).
+//!
+//! Configs can be loaded from JSON files (`--config-file`), overridden
+//! per-field from the CLI, or taken from the built-in registry by name.
+//! The python/rust registries are cross-checked: `repro config --all
+//! --json` emits the registry and `python/tests/test_configs.py` pins
+//! the same constants.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One BCPNN network configuration. See `python/compile/configs.py`
+/// for the layout conventions (shared verbatim).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Square input image side; `hc_in = img_side^2` (one HC per pixel).
+    pub img_side: usize,
+    /// Hidden hypercolumns / minicolumns per hypercolumn.
+    pub hc_h: usize,
+    pub mc_h: usize,
+    pub n_classes: usize,
+    /// Active input HCs per hidden HC (structural sparsity, "nactHi").
+    pub nact_hi: usize,
+    /// EMA learning time constant for the probability traces.
+    pub alpha: f32,
+    /// Images per AOT artifact invocation (lax.scan length).
+    pub batch: usize,
+    /// Minicolumns per input HC (2 = intensity coding [v, 1-v]).
+    pub mc_in: usize,
+    /// Probability floor inside log().
+    pub eps: f32,
+    /// Softmax gain on support values.
+    pub gain: f32,
+}
+
+impl ModelConfig {
+    pub fn hc_in(&self) -> usize {
+        self.img_side * self.img_side
+    }
+    pub fn n_in(&self) -> usize {
+        self.hc_in() * self.mc_in
+    }
+    pub fn n_h(&self) -> usize {
+        self.hc_h * self.mc_h
+    }
+    pub fn n_out(&self) -> usize {
+        self.n_classes
+    }
+
+    /// Parameter-memory footprint of the training kernel in bytes
+    /// (traces + weights, f32) — drives the FPGA BRAM/HBM modeling.
+    pub fn param_bytes(&self) -> usize {
+        let ih = 2 * self.n_in() * self.n_h() + self.n_in() + self.n_h() * 2;
+        let ho = 2 * self.n_h() * self.n_out() + self.n_h() + self.n_out() * 2;
+        4 * (ih + ho)
+    }
+
+    /// Validate internal consistency (mirrors python test_configs).
+    pub fn validate(&self) -> Result<()> {
+        if self.img_side == 0 || self.hc_h == 0 || self.mc_h == 0 {
+            bail!("{}: zero dimension", self.name);
+        }
+        if self.n_classes < 2 {
+            bail!("{}: need >= 2 classes", self.name);
+        }
+        if self.nact_hi == 0 || self.nact_hi > self.hc_in() {
+            bail!(
+                "{}: nact_hi {} out of range (1..={})",
+                self.name, self.nact_hi, self.hc_in()
+            );
+        }
+        if !(0.0..1.0).contains(&self.alpha) || self.alpha <= 0.0 {
+            bail!("{}: alpha {} not in (0,1)", self.name, self.alpha);
+        }
+        if self.mc_in != 2 {
+            bail!("{}: only mc_in=2 intensity coding supported", self.name);
+        }
+        if self.batch == 0 {
+            bail!("{}: batch must be positive", self.name);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ JSON
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("img_side", Json::from(self.img_side)),
+            ("hc_h", Json::from(self.hc_h)),
+            ("mc_h", Json::from(self.mc_h)),
+            ("n_classes", Json::from(self.n_classes)),
+            ("nact_hi", Json::from(self.nact_hi)),
+            ("alpha", Json::from(self.alpha as f64)),
+            ("batch", Json::from(self.batch)),
+            ("mc_in", Json::from(self.mc_in)),
+            ("eps", Json::from(self.eps as f64)),
+            ("gain", Json::from(self.gain as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ModelConfig> {
+        let cfg = ModelConfig {
+            name: v.req("name")?.as_str()?.to_string(),
+            img_side: v.req("img_side")?.as_usize()?,
+            hc_h: v.req("hc_h")?.as_usize()?,
+            mc_h: v.req("mc_h")?.as_usize()?,
+            n_classes: v.req("n_classes")?.as_usize()?,
+            nact_hi: v.req("nact_hi")?.as_usize()?,
+            alpha: v.req("alpha")?.as_f64()? as f32,
+            batch: v.req("batch")?.as_usize()?,
+            mc_in: v.get("mc_in").map(|x| x.as_usize()).transpose()?.unwrap_or(2),
+            eps: v.get("eps").map(|x| x.as_f64()).transpose()?.unwrap_or(1e-8)
+                as f32,
+            gain: v.get("gain").map(|x| x.as_f64()).transpose()?.unwrap_or(1.0)
+                as f32,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<ModelConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Dataset shape/size spec per config (paper Table 1 right columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DatasetSpec {
+    pub train: usize,
+    pub test: usize,
+    pub epochs: usize,
+}
+
+fn cfg(
+    name: &str, img_side: usize, hc_h: usize, mc_h: usize, n_classes: usize,
+    nact_hi: usize, alpha: f32, batch: usize,
+) -> ModelConfig {
+    ModelConfig {
+        name: name.to_string(),
+        img_side, hc_h, mc_h, n_classes, nact_hi, alpha, batch,
+        mc_in: 2,
+        eps: 1e-8,
+        gain: 1.0,
+    }
+}
+
+/// Built-in registry — MUST stay in sync with python/compile/configs.py.
+pub fn registry() -> BTreeMap<String, ModelConfig> {
+    let list = vec![
+        cfg("tiny", 8, 4, 16, 4, 32, 2e-2, 16),
+        cfg("small", 12, 8, 16, 10, 64, 1e-2, 32),
+        cfg("edge", 16, 8, 32, 2, 96, 5e-2, 32), // alpha: see python configs.py note
+        // Paper Table 1:
+        cfg("model1", 28, 32, 128, 10, 128, 1e-3, 32), // MNIST
+        cfg("model2", 28, 32, 256, 2, 128, 1e-3, 32),  // PneumoniaMNIST
+        cfg("model3", 64, 32, 128, 2, 128, 1e-3, 32),  // BreastMNIST
+    ];
+    list.into_iter().map(|c| (c.name.clone(), c)).collect()
+}
+
+/// Dataset sizes — paper Table 1 for model1-3, reduced otherwise.
+pub fn dataset_spec(name: &str) -> DatasetSpec {
+    match name {
+        "model1" => DatasetSpec { train: 60000, test: 10000, epochs: 5 },
+        "model2" => DatasetSpec { train: 4708, test: 624, epochs: 20 },
+        "model3" => DatasetSpec { train: 546, test: 156, epochs: 100 },
+        "tiny" => DatasetSpec { train: 256, test: 64, epochs: 3 },
+        "small" => DatasetSpec { train: 512, test: 128, epochs: 3 },
+        "edge" => DatasetSpec { train: 512, test: 128, epochs: 5 },
+        _ => DatasetSpec { train: 512, test: 128, epochs: 3 },
+    }
+}
+
+/// Look up a config by name with a helpful error.
+pub fn by_name(name: &str) -> Result<ModelConfig> {
+    registry().remove(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown config {name:?}; available: {}",
+            registry().keys().cloned().collect::<Vec<_>>().join(", ")
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_paper_table1() {
+        let r = registry();
+        let m1 = &r["model1"];
+        assert_eq!((m1.img_side, m1.hc_h, m1.mc_h, m1.n_classes, m1.nact_hi),
+                   (28, 32, 128, 10, 128));
+        let m2 = &r["model2"];
+        assert_eq!((m2.img_side, m2.hc_h, m2.mc_h, m2.n_classes, m2.nact_hi),
+                   (28, 32, 256, 2, 128));
+        let m3 = &r["model3"];
+        assert_eq!((m3.img_side, m3.hc_h, m3.mc_h, m3.n_classes, m3.nact_hi),
+                   (64, 32, 128, 2, 128));
+        assert_eq!(dataset_spec("model1"),
+                   DatasetSpec { train: 60000, test: 10000, epochs: 5 });
+        assert_eq!(dataset_spec("model2"),
+                   DatasetSpec { train: 4708, test: 624, epochs: 20 });
+        assert_eq!(dataset_spec("model3"),
+                   DatasetSpec { train: 546, test: 156, epochs: 100 });
+    }
+
+    #[test]
+    fn derived_dims() {
+        let c = by_name("tiny").unwrap();
+        assert_eq!(c.hc_in(), 64);
+        assert_eq!(c.n_in(), 128);
+        assert_eq!(c.n_h(), 64);
+        assert_eq!(c.n_out(), 4);
+    }
+
+    #[test]
+    fn all_configs_validate() {
+        for (_, c) in registry() {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for (_, c) in registry() {
+            let j = c.to_json().to_string();
+            let back = ModelConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+            assert_eq!(back, c);
+        }
+    }
+
+    #[test]
+    fn json_defaults_optional_fields() {
+        let j = Json::parse(
+            r#"{"name":"x","img_side":8,"hc_h":2,"mc_h":4,"n_classes":2,
+                "nact_hi":16,"alpha":0.01,"batch":8}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c.mc_in, 2);
+        assert_eq!(c.gain, 1.0);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = by_name("tiny").unwrap();
+        c.nact_hi = 1000; // > hc_in
+        assert!(c.validate().is_err());
+        let mut c = by_name("tiny").unwrap();
+        c.alpha = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = by_name("tiny").unwrap();
+        c.n_classes = 1;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_name_lists_available() {
+        let err = by_name("nope").unwrap_err().to_string();
+        assert!(err.contains("model1"), "{err}");
+    }
+
+    #[test]
+    fn param_bytes_scales() {
+        let tiny = by_name("tiny").unwrap().param_bytes();
+        let m1 = by_name("model1").unwrap().param_bytes();
+        assert!(m1 > 100 * tiny);
+        // model1: pij+wij = 2*1568*4096 floats dominate ~51 MB.
+        assert!(m1 > 50_000_000 && m1 < 60_000_000, "{m1}");
+    }
+}

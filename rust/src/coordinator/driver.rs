@@ -1,0 +1,362 @@
+//! Training/evaluation driver: the host loop of the accelerator.
+//!
+//! Mirrors the paper's execution model: the device (PJRT executable =
+//! our FPGA stand-in) runs the streamed per-image kernels in batched
+//! invocations; the host keeps the parameter state, dispatches batches,
+//! and — when structural plasticity is enabled — runs the MI-based
+//! rewiring on the host between batches ("the structural plasticity
+//! ... happens in the host", §6.2), then ships the new mask down with
+//! the next invocation.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::bcpnn::network::argmax;
+use crate::bcpnn::structural::StructuralPlasticity;
+use crate::bcpnn::Params;
+use crate::config::ModelConfig;
+use crate::data::Dataset;
+use crate::runtime::session::{Session, Tensor};
+
+use super::metrics::{LatencyStats, Recorder};
+
+/// Training options.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub epochs: usize,
+    /// Enable host-side structural plasticity.
+    pub structural: bool,
+    /// Rewire every N unsupervised batches.
+    pub struct_interval: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { epochs: 1, structural: false, struct_interval: 4, seed: 42 }
+    }
+}
+
+/// Outcome of a full train+evaluate run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub train_acc: f64,
+    pub test_acc: f64,
+    /// Per-image latency of the unsupervised phase (batched dispatch
+    /// amortized over the batch).
+    pub unsup: LatencyStats,
+    pub sup: LatencyStats,
+    pub infer: LatencyStats,
+    pub total_s: f64,
+    pub rewire_passes: usize,
+    pub rewire_swaps: usize,
+    /// Host time spent in structural plasticity (seconds).
+    pub struct_host_s: f64,
+}
+
+/// The coordinator driver for one model config.
+pub struct Driver {
+    pub cfg: ModelConfig,
+    pub params: Params,
+    session: Session,
+    structural: StructuralPlasticity,
+    /// Bumped whenever `params` changes; invalidates device caches.
+    version: u64,
+    /// Device-resident copies of the static inference inputs
+    /// (wij, bj, who, bk, mask), keyed by `version` — the L3 hot-path
+    /// optimization: inference/supervised batches re-upload only what
+    /// changed (the images) instead of the full parameter set.
+    infer_cache: std::cell::RefCell<Option<(u64, Vec<xla::PjRtBuffer>)>>,
+    sup_cache: std::cell::RefCell<Option<(u64, Vec<xla::PjRtBuffer>)>>,
+}
+
+impl Driver {
+    /// Bind a loaded session to freshly initialized parameters.
+    pub fn new(session: Session, config_name: &str, seed: u64) -> Result<Driver> {
+        let cfg = session.manifest.get(config_name, "infer")?.config.clone();
+        let params = Params::init(&cfg, seed);
+        Ok(Driver {
+            cfg,
+            params,
+            session,
+            structural: StructuralPlasticity::default(),
+            version: 0,
+            infer_cache: std::cell::RefCell::new(None),
+            sup_cache: std::cell::RefCell::new(None),
+        })
+    }
+
+    /// Replace the parameter state (e.g. inject a trained network into
+    /// an infer-only server). Invalidates device caches.
+    pub fn set_params(&mut self, params: Params) {
+        self.params = params;
+        self.mark_params_dirty();
+    }
+
+    /// Call after mutating `params` directly.
+    pub fn mark_params_dirty(&mut self) {
+        self.version += 1;
+    }
+
+    // ------------------------------------------------------ marshalling
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::F32(v.to_vec())
+    }
+
+    /// Pack a batch of images (pad by repeating the last image; returns
+    /// the number of real images).
+    fn pack_imgs(&self, images: &[Vec<f32>]) -> (Tensor, usize) {
+        let b = self.cfg.batch;
+        let hc = self.cfg.hc_in();
+        let n_real = images.len().min(b);
+        let mut flat = Vec::with_capacity(b * hc);
+        for i in 0..b {
+            let img = images[i.min(n_real - 1)].as_slice();
+            debug_assert_eq!(img.len(), hc);
+            flat.extend_from_slice(img);
+        }
+        (Tensor::F32(flat), n_real)
+    }
+
+    // ------------------------------------------------------- phases
+
+    /// One unsupervised batch: executes the train_unsup artifact and
+    /// folds the updated traces/weights back into host params.
+    pub fn unsup_batch(&mut self, images: &[Vec<f32>]) -> Result<()> {
+        if images.len() != self.cfg.batch {
+            bail!("unsup_batch needs exactly batch={} images", self.cfg.batch);
+        }
+        let art = self.session.artifact(&self.cfg.name, "train_unsup")?;
+        let (imgs, _) = self.pack_imgs(images);
+        let out = art.execute(&[
+            Self::t(&self.params.pi),
+            Self::t(&self.params.pj),
+            Self::t(&self.params.pij),
+            Self::t(&self.params.mask_hc),
+            imgs,
+        ])?;
+        self.params.pi = out[0].as_f32()?.to_vec();
+        self.params.pj = out[1].as_f32()?.to_vec();
+        self.params.pij = out[2].as_f32()?.to_vec();
+        self.params.wij = out[3].as_f32()?.to_vec();
+        self.params.bj = out[4].as_f32()?.to_vec();
+        self.version += 1; // weights changed: device caches stale
+        Ok(())
+    }
+
+    /// One supervised batch (hidden->output projection). The frozen
+    /// input->hidden weights + mask (the large arrays) are uploaded to
+    /// the device once per parameter version and reused.
+    pub fn sup_batch(&mut self, images: &[Vec<f32>], labels: &[u32]) -> Result<()> {
+        if images.len() != self.cfg.batch {
+            bail!("sup_batch needs exactly batch={} images", self.cfg.batch);
+        }
+        let art = self.session.artifact(&self.cfg.name, "train_sup")?;
+        {
+            let mut cache = self.sup_cache.borrow_mut();
+            if cache.as_ref().map(|(v, _)| *v) != Some(self.version) {
+                // Slots 0..=2: wij, bj, mask_hc (static during sup).
+                *cache = Some((
+                    self.version,
+                    vec![
+                        art.upload(0, &Self::t(&self.params.wij))?,
+                        art.upload(1, &Self::t(&self.params.bj))?,
+                        art.upload(2, &Self::t(&self.params.mask_hc))?,
+                    ],
+                ));
+            }
+        }
+        let (imgs, _) = self.pack_imgs(images);
+        let lab = Tensor::I32(labels.iter().map(|&l| l as i32).collect());
+        let cache = self.sup_cache.borrow();
+        let statics = &cache.as_ref().unwrap().1;
+        let dynamic = [
+            art.upload(3, &Self::t(&self.params.qi))?,
+            art.upload(4, &Self::t(&self.params.qk))?,
+            art.upload(5, &Self::t(&self.params.qik))?,
+            art.upload(6, &Self::t(&self.params.who))?,
+            art.upload(7, &Self::t(&self.params.bk))?,
+            art.upload(8, &imgs)?,
+            art.upload(9, &lab)?,
+        ];
+        let bufs: Vec<&xla::PjRtBuffer> =
+            statics.iter().chain(dynamic.iter()).collect();
+        let out = art.execute_buffers(&bufs)?;
+        drop(cache);
+        self.params.qi = out[0].as_f32()?.to_vec();
+        self.params.qk = out[1].as_f32()?.to_vec();
+        self.params.qik = out[2].as_f32()?.to_vec();
+        self.params.who = out[3].as_f32()?.to_vec();
+        self.params.bk = out[4].as_f32()?.to_vec();
+        // Output-projection params changed: the infer cache (who, bk)
+        // is stale; the sup cache statics (wij, bj, mask) are not.
+        let v = self.version + 1;
+        self.version = v;
+        if let Some((cv, _)) = self.sup_cache.borrow_mut().as_mut() {
+            *cv = v; // keep statics valid across the sup phase
+        }
+        Ok(())
+    }
+
+    /// Class probabilities for up to `batch` images (padded dispatch).
+    /// All parameters ride in a per-version device cache; only the
+    /// image batch is uploaded per call — the serving hot path.
+    pub fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let art = self.session.artifact(&self.cfg.name, "infer")?;
+        {
+            let mut cache = self.infer_cache.borrow_mut();
+            if cache.as_ref().map(|(v, _)| *v) != Some(self.version) {
+                *cache = Some((
+                    self.version,
+                    vec![
+                        art.upload(0, &Self::t(&self.params.wij))?,
+                        art.upload(1, &Self::t(&self.params.bj))?,
+                        art.upload(2, &Self::t(&self.params.who))?,
+                        art.upload(3, &Self::t(&self.params.bk))?,
+                        art.upload(4, &Self::t(&self.params.mask_hc))?,
+                    ],
+                ));
+            }
+        }
+        let (imgs, n_real) = self.pack_imgs(images);
+        let imgs_buf = art.upload(5, &imgs)?;
+        let cache = self.infer_cache.borrow();
+        let statics = &cache.as_ref().unwrap().1;
+        let bufs: Vec<&xla::PjRtBuffer> =
+            statics.iter().chain(std::iter::once(&imgs_buf)).collect();
+        let out = art.execute_buffers(&bufs)?;
+        let probs = out[0].as_f32()?;
+        let n_out = self.cfg.n_out();
+        Ok(probs
+            .chunks(n_out)
+            .take(n_real)
+            .map(|c| c.to_vec())
+            .collect())
+    }
+
+    /// Accuracy over a dataset (batched inference).
+    pub fn evaluate(&self, data: &Dataset) -> Result<f64> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (imgs, labels) in batches(data, self.cfg.batch) {
+            let probs = self.infer_batch(&imgs)?;
+            for (p, &l) in probs.iter().zip(labels.iter()) {
+                if argmax(p) as u32 == l {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Full pipeline: unsupervised epochs (+ optional host structural
+    /// plasticity) -> one supervised pass -> evaluate train and test.
+    pub fn train(
+        &mut self,
+        train: &Dataset,
+        test: &Dataset,
+        opts: &TrainOptions,
+    ) -> Result<TrainOutcome> {
+        let t_total = Instant::now();
+        let b = self.cfg.batch;
+        let mut unsup_rec = Recorder::new();
+        let mut sup_rec = Recorder::new();
+        let mut infer_rec = Recorder::new();
+        let mut rewire_passes = 0usize;
+        let mut rewire_swaps = 0usize;
+        let mut struct_host_s = 0.0f64;
+
+        for _epoch in 0..opts.epochs {
+            for (bi, (imgs, _)) in batches(train, b).enumerate() {
+                if imgs.len() < b {
+                    continue; // remainder dropped (streaming semantics)
+                }
+                let t0 = Instant::now();
+                self.unsup_batch(&imgs)?;
+                let per_img = t0.elapsed() / b as u32;
+                for _ in 0..b {
+                    unsup_rec.record(per_img);
+                }
+                if opts.structural && (bi + 1) % opts.struct_interval == 0 {
+                    let t1 = Instant::now();
+                    let stats = self.structural.rewire(&mut self.params, &self.cfg);
+                    self.version += 1; // mask changed on the host
+                    struct_host_s += t1.elapsed().as_secs_f64();
+                    rewire_passes += 1;
+                    rewire_swaps += stats.swaps;
+                }
+            }
+        }
+
+        for (imgs, labels) in batches(train, b) {
+            if imgs.len() < b {
+                continue;
+            }
+            let t0 = Instant::now();
+            self.sup_batch(&imgs, &labels)?;
+            let per_img = t0.elapsed() / b as u32;
+            for _ in 0..b {
+                sup_rec.record(per_img);
+            }
+        }
+
+        let t0 = Instant::now();
+        let train_acc = self.evaluate(train)?;
+        let test_acc = self.evaluate(test)?;
+        let n_eval = (train.len() + test.len()) as u32;
+        let per_img = t0.elapsed() / n_eval.max(1);
+        for _ in 0..n_eval {
+            infer_rec.record(per_img);
+        }
+
+        Ok(TrainOutcome {
+            train_acc,
+            test_acc,
+            unsup: unsup_rec.stats(),
+            sup: sup_rec.stats(),
+            infer: infer_rec.stats(),
+            total_s: t_total.elapsed().as_secs_f64(),
+            rewire_passes,
+            rewire_swaps,
+            struct_host_s,
+        })
+    }
+
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+}
+
+/// Iterate a dataset in batches of `b` (last batch may be short).
+pub fn batches(
+    data: &Dataset,
+    b: usize,
+) -> impl Iterator<Item = (Vec<Vec<f32>>, Vec<u32>)> + '_ {
+    (0..data.len().div_ceil(b)).map(move |i| {
+        let lo = i * b;
+        let hi = (lo + b).min(data.len());
+        (data.images[lo..hi].to_vec(), data.labels[lo..hi].to_vec())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn batches_cover_all() {
+        let d = synth::generate(4, 2, 10, 1, 0.1);
+        let bs: Vec<_> = batches(&d, 4).collect();
+        assert_eq!(bs.len(), 3);
+        assert_eq!(bs[0].0.len(), 4);
+        assert_eq!(bs[2].0.len(), 2);
+        let total: usize = bs.iter().map(|(i, _)| i.len()).sum();
+        assert_eq!(total, 10);
+    }
+    // PJRT-backed driver tests live in rust/tests/integration.rs
+    // (they need built artifacts).
+}

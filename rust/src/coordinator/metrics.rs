@@ -1,0 +1,133 @@
+//! Latency / throughput / energy accounting for the coordinator.
+
+use std::time::Duration;
+
+/// Streaming latency recorder (stores all samples; percentile queries).
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    samples_us: Vec<f64>,
+}
+
+/// Summary statistics over recorded latencies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_us.push(ms * 1e3);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    pub fn stats(&self) -> LatencyStats {
+        if self.samples_us.is_empty() {
+            return LatencyStats {
+                count: 0, mean_ms: 0.0, p50_ms: 0.0, p99_ms: 0.0,
+                min_ms: 0.0, max_ms: 0.0,
+            };
+        }
+        let mut sorted = self.samples_us.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+            sorted[idx] / 1e3
+        };
+        LatencyStats {
+            count: sorted.len(),
+            mean_ms: sorted.iter().sum::<f64>() / sorted.len() as f64 / 1e3,
+            p50_ms: pct(0.50),
+            p99_ms: pct(0.99),
+            min_ms: sorted[0] / 1e3,
+            max_ms: sorted[sorted.len() - 1] / 1e3,
+        }
+    }
+}
+
+/// Energy accounting: wall time x modeled board power.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyReport {
+    pub power_w: f64,
+    pub wall_s: f64,
+}
+
+impl EnergyReport {
+    pub fn energy_j(&self) -> f64 {
+        self.power_w * self.wall_s
+    }
+
+    pub fn energy_per_item_mj(&self, items: u64) -> f64 {
+        self.energy_j() * 1e3 / items.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let mut r = Recorder::new();
+        for ms in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            r.record_ms(ms);
+        }
+        let s = r.stats();
+        assert_eq!(s.count, 5);
+        assert!((s.mean_ms - 22.0).abs() < 1e-9);
+        assert_eq!(s.p50_ms, 3.0);
+        assert_eq!(s.max_ms, 100.0);
+        assert_eq!(s.min_ms, 1.0);
+    }
+
+    #[test]
+    fn p99_near_max() {
+        let mut r = Recorder::new();
+        for i in 0..1000 {
+            r.record_ms(i as f64 / 100.0);
+        }
+        let s = r.stats();
+        assert!(s.p99_ms >= 9.8 && s.p99_ms <= s.max_ms);
+    }
+
+    #[test]
+    fn empty_recorder_zeroes() {
+        let s = Recorder::new().stats();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean_ms, 0.0);
+    }
+
+    #[test]
+    fn record_duration() {
+        let mut r = Recorder::new();
+        r.record(Duration::from_millis(5));
+        assert!((r.stats().mean_ms - 5.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn energy_accounting() {
+        let e = EnergyReport { power_w: 27.0, wall_s: 2.0 };
+        assert!((e.energy_j() - 54.0).abs() < 1e-12);
+        assert!((e.energy_per_item_mj(1000) - 54.0).abs() < 1e-9);
+        assert_eq!(EnergyReport { power_w: 1.0, wall_s: 1.0 }.energy_per_item_mj(0), 1000.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! The L3 coordinator: drives training/inference through the PJRT
+//! artifacts, runs host-side structural plasticity between batches
+//! (exactly where the paper runs it), and serves streaming inference
+//! requests through the dataflow pipeline.
+
+pub mod driver;
+pub mod metrics;
+pub mod server;
+
+pub use driver::{Driver, TrainOutcome, TrainOptions};
+pub use metrics::{EnergyReport, LatencyStats, Recorder};
+pub use server::{InferenceServer, ServerConfig, ServerReport};

@@ -1,0 +1,170 @@
+//! Streaming inference server — the edge-deployment path the paper
+//! motivates (inference-only build, "energy-sensitive edge
+//! deployments").
+//!
+//! Requests enter a bounded FIFO (backpressure, like the accelerator's
+//! input stream); a dynamic batcher packs up to `batch` images per
+//! PJRT invocation or flushes on timeout (classic serving trade-off:
+//! fill for throughput, flush for tail latency). The executor thread
+//! owns the compiled artifact — python is long gone; this is the
+//! self-contained request path.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::stream::fifo::Fifo;
+
+use super::driver::Driver;
+use super::metrics::{LatencyStats, Recorder};
+
+/// One in-flight request.
+struct Request {
+    img: Vec<f32>,
+    enqueued: Instant,
+    resp: mpsc::Sender<Vec<f32>>,
+}
+
+/// Server tuning.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Request queue depth (backpressure bound).
+    pub queue_depth: usize,
+    /// Max time the batcher waits to fill a batch before flushing.
+    pub flush_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            queue_depth: 128,
+            flush_timeout: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Post-shutdown statistics.
+#[derive(Debug, Clone)]
+pub struct ServerReport {
+    pub served: u64,
+    pub batches: u64,
+    /// Mean images per dispatched batch (batching efficiency).
+    pub mean_fill: f64,
+    /// End-to-end request latency (enqueue -> response ready).
+    pub latency: LatencyStats,
+}
+
+/// Handle to a running server.
+pub struct InferenceServer {
+    queue: Fifo<Request>,
+    worker: thread::JoinHandle<ServerReport>,
+}
+
+impl InferenceServer {
+    /// Start the server. PJRT handles are not `Send`, so the driver is
+    /// constructed *inside* the worker thread from the given factory
+    /// (e.g. a closure that loads the session); `start` blocks until
+    /// the factory has run and reports its result.
+    pub fn start<F>(make_driver: F, cfg: ServerConfig) -> Result<InferenceServer>
+    where
+        F: FnOnce() -> Result<Driver> + Send + 'static,
+    {
+        let queue: Fifo<Request> = Fifo::with_capacity(cfg.queue_depth);
+        let rx = queue.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let worker = thread::spawn(move || {
+            let driver = match make_driver() {
+                Ok(d) => {
+                    let _ = ready_tx.send(Ok(()));
+                    d
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return ServerReport {
+                        served: 0,
+                        batches: 0,
+                        mean_fill: 0.0,
+                        latency: Recorder::new().stats(),
+                    };
+                }
+            };
+            let max_batch = driver.cfg.batch;
+            let mut rec = Recorder::new();
+            let mut served = 0u64;
+            let mut batches = 0u64;
+            let mut fills = 0u64;
+            // Batch loop: block for the first request, then fill
+            // greedily until full or flush timeout.
+            while let Ok(first) = rx.recv() {
+                let deadline = Instant::now() + cfg.flush_timeout;
+                let mut reqs = vec![first];
+                while reqs.len() < max_batch {
+                    match rx.try_recv() {
+                        Some(r) => reqs.push(r),
+                        None => {
+                            if Instant::now() >= deadline || rx.is_closed() {
+                                break;
+                            }
+                            thread::sleep(Duration::from_micros(50));
+                        }
+                    }
+                }
+                let imgs: Vec<Vec<f32>> = reqs.iter().map(|r| r.img.clone()).collect();
+                match driver.infer_batch(&imgs) {
+                    Ok(probs) => {
+                        for (req, p) in reqs.into_iter().zip(probs) {
+                            rec.record(req.enqueued.elapsed());
+                            let _ = req.resp.send(p);
+                            served += 1;
+                        }
+                    }
+                    Err(_) => {
+                        // Drop responses; clients see a closed channel.
+                    }
+                }
+                batches += 1;
+                fills += imgs.len() as u64;
+            }
+            ServerReport {
+                served,
+                batches,
+                mean_fill: fills as f64 / batches.max(1) as f64,
+                latency: rec.stats(),
+            }
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(InferenceServer { queue, worker }),
+            Ok(Err(msg)) => {
+                let _ = worker.join();
+                Err(anyhow::anyhow!("server startup failed: {msg}"))
+            }
+            Err(_) => {
+                let _ = worker.join();
+                Err(anyhow::anyhow!("server thread died during startup"))
+            }
+        }
+    }
+
+    /// Submit one image; returns a handle to await the probabilities.
+    pub fn submit(&self, img: Vec<f32>) -> Result<mpsc::Receiver<Vec<f32>>> {
+        let (tx, rx) = mpsc::channel();
+        let req = Request { img, enqueued: Instant::now(), resp: tx };
+        self.queue
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("server shut down"))?;
+        Ok(rx)
+    }
+
+    /// Stop accepting requests, drain, and return statistics.
+    pub fn shutdown(self) -> ServerReport {
+        self.queue.close();
+        self.worker.join().expect("server thread panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed server tests live in rust/tests/integration.rs.
+}

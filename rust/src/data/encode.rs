@@ -1,0 +1,55 @@
+//! Input encoders: pixel intensities -> hypercolumn activity.
+//!
+//! The AOT artifacts encode images on-device (L2 `encode_image`), so the
+//! coordinator ships raw images; these host-side encoders exist for the
+//! pure-rust baseline network (`bcpnn::network`) and for tests.
+
+/// Intensity coding: pixel v in [0,1] -> input HC pair [v, 1-v].
+/// Output length = 2 * img.len(); each HC's minicolumn pair sums to 1.
+pub fn encode_image(img: &[f32]) -> Vec<f32> {
+    let mut x = Vec::with_capacity(img.len() * 2);
+    for &p in img {
+        let v = p.clamp(0.0, 1.0);
+        x.push(v);
+        x.push(1.0 - v);
+    }
+    x
+}
+
+/// One-hot label vector of length `n`.
+pub fn one_hot(label: usize, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0; n];
+    if label < n {
+        v[label] = 1.0;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_pairs_sum_to_one() {
+        let x = encode_image(&[0.0, 0.25, 1.0]);
+        assert_eq!(x.len(), 6);
+        for hc in x.chunks(2) {
+            assert!((hc[0] + hc[1] - 1.0).abs() < 1e-6);
+        }
+        assert_eq!(x[0], 0.0);
+        assert_eq!(x[2], 0.25);
+        assert_eq!(x[4], 1.0);
+    }
+
+    #[test]
+    fn encode_clips() {
+        let x = encode_image(&[-1.0, 2.0]);
+        assert_eq!(x, vec![0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn one_hot_basics() {
+        assert_eq!(one_hot(1, 3), vec![0.0, 1.0, 0.0]);
+        assert_eq!(one_hot(5, 3), vec![0.0, 0.0, 0.0]); // out of range: zeros
+    }
+}

@@ -1,0 +1,10 @@
+//! Synthetic datasets + encoders (the paper's MNIST/Pneumonia/Breast
+//! substitutes — see DESIGN.md §2) and the shared PRNG.
+
+pub mod encode;
+pub mod rng;
+pub mod synth;
+
+pub use encode::{encode_image, one_hot};
+pub use rng::XorShift64;
+pub use synth::{class_prototypes, generate, Dataset};

@@ -1,0 +1,123 @@
+//! xorshift64* PRNG — bit-identical to `python/compile/datasets.py`.
+//!
+//! One tiny deterministic generator shared by the dataset generator,
+//! parameter init, the structural-plasticity host step, and the
+//! property-test helpers, so python tests and rust runs see identical
+//! streams for identical seeds (golden vectors pinned on both sides).
+
+/// xorshift64* (Vigna 2016). Not cryptographic; deterministic and fast.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Zero seeds are remapped (xorshift has a zero fixed point).
+    pub fn new(seed: u64) -> Self {
+        Self { state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed } }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform f32 in [0, 1) with 24 bits of mantissa (matches python:
+    /// `(next_u64() >> 40) / 2^24`).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u32 << 24) as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn next_range(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// First `k` elements of a random permutation of 0..n.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_vector_matches_python() {
+        // Pinned in python/tests/test_datasets.py::test_xorshift_golden_vector
+        let mut r = XorShift64::new(42);
+        let got: Vec<u64> = (0..4).map(|_| r.next_u64()).collect();
+        assert_eq!(
+            got,
+            vec![
+                6255019084209693600,
+                14430073426741505498,
+                14575455857230217846,
+                17414512882241728735
+            ]
+        );
+    }
+
+    #[test]
+    fn zero_seed_remapped() {
+        let mut r = XorShift64::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn f32_in_unit_interval_and_uniformish() {
+        let mut r = XorShift64::new(7);
+        let vals: Vec<f32> = (0..1000).map(|_| r.next_f32()).collect();
+        assert!(vals.iter().all(|v| (0.0..1.0).contains(v)));
+        let mean: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+        assert!((0.4..0.6).contains(&mean), "{mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = XorShift64::new(3);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_unique_in_range() {
+        let mut r = XorShift64::new(5);
+        let s = r.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut u = s.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn deterministic_across_clones() {
+        let mut a = XorShift64::new(9);
+        let mut b = a.clone();
+        for _ in 0..10 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+}

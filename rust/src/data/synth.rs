@@ -1,0 +1,181 @@
+//! Class-conditional synthetic image generator — the offline stand-in
+//! for MNIST / PneumoniaMNIST / BreastMNIST (DESIGN.md §2).
+//!
+//! Bit-identical to `python/compile/datasets.py::generate`: per-class
+//! gaussian-blob prototypes, intensity jitter, uniform pixel noise,
+//! balanced random labels — all drawn from the shared xorshift PRNG, so
+//! the same (side, n_classes, n, seed) produces the same dataset in both
+//! languages.
+
+use super::rng::XorShift64;
+
+/// A labelled image set (images row-major, values in [0,1]).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub side: usize,
+    pub n_classes: usize,
+    /// (n, side*side) row-major.
+    pub images: Vec<Vec<f32>>,
+    pub labels: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Split into (train, test) views by index.
+    pub fn split(&self, n_train: usize) -> (Dataset, Dataset) {
+        let tr = Dataset {
+            side: self.side,
+            n_classes: self.n_classes,
+            images: self.images[..n_train].to_vec(),
+            labels: self.labels[..n_train].to_vec(),
+        };
+        let te = Dataset {
+            side: self.side,
+            n_classes: self.n_classes,
+            images: self.images[n_train..].to_vec(),
+            labels: self.labels[n_train..].to_vec(),
+        };
+        (tr, te)
+    }
+}
+
+/// Per-class prototype images: 3 gaussian blobs per class.
+/// Returns (n_classes, side*side), values clipped to [0,1].
+pub fn class_prototypes(side: usize, n_classes: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = XorShift64::new(seed);
+    let n_blobs = 3;
+    let mut protos = vec![vec![0.0f32; side * side]; n_classes];
+    for proto in protos.iter_mut() {
+        for _ in 0..n_blobs {
+            let cx = rng.next_f32() * side as f32;
+            let cy = rng.next_f32() * side as f32;
+            let sigma = 1.0 + rng.next_f32() * (side as f32 / 6.0);
+            let amp = 0.5 + rng.next_f32() * 0.5;
+            let inv = 1.0 / (2.0 * sigma * sigma);
+            for y in 0..side {
+                for x in 0..side {
+                    let dx = x as f32 - cx;
+                    let dy = y as f32 - cy;
+                    proto[y * side + x] += amp * (-(dx * dx + dy * dy) * inv).exp();
+                }
+            }
+        }
+        for v in proto.iter_mut() {
+            *v = v.clamp(0.0, 1.0);
+        }
+    }
+    protos
+}
+
+/// Generate `n` labelled images (python `datasets.generate` mirror).
+pub fn generate(side: usize, n_classes: usize, n: usize, seed: u64,
+                noise: f32) -> Dataset {
+    let protos = class_prototypes(side, n_classes, seed);
+    let mut rng = XorShift64::new(seed ^ 0xDEAD_BEEF);
+    let mut images = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.next_range(n_classes);
+        labels.push(c as u32);
+        let jitter = 0.7 + 0.3 * rng.next_f32();
+        let mut img: Vec<f32> = protos[c].iter().map(|p| p * jitter).collect();
+        for v in img.iter_mut() {
+            *v = (*v + noise * (rng.next_f32() - 0.5)).clamp(0.0, 1.0);
+        }
+        images.push(img);
+    }
+    Dataset { side, n_classes, images, labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(8, 4, 32, 3, 0.15);
+        let b = generate(8, 4, 32, 3, 0.15);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn shapes_and_bounds() {
+        let d = generate(8, 4, 100, 1, 0.15);
+        assert_eq!(d.len(), 100);
+        assert!(d.images.iter().all(|img| img.len() == 64));
+        assert!(d
+            .images
+            .iter()
+            .flatten()
+            .all(|v| (0.0..=1.0).contains(v)));
+        assert!(d.labels.iter().all(|&l| l < 4));
+    }
+
+    #[test]
+    fn prototypes_distinct_across_classes() {
+        let p = class_prototypes(8, 4, 2);
+        for a in 0..4 {
+            for b in (a + 1)..4 {
+                let diff: f32 = p[a]
+                    .iter()
+                    .zip(&p[b])
+                    .map(|(x, y)| (x - y).abs())
+                    .sum();
+                assert!(diff > 1.0, "classes {a},{b} too similar: {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn classes_nearest_prototype_separable() {
+        // Mirror of python test: generated data must carry the class
+        // structure BCPNN is expected to find.
+        let side = 8;
+        let ncls = 4;
+        let d = generate(side, ncls, 200, 4, 0.1);
+        let protos = class_prototypes(side, ncls, 4);
+        let mut correct = 0;
+        for (img, &label) in d.images.iter().zip(&d.labels) {
+            let pred = (0..ncls)
+                .min_by(|&a, &b| {
+                    let da: f32 =
+                        img.iter().zip(&protos[a]).map(|(x, p)| (x - p) * (x - p)).sum();
+                    let db: f32 =
+                        img.iter().zip(&protos[b]).map(|(x, p)| (x - p) * (x - p)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if pred as u32 == label {
+                correct += 1;
+            }
+        }
+        assert!(correct > 180, "nearest-prototype acc {correct}/200");
+    }
+
+    #[test]
+    fn split_preserves_data() {
+        let d = generate(4, 2, 10, 5, 0.1);
+        let (tr, te) = d.split(7);
+        assert_eq!(tr.len(), 7);
+        assert_eq!(te.len(), 3);
+        assert_eq!(tr.images[0], d.images[0]);
+        assert_eq!(te.images[0], d.images[7]);
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let d = generate(8, 4, 400, 3, 0.15);
+        let mut counts = [0usize; 4];
+        for &l in &d.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 50), "{counts:?}");
+    }
+}

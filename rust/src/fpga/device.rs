@@ -1,0 +1,113 @@
+//! The FPGA device envelope (AMD Xilinx Alveo U55C by default).
+//!
+//! Resource totals follow the paper (§4.2: 1,146,240 LUTs, 8,376 DSPs)
+//! and the implied BRAM/FF totals of Table 3's utilization percentages.
+
+/// Which kernel build is on the device (paper Table 3 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelVersion {
+    /// Inference-only: no plasticity engines, fewer HBM channels,
+    /// higher fmax — the edge deployment build.
+    Infer,
+    /// Full kernel: unsupervised + supervised training + inference.
+    Train,
+    /// Full kernel + structural-plasticity sparsity streams.
+    Struct,
+}
+
+impl KernelVersion {
+    pub fn all() -> [KernelVersion; 3] {
+        [KernelVersion::Infer, KernelVersion::Train, KernelVersion::Struct]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelVersion::Infer => "infer",
+            KernelVersion::Train => "train",
+            KernelVersion::Struct => "struct",
+        }
+    }
+}
+
+/// Device resource envelope + memory system parameters.
+#[derive(Debug, Clone)]
+pub struct FpgaDevice {
+    pub name: String,
+    pub luts: u64,
+    pub ffs: u64,
+    pub dsps: u64,
+    /// BRAM36 blocks (36 Kbit each).
+    pub brams: u64,
+    /// HBM pseudo-channels and their native width/frequency.
+    pub hbm_channels: u32,
+    pub hbm_width_bits: u32,
+    pub hbm_freq_hz: f64,
+    /// Utilization ceiling for the roofline peak (paper: ~80%).
+    pub util_ceiling: f64,
+    /// Fixed host->device invocation overhead (XRT dispatch), seconds.
+    pub host_invoke_s: f64,
+    /// Per-float DMA cost for kernel in/out arrays, seconds
+    /// (covers image upload and activity readback).
+    pub dma_per_float_s: f64,
+}
+
+impl FpgaDevice {
+    /// Alveo U55C, as parameterized by the paper.
+    pub fn u55c() -> FpgaDevice {
+        FpgaDevice {
+            name: "Alveo U55C".into(),
+            luts: 1_146_240,
+            ffs: 2_292_480,
+            dsps: 8_376,
+            brams: 1_792,
+            hbm_channels: 32,
+            hbm_width_bits: 256,
+            hbm_freq_hz: 450e6,
+            util_ceiling: 0.80,
+            // Calibrated against Table 2 (see DESIGN.md §Perf):
+            // overhead(model) = 62us + 24.7ns*n_h + 44.7ns*hc_in.
+            host_invoke_s: 62e-6,
+            dma_per_float_s: 24.7e-9 / 2.0, // per float of n_h-sized arrays
+        }
+    }
+
+    /// Peak HBM bandwidth in bytes/sec (Eq. 4).
+    pub fn hbm_bandwidth(&self) -> f64 {
+        self.hbm_freq_hz * (self.hbm_width_bits as f64 / 8.0)
+            * self.hbm_channels as f64
+    }
+
+    /// BRAM36 blocks needed to hold `bytes` (4.5 KB per block).
+    pub fn bram_blocks_for(bytes: u64) -> u64 {
+        bytes.div_ceil(36 * 1024 / 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u55c_matches_paper_constants() {
+        let d = FpgaDevice::u55c();
+        assert_eq!(d.luts, 1_146_240); // paper §4.2
+        assert_eq!(d.dsps, 8_376); // paper §4.2
+        // Eq. 4: 450 MHz * 32 B * 32 channels = 460.8 GB/s ("~460 GB/s").
+        let bw = d.hbm_bandwidth();
+        assert!((bw - 460.8e9).abs() < 1e6, "{bw}");
+    }
+
+    #[test]
+    fn bram_blocks_rounding() {
+        assert_eq!(FpgaDevice::bram_blocks_for(0), 0);
+        assert_eq!(FpgaDevice::bram_blocks_for(1), 1);
+        assert_eq!(FpgaDevice::bram_blocks_for(4608), 1);
+        assert_eq!(FpgaDevice::bram_blocks_for(4609), 2);
+    }
+
+    #[test]
+    fn version_names() {
+        assert_eq!(KernelVersion::Infer.name(), "infer");
+        assert_eq!(KernelVersion::all().len(), 3);
+    }
+}

@@ -1,0 +1,307 @@
+//! HLS-like resource estimator: BCPNN kernel structure -> FPGA
+//! utilization + achievable clock (regenerates paper Table 3).
+//!
+//! LUT/FF/DSP follow a *structural* model: the kernel instantiates
+//! fixed-width unrolled floating-point engines (the 64-lane input->
+//! hidden datapath of Fig. 4, 16-lane hidden->output and softmax
+//! engines) whose per-operator costs come from [`super::ops`], plus
+//! platform infrastructure (shell + HBM channel controllers + stream
+//! control). This reproduces the paper's near-constant LUT/DSP across
+//! models (e.g. train DSP = 3573 for all three models; this model
+//! yields 3572).
+//!
+//! BRAM is dominated by FIFO depths and buffer replication — design
+//! choices of the authors' HLS code that are not derivable from first
+//! principles — so it uses a linear surrogate calibrated to Table 3
+//! (coefficients below; negative intercept = one-time shared buffers).
+//! Achievable frequency follows the empirical law visible in Table 3:
+//! fmax falls linearly with BRAM utilization (routing congestion),
+//! floored at 60 MHz.
+
+use crate::config::ModelConfig;
+
+use super::device::{FpgaDevice, KernelVersion};
+use super::ops::{total_cost, FpOp};
+
+/// Unroll width of the input->hidden datapath (64 floats = the merged
+/// 4-channel HBM packet of Fig. 4).
+pub const UNROLL_IH: u64 = 64;
+/// Unroll width of the hidden->output datapath (one 512-bit burst).
+pub const UNROLL_HO: u64 = 16;
+/// Unroll width of the softmax engine.
+pub const UNROLL_SM: u64 = 16;
+
+/// Estimated utilization of one kernel build (a Table 3 row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Utilization {
+    pub luts: u64,
+    pub ffs: u64,
+    pub dsps: u64,
+    pub brams: f64,
+    pub freq_mhz: f64,
+    pub hbm_channels: u32,
+}
+
+impl Utilization {
+    pub fn lut_pct(&self, dev: &FpgaDevice) -> f64 {
+        100.0 * self.luts as f64 / dev.luts as f64
+    }
+    pub fn ff_pct(&self, dev: &FpgaDevice) -> f64 {
+        100.0 * self.ffs as f64 / dev.ffs as f64
+    }
+    pub fn dsp_pct(&self, dev: &FpgaDevice) -> f64 {
+        100.0 * self.dsps as f64 / dev.dsps as f64
+    }
+    pub fn bram_pct(&self, dev: &FpgaDevice) -> f64 {
+        100.0 * self.brams / dev.brams as f64
+    }
+}
+
+/// HBM pseudo-channels used by each build: 4 partitioned read channels
+/// for inference; training adds the write path and small-array
+/// channels (9 total); structural plasticity adds the sparsity-array
+/// channel the paper measures as +14.4 GB/s (= 1 channel).
+pub fn hbm_channels(version: KernelVersion) -> u32 {
+    match version {
+        KernelVersion::Infer => 4,
+        KernelVersion::Train => 9,
+        KernelVersion::Struct => 10,
+    }
+}
+
+/// Engine operator inventory for one build (counts of instantiated,
+/// fully-pipelined FP operators).
+fn engine_ops(version: KernelVersion) -> Vec<(FpOp, u64)> {
+    let mut ops: Vec<(FpOp, u64)> = Vec::new();
+    // Input->hidden support: UNROLL_IH parallel MACs.
+    ops.push((FpOp::Mul, UNROLL_IH));
+    ops.push((FpOp::Add, UNROLL_IH));
+    // Hidden->output support: UNROLL_HO MACs.
+    ops.push((FpOp::Mul, UNROLL_HO));
+    ops.push((FpOp::Add, UNROLL_HO));
+    // Hidden softmax: exp + accumulate + divide + running max.
+    ops.push((FpOp::Exp, UNROLL_SM));
+    ops.push((FpOp::Add, UNROLL_SM));
+    ops.push((FpOp::Div, UNROLL_SM));
+    ops.push((FpOp::Cmp, UNROLL_SM));
+    // Output softmax (narrow).
+    ops.push((FpOp::Exp, 4));
+    ops.push((FpOp::Add, 4));
+    ops.push((FpOp::Div, 4));
+    ops.push((FpOp::Cmp, 4));
+    if matches!(version, KernelVersion::Train | KernelVersion::Struct) {
+        // Fused plasticity lane: pij' = (1-a)pij + a x y  (4 mul, 3 add
+        // incl. eps adds) then w = log(pij'/(pi pj)) (1 div, 1 log).
+        let lane = [
+            (FpOp::Mul, 4u64),
+            (FpOp::Add, 3),
+            (FpOp::Div, 1),
+            (FpOp::Log, 1),
+        ];
+        for (op, n) in lane {
+            ops.push((op, n * UNROLL_IH)); // input->hidden plasticity
+            ops.push((op, n * UNROLL_HO)); // hidden->output plasticity
+        }
+        // Marginal trace EMA units (pi, pj, qi, qk): 8 narrow lanes.
+        ops.push((FpOp::Mul, 16));
+        ops.push((FpOp::Add, 8));
+    }
+    if matches!(version, KernelVersion::Struct) {
+        // Mutual-information sparsity stream: p log(p/(pi pj)) terms.
+        ops.push((FpOp::Mul, UNROLL_HO));
+        ops.push((FpOp::Add, UNROLL_HO));
+        ops.push((FpOp::Log, UNROLL_HO));
+    }
+    ops
+}
+
+/// Estimate the utilization of `version` built for `cfg` on `dev`.
+pub fn estimate(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> Utilization {
+    let channels = hbm_channels(version);
+    let eng = total_cost(&engine_ops(version));
+
+    // Infrastructure: static shell + per-HBM-channel controllers +
+    // stream/control logic proportional to engine size, plus small
+    // model-dependent control (index counters scale with hc_in, softmax
+    // addressing with mc_h). Constants calibrated to Table 3 (M1 rows
+    // land within ~1%; see module docs).
+    let (shell_lut, dsp_shell) = match version {
+        KernelVersion::Infer => (89_000u64, 0u64),
+        KernelVersion::Train | KernelVersion::Struct => (131_500, 800),
+    };
+    let luts = eng.luts
+        + shell_lut
+        + 6_000 * channels as u64
+        + (eng.luts as f64 * 0.08) as u64
+        + 3 * cfg.hc_in() as u64
+        + 40 * cfg.mc_h as u64;
+    let dsps = eng.dsps
+        + dsp_shell
+        + if matches!(version, KernelVersion::Infer) { 0 } else { 32 * channels as u64 };
+    let ffs = match version {
+        KernelVersion::Infer => (luts as f64 * 1.47) as u64,
+        _ => (luts as f64 * 1.20) as u64,
+    };
+
+    // BRAM surrogate (blocks), linear in n_h and n_in; calibrated to
+    // Table 3. The intercept is negative (one-time shared buffers);
+    // small configs clamp to the shell floor of 32 blocks.
+    let (base, a_nh, b_nin) = match version {
+        KernelVersion::Infer => (-304.9, 0.09131, 0.16477),
+        KernelVersion::Train => (-255.2, 0.10376, 0.17074),
+        KernelVersion::Struct => (-219.2, 0.10376, 0.17074), // train + 36
+    };
+    let brams = (base + a_nh * cfg.n_h() as f64 + b_nin * cfg.n_in() as f64)
+        .max(32.0)
+        .min(dev.brams as f64);
+
+    // Achievable clock: linear derating with BRAM routing pressure
+    // (empirical law of Table 3), floored at 60 MHz.
+    let bram_pct = 100.0 * brams / dev.brams as f64;
+    let (f0, k) = match version {
+        KernelVersion::Infer => (233.0, 1.857),
+        KernelVersion::Train => (186.0, 1.44),
+        KernelVersion::Struct => (184.0, 1.44),
+    };
+    let freq_mhz = (f0 - k * bram_pct).clamp(60.0, f0);
+
+    Utilization { luts, ffs, dsps, brams, freq_mhz, hbm_channels: channels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+
+    /// Paper Table 3, verbatim.
+    const TABLE3: &[(&str, &str, u64, u64, u64, f64, f64)] = &[
+        // (model, version, LUT, FF, DSP, BRAM, MHz)
+        ("model1", "infer", 174_400, 257_462, 550, 327.5, 200.0),
+        ("model1", "train", 454_024, 546_419, 3_573, 437.5, 150.0),
+        ("model1", "struct", 475_074, 574_657, 3_765, 473.5, 147.3),
+        ("model2", "infer", 177_201, 261_754, 644, 701.5, 160.0),
+        ("model2", "train", 459_419, 488_973, 3_573, 862.5, 110.0),
+        ("model2", "struct", 479_801, 513_057, 3_765, 898.5, 107.8),
+        ("model3", "infer", 180_365, 259_592, 640, 1_419.0, 84.4),
+        ("model3", "train", 463_580, 406_798, 3_573, 1_568.5, 60.0),
+        ("model3", "struct", 481_731, 430_927, 3_765, 1_604.5, 60.0),
+    ];
+
+    fn version_of(name: &str) -> KernelVersion {
+        match name {
+            "infer" => KernelVersion::Infer,
+            "train" => KernelVersion::Train,
+            _ => KernelVersion::Struct,
+        }
+    }
+
+    fn rel_err(got: f64, want: f64) -> f64 {
+        (got - want).abs() / want
+    }
+
+    #[test]
+    fn table3_luts_within_5pct() {
+        let dev = FpgaDevice::u55c();
+        for &(m, v, lut, _, _, _, _) in TABLE3 {
+            let u = estimate(&by_name(m).unwrap(), version_of(v), &dev);
+            let e = rel_err(u.luts as f64, lut as f64);
+            assert!(e < 0.05, "{m}/{v}: LUT {} vs paper {lut} ({:.1}%)",
+                    u.luts, e * 100.0);
+        }
+    }
+
+    #[test]
+    fn table3_dsps_within_15pct() {
+        let dev = FpgaDevice::u55c();
+        for &(m, v, _, _, dsp, _, _) in TABLE3 {
+            let u = estimate(&by_name(m).unwrap(), version_of(v), &dev);
+            let e = rel_err(u.dsps as f64, dsp as f64);
+            assert!(e < 0.15, "{m}/{v}: DSP {} vs paper {dsp} ({:.1}%)",
+                    u.dsps, e * 100.0);
+        }
+    }
+
+    #[test]
+    fn train_dsp_constant_across_models_like_paper() {
+        let dev = FpgaDevice::u55c();
+        let d: Vec<u64> = ["model1", "model2", "model3"]
+            .iter()
+            .map(|m| estimate(&by_name(m).unwrap(), KernelVersion::Train, &dev).dsps)
+            .collect();
+        assert_eq!(d[0], d[1]);
+        assert_eq!(d[1], d[2]);
+        // paper: 3573; structural model: 3572.
+        assert!((d[0] as i64 - 3573).abs() <= 16, "{}", d[0]);
+    }
+
+    #[test]
+    fn table3_bram_within_10pct() {
+        let dev = FpgaDevice::u55c();
+        for &(m, v, _, _, _, bram, _) in TABLE3 {
+            let u = estimate(&by_name(m).unwrap(), version_of(v), &dev);
+            let e = rel_err(u.brams, bram);
+            assert!(e < 0.10, "{m}/{v}: BRAM {:.1} vs paper {bram} ({:.1}%)",
+                    u.brams, e * 100.0);
+        }
+    }
+
+    #[test]
+    fn table3_freq_within_10pct() {
+        let dev = FpgaDevice::u55c();
+        for &(m, v, _, _, _, _, mhz) in TABLE3 {
+            let u = estimate(&by_name(m).unwrap(), version_of(v), &dev);
+            let e = rel_err(u.freq_mhz, mhz);
+            assert!(e < 0.10, "{m}/{v}: {:.1} MHz vs paper {mhz} ({:.1}%)",
+                    u.freq_mhz, e * 100.0);
+        }
+    }
+
+    #[test]
+    fn table3_ff_within_40pct() {
+        // FF varies with synthesis register packing the structural
+        // model cannot see; wide tolerance, trend only.
+        let dev = FpgaDevice::u55c();
+        for &(m, v, _, ff, _, _, _) in TABLE3 {
+            let u = estimate(&by_name(m).unwrap(), version_of(v), &dev);
+            let e = rel_err(u.ffs as f64, ff as f64);
+            assert!(e < 0.40, "{m}/{v}: FF {} vs paper {ff} ({:.1}%)",
+                    u.ffs, e * 100.0);
+        }
+    }
+
+    #[test]
+    fn infer_build_is_smaller_and_faster() {
+        // Paper: "the inference-only kernel consumes fewer resources and
+        // achieves higher operating frequencies".
+        let dev = FpgaDevice::u55c();
+        for m in ["model1", "model2", "model3", "tiny", "small", "edge"] {
+            let cfg = by_name(m).unwrap();
+            let i = estimate(&cfg, KernelVersion::Infer, &dev);
+            let t = estimate(&cfg, KernelVersion::Train, &dev);
+            let s = estimate(&cfg, KernelVersion::Struct, &dev);
+            assert!(i.luts < t.luts && t.luts < s.luts, "{m} LUT ordering");
+            assert!(i.dsps < t.dsps && t.dsps < s.dsps, "{m} DSP ordering");
+            assert!(i.freq_mhz >= t.freq_mhz && t.freq_mhz >= s.freq_mhz,
+                    "{m} fmax ordering");
+        }
+    }
+
+    #[test]
+    fn model3_hits_bram_pressure() {
+        // Paper: model 3 "can only be compiled with 60 MHz because the
+        // big input image ... results in high BRAM utilization".
+        let dev = FpgaDevice::u55c();
+        let u = estimate(&by_name("model3").unwrap(), KernelVersion::Train, &dev);
+        assert!(u.bram_pct(&dev) > 80.0);
+        assert_eq!(u.freq_mhz, 60.0);
+    }
+
+    #[test]
+    fn tiny_configs_fit_comfortably() {
+        let dev = FpgaDevice::u55c();
+        let u = estimate(&by_name("tiny").unwrap(), KernelVersion::Struct, &dev);
+        assert!(u.bram_pct(&dev) < 10.0);
+        assert!(u.lut_pct(&dev) < 50.0);
+        assert!(u.freq_mhz > 100.0);
+    }
+}

@@ -1,0 +1,123 @@
+//! HBM channel/bandwidth model — Fig. 4's partition + merge scheme.
+//!
+//! The U55C HBM stack exposes 32 pseudo-channels, 256-bit @ 450 MHz
+//! (14.4 GB/s each, 460.8 GB/s aggregate — Eq. 4). The kernel reads
+//! 512-bit bursts per channel (possible because the kernel clock is
+//! below half the HBM clock), i.e. 16 floats/cycle/channel, and merges
+//! `p` partitioned channels into a `16*p`-float stream packet (p=4 ->
+//! the 64-float packets processed by the unrolled datapath).
+
+use super::device::FpgaDevice;
+
+/// An HBM access configuration for one streamed array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HbmModel {
+    /// Channels the array is partitioned across.
+    pub partitions: u32,
+    /// Burst width per channel in bits (512 = the paper's doubled read).
+    pub burst_bits: u32,
+    /// Kernel clock in Hz (streams advance once per kernel cycle).
+    pub kernel_freq_hz: f64,
+}
+
+impl HbmModel {
+    pub fn paper_partitioned(kernel_freq_hz: f64) -> HbmModel {
+        HbmModel { partitions: 4, burst_bits: 512, kernel_freq_hz }
+    }
+
+    pub fn paper_unpartitioned(kernel_freq_hz: f64) -> HbmModel {
+        HbmModel { partitions: 1, burst_bits: 512, kernel_freq_hz }
+    }
+
+    /// Floats delivered per kernel cycle after the merge.
+    pub fn floats_per_cycle(&self) -> u32 {
+        self.partitions * self.burst_bits / 32
+    }
+
+    /// Sustained stream bandwidth in bytes/s: limited both by the
+    /// kernel-side consumption rate and the channels' native bandwidth.
+    pub fn stream_bandwidth(&self, dev: &FpgaDevice) -> f64 {
+        let kernel_side =
+            self.kernel_freq_hz * (self.burst_bits as f64 / 8.0) * self.partitions as f64;
+        let channel_native = dev.hbm_freq_hz * (dev.hbm_width_bits as f64 / 8.0)
+            * self.partitions as f64;
+        kernel_side.min(channel_native)
+    }
+
+    /// Cycles to stream `n_floats` through this configuration.
+    pub fn stream_cycles(&self, n_floats: u64) -> u64 {
+        n_floats.div_ceil(self.floats_per_cycle() as u64)
+    }
+
+    /// Time (s) to stream `n_floats`.
+    pub fn stream_time_s(&self, n_floats: u64) -> f64 {
+        self.stream_cycles(n_floats) as f64 / self.kernel_freq_hz
+    }
+}
+
+/// Latency-reduction factor of p-way partitioning + 512-bit bursts vs
+/// element-at-a-time access — the paper's "reduces latency by a factor
+/// of about 64" for p=4 (Fig. 4 ablation, `benches/ablation_hbm.rs`).
+pub fn packet_speedup(partitions: u32, burst_bits: u32) -> f64 {
+    (partitions * burst_bits / 32) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merged_packet_is_64_floats() {
+        let m = HbmModel::paper_partitioned(150e6);
+        assert_eq!(m.floats_per_cycle(), 64);
+        // paper: "data from all four channels is merged into a single
+        // stream packet of 64 floating-point values"
+    }
+
+    #[test]
+    fn unpartitioned_packet_is_16_floats() {
+        let m = HbmModel::paper_unpartitioned(150e6);
+        assert_eq!(m.floats_per_cycle(), 16);
+    }
+
+    #[test]
+    fn paper_speedup_factor_64() {
+        assert_eq!(packet_speedup(4, 512), 64.0);
+        assert_eq!(packet_speedup(1, 512), 16.0);
+        assert_eq!(packet_speedup(1, 32), 1.0);
+    }
+
+    #[test]
+    fn bandwidth_kernel_limited_below_native() {
+        // 512-bit @ 150 MHz = 9.6 GB/s per channel < 14.4 GB/s native.
+        let dev = FpgaDevice::u55c();
+        let m = HbmModel::paper_partitioned(150e6);
+        let bw = m.stream_bandwidth(&dev);
+        assert!((bw - 4.0 * 64.0 * 150e6).abs() < 1.0, "{bw}");
+    }
+
+    #[test]
+    fn bandwidth_capped_at_channel_native() {
+        // At 300 MHz kernel clock, 512-bit reads would exceed the
+        // channel's 14.4 GB/s; the model caps at native.
+        let dev = FpgaDevice::u55c();
+        let m = HbmModel { partitions: 4, burst_bits: 512, kernel_freq_hz: 300e6 };
+        let native = 4.0 * 14.4e9;
+        assert!((m.stream_bandwidth(&dev) - native).abs() / native < 1e-9);
+    }
+
+    #[test]
+    fn stream_cycles_round_up() {
+        let m = HbmModel::paper_partitioned(100e6);
+        assert_eq!(m.stream_cycles(64), 1);
+        assert_eq!(m.stream_cycles(65), 2);
+        assert_eq!(m.stream_cycles(0), 0);
+    }
+
+    #[test]
+    fn stream_time_matches_cycles() {
+        let m = HbmModel::paper_partitioned(100e6);
+        let t = m.stream_time_s(6400);
+        assert!((t - 100.0 / 100e6).abs() < 1e-12, "{t}");
+    }
+}

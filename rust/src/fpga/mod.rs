@@ -1,0 +1,27 @@
+//! Cycle-approximate Alveo U55C device model — the hardware substrate
+//! the paper runs on, simulated (DESIGN.md §2).
+//!
+//! - [`device`]  — the U55C resource envelope (LUT/FF/DSP/BRAM, HBM);
+//! - [`ops`]     — floating-point operator costs (Xilinx FP v7.1 table,
+//!   the same source as the paper's Eq. 3 example numbers);
+//! - [`estimator`] — HLS-like resource estimator: BCPNN kernel
+//!   structure -> utilization + achievable frequency (paper Table 3);
+//! - [`hbm`]     — HBM channel/bandwidth model incl. the 4-way
+//!   partition + merge of Fig. 4;
+//! - [`timing`]  — per-image latency model of the streamed kernel
+//!   (paper Table 2, FPGA columns);
+//! - [`power`]   — static + dynamic power and energy-per-image.
+
+pub mod device;
+pub mod estimator;
+pub mod hbm;
+pub mod ops;
+pub mod power;
+pub mod quant;
+pub mod timing;
+
+pub use device::{FpgaDevice, KernelVersion};
+pub use estimator::{estimate, Utilization};
+pub use hbm::HbmModel;
+pub use power::power_watts;
+pub use timing::{latency_ms, LatencyBreakdown};

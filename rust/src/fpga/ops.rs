@@ -1,0 +1,91 @@
+//! Floating-point operator costs on Xilinx UltraScale+ fabric.
+//!
+//! The fadd/fmul rows are the exact numbers the paper quotes from the
+//! Xilinx Floating-Point v7.1 resource tables (§4.2: "addition requires
+//! 192 LUTs and 2 DSPs, multiplication 74 LUTs and 3 DSPs"); the
+//! div/exp/log/cmp rows are the medium-usage configurations of the same
+//! IP (documented estimates — Vivado reports vary a few percent with
+//! synthesis options).
+
+/// Single-precision floating-point operator kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FpOp {
+    Add,
+    Mul,
+    Div,
+    Exp,
+    Log,
+    Cmp,
+}
+
+/// Per-instance fabric cost of one fully-pipelined operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpCost {
+    pub luts: u64,
+    pub ffs: u64,
+    pub dsps: u64,
+    /// Pipeline latency in cycles (II=1 assumed).
+    pub latency: u64,
+}
+
+impl FpOp {
+    pub fn cost(&self) -> OpCost {
+        match self {
+            // Paper §4.2 / Xilinx FP v7.1 (full-DSP configs):
+            FpOp::Add => OpCost { luts: 192, ffs: 324, dsps: 2, latency: 11 },
+            FpOp::Mul => OpCost { luts: 74, ffs: 152, dsps: 3, latency: 8 },
+            // Medium-usage estimates for the remaining operators:
+            FpOp::Div => OpCost { luts: 763, ffs: 1152, dsps: 0, latency: 28 },
+            FpOp::Exp => OpCost { luts: 400, ffs: 610, dsps: 7, latency: 20 },
+            FpOp::Log => OpCost { luts: 700, ffs: 1014, dsps: 5, latency: 22 },
+            FpOp::Cmp => OpCost { luts: 66, ffs: 98, dsps: 0, latency: 2 },
+        }
+    }
+}
+
+/// Total cost of a bag of operator instances.
+pub fn total_cost(counts: &[(FpOp, u64)]) -> OpCost {
+    let mut t = OpCost { luts: 0, ffs: 0, dsps: 0, latency: 0 };
+    for (op, n) in counts {
+        let c = op.cost();
+        t.luts += c.luts * n;
+        t.ffs += c.ffs * n;
+        t.dsps += c.dsps * n;
+        t.latency = t.latency.max(c.latency);
+    }
+    t
+}
+
+/// LUT/DSP cost of one MAC (1 add + 1 mul) — the unit of the paper's
+/// Eq. 3 peak-performance estimate.
+pub fn mac_cost() -> OpCost {
+    total_cost(&[(FpOp::Add, 1), (FpOp::Mul, 1)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_add_mul_numbers() {
+        assert_eq!(FpOp::Add.cost().luts, 192);
+        assert_eq!(FpOp::Add.cost().dsps, 2);
+        assert_eq!(FpOp::Mul.cost().luts, 74);
+        assert_eq!(FpOp::Mul.cost().dsps, 3);
+    }
+
+    #[test]
+    fn mac_is_add_plus_mul() {
+        let m = mac_cost();
+        assert_eq!(m.luts, 266);
+        assert_eq!(m.dsps, 5);
+    }
+
+    #[test]
+    fn total_cost_accumulates() {
+        let t = total_cost(&[(FpOp::Add, 10), (FpOp::Div, 2)]);
+        assert_eq!(t.luts, 10 * 192 + 2 * 763);
+        assert_eq!(t.dsps, 20);
+        assert_eq!(t.latency, 28); // max latency, not sum
+    }
+}

@@ -1,0 +1,103 @@
+//! FPGA power + energy model (Table 2's Power / Energy-per-image rows).
+//!
+//! P = P_static (shell + HBM PHY, ~21.5 W on a U55C under XRT) +
+//! dynamic CV^2f terms per resource class actively toggling at the
+//! kernel clock. Coefficients calibrated so Model 1 training lands on
+//! the paper's 27.0 W; the other rows follow from the model (paper
+//! measures 26.1-28.1 W across all models/builds — a narrow band this
+//! reproduces).
+
+use crate::config::ModelConfig;
+
+use super::device::{FpgaDevice, KernelVersion};
+use super::estimator::estimate;
+use super::timing;
+
+/// Static draw of shell + HBM stack under XRT, watts.
+pub const P_STATIC_W: f64 = 21.5;
+/// Dynamic watts per (LUT * Hz).
+pub const K_LUT: f64 = 7.6e-14;
+/// Dynamic watts per (DSP * Hz).
+pub const K_DSP: f64 = 1.9e-12;
+/// Dynamic watts per (BRAM36 * Hz).
+pub const K_BRAM: f64 = 2.4e-12;
+
+/// Board power for one (config, version), watts.
+pub fn power_watts(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> f64 {
+    let u = estimate(cfg, version, dev);
+    let f = u.freq_mhz * 1e6;
+    P_STATIC_W + K_LUT * u.luts as f64 * f + K_DSP * u.dsps as f64 * f
+        + K_BRAM * u.brams * f
+}
+
+/// Energy per image in millijoules: board power x per-image latency.
+/// (The paper computes its Energy/img rows exactly this way: e.g.
+/// 83.2 W x 1.495 ms = 124.4 mJ.)
+pub fn energy_per_image_mj(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> f64 {
+    power_watts(cfg, version, dev) * timing::latency_ms(cfg, version, dev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+
+    /// Paper Table 2 FPGA power rows (measured once per model).
+    const TABLE2_FPGA_W: &[(&str, f64)] =
+        &[("model1", 27.0), ("model2", 28.1), ("model3", 26.1)];
+
+    #[test]
+    fn power_within_10pct_of_paper() {
+        let dev = FpgaDevice::u55c();
+        for &(m, want) in TABLE2_FPGA_W {
+            let got = power_watts(&by_name(m).unwrap(), KernelVersion::Train, &dev);
+            let e = (got - want).abs() / want;
+            assert!(e < 0.10, "{m}: {got:.1} W vs paper {want} W");
+        }
+    }
+
+    #[test]
+    fn power_in_paper_band() {
+        // All builds x models must stay in the ~24-31 W envelope.
+        let dev = FpgaDevice::u55c();
+        for m in ["model1", "model2", "model3"] {
+            for v in KernelVersion::all() {
+                let p = power_watts(&by_name(m).unwrap(), v, &dev);
+                assert!((22.0..31.0).contains(&p), "{m}/{}: {p:.1} W", v.name());
+            }
+        }
+    }
+
+    #[test]
+    fn infer_build_draws_less_than_train() {
+        let dev = FpgaDevice::u55c();
+        for m in ["model1", "model2", "model3"] {
+            let cfg = by_name(m).unwrap();
+            let i = power_watts(&cfg, KernelVersion::Infer, &dev);
+            let t = power_watts(&cfg, KernelVersion::Train, &dev);
+            assert!(i < t, "{m}: infer {i:.1} W >= train {t:.1} W");
+        }
+    }
+
+    #[test]
+    fn energy_per_image_band() {
+        // Paper FPGA energy/img: 7.5-18.3 mJ across all rows.
+        let dev = FpgaDevice::u55c();
+        for m in ["model1", "model2", "model3"] {
+            for v in KernelVersion::all() {
+                let e = energy_per_image_mj(&by_name(m).unwrap(), v, &dev);
+                assert!((4.0..40.0).contains(&e), "{m}/{}: {e:.1} mJ", v.name());
+            }
+        }
+    }
+
+    #[test]
+    fn energy_is_power_times_latency() {
+        let dev = FpgaDevice::u55c();
+        let cfg = by_name("model1").unwrap();
+        let e = energy_per_image_mj(&cfg, KernelVersion::Train, &dev);
+        let p = power_watts(&cfg, KernelVersion::Train, &dev);
+        let l = timing::latency_ms(&cfg, KernelVersion::Train, &dev);
+        assert!((e - p * l).abs() < 1e-9);
+    }
+}

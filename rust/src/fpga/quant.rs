@@ -1,0 +1,211 @@
+//! Number-representation exploration — the paper's stated future work
+//! ("the kernel [is] single floating-point precision, albeit future
+//! work can easily use other number representations") and the
+//! StreamBrain line of custom-float FPGA results.
+//!
+//! Simulates reduced-precision storage of the BCPNN state (weights,
+//! biases and probability traces quantized on every update; compute
+//! stays f32, modelling FPGA datapaths with narrow storage + wide
+//! accumulators), and reports the resource/bandwidth side: narrower
+//! words shrink the streamed joint arrays, moving the memory-bound
+//! kernels up the roofline. `benches/ablation_precision.rs` runs the
+//! accuracy-vs-format sweep.
+
+use crate::bcpnn::Network;
+use crate::config::ModelConfig;
+use crate::data::Dataset;
+
+/// Storage formats for the large streamed arrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Format {
+    F32,
+    /// bfloat16: f32 with the mantissa truncated to 7 bits.
+    Bf16,
+    /// IEEE half precision (simulated via f32 round-trip).
+    F16,
+    /// Fixed point Q(i.f) with saturation (Johansson & Lansner 2004
+    /// explored fixed-point BCPNN).
+    Fixed { int_bits: u32, frac_bits: u32 },
+}
+
+impl Format {
+    pub fn name(&self) -> String {
+        match self {
+            Format::F32 => "f32".into(),
+            Format::Bf16 => "bf16".into(),
+            Format::F16 => "f16".into(),
+            Format::Fixed { int_bits, frac_bits } => {
+                format!("q{int_bits}.{frac_bits}")
+            }
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        match self {
+            Format::F32 => 32,
+            Format::Bf16 | Format::F16 => 16,
+            Format::Fixed { int_bits, frac_bits } => 1 + int_bits + frac_bits,
+        }
+    }
+
+    /// Quantize one value to this storage format (round-trip to f32).
+    pub fn quantize(&self, v: f32) -> f32 {
+        match self {
+            Format::F32 => v,
+            Format::Bf16 => f32::from_bits(v.to_bits() & 0xFFFF_0000),
+            Format::F16 => {
+                // Simulated IEEE f16 round-trip: clamp to range, then
+                // truncate mantissa to 10 bits with exponent handling
+                // via powers of two.
+                if v == 0.0 || !v.is_finite() {
+                    return v;
+                }
+                let max = 65504.0f32;
+                let c = v.clamp(-max, max);
+                let exp = c.abs().log2().floor();
+                let scale = (10.0 - exp).exp2();
+                (c * scale).round() / scale
+            }
+            Format::Fixed { int_bits, frac_bits } => {
+                let scale = (*frac_bits as f32).exp2();
+                let max = (*int_bits as f32).exp2() - 1.0 / scale;
+                (v * scale).round().clamp(-max * scale, max * scale) / scale
+            }
+        }
+    }
+}
+
+/// Quantize the network's streamed state in place (the arrays that
+/// live in HBM on the FPGA: joint traces + weights; biases included).
+pub fn quantize_state(net: &mut Network, fmt: Format) {
+    for arr in [&mut net.params.pij, &mut net.params.wij, &mut net.params.bj] {
+        for v in arr.iter_mut() {
+            *v = fmt.quantize(*v);
+        }
+    }
+    for arr in [&mut net.params.qik, &mut net.params.who, &mut net.params.bk] {
+        for v in arr.iter_mut() {
+            *v = fmt.quantize(*v);
+        }
+    }
+}
+
+/// Result of one precision experiment.
+#[derive(Debug, Clone)]
+pub struct PrecisionResult {
+    pub format: Format,
+    pub test_acc: f64,
+    /// Streamed bytes per image relative to f32 (bandwidth saving).
+    pub traffic_ratio: f64,
+}
+
+/// Train with state quantized after every update ("quantize-on-write",
+/// what a narrow HBM word gives you), then evaluate.
+pub fn run_experiment(
+    cfg: &ModelConfig,
+    train: &Dataset,
+    test: &Dataset,
+    epochs: usize,
+    fmt: Format,
+    seed: u64,
+) -> PrecisionResult {
+    let mut net = Network::new(cfg.clone(), seed);
+    for _ in 0..epochs {
+        for img in &train.images {
+            net.train_unsup_step(img);
+            quantize_state(&mut net, fmt);
+        }
+    }
+    for (img, &l) in train.images.iter().zip(&train.labels) {
+        net.train_sup_step(img, l as usize);
+        quantize_state(&mut net, fmt);
+    }
+    PrecisionResult {
+        format: fmt,
+        test_acc: net.accuracy(&test.images, &test.labels),
+        traffic_ratio: fmt.bits() as f64 / 32.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+    use crate::data::synth;
+
+    #[test]
+    fn format_bits_and_names() {
+        assert_eq!(Format::F32.bits(), 32);
+        assert_eq!(Format::Bf16.bits(), 16);
+        assert_eq!(Format::Fixed { int_bits: 3, frac_bits: 12 }.bits(), 16);
+        assert_eq!(Format::Fixed { int_bits: 3, frac_bits: 12 }.name(), "q3.12");
+    }
+
+    #[test]
+    fn f32_quantize_is_identity() {
+        for v in [-1.5, 0.0, 3.25e-8, 1e20] {
+            assert_eq!(Format::F32.quantize(v), v);
+        }
+    }
+
+    #[test]
+    fn bf16_truncates_mantissa() {
+        let q = Format::Bf16.quantize(1.000_001);
+        assert_eq!(q.to_bits() & 0xFFFF, 0);
+        assert!((q - 1.0).abs() < 0.01);
+        // Sign preserved.
+        assert!(Format::Bf16.quantize(-2.7) < 0.0);
+    }
+
+    #[test]
+    fn f16_roundtrip_close_in_range() {
+        for v in [0.5f32, -3.75, 100.0, 1e-3] {
+            let q = Format::F16.quantize(v);
+            assert!((q - v).abs() / v.abs() < 1e-2, "{v} -> {q}");
+        }
+        // Saturation.
+        assert!(Format::F16.quantize(1e6) <= 65504.0);
+    }
+
+    #[test]
+    fn fixed_point_saturates_and_rounds() {
+        let f = Format::Fixed { int_bits: 2, frac_bits: 4 };
+        assert_eq!(f.quantize(0.25), 0.25);
+        assert!((f.quantize(0.26) - 0.25).abs() < 0.07);
+        assert!(f.quantize(100.0) < 4.0); // saturated
+        assert!(f.quantize(-100.0) > -4.1);
+    }
+
+    #[test]
+    fn bf16_training_matches_f32_accuracy() {
+        // The paper-family result (StreamBrain): BCPNN tolerates
+        // reduced precision. bf16 storage must stay within a few
+        // points of f32 on the tiny task.
+        let cfg = by_name("tiny").unwrap();
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 192, 11, 0.15);
+        let (train, test) = d.split(128);
+        let f32_res = run_experiment(&cfg, &train, &test, 2, Format::F32, 42);
+        let bf16_res = run_experiment(&cfg, &train, &test, 2, Format::Bf16, 42);
+        assert!(f32_res.test_acc > 0.5);
+        assert!(
+            bf16_res.test_acc > f32_res.test_acc - 0.08,
+            "bf16 {} vs f32 {}",
+            bf16_res.test_acc, f32_res.test_acc
+        );
+        assert_eq!(bf16_res.traffic_ratio, 0.5);
+    }
+
+    #[test]
+    fn absurdly_low_precision_degrades() {
+        // Sanity: the experiment must be able to show damage.
+        let cfg = by_name("tiny").unwrap();
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 192, 13, 0.15);
+        let (train, test) = d.split(128);
+        let crushed = run_experiment(
+            &cfg, &train, &test, 2,
+            Format::Fixed { int_bits: 1, frac_bits: 2 }, 42,
+        );
+        let full = run_experiment(&cfg, &train, &test, 2, Format::F32, 42);
+        assert!(crushed.test_acc <= full.test_acc + 1e-9);
+    }
+}

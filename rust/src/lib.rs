@@ -1,0 +1,38 @@
+//! # bcpnn-accel — stream-based BCPNN accelerator (paper reproduction)
+//!
+//! Reproduction of *"A Reconfigurable Stream-Based FPGA Accelerator for
+//! Bayesian Confidence Propagation Neural Networks"* (Al Hafiz et al.,
+//! 2025) as a three-layer rust + JAX + Pallas stack:
+//!
+//! - **L1** Pallas kernels (`python/compile/kernels/`) — the BCPNN
+//!   compute hot-spots (masked support mat-vec, per-hypercolumn softmax,
+//!   fused Hebbian-Bayesian plasticity), AOT-lowered to HLO text.
+//! - **L2** JAX model (`python/compile/model.py`) — the full feedforward
+//!   BCPNN, scanned per batch, lowered once at build time.
+//! - **L3** this crate — the coordinator and every substrate the paper
+//!   depends on: the stream-dataflow runtime (the HLS `DATAFLOW` +
+//!   `hls::stream` execution model in software), a cycle-approximate
+//!   Alveo U55C device model (resources, HBM, power, timing), the FPGA
+//!   roofline analysis, CPU/GPU baselines, synthetic datasets, and the
+//!   PJRT runtime that executes the AOT artifacts. Python never runs on
+//!   the request path.
+//!
+//! Modules map to DESIGN.md §3; the experiment index (every paper table
+//! and figure) is DESIGN.md §4.
+
+pub mod baseline;
+pub mod bcpnn;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fpga;
+pub mod report;
+pub mod roofline;
+pub mod runtime;
+pub mod stream;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based: substrates attach context).
+pub type Result<T> = anyhow::Result<T>;

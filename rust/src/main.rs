@@ -1,0 +1,349 @@
+//! `repro` — the BCPNN accelerator coordinator CLI.
+//!
+//! Subcommands (see `repro help`):
+//!   config           print model configurations (Table 1)
+//!   train            full pipeline via PJRT artifacts on synthetic data
+//!   serve            streaming inference server demo (edge path)
+//!   table2           Table 2 reproduction (modeled columns)
+//!   table3           Table 3 reproduction (resource estimator)
+//!   roofline         Fig. 6 reproduction (roofline points)
+//!   fifo-depths      FIFO depth analysis (the C/RTL cosim step)
+//!   receptive-field  Fig. 5 reproduction (structural plasticity RF)
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use bcpnn_accel::bcpnn::structural::receptive_field;
+use bcpnn_accel::bcpnn::Network;
+use bcpnn_accel::config::{by_name, dataset_spec};
+use bcpnn_accel::coordinator::{Driver, InferenceServer, ServerConfig, TrainOptions};
+use bcpnn_accel::data::synth;
+use bcpnn_accel::report;
+use bcpnn_accel::runtime::Session;
+use bcpnn_accel::stream::depth::{minimal_depths, simulate, StageSpec};
+use bcpnn_accel::util::cli::Args;
+
+const USAGE: &str = "\
+repro — stream-based BCPNN accelerator (paper reproduction)
+
+USAGE: repro <command> [options]
+
+COMMANDS:
+  config            print configurations (--config NAME | --all) (--json)
+  train             train via PJRT artifacts (--config tiny --epochs N
+                    --struct --seed S --artifacts DIR)
+  serve             inference server demo (--config tiny --requests N
+                    --artifacts DIR)
+  table2            Table 2 (modeled) (--models model1,model2,model3)
+  table3            Table 3 (estimator) (--models ...)
+  roofline          Fig 6 operating points (--models ...)
+  accuracy          Table 2 accuracy rows: PJRT path vs pure-rust CPU
+                    (--config tiny --epochs N)
+  fifo-depths       FIFO depth analysis for the kernel chain (--config)
+  receptive-field   Fig 5: receptive-field evolution (--config tiny
+                    --snapshots K --hc H)
+  help              this text
+
+  train --save FILE persists a checkpoint; serve --load FILE serves it.
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv, &["all", "json", "struct", "verbose"])?;
+    let cmd = args.positional().first().cloned().unwrap_or_default();
+    match cmd.as_str() {
+        "config" => cmd_config(&args),
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "table2" => {
+            let models = models_arg(&args);
+            let refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+            println!("{}", report::table2(&refs)?);
+            println!("{}", report::table2_totals(&refs)?);
+            Ok(())
+        }
+        "table3" => {
+            let models = models_arg(&args);
+            let refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+            println!("{}", report::table3(&refs)?);
+            Ok(())
+        }
+        "roofline" => {
+            let models = models_arg(&args);
+            let refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+            println!("{}", report::fig6(&refs)?);
+            Ok(())
+        }
+        "accuracy" => cmd_accuracy(&args),
+        "fifo-depths" => cmd_fifo_depths(&args),
+        "receptive-field" => cmd_receptive_field(&args),
+        "help" | "" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn models_arg(args: &Args) -> Vec<String> {
+    match args.get("models") {
+        Some(s) => s
+            .split(',')
+            .map(|x| x.trim().to_string())
+            .filter(|x| !x.is_empty())
+            .collect(),
+        None => vec!["model1".into(), "model2".into(), "model3".into()],
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    if args.flag("json") {
+        let name = if args.flag("all") { None } else { args.get("config") };
+        println!("{}", report::config_json(name)?);
+    } else {
+        println!("{}", report::table1());
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let name = args.get_or("config", "tiny").to_string();
+    let cfg = by_name(&name)?;
+    let spec = dataset_spec(&name);
+    let epochs = args.get_parse("epochs", spec.epochs)?;
+    let seed: u64 = args.get_parse("seed", 42u64)?;
+    let n_train = args.get_parse("train-size", spec.train)?;
+    let n_test = args.get_parse("test-size", spec.test)?;
+
+    println!("loading artifacts for {name} (PJRT CPU)...");
+    let session = Session::load(&artifacts_dir(args), &name)?;
+    println!("platform: {}", session.platform());
+    let mut driver = Driver::new(session, &name, seed)?;
+
+    let data = synth::generate(cfg.img_side, cfg.n_classes, n_train + n_test, seed, 0.15);
+    let (train, test) = data.split(n_train);
+    let opts = TrainOptions {
+        epochs,
+        structural: args.flag("struct"),
+        struct_interval: args.get_parse("struct-interval", 4usize)?,
+        seed,
+    };
+    println!(
+        "training {name}: {} train / {} test images, {} epochs, structural={}",
+        train.len(),
+        test.len(),
+        epochs,
+        opts.structural
+    );
+    let out = driver.train(&train, &test, &opts)?;
+    println!(
+        "train acc: {:.1}%   test acc: {:.1}%",
+        out.train_acc * 100.0,
+        out.test_acc * 100.0
+    );
+    println!(
+        "latency/img: unsup {:.3} ms  sup {:.3} ms  infer {:.3} ms",
+        out.unsup.mean_ms, out.sup.mean_ms, out.infer.mean_ms
+    );
+    println!(
+        "total {:.2} s  rewires {} (swaps {})  struct host {:.3} s",
+        out.total_s, out.rewire_passes, out.rewire_swaps, out.struct_host_s
+    );
+    if let Some(path) = args.get("save") {
+        bcpnn_accel::bcpnn::checkpoint::save(
+            std::path::Path::new(path), &cfg, &driver.params)?;
+        println!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+/// Table 2 "Other" rows (train/test accuracy): the paper's correctness
+/// claim is that the accelerator matches the CPU reference to fractions
+/// of a percent. Here: the PJRT artifact path (our accelerator
+/// stand-in) vs the pure-rust CPU network, trained on identical data
+/// from identical initial parameters.
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    let name = args.get_or("config", "tiny").to_string();
+    let cfg = by_name(&name)?;
+    let spec = dataset_spec(&name);
+    let epochs = args.get_parse("epochs", spec.epochs.min(3))?;
+    let seed: u64 = args.get_parse("seed", 42u64)?;
+
+    let data = synth::generate(
+        cfg.img_side, cfg.n_classes, spec.train + spec.test, seed, 0.15);
+    let (train, test) = data.split(spec.train);
+
+    // Accelerator path (PJRT artifacts).
+    let session = Session::load(&artifacts_dir(args), &name)?;
+    let mut driver = Driver::new(session, &name, seed)?;
+    let out = driver.train(
+        &train, &test,
+        &TrainOptions { epochs, ..Default::default() })?;
+
+    // CPU reference path: same params, same data, same schedule
+    // (including the driver's drop-remainder batching).
+    let mut net = Network::new(cfg.clone(), seed);
+    net.params = bcpnn_accel::bcpnn::Params::init(&cfg, seed);
+    net.refresh_mask();
+    let nb = train.len() / cfg.batch * cfg.batch;
+    for _ in 0..epochs {
+        for img in &train.images[..nb] {
+            net.train_unsup_step(img);
+        }
+    }
+    for (img, &l) in train.images[..nb].iter().zip(&train.labels[..nb]) {
+        net.train_sup_step(img, l as usize);
+    }
+    let cpu_train = net.accuracy(&train.images, &train.labels);
+    let cpu_test = net.accuracy(&test.images, &test.labels);
+
+    println!("Table 2 'Other' rows ({name}, {epochs} epochs, seed {seed}):");
+    println!("platform      train acc   test acc");
+    println!("CPU (rust)    {:>8.1}%  {:>8.1}%", cpu_train * 100.0, cpu_test * 100.0);
+    println!("PJRT (accel)  {:>8.1}%  {:>8.1}%", out.train_acc * 100.0,
+             out.test_acc * 100.0);
+    println!(
+        "delta         {:>+8.2}pp {:>+8.2}pp  (paper: 'accuracy differences \
+         are negligible')",
+        (out.train_acc - cpu_train) * 100.0,
+        (out.test_acc - cpu_test) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let name = args.get_or("config", "tiny").to_string();
+    let cfg = by_name(&name)?;
+    let n_requests: usize = args.get_parse("requests", 512usize)?;
+    let seed: u64 = args.get_parse("seed", 42u64)?;
+
+    println!("loading infer artifact for {name}...");
+    let dir = artifacts_dir(args);
+    let name2 = name.clone();
+    let ckpt = args.get("load").map(|s| s.to_string());
+    let server = InferenceServer::start(
+        move || {
+            let session = Session::load_modes(&dir, &name2, &["infer"])?;
+            let mut driver = Driver::new(session, &name2, seed)?;
+            if let Some(path) = ckpt {
+                let (ccfg, params) =
+                    bcpnn_accel::bcpnn::checkpoint::load(std::path::Path::new(&path))?;
+                anyhow::ensure!(
+                    ccfg.name == name2,
+                    "checkpoint is for config {:?}, serving {:?}",
+                    ccfg.name, name2
+                );
+                driver.set_params(params);
+                println!("loaded checkpoint {path}");
+            }
+            Ok(driver)
+        },
+        ServerConfig::default(),
+    )?;
+
+    let data = synth::generate(cfg.img_side, cfg.n_classes, n_requests, seed, 0.15);
+    let mut pending = Vec::new();
+    for img in &data.images {
+        pending.push(server.submit(img.clone())?);
+    }
+    let mut agree = 0usize;
+    for (rx, &label) in pending.iter().zip(&data.labels) {
+        let probs = rx.recv_timeout(Duration::from_secs(30))?;
+        let pred = probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if pred as u32 == label {
+            agree += 1;
+        }
+    }
+    let rep = server.shutdown();
+    println!(
+        "served {} requests in {} batches (mean fill {:.1}/{})",
+        rep.served, rep.batches, rep.mean_fill, cfg.batch
+    );
+    println!(
+        "latency: mean {:.3} ms  p50 {:.3} ms  p99 {:.3} ms  max {:.3} ms",
+        rep.latency.mean_ms, rep.latency.p50_ms, rep.latency.p99_ms, rep.latency.max_ms
+    );
+    println!("(untrained net agreement with labels: {agree}/{n_requests})");
+    Ok(())
+}
+
+fn cmd_fifo_depths(args: &Args) -> Result<()> {
+    let name = args.get_or("config", "model1").to_string();
+    let cfg = by_name(&name)?;
+    // The kernel's stage chain, in packets: HBM read -> support MACs ->
+    // softmax (barrier over a hypercolumn) -> plasticity -> HBM write.
+    let packets_per_img = ((cfg.nact_hi * cfg.mc_in * cfg.n_h()) as u64).div_ceil(64);
+    let stages = vec![
+        StageSpec::streaming("hbm_read", 1),
+        StageSpec::streaming("support", 1),
+        StageSpec::with_barrier("softmax", 1, cfg.mc_h.div_ceil(16) as u64),
+        StageSpec::streaming("plasticity", 1),
+        StageSpec::streaming("hbm_write", 1),
+    ];
+    println!("FIFO depth analysis for {name} ({packets_per_img} packets/img)");
+    let n = packets_per_img.min(4096);
+    let depths = minimal_depths(&stages, n, 0.05);
+    let sim = simulate(&stages, &depths, n);
+    println!("minimal depths:");
+    for (i, d) in depths.iter().enumerate() {
+        println!(
+            "  fifo[{i}] {} -> {}: depth {d} (high water {})",
+            stages[i].name,
+            stages[i + 1].name,
+            sim.high_water[i]
+        );
+    }
+    println!("deadlock free: {}", !sim.deadlock);
+    println!("cycles for {n} packets: {}", sim.total_cycles);
+    Ok(())
+}
+
+fn cmd_receptive_field(args: &Args) -> Result<()> {
+    let name = args.get_or("config", "tiny").to_string();
+    let cfg = by_name(&name)?;
+    let snapshots: usize = args.get_parse("snapshots", 4usize)?;
+    let hc: usize = args.get_parse("hc", 0usize)?;
+    let seed: u64 = args.get_parse("seed", 42u64)?;
+    if hc >= cfg.hc_h {
+        bail!("--hc {hc} out of range (hc_h = {})", cfg.hc_h);
+    }
+    // Pure-rust network: Fig 5 is about the host-side structural loop.
+    let mut net = Network::new(cfg.clone(), seed);
+    let spec = dataset_spec(&name);
+    let data = synth::generate(cfg.img_side, cfg.n_classes, spec.train, seed, 0.15);
+    let sp = bcpnn_accel::bcpnn::StructuralPlasticity::default();
+    let per_snap = (spec.train * spec.epochs.max(1)).max(snapshots) / snapshots;
+    println!("receptive field of hidden HC {hc} over training ({name}):\n");
+    for snap in 0..snapshots {
+        for i in 0..per_snap {
+            let img = &data.images[(snap * per_snap + i) % data.len()];
+            net.train_unsup_step(img);
+            if (i + 1) % 64 == 0 {
+                sp.rewire(&mut net.params, &cfg);
+                net.refresh_mask();
+            }
+        }
+        let rf = receptive_field(&net.params, &cfg, hc);
+        println!("after {} images:", (snap + 1) * per_snap);
+        println!("{}", report::ascii_field(&rf, cfg.img_side));
+    }
+    Ok(())
+}

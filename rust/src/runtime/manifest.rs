@@ -1,0 +1,293 @@
+//! `artifacts/manifest.json` parsing.
+//!
+//! The manifest is written by `python/compile/aot.py` at build time and
+//! pins, for every artifact: the HLO file, the model config it was
+//! traced for, and the exact positional input/output tensor signatures.
+//! The rust side marshals strictly by this record, so a python-side
+//! signature change that isn't regenerated shows up as a hard error
+//! here rather than silent garbage.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+/// One tensor in an artifact signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "float32" or "int32" (all the model uses).
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One artifact entry (config x mode).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub key: String,
+    pub file: PathBuf,
+    /// "infer" | "train_unsup" | "train_sup".
+    pub mode: String,
+    pub config: ModelConfig,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn input(&self, name: &str) -> Result<&TensorSpec> {
+        self.inputs
+            .iter()
+            .find(|t| t.name == name)
+            .with_context(|| format!("artifact {} has no input {name:?}", self.key))
+    }
+}
+
+/// The parsed manifest: artifact key -> spec.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `make artifacts` first")
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest.json")?;
+        let mut artifacts = BTreeMap::new();
+        for (key, entry) in root.req("artifacts")?.as_obj()? {
+            let spec = Self::parse_entry(dir, key, entry)
+                .with_context(|| format!("artifact {key:?}"))?;
+            artifacts.insert(key.clone(), spec);
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    fn parse_entry(dir: &Path, key: &str, v: &Json) -> Result<ArtifactSpec> {
+        let cfg_json = v.req("config")?;
+        // The manifest stores the resolved config; map back to
+        // ModelConfig (it carries every field we need).
+        let config = ModelConfig {
+            name: cfg_json.req("name")?.as_str()?.to_string(),
+            img_side: cfg_json.req("img_side")?.as_usize()?,
+            hc_h: cfg_json.req("hc_h")?.as_usize()?,
+            mc_h: cfg_json.req("mc_h")?.as_usize()?,
+            n_classes: cfg_json.req("n_classes")?.as_usize()?,
+            nact_hi: cfg_json.req("nact_hi")?.as_usize()?,
+            alpha: cfg_json.req("alpha")?.as_f64()? as f32,
+            batch: cfg_json.req("batch")?.as_usize()?,
+            mc_in: cfg_json.req("mc_in")?.as_usize()?,
+            eps: cfg_json.req("eps")?.as_f64()? as f32,
+            gain: cfg_json.req("gain")?.as_f64()? as f32,
+        };
+        config.validate()?;
+        let spec = ArtifactSpec {
+            key: key.to_string(),
+            file: dir.join(v.req("file")?.as_str()?),
+            mode: v.req("mode")?.as_str()?.to_string(),
+            config,
+            inputs: v
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+            outputs: v
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+        };
+        spec.sanity_check()?;
+        Ok(spec)
+    }
+
+    /// Artifact for (config name, mode), e.g. ("tiny", "infer").
+    pub fn get(&self, config: &str, mode: &str) -> Result<&ArtifactSpec> {
+        let key = format!("{config}_{mode}");
+        self.artifacts.get(&key).with_context(|| {
+            format!(
+                "artifact {key:?} not in manifest (have: {}) — rerun `make artifacts`",
+                self.artifacts.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// Config names present in the manifest.
+    pub fn config_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .artifacts
+            .values()
+            .map(|a| a.config.name.clone())
+            .collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+}
+
+impl ArtifactSpec {
+    /// Cross-check the signature against the config's derived shapes.
+    fn sanity_check(&self) -> Result<()> {
+        let cfg = &self.config;
+        let expect_inputs: Vec<(&str, Vec<usize>)> = match self.mode.as_str() {
+            "infer" => vec![
+                ("wij", vec![cfg.n_in(), cfg.n_h()]),
+                ("bj", vec![cfg.n_h()]),
+                ("who", vec![cfg.n_h(), cfg.n_out()]),
+                ("bk", vec![cfg.n_out()]),
+                ("mask_hc", vec![cfg.hc_in(), cfg.hc_h]),
+                ("imgs", vec![cfg.batch, cfg.hc_in()]),
+            ],
+            "train_unsup" => vec![
+                ("pi", vec![cfg.n_in()]),
+                ("pj", vec![cfg.n_h()]),
+                ("pij", vec![cfg.n_in(), cfg.n_h()]),
+                ("mask_hc", vec![cfg.hc_in(), cfg.hc_h]),
+                ("imgs", vec![cfg.batch, cfg.hc_in()]),
+            ],
+            "train_sup" => vec![
+                ("wij", vec![cfg.n_in(), cfg.n_h()]),
+                ("bj", vec![cfg.n_h()]),
+                ("mask_hc", vec![cfg.hc_in(), cfg.hc_h]),
+                ("qi", vec![cfg.n_h()]),
+                ("qk", vec![cfg.n_out()]),
+                ("qik", vec![cfg.n_h(), cfg.n_out()]),
+                ("who", vec![cfg.n_h(), cfg.n_out()]),
+                ("bk", vec![cfg.n_out()]),
+                ("imgs", vec![cfg.batch, cfg.hc_in()]),
+                ("labels", vec![cfg.batch]),
+            ],
+            m => bail!("unknown mode {m:?}"),
+        };
+        if self.inputs.len() != expect_inputs.len() {
+            bail!(
+                "{}: expected {} inputs, manifest has {}",
+                self.key, expect_inputs.len(), self.inputs.len()
+            );
+        }
+        for (got, (name, shape)) in self.inputs.iter().zip(&expect_inputs) {
+            if got.name != *name || got.shape != *shape {
+                bail!(
+                    "{}: input mismatch: got {}{:?}, expected {}{:?}",
+                    self.key, got.name, got.shape, name, shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> String {
+        r#"{"artifacts": {"tiny_infer": {
+            "file": "tiny_infer.hlo.txt",
+            "mode": "infer",
+            "config": {"name":"tiny","img_side":8,"hc_in":64,"mc_in":2,
+                "hc_h":4,"mc_h":16,"n_in":128,"n_h":64,"n_classes":4,
+                "nact_hi":32,"alpha":0.02,"eps":1e-8,"gain":1.0,"batch":16,
+                "tile_in":128,"tile_h":64},
+            "dataset": {"train": 256, "test": 64, "epochs": 3},
+            "inputs": [
+                {"name":"wij","shape":[128,64],"dtype":"float32"},
+                {"name":"bj","shape":[64],"dtype":"float32"},
+                {"name":"who","shape":[64,4],"dtype":"float32"},
+                {"name":"bk","shape":[4],"dtype":"float32"},
+                {"name":"mask_hc","shape":[64,4],"dtype":"float32"},
+                {"name":"imgs","shape":[16,64],"dtype":"float32"}
+            ],
+            "outputs": [{"name":"probs","shape":[16,4],"dtype":"float32"}],
+            "sha256": "x"
+        }}}"#
+            .to_string()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), &sample_manifest()).unwrap();
+        let a = m.get("tiny", "infer").unwrap();
+        assert_eq!(a.mode, "infer");
+        assert_eq!(a.config.n_in(), 128);
+        assert_eq!(a.inputs.len(), 6);
+        assert_eq!(a.input("imgs").unwrap().shape, vec![16, 64]);
+        assert_eq!(a.outputs[0].elements(), 64);
+        assert_eq!(m.config_names(), vec!["tiny".to_string()]);
+    }
+
+    #[test]
+    fn missing_artifact_lists_available() {
+        let m = Manifest::parse(Path::new("/tmp/a"), &sample_manifest()).unwrap();
+        let err = m.get("tiny", "train_unsup").unwrap_err().to_string();
+        assert!(err.contains("tiny_infer"), "{err}");
+    }
+
+    #[test]
+    fn signature_mismatch_rejected() {
+        // Corrupt a shape: wij [128,64] -> [128,63].
+        let bad = sample_manifest().replace("[128,64]", "[128,63]");
+        let err = Manifest::parse(Path::new("/tmp/a"), &bad)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mismatch") || err.contains("tiny_infer"), "{err}");
+    }
+
+    #[test]
+    fn empty_manifest_rejected() {
+        let err = Manifest::parse(Path::new("/tmp/a"), r#"{"artifacts":{}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Integration: parse the real artifacts/manifest.json when the
+        // build has produced it.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for name in m.config_names() {
+                for mode in ["infer", "train_unsup", "train_sup"] {
+                    let a = m.get(&name, mode).unwrap();
+                    assert!(a.file.exists(), "{:?}", a.file);
+                }
+            }
+        }
+    }
+}

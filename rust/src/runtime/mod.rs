@@ -1,0 +1,14 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts and executes them
+//! on the request path. Python is never involved here.
+//!
+//! - [`manifest`] — parses `artifacts/manifest.json` (written by
+//!   `python/compile/aot.py`); the positional input/output signatures
+//!   recorded there are the single source of truth for marshalling.
+//! - [`session`] — the PJRT CPU client wrapper: compile once per
+//!   artifact, execute many times with `Vec<f32>` buffers in/out.
+
+pub mod manifest;
+pub mod session;
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use session::{Artifact, Session};

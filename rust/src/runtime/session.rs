@@ -1,0 +1,242 @@
+//! PJRT session: compile HLO-text artifacts once, execute many times.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `compile` -> `execute`.
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax>=0.5 serialized protos — 64-bit instruction ids); the text
+//! parser reassigns ids and round-trips cleanly.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// Host-side tensor value, matching a `TensorSpec`.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One compiled artifact bound to a PJRT client.
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    /// Cumulative device-execution time (hot-path metric).
+    pub exec_time: std::cell::Cell<Duration>,
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+impl Artifact {
+    /// Upload one input tensor to a device buffer (single copy,
+    /// host slice -> device), validated against input slot `idx`.
+    /// Buffers returned here can be cached across `execute_buffers`
+    /// calls — the L3 hot-path optimization (EXPERIMENTS.md §Perf):
+    /// static inputs (weights, mask) are uploaded once per version
+    /// instead of once per batch.
+    pub fn upload(&self, idx: usize, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let spec = self
+            .spec
+            .inputs
+            .get(idx)
+            .with_context(|| format!("{}: no input slot {idx}", self.spec.key))?;
+        if t.len() != spec.elements() {
+            bail!(
+                "{}: input {} has {} elements, expected {} {:?}",
+                self.spec.key, spec.name, t.len(), spec.elements(), spec.shape
+            );
+        }
+        match t {
+            Tensor::F32(v) => {
+                if spec.dtype != "float32" {
+                    bail!("{}: input {} expects {}", self.spec.key, spec.name, spec.dtype);
+                }
+                Ok(self.client.buffer_from_host_buffer(v, &spec.shape, None)?)
+            }
+            Tensor::I32(v) => {
+                if spec.dtype != "int32" {
+                    bail!("{}: input {} expects {}", self.spec.key, spec.name, spec.dtype);
+                }
+                Ok(self.client.buffer_from_host_buffer(v, &spec.shape, None)?)
+            }
+        }
+    }
+
+    /// Execute with positional inputs; returns positional outputs.
+    /// Convenience wrapper: uploads every input, then `execute_buffers`.
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.key,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, t)| self.upload(i, t))
+            .collect::<Result<_>>()?;
+        self.execute_buffers(&bufs)
+    }
+
+    /// Execute with pre-uploaded device buffers (the hot path).
+    pub fn execute_buffers<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        inputs: &[B],
+    ) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} input buffers, got {}",
+                self.spec.key,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let t0 = Instant::now();
+        let result = self.exe.execute_b(inputs)?[0][0].to_literal_sync()?;
+        self.exec_time.set(self.exec_time.get() + t0.elapsed());
+        self.exec_count.set(self.exec_count.get() + 1);
+
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: executable returned {} outputs, manifest says {}",
+                self.spec.key, parts.len(), self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&self.spec.outputs) {
+            let t = match spec.dtype.as_str() {
+                "float32" => Tensor::F32(lit.to_vec::<f32>()?),
+                "int32" => Tensor::I32(lit.to_vec::<i32>()?),
+                d => bail!("unsupported output dtype {d}"),
+            };
+            if t.len() != spec.elements() {
+                bail!(
+                    "{}: output {} has {} elements, expected {}",
+                    self.spec.key, spec.name, t.len(), spec.elements()
+                );
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    /// Mean device execution time over all calls so far.
+    pub fn mean_exec_time(&self) -> Duration {
+        let n = self.exec_count.get().max(1);
+        self.exec_time.get() / n as u32
+    }
+}
+
+/// A PJRT CPU session holding compiled artifacts.
+pub struct Session {
+    client: xla::PjRtClient,
+    artifacts: BTreeMap<String, Artifact>,
+    pub manifest: Manifest,
+}
+
+impl Session {
+    /// Create a CPU PJRT client and eagerly compile the artifacts for
+    /// `config` (all three modes). Compilation happens once; the
+    /// request path only executes.
+    pub fn load(artifacts_dir: &Path, config: &str) -> Result<Session> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut session = Session { client, artifacts: BTreeMap::new(), manifest };
+        for mode in ["infer", "train_unsup", "train_sup"] {
+            session.compile(config, mode)?;
+        }
+        Ok(session)
+    }
+
+    /// Load with only specific modes compiled (e.g. just "infer" for
+    /// the edge server).
+    pub fn load_modes(artifacts_dir: &Path, config: &str, modes: &[&str]) -> Result<Session> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut session = Session { client, artifacts: BTreeMap::new(), manifest };
+        for mode in modes {
+            session.compile(config, mode)?;
+        }
+        Ok(session)
+    }
+
+    fn compile(&mut self, config: &str, mode: &str) -> Result<()> {
+        let spec = self.manifest.get(config, mode)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.key))?;
+        self.artifacts.insert(
+            spec.key.clone(),
+            Artifact {
+                spec,
+                exe,
+                client: self.client.clone(),
+                exec_time: std::cell::Cell::new(Duration::ZERO),
+                exec_count: std::cell::Cell::new(0),
+            },
+        );
+        Ok(())
+    }
+
+    pub fn artifact(&self, config: &str, mode: &str) -> Result<&Artifact> {
+        let key = format!("{config}_{mode}");
+        self.artifacts
+            .get(&key)
+            .with_context(|| format!("artifact {key} not compiled in this session"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_accessors() {
+        let f = Tensor::F32(vec![1.0, 2.0]);
+        assert_eq!(f.len(), 2);
+        assert!(!f.is_empty());
+        assert_eq!(f.as_f32().unwrap(), &[1.0, 2.0]);
+        let i = Tensor::I32(vec![3]);
+        assert_eq!(i.len(), 1);
+        assert!(i.as_f32().is_err());
+        assert!(Tensor::F32(vec![]).is_empty());
+    }
+    // PJRT-backed Artifact/Session tests live in rust/tests/integration.rs.
+}

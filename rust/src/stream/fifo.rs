@@ -1,0 +1,314 @@
+//! Bounded FIFO channel with backpressure + instrumentation — the
+//! `hls::stream<T>` analogue.
+//!
+//! Semantics match the hardware stream: fixed capacity chosen at
+//! construction, writers block when full (backpressure), readers block
+//! when empty, and the channel records high-water occupancy and stall
+//! counts so [`super::depth`] can size depths the way the paper's
+//! C/RTL cosimulation does.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Error returned by `recv` when the channel is closed and drained.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecvError;
+
+/// Instrumentation counters for one FIFO.
+#[derive(Debug, Default)]
+pub struct FifoStats {
+    /// Total elements pushed.
+    pub pushes: AtomicU64,
+    /// Total elements popped.
+    pub pops: AtomicU64,
+    /// Times a writer found the FIFO full and had to wait.
+    pub write_stalls: AtomicU64,
+    /// Times a reader found the FIFO empty and had to wait.
+    pub read_stalls: AtomicU64,
+    /// Maximum occupancy ever observed (high-water mark).
+    pub high_water: AtomicU64,
+}
+
+impl FifoStats {
+    pub fn snapshot(&self) -> FifoStatsSnapshot {
+        FifoStatsSnapshot {
+            pushes: self.pushes.load(Ordering::Relaxed),
+            pops: self.pops.load(Ordering::Relaxed),
+            write_stalls: self.write_stalls.load(Ordering::Relaxed),
+            read_stalls: self.read_stalls.load(Ordering::Relaxed),
+            high_water: self.high_water.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of [`FifoStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FifoStatsSnapshot {
+    pub pushes: u64,
+    pub pops: u64,
+    pub write_stalls: u64,
+    pub read_stalls: u64,
+    pub high_water: u64,
+}
+
+struct Inner<T> {
+    q: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+    stats: FifoStats,
+}
+
+struct State<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer multi-consumer FIFO.
+///
+/// Clone to share; `close()` (or dropping all senders via explicit
+/// close) wakes blocked readers, which then drain and get `RecvError`.
+pub struct Fifo<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Fifo<T> {
+    fn clone(&self) -> Self {
+        Fifo { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Fifo<T> {
+    /// Create with fixed capacity (>= 1, like an HLS stream depth).
+    pub fn with_capacity(capacity: usize) -> Fifo<T> {
+        assert!(capacity >= 1, "FIFO depth must be >= 1");
+        Fifo {
+            inner: Arc::new(Inner {
+                q: Mutex::new(State { buf: VecDeque::with_capacity(capacity), closed: false }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                capacity,
+                stats: FifoStats::default(),
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+
+    /// Blocking push (backpressure). Returns Err(v) if the FIFO closed.
+    pub fn send(&self, v: T) -> Result<(), T> {
+        let inner = &*self.inner;
+        let mut st = inner.q.lock().unwrap();
+        if st.buf.len() >= inner.capacity && !st.closed {
+            inner.stats.write_stalls.fetch_add(1, Ordering::Relaxed);
+            while st.buf.len() >= inner.capacity && !st.closed {
+                st = inner.not_full.wait(st).unwrap();
+            }
+        }
+        if st.closed {
+            return Err(v);
+        }
+        st.buf.push_back(v);
+        let occ = st.buf.len() as u64;
+        inner.stats.pushes.fetch_add(1, Ordering::Relaxed);
+        inner.stats.high_water.fetch_max(occ, Ordering::Relaxed);
+        drop(st);
+        inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop. `Err(RecvError)` only after close + drain.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let inner = &*self.inner;
+        let mut st = inner.q.lock().unwrap();
+        if st.buf.is_empty() && !st.closed {
+            inner.stats.read_stalls.fetch_add(1, Ordering::Relaxed);
+            while st.buf.is_empty() && !st.closed {
+                st = inner.not_empty.wait(st).unwrap();
+            }
+        }
+        match st.buf.pop_front() {
+            Some(v) => {
+                inner.stats.pops.fetch_add(1, Ordering::Relaxed);
+                drop(st);
+                inner.not_full.notify_one();
+                Ok(v)
+            }
+            None => Err(RecvError), // closed and drained
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_recv(&self) -> Option<T> {
+        let inner = &*self.inner;
+        let mut st = inner.q.lock().unwrap();
+        let v = st.buf.pop_front();
+        if v.is_some() {
+            inner.stats.pops.fetch_add(1, Ordering::Relaxed);
+            inner.not_full.notify_one();
+        }
+        v
+    }
+
+    /// Close the channel: senders fail, readers drain then stop.
+    pub fn close(&self) {
+        let inner = &*self.inner;
+        let mut st = inner.q.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        inner.not_empty.notify_all();
+        inner.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.q.lock().unwrap().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> FifoStatsSnapshot {
+        self.inner.stats.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let f = Fifo::with_capacity(4);
+        for i in 0..4 {
+            f.send(i).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(f.recv().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn backpressure_blocks_writer_until_reader_drains() {
+        let f = Fifo::with_capacity(2);
+        f.send(1).unwrap();
+        f.send(2).unwrap();
+        let f2 = f.clone();
+        let h = thread::spawn(move || {
+            f2.send(3).unwrap(); // must block until a pop
+            f2.stats().write_stalls
+        });
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(f.len(), 2, "writer should be blocked");
+        assert_eq!(f.recv().unwrap(), 1);
+        let stalls = h.join().unwrap();
+        assert!(stalls >= 1);
+        assert_eq!(f.recv().unwrap(), 2);
+        assert_eq!(f.recv().unwrap(), 3);
+    }
+
+    #[test]
+    fn reader_blocks_until_data() {
+        let f: Fifo<u32> = Fifo::with_capacity(1);
+        let f2 = f.clone();
+        let h = thread::spawn(move || f2.recv().unwrap());
+        thread::sleep(Duration::from_millis(20));
+        f.send(7).unwrap();
+        assert_eq!(h.join().unwrap(), 7);
+        assert!(f.stats().read_stalls >= 1);
+    }
+
+    #[test]
+    fn close_drains_then_errors() {
+        let f = Fifo::with_capacity(4);
+        f.send(1).unwrap();
+        f.send(2).unwrap();
+        f.close();
+        assert_eq!(f.recv(), Ok(1));
+        assert_eq!(f.recv(), Ok(2));
+        assert_eq!(f.recv(), Err(RecvError));
+        assert_eq!(f.send(3), Err(3));
+    }
+
+    #[test]
+    fn close_wakes_blocked_reader() {
+        let f: Fifo<u32> = Fifo::with_capacity(1);
+        let f2 = f.clone();
+        let h = thread::spawn(move || f2.recv());
+        thread::sleep(Duration::from_millis(20));
+        f.close();
+        assert_eq!(h.join().unwrap(), Err(RecvError));
+    }
+
+    #[test]
+    fn close_wakes_blocked_writer() {
+        let f = Fifo::with_capacity(1);
+        f.send(1).unwrap();
+        let f2 = f.clone();
+        let h = thread::spawn(move || f2.send(2));
+        thread::sleep(Duration::from_millis(20));
+        f.close();
+        assert_eq!(h.join().unwrap(), Err(2));
+    }
+
+    #[test]
+    fn high_water_tracks_max_occupancy() {
+        let f = Fifo::with_capacity(8);
+        for i in 0..5 {
+            f.send(i).unwrap();
+        }
+        f.recv().unwrap();
+        f.send(9).unwrap();
+        assert_eq!(f.stats().high_water, 5);
+    }
+
+    #[test]
+    fn mpmc_sums_consistent() {
+        let f = Fifo::with_capacity(16);
+        let mut producers = vec![];
+        for p in 0..4 {
+            let f = f.clone();
+            producers.push(thread::spawn(move || {
+                for i in 0..1000u64 {
+                    f.send(p * 1000 + i).unwrap();
+                }
+            }));
+        }
+        let mut consumers = vec![];
+        for _ in 0..3 {
+            let f = f.clone();
+            consumers.push(thread::spawn(move || {
+                let mut sum = 0u64;
+                while let Ok(v) = f.recv() {
+                    sum += v;
+                }
+                sum
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        f.close();
+        let total: u64 = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        let expect: u64 = (0..4u64).map(|p| (0..1000).map(|i| p * 1000 + i).sum::<u64>()).sum();
+        assert_eq!(total, expect);
+        let s = f.stats();
+        assert_eq!(s.pushes, 4000);
+        assert_eq!(s.pops, 4000);
+    }
+
+    #[test]
+    #[should_panic(expected = "depth must be >= 1")]
+    fn zero_capacity_rejected() {
+        let _ = Fifo::<u8>::with_capacity(0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Stream-based dataflow runtime — the software realization of the
+//! paper's accelerator architecture (Figs. 2-3).
+//!
+//! Vitis HLS compiles `#pragma HLS DATAFLOW` + `hls::stream` into
+//! concurrently running stages connected by fixed-depth FIFOs with
+//! backpressure. This module is that execution model in rust:
+//!
+//! - [`fifo`] — bounded FIFO channels with occupancy/stall
+//!   instrumentation (the `hls::stream` analogue);
+//! - [`pipeline`] — task-level pipeline builder: one thread per stage,
+//!   stages decoupled by FIFOs (the `DATAFLOW` analogue), plus a
+//!   sequential executor over the *same* stage functions (Fig. 3 left:
+//!   the unoptimized baseline for the ablation bench);
+//! - [`depth`] — discrete-event FIFO depth analysis: the software
+//!   mirror of the paper's C/RTL cosimulation step that "finalizes FIFO
+//!   depths and confirms that no deadlocks can occur".
+
+pub mod depth;
+pub mod fifo;
+pub mod pipeline;
+
+pub use fifo::{Fifo, FifoStats, RecvError};
+pub use pipeline::{Pipeline, PipelineReport, StageReport};

@@ -1,0 +1,311 @@
+//! Task-level pipeline — the `#pragma HLS DATAFLOW` analogue.
+//!
+//! A pipeline is a chain of stages, each running on its own thread,
+//! decoupled by bounded [`Fifo`]s: a stage starts processing as soon as
+//! partial data is available and stalls only on FIFO backpressure,
+//! exactly like the paper's Fig. 3 (right). The same stage closures can
+//! also be run by [`Pipeline::run_sequential`], which models Fig. 3
+//! (left): each item traverses all stages before the next enters — the
+//! ablation baseline for the paper's "~70% improvement" claim
+//! (`benches/ablation_dataflow.rs`).
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::fifo::{Fifo, FifoStatsSnapshot};
+
+/// Per-stage execution report.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub name: String,
+    pub items: u64,
+    /// Time spent inside the stage function (service time).
+    pub busy: Duration,
+    /// Wall time of the stage thread from first to last item.
+    pub wall: Duration,
+    /// Stats of the stage's *output* FIFO (None for the sink).
+    pub output_fifo: Option<FifoStatsSnapshot>,
+}
+
+impl StageReport {
+    /// Fraction of wall time the stage was doing useful work.
+    pub fn utilization(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.busy.as_secs_f64() / self.wall.as_secs_f64()
+    }
+}
+
+/// Whole-pipeline report.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub stages: Vec<StageReport>,
+    pub items: u64,
+    pub wall: Duration,
+}
+
+impl PipelineReport {
+    pub fn throughput_items_per_sec(&self) -> f64 {
+        self.items as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// The stage limiting throughput (highest busy time).
+    pub fn bottleneck(&self) -> Option<&StageReport> {
+        self.stages.iter().max_by(|a, b| a.busy.cmp(&b.busy))
+    }
+}
+
+/// Builder for a dataflow pipeline. `T` is the element type currently
+/// flowing out of the last registered stage.
+pub struct Pipeline<T: Send + 'static> {
+    rx: Fifo<T>,
+    handles: Vec<thread::JoinHandle<StageReport>>,
+}
+
+impl<T: Send + 'static> Pipeline<T> {
+    /// Start a pipeline from an iterator source. `depth` is the source
+    /// FIFO depth (the "input stream" of the accelerator).
+    pub fn source<I>(name: &str, depth: usize, items: I) -> Pipeline<T>
+    where
+        I: IntoIterator<Item = T> + Send + 'static,
+    {
+        let fifo = Fifo::with_capacity(depth);
+        let out = fifo.clone();
+        let name = name.to_string();
+        let h = thread::spawn(move || {
+            let start = Instant::now();
+            let mut n = 0u64;
+            let mut busy = Duration::ZERO;
+            for v in items {
+                let t0 = Instant::now();
+                n += 1;
+                busy += t0.elapsed();
+                if out.send(v).is_err() {
+                    break;
+                }
+            }
+            out.close();
+            StageReport {
+                name,
+                items: n,
+                busy,
+                wall: start.elapsed(),
+                output_fifo: Some(out.stats()),
+            }
+        });
+        Pipeline { rx: fifo, handles: vec![h] }
+    }
+
+    /// Add a map stage on its own thread, connected by a FIFO of the
+    /// given depth.
+    pub fn stage<U, F>(self, name: &str, depth: usize, mut f: F) -> Pipeline<U>
+    where
+        U: Send + 'static,
+        F: FnMut(T) -> U + Send + 'static,
+    {
+        let out = Fifo::with_capacity(depth);
+        let out_w = out.clone();
+        let rx = self.rx;
+        let name = name.to_string();
+        let mut handles = self.handles;
+        handles.push(thread::spawn(move || {
+            let start = Instant::now();
+            let mut n = 0u64;
+            let mut busy = Duration::ZERO;
+            while let Ok(v) = rx.recv() {
+                let t0 = Instant::now();
+                let u = f(v);
+                busy += t0.elapsed();
+                n += 1;
+                if out_w.send(u).is_err() {
+                    break;
+                }
+            }
+            out_w.close();
+            StageReport {
+                name,
+                items: n,
+                busy,
+                wall: start.elapsed(),
+                output_fifo: Some(out_w.stats()),
+            }
+        }));
+        Pipeline { rx: out, handles }
+    }
+
+    /// Terminate with a sink stage on the calling thread; joins all
+    /// stage threads and returns the report.
+    pub fn sink<F>(self, name: &str, mut f: F) -> PipelineReport
+    where
+        F: FnMut(T),
+    {
+        let start = Instant::now();
+        let mut n = 0u64;
+        let mut busy = Duration::ZERO;
+        while let Ok(v) = self.rx.recv() {
+            let t0 = Instant::now();
+            f(v);
+            busy += t0.elapsed();
+            n += 1;
+        }
+        let sink_report = StageReport {
+            name: name.to_string(),
+            items: n,
+            busy,
+            wall: start.elapsed(),
+            output_fifo: None,
+        };
+        let mut stages: Vec<StageReport> =
+            self.handles.into_iter().map(|h| h.join().expect("stage panicked")).collect();
+        stages.push(sink_report);
+        PipelineReport { stages, items: n, wall: start.elapsed() }
+    }
+
+    /// Collect all outputs into a Vec (convenience sink).
+    pub fn collect(self) -> (Vec<T>, PipelineReport) {
+        let mut out = Vec::new();
+        // Drain on this thread; cannot use `sink` directly because the
+        // closure borrows `out`.
+        let start = Instant::now();
+        let mut n = 0u64;
+        while let Ok(v) = self.rx.recv() {
+            out.push(v);
+            n += 1;
+        }
+        let mut stages: Vec<StageReport> =
+            self.handles.into_iter().map(|h| h.join().expect("stage panicked")).collect();
+        stages.push(StageReport {
+            name: "collect".into(),
+            items: n,
+            busy: Duration::ZERO,
+            wall: start.elapsed(),
+            output_fifo: None,
+        });
+        (out, PipelineReport { stages, items: n, wall: start.elapsed() })
+    }
+}
+
+/// Run the same logical stages strictly sequentially (Fig. 3 left):
+/// each item passes through every function before the next item starts.
+/// This is the paper's "initial unoptimized sequential implementation".
+pub fn run_sequential<T, F>(items: Vec<T>, mut stages: Vec<(&str, F)>) -> PipelineReport
+where
+    F: FnMut(T) -> T,
+{
+    let start = Instant::now();
+    let mut busies = vec![Duration::ZERO; stages.len()];
+    let mut n = 0u64;
+    for item in items {
+        let mut v = item;
+        for (i, (_, f)) in stages.iter_mut().enumerate() {
+            let t0 = Instant::now();
+            v = f(v);
+            busies[i] += t0.elapsed();
+        }
+        n += 1;
+    }
+    let wall = start.elapsed();
+    let reports = stages
+        .iter()
+        .zip(busies)
+        .map(|((name, _), busy)| StageReport {
+            name: name.to_string(),
+            items: n,
+            busy,
+            wall,
+            output_fifo: None,
+        })
+        .collect();
+    PipelineReport { stages: reports, items: n, wall }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_maps_in_order() {
+        let (out, rep) = Pipeline::source("src", 4, 0..100)
+            .stage("double", 4, |x: i32| x * 2)
+            .stage("inc", 4, |x: i32| x + 1)
+            .collect();
+        assert_eq!(out, (0..100).map(|x| x * 2 + 1).collect::<Vec<_>>());
+        assert_eq!(rep.items, 100);
+        assert_eq!(rep.stages.len(), 4); // src, double, inc, collect
+    }
+
+    #[test]
+    fn sink_report_counts() {
+        let mut sum = 0i64;
+        let rep = Pipeline::source("src", 2, 1..=10i64)
+            .stage("sq", 2, |x| x * x)
+            .sink("sum", |x| sum += x);
+        assert_eq!(rep.items, 10);
+        assert_eq!(sum, (1..=10i64).map(|x| x * x).sum::<i64>());
+    }
+
+    #[test]
+    fn dataflow_overlaps_stages() {
+        // Two stages each sleeping 1ms/item: sequential = ~2ms/item,
+        // dataflow = ~1ms/item. Check for a robust >1.3x speedup.
+        let n = 40;
+        let work = |x: u64| {
+            std::thread::sleep(Duration::from_millis(1));
+            x
+        };
+        let seq = run_sequential(
+            (0..n).collect(),
+            vec![("a", Box::new(work) as Box<dyn FnMut(u64) -> u64>),
+                 ("b", Box::new(work) as Box<dyn FnMut(u64) -> u64>)],
+        );
+        let (_, par) = Pipeline::source("src", 8, 0..n)
+            .stage("a", 8, work)
+            .stage("b", 8, work)
+            .collect();
+        let speedup = seq.wall.as_secs_f64() / par.wall.as_secs_f64();
+        assert!(speedup > 1.3, "dataflow speedup only {speedup:.2}x");
+    }
+
+    #[test]
+    fn bottleneck_identified() {
+        let (_, rep) = Pipeline::source("src", 4, 0..20u64)
+            .stage("fast", 4, |x| x + 1)
+            .stage("slow", 4, |x| {
+                std::thread::sleep(Duration::from_millis(2));
+                x
+            })
+            .collect();
+        assert_eq!(rep.bottleneck().unwrap().name, "slow");
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let (_, rep) = Pipeline::source("src", 4, 0..50u64)
+            .stage("s", 4, |x| x)
+            .collect();
+        for s in &rep.stages {
+            let u = s.utilization();
+            assert!((0.0..=1.0 + 1e-9).contains(&u), "{}: {u}", s.name);
+        }
+    }
+
+    #[test]
+    fn sequential_report_shapes() {
+        let rep = run_sequential(
+            vec![1, 2, 3],
+            vec![("x", Box::new(|v: i32| v) as Box<dyn FnMut(i32) -> i32>)],
+        );
+        assert_eq!(rep.items, 3);
+        assert_eq!(rep.stages.len(), 1);
+    }
+
+    #[test]
+    fn empty_source_flows_through() {
+        let (out, rep) = Pipeline::source("src", 1, Vec::<u8>::new())
+            .stage("s", 1, |x| x)
+            .collect();
+        assert!(out.is_empty());
+        assert_eq!(rep.items, 0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Property-testing helper (proptest is unavailable offline).
+//!
+//! Deterministic randomized testing on top of the shared xorshift PRNG:
+//! `prop_check` runs a property over `cases` generated inputs and, on
+//! failure, reports the seed that reproduces the failing case. Used by
+//! the invariants suites in `rust/tests/proptests.rs`.
+
+use crate::data::rng::XorShift64;
+
+/// Run `prop` over `cases` randomized cases. `gen` builds the input
+/// from a per-case PRNG. Panics with the failing case seed on failure.
+pub fn prop_check<T, G, P>(name: &str, base_seed: u64, cases: u32, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut XorShift64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64 + 1);
+        let mut rng = XorShift64::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Uniform f32 in [lo, hi).
+pub fn uniform(rng: &mut XorShift64, lo: f32, hi: f32) -> f32 {
+    lo + (hi - lo) * rng.next_f32()
+}
+
+/// Random probability-like vector (positive, sums to 1).
+pub fn prob_vec(rng: &mut XorShift64, n: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..n).map(|_| rng.next_f32() + 1e-3).collect();
+    let s: f32 = v.iter().sum();
+    for x in v.iter_mut() {
+        *x /= s;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes_good_property() {
+        prop_check(
+            "abs-nonneg",
+            1,
+            100,
+            |rng| uniform(rng, -10.0, 10.0),
+            |x| {
+                if x.abs() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\"")]
+    fn prop_check_reports_failure() {
+        prop_check("always-fails", 2, 10, |rng| rng.next_f32(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn prob_vec_sums_to_one() {
+        let mut rng = XorShift64::new(3);
+        let v = prob_vec(&mut rng, 17);
+        assert_eq!(v.len(), 17);
+        let s: f32 = v.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(v.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut rng = XorShift64::new(4);
+        for _ in 0..100 {
+            let x = uniform(&mut rng, 2.0, 3.0);
+            assert!((2.0..3.0).contains(&x));
+        }
+    }
+}

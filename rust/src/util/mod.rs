@@ -1,0 +1,29 @@
+//! Small substrates the offline environment forces us to own: a JSON
+//! parser/writer (manifest + configs + reports) and a CLI argument
+//! parser (no serde/clap in the vendored closure).
+
+pub mod cli;
+pub mod json;
+
+/// Format a float with engineering-friendly precision (tables).
+pub fn fmt_sig(v: f64, sig: usize) -> String {
+    if v == 0.0 || !v.is_finite() {
+        return format!("{v}");
+    }
+    let mag = v.abs().log10().floor() as i32;
+    let decimals = (sig as i32 - 1 - mag).max(0) as usize;
+    format!("{v:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_sig_basics() {
+        assert_eq!(fmt_sig(1234.6, 3), "1235");
+        assert_eq!(fmt_sig(0.0123456, 3), "0.0123");
+        assert_eq!(fmt_sig(1.4972, 4), "1.497");
+        assert_eq!(fmt_sig(0.0, 3), "0");
+    }
+}

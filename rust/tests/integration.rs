@@ -1,0 +1,254 @@
+//! Integration tests over the PJRT runtime: the AOT artifacts (JAX +
+//! Pallas, lowered to HLO text) executed from rust must agree with the
+//! pure-rust reference network on identical parameters and data.
+//!
+//! Requires `make artifacts` (the repo's build flow runs it first).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use bcpnn_accel::bcpnn::network::argmax;
+use bcpnn_accel::bcpnn::Network;
+use bcpnn_accel::config::by_name;
+use bcpnn_accel::coordinator::driver::batches;
+use bcpnn_accel::coordinator::{Driver, InferenceServer, ServerConfig, TrainOptions};
+use bcpnn_accel::data::synth;
+use bcpnn_accel::runtime::{Manifest, Session};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn require_artifacts() {
+    assert!(
+        artifacts_dir().join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn manifest_covers_default_configs() {
+    require_artifacts();
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    for cfg in ["tiny", "small", "edge"] {
+        for mode in ["infer", "train_unsup", "train_sup"] {
+            let a = m.get(cfg, mode).unwrap();
+            assert!(a.file.exists(), "{:?}", a.file);
+        }
+    }
+}
+
+#[test]
+fn infer_artifact_matches_rust_reference() {
+    require_artifacts();
+    let cfg = by_name("tiny").unwrap();
+    let session = Session::load_modes(&artifacts_dir(), "tiny", &["infer"]).unwrap();
+    let driver = Driver::new(session, "tiny", 7).unwrap();
+
+    // Mirror the driver's params into the pure-rust network.
+    let mut net = Network::new(cfg.clone(), 7);
+    net.params = driver.params.clone();
+    net.refresh_mask();
+
+    let d = synth::generate(cfg.img_side, cfg.n_classes, cfg.batch, 3, 0.15);
+    let probs = driver.infer_batch(&d.images).unwrap();
+    assert_eq!(probs.len(), cfg.batch);
+    for (img, p_jax) in d.images.iter().zip(&probs) {
+        let p_rust = net.infer(img);
+        let diff = max_abs_diff(p_jax, &p_rust);
+        assert!(diff < 1e-4, "probs diverge: {diff}");
+        assert!((p_jax.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn train_unsup_artifact_matches_rust_reference() {
+    require_artifacts();
+    let cfg = by_name("tiny").unwrap();
+    let session = Session::load_modes(&artifacts_dir(), "tiny", &["train_unsup"]).unwrap();
+    let mut driver = Driver::new(session, "tiny", 11).unwrap();
+
+    let mut net = Network::new(cfg.clone(), 11);
+    net.params = driver.params.clone();
+    net.refresh_mask();
+
+    let d = synth::generate(cfg.img_side, cfg.n_classes, cfg.batch, 5, 0.15);
+    driver.unsup_batch(&d.images).unwrap();
+    for img in &d.images {
+        net.train_unsup_step(img);
+    }
+    assert!(max_abs_diff(&driver.params.pi, &net.params.pi) < 1e-5, "pi");
+    assert!(max_abs_diff(&driver.params.pj, &net.params.pj) < 1e-5, "pj");
+    assert!(max_abs_diff(&driver.params.pij, &net.params.pij) < 1e-5, "pij");
+    // Weights go through log(): slightly looser.
+    assert!(max_abs_diff(&driver.params.wij, &net.params.wij) < 1e-3, "wij");
+    assert!(max_abs_diff(&driver.params.bj, &net.params.bj) < 1e-4, "bj");
+}
+
+#[test]
+fn train_sup_artifact_matches_rust_reference() {
+    require_artifacts();
+    let cfg = by_name("tiny").unwrap();
+    let session =
+        Session::load_modes(&artifacts_dir(), "tiny", &["train_sup"]).unwrap();
+    let mut driver = Driver::new(session, "tiny", 13).unwrap();
+
+    let mut net = Network::new(cfg.clone(), 13);
+    net.params = driver.params.clone();
+    net.refresh_mask();
+
+    let d = synth::generate(cfg.img_side, cfg.n_classes, cfg.batch, 9, 0.15);
+    driver.sup_batch(&d.images, &d.labels).unwrap();
+    for (img, &l) in d.images.iter().zip(&d.labels) {
+        net.train_sup_step(img, l as usize);
+    }
+    assert!(max_abs_diff(&driver.params.qik, &net.params.qik) < 1e-5, "qik");
+    assert!(max_abs_diff(&driver.params.who, &net.params.who) < 1e-3, "who");
+    assert!(max_abs_diff(&driver.params.bk, &net.params.bk) < 1e-4, "bk");
+}
+
+#[test]
+fn driver_end_to_end_learning_beats_chance() {
+    require_artifacts();
+    let cfg = by_name("tiny").unwrap();
+    let session = Session::load(&artifacts_dir(), "tiny").unwrap();
+    let mut driver = Driver::new(session, "tiny", 42).unwrap();
+
+    let data = synth::generate(cfg.img_side, cfg.n_classes, 192, 11, 0.15);
+    let (train, test) = data.split(128);
+    let out = driver
+        .train(&train, &test, &TrainOptions { epochs: 2, ..Default::default() })
+        .unwrap();
+    let chance = 1.0 / cfg.n_classes as f64;
+    assert!(
+        out.test_acc > chance + 0.15,
+        "test acc {} vs chance {chance}",
+        out.test_acc
+    );
+    assert!(out.unsup.count > 0 && out.infer.count > 0);
+}
+
+#[test]
+fn driver_with_structural_plasticity_trains() {
+    require_artifacts();
+    let cfg = by_name("tiny").unwrap();
+    let session = Session::load(&artifacts_dir(), "tiny").unwrap();
+    let mut driver = Driver::new(session, "tiny", 21).unwrap();
+
+    let data = synth::generate(cfg.img_side, cfg.n_classes, 192, 17, 0.15);
+    let (train, test) = data.split(128);
+    let out = driver
+        .train(
+            &train,
+            &test,
+            &TrainOptions {
+                epochs: 2,
+                structural: true,
+                struct_interval: 2,
+                seed: 21,
+            },
+        )
+        .unwrap();
+    assert!(out.rewire_passes > 0, "structural plasticity never ran");
+    // Mask column sparsity preserved through rewiring + device roundtrips.
+    for h in 0..cfg.hc_h {
+        let active: f32 = (0..cfg.hc_in())
+            .map(|i| driver.params.mask_hc[i * cfg.hc_h + h])
+            .sum();
+        assert_eq!(active as usize, cfg.nact_hi);
+    }
+    let chance = 1.0 / cfg.n_classes as f64;
+    assert!(out.test_acc > chance, "struct run below chance");
+}
+
+#[test]
+fn inference_server_serves_batched_requests() {
+    require_artifacts();
+    let cfg = by_name("tiny").unwrap();
+    let dir = artifacts_dir();
+    let server = InferenceServer::start(
+        move || {
+            let session = Session::load_modes(&dir, "tiny", &["infer"])?;
+            Driver::new(session, "tiny", 1)
+        },
+        ServerConfig { queue_depth: 64, flush_timeout: Duration::from_millis(2) },
+    )
+    .unwrap();
+
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 100, 3, 0.15);
+    let handles: Vec<_> = d
+        .images
+        .iter()
+        .map(|img| server.submit(img.clone()).unwrap())
+        .collect();
+    for rx in &handles {
+        let probs = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(probs.len(), cfg.n_out());
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        assert!(argmax(&probs) < cfg.n_out());
+    }
+    let rep = server.shutdown();
+    assert_eq!(rep.served, 100);
+    assert!(rep.batches >= (100 / cfg.batch) as u64);
+    assert!(rep.mean_fill > 1.0, "no batching happened: {}", rep.mean_fill);
+    assert!(rep.latency.p99_ms >= rep.latency.p50_ms);
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_accuracy() {
+    // The deployment flow: train -> save -> load into a fresh driver ->
+    // identical predictions.
+    require_artifacts();
+    let cfg = by_name("tiny").unwrap();
+    let session = Session::load(&artifacts_dir(), "tiny").unwrap();
+    let mut driver = Driver::new(session, "tiny", 31).unwrap();
+    let data = synth::generate(cfg.img_side, cfg.n_classes, 192, 33, 0.15);
+    let (train, test) = data.split(128);
+    driver
+        .train(&train, &test, &TrainOptions { epochs: 1, ..Default::default() })
+        .unwrap();
+    let acc_before = driver.evaluate(&test).unwrap();
+
+    let path = std::env::temp_dir().join(format!("bcpnn_it_{}.ckpt", std::process::id()));
+    bcpnn_accel::bcpnn::checkpoint::save(&path, &cfg, &driver.params).unwrap();
+    let (loaded_cfg, params) = bcpnn_accel::bcpnn::checkpoint::load(&path).unwrap();
+    assert_eq!(loaded_cfg.name, "tiny");
+
+    let session2 = Session::load_modes(&artifacts_dir(), "tiny", &["infer"]).unwrap();
+    let mut fresh = Driver::new(session2, "tiny", 999).unwrap();
+    fresh.set_params(params);
+    let acc_after = fresh.evaluate(&test).unwrap();
+    assert!((acc_after - acc_before).abs() < 1e-9,
+            "accuracy changed across checkpoint: {acc_before} -> {acc_after}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn server_startup_failure_reported() {
+    let err = InferenceServer::start(
+        || anyhow::bail!("boom"),
+        ServerConfig::default(),
+    )
+    .err()
+    .map(|e| e.to_string())
+    .unwrap_or_default();
+    assert!(err.contains("boom"), "{err}");
+}
+
+#[test]
+fn batches_helper_and_driver_eval_agree() {
+    require_artifacts();
+    let cfg = by_name("tiny").unwrap();
+    let session = Session::load_modes(&artifacts_dir(), "tiny", &["infer"]).unwrap();
+    let driver = Driver::new(session, "tiny", 5).unwrap();
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 50, 5, 0.15);
+    // evaluate() must handle the short remainder batch (50 = 3*16 + 2).
+    let acc = driver.evaluate(&d).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    let covered: usize = batches(&d, cfg.batch).map(|(i, _)| i.len()).sum();
+    assert_eq!(covered, 50);
+}

@@ -1,0 +1,287 @@
+//! Property-based tests on coordinator/substrate invariants, using the
+//! in-crate `testing::prop_check` helper (deterministic xorshift-driven
+//! cases; failing seeds are reported for reproduction).
+
+use bcpnn_accel::bcpnn::{Network, Params, StructuralPlasticity};
+use bcpnn_accel::config::{by_name, ModelConfig};
+use bcpnn_accel::data::rng::XorShift64;
+use bcpnn_accel::data::synth;
+use bcpnn_accel::fpga::device::{FpgaDevice, KernelVersion};
+use bcpnn_accel::fpga::{estimator, timing};
+use bcpnn_accel::stream::depth::{simulate, StageSpec};
+use bcpnn_accel::stream::Fifo;
+use bcpnn_accel::testing::{prob_vec, prop_check, uniform};
+
+fn random_config(rng: &mut XorShift64) -> ModelConfig {
+    let mut cfg = by_name("tiny").unwrap();
+    cfg.name = "prop".into();
+    cfg.img_side = 4 + rng.next_range(8); // 4..11
+    cfg.hc_h = 1 + rng.next_range(6);
+    cfg.mc_h = 2 + rng.next_range(15);
+    cfg.n_classes = 2 + rng.next_range(5);
+    cfg.nact_hi = 1 + rng.next_range(cfg.hc_in());
+    cfg.alpha = uniform(rng, 1e-3, 0.3);
+    cfg.validate().unwrap();
+    cfg
+}
+
+#[test]
+fn prop_hidden_activity_is_distribution() {
+    prop_check(
+        "hidden-activity-distribution",
+        0xA1,
+        25,
+        |rng| {
+            let cfg = random_config(rng);
+            let seed = rng.next_u64();
+            let img: Vec<f32> = (0..cfg.hc_in()).map(|_| rng.next_f32()).collect();
+            (cfg, seed, img)
+        },
+        |(cfg, seed, img)| {
+            let net = Network::new(cfg.clone(), *seed);
+            let (_, y) = net.hidden_activity(img);
+            for (h, hc) in y.chunks(cfg.mc_h).enumerate() {
+                let s: f32 = hc.iter().sum();
+                if (s - 1.0).abs() > 1e-4 {
+                    return Err(format!("HC {h} sums to {s}"));
+                }
+                if hc.iter().any(|v| !v.is_finite() || *v < 0.0) {
+                    return Err(format!("HC {h} has invalid probs"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_traces_stay_in_unit_interval_under_training() {
+    prop_check(
+        "traces-unit-interval",
+        0xB2,
+        15,
+        |rng| {
+            let cfg = random_config(rng);
+            let seed = rng.next_u64();
+            (cfg, seed)
+        },
+        |(cfg, seed)| {
+            let mut net = Network::new(cfg.clone(), *seed);
+            let d = synth::generate(cfg.img_side, cfg.n_classes, 30, *seed, 0.2);
+            for img in &d.images {
+                net.train_unsup_step(img);
+            }
+            let p = &net.params;
+            for (name, arr) in [("pi", &p.pi), ("pj", &p.pj), ("pij", &p.pij)] {
+                if arr.iter().any(|&v| v <= 0.0 || v >= 1.0) {
+                    return Err(format!("{name} left (0,1)"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rewiring_preserves_sparsity() {
+    prop_check(
+        "rewire-sparsity",
+        0xC3,
+        10,
+        |rng| {
+            let cfg = random_config(rng);
+            let seed = rng.next_u64();
+            (cfg, seed)
+        },
+        |(cfg, seed)| {
+            let mut net = Network::new(cfg.clone(), *seed);
+            let d = synth::generate(cfg.img_side, cfg.n_classes, 40, *seed, 0.2);
+            for img in &d.images {
+                net.train_unsup_step(img);
+            }
+            let sp = StructuralPlasticity::default();
+            for _ in 0..5 {
+                sp.rewire(&mut net.params, cfg);
+            }
+            for h in 0..cfg.hc_h {
+                let active: f32 = (0..cfg.hc_in())
+                    .map(|i| net.params.mask_hc[i * cfg.hc_h + h])
+                    .sum();
+                if active as usize != cfg.nact_hi {
+                    return Err(format!(
+                        "HC {h}: {} active != nact_hi {}",
+                        active, cfg.nact_hi
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_params_roundtrip_mask_expansion() {
+    prop_check(
+        "mask-expansion-consistent",
+        0xD4,
+        20,
+        |rng| {
+            let cfg = random_config(rng);
+            let seed = rng.next_u64();
+            (cfg, seed)
+        },
+        |(cfg, seed)| {
+            let p = Params::init(cfg, *seed);
+            let m = p.expand_mask(cfg);
+            let n_h = cfg.n_h();
+            for i in (0..cfg.n_in()).step_by(3) {
+                for j in (0..n_h).step_by(5) {
+                    let hc = p.mask_hc[(i / cfg.mc_in) * cfg.hc_h + j / cfg.mc_h];
+                    if m[i * n_h + j] != hc {
+                        return Err(format!("mismatch at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_estimator_monotone_in_model_size() {
+    prop_check(
+        "estimator-monotone",
+        0xE5,
+        20,
+        |rng| (random_config(rng),),
+        |(cfg,)| {
+            let dev = FpgaDevice::u55c();
+            let i = estimator::estimate(cfg, KernelVersion::Infer, &dev);
+            let t = estimator::estimate(cfg, KernelVersion::Train, &dev);
+            let s = estimator::estimate(cfg, KernelVersion::Struct, &dev);
+            if !(i.luts <= t.luts && t.luts <= s.luts) {
+                return Err("LUT ordering broken".into());
+            }
+            if !(i.brams <= t.brams && t.brams <= s.brams) {
+                return Err("BRAM ordering broken".into());
+            }
+            let mut bigger = cfg.clone();
+            bigger.mc_h *= 2;
+            let t2 = estimator::estimate(&bigger, KernelVersion::Train, &dev);
+            if t2.brams < t.brams {
+                return Err("BRAM decreased with larger hidden layer".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_latency_positive_and_ordered() {
+    prop_check(
+        "latency-ordered",
+        0xF6,
+        20,
+        |rng| (random_config(rng),),
+        |(cfg,)| {
+            let dev = FpgaDevice::u55c();
+            let i = timing::latency_ms(cfg, KernelVersion::Infer, &dev);
+            let t = timing::latency_ms(cfg, KernelVersion::Train, &dev);
+            if !(i > 0.0 && t > 0.0) {
+                return Err("non-positive latency".into());
+            }
+            if t < i {
+                return Err(format!("train {t} faster than infer {i}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fifo_preserves_sequence_under_random_ops() {
+    prop_check(
+        "fifo-sequence",
+        0x17,
+        30,
+        |rng| {
+            let n = 1 + rng.next_range(200);
+            let cap = 1 + rng.next_range(16);
+            let vals: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            (vals, cap)
+        },
+        |(vals, cap)| {
+            let f = Fifo::with_capacity(*cap);
+            let tx = f.clone();
+            let vals2 = vals.clone();
+            let h = std::thread::spawn(move || {
+                for v in vals2 {
+                    tx.send(v).unwrap();
+                }
+                tx.close();
+            });
+            let mut got = Vec::new();
+            while let Ok(v) = f.recv() {
+                got.push(v);
+            }
+            h.join().unwrap();
+            if &got != vals {
+                return Err("order or content not preserved".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_depth_sim_deeper_never_slower() {
+    prop_check(
+        "depth-monotone",
+        0x28,
+        15,
+        |rng| {
+            let n_stages = 2 + rng.next_range(4);
+            let stages: Vec<StageSpec> = (0..n_stages)
+                .map(|i| {
+                    StageSpec::streaming(&format!("s{i}"), 1 + rng.next_range(8) as u64)
+                })
+                .collect();
+            let depths: Vec<usize> =
+                (0..n_stages - 1).map(|_| 1 + rng.next_range(8)).collect();
+            let items = 20 + rng.next_range(60) as u64;
+            (stages, depths, items)
+        },
+        |(stages, depths, items)| {
+            let shallow = simulate(stages, depths, *items);
+            let deep: Vec<usize> = depths.iter().map(|d| d * 4).collect();
+            let deeper = simulate(stages, &deep, *items);
+            if deeper.total_cycles > shallow.total_cycles {
+                return Err(format!(
+                    "deeper FIFOs slower: {} > {}",
+                    deeper.total_cycles, shallow.total_cycles
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_prob_vec_valid() {
+    prop_check(
+        "prob-vec",
+        0x39,
+        50,
+        |rng| {
+            let n = 1 + rng.next_range(64);
+            prob_vec(rng, n)
+        },
+        |v| {
+            let s: f32 = v.iter().sum();
+            if (s - 1.0).abs() > 1e-4 {
+                return Err(format!("sum {s}"));
+            }
+            Ok(())
+        },
+    );
+}
