@@ -1,0 +1,124 @@
+//! Cluster scaling bench: throughput at 1/2/4/8 shards.
+//!
+//!     cargo bench --bench cluster_scaling
+//!
+//! Two kinds of rows (same convention as the other benches):
+//!
+//!  1. **cycle-modeled** (the FPGA claim's currency): each shard's
+//!     sub-config goes through the calibrated `fpga::estimator` +
+//!     `fpga::timing` device model; cluster throughput is set by the
+//!     slowest shard's bottleneck stage, exactly like the single-device
+//!     dataflow analysis. Splitting the hidden layer shrinks the
+//!     support/HBM streams per device *and* relaxes BRAM routing
+//!     pressure (higher fmax), so scaling is super-linear on
+//!     BRAM-pressured models. This section is deterministic.
+//!  2. **measured**: wall-clock throughput of the software
+//!     `ShardedExecutor` on this host (informational on low-core
+//!     machines — shard workers are real threads and need cores to
+//!     overlap, exactly like `ablation_dataflow`).
+
+use bcpnn_accel::bench_harness as bh;
+use bcpnn_accel::bcpnn::Network;
+use bcpnn_accel::cluster::{plan, ShardedExecutor};
+use bcpnn_accel::config::{by_name, ModelConfig};
+use bcpnn_accel::data::synth;
+use bcpnn_accel::fpga::device::{FpgaDevice, KernelVersion};
+use bcpnn_accel::fpga::timing;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn modeled_section(model: &str) {
+    let cfg = by_name(model).unwrap();
+    let dev = FpgaDevice::u55c();
+    println!("\n-- {model}: cycle-modeled scaling (infer build) --");
+    println!(
+        "{:<8} {:>10} {:>9} {:>12} {:>14} {:>9}",
+        "shards", "max n_h", "fmax MHz", "kernel us", "img/s (kern)", "speedup"
+    );
+    let mut base_tp = 0.0f64;
+    let mut speedup_at = [0.0f64; SHARD_COUNTS.len()];
+    for (si, &n) in SHARD_COUNTS.iter().enumerate() {
+        let p = plan(&cfg, n, KernelVersion::Infer, &dev).unwrap();
+        // Steady state: every device pipelines images; the slowest
+        // shard's bottleneck stage sets the cluster's per-image rate.
+        let worst = p
+            .shards
+            .iter()
+            .map(|s| timing::breakdown(&s.sub_cfg, KernelVersion::Infer, &dev))
+            .max_by(|a, b| a.kernel_s().partial_cmp(&b.kernel_s()).unwrap())
+            .unwrap();
+        let tp = 1.0 / worst.kernel_s();
+        if si == 0 {
+            base_tp = tp;
+        }
+        speedup_at[si] = tp / base_tp;
+        let max_nh = p.shards.iter().map(|s| s.sub_cfg.n_h()).max().unwrap();
+        println!(
+            "{:<8} {:>10} {:>9.1} {:>12.2} {:>14.0} {:>8.2}x",
+            n,
+            max_nh,
+            worst.freq_hz / 1e6,
+            worst.kernel_s() * 1e6,
+            tp,
+            speedup_at[si]
+        );
+    }
+    let s4 = speedup_at[SHARD_COUNTS.iter().position(|&n| n == 4).unwrap()];
+    println!(
+        "4-shard speedup vs 1 shard: {s4:.2}x  (>= 2x target: {})",
+        if s4 >= 2.0 { "PASS" } else { "FAIL" }
+    );
+}
+
+/// A serving-sized config for the measured section: big enough hidden
+/// layer that per-shard support work dominates queue overhead.
+fn measured_cfg() -> ModelConfig {
+    let mut cfg = by_name("small").unwrap();
+    cfg.name = "cluster-bench".into();
+    cfg.hc_h = 8;
+    cfg.mc_h = 128; // n_h = 1024
+    cfg.nact_hi = 96;
+    cfg.batch = 32;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn measured_section() {
+    let cfg = measured_cfg();
+    let dev = FpgaDevice::u55c();
+    let net = Network::new(cfg.clone(), 42);
+    let data = synth::generate(cfg.img_side, cfg.n_classes, 64, 7, 0.15);
+    println!(
+        "\n-- measured: ShardedExecutor wall-clock ({}; {} imgs/iter; host-core bound) --",
+        cfg.name,
+        data.len()
+    );
+    println!("{}", bh::header());
+    let mut base = 0.0f64;
+    for &n in &[1usize, 2, 4] {
+        let p = plan(&cfg, n, KernelVersion::Infer, &dev).unwrap();
+        let exec = ShardedExecutor::new(net.clone(), &p).unwrap();
+        let r = bh::bench_for(
+            &format!("infer_batch x{} imgs, {} shard(s)", data.len(), n),
+            std::time::Duration::from_millis(300),
+            || {
+                let out = exec.infer_batch(&data.images).unwrap();
+                std::hint::black_box(out.len());
+            },
+        );
+        let tp = r.throughput(data.len() as u64);
+        if n == 1 {
+            base = tp;
+        }
+        println!("{}  ({:.0} img/s, {:.2}x)", r.row(), tp, tp / base);
+        drop(exec);
+    }
+}
+
+fn main() {
+    println!("== cluster scaling: shard the hidden layer across devices ==");
+    for model in ["model1", "model2"] {
+        modeled_section(model);
+    }
+    measured_section();
+}

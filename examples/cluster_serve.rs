@@ -1,0 +1,161 @@
+//! Cluster serving demo: replicated sharded BCPNN inference with
+//! scheduling and a mid-stream device failure.
+//!
+//!     cargo run --release --example cluster_serve -- \
+//!         --config small --replicas 3 --shards 2 --requests 512 \
+//!         --policy least --fail 1
+//!
+//! Trains briefly (host network), deploys the trained parameters to
+//! every replica, streams requests through the cluster coordinator,
+//! kills one replica halfway, and prints the per-replica / per-shard
+//! report: the scale-out path the single-device `serve` command grows
+//! into.
+
+use std::time::Duration;
+
+use anyhow::Result;
+use bcpnn_accel::bcpnn::Network;
+use bcpnn_accel::cluster::{ClusterConfig, ClusterServer, SchedulePolicy};
+use bcpnn_accel::config::by_name;
+use bcpnn_accel::data::synth;
+use bcpnn_accel::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let name = args.get_or("config", "small").to_string();
+    let cfg = by_name(&name)?;
+    let replicas: usize = args.get_parse("replicas", 3usize)?;
+    let shards: usize = args.get_parse("shards", 2usize)?;
+    let n_requests: usize = args.get_parse("requests", 512usize)?;
+    let train_n: usize = args.get_parse("train", 128usize)?;
+    let seed: u64 = args.get_parse("seed", 42u64)?;
+    let fail_replica: i64 = args.get_parse("fail", -1i64)?;
+    let policy = match args.get_or("policy", "least") {
+        "rr" | "round-robin" => SchedulePolicy::RoundRobin,
+        _ => SchedulePolicy::LeastOutstanding,
+    };
+
+    // Train on the host, then deploy the trained net fleet-wide — the
+    // paper's train-once / serve-everywhere flow, scaled out.
+    let mut net = Network::new(cfg.clone(), seed);
+    if train_n > 0 {
+        let d = synth::generate(cfg.img_side, cfg.n_classes, train_n, seed, 0.15);
+        for img in &d.images {
+            net.train_unsup_step(img);
+        }
+        for (img, &l) in d.images.iter().zip(&d.labels) {
+            net.train_sup_step(img, l as usize);
+        }
+        println!("trained on {train_n} images (host)");
+    }
+
+    let server = ClusterServer::start_with(
+        net,
+        ClusterConfig {
+            replicas,
+            shards_per_replica: shards,
+            queue_depth: 256,
+            flush_timeout: Duration::from_millis(2),
+            policy,
+        },
+    )?;
+    let plan = server.plan();
+    println!(
+        "cluster up: {replicas} replicas x {shards} shards ({} devices), policy {policy:?}",
+        replicas * shards
+    );
+    for s in &plan.shards {
+        println!(
+            "  shard {}: HCs [{}, {})  n_h {}  BRAM {:.1}  fmax {:.0} MHz  HBM {:.1} MB",
+            s.id,
+            s.hc_lo,
+            s.hc_hi,
+            s.n_units(),
+            s.util.brams,
+            s.util.freq_mhz,
+            s.hbm_bytes as f64 / 1e6
+        );
+    }
+
+    let data = synth::generate(cfg.img_side, cfg.n_classes, n_requests, seed + 1, 0.15);
+    let mut pending = Vec::with_capacity(n_requests);
+    let mut rejected = 0usize;
+    for (i, img) in data.images.iter().enumerate() {
+        if fail_replica >= 0 && i == n_requests / 2 {
+            if server.fail_replica(fail_replica as usize) {
+                println!("-- killing replica {fail_replica} mid-stream --");
+            } else {
+                println!("-- --fail {fail_replica} out of range (replicas 0..{replicas}) --");
+            }
+        }
+        // Keep draining even if the cluster refuses new traffic (e.g.
+        // the killed replica was the last healthy one): the report at
+        // the end is the point of the demo.
+        match server.submit(img.clone()) {
+            Ok(rx) => pending.push((rx, data.labels[i])),
+            Err(e) => {
+                rejected += 1;
+                if rejected == 1 {
+                    println!("-- submissions rejected from request {i}: {e} --");
+                }
+            }
+        }
+    }
+
+    let mut agree = 0usize;
+    let mut lost = 0usize;
+    for (rx, label) in &pending {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(probs) => {
+                let pred = probs
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                if pred as u32 == *label {
+                    agree += 1;
+                }
+            }
+            Err(_) => lost += 1,
+        }
+    }
+    println!("healthy replicas at drain: {}", server.healthy_replicas());
+
+    let rep = server.shutdown();
+    println!(
+        "\nserved {} / {n_requests} requests  (re-routed {}, lost {lost}, rejected {rejected})",
+        rep.served, rep.rerouted
+    );
+    println!(
+        "cluster latency: mean {:.3} ms  p50 {:.3} ms  p99 {:.3} ms",
+        rep.latency.mean_ms, rep.latency.p50_ms, rep.latency.p99_ms
+    );
+    for r in &rep.replicas {
+        println!(
+            "replica {}: served {:>5} in {:>4} batches (fill {:.1})  p99 {:.3} ms  {}{}",
+            r.replica,
+            r.served,
+            r.batches,
+            r.mean_fill,
+            r.latency.p99_ms,
+            if r.failed { "FAILED" } else { "ok" },
+            if r.rerouted_out > 0 {
+                format!(", re-routed {} out", r.rerouted_out)
+            } else {
+                String::new()
+            }
+        );
+        for s in &r.shards {
+            println!(
+                "    shard {}: {} imgs  busy {:.1} ms  queue high-water {}",
+                s.shard,
+                s.items,
+                s.busy.as_secs_f64() * 1e3,
+                s.input_fifo.high_water
+            );
+        }
+    }
+    println!("label agreement: {agree}/{n_requests}");
+    Ok(())
+}

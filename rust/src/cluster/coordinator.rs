@@ -1,0 +1,457 @@
+//! Cluster coordinator: replicated sharded executors behind one
+//! submit() front door.
+//!
+//! Layered on `coordinator::server`: each replica runs the same
+//! dynamic-batching loop (`collect_batch`) the single-device
+//! [`InferenceServer`](crate::coordinator::InferenceServer) runs, but
+//! the backend is a [`ShardedExecutor`] spanning N simulated devices,
+//! and a scheduling layer spreads requests across replicas:
+//!
+//! - **round-robin** — cheap, uniform traffic;
+//! - **least-outstanding** — tracks in-flight requests per replica and
+//!   routes to the emptiest queue (better tail latency under skew).
+//!
+//! Failure model: when a replica's executor fails (a simulated device
+//! loss, see [`ShardedExecutor::fail_shard`], or injected via
+//! [`ClusterServer::fail_replica`]), the replica marks itself
+//! unhealthy, re-routes its entire queue — including the batch it was
+//! about to serve — to the least-loaded healthy peer, and exits.
+//! Clients never see a dropped request unless *every* replica is gone.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::bcpnn::Network;
+use crate::config::ModelConfig;
+use crate::coordinator::metrics::{LatencyStats, Recorder};
+use crate::coordinator::server::{collect_batch, InferBackend};
+use crate::fpga::device::{FpgaDevice, KernelVersion};
+use crate::stream::fifo::Fifo;
+
+use super::executor::{ShardReport, ShardedExecutor};
+use super::plan::{plan, PartitionPlan};
+
+/// Request scheduling policy across replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    RoundRobin,
+    LeastOutstanding,
+}
+
+/// Cluster tuning.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Full-model replicas (each spans `shards_per_replica` devices).
+    pub replicas: usize,
+    /// Devices one replica's hidden layer is sharded across.
+    pub shards_per_replica: usize,
+    /// Per-replica request queue depth (backpressure bound).
+    pub queue_depth: usize,
+    /// Max time a replica batcher waits to fill a batch.
+    pub flush_timeout: Duration,
+    pub policy: SchedulePolicy,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 2,
+            shards_per_replica: 2,
+            queue_depth: 128,
+            flush_timeout: Duration::from_millis(2),
+            policy: SchedulePolicy::LeastOutstanding,
+        }
+    }
+}
+
+/// One in-flight request (enqueue timestamp survives re-routing, so
+/// latency stats are true end-to-end).
+struct ClusterRequest {
+    img: Vec<f32>,
+    enqueued: Instant,
+    resp: mpsc::Sender<Vec<f32>>,
+}
+
+/// Shared per-replica state the scheduler and the workers see.
+#[derive(Clone)]
+struct ReplicaHandle {
+    queue: Fifo<ClusterRequest>,
+    outstanding: Arc<AtomicUsize>,
+    healthy: Arc<AtomicBool>,
+    inject_fail: Arc<AtomicBool>,
+}
+
+/// Post-shutdown statistics for one replica.
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    pub replica: usize,
+    pub served: u64,
+    /// Successfully dispatched batches. Unlike `ServerReport`, a
+    /// failing replica's final batch is re-routed rather than
+    /// dispatched, so it is counted by `rerouted_out`, not here.
+    pub batches: u64,
+    /// Mean images per *successfully dispatched* batch.
+    pub mean_fill: f64,
+    pub latency: LatencyStats,
+    /// Requests this replica re-routed to peers after failing.
+    pub rerouted_out: u64,
+    pub failed: bool,
+    /// Per-shard (per simulated device) execution reports.
+    pub shards: Vec<ShardReport>,
+}
+
+/// Post-shutdown statistics for the whole cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub served: u64,
+    pub rerouted: u64,
+    /// End-to-end latency across every request served anywhere.
+    pub latency: LatencyStats,
+    pub replicas: Vec<ReplicaReport>,
+}
+
+/// Pure scheduling decision — split out so the policies are unit
+/// testable without threads. `rr_next` is the round-robin cursor.
+/// Returns the chosen replica index, or `None` if no replica is
+/// healthy.
+pub fn pick_replica(
+    policy: SchedulePolicy,
+    healthy: &[bool],
+    outstanding: &[usize],
+    rr_next: usize,
+) -> Option<usize> {
+    let n = healthy.len();
+    match policy {
+        SchedulePolicy::RoundRobin => (0..n)
+            .map(|k| (rr_next + k) % n)
+            .find(|&i| healthy[i]),
+        SchedulePolicy::LeastOutstanding => (0..n)
+            .filter(|&i| healthy[i])
+            .min_by_key(|&i| (outstanding[i], i)),
+    }
+}
+
+/// Handle to a running cluster.
+pub struct ClusterServer {
+    handles: Vec<ReplicaHandle>,
+    workers: Vec<thread::JoinHandle<(ReplicaReport, Recorder)>>,
+    rr: AtomicUsize,
+    policy: SchedulePolicy,
+    plan: PartitionPlan,
+}
+
+impl ClusterServer {
+    /// Start a cluster serving a fresh (untrained) network for `cfg`.
+    /// All replicas are seeded identically, so any replica answers any
+    /// request with the same probabilities.
+    pub fn start(cfg: &ModelConfig, seed: u64, ccfg: ClusterConfig) -> Result<ClusterServer> {
+        Self::start_with(Network::new(cfg.clone(), seed), ccfg)
+    }
+
+    /// Start a cluster serving (replicas of) an existing network —
+    /// e.g. one trained single-device and deployed fleet-wide.
+    pub fn start_with(net: Network, ccfg: ClusterConfig) -> Result<ClusterServer> {
+        if ccfg.replicas == 0 {
+            bail!("cluster needs at least one replica");
+        }
+        let dev = FpgaDevice::u55c();
+        let shard_plan = plan(&net.cfg, ccfg.shards_per_replica, KernelVersion::Infer, &dev)?;
+
+        let handles: Vec<ReplicaHandle> = (0..ccfg.replicas)
+            .map(|_| ReplicaHandle {
+                queue: Fifo::with_capacity(ccfg.queue_depth),
+                outstanding: Arc::new(AtomicUsize::new(0)),
+                healthy: Arc::new(AtomicBool::new(true)),
+                inject_fail: Arc::new(AtomicBool::new(false)),
+            })
+            .collect();
+
+        let mut workers = Vec::with_capacity(ccfg.replicas);
+        for id in 0..ccfg.replicas {
+            let exec = ShardedExecutor::new(net.clone(), &shard_plan)?;
+            let peers = handles.clone();
+            let flush = ccfg.flush_timeout;
+            workers.push(thread::spawn(move || replica_loop(id, exec, peers, flush)));
+        }
+
+        Ok(ClusterServer {
+            handles,
+            workers,
+            rr: AtomicUsize::new(0),
+            policy: ccfg.policy,
+            plan: shard_plan,
+        })
+    }
+
+    pub fn plan(&self) -> &PartitionPlan {
+        &self.plan
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn healthy_replicas(&self) -> usize {
+        self.handles
+            .iter()
+            .filter(|h| h.healthy.load(Ordering::SeqCst))
+            .count()
+    }
+
+    /// Submit one image; the scheduler picks the replica.
+    pub fn submit(&self, img: Vec<f32>) -> Result<mpsc::Receiver<Vec<f32>>> {
+        let healthy: Vec<bool> = self
+            .handles
+            .iter()
+            .map(|h| h.healthy.load(Ordering::SeqCst))
+            .collect();
+        let outstanding: Vec<usize> = self
+            .handles
+            .iter()
+            .map(|h| h.outstanding.load(Ordering::SeqCst))
+            .collect();
+        let rr_next = self.rr.fetch_add(1, Ordering::Relaxed);
+        let idx = pick_replica(self.policy, &healthy, &outstanding, rr_next)
+            .ok_or_else(|| anyhow!("no healthy replicas"))?;
+        self.submit_to(idx, img)
+    }
+
+    /// Submit directly to a specific replica, bypassing the scheduler
+    /// (debugging and failover tests; a request landing on a failed
+    /// replica is re-routed, not lost).
+    pub fn submit_to(&self, replica: usize, img: Vec<f32>) -> Result<mpsc::Receiver<Vec<f32>>> {
+        let h = self
+            .handles
+            .get(replica)
+            .ok_or_else(|| anyhow!("no replica {replica}"))?;
+        let (tx, rx) = mpsc::channel();
+        let req = ClusterRequest { img, enqueued: Instant::now(), resp: tx };
+        h.outstanding.fetch_add(1, Ordering::SeqCst);
+        if let Err(req) = h.queue.send(req) {
+            // The replica already retired (its failure path closed the
+            // queue). Honor the no-loss contract: hand the request to
+            // a healthy peer instead of erroring.
+            h.outstanding.fetch_sub(1, Ordering::SeqCst);
+            if !reroute(&self.handles, replica, req) {
+                bail!("no healthy replicas");
+            }
+        }
+        Ok(rx)
+    }
+
+    /// Inject a replica failure (the next batch it picks up is
+    /// re-routed and the replica retires). Marks it unhealthy
+    /// immediately so the scheduler stops sending new traffic.
+    /// Returns false (and does nothing) for an out-of-range index.
+    pub fn fail_replica(&self, replica: usize) -> bool {
+        match self.handles.get(replica) {
+            Some(h) => {
+                h.inject_fail.store(true, Ordering::SeqCst);
+                h.healthy.store(false, Ordering::SeqCst);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Stop accepting requests, drain every replica, and aggregate.
+    pub fn shutdown(mut self) -> ClusterReport {
+        for h in &self.handles {
+            h.queue.close();
+        }
+        let mut merged = Recorder::new();
+        let mut replicas = Vec::new();
+        let mut served = 0u64;
+        let mut rerouted = 0u64;
+        for w in self.workers.drain(..) {
+            let (rep, rec) = w.join().expect("replica worker panicked");
+            served += rep.served;
+            rerouted += rep.rerouted_out;
+            merged.merge(&rec);
+            replicas.push(rep);
+        }
+        replicas.sort_by_key(|r| r.replica);
+        ClusterReport { served, rerouted, latency: merged.stats(), replicas }
+    }
+}
+
+impl Drop for ClusterServer {
+    fn drop(&mut self) {
+        for h in &self.handles {
+            h.queue.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The per-replica worker: the single-device batching loop with a
+/// failure path that re-routes instead of dropping.
+fn replica_loop(
+    id: usize,
+    exec: ShardedExecutor,
+    peers: Vec<ReplicaHandle>,
+    flush_timeout: Duration,
+) -> (ReplicaReport, Recorder) {
+    let mine = peers[id].clone();
+    let rx = mine.queue.clone();
+    let max_batch = exec.max_batch();
+    let mut rec = Recorder::new();
+    let mut served = 0u64;
+    let mut batches = 0u64;
+    let mut fills = 0u64;
+    let mut rerouted_out = 0u64;
+    let mut failed = false;
+
+    while let Ok(first) = rx.recv() {
+        let mut reqs = collect_batch(&rx, first, max_batch, flush_timeout);
+        let injected = mine.inject_fail.load(Ordering::SeqCst);
+        let outcome = if injected {
+            Err(anyhow!("injected replica failure"))
+        } else {
+            // Move the images out for dispatch (no hot-path clone); on
+            // failure put them back — re-routed requests must still
+            // carry their image.
+            let imgs: Vec<Vec<f32>> =
+                reqs.iter_mut().map(|r| std::mem::take(&mut r.img)).collect();
+            let res = exec.infer_batch(&imgs);
+            if res.is_err() {
+                for (r, img) in reqs.iter_mut().zip(imgs) {
+                    r.img = img;
+                }
+            }
+            res
+        };
+        match outcome {
+            Ok(probs) => {
+                fills += reqs.len() as u64;
+                batches += 1;
+                // Decrement `outstanding` for every request regardless
+                // of how many probability vectors came back — a
+                // short-returning backend must not leak the counter
+                // (it would starve this replica under LeastOutstanding
+                // forever). Unanswered clients see a closed channel.
+                let mut probs = probs.into_iter();
+                for req in reqs {
+                    mine.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    if let Some(p) = probs.next() {
+                        rec.record(req.enqueued.elapsed());
+                        let _ = req.resp.send(p);
+                        served += 1;
+                    }
+                }
+            }
+            Err(_) => {
+                failed = true;
+                mine.healthy.store(false, Ordering::SeqCst);
+                // Re-route the batch in hand plus everything queued.
+                let mut to_move = reqs;
+                rx.close();
+                while let Some(r) = rx.try_recv() {
+                    to_move.push(r);
+                }
+                for r in to_move {
+                    mine.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    if reroute(&peers, id, r) {
+                        rerouted_out += 1;
+                    }
+                }
+                break;
+            }
+        }
+    }
+
+    let shards = exec.shutdown();
+    let report = ReplicaReport {
+        replica: id,
+        served,
+        batches,
+        mean_fill: fills as f64 / batches.max(1) as f64,
+        latency: rec.stats(),
+        rerouted_out,
+        // A replica killed while idle never reaches the injected-
+        // failure branch; still report it as failed, not "ok".
+        failed: failed || mine.inject_fail.load(Ordering::SeqCst),
+        shards,
+    };
+    (report, rec)
+}
+
+/// Hand one request to the least-loaded healthy peer. Returns false if
+/// no peer could take it (the client sees a closed response channel).
+fn reroute(peers: &[ReplicaHandle], from: usize, req: ClusterRequest) -> bool {
+    let mut req = req;
+    loop {
+        let healthy: Vec<bool> = peers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| i != from && h.healthy.load(Ordering::SeqCst))
+            .collect();
+        let outstanding: Vec<usize> = peers
+            .iter()
+            .map(|h| h.outstanding.load(Ordering::SeqCst))
+            .collect();
+        let Some(target) =
+            pick_replica(SchedulePolicy::LeastOutstanding, &healthy, &outstanding, 0)
+        else {
+            return false;
+        };
+        peers[target].outstanding.fetch_add(1, Ordering::SeqCst);
+        match peers[target].queue.send(req) {
+            Ok(()) => return true,
+            Err(r) => {
+                // Lost the race with this peer shutting down; retry
+                // after marking it unhealthy locally via its flag.
+                peers[target].outstanding.fetch_sub(1, Ordering::SeqCst);
+                peers[target].healthy.store(false, Ordering::SeqCst);
+                req = r;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles_and_skips_unhealthy() {
+        let healthy = [true, false, true, true];
+        let out = [0usize; 4];
+        assert_eq!(pick_replica(SchedulePolicy::RoundRobin, &healthy, &out, 0), Some(0));
+        assert_eq!(pick_replica(SchedulePolicy::RoundRobin, &healthy, &out, 1), Some(2));
+        assert_eq!(pick_replica(SchedulePolicy::RoundRobin, &healthy, &out, 2), Some(2));
+        assert_eq!(pick_replica(SchedulePolicy::RoundRobin, &healthy, &out, 3), Some(3));
+        assert_eq!(pick_replica(SchedulePolicy::RoundRobin, &healthy, &out, 4), Some(0));
+    }
+
+    #[test]
+    fn least_outstanding_picks_emptiest_healthy() {
+        let healthy = [true, true, true];
+        let out = [5usize, 2, 9];
+        assert_eq!(
+            pick_replica(SchedulePolicy::LeastOutstanding, &healthy, &out, 0),
+            Some(1)
+        );
+        let healthy = [true, false, true];
+        let out = [5usize, 0, 5];
+        // Ties break to the lowest index among healthy replicas.
+        assert_eq!(
+            pick_replica(SchedulePolicy::LeastOutstanding, &healthy, &out, 0),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn no_healthy_replicas_is_none() {
+        for policy in [SchedulePolicy::RoundRobin, SchedulePolicy::LeastOutstanding] {
+            assert_eq!(pick_replica(policy, &[false, false], &[0, 0], 0), None);
+            assert_eq!(pick_replica(policy, &[], &[], 0), None);
+        }
+    }
+}

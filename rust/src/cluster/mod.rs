@@ -1,0 +1,34 @@
+//! Scale-out serving: shard one BCPNN network across N simulated U55C
+//! devices and load-balance replicas behind one front door.
+//!
+//! The paper's accelerator is a single Alveo U55C, capacity-bounded by
+//! its HBM stack and DSP budget; StreamBrain (Podobas et al., HEART
+//! '21) scales the same workload across devices with an MPI backend.
+//! This module is that scale-out spine for the reproduction
+//! (DESIGN.md §5):
+//!
+//! - [`plan`] — the **partition planner**: balanced hypercolumn-aligned
+//!   shards, each validated against the `fpga::estimator` resource
+//!   model and HBM capacity. Hypercolumn alignment makes the
+//!   per-hypercolumn softmax shard-local by construction, so the only
+//!   cross-device traffic is input broadcast + activity gather.
+//! - [`executor`] — the **sharded executor**: one dataflow worker per
+//!   device, connected by bounded [`stream::fifo`](crate::stream::fifo)
+//!   queues; bitwise identical to the single-device reference.
+//! - [`coordinator`] — the **cluster coordinator**: replica scheduling
+//!   (round-robin / least-outstanding), per-shard and cluster metrics,
+//!   and graceful failure re-routing, layered on the
+//!   `coordinator::server` batching path.
+//!
+//! `benches/cluster_scaling.rs` measures throughput at 1/2/4/8 shards;
+//! `examples/cluster_serve.rs` demos the full serving + failover flow.
+
+pub mod coordinator;
+pub mod executor;
+pub mod plan;
+
+pub use coordinator::{
+    pick_replica, ClusterConfig, ClusterReport, ClusterServer, ReplicaReport, SchedulePolicy,
+};
+pub use executor::{ShardReport, ShardedExecutor};
+pub use plan::{plan, PartitionPlan, ShardSpec};

@@ -1,0 +1,302 @@
+//! Partition planner: split one BCPNN network across N simulated U55C
+//! devices by hidden hypercolumn.
+//!
+//! The hypercolumn is the natural shard boundary: the per-hypercolumn
+//! softmax normalizes only within one HC, so a shard that owns whole
+//! HCs computes its support slice *and* its softmax with zero
+//! cross-device traffic — the only communication is the input broadcast
+//! and the activity gather (StreamBrain's MPI decomposition makes the
+//! same cut). The planner produces balanced contiguous HC ranges and
+//! validates every shard against the existing `fpga::estimator`
+//! resource model and the U55C HBM capacity, so a plan that comes back
+//! `Ok` is one the device model says is implementable.
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelConfig;
+use crate::fpga::device::{FpgaDevice, KernelVersion};
+use crate::fpga::estimator::{estimate, Utilization};
+
+/// HBM capacity of one U55C stack (16 GB).
+pub const HBM_CAPACITY_BYTES: u64 = 16 * 1024 * 1024 * 1024;
+
+/// BRAM utilization above which the estimator's fmax derating says the
+/// build is effectively unroutable (model3 training sits at ~87% and
+/// already hits the 60 MHz floor; beyond ~95% Vivado gives up).
+pub const BRAM_CEILING_PCT: f64 = 95.0;
+
+/// One shard: a contiguous run of hidden hypercolumns on one device.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    pub id: usize,
+    /// Hidden hypercolumns `[hc_lo, hc_hi)` owned by this shard.
+    pub hc_lo: usize,
+    pub hc_hi: usize,
+    /// Derived hidden-unit range `[unit_lo, unit_hi)` (`hc * mc_h`).
+    pub unit_lo: usize,
+    pub unit_hi: usize,
+    /// The shard-local model the device model sees (hc_h reduced to
+    /// this shard's hypercolumn count; everything else inherited).
+    pub sub_cfg: ModelConfig,
+    /// Estimated utilization of the shard's kernel build.
+    pub util: Utilization,
+    /// Parameter bytes resident in this shard's HBM.
+    pub hbm_bytes: u64,
+}
+
+impl ShardSpec {
+    pub fn n_hc(&self) -> usize {
+        self.hc_hi - self.hc_lo
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.unit_hi - self.unit_lo
+    }
+}
+
+/// A validated assignment of the hidden layer to N devices.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    /// The full (unsharded) model being partitioned.
+    pub cfg: ModelConfig,
+    pub version: KernelVersion,
+    pub shards: Vec<ShardSpec>,
+}
+
+impl PartitionPlan {
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Load imbalance: largest / smallest shard, in hypercolumns.
+    pub fn skew(&self) -> f64 {
+        let max = self.shards.iter().map(ShardSpec::n_hc).max().unwrap_or(0);
+        let min = self.shards.iter().map(ShardSpec::n_hc).min().unwrap_or(0);
+        max as f64 / min.max(1) as f64
+    }
+
+    /// Total HBM footprint across all shards.
+    pub fn total_hbm_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.hbm_bytes).sum()
+    }
+
+    /// Structural invariants: full contiguous coverage of the hidden
+    /// layer and hypercolumn-aligned boundaries (which is what makes
+    /// the softmax shard-local by construction).
+    pub fn validate(&self) -> Result<()> {
+        if self.shards.is_empty() {
+            bail!("plan has no shards");
+        }
+        let mc = self.cfg.mc_h;
+        let mut next_hc = 0usize;
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.id != i {
+                bail!("shard {i} has id {}", s.id);
+            }
+            if s.hc_lo != next_hc || s.hc_hi <= s.hc_lo {
+                bail!(
+                    "shard {i} range [{}, {}) not contiguous from {next_hc}",
+                    s.hc_lo, s.hc_hi
+                );
+            }
+            if s.unit_lo != s.hc_lo * mc || s.unit_hi != s.hc_hi * mc {
+                bail!("shard {i} unit range not hypercolumn-aligned");
+            }
+            next_hc = s.hc_hi;
+        }
+        if next_hc != self.cfg.hc_h {
+            bail!(
+                "shards cover {next_hc} of {} hidden hypercolumns",
+                self.cfg.hc_h
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Parameter bytes a shard streams from its own HBM stack: the slices
+/// of the input->hidden arrays it owns (f32). Inference streams the
+/// weight slice + bias; training adds the joint/marginal traces and
+/// the write-back copies.
+pub fn shard_hbm_bytes(cfg: &ModelConfig, n_units: usize, version: KernelVersion) -> u64 {
+    let n_in = cfg.n_in() as u64;
+    let units = n_units as u64;
+    let wij_slice = n_in * units;
+    let bj_slice = units;
+    let base = wij_slice + bj_slice;
+    let bytes = match version {
+        KernelVersion::Infer => base,
+        // pij slice + pi + pj slice, double-buffered write-back of the
+        // joint arrays (read old / write new, as the streamed kernel
+        // does).
+        KernelVersion::Train => 3 * wij_slice + n_in + 2 * bj_slice,
+        // + the MI sparsity-score stream (hc_in x shard HCs).
+        KernelVersion::Struct => {
+            3 * wij_slice + n_in + 2 * bj_slice + cfg.hc_in() as u64 * units / cfg.mc_h as u64
+        }
+    };
+    4 * bytes
+}
+
+/// Split `cfg`'s hidden layer into `n_shards` balanced contiguous
+/// hypercolumn ranges and validate each against the device model.
+pub fn plan(
+    cfg: &ModelConfig,
+    n_shards: usize,
+    version: KernelVersion,
+    dev: &FpgaDevice,
+) -> Result<PartitionPlan> {
+    cfg.validate()?;
+    if n_shards == 0 {
+        bail!("cannot partition across 0 devices");
+    }
+    if n_shards > cfg.hc_h {
+        bail!(
+            "{}: {n_shards} shards but only {} hidden hypercolumns \
+             (the per-hypercolumn softmax cannot be split below one HC)",
+            cfg.name, cfg.hc_h
+        );
+    }
+
+    let base = cfg.hc_h / n_shards;
+    let rem = cfg.hc_h % n_shards;
+    let mut shards = Vec::with_capacity(n_shards);
+    let mut hc_lo = 0usize;
+    for id in 0..n_shards {
+        let n_hc = base + usize::from(id < rem);
+        let hc_hi = hc_lo + n_hc;
+
+        let mut sub_cfg = cfg.clone();
+        sub_cfg.name = format!("{}/shard{id}", cfg.name);
+        sub_cfg.hc_h = n_hc;
+        sub_cfg.validate()?;
+
+        let util = estimate(&sub_cfg, version, dev);
+        let hbm_bytes = shard_hbm_bytes(cfg, n_hc * cfg.mc_h, version);
+
+        if util.luts as f64 > dev.luts as f64 {
+            bail!(
+                "{}: {} LUTs exceed the {} on a {}",
+                sub_cfg.name, util.luts, dev.luts, dev.name
+            );
+        }
+        if util.dsps as f64 > dev.dsps as f64 {
+            bail!(
+                "{}: {} DSPs exceed the {} on a {}",
+                sub_cfg.name, util.dsps, dev.dsps, dev.name
+            );
+        }
+        if util.bram_pct(dev) > BRAM_CEILING_PCT {
+            bail!(
+                "{}: BRAM utilization {:.1}% above the {BRAM_CEILING_PCT}% \
+                 routability ceiling — shard further",
+                sub_cfg.name,
+                util.bram_pct(dev)
+            );
+        }
+        if hbm_bytes > HBM_CAPACITY_BYTES {
+            bail!(
+                "{}: {} parameter bytes exceed the 16 GB HBM stack — shard further",
+                sub_cfg.name, hbm_bytes
+            );
+        }
+
+        shards.push(ShardSpec {
+            id,
+            hc_lo,
+            hc_hi,
+            unit_lo: hc_lo * cfg.mc_h,
+            unit_hi: hc_hi * cfg.mc_h,
+            sub_cfg,
+            util,
+            hbm_bytes,
+        });
+        hc_lo = hc_hi;
+    }
+
+    let plan = PartitionPlan { cfg: cfg.clone(), version, shards };
+    plan.validate()?;
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+
+    #[test]
+    fn balanced_split_covers_hidden_layer() {
+        let cfg = by_name("model1").unwrap(); // hc_h = 32
+        let dev = FpgaDevice::u55c();
+        for n in [1, 2, 3, 4, 8, 32] {
+            let p = plan(&cfg, n, KernelVersion::Infer, &dev).unwrap();
+            assert_eq!(p.n_shards(), n);
+            p.validate().unwrap();
+            let total: usize = p.shards.iter().map(ShardSpec::n_hc).sum();
+            assert_eq!(total, cfg.hc_h);
+            assert!(p.skew() <= 2.0, "skew {}", p.skew());
+        }
+    }
+
+    #[test]
+    fn rejects_zero_and_oversharding() {
+        let cfg = by_name("tiny").unwrap(); // hc_h = 4
+        let dev = FpgaDevice::u55c();
+        assert!(plan(&cfg, 0, KernelVersion::Infer, &dev).is_err());
+        let err = plan(&cfg, 5, KernelVersion::Infer, &dev)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("softmax"), "{err}");
+    }
+
+    #[test]
+    fn sharding_reduces_per_device_footprint() {
+        let cfg = by_name("model1").unwrap();
+        let dev = FpgaDevice::u55c();
+        let p1 = plan(&cfg, 1, KernelVersion::Train, &dev).unwrap();
+        let p4 = plan(&cfg, 4, KernelVersion::Train, &dev).unwrap();
+        let max1 = p1.shards.iter().map(|s| s.hbm_bytes).max().unwrap();
+        let max4 = p4.shards.iter().map(|s| s.hbm_bytes).max().unwrap();
+        assert!(
+            max4 * 3 < max1,
+            "4-way sharding should cut the per-device footprint ~4x: {max1} -> {max4}"
+        );
+        // BRAM pressure falls with the shard's n_h as well.
+        assert!(
+            p4.shards[0].util.brams <= p1.shards[0].util.brams,
+            "{} vs {}",
+            p4.shards[0].util.brams,
+            p1.shards[0].util.brams
+        );
+    }
+
+    #[test]
+    fn overlarge_model_fits_only_sharded() {
+        // n_h = 32768: the BRAM surrogate saturates the device for a
+        // single shard; 8 shards bring it back under the ceiling.
+        let mut cfg = by_name("small").unwrap();
+        cfg.name = "huge".into();
+        cfg.hc_h = 32;
+        cfg.mc_h = 1024;
+        cfg.validate().unwrap();
+        let dev = FpgaDevice::u55c();
+        let err = plan(&cfg, 1, KernelVersion::Infer, &dev)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("BRAM"), "{err}");
+        let p = plan(&cfg, 8, KernelVersion::Infer, &dev).unwrap();
+        assert!(p.shards.iter().all(|s| s.util.bram_pct(&dev) <= BRAM_CEILING_PCT));
+    }
+
+    #[test]
+    fn hbm_bytes_ordering_across_versions() {
+        let cfg = by_name("model2").unwrap();
+        let n_units = cfg.n_h();
+        let i = shard_hbm_bytes(&cfg, n_units, KernelVersion::Infer);
+        let t = shard_hbm_bytes(&cfg, n_units, KernelVersion::Train);
+        let s = shard_hbm_bytes(&cfg, n_units, KernelVersion::Struct);
+        assert!(i < t && t < s);
+        // Inference footprint = wij slice + bj, exactly.
+        assert_eq!(i, 4 * (cfg.n_in() as u64 * n_units as u64 + n_units as u64));
+    }
+}

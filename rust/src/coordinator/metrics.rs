@@ -36,6 +36,12 @@ impl Recorder {
         self.samples_us.len()
     }
 
+    /// Fold another recorder's samples into this one (cluster-level
+    /// aggregation across replica recorders).
+    pub fn merge(&mut self, other: &Recorder) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
     pub fn is_empty(&self) -> bool {
         self.samples_us.is_empty()
     }

@@ -9,4 +9,4 @@ pub mod server;
 
 pub use driver::{Driver, TrainOutcome, TrainOptions};
 pub use metrics::{EnergyReport, LatencyStats, Recorder};
-pub use server::{InferenceServer, ServerConfig, ServerReport};
+pub use server::{InferBackend, InferenceServer, ServerConfig, ServerReport};

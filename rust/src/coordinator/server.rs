@@ -4,10 +4,15 @@
 //!
 //! Requests enter a bounded FIFO (backpressure, like the accelerator's
 //! input stream); a dynamic batcher packs up to `batch` images per
-//! PJRT invocation or flushes on timeout (classic serving trade-off:
+//! backend invocation or flushes on timeout (classic serving trade-off:
 //! fill for throughput, flush for tail latency). The executor thread
-//! owns the compiled artifact — python is long gone; this is the
-//! self-contained request path.
+//! owns the backend — python is long gone; this is the self-contained
+//! request path.
+//!
+//! The server is generic over [`InferBackend`]: the PJRT [`Driver`] is
+//! the single-device backend, `cluster::ShardedExecutor` the
+//! multi-device one, and tests plug in mocks to pin the batching
+//! semantics (see `rust/tests/serving_batching.rs`).
 
 use std::sync::mpsc;
 use std::thread;
@@ -19,6 +24,29 @@ use crate::stream::fifo::Fifo;
 
 use super::driver::Driver;
 use super::metrics::{LatencyStats, Recorder};
+
+/// A batched inference engine the serving layer can drive.
+///
+/// Implementations own whatever device state they need and are
+/// constructed *inside* the worker thread (PJRT handles are not
+/// `Send`), so the trait itself carries no `Send` bound.
+pub trait InferBackend {
+    /// Maximum images per `infer_batch` dispatch.
+    fn max_batch(&self) -> usize;
+
+    /// Class probabilities for up to `max_batch` images.
+    fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+}
+
+impl InferBackend for Driver {
+    fn max_batch(&self) -> usize {
+        self.cfg.batch
+    }
+
+    fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Driver::infer_batch(self, images)
+    }
+}
 
 /// One in-flight request.
 struct Request {
@@ -56,6 +84,33 @@ pub struct ServerReport {
     pub latency: LatencyStats,
 }
 
+/// Greedily fill a batch: `first` was already popped by a blocking
+/// `recv`; keep pulling until `max_batch` items are collected, the
+/// flush deadline passes, or the queue closes. This is the dynamic
+/// batching policy shared by [`InferenceServer`] and the cluster
+/// replica loop (`cluster::coordinator`).
+pub fn collect_batch<T>(
+    rx: &Fifo<T>,
+    first: T,
+    max_batch: usize,
+    flush_timeout: Duration,
+) -> Vec<T> {
+    let deadline = Instant::now() + flush_timeout;
+    let mut items = vec![first];
+    while items.len() < max_batch {
+        match rx.try_recv() {
+            Some(r) => items.push(r),
+            None => {
+                if Instant::now() >= deadline || rx.is_closed() {
+                    break;
+                }
+                thread::sleep(Duration::from_micros(50));
+            }
+        }
+    }
+    items
+}
+
 /// Handle to a running server.
 pub struct InferenceServer {
     queue: Fifo<Request>,
@@ -63,22 +118,23 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Start the server. PJRT handles are not `Send`, so the driver is
-    /// constructed *inside* the worker thread from the given factory
-    /// (e.g. a closure that loads the session); `start` blocks until
-    /// the factory has run and reports its result.
-    pub fn start<F>(make_driver: F, cfg: ServerConfig) -> Result<InferenceServer>
+    /// Start the server. Device handles (e.g. PJRT) are not `Send`, so
+    /// the backend is constructed *inside* the worker thread from the
+    /// given factory (e.g. a closure that loads the session); `start`
+    /// blocks until the factory has run and reports its result.
+    pub fn start<B, F>(make_backend: F, cfg: ServerConfig) -> Result<InferenceServer>
     where
-        F: FnOnce() -> Result<Driver> + Send + 'static,
+        B: InferBackend,
+        F: FnOnce() -> Result<B> + Send + 'static,
     {
         let queue: Fifo<Request> = Fifo::with_capacity(cfg.queue_depth);
         let rx = queue.clone();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let worker = thread::spawn(move || {
-            let driver = match make_driver() {
-                Ok(d) => {
+            let backend = match make_backend() {
+                Ok(b) => {
                     let _ = ready_tx.send(Ok(()));
-                    d
+                    b
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(format!("{e:#}")));
@@ -90,7 +146,7 @@ impl InferenceServer {
                     };
                 }
             };
-            let max_batch = driver.cfg.batch;
+            let max_batch = backend.max_batch();
             let mut rec = Recorder::new();
             let mut served = 0u64;
             let mut batches = 0u64;
@@ -98,21 +154,12 @@ impl InferenceServer {
             // Batch loop: block for the first request, then fill
             // greedily until full or flush timeout.
             while let Ok(first) = rx.recv() {
-                let deadline = Instant::now() + cfg.flush_timeout;
-                let mut reqs = vec![first];
-                while reqs.len() < max_batch {
-                    match rx.try_recv() {
-                        Some(r) => reqs.push(r),
-                        None => {
-                            if Instant::now() >= deadline || rx.is_closed() {
-                                break;
-                            }
-                            thread::sleep(Duration::from_micros(50));
-                        }
-                    }
-                }
-                let imgs: Vec<Vec<f32>> = reqs.iter().map(|r| r.img.clone()).collect();
-                match driver.infer_batch(&imgs) {
+                let mut reqs = collect_batch(&rx, first, max_batch, cfg.flush_timeout);
+                // Move the images out instead of cloning: nothing reads
+                // `req.img` after dispatch (the serving hot path).
+                let imgs: Vec<Vec<f32>> =
+                    reqs.iter_mut().map(|r| std::mem::take(&mut r.img)).collect();
+                match backend.infer_batch(&imgs) {
                     Ok(probs) => {
                         for (req, p) in reqs.into_iter().zip(probs) {
                             rec.record(req.enqueued.elapsed());
@@ -166,5 +213,7 @@ impl InferenceServer {
 
 #[cfg(test)]
 mod tests {
-    // PJRT-backed server tests live in rust/tests/integration.rs.
+    // PJRT-backed server tests live in rust/tests/integration.rs;
+    // backend-mocked batching-path tests in
+    // rust/tests/serving_batching.rs.
 }

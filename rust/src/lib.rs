@@ -16,6 +16,11 @@
 //!   roofline analysis, CPU/GPU baselines, synthetic datasets, and the
 //!   PJRT runtime that executes the AOT artifacts. Python never runs on
 //!   the request path.
+//! - **Scale-out** (`cluster/`) — the multi-device layer on top of L3:
+//!   a partition planner that shards the hidden layer by hypercolumn
+//!   across N simulated U55C devices (validated against the `fpga`
+//!   resource model), a sharded stream executor, and a replicated
+//!   cluster coordinator with scheduling and failover.
 //!
 //! Modules map to DESIGN.md §3; the experiment index (every paper table
 //! and figure) is DESIGN.md §4.
@@ -23,6 +28,7 @@
 pub mod baseline;
 pub mod bcpnn;
 pub mod bench_harness;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

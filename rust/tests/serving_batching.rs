@@ -1,0 +1,221 @@
+//! Edge-behavior tests the cluster layer depends on:
+//!
+//! - the `coordinator::server` dynamic batcher's flush-timeout path,
+//!   pinned with a mock [`InferBackend`] (no PJRT artifacts needed);
+//! - `stream::fifo` backpressure/stats corners (close/drain,
+//!   try_recv accounting, stall counters under multiple writers).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use bcpnn_accel::coordinator::{InferBackend, InferenceServer, ServerConfig};
+use bcpnn_accel::stream::{Fifo, RecvError};
+
+/// Scriptable backend: records per-call batch sizes, optionally fails.
+#[derive(Clone)]
+struct MockBackend {
+    batch: usize,
+    calls: Arc<Mutex<Vec<usize>>>,
+    fail: Arc<AtomicBool>,
+}
+
+impl MockBackend {
+    fn new(batch: usize) -> MockBackend {
+        MockBackend {
+            batch,
+            calls: Arc::new(Mutex::new(Vec::new())),
+            fail: Arc::new(AtomicBool::new(false)),
+        }
+    }
+}
+
+impl InferBackend for MockBackend {
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn infer_batch(&self, images: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.calls.lock().unwrap().push(images.len());
+        if self.fail.load(Ordering::SeqCst) {
+            anyhow::bail!("mock backend failure");
+        }
+        Ok(images.iter().map(|img| vec![img[0]]).collect())
+    }
+}
+
+fn start(mock: MockBackend, flush: Duration) -> InferenceServer {
+    let queue_depth = 64;
+    InferenceServer::start(
+        move || Ok(mock),
+        ServerConfig { queue_depth, flush_timeout: flush },
+    )
+    .unwrap()
+}
+
+#[test]
+fn partial_batch_flushes_on_timeout() {
+    // 3 requests against batch=8: only the flush timer can dispatch.
+    let mock = MockBackend::new(8);
+    let calls = mock.calls.clone();
+    let flush = Duration::from_millis(40);
+    let server = start(mock, flush);
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..3)
+        .map(|i| server.submit(vec![i as f32]).unwrap())
+        .collect();
+    for (i, rx) in handles.iter().enumerate() {
+        let p = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(p, vec![i as f32]); // responses matched to requests
+    }
+    let waited = t0.elapsed();
+    // Responses arrived while the queue was still OPEN (no shutdown
+    // yet), i.e. via the timeout flush — and only after the flush
+    // window elapsed.
+    assert!(waited >= Duration::from_millis(30), "{waited:?}");
+    assert_eq!(*calls.lock().unwrap(), vec![3usize]);
+
+    let rep = server.shutdown();
+    assert_eq!(rep.served, 3);
+    assert_eq!(rep.batches, 1);
+    assert!((rep.mean_fill - 3.0).abs() < 1e-9);
+}
+
+#[test]
+fn full_batch_dispatches_without_waiting_for_flush() {
+    // flush = 10s: if the batcher (wrongly) waited for the timer, the
+    // 2s receive timeouts below would trip.
+    let mock = MockBackend::new(4);
+    let calls = mock.calls.clone();
+    let server = start(mock, Duration::from_secs(10));
+
+    let handles: Vec<_> = (0..8)
+        .map(|i| server.submit(vec![i as f32]).unwrap())
+        .collect();
+    for rx in &handles {
+        rx.recv_timeout(Duration::from_secs(2)).unwrap();
+    }
+    assert_eq!(*calls.lock().unwrap(), vec![4usize, 4]);
+    let rep = server.shutdown();
+    assert_eq!(rep.served, 8);
+    assert_eq!(rep.batches, 2);
+    assert!((rep.mean_fill - 4.0).abs() < 1e-9);
+}
+
+#[test]
+fn backend_failure_closes_response_channels() {
+    let mock = MockBackend::new(4);
+    mock.fail.store(true, Ordering::SeqCst);
+    let server = start(mock, Duration::from_millis(5));
+    let rx1 = server.submit(vec![1.0]).unwrap();
+    let rx2 = server.submit(vec![2.0]).unwrap();
+    // Clients see disconnected channels, not hangs.
+    assert!(rx1.recv_timeout(Duration::from_secs(10)).is_err());
+    assert!(rx2.recv_timeout(Duration::from_secs(10)).is_err());
+    let rep = server.shutdown();
+    assert_eq!(rep.served, 0);
+    assert!(rep.batches >= 1);
+    assert_eq!(rep.latency.count, 0);
+}
+
+// ---------------------------------------------------- fifo edge cases
+
+#[test]
+fn try_recv_accounts_pops_but_never_stalls() {
+    let f: Fifo<u32> = Fifo::with_capacity(2);
+    assert_eq!(f.try_recv(), None);
+    assert_eq!(f.try_recv(), None);
+    let s = f.stats();
+    assert_eq!(s.read_stalls, 0, "try_recv must not count as a stall");
+    assert_eq!(s.pops, 0);
+
+    f.send(7).unwrap();
+    assert_eq!(f.try_recv(), Some(7));
+    let s = f.stats();
+    assert_eq!(s.pops, 1);
+    assert_eq!(s.pushes, 1);
+}
+
+#[test]
+fn send_to_closed_fifo_returns_value_uncounted() {
+    let f: Fifo<String> = Fifo::with_capacity(4);
+    f.send("a".into()).unwrap();
+    f.close();
+    // The rejected value comes back to the caller...
+    assert_eq!(f.send("b".into()), Err("b".to_string()));
+    // ...and is not counted as a push.
+    assert_eq!(f.stats().pushes, 1);
+    // Draining after close still works, then errors.
+    assert_eq!(f.recv(), Ok("a".to_string()));
+    assert_eq!(f.recv(), Err(RecvError));
+    assert_eq!(f.stats().read_stalls, 0, "closed-empty recv is not a stall");
+}
+
+#[test]
+fn each_blocked_writer_counts_a_stall() {
+    let f: Fifo<u32> = Fifo::with_capacity(1);
+    f.send(0).unwrap();
+    let writers: Vec<_> = (1..=2u32)
+        .map(|v| {
+            let f = f.clone();
+            thread::spawn(move || f.send(v).unwrap())
+        })
+        .collect();
+    // Wait until both writers have actually blocked on the full FIFO
+    // (bounded poll instead of a fixed sleep: robust on loaded CI).
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while f.stats().write_stalls < 2 && Instant::now() < deadline {
+        thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(f.stats().write_stalls, 2);
+    assert_eq!(f.len(), 1);
+    // Drain three values; order of the two blocked writers is
+    // unspecified but nothing is lost.
+    let mut got = vec![f.recv().unwrap()];
+    got.push(f.recv().unwrap());
+    got.push(f.recv().unwrap());
+    for w in writers {
+        w.join().unwrap();
+    }
+    got.sort_unstable();
+    assert_eq!(got, vec![0, 1, 2]);
+    let s = f.stats();
+    assert_eq!(s.pushes, 3);
+    assert_eq!(s.pops, 3);
+}
+
+#[test]
+fn high_water_never_exceeds_capacity_under_pressure() {
+    let f: Fifo<u64> = Fifo::with_capacity(3);
+    let tx = f.clone();
+    let producer = thread::spawn(move || {
+        for i in 0..100u64 {
+            tx.send(i).unwrap();
+        }
+        tx.close();
+    });
+    let mut n = 0u64;
+    while f.recv().is_ok() {
+        n += 1;
+    }
+    producer.join().unwrap();
+    assert_eq!(n, 100);
+    let s = f.stats();
+    assert!(s.high_water <= 3, "high water {} > capacity", s.high_water);
+    assert!(s.high_water >= 1);
+    assert_eq!(s.pushes, 100);
+    assert_eq!(s.pops, 100);
+}
+
+#[test]
+fn close_is_idempotent_and_sticky() {
+    let f: Fifo<u8> = Fifo::with_capacity(1);
+    assert!(!f.is_closed());
+    f.close();
+    f.close();
+    assert!(f.is_closed());
+    assert_eq!(f.send(1), Err(1));
+    assert_eq!(f.recv(), Err(RecvError));
+}

@@ -1,0 +1,184 @@
+//! Vendored stub of the `xla` crate (xla-rs) PJRT API surface.
+//!
+//! The build environment has no native `xla_extension` library, so this
+//! crate provides the exact types/signatures `runtime::session` links
+//! against, failing *late and loudly*: clients construct, HLO text
+//! parses (the file is read and minimally validated), but `compile()`
+//! reports that the PJRT runtime is unavailable. Callers gate on built
+//! artifacts (`artifacts/manifest.json`), so the PJRT-backed paths are
+//! skipped cleanly in environments where this stub is in play; swapping
+//! the real `xla = "0.1.6"` back in requires no source change.
+
+use std::fmt;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Error type matching xla-rs (implements `std::error::Error`, so `?`
+/// converts into `anyhow::Error`).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str = "PJRT runtime unavailable: bcpnn-accel was built against the \
+     vendored xla stub (no native xla_extension in this environment)";
+
+/// Element types uploadable to device buffers.
+pub trait ElementType: Copy + 'static {
+    const DTYPE: &'static str;
+}
+
+impl ElementType for f32 {
+    const DTYPE: &'static str = "f32";
+}
+
+impl ElementType for i32 {
+    const DTYPE: &'static str = "i32";
+}
+
+/// A PJRT device handle (opaque; only used as an `Option<&PjRtDevice>`
+/// argument default in this workspace).
+#[derive(Debug, Clone, Copy)]
+pub struct PjRtDevice;
+
+/// A PJRT client. The stub constructs successfully (cheap, no native
+/// code) so that session setup errors point at the first operation that
+/// actually needs the runtime.
+#[derive(Clone)]
+pub struct PjRtClient {
+    platform: Arc<String>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: Arc::new("stub-cpu".to_string()) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.as_ref().clone()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(STUB_MSG))
+    }
+
+    pub fn buffer_from_host_buffer<T: ElementType>(
+        &self,
+        _data: &[T],
+        _shape: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// Parsed HLO module (text form). The stub validates the file exists
+/// and is non-empty so path errors surface with real diagnostics.
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading HLO text {path:?}: {e}")))?;
+        if text.trim().is_empty() {
+            return Err(Error::new(format!("empty HLO module {path:?}")));
+        }
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled executable. Unconstructible through the stub (compile
+/// always errors); methods exist for type-checking only.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _inputs: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// A device-resident buffer. Unconstructible through the stub.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// A host-side literal value. Unconstructible through the stub.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::new(STUB_MSG))
+    }
+
+    pub fn to_vec<T: ElementType>(&self) -> Result<Vec<T>> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_compile_fails() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "stub-cpu");
+        let missing = HloModuleProto::from_text_file("/nonexistent/x.hlo.txt");
+        assert!(missing.is_err());
+        let err = c
+            .compile(&XlaComputation { _private: () })
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(err.contains("unavailable"), "{err}");
+    }
+
+    #[test]
+    fn error_is_std_error() {
+        fn takes_std<E: std::error::Error>(_: E) {}
+        takes_std(Error::new("x"));
+    }
+}
