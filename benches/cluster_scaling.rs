@@ -18,8 +18,8 @@
 //!     overlap, exactly like `ablation_dataflow`).
 
 use bcpnn_accel::bench_harness as bh;
-use bcpnn_accel::bcpnn::Network;
-use bcpnn_accel::cluster::{plan, ShardedExecutor};
+use bcpnn_accel::bcpnn::{LayerGraph, Network};
+use bcpnn_accel::cluster::{plan, plan_pipeline, PipelineParallelExecutor, ShardedExecutor};
 use bcpnn_accel::config::{by_name, ModelConfig};
 use bcpnn_accel::data::synth;
 use bcpnn_accel::fpga::device::{FpgaDevice, KernelVersion};
@@ -83,7 +83,7 @@ fn measured_cfg() -> ModelConfig {
     cfg
 }
 
-fn measured_section() {
+fn measured_section(ms_per_case: u64) {
     let cfg = measured_cfg();
     let dev = FpgaDevice::u55c();
     let net = Network::new(cfg.clone(), 42);
@@ -100,7 +100,7 @@ fn measured_section() {
         let exec = ShardedExecutor::new(net.clone(), &p).unwrap();
         let r = bh::bench_for(
             &format!("infer_batch x{} imgs, {} shard(s)", data.len(), n),
-            std::time::Duration::from_millis(300),
+            std::time::Duration::from_millis(ms_per_case),
             || {
                 let out = exec.infer_batch(&data.images).unwrap();
                 std::hint::black_box(out.len());
@@ -115,10 +115,87 @@ fn measured_section() {
     }
 }
 
+/// Deep-stack section: pipeline-parallel scaling of a stacked config.
+/// Cycle-modeled (deterministic): per-layer kernel times from the
+/// device model; pipeline throughput = 1 / slowest layer vs the
+/// single-device chain paying the *sum* of layers per image. Measured:
+/// the software `PipelineParallelExecutor` vs the sequential reference.
+fn deep_stack_section(ms_per_case: u64) {
+    let dev = FpgaDevice::u55c();
+    println!("\n-- deep stack: pipeline-parallel layer placement --");
+    for model in ["mnist-deep2", "toy-deep"] {
+        let cfg = by_name(model).unwrap();
+        let p = plan_pipeline(&cfg, KernelVersion::Infer, &dev).unwrap();
+        println!("{model}: {} layers, cycle-modeled (infer build)", p.n_devices());
+        println!(
+            "{:<8} {:>12} {:>9} {:>12} {:>10}",
+            "layer", "out(HCxMC)", "fmax MHz", "kernel us", "HBM MB"
+        );
+        for s in &p.stages {
+            println!(
+                "{:<8} {:>6}x{:<5} {:>9.1} {:>12.2} {:>10.1}",
+                s.device,
+                s.dims.hc_out,
+                s.dims.mc_out,
+                s.util.freq_mhz,
+                s.kernel_s * 1e6,
+                s.hbm_bytes as f64 / 1e6,
+            );
+        }
+        let chained = p.latency_s();
+        let bottleneck = p.bottleneck().kernel_s;
+        println!(
+            "single device {:.2} us/img, pipeline {:.2} us/img ({:.2}x, bottleneck layer {})",
+            chained * 1e6,
+            bottleneck * 1e6,
+            chained / bottleneck,
+            p.bottleneck().device,
+        );
+    }
+
+    // Measured: software executor wall-clock on the toy stack.
+    let cfg = by_name("toy-deep").unwrap();
+    let graph = LayerGraph::new(cfg.clone(), 42);
+    let data = synth::generate(cfg.img_side, cfg.n_classes, 64, 7, 0.15);
+    let pplan = plan_pipeline(&cfg, KernelVersion::Infer, &dev).unwrap();
+    println!("\n{}", bh::header());
+    let seq_graph = graph.clone();
+    let r_seq = bh::bench_for(
+        &format!("LayerGraph::infer x{} imgs (sequential)", data.len()),
+        std::time::Duration::from_millis(ms_per_case),
+        || {
+            for img in &data.images {
+                std::hint::black_box(seq_graph.infer(img).len());
+            }
+        },
+    );
+    println!("{}  ({:.0} img/s)", r_seq.row(), r_seq.throughput(data.len() as u64));
+    let exec = PipelineParallelExecutor::new(graph, &pplan).unwrap();
+    let r_pipe = bh::bench_for(
+        &format!("PipelineParallelExecutor x{} imgs", data.len()),
+        std::time::Duration::from_millis(ms_per_case),
+        || {
+            let out = exec.infer_batch(&data.images).unwrap();
+            std::hint::black_box(out.len());
+        },
+    );
+    println!(
+        "{}  ({:.0} img/s; host-core bound)",
+        r_pipe.row(),
+        r_pipe.throughput(data.len() as u64)
+    );
+}
+
 fn main() {
+    // `--quick` (the CI bench-smoke mode) trims the wall-clock
+    // sections; the cycle-modeled sections are deterministic and run
+    // in full either way.
+    let quick = std::env::args().any(|a| a == "--quick");
+    let ms_per_case = if quick { 40 } else { 300 };
     println!("== cluster scaling: shard the hidden layer across devices ==");
     for model in ["model1", "model2"] {
         modeled_section(model);
     }
-    measured_section();
+    measured_section(ms_per_case);
+    deep_stack_section(ms_per_case);
 }

@@ -9,6 +9,16 @@
 //! raw little-endian f32 arrays in a fixed order — robust to partial
 //! writes (length-checked) and self-describing enough to reject
 //! mismatched configs.
+//!
+//! Two versions:
+//! - **v1** — the classic two-projection [`Params`] container
+//!   ([`save`]/[`load`]); single-layer configs only.
+//! - **v2** — the layer-graph format ([`save_graph`]/[`load_graph`]):
+//!   the header carries the layer count and per-layer specs (via the
+//!   config's `layers` field) and the binary section holds every
+//!   hidden projection (`l<i>.*`) plus the classifier head
+//!   (`head.*`). `load_graph` also accepts v1 files, mapping them onto
+//!   a 1-layer graph — old checkpoints keep loading forever.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -18,10 +28,12 @@ use anyhow::{bail, Context, Result};
 use crate::config::ModelConfig;
 use crate::util::json::Json;
 
+use super::layer::{LayerGraph, Projection};
 use super::params::Params;
 
 const MAGIC: &str = "bcpnn-accel-checkpoint";
 const VERSION: usize = 1;
+const VERSION_GRAPH: usize = 2;
 
 /// Array order in the binary section (fixed; do not reorder).
 fn arrays(p: &Params) -> [(&'static str, &Vec<f32>); 11] {
@@ -75,10 +87,8 @@ pub fn save(path: &Path, cfg: &ModelConfig, params: &Params) -> Result<()> {
     Ok(())
 }
 
-/// Load params from `path`; validates magic/version/config shapes.
-pub fn load(path: &Path) -> Result<(ModelConfig, Params)> {
-    let mut f = std::fs::File::open(path)
-        .with_context(|| format!("opening checkpoint {path:?}"))?;
+/// Read the length-prefixed JSON header and verify the magic.
+fn read_header(f: &mut std::fs::File) -> Result<Json> {
     let mut len8 = [0u8; 8];
     f.read_exact(&mut len8).context("checkpoint header length")?;
     let hlen = u64::from_le_bytes(len8) as usize;
@@ -91,6 +101,14 @@ pub fn load(path: &Path) -> Result<(ModelConfig, Params)> {
     if header.req("magic")?.as_str()? != MAGIC {
         bail!("not a bcpnn-accel checkpoint");
     }
+    Ok(header)
+}
+
+/// Load params from `path`; validates magic/version/config shapes.
+pub fn load(path: &Path) -> Result<(ModelConfig, Params)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {path:?}"))?;
+    let header = read_header(&mut f)?;
     if header.req("version")?.as_usize()? != VERSION {
         bail!("unsupported checkpoint version");
     }
@@ -157,6 +175,205 @@ pub fn load(path: &Path) -> Result<(ModelConfig, Params)> {
     Ok((cfg, p))
 }
 
+// ------------------------------------------------------ v2: layer graph
+
+const PROJ_ARRAYS: [&str; 6] = ["pi", "pj", "pij", "wij", "bj", "mask_hc"];
+const HEAD_ARRAYS: [&str; 5] = ["pi", "pj", "pij", "wij", "bj"];
+
+/// Array order of the v2 binary section: every hidden projection
+/// (`l<i>.*`), then the head (`head.*`, no mask — always dense).
+fn graph_arrays(g: &LayerGraph) -> Vec<(String, &Vec<f32>)> {
+    let mut out = Vec::new();
+    for (l, p) in g.layers.iter().enumerate() {
+        for name in PROJ_ARRAYS {
+            out.push((format!("l{l}.{name}"), proj_array(p, name)));
+        }
+    }
+    for name in HEAD_ARRAYS {
+        out.push((format!("head.{name}"), proj_array(&g.head, name)));
+    }
+    out
+}
+
+fn proj_array<'a>(p: &'a Projection, name: &str) -> &'a Vec<f32> {
+    match name {
+        "pi" => &p.pi,
+        "pj" => &p.pj,
+        "pij" => &p.pij,
+        "wij" => &p.wij,
+        "bj" => &p.bj,
+        _ => &p.mask_hc,
+    }
+}
+
+/// Save a layer graph to `path` in the v2 format (atomic write).
+pub fn save_graph(path: &Path, graph: &LayerGraph) -> Result<()> {
+    let arrays = graph_arrays(graph);
+    let header = Json::obj(vec![
+        ("magic", Json::from(MAGIC)),
+        ("version", Json::from(VERSION_GRAPH)),
+        ("n_layers", Json::from(graph.n_layers())),
+        ("config", graph.cfg.to_json()),
+        (
+            "arrays",
+            Json::Arr(
+                arrays
+                    .iter()
+                    .map(|(n, v)| {
+                        Json::obj(vec![
+                            ("name", Json::from(n.as_str())),
+                            ("len", Json::from(v.len())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+    .to_string();
+
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, v) in &arrays {
+            let mut bytes = Vec::with_capacity(v.len() * 4);
+            for x in *v {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            f.write_all(&bytes)?;
+        }
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a layer graph from `path`. Accepts both formats: v2 files load
+/// directly; v1 (two-projection) files map onto a 1-layer graph.
+pub fn load_graph(path: &Path) -> Result<LayerGraph> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {path:?}"))?;
+    let header = read_header(&mut f)?;
+    match header.req("version")?.as_usize()? {
+        VERSION => {
+            drop(f);
+            let (cfg, params) = load(path)?;
+            LayerGraph::from_params(&cfg, &params)
+        }
+        VERSION_GRAPH => load_graph_v2(&mut f, &header),
+        v => bail!("unsupported checkpoint version {v}"),
+    }
+}
+
+fn load_graph_v2(f: &mut std::fs::File, header: &Json) -> Result<LayerGraph> {
+    let cfg = ModelConfig::from_json(header.req("config")?)?;
+    if header.req("n_layers")?.as_usize()? != cfg.n_layers() {
+        bail!(
+            "checkpoint header claims {} layers, config has {}",
+            header.req("n_layers")?.as_usize()?,
+            cfg.n_layers()
+        );
+    }
+
+    // Expected (name, len) list from the config's stack.
+    let layer_dims = cfg.layer_dims();
+    let head_dims = cfg.head_dims();
+    let mut expect: Vec<(String, usize)> = Vec::new();
+    for d in &layer_dims {
+        let sizes = [
+            d.n_in(),
+            d.n_out(),
+            d.n_in() * d.n_out(),
+            d.n_in() * d.n_out(),
+            d.n_out(),
+            d.hc_in * d.hc_out,
+        ];
+        for (name, len) in PROJ_ARRAYS.iter().zip(sizes) {
+            expect.push((format!("l{}.{name}", d.index), len));
+        }
+    }
+    let head_sizes = [
+        head_dims.n_in(),
+        head_dims.n_out(),
+        head_dims.n_in() * head_dims.n_out(),
+        head_dims.n_in() * head_dims.n_out(),
+        head_dims.n_out(),
+    ];
+    for (name, len) in HEAD_ARRAYS.iter().zip(head_sizes) {
+        expect.push((format!("head.{name}"), len));
+    }
+
+    let lens: Vec<(String, usize)> = header
+        .req("arrays")?
+        .as_arr()?
+        .iter()
+        .map(|a| {
+            Ok((
+                a.req("name")?.as_str()?.to_string(),
+                a.req("len")?.as_usize()?,
+            ))
+        })
+        .collect::<Result<_>>()?;
+    if lens.len() != expect.len() {
+        bail!("checkpoint has {} arrays, expected {}", lens.len(), expect.len());
+    }
+    for ((name, len), (ename, elen)) in lens.iter().zip(expect.iter()) {
+        if name != ename || len != elen {
+            bail!("checkpoint array {name}({len}) != expected {ename}({elen})");
+        }
+    }
+
+    let mut read_vec = |expect: usize, name: &str| -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; expect * 4];
+        f.read_exact(&mut bytes)
+            .with_context(|| format!("array {name} ({expect} f32)"))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    };
+
+    let mut cursor = expect.iter();
+    let mut next = |what: &str| -> Result<Vec<f32>> {
+        let (name, len) = cursor.next().expect("expect list covers all arrays");
+        debug_assert!(name.ends_with(what));
+        read_vec(*len, name)
+    };
+
+    let mut layers = Vec::with_capacity(layer_dims.len());
+    for d in &layer_dims {
+        let pi = next("pi")?;
+        let pj = next("pj")?;
+        let pij = next("pij")?;
+        let wij = next("wij")?;
+        let bj = next("bj")?;
+        let mask_hc = next("mask_hc")?;
+        layers.push(Projection::from_arrays(*d, pi, pj, pij, wij, bj, mask_hc)?);
+    }
+    let pi = next("pi")?;
+    let pj = next("pj")?;
+    let pij = next("pij")?;
+    let wij = next("wij")?;
+    let bj = next("bj")?;
+    let head = Projection::from_arrays(
+        head_dims,
+        pi,
+        pj,
+        pij,
+        wij,
+        bj,
+        vec![1.0f32; head_dims.hc_in * head_dims.hc_out],
+    )?;
+
+    let mut extra = [0u8; 1];
+    if f.read(&mut extra)? != 0 {
+        bail!("trailing bytes after checkpoint arrays");
+    }
+    Ok(LayerGraph { cfg, layers, head })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,5 +437,73 @@ mod tests {
     fn missing_file_context() {
         let err = load(Path::new("/nonexistent/ckpt")).unwrap_err().to_string();
         assert!(err.contains("checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn v2_roundtrip_deep_graph_exact() {
+        let cfg = by_name("toy-deep").unwrap();
+        let mut g = LayerGraph::new(cfg.clone(), 13);
+        // Non-trivial state: a few training steps.
+        let d = crate::data::synth::generate(cfg.img_side, cfg.n_classes, 12, 6, 0.15);
+        for (img, &l) in d.images.iter().zip(&d.labels) {
+            g.train_unsup_step(img);
+            g.train_sup_step(img, l as usize);
+        }
+        let path = tmpfile("v2_roundtrip");
+        save_graph(&path, &g).unwrap();
+        let g2 = load_graph(&path).unwrap();
+        assert_eq!(g2.cfg, g.cfg);
+        assert_eq!(g2.n_layers(), 2);
+        for (a, b) in g.layers.iter().zip(&g2.layers) {
+            assert_eq!(a.pij, b.pij);
+            assert_eq!(a.wij, b.wij);
+            assert_eq!(a.mask_hc, b.mask_hc);
+        }
+        assert_eq!(g.head.wij, g2.head.wij);
+        // And inference agrees bitwise.
+        let img = vec![0.3; cfg.hc_in()];
+        assert_eq!(g.infer(&img), g2.infer(&img));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_checkpoint_loads_as_one_layer_graph() {
+        // Backward compat: a v1 (two-projection) file round-trips
+        // through load_graph into a bitwise-equal 1-layer graph.
+        let cfg = by_name("tiny").unwrap();
+        let params = Params::init(&cfg, 21);
+        let path = tmpfile("v1_compat");
+        save(&path, &cfg, &params).unwrap();
+        let g = load_graph(&path).unwrap();
+        assert_eq!(g.n_layers(), 1);
+        assert_eq!(g.layers[0].pij, params.pij);
+        assert_eq!(g.head.pij, params.qik);
+        let back = g.to_params().unwrap();
+        assert_eq!(back.wij, params.wij);
+        assert_eq!(back.mask_hc, params.mask_hc);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_single_layer_graph_also_roundtrips() {
+        let cfg = by_name("tiny").unwrap();
+        let g = LayerGraph::new(cfg, 3);
+        let path = tmpfile("v2_single");
+        save_graph(&path, &g).unwrap();
+        let g2 = load_graph(&path).unwrap();
+        assert_eq!(g2.layers[0].wij, g.layers[0].wij);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_rejects_truncation() {
+        let cfg = by_name("toy-deep").unwrap();
+        let g = LayerGraph::new(cfg, 1);
+        let path = tmpfile("v2_trunc");
+        save_graph(&path, &g).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 8]).unwrap();
+        assert!(load_graph(&path).is_err());
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -1,0 +1,522 @@
+//! The layer graph: BCPNN as a stack of hypercolumn layers.
+//!
+//! [`Projection`] is one learnable fan-in (probability traces, derived
+//! weights, structural mask, fused Hebbian-Bayesian plasticity) between
+//! two populations; [`LayerGraph`] composes N hidden projections plus
+//! the classifier head into a deep BCPNN, the way StreamBrain (Podobas
+//! et al., 2021) stacks hypercolumn layers.
+//!
+//! Numerics contract: a 1-element `LayerGraph` is **bitwise identical**
+//! to the seed [`Network`](super::Network) — same RNG streams at init,
+//! same accumulation order in every loop (pinned by
+//! `rust/tests/deep_stack.rs`). The per-projection math is shared with
+//! `Params` through `params::recompute_weights`/`init_mask_dims`.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::config::{LayerDims, ModelConfig};
+use crate::data::encode::{encode_image, one_hot};
+use crate::data::rng::XorShift64;
+
+use super::network::{argmax, Network};
+use super::params::{init_mask_dims, recompute_weights, Params};
+use super::structural::StructuralPlasticity;
+
+/// Per-layer RNG seed: layer 0 uses the caller's seed verbatim (the
+/// seed network's exact stream); deeper layers decorrelate by
+/// golden-ratio stepping.
+pub fn layer_seed(seed: u64, layer: usize) -> u64 {
+    seed ^ (layer as u64).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// One projection of the layer graph: traces, derived weights, and the
+/// structural mask of a single fan-in. Field naming follows the
+/// input->hidden convention of [`Params`]; for the classifier head the
+/// same slots hold the (qi, qk, qik, who, bk) arrays.
+#[derive(Debug, Clone)]
+pub struct Projection {
+    pub dims: LayerDims,
+    /// Input marginal trace (n_in).
+    pub pi: Vec<f32>,
+    /// Output marginal trace (n_out).
+    pub pj: Vec<f32>,
+    /// Joint trace (n_in, n_out) row-major.
+    pub pij: Vec<f32>,
+    /// Derived weights (n_in, n_out).
+    pub wij: Vec<f32>,
+    /// Derived bias (n_out).
+    pub bj: Vec<f32>,
+    /// HC-level structural mask (hc_in, hc_out); all-ones for the head.
+    pub mask_hc: Vec<f32>,
+    /// Unit-level mask cache, refreshed on structural updates.
+    mask_unit: Vec<f32>,
+}
+
+impl Projection {
+    /// Initialize a hidden projection: uniform marginals, jittered
+    /// joint trace (symmetry breaking), random nact-sparse mask.
+    /// For layer-0 dims and the same seed this reproduces
+    /// `Params::init`'s input->hidden arrays bit for bit.
+    pub fn init_hidden(dims: LayerDims, eps: f32, seed: u64) -> Projection {
+        let (n_in, n_out) = (dims.n_in(), dims.n_out());
+        let jitter = 0.2f32;
+        let pi = vec![1.0 / dims.mc_in as f32; n_in];
+        let pj = vec![1.0 / dims.mc_out as f32; n_out];
+        let base_pij = 1.0 / (dims.mc_in * dims.mc_out) as f32;
+        let mut rng = XorShift64::new(seed.wrapping_add(0x5EED));
+        let pij: Vec<f32> = (0..n_in * n_out)
+            .map(|_| base_pij * (1.0 - jitter + 2.0 * jitter * rng.next_f32()))
+            .collect();
+        let mask_hc = init_mask_dims(dims.hc_in, dims.hc_out, dims.nact, seed);
+        Self::assemble(dims, pi, pj, pij, mask_hc, eps)
+    }
+
+    /// Initialize the classifier head: uniform traces (no jitter, the
+    /// supervised projection of `Params::init`), full connectivity.
+    pub fn init_head(dims: LayerDims, eps: f32) -> Projection {
+        let (n_in, n_out) = (dims.n_in(), dims.n_out());
+        let pi = vec![1.0 / dims.mc_in as f32; n_in];
+        let pj = vec![1.0 / n_out as f32; n_out];
+        let pij = vec![1.0 / (dims.mc_in * n_out) as f32; n_in * n_out];
+        let mask_hc = vec![1.0f32; dims.hc_in * dims.hc_out];
+        Self::assemble(dims, pi, pj, pij, mask_hc, eps)
+    }
+
+    fn assemble(
+        dims: LayerDims, pi: Vec<f32>, pj: Vec<f32>, pij: Vec<f32>,
+        mask_hc: Vec<f32>, eps: f32,
+    ) -> Projection {
+        let (n_in, n_out) = (dims.n_in(), dims.n_out());
+        let mut p = Projection {
+            dims,
+            pi,
+            pj,
+            pij,
+            wij: vec![0.0; n_in * n_out],
+            bj: vec![0.0; n_out],
+            mask_hc,
+            mask_unit: Vec::new(),
+        };
+        recompute_weights(&p.pi, &p.pj, &p.pij, &mut p.wij, &mut p.bj, eps);
+        p.refresh_mask();
+        p
+    }
+
+    /// Rebuild a projection from stored arrays (checkpoint load,
+    /// `Params` import). Lengths are validated against `dims`.
+    pub fn from_arrays(
+        dims: LayerDims, pi: Vec<f32>, pj: Vec<f32>, pij: Vec<f32>,
+        wij: Vec<f32>, bj: Vec<f32>, mask_hc: Vec<f32>,
+    ) -> Result<Projection> {
+        let (n_in, n_out) = (dims.n_in(), dims.n_out());
+        let expect = [
+            ("pi", pi.len(), n_in),
+            ("pj", pj.len(), n_out),
+            ("pij", pij.len(), n_in * n_out),
+            ("wij", wij.len(), n_in * n_out),
+            ("bj", bj.len(), n_out),
+            ("mask_hc", mask_hc.len(), dims.hc_in * dims.hc_out),
+        ];
+        for (name, got, want) in expect {
+            if got != want {
+                bail!("projection layer {}: {name} has {got} values, expected {want}",
+                      dims.index);
+            }
+        }
+        let mut p = Projection { dims, pi, pj, pij, wij, bj, mask_hc, mask_unit: Vec::new() };
+        p.refresh_mask();
+        Ok(p)
+    }
+
+    /// Re-expand the HC-level mask to unit level (call after rewiring).
+    pub fn refresh_mask(&mut self) {
+        let (n_in, n_out) = (self.dims.n_in(), self.dims.n_out());
+        let mut m = vec![0.0f32; n_in * n_out];
+        for i in 0..n_in {
+            let hc_i = i / self.dims.mc_in;
+            for j in 0..n_out {
+                let hc_j = j / self.dims.mc_out;
+                m[i * n_out + j] = self.mask_hc[hc_i * self.dims.hc_out + hc_j];
+            }
+        }
+        self.mask_unit = m;
+    }
+
+    /// Unit-level mask (expanded cache).
+    pub fn mask_unit(&self) -> &[f32] {
+        &self.mask_unit
+    }
+
+    /// Masked support: s_j = b_j + sum_i m_ij w_ij x_i, skipping silent
+    /// inputs — the hidden-layer datapath (`Network::support`).
+    pub fn support_masked(&self, x: &[f32]) -> Vec<f32> {
+        let n_out = self.dims.n_out();
+        debug_assert_eq!(x.len(), self.dims.n_in());
+        let mut s = self.bj.clone();
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let wrow = &self.wij[i * n_out..(i + 1) * n_out];
+            let mrow = &self.mask_unit[i * n_out..(i + 1) * n_out];
+            for j in 0..n_out {
+                s[j] += xi * wrow[j] * mrow[j];
+            }
+        }
+        s
+    }
+
+    /// Dense support: s_k = b_k + sum_j y_j w_jk — the head datapath
+    /// (`Network::output_activity` before its softmax).
+    pub fn support_dense(&self, y: &[f32]) -> Vec<f32> {
+        let n_out = self.dims.n_out();
+        debug_assert_eq!(y.len(), self.dims.n_in());
+        let mut s = self.bj.clone();
+        for (j, &yj) in y.iter().enumerate() {
+            let row = &self.wij[j * n_out..(j + 1) * n_out];
+            for k in 0..n_out {
+                s[k] += yj * row[k];
+            }
+        }
+        s
+    }
+
+    /// Hidden-layer activation: masked support + per-HC softmax.
+    pub fn activate_masked(&self, x: &[f32], gain: f32) -> Vec<f32> {
+        let mut s = self.support_masked(x);
+        Network::hc_softmax(&mut s, self.dims.hc_out, self.dims.mc_out, gain);
+        s
+    }
+
+    /// Head activation: dense support + softmax over the output HC.
+    pub fn activate_dense(&self, y: &[f32]) -> Vec<f32> {
+        let mut s = self.support_dense(y);
+        Network::hc_softmax(&mut s, self.dims.hc_out, self.dims.mc_out, 1.0);
+        s
+    }
+
+    /// One fused plasticity step given this projection's input `x` and
+    /// output activity `y`: EMA traces + Bayesian weight recompute in a
+    /// single pass over the joint arrays — the per-projection body of
+    /// `Network::train_unsup_step`/`train_sup_step` (same loop order).
+    pub fn train_step(&mut self, x: &[f32], y: &[f32], alpha: f32, eps: f32) {
+        let a = alpha;
+        let n_out = self.dims.n_out();
+        for (pi, &xi) in self.pi.iter_mut().zip(x) {
+            *pi = (1.0 - a) * *pi + a * xi;
+        }
+        for (pj, &yj) in self.pj.iter_mut().zip(y) {
+            *pj = (1.0 - a) * *pj + a * yj;
+        }
+        for i in 0..x.len() {
+            let xi = x[i];
+            let pi_eps = self.pi[i] + eps;
+            let prow = &mut self.pij[i * n_out..(i + 1) * n_out];
+            let wrow = &mut self.wij[i * n_out..(i + 1) * n_out];
+            for j in 0..n_out {
+                let pij_new = (1.0 - a) * prow[j] + a * xi * y[j];
+                prow[j] = pij_new;
+                wrow[j] = ((pij_new + eps * eps) / (pi_eps * (self.pj[j] + eps))).ln();
+            }
+        }
+        for (b, &pj) in self.bj.iter_mut().zip(&self.pj) {
+            *b = (pj + eps).ln();
+        }
+    }
+}
+
+/// Per-layer outcome of one structural-plasticity pass over the graph.
+pub type GraphRewireStats = Vec<super::structural::RewireStats>;
+
+/// A deep BCPNN: N hidden projections plus the classifier head, bound
+/// to a [`ModelConfig`] whose `layer_specs()` describe the stack.
+#[derive(Debug, Clone)]
+pub struct LayerGraph {
+    pub cfg: ModelConfig,
+    /// Hidden projections, input-facing first.
+    pub layers: Vec<Projection>,
+    /// Classifier head (last hidden layer -> output HC).
+    pub head: Projection,
+}
+
+impl LayerGraph {
+    /// Fresh graph: every hidden projection initialized from its
+    /// per-layer RNG stream, head uniform. For single-layer configs the
+    /// state equals `Network::new(cfg, seed)` bit for bit.
+    pub fn new(cfg: ModelConfig, seed: u64) -> LayerGraph {
+        let layers: Vec<Projection> = cfg
+            .layer_dims()
+            .into_iter()
+            .map(|d| Projection::init_hidden(d, cfg.eps, layer_seed(seed, d.index)))
+            .collect();
+        let head = Projection::init_head(cfg.head_dims(), cfg.eps);
+        LayerGraph { cfg, layers, head }
+    }
+
+    /// Import the classic two-projection state (single-layer configs
+    /// only) — e.g. a trained `Network` or a v1 checkpoint.
+    pub fn from_params(cfg: &ModelConfig, params: &Params) -> Result<LayerGraph> {
+        if cfg.n_layers() != 1 {
+            bail!(
+                "{}: Params holds exactly two projections; config has {} hidden layers",
+                cfg.name,
+                cfg.n_layers()
+            );
+        }
+        let l0 = Projection::from_arrays(
+            cfg.layer_dims()[0],
+            params.pi.clone(),
+            params.pj.clone(),
+            params.pij.clone(),
+            params.wij.clone(),
+            params.bj.clone(),
+            params.mask_hc.clone(),
+        )?;
+        let head_dims = cfg.head_dims();
+        let head = Projection::from_arrays(
+            head_dims,
+            params.qi.clone(),
+            params.qk.clone(),
+            params.qik.clone(),
+            params.who.clone(),
+            params.bk.clone(),
+            vec![1.0f32; head_dims.hc_in * head_dims.hc_out],
+        )?;
+        Ok(LayerGraph { cfg: cfg.clone(), layers: vec![l0], head })
+    }
+
+    /// Export to the classic container (single-layer graphs only).
+    pub fn to_params(&self) -> Option<Params> {
+        if self.layers.len() != 1 {
+            return None;
+        }
+        let l0 = &self.layers[0];
+        Some(Params {
+            pi: l0.pi.clone(),
+            pj: l0.pj.clone(),
+            pij: l0.pij.clone(),
+            wij: l0.wij.clone(),
+            bj: l0.bj.clone(),
+            qi: self.head.pi.clone(),
+            qk: self.head.pj.clone(),
+            qik: self.head.pij.clone(),
+            who: self.head.wij.clone(),
+            bk: self.head.bj.clone(),
+            mask_hc: l0.mask_hc.clone(),
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    // ------------------------------------------------------ activation
+
+    /// Encoded input plus every hidden layer's activity, input-facing
+    /// layer first.
+    pub fn layer_activities(&self, img: &[f32]) -> (Vec<f32>, Vec<Vec<f32>>) {
+        let x = encode_image(img);
+        debug_assert_eq!(x.len(), self.cfg.n_in());
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.layers.len());
+        for l in 0..self.layers.len() {
+            let input: &[f32] = if l == 0 { &x } else { &acts[l - 1] };
+            acts.push(self.layers[l].activate_masked(input, self.cfg.gain));
+        }
+        (x, acts)
+    }
+
+    /// Full inference: class probabilities for one image.
+    pub fn infer(&self, img: &[f32]) -> Vec<f32> {
+        let (_, acts) = self.layer_activities(img);
+        self.head.activate_dense(acts.last().expect("graph has >= 1 layer"))
+    }
+
+    /// Argmax prediction.
+    pub fn predict(&self, img: &[f32]) -> usize {
+        argmax(&self.infer(img))
+    }
+
+    /// Accuracy over a labelled set.
+    pub fn accuracy(&self, images: &[Vec<f32>], labels: &[u32]) -> f64 {
+        let correct = images
+            .iter()
+            .zip(labels)
+            .filter(|(img, &l)| self.predict(img) as u32 == l)
+            .count();
+        correct as f64 / labels.len().max(1) as f64
+    }
+
+    // ------------------------------------------------------ plasticity
+
+    /// One online unsupervised update, greedily layer by layer: each
+    /// projection computes its activity from the (pre-update) current
+    /// weights, updates its own traces, and feeds the activity forward
+    /// — the stacked generalization of `Network::train_unsup_step`.
+    pub fn train_unsup_step(&mut self, img: &[f32]) {
+        let _ = self.train_unsup_step_timed(img);
+    }
+
+    /// `train_unsup_step` with per-layer wall time (forward + update).
+    pub fn train_unsup_step_timed(&mut self, img: &[f32]) -> Vec<Duration> {
+        let (alpha, eps, gain) = (self.cfg.alpha, self.cfg.eps, self.cfg.gain);
+        let x = encode_image(img);
+        let mut timers = Vec::with_capacity(self.layers.len());
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.layers.len());
+        for l in 0..self.layers.len() {
+            let t0 = Instant::now();
+            let y = {
+                let input: &[f32] = if l == 0 { &x } else { &acts[l - 1] };
+                let y = self.layers[l].activate_masked(input, gain);
+                self.layers[l].train_step(input, &y, alpha, eps);
+                y
+            };
+            timers.push(t0.elapsed());
+            acts.push(y);
+        }
+        timers
+    }
+
+    /// One online supervised update of the head (hidden stack frozen) —
+    /// the stacked generalization of `Network::train_sup_step`.
+    pub fn train_sup_step(&mut self, img: &[f32], label: usize) {
+        let (_, acts) = self.layer_activities(img);
+        let t = one_hot(label, self.cfg.n_out());
+        let y = acts.last().expect("graph has >= 1 layer");
+        self.head.train_step(y, &t, self.cfg.alpha, self.cfg.eps);
+    }
+
+    /// One structural-plasticity pass over every hidden projection
+    /// (the head is fully connected and never rewired). Unit masks are
+    /// refreshed in place.
+    pub fn rewire(&mut self, sp: &StructuralPlasticity) -> GraphRewireStats {
+        let eps = self.cfg.eps;
+        self.layers
+            .iter_mut()
+            .map(|p| sp.rewire_projection(p, eps))
+            .collect()
+    }
+
+    /// Re-expand every projection's unit mask (after external mask
+    /// edits).
+    pub fn refresh_masks(&mut self) {
+        for p in self.layers.iter_mut() {
+            p.refresh_mask();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+    use crate::data::synth;
+
+    #[test]
+    fn one_layer_graph_matches_network_at_init() {
+        let cfg = by_name("tiny").unwrap();
+        let net = Network::new(cfg.clone(), 42);
+        let g = LayerGraph::new(cfg, 42);
+        assert_eq!(g.layers[0].pij, net.params.pij);
+        assert_eq!(g.layers[0].wij, net.params.wij);
+        assert_eq!(g.layers[0].mask_hc, net.params.mask_hc);
+        assert_eq!(g.head.pij, net.params.qik);
+        assert_eq!(g.head.wij, net.params.who);
+        assert_eq!(g.head.bj, net.params.bk);
+    }
+
+    #[test]
+    fn deep_layers_decorrelate_seeds() {
+        let cfg = by_name("toy-deep").unwrap();
+        let g = LayerGraph::new(cfg, 42);
+        assert_eq!(g.n_layers(), 2);
+        // Different RNG streams per layer: jitter patterns differ.
+        assert_ne!(g.layers[0].pij[0], g.layers[1].pij[0]);
+    }
+
+    #[test]
+    fn deep_infer_is_distribution() {
+        let cfg = by_name("toy-deep").unwrap();
+        let g = LayerGraph::new(cfg.clone(), 7);
+        let img = vec![0.4; cfg.hc_in()];
+        let p = g.infer(&img);
+        assert_eq!(p.len(), cfg.n_out());
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        let (_, acts) = g.layer_activities(&img);
+        assert_eq!(acts.len(), 2);
+        for (l, (act, dims)) in acts.iter().zip(cfg.layer_dims()).enumerate() {
+            assert_eq!(act.len(), dims.n_out(), "layer {l}");
+            for hc in act.chunks(dims.mc_out) {
+                let s: f32 = hc.iter().sum();
+                assert!((s - 1.0).abs() < 1e-4, "layer {l}: {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn deep_training_keeps_traces_probabilistic() {
+        let cfg = by_name("toy-deep").unwrap();
+        let mut g = LayerGraph::new(cfg.clone(), 3);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 24, 5, 0.15);
+        for img in &d.images {
+            g.train_unsup_step(img);
+        }
+        for (img, &l) in d.images.iter().zip(&d.labels) {
+            g.train_sup_step(img, l as usize);
+        }
+        for (l, p) in g.layers.iter().enumerate() {
+            assert!(p.pij.iter().all(|&v| v > 0.0 && v < 1.0), "layer {l}");
+            for hc in p.pj.chunks(p.dims.mc_out) {
+                let s: f32 = hc.iter().sum();
+                assert!((s - 1.0).abs() < 1e-3, "layer {l} pj sum {s}");
+            }
+        }
+        assert!(g.head.pij.iter().all(|&v| v > 0.0 && v < 1.0));
+    }
+
+    #[test]
+    fn params_roundtrip_is_lossless() {
+        let cfg = by_name("tiny").unwrap();
+        let mut net = Network::new(cfg.clone(), 11);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 16, 2, 0.15);
+        for img in &d.images {
+            net.train_unsup_step(img);
+        }
+        let g = LayerGraph::from_params(&cfg, &net.params).unwrap();
+        let back = g.to_params().unwrap();
+        assert_eq!(back.pij, net.params.pij);
+        assert_eq!(back.qik, net.params.qik);
+        assert_eq!(back.mask_hc, net.params.mask_hc);
+    }
+
+    #[test]
+    fn from_params_rejects_deep_config() {
+        let tiny = by_name("tiny").unwrap();
+        let deep = by_name("toy-deep").unwrap();
+        let p = Params::init(&tiny, 1);
+        let err = LayerGraph::from_params(&deep, &p).unwrap_err().to_string();
+        assert!(err.contains("hidden layers"), "{err}");
+    }
+
+    #[test]
+    fn rewire_preserves_per_layer_sparsity() {
+        let cfg = by_name("toy-deep").unwrap();
+        let mut g = LayerGraph::new(cfg.clone(), 9);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 48, 4, 0.15);
+        for img in &d.images {
+            g.train_unsup_step(img);
+        }
+        let stats = g.rewire(&StructuralPlasticity::default());
+        assert_eq!(stats.len(), 2);
+        for (l, p) in g.layers.iter().enumerate() {
+            assert_eq!(stats[l].swaps + stats[l].stable, p.dims.hc_out);
+            for h in 0..p.dims.hc_out {
+                let active: f32 = (0..p.dims.hc_in)
+                    .map(|i| p.mask_hc[i * p.dims.hc_out + h])
+                    .sum();
+                assert_eq!(active as usize, p.dims.nact, "layer {l} HC {h}");
+            }
+        }
+    }
+}

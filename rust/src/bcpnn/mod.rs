@@ -8,12 +8,18 @@
 //!  3. the **host side** of the real system: structural plasticity runs
 //!     here between artifact invocations, exactly as the paper runs it
 //!     on the host CPU next to the FPGA.
+//!
+//! [`layer`] generalizes the two-projection [`Network`] into a stacked
+//! [`LayerGraph`] (N hidden projections + classifier head); a 1-layer
+//! graph is bitwise identical to `Network`.
 
 pub mod checkpoint;
+pub mod layer;
 pub mod network;
 pub mod params;
 pub mod structural;
 
+pub use layer::{LayerGraph, Projection};
 pub use network::Network;
 pub use params::Params;
 pub use structural::{mutual_information, receptive_field, StructuralPlasticity};

@@ -65,34 +65,12 @@ impl Params {
 
     /// Derive w_ij / b_j from the input->hidden traces.
     pub fn recompute_ih_weights(&mut self, eps: f32) {
-        let n_h = self.pj.len();
-        for i in 0..self.pi.len() {
-            let pi = self.pi[i] + eps;
-            let row = &mut self.wij[i * n_h..(i + 1) * n_h];
-            let prow = &self.pij[i * n_h..(i + 1) * n_h];
-            for j in 0..n_h {
-                row[j] = ((prow[j] + eps * eps) / (pi * (self.pj[j] + eps))).ln();
-            }
-        }
-        for (b, &p) in self.bj.iter_mut().zip(&self.pj) {
-            *b = (p + eps).ln();
-        }
+        recompute_weights(&self.pi, &self.pj, &self.pij, &mut self.wij, &mut self.bj, eps);
     }
 
     /// Derive w_ho / b_k from the hidden->output traces.
     pub fn recompute_ho_weights(&mut self, eps: f32) {
-        let n_out = self.qk.len();
-        for i in 0..self.qi.len() {
-            let qi = self.qi[i] + eps;
-            let row = &mut self.who[i * n_out..(i + 1) * n_out];
-            let qrow = &self.qik[i * n_out..(i + 1) * n_out];
-            for k in 0..n_out {
-                row[k] = ((qrow[k] + eps * eps) / (qi * (self.qk[k] + eps))).ln();
-            }
-        }
-        for (b, &q) in self.bk.iter_mut().zip(&self.qk) {
-            *b = (q + eps).ln();
-        }
+        recompute_weights(&self.qi, &self.qk, &self.qik, &mut self.who, &mut self.bk, eps);
     }
 
     /// Expand the HC-level mask to unit level (n_in, n_h) row-major.
@@ -110,17 +88,45 @@ impl Params {
     }
 }
 
-/// Random structural mask: exactly `nact_hi` active input HCs per
-/// hidden HC (column-wise sparsity, as in the paper's nactHi).
-pub fn init_mask(cfg: &ModelConfig, seed: u64) -> Vec<f32> {
+/// Derive weights/bias from probability traces for one projection:
+/// w = ln((p_xy + eps^2) / ((p_x + eps)(p_y + eps))), b = ln(p_y + eps).
+/// Shared by [`Params`] (the classic two-projection container) and
+/// [`super::layer::Projection`] so both stay bitwise identical.
+pub fn recompute_weights(
+    pi: &[f32], pj: &[f32], pij: &[f32], wij: &mut [f32], bj: &mut [f32], eps: f32,
+) {
+    let n_out = pj.len();
+    for i in 0..pi.len() {
+        let p = pi[i] + eps;
+        let row = &mut wij[i * n_out..(i + 1) * n_out];
+        let prow = &pij[i * n_out..(i + 1) * n_out];
+        for j in 0..n_out {
+            row[j] = ((prow[j] + eps * eps) / (p * (pj[j] + eps))).ln();
+        }
+    }
+    for (b, &p) in bj.iter_mut().zip(pj) {
+        *b = (p + eps).ln();
+    }
+}
+
+/// Random structural mask for one projection: exactly `nact` active
+/// input HCs per output HC (column-wise sparsity, the paper's nactHi).
+/// Same RNG stream as the historical cfg-level init for layer-0 dims.
+pub fn init_mask_dims(hc_in: usize, hc_out: usize, nact: usize, seed: u64) -> Vec<f32> {
     let mut rng = XorShift64::new(seed.wrapping_add(0x3A5C));
-    let mut mask = vec![0.0f32; cfg.hc_in() * cfg.hc_h];
-    for h in 0..cfg.hc_h {
-        for idx in rng.sample_indices(cfg.hc_in(), cfg.nact_hi) {
-            mask[idx * cfg.hc_h + h] = 1.0;
+    let mut mask = vec![0.0f32; hc_in * hc_out];
+    for h in 0..hc_out {
+        for idx in rng.sample_indices(hc_in, nact) {
+            mask[idx * hc_out + h] = 1.0;
         }
     }
     mask
+}
+
+/// Random structural mask: exactly `nact_hi` active input HCs per
+/// hidden HC (column-wise sparsity, as in the paper's nactHi).
+pub fn init_mask(cfg: &ModelConfig, seed: u64) -> Vec<f32> {
+    init_mask_dims(cfg.hc_in(), cfg.hc_h, cfg.nact_hi, seed)
 }
 
 #[cfg(test)]

@@ -9,30 +9,43 @@
 //! strongest *silent* one (one swap per update, hysteresis via a margin
 //! so wiring settles).
 
-use crate::config::ModelConfig;
+use crate::config::{LayerDims, ModelConfig};
 
+use super::layer::Projection;
 use super::params::Params;
 
-/// Mutual information between input HC `hc_i` and hidden HC `hc_j`
-/// estimated from the (full, unmasked) probability traces:
+/// Mutual information between input HC `hc_i` and output HC `hc_j` of
+/// one projection's trace arrays:
 ///   MI = sum_{i in hc_i} sum_{j in hc_j} p_ij log(p_ij / (p_i p_j)).
-pub fn mutual_information(
-    params: &Params, cfg: &ModelConfig, hc_i: usize, hc_j: usize,
+pub fn mutual_information_dims(
+    pi: &[f32], pj: &[f32], pij: &[f32], dims: &LayerDims, eps: f32,
+    hc_i: usize, hc_j: usize,
 ) -> f64 {
-    let eps = cfg.eps;
-    let n_h = cfg.n_h();
+    let n_out = dims.n_out();
     let mut mi = 0.0f64;
-    for a in 0..cfg.mc_in {
-        let i = hc_i * cfg.mc_in + a;
-        let pi = params.pi[i] + eps;
-        for b in 0..cfg.mc_h {
-            let j = hc_j * cfg.mc_h + b;
-            let pij = params.pij[i * n_h + j] + eps * eps;
-            let pj = params.pj[j] + eps;
-            mi += pij as f64 * (pij as f64 / (pi as f64 * pj as f64)).ln();
+    for a in 0..dims.mc_in {
+        let i = hc_i * dims.mc_in + a;
+        let p_i = pi[i] + eps;
+        for b in 0..dims.mc_out {
+            let j = hc_j * dims.mc_out + b;
+            let p_ij = pij[i * n_out + j] + eps * eps;
+            let p_j = pj[j] + eps;
+            mi += p_ij as f64 * (p_ij as f64 / (p_i as f64 * p_j as f64)).ln();
         }
     }
     mi
+}
+
+/// Mutual information between input HC `hc_i` and hidden HC `hc_j`
+/// estimated from the (full, unmasked) probability traces — the
+/// layer-0 view of [`mutual_information_dims`].
+pub fn mutual_information(
+    params: &Params, cfg: &ModelConfig, hc_i: usize, hc_j: usize,
+) -> f64 {
+    let dims = cfg.layer_dims()[0];
+    mutual_information_dims(
+        &params.pi, &params.pj, &params.pij, &dims, cfg.eps, hc_i, hc_j,
+    )
 }
 
 /// Extract hidden HC `hc_j`'s receptive field as an image-shaped map of
@@ -76,38 +89,66 @@ impl StructuralPlasticity {
     /// One rewiring pass over all hidden HCs. Mutates `params.mask_hc`;
     /// the caller must re-expand unit masks afterwards.
     pub fn rewire(&self, params: &mut Params, cfg: &ModelConfig) -> RewireStats {
-        let mut stats = RewireStats::default();
-        for hc_j in 0..cfg.hc_h {
-            // Score all input HCs for this hidden HC.
-            let mi: Vec<f64> = (0..cfg.hc_in())
-                .map(|hc_i| mutual_information(params, cfg, hc_i, hc_j))
-                .collect();
-            let mut worst_active: Option<(usize, f64)> = None;
-            let mut best_silent: Option<(usize, f64)> = None;
-            for hc_i in 0..cfg.hc_in() {
-                let active = params.mask_hc[hc_i * cfg.hc_h + hc_j] > 0.0;
-                let v = mi[hc_i];
-                if active {
-                    if worst_active.map_or(true, |(_, w)| v < w) {
-                        worst_active = Some((hc_i, v));
-                    }
-                } else if best_silent.map_or(true, |(_, b)| v > b) {
-                    best_silent = Some((hc_i, v));
-                }
-            }
-            match (worst_active, best_silent) {
-                (Some((wa, wv)), Some((bs, bv)))
-                    if bv > wv * (1.0 + self.margin) + 1e-12 =>
-                {
-                    params.mask_hc[wa * cfg.hc_h + hc_j] = 0.0;
-                    params.mask_hc[bs * cfg.hc_h + hc_j] = 1.0;
-                    stats.swaps += 1;
-                }
-                _ => stats.stable += 1,
-            }
+        let dims = cfg.layer_dims()[0];
+        rewire_arrays(
+            &params.pi, &params.pj, &params.pij, &mut params.mask_hc,
+            &dims, cfg.eps, self.margin,
+        )
+    }
+
+    /// One rewiring pass over a single projection of a layer graph.
+    /// Refreshes the projection's unit-mask cache when wiring changed.
+    pub fn rewire_projection(&self, proj: &mut Projection, eps: f32) -> RewireStats {
+        let dims = proj.dims;
+        let stats = rewire_arrays(
+            &proj.pi, &proj.pj, &proj.pij, &mut proj.mask_hc,
+            &dims, eps, self.margin,
+        );
+        if stats.swaps > 0 {
+            proj.refresh_mask();
         }
         stats
     }
+}
+
+/// The MI-swap core shared by the `Params` and `Projection` paths:
+/// for each output HC, swap the weakest active input HC for the
+/// strongest silent one when it clears the hysteresis margin.
+fn rewire_arrays(
+    pi: &[f32], pj: &[f32], pij: &[f32], mask_hc: &mut [f32],
+    dims: &LayerDims, eps: f32, margin: f64,
+) -> RewireStats {
+    let mut stats = RewireStats::default();
+    for hc_j in 0..dims.hc_out {
+        // Score all input HCs for this output HC.
+        let mi: Vec<f64> = (0..dims.hc_in)
+            .map(|hc_i| mutual_information_dims(pi, pj, pij, dims, eps, hc_i, hc_j))
+            .collect();
+        let mut worst_active: Option<(usize, f64)> = None;
+        let mut best_silent: Option<(usize, f64)> = None;
+        for hc_i in 0..dims.hc_in {
+            let active = mask_hc[hc_i * dims.hc_out + hc_j] > 0.0;
+            let v = mi[hc_i];
+            if active {
+                if worst_active.map_or(true, |(_, w)| v < w) {
+                    worst_active = Some((hc_i, v));
+                }
+            } else if best_silent.map_or(true, |(_, b)| v > b) {
+                best_silent = Some((hc_i, v));
+            }
+        }
+        match (worst_active, best_silent) {
+            (Some((wa, wv)), Some((bs, bv)))
+                if bv > wv * (1.0 + margin) + 1e-12 =>
+            {
+                mask_hc[wa * dims.hc_out + hc_j] = 0.0;
+                mask_hc[bs * dims.hc_out + hc_j] = 1.0;
+                stats.swaps += 1;
+            }
+            _ => stats.stable += 1,
+        }
+    }
+    stats
 }
 
 #[cfg(test)]

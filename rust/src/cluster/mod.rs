@@ -19,16 +19,23 @@
 //!   (round-robin / least-outstanding), per-shard and cluster metrics,
 //!   and graceful failure re-routing, layered on the
 //!   `coordinator::server` batching path.
+//! - [`pipeline`] — the **pipeline-parallel executor** for stacked
+//!   layer-graph configs: `plan::plan_pipeline` places whole layers on
+//!   devices (each validated against the estimator + HBM capacity) and
+//!   the executor chains one dataflow worker per layer; bitwise
+//!   identical to `LayerGraph::infer`.
 //!
 //! `benches/cluster_scaling.rs` measures throughput at 1/2/4/8 shards;
 //! `examples/cluster_serve.rs` demos the full serving + failover flow.
 
 pub mod coordinator;
 pub mod executor;
+pub mod pipeline;
 pub mod plan;
 
 pub use coordinator::{
     pick_replica, ClusterConfig, ClusterReport, ClusterServer, ReplicaReport, SchedulePolicy,
 };
 pub use executor::{ShardReport, ShardedExecutor};
-pub use plan::{plan, PartitionPlan, ShardSpec};
+pub use pipeline::{PipelineParallelExecutor, StageExecReport};
+pub use plan::{plan, plan_pipeline, LayerStage, PartitionPlan, PipelinePlan, ShardSpec};

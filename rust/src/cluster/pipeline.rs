@@ -1,0 +1,301 @@
+//! Pipeline-parallel executor: one dataflow worker per layer, each
+//! standing in for the device a [`PipelinePlan`] stage placed it on.
+//!
+//! Execution model per image (the multi-device version of chaining
+//! dataflow kernels, stage l owning hidden layer l):
+//!
+//! ```text
+//! input --> [dev 0: layer 0 support+softmax] --> [dev 1: layer 1 ...]
+//!       --> ... --> [dev N-1: layer N-1 + classifier head] --> output
+//! ```
+//!
+//! Stages are connected by bounded [`Fifo`]s (the inter-device activity
+//! streams); every FIFO holds a full batch, so one broadcast+drain
+//! round can never deadlock — the same sizing argument the sharded
+//! executor makes. Each stage runs the *reference* projection code
+//! ([`Projection::activate_masked`](crate::bcpnn::Projection) /
+//! `activate_dense`), so pipelined inference is **bitwise identical**
+//! to [`LayerGraph::infer`] — pinned by `rust/tests/deep_stack.rs`.
+//!
+//! Failure model mirrors [`super::executor::ShardedExecutor`]: losing
+//! any stage device leaves the chain useless, so `fail_stage` closes
+//! every queue and all in-flight and future inference fails fast.
+
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::bcpnn::LayerGraph;
+use crate::coordinator::server::InferBackend;
+use crate::data::encode::encode_image;
+use crate::stream::fifo::{Fifo, FifoStatsSnapshot};
+
+use super::plan::PipelinePlan;
+
+/// One image's activity flowing between stages.
+struct StageJob {
+    seq: u64,
+    y: Vec<f32>,
+}
+
+/// Per-stage execution statistics, returned by
+/// [`PipelineParallelExecutor::shutdown`].
+#[derive(Debug, Clone)]
+pub struct StageExecReport {
+    /// Stage index == device index == layer index.
+    pub stage: usize,
+    /// Images processed by this stage.
+    pub items: u64,
+    /// Time spent computing (support + softmax, + head on the last).
+    pub busy: Duration,
+    /// Wall time of the stage worker thread.
+    pub wall: Duration,
+    /// Stats of the stage's input stream (backpressure visibility).
+    pub input_fifo: FifoStatsSnapshot,
+}
+
+/// A layer graph executing across N simulated devices, one layer each.
+pub struct PipelineParallelExecutor {
+    graph: Arc<LayerGraph>,
+    plan: PipelinePlan,
+    /// All inter-stage streams: `links[0]` feeds stage 0, `links[l+1]`
+    /// carries stage l's output; the last link is the result stream.
+    links: Vec<Fifo<StageJob>>,
+    workers: Vec<thread::JoinHandle<StageExecReport>>,
+    /// Serializes send+drain rounds (jobs carry chunk-local seqs).
+    io_lock: Mutex<()>,
+}
+
+impl PipelineParallelExecutor {
+    /// Spawn one worker per stage of `plan` over `graph`.
+    pub fn new(graph: LayerGraph, plan: &PipelinePlan) -> Result<PipelineParallelExecutor> {
+        plan.validate()?;
+        if plan.cfg != graph.cfg {
+            bail!(
+                "plan is for config {:?}, graph is {:?}",
+                plan.cfg.name, graph.cfg.name
+            );
+        }
+        let graph = Arc::new(graph);
+        let n_stages = plan.n_devices();
+        let batch = graph.cfg.batch.max(1);
+        // Every link holds a whole chunk: a full send+drain round can
+        // never block with the result stream undrained.
+        let links: Vec<Fifo<StageJob>> =
+            (0..=n_stages).map(|_| Fifo::with_capacity(batch)).collect();
+
+        let mut workers = Vec::with_capacity(n_stages);
+        for stage in 0..n_stages {
+            let g = graph.clone();
+            let rx = links[stage].clone();
+            let tx = links[stage + 1].clone();
+            let last = stage == n_stages - 1;
+            workers.push(thread::spawn(move || {
+                let start = Instant::now();
+                let mut items = 0u64;
+                let mut busy = Duration::ZERO;
+                let gain = g.cfg.gain;
+                while let Ok(job) = rx.recv() {
+                    let t0 = Instant::now();
+                    let mut y = g.layers[stage].activate_masked(&job.y, gain);
+                    if last {
+                        y = g.head.activate_dense(&y);
+                    }
+                    busy += t0.elapsed();
+                    items += 1;
+                    if tx.send(StageJob { seq: job.seq, y }).is_err() {
+                        break; // downstream closed: executor failed/shut down
+                    }
+                }
+                StageExecReport {
+                    stage,
+                    items,
+                    busy,
+                    wall: start.elapsed(),
+                    input_fifo: rx.stats(),
+                }
+            }));
+        }
+
+        Ok(PipelineParallelExecutor {
+            graph,
+            plan: plan.clone(),
+            links,
+            workers,
+            io_lock: Mutex::new(()),
+        })
+    }
+
+    pub fn plan(&self) -> &PipelinePlan {
+        &self.plan
+    }
+
+    pub fn graph(&self) -> &LayerGraph {
+        &self.graph
+    }
+
+    /// Snapshot of every stage's input-stream stats.
+    pub fn stage_queue_stats(&self) -> Vec<FifoStatsSnapshot> {
+        self.links[..self.plan.n_devices()]
+            .iter()
+            .map(Fifo::stats)
+            .collect()
+    }
+
+    /// Simulate losing stage `id`'s device. A chain missing any layer
+    /// is useless, so this closes *every* stream: workers drain out and
+    /// all in-flight and future inference fails fast.
+    pub fn fail_stage(&self, id: usize) {
+        if id < self.plan.n_devices() {
+            self.close_all();
+        }
+        // Out-of-range id: no such device, nothing fails.
+    }
+
+    /// True once any stage has failed (or the executor shut down).
+    pub fn is_failed(&self) -> bool {
+        self.links.iter().any(Fifo::is_closed)
+    }
+
+    /// Class probabilities for any number of images (dispatched in
+    /// batch-sized chunks). Bitwise identical to [`LayerGraph::infer`]
+    /// per image.
+    pub fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let hc_in = self.graph.cfg.hc_in();
+        for (i, img) in images.iter().enumerate() {
+            if img.len() != hc_in {
+                bail!(
+                    "image {i} has {} pixels, config {:?} expects {hc_in}",
+                    img.len(), self.graph.cfg.name
+                );
+            }
+        }
+        let guard = self.io_lock.lock().unwrap();
+        let mut out = Vec::with_capacity(images.len());
+        for chunk in images.chunks(self.graph.cfg.batch.max(1)) {
+            self.infer_chunk(chunk, &mut out)?;
+        }
+        drop(guard);
+        Ok(out)
+    }
+
+    /// One send+drain round for at most `batch` images.
+    fn infer_chunk(&self, imgs: &[Vec<f32>], out: &mut Vec<Vec<f32>>) -> Result<()> {
+        let input = &self.links[0];
+        for (k, img) in imgs.iter().enumerate() {
+            let x = encode_image(img);
+            if input.send(StageJob { seq: k as u64, y: x }).is_err() {
+                bail!("stage stream closed (simulated device failure)");
+            }
+        }
+        let results = self.links.last().expect("links are never empty");
+        let mut probs = vec![Vec::new(); imgs.len()];
+        for _ in 0..imgs.len() {
+            let job = results
+                .recv()
+                .map_err(|_| anyhow!("result stream closed (simulated device failure)"))?;
+            probs[job.seq as usize] = job.y;
+        }
+        out.extend(probs);
+        Ok(())
+    }
+
+    /// Drain and join all stage workers, returning per-stage reports
+    /// (ordered by stage).
+    pub fn shutdown(mut self) -> Vec<StageExecReport> {
+        self.close_all();
+        let mut reports: Vec<StageExecReport> = self
+            .workers
+            .drain(..)
+            .map(|h| h.join().expect("stage worker panicked"))
+            .collect();
+        reports.sort_by_key(|r| r.stage);
+        reports
+    }
+
+    fn close_all(&self) {
+        for f in &self.links {
+            f.close();
+        }
+    }
+}
+
+impl Drop for PipelineParallelExecutor {
+    fn drop(&mut self) {
+        self.close_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl InferBackend for PipelineParallelExecutor {
+    fn max_batch(&self) -> usize {
+        self.graph.cfg.batch
+    }
+
+    fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        PipelineParallelExecutor::infer_batch(self, images)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::plan::plan_pipeline;
+    use crate::config::by_name;
+    use crate::fpga::device::{FpgaDevice, KernelVersion};
+
+    fn exec() -> PipelineParallelExecutor {
+        let cfg = by_name("toy-deep").unwrap();
+        let p = plan_pipeline(&cfg, KernelVersion::Infer, &FpgaDevice::u55c()).unwrap();
+        PipelineParallelExecutor::new(LayerGraph::new(cfg, 7), &p).unwrap()
+    }
+
+    #[test]
+    fn rejects_mismatched_graph() {
+        let p = plan_pipeline(
+            &by_name("toy-deep").unwrap(),
+            KernelVersion::Infer,
+            &FpgaDevice::u55c(),
+        )
+        .unwrap();
+        let other = LayerGraph::new(by_name("tiny").unwrap(), 1);
+        assert!(PipelineParallelExecutor::new(other, &p).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_image_shape() {
+        let e = exec();
+        let err = e.infer_batch(&[vec![0.5; 3]]).unwrap_err().to_string();
+        assert!(err.contains("pixels"), "{err}");
+    }
+
+    #[test]
+    fn failed_stage_fails_fast_and_reports() {
+        let e = exec();
+        let img = vec![0.5; e.graph().cfg.hc_in()];
+        assert!(e.infer_batch(&[img.clone()]).is_ok());
+        assert!(!e.is_failed());
+        e.fail_stage(1);
+        assert!(e.is_failed());
+        let err = e.infer_batch(&[img]).unwrap_err().to_string();
+        assert!(err.contains("device failure"), "{err}");
+        let reports = e.shutdown();
+        assert_eq!(reports.len(), 2);
+        assert!(reports.iter().all(|r| r.items >= 1));
+    }
+
+    #[test]
+    fn queue_stats_visible() {
+        let e = exec();
+        let img = vec![0.25; e.graph().cfg.hc_in()];
+        e.infer_batch(&[img.clone(), img]).unwrap();
+        for s in e.stage_queue_stats() {
+            assert_eq!(s.pushes, 2);
+            assert_eq!(s.pops, 2);
+        }
+    }
+}

@@ -13,17 +13,15 @@
 
 use anyhow::{bail, Result};
 
-use crate::config::ModelConfig;
+use crate::config::{LayerDims, ModelConfig};
 use crate::fpga::device::{FpgaDevice, KernelVersion};
-use crate::fpga::estimator::{estimate, Utilization};
+use crate::fpga::estimator::{estimate, estimate_stack, Utilization};
+use crate::fpga::hbm::layer_hbm_bytes;
+use crate::fpga::timing;
 
-/// HBM capacity of one U55C stack (16 GB).
-pub const HBM_CAPACITY_BYTES: u64 = 16 * 1024 * 1024 * 1024;
-
-/// BRAM utilization above which the estimator's fmax derating says the
-/// build is effectively unroutable (model3 training sits at ~87% and
-/// already hits the 60 MHz floor; beyond ~95% Vivado gives up).
-pub const BRAM_CEILING_PCT: f64 = 95.0;
+// Device-envelope constants live with the estimator now (the stack
+// validator uses them too); re-exported here for the existing callers.
+pub use crate::fpga::estimator::{BRAM_CEILING_PCT, HBM_CAPACITY_BYTES};
 
 /// One shard: a contiguous run of hidden hypercolumns on one device.
 #[derive(Debug, Clone)]
@@ -115,31 +113,33 @@ impl PartitionPlan {
 }
 
 /// Parameter bytes a shard streams from its own HBM stack: the slices
-/// of the input->hidden arrays it owns (f32). Inference streams the
-/// weight slice + bias; training adds the joint/marginal traces and
-/// the write-back copies.
+/// of the input->hidden arrays it owns (f32). Delegates to the
+/// per-projection [`fpga::hbm::layer_hbm_bytes`](layer_hbm_bytes)
+/// model with the shard's hypercolumn slice as the fan-out.
+/// `n_units` must be hypercolumn-aligned (a multiple of `mc_h`) — the
+/// planner only ever produces aligned shards, and the per-projection
+/// model counts whole output hypercolumns.
 pub fn shard_hbm_bytes(cfg: &ModelConfig, n_units: usize, version: KernelVersion) -> u64 {
-    let n_in = cfg.n_in() as u64;
-    let units = n_units as u64;
-    let wij_slice = n_in * units;
-    let bj_slice = units;
-    let base = wij_slice + bj_slice;
-    let bytes = match version {
-        KernelVersion::Infer => base,
-        // pij slice + pi + pj slice, double-buffered write-back of the
-        // joint arrays (read old / write new, as the streamed kernel
-        // does).
-        KernelVersion::Train => 3 * wij_slice + n_in + 2 * bj_slice,
-        // + the MI sparsity-score stream (hc_in x shard HCs).
-        KernelVersion::Struct => {
-            3 * wij_slice + n_in + 2 * bj_slice + cfg.hc_in() as u64 * units / cfg.mc_h as u64
-        }
+    debug_assert_eq!(
+        n_units % cfg.mc_h,
+        0,
+        "shard unit count must be hypercolumn-aligned"
+    );
+    let dims = LayerDims {
+        index: 0,
+        hc_in: cfg.hc_in(),
+        mc_in: cfg.mc_in,
+        hc_out: n_units / cfg.mc_h,
+        mc_out: cfg.mc_h,
+        nact: cfg.nact_hi,
     };
-    4 * bytes
+    layer_hbm_bytes(&dims, version)
 }
 
 /// Split `cfg`'s hidden layer into `n_shards` balanced contiguous
 /// hypercolumn ranges and validate each against the device model.
+/// Stacked configs use [`plan_pipeline`] (whole layers per device)
+/// instead — hypercolumn sharding splits *within* one layer.
 pub fn plan(
     cfg: &ModelConfig,
     n_shards: usize,
@@ -147,6 +147,15 @@ pub fn plan(
     dev: &FpgaDevice,
 ) -> Result<PartitionPlan> {
     cfg.validate()?;
+    if cfg.n_layers() > 1 {
+        bail!(
+            "{}: hypercolumn sharding partitions a single hidden layer; \
+             the config stacks {} — use the pipeline-parallel planner \
+             (plan_pipeline) to place whole layers on devices",
+            cfg.name,
+            cfg.n_layers()
+        );
+    }
     if n_shards == 0 {
         bail!("cannot partition across 0 devices");
     }
@@ -219,6 +228,106 @@ pub fn plan(
     Ok(plan)
 }
 
+// ------------------------------------------------ pipeline parallelism
+
+/// One stage of a pipeline-parallel plan: a whole hidden layer's
+/// kernel on its own simulated device, with its modeled envelope and
+/// steady-state kernel time.
+#[derive(Debug, Clone)]
+pub struct LayerStage {
+    /// Device index == layer index (stage l runs layer l).
+    pub device: usize,
+    pub dims: LayerDims,
+    pub util: Utilization,
+    /// Parameter bytes resident in this device's HBM.
+    pub hbm_bytes: u64,
+    /// Modeled steady-state kernel time per image (seconds); the
+    /// slowest stage sets the pipeline's throughput.
+    pub kernel_s: f64,
+}
+
+/// A validated placement of whole layers onto devices: stage l owns
+/// hidden layer l (the classifier head rides on the last stage), and
+/// consecutive stages are chained by activity streams — the
+/// multi-device analogue of the single-kernel dataflow chain.
+#[derive(Debug, Clone)]
+pub struct PipelinePlan {
+    pub cfg: ModelConfig,
+    pub version: KernelVersion,
+    pub stages: Vec<LayerStage>,
+}
+
+impl PipelinePlan {
+    pub fn n_devices(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// The stage limiting steady-state throughput.
+    pub fn bottleneck(&self) -> &LayerStage {
+        self.stages
+            .iter()
+            .max_by(|a, b| a.kernel_s.partial_cmp(&b.kernel_s).unwrap())
+            .expect("plan has >= 1 stage")
+    }
+
+    /// Modeled steady-state throughput (images/s) with every stage
+    /// pipelining across consecutive images.
+    pub fn throughput_img_s(&self) -> f64 {
+        1.0 / self.bottleneck().kernel_s.max(1e-15)
+    }
+
+    /// Modeled per-image latency (seconds): an image traverses every
+    /// stage in sequence.
+    pub fn latency_s(&self) -> f64 {
+        self.stages.iter().map(|s| s.kernel_s).sum()
+    }
+
+    /// Structural invariants: one stage per hidden layer, in order.
+    pub fn validate(&self) -> Result<()> {
+        if self.stages.len() != self.cfg.n_layers() {
+            bail!(
+                "pipeline plan has {} stages for {} hidden layers",
+                self.stages.len(),
+                self.cfg.n_layers()
+            );
+        }
+        for (i, s) in self.stages.iter().enumerate() {
+            if s.device != i || s.dims.index != i {
+                bail!("stage {i} misplaced (device {}, layer {})", s.device, s.dims.index);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Place every hidden layer of `cfg` on its own simulated device,
+/// validating each layer's kernel against the device envelope and HBM
+/// capacity (errors name the offending layer, via `estimate_stack`).
+pub fn plan_pipeline(
+    cfg: &ModelConfig,
+    version: KernelVersion,
+    dev: &FpgaDevice,
+) -> Result<PipelinePlan> {
+    cfg.validate()?;
+    let est = estimate_stack(cfg, version, dev)?;
+    let breakdowns = timing::stack_breakdown(cfg, version, dev);
+    let stages = est
+        .layers
+        .into_iter()
+        .zip(breakdowns)
+        .map(|(l, b)| LayerStage {
+            device: l.dims.index,
+            dims: l.dims,
+            util: l.util,
+            hbm_bytes: l.hbm_bytes,
+            kernel_s: b.kernel_s(),
+        })
+        .collect();
+    let plan = PipelinePlan { cfg: cfg.clone(), version, stages };
+    plan.validate()?;
+    Ok(plan)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -286,6 +395,42 @@ mod tests {
         assert!(err.contains("BRAM"), "{err}");
         let p = plan(&cfg, 8, KernelVersion::Infer, &dev).unwrap();
         assert!(p.shards.iter().all(|s| s.util.bram_pct(&dev) <= BRAM_CEILING_PCT));
+    }
+
+    #[test]
+    fn pipeline_plan_places_one_layer_per_device() {
+        let dev = FpgaDevice::u55c();
+        for m in ["toy-deep", "mnist-deep2"] {
+            let cfg = by_name(m).unwrap();
+            let p = plan_pipeline(&cfg, KernelVersion::Infer, &dev).unwrap();
+            assert_eq!(p.n_devices(), cfg.n_layers());
+            p.validate().unwrap();
+            assert!(p.latency_s() > p.bottleneck().kernel_s * 0.99);
+            assert!(p.throughput_img_s() > 0.0);
+            for (i, s) in p.stages.iter().enumerate() {
+                assert_eq!(s.device, i);
+                assert!(s.hbm_bytes > 0);
+                assert!(s.util.freq_mhz >= 60.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_plan_works_for_single_layer_too() {
+        let dev = FpgaDevice::u55c();
+        let cfg = by_name("model1").unwrap();
+        let p = plan_pipeline(&cfg, KernelVersion::Train, &dev).unwrap();
+        assert_eq!(p.n_devices(), 1);
+    }
+
+    #[test]
+    fn hc_sharding_rejects_stacked_configs() {
+        let dev = FpgaDevice::u55c();
+        let cfg = by_name("toy-deep").unwrap();
+        let err = plan(&cfg, 2, KernelVersion::Infer, &dev)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("plan_pipeline"), "{err}");
     }
 
     #[test]

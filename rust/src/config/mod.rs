@@ -14,14 +14,69 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// One hidden layer of a stacked BCPNN: hypercolumn count, minicolumns
+/// per hypercolumn, and active incoming HC connections per output HC
+/// (structural sparsity, the per-layer "nactHi").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub hc: usize,
+    pub mc: usize,
+    pub nact: usize,
+}
+
+/// Full dimensions of one *projection* in the layer graph: the fan-in
+/// side (previous layer, or the encoded input for layer 0) and the
+/// fan-out side (this layer's units). Every per-layer consumer — the
+/// reference network, the FPGA estimator/timing models, the cluster
+/// planners — works off these dims instead of reading `ModelConfig`
+/// fields directly, which is what makes stacking possible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerDims {
+    /// Position in the stack (0 = the input-facing layer).
+    pub index: usize,
+    /// Input hypercolumns / minicolumns per input HC.
+    pub hc_in: usize,
+    pub mc_in: usize,
+    /// This layer's hypercolumns / minicolumns per HC.
+    pub hc_out: usize,
+    pub mc_out: usize,
+    /// Active input HCs per output HC.
+    pub nact: usize,
+}
+
+impl LayerDims {
+    pub fn n_in(&self) -> usize {
+        self.hc_in * self.mc_in
+    }
+    pub fn n_out(&self) -> usize {
+        self.hc_out * self.mc_out
+    }
+    /// Active (masked) synapses streamed per image through this
+    /// projection — the quantity the latency/roofline models run on.
+    pub fn active_synapses(&self) -> u64 {
+        self.nact as u64 * self.mc_in as u64 * self.n_out() as u64
+    }
+    /// f32 parameter-memory footprint of this projection's training
+    /// state: joint trace + weights, marginal traces, bias.
+    pub fn param_bytes(&self) -> usize {
+        4 * (2 * self.n_in() * self.n_out() + self.n_in() + 2 * self.n_out())
+    }
+}
+
 /// One BCPNN network configuration. See `python/compile/configs.py`
 /// for the layout conventions (shared verbatim).
+///
+/// The paper's topology is a single hidden layer; `hc_h`/`mc_h`/
+/// `nact_hi` describe that first layer and `extra_layers` stacks
+/// further hidden layers on top (empty = the classic single-layer
+/// network, losslessly). Use [`ModelConfig::layer_specs`] /
+/// [`ModelConfig::layer_dims`] to see the whole stack uniformly.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelConfig {
     pub name: String,
     /// Square input image side; `hc_in = img_side^2` (one HC per pixel).
     pub img_side: usize,
-    /// Hidden hypercolumns / minicolumns per hypercolumn.
+    /// Hidden hypercolumns / minicolumns per hypercolumn (layer 0).
     pub hc_h: usize,
     pub mc_h: usize,
     pub n_classes: usize,
@@ -37,6 +92,8 @@ pub struct ModelConfig {
     pub eps: f32,
     /// Softmax gain on support values.
     pub gain: f32,
+    /// Hidden layers stacked on top of layer 0 (empty = paper topology).
+    pub extra_layers: Vec<LayerSpec>,
 }
 
 impl ModelConfig {
@@ -53,12 +110,65 @@ impl ModelConfig {
         self.n_classes
     }
 
+    /// Number of hidden layers in the stack (>= 1).
+    pub fn n_layers(&self) -> usize {
+        1 + self.extra_layers.len()
+    }
+
+    /// The full hidden stack: layer 0 from the legacy fields, then the
+    /// extra layers. Single-layer configs map onto a 1-element stack.
+    pub fn layer_specs(&self) -> Vec<LayerSpec> {
+        let mut specs = Vec::with_capacity(self.n_layers());
+        specs.push(LayerSpec { hc: self.hc_h, mc: self.mc_h, nact: self.nact_hi });
+        specs.extend(self.extra_layers.iter().copied());
+        specs
+    }
+
+    /// Projection dims of every hidden layer: layer 0 reads the encoded
+    /// input, layer l > 0 reads layer l-1's hypercolumns.
+    pub fn layer_dims(&self) -> Vec<LayerDims> {
+        let mut dims = Vec::with_capacity(self.n_layers());
+        let (mut hc_in, mut mc_in) = (self.hc_in(), self.mc_in);
+        for (index, spec) in self.layer_specs().into_iter().enumerate() {
+            dims.push(LayerDims {
+                index,
+                hc_in,
+                mc_in,
+                hc_out: spec.hc,
+                mc_out: spec.mc,
+                nact: spec.nact,
+            });
+            hc_in = spec.hc;
+            mc_in = spec.mc;
+        }
+        dims
+    }
+
+    /// Dims of the classifier head: the last hidden layer fully
+    /// connected to one output hypercolumn of `n_classes` minicolumns.
+    pub fn head_dims(&self) -> LayerDims {
+        let last = *self.layer_specs().last().expect("stack is never empty");
+        LayerDims {
+            index: self.n_layers(),
+            hc_in: last.hc,
+            mc_in: last.mc,
+            hc_out: 1,
+            mc_out: self.n_classes,
+            nact: last.hc,
+        }
+    }
+
     /// Parameter-memory footprint of the training kernel in bytes
     /// (traces + weights, f32) — drives the FPGA BRAM/HBM modeling.
+    /// Sums every projection in the stack plus the classifier head;
+    /// identical to the historical two-projection formula for
+    /// single-layer configs.
     pub fn param_bytes(&self) -> usize {
-        let ih = 2 * self.n_in() * self.n_h() + self.n_in() + self.n_h() * 2;
-        let ho = 2 * self.n_h() * self.n_out() + self.n_h() + self.n_out() * 2;
-        4 * (ih + ho)
+        self.layer_dims()
+            .iter()
+            .map(LayerDims::param_bytes)
+            .sum::<usize>()
+            + self.head_dims().param_bytes()
     }
 
     /// Validate internal consistency (mirrors python test_configs).
@@ -84,13 +194,30 @@ impl ModelConfig {
         if self.batch == 0 {
             bail!("{}: batch must be positive", self.name);
         }
+        // Stacked layers: each extra layer's fan-in is the previous
+        // layer's hypercolumns, bounding its nact.
+        let mut prev_hc = self.hc_h;
+        for (i, l) in self.extra_layers.iter().enumerate() {
+            let layer = i + 1;
+            if l.hc == 0 || l.mc == 0 {
+                bail!("{}: layer {layer} has a zero dimension", self.name);
+            }
+            if l.nact == 0 || l.nact > prev_hc {
+                bail!(
+                    "{}: layer {layer} nact {} out of range (1..={prev_hc} \
+                     input hypercolumns)",
+                    self.name, l.nact
+                );
+            }
+            prev_hc = l.hc;
+        }
         Ok(())
     }
 
     // ------------------------------------------------------------ JSON
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::from(self.name.as_str())),
             ("img_side", Json::from(self.img_side)),
             ("hc_h", Json::from(self.hc_h)),
@@ -102,10 +229,42 @@ impl ModelConfig {
             ("mc_in", Json::from(self.mc_in)),
             ("eps", Json::from(self.eps as f64)),
             ("gain", Json::from(self.gain as f64)),
-        ])
+        ];
+        if !self.extra_layers.is_empty() {
+            fields.push((
+                "layers",
+                Json::Arr(
+                    self.extra_layers
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("hc", Json::from(l.hc)),
+                                ("mc", Json::from(l.mc)),
+                                ("nact", Json::from(l.nact)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Result<ModelConfig> {
+        let extra_layers = match v.get("layers") {
+            None => Vec::new(),
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|l| {
+                    Ok(LayerSpec {
+                        hc: l.req("hc")?.as_usize()?,
+                        mc: l.req("mc")?.as_usize()?,
+                        nact: l.req("nact")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+        };
         let cfg = ModelConfig {
             name: v.req("name")?.as_str()?.to_string(),
             img_side: v.req("img_side")?.as_usize()?,
@@ -120,6 +279,7 @@ impl ModelConfig {
                 as f32,
             gain: v.get("gain").map(|x| x.as_f64()).transpose()?.unwrap_or(1.0)
                 as f32,
+            extra_layers,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -150,10 +310,18 @@ fn cfg(
         mc_in: 2,
         eps: 1e-8,
         gain: 1.0,
+        extra_layers: Vec::new(),
     }
 }
 
-/// Built-in registry — MUST stay in sync with python/compile/configs.py.
+fn stacked(mut base: ModelConfig, layers: Vec<LayerSpec>) -> ModelConfig {
+    base.extra_layers = layers;
+    base
+}
+
+/// Built-in registry — the single-layer entries MUST stay in sync with
+/// python/compile/configs.py; the stacked entries are rust-side layer-
+/// graph topologies (no AOT artifacts; reference + pipeline paths).
 pub fn registry() -> BTreeMap<String, ModelConfig> {
     let list = vec![
         cfg("tiny", 8, 4, 16, 4, 32, 2e-2, 16),
@@ -163,6 +331,18 @@ pub fn registry() -> BTreeMap<String, ModelConfig> {
         cfg("model1", 28, 32, 128, 10, 128, 1e-3, 32), // MNIST
         cfg("model2", 28, 32, 256, 2, 128, 1e-3, 32),  // PneumoniaMNIST
         cfg("model3", 64, 32, 128, 2, 128, 1e-3, 32),  // BreastMNIST
+        // Stacked layer-graph configs:
+        stacked(
+            // MNIST-shaped 2-hidden-layer stack: model1's first layer,
+            // then a narrower integration layer.
+            cfg("mnist-deep2", 28, 32, 128, 10, 128, 1e-3, 32),
+            vec![LayerSpec { hc: 16, mc: 64, nact: 24 }],
+        ),
+        stacked(
+            // Reduced stack for tests/benches (tiny front layer).
+            cfg("toy-deep", 8, 4, 16, 4, 32, 2e-2, 8),
+            vec![LayerSpec { hc: 2, mc: 8, nact: 3 }],
+        ),
     ];
     list.into_iter().map(|c| (c.name.clone(), c)).collect()
 }
@@ -176,6 +356,8 @@ pub fn dataset_spec(name: &str) -> DatasetSpec {
         "tiny" => DatasetSpec { train: 256, test: 64, epochs: 3 },
         "small" => DatasetSpec { train: 512, test: 128, epochs: 3 },
         "edge" => DatasetSpec { train: 512, test: 128, epochs: 5 },
+        "mnist-deep2" => DatasetSpec { train: 2048, test: 512, epochs: 3 },
+        "toy-deep" => DatasetSpec { train: 256, test: 64, epochs: 3 },
         _ => DatasetSpec { train: 512, test: 128, epochs: 3 },
     }
 }
@@ -268,6 +450,68 @@ mod tests {
     fn unknown_name_lists_available() {
         let err = by_name("nope").unwrap_err().to_string();
         assert!(err.contains("model1"), "{err}");
+    }
+
+    #[test]
+    fn single_layer_maps_to_one_element_stack() {
+        let c = by_name("tiny").unwrap();
+        assert_eq!(c.n_layers(), 1);
+        let specs = c.layer_specs();
+        assert_eq!(specs, vec![LayerSpec { hc: 4, mc: 16, nact: 32 }]);
+        let dims = c.layer_dims();
+        assert_eq!(dims.len(), 1);
+        assert_eq!((dims[0].hc_in, dims[0].mc_in), (64, 2));
+        assert_eq!((dims[0].hc_out, dims[0].mc_out), (4, 16));
+        let head = c.head_dims();
+        assert_eq!((head.hc_in, head.mc_in), (4, 16));
+        assert_eq!((head.hc_out, head.mc_out), (1, 4));
+        assert_eq!(head.nact, 4);
+    }
+
+    #[test]
+    fn stacked_dims_chain_layer_to_layer() {
+        let c = by_name("toy-deep").unwrap();
+        assert_eq!(c.n_layers(), 2);
+        let dims = c.layer_dims();
+        // Layer 1 reads layer 0's hypercolumns.
+        assert_eq!((dims[1].hc_in, dims[1].mc_in), (4, 16));
+        assert_eq!((dims[1].hc_out, dims[1].mc_out), (2, 8));
+        assert_eq!(dims[1].nact, 3);
+        let head = c.head_dims();
+        assert_eq!((head.hc_in, head.mc_in), (2, 8));
+        assert_eq!(head.index, 2);
+    }
+
+    #[test]
+    fn param_bytes_matches_two_projection_formula_single_layer() {
+        for (_, c) in registry() {
+            if c.n_layers() > 1 {
+                continue;
+            }
+            let ih = 2 * c.n_in() * c.n_h() + c.n_in() + c.n_h() * 2;
+            let ho = 2 * c.n_h() * c.n_out() + c.n_h() + c.n_out() * 2;
+            assert_eq!(c.param_bytes(), 4 * (ih + ho), "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn deep_json_roundtrips_layers() {
+        let c = by_name("mnist-deep2").unwrap();
+        let j = c.to_json().to_string();
+        assert!(j.contains("\"layers\""), "{j}");
+        let back = ModelConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn validation_rejects_bad_stacks() {
+        let mut c = by_name("toy-deep").unwrap();
+        c.extra_layers[0].nact = 5; // > layer 0's 4 hypercolumns
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("layer 1"), "{err}");
+        let mut c = by_name("toy-deep").unwrap();
+        c.extra_layers[0].mc = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -14,7 +14,7 @@ use anyhow::{bail, Result};
 
 use crate::bcpnn::network::argmax;
 use crate::bcpnn::structural::StructuralPlasticity;
-use crate::bcpnn::Params;
+use crate::bcpnn::{LayerGraph, Params};
 use crate::config::ModelConfig;
 use crate::data::Dataset;
 use crate::runtime::session::{Session, Tensor};
@@ -75,6 +75,13 @@ impl Driver {
     /// Bind a loaded session to freshly initialized parameters.
     pub fn new(session: Session, config_name: &str, seed: u64) -> Result<Driver> {
         let cfg = session.manifest.get(config_name, "infer")?.config.clone();
+        if cfg.n_layers() > 1 {
+            bail!(
+                "{}: AOT artifacts are single-layer kernels; stacked configs \
+                 train on the reference path (GraphDriver)",
+                cfg.name
+            );
+        }
         let params = Params::init(&cfg, seed);
         Ok(Driver {
             cfg,
@@ -330,6 +337,135 @@ impl Driver {
     }
 }
 
+// ----------------------------------------------------- layer-graph path
+
+/// Per-layer accounting of a [`GraphDriver`] training run.
+#[derive(Debug, Clone)]
+pub struct LayerPhaseStats {
+    pub layer: usize,
+    /// Per-image latency of this layer's unsupervised phase
+    /// (forward + fused plasticity).
+    pub unsup: LatencyStats,
+    pub rewire_passes: usize,
+    pub rewire_swaps: usize,
+}
+
+/// Outcome of a full layer-graph train+evaluate run.
+#[derive(Debug, Clone)]
+pub struct GraphTrainOutcome {
+    pub train_acc: f64,
+    pub test_acc: f64,
+    /// One entry per hidden layer, input-facing first.
+    pub per_layer: Vec<LayerPhaseStats>,
+    pub sup: LatencyStats,
+    pub infer: LatencyStats,
+    pub total_s: f64,
+}
+
+/// Reference-path driver for stacked configs: no AOT artifacts exist
+/// for deep topologies, so the coordinator trains the pure-rust
+/// [`LayerGraph`] directly — same phase schedule as [`Driver::train`]
+/// (drop-remainder batching, host structural plasticity between
+/// batches), with per-layer latency and rewiring accounting.
+pub struct GraphDriver {
+    pub graph: LayerGraph,
+    structural: StructuralPlasticity,
+}
+
+impl GraphDriver {
+    pub fn new(cfg: ModelConfig, seed: u64) -> GraphDriver {
+        GraphDriver {
+            graph: LayerGraph::new(cfg, seed),
+            structural: StructuralPlasticity::default(),
+        }
+    }
+
+    /// Wrap an existing graph (e.g. loaded from a checkpoint).
+    pub fn with_graph(graph: LayerGraph) -> GraphDriver {
+        GraphDriver { graph, structural: StructuralPlasticity::default() }
+    }
+
+    /// Full pipeline: unsupervised epochs (+ optional per-projection
+    /// structural plasticity) -> one supervised pass -> evaluate.
+    pub fn train(
+        &mut self,
+        train: &Dataset,
+        test: &Dataset,
+        opts: &TrainOptions,
+    ) -> Result<GraphTrainOutcome> {
+        let t_total = Instant::now();
+        let b = self.graph.cfg.batch;
+        let n_layers = self.graph.n_layers();
+        let mut unsup_recs: Vec<Recorder> = (0..n_layers).map(|_| Recorder::new()).collect();
+        let mut sup_rec = Recorder::new();
+        let mut infer_rec = Recorder::new();
+        let mut rewire_passes = vec![0usize; n_layers];
+        let mut rewire_swaps = vec![0usize; n_layers];
+
+        for _epoch in 0..opts.epochs {
+            for (bi, (imgs, _)) in batches(train, b).enumerate() {
+                if imgs.len() < b {
+                    continue; // remainder dropped (streaming semantics)
+                }
+                for img in &imgs {
+                    let timers = self.graph.train_unsup_step_timed(img);
+                    for (rec, t) in unsup_recs.iter_mut().zip(timers) {
+                        rec.record(t);
+                    }
+                }
+                if opts.structural && (bi + 1) % opts.struct_interval == 0 {
+                    for (l, stats) in
+                        self.graph.rewire(&self.structural).into_iter().enumerate()
+                    {
+                        rewire_passes[l] += 1;
+                        rewire_swaps[l] += stats.swaps;
+                    }
+                }
+            }
+        }
+
+        for (imgs, labels) in batches(train, b) {
+            if imgs.len() < b {
+                continue;
+            }
+            for (img, &l) in imgs.iter().zip(&labels) {
+                let t0 = Instant::now();
+                self.graph.train_sup_step(img, l as usize);
+                sup_rec.record(t0.elapsed());
+            }
+        }
+
+        let t0 = Instant::now();
+        let train_acc = self.graph.accuracy(&train.images, &train.labels);
+        let test_acc = self.graph.accuracy(&test.images, &test.labels);
+        let n_eval = (train.len() + test.len()) as u32;
+        let per_img = t0.elapsed() / n_eval.max(1);
+        for _ in 0..n_eval {
+            infer_rec.record(per_img);
+        }
+
+        let per_layer = unsup_recs
+            .into_iter()
+            .enumerate()
+            .map(|(layer, rec)| LayerPhaseStats {
+                layer,
+                unsup: rec.stats(),
+                rewire_passes: rewire_passes[layer],
+                rewire_swaps: rewire_swaps[layer],
+            })
+            .collect();
+
+        Ok(GraphTrainOutcome {
+            train_acc,
+            test_acc,
+            per_layer,
+            sup: sup_rec.stats(),
+            infer: infer_rec.stats(),
+            total_s: t_total.elapsed().as_secs_f64(),
+        })
+    }
+}
+
 /// Iterate a dataset in batches of `b` (last batch may be short).
 pub fn batches(
     data: &Dataset,
@@ -357,6 +493,28 @@ mod tests {
         let total: usize = bs.iter().map(|(i, _)| i.len()).sum();
         assert_eq!(total, 10);
     }
+    #[test]
+    fn graph_driver_trains_deep_config_per_layer() {
+        let cfg = crate::config::by_name("toy-deep").unwrap();
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 48, 3, 0.15);
+        let (tr, te) = d.split(40);
+        let mut gd = GraphDriver::new(cfg, 42);
+        let opts = TrainOptions {
+            epochs: 1,
+            structural: true,
+            struct_interval: 2,
+            seed: 42,
+        };
+        let out = gd.train(&tr, &te, &opts).unwrap();
+        assert_eq!(out.per_layer.len(), 2);
+        for l in &out.per_layer {
+            assert!(l.unsup.count > 0, "layer {} saw no images", l.layer);
+            assert_eq!(l.rewire_passes, 2, "layer {}", l.layer);
+        }
+        assert!(out.sup.count > 0);
+        assert!((0.0..=1.0).contains(&out.test_acc));
+    }
+
     // PJRT-backed driver tests live in rust/tests/integration.rs
     // (they need built artifacts).
 }

@@ -7,6 +7,8 @@ pub mod driver;
 pub mod metrics;
 pub mod server;
 
-pub use driver::{Driver, TrainOutcome, TrainOptions};
+pub use driver::{
+    Driver, GraphDriver, GraphTrainOutcome, LayerPhaseStats, TrainOptions, TrainOutcome,
+};
 pub use metrics::{EnergyReport, LatencyStats, Recorder};
 pub use server::{InferBackend, InferenceServer, ServerConfig, ServerReport};

@@ -18,10 +18,21 @@
 //! fmax falls linearly with BRAM utilization (routing congestion),
 //! floored at 60 MHz.
 
-use crate::config::ModelConfig;
+use anyhow::{bail, Result};
+
+use crate::config::{LayerDims, ModelConfig};
 
 use super::device::{FpgaDevice, KernelVersion};
+use super::hbm::layer_hbm_bytes;
 use super::ops::{total_cost, FpOp};
+
+/// HBM capacity of one U55C stack (16 GB).
+pub const HBM_CAPACITY_BYTES: u64 = 16 * 1024 * 1024 * 1024;
+
+/// BRAM utilization above which the estimator's fmax derating says the
+/// build is effectively unroutable (model3 training sits at ~87% and
+/// already hits the 60 MHz floor; beyond ~95% Vivado gives up).
+pub const BRAM_CEILING_PCT: f64 = 95.0;
 
 /// Unroll width of the input->hidden datapath (64 floats = the merged
 /// 4-channel HBM packet of Fig. 4).
@@ -115,15 +126,17 @@ fn engine_ops(version: KernelVersion) -> Vec<(FpOp, u64)> {
     ops
 }
 
-/// Estimate the utilization of `version` built for `cfg` on `dev`.
-pub fn estimate(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> Utilization {
+/// Estimate the utilization of one projection kernel (`dims`) of
+/// `version` on `dev` — the per-layer core of the model; a stacked
+/// network builds one such kernel per layer.
+pub fn estimate_layer(dims: &LayerDims, version: KernelVersion, dev: &FpgaDevice) -> Utilization {
     let channels = hbm_channels(version);
     let eng = total_cost(&engine_ops(version));
 
     // Infrastructure: static shell + per-HBM-channel controllers +
     // stream/control logic proportional to engine size, plus small
     // model-dependent control (index counters scale with hc_in, softmax
-    // addressing with mc_h). Constants calibrated to Table 3 (M1 rows
+    // addressing with mc_out). Constants calibrated to Table 3 (M1 rows
     // land within ~1%; see module docs).
     let (shell_lut, dsp_shell) = match version {
         KernelVersion::Infer => (89_000u64, 0u64),
@@ -133,8 +146,8 @@ pub fn estimate(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> 
         + shell_lut
         + 6_000 * channels as u64
         + (eng.luts as f64 * 0.08) as u64
-        + 3 * cfg.hc_in() as u64
-        + 40 * cfg.mc_h as u64;
+        + 3 * dims.hc_in as u64
+        + 40 * dims.mc_out as u64;
     let dsps = eng.dsps
         + dsp_shell
         + if matches!(version, KernelVersion::Infer) { 0 } else { 32 * channels as u64 };
@@ -143,7 +156,7 @@ pub fn estimate(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> 
         _ => (luts as f64 * 1.20) as u64,
     };
 
-    // BRAM surrogate (blocks), linear in n_h and n_in; calibrated to
+    // BRAM surrogate (blocks), linear in n_out and n_in; calibrated to
     // Table 3. The intercept is negative (one-time shared buffers);
     // small configs clamp to the shell floor of 32 blocks.
     let (base, a_nh, b_nin) = match version {
@@ -151,7 +164,7 @@ pub fn estimate(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> 
         KernelVersion::Train => (-255.2, 0.10376, 0.17074),
         KernelVersion::Struct => (-219.2, 0.10376, 0.17074), // train + 36
     };
-    let brams = (base + a_nh * cfg.n_h() as f64 + b_nin * cfg.n_in() as f64)
+    let brams = (base + a_nh * dims.n_out() as f64 + b_nin * dims.n_in() as f64)
         .max(32.0)
         .min(dev.brams as f64);
 
@@ -166,6 +179,95 @@ pub fn estimate(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> 
     let freq_mhz = (f0 - k * bram_pct).clamp(60.0, f0);
 
     Utilization { luts, ffs, dsps, brams, freq_mhz, hbm_channels: channels }
+}
+
+/// Estimate the utilization of `version` built for `cfg` on `dev` —
+/// the layer-0 kernel (the paper's single-hidden-layer build).
+pub fn estimate(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> Utilization {
+    estimate_layer(&cfg.layer_dims()[0], version, dev)
+}
+
+/// One layer's resource/memory envelope inside a stack estimate.
+#[derive(Debug, Clone)]
+pub struct LayerEstimate {
+    pub dims: LayerDims,
+    pub util: Utilization,
+    /// Parameter bytes resident in HBM for this layer's kernel.
+    pub hbm_bytes: u64,
+}
+
+/// Per-layer envelopes of a whole stack, one kernel per hidden layer.
+#[derive(Debug, Clone)]
+pub struct StackEstimate {
+    pub version: KernelVersion,
+    pub layers: Vec<LayerEstimate>,
+}
+
+impl StackEstimate {
+    /// Aggregate LUTs across all layer kernels (one instance each).
+    pub fn total_luts(&self) -> u64 {
+        self.layers.iter().map(|l| l.util.luts).sum()
+    }
+
+    pub fn total_dsps(&self) -> u64 {
+        self.layers.iter().map(|l| l.util.dsps).sum()
+    }
+
+    pub fn total_brams(&self) -> f64 {
+        self.layers.iter().map(|l| l.util.brams).sum()
+    }
+
+    /// Slowest layer kernel's clock — the stack's pipeline clock when
+    /// every layer runs on its own device.
+    pub fn min_freq_mhz(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.util.freq_mhz)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Total HBM-resident parameter footprint across the stack.
+    pub fn total_hbm_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.hbm_bytes).sum()
+    }
+}
+
+/// Estimate every layer of `cfg`'s stack and validate each against the
+/// device envelope. Errors name the offending layer, so an unbuildable
+/// stack says *which* kernel to shrink or shard.
+pub fn estimate_stack(
+    cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice,
+) -> Result<StackEstimate> {
+    let mut layers = Vec::with_capacity(cfg.n_layers());
+    for dims in cfg.layer_dims() {
+        let util = estimate_layer(&dims, version, dev);
+        let hbm_bytes = layer_hbm_bytes(&dims, version);
+        let what = format!(
+            "{}: layer {} ({}x{} HC/MC kernel)",
+            cfg.name, dims.index, dims.hc_out, dims.mc_out
+        );
+        if util.luts > dev.luts {
+            bail!("{what}: {} LUTs exceed the {} on a {}", util.luts, dev.luts, dev.name);
+        }
+        if util.dsps > dev.dsps {
+            bail!("{what}: {} DSPs exceed the {} on a {}", util.dsps, dev.dsps, dev.name);
+        }
+        if util.bram_pct(dev) > BRAM_CEILING_PCT {
+            bail!(
+                "{what}: BRAM utilization {:.1}% above the {BRAM_CEILING_PCT}% \
+                 routability ceiling — shrink or shard this layer",
+                util.bram_pct(dev)
+            );
+        }
+        if hbm_bytes > HBM_CAPACITY_BYTES {
+            bail!(
+                "{what}: {hbm_bytes} parameter bytes exceed the 16 GB HBM stack \
+                 — shard this layer"
+            );
+        }
+        layers.push(LayerEstimate { dims, util, hbm_bytes });
+    }
+    Ok(StackEstimate { version, layers })
 }
 
 #[cfg(test)]
@@ -294,6 +396,49 @@ mod tests {
         let u = estimate(&by_name("model3").unwrap(), KernelVersion::Train, &dev);
         assert!(u.bram_pct(&dev) > 80.0);
         assert_eq!(u.freq_mhz, 60.0);
+    }
+
+    #[test]
+    fn stack_estimate_matches_single_layer_estimate() {
+        let dev = FpgaDevice::u55c();
+        for m in ["tiny", "model1", "model3"] {
+            let cfg = by_name(m).unwrap();
+            let s = estimate_stack(&cfg, KernelVersion::Train, &dev).unwrap();
+            assert_eq!(s.layers.len(), 1);
+            assert_eq!(s.layers[0].util, estimate(&cfg, KernelVersion::Train, &dev));
+            assert_eq!(s.min_freq_mhz(), s.layers[0].util.freq_mhz);
+        }
+    }
+
+    #[test]
+    fn deep_stacks_estimate_per_layer() {
+        let dev = FpgaDevice::u55c();
+        for m in ["mnist-deep2", "toy-deep"] {
+            let cfg = by_name(m).unwrap();
+            for v in KernelVersion::all() {
+                let s = estimate_stack(&cfg, v, &dev).unwrap();
+                assert_eq!(s.layers.len(), cfg.n_layers());
+                assert!(s.total_luts() > s.layers[0].util.luts);
+                assert!(s.total_hbm_bytes() > 0);
+                assert!(s.min_freq_mhz() >= 60.0);
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_layer_rejected_by_name() {
+        // Layer 1 blown up past the BRAM ceiling: the error must point
+        // at layer 1, not at the stack as a whole.
+        let mut cfg = by_name("toy-deep").unwrap();
+        cfg.extra_layers[0].hc = 32;
+        cfg.extra_layers[0].mc = 2048; // n_out = 65536
+        cfg.validate().unwrap();
+        let dev = FpgaDevice::u55c();
+        let err = estimate_stack(&cfg, KernelVersion::Train, &dev)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("layer 1"), "{err}");
+        assert!(err.contains("BRAM"), "{err}");
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! `p` partitioned channels into a `16*p`-float stream packet (p=4 ->
 //! the 64-float packets processed by the unrolled datapath).
 
-use super::device::FpgaDevice;
+use crate::config::LayerDims;
+
+use super::device::{FpgaDevice, KernelVersion};
 
 /// An HBM access configuration for one streamed array.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -60,6 +62,34 @@ impl HbmModel {
 /// of about 64" for p=4 (Fig. 4 ablation, `benches/ablation_hbm.rs`).
 pub fn packet_speedup(partitions: u32, burst_bits: u32) -> f64 {
     (partitions * burst_bits / 32) as f64
+}
+
+/// HBM-resident parameter bytes of one projection kernel (f32 arrays
+/// it streams per image). Inference holds the weight slice + bias;
+/// training adds the joint/marginal traces and the double-buffered
+/// write-back copies; the struct build adds the MI sparsity-score
+/// stream. This is the per-layer core of the capacity model — the
+/// cluster planner applies it to hypercolumn shards of a layer, the
+/// stack estimator to whole layers.
+pub fn layer_hbm_bytes(dims: &LayerDims, version: KernelVersion) -> u64 {
+    let n_in = dims.n_in() as u64;
+    let units = dims.n_out() as u64;
+    let wij_slice = n_in * units;
+    let bj_slice = units;
+    let base = wij_slice + bj_slice;
+    let bytes = match version {
+        KernelVersion::Infer => base,
+        // pij slice + pi + pj slice, double-buffered write-back of the
+        // joint arrays (read old / write new, as the streamed kernel
+        // does).
+        KernelVersion::Train => 3 * wij_slice + n_in + 2 * bj_slice,
+        // + the MI sparsity-score stream (hc_in x output HCs).
+        KernelVersion::Struct => {
+            3 * wij_slice + n_in + 2 * bj_slice
+                + dims.hc_in as u64 * units / dims.mc_out as u64
+        }
+    };
+    4 * bytes
 }
 
 #[cfg(test)]

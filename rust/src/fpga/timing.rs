@@ -10,10 +10,10 @@
 //! Model-1 train latency land at ~0.42 ms; streaming the full joint
 //! arrays would already exceed it on bandwidth alone).
 
-use crate::config::ModelConfig;
+use crate::config::{LayerDims, ModelConfig};
 
 use super::device::{FpgaDevice, KernelVersion};
-use super::estimator::{estimate, UNROLL_HO, UNROLL_IH, UNROLL_SM};
+use super::estimator::{estimate_layer, UNROLL_HO, UNROLL_IH, UNROLL_SM};
 use super::hbm::HbmModel;
 
 /// Latency decomposition for one image (seconds).
@@ -74,20 +74,26 @@ pub fn host_overhead_s(cfg: &ModelConfig, dev: &FpgaDevice) -> f64 {
         + 44.7e-9 * cfg.hc_in() as f64
 }
 
-/// Build the latency model for one (config, version) on `dev`.
-pub fn breakdown(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> LatencyBreakdown {
-    let util = estimate(cfg, version, dev);
+/// Latency model of one projection kernel. `head_macs` is the output-
+/// projection MAC count appended to this kernel's tail (the classifier
+/// head rides on the final layer's stage chain; 0 for inner layers).
+/// `host_overhead_s` is left at 0 — the caller adds the per-invocation
+/// overhead once per stack, not once per layer.
+pub fn breakdown_layer(
+    dims: &LayerDims, head_macs: u64, version: KernelVersion, dev: &FpgaDevice,
+) -> LatencyBreakdown {
+    let util = estimate_layer(dims, version, dev);
     let freq_hz = util.freq_mhz * 1e6;
-    let active = active_synapses(cfg);
+    let active = dims.active_synapses();
 
     let rd = HbmModel::paper_partitioned(freq_hz);
     let wr = HbmModel::paper_partitioned(freq_hz);
 
     // Support: stream w_active through the 64-lane MAC datapath.
     let support_cycles = active.div_ceil(UNROLL_IH);
-    // Softmax over n_h + output projection (n_h*n_out MACs, 16-wide).
-    let tail_cycles = (cfg.n_h() as u64).div_ceil(UNROLL_SM)
-        + (cfg.n_h() as u64 * cfg.n_out() as u64).div_ceil(UNROLL_HO);
+    // Softmax over this layer's units + any head MACs (16-wide).
+    let tail_cycles =
+        (dims.n_out() as u64).div_ceil(UNROLL_SM) + head_macs.div_ceil(UNROLL_HO);
 
     let (plasticity_cycles, hbm_read_cycles, hbm_write_cycles, sparsity_cycles) =
         match version {
@@ -120,8 +126,60 @@ pub fn breakdown(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) ->
         tail_cycles,
         sparsity_cycles,
         freq_hz,
-        host_overhead_s: host_overhead_s(cfg, dev),
+        host_overhead_s: 0.0,
     }
+}
+
+/// Build the latency model for one (config, version) on `dev` — the
+/// layer-0 kernel with the classifier head on its tail (the paper's
+/// single-hidden-layer build), plus the host dispatch overhead.
+pub fn breakdown(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> LatencyBreakdown {
+    let dims = cfg.layer_dims()[0];
+    let head_macs = cfg.n_h() as u64 * cfg.n_out() as u64;
+    let mut b = breakdown_layer(&dims, head_macs, version, dev);
+    b.host_overhead_s = host_overhead_s(cfg, dev);
+    b
+}
+
+/// Per-layer latency models for a whole stack: one kernel per hidden
+/// layer, chained like the FPGA would chain dataflow kernels; the head
+/// MACs ride on the final layer. Host overhead is not included (see
+/// [`stack_latency_ms`]).
+pub fn stack_breakdown(
+    cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice,
+) -> Vec<LatencyBreakdown> {
+    let dims = cfg.layer_dims();
+    let last = dims.len() - 1;
+    dims.iter()
+        .map(|d| {
+            let head_macs = if d.index == last {
+                d.n_out() as u64 * cfg.n_out() as u64
+            } else {
+                0
+            };
+            breakdown_layer(d, head_macs, version, dev)
+        })
+        .collect()
+}
+
+/// Per-image latency of the whole stack in milliseconds: an image
+/// traverses every layer kernel in sequence (sum of kernel times) plus
+/// one host dispatch. Equals [`latency_ms`] for single-layer configs.
+pub fn stack_latency_ms(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> f64 {
+    let kernels: f64 = stack_breakdown(cfg, version, dev)
+        .iter()
+        .map(LatencyBreakdown::kernel_s)
+        .sum();
+    (kernels + host_overhead_s(cfg, dev)) * 1e3
+}
+
+/// Steady-state per-image interval of the stack when every layer runs
+/// on its own device (pipeline parallelism): the slowest layer kernel.
+pub fn stack_bottleneck_s(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> f64 {
+    stack_breakdown(cfg, version, dev)
+        .iter()
+        .map(LatencyBreakdown::kernel_s)
+        .fold(0.0, f64::max)
 }
 
 /// Per-image latency in milliseconds (Table 2's "Latency" rows).
@@ -200,6 +258,35 @@ mod tests {
         let b = breakdown(&by_name("model1").unwrap(), KernelVersion::Train, &dev);
         assert!(b.hbm_write_cycles >= b.support_cycles);
         assert_eq!(b.bottleneck_cycles(), b.hbm_write_cycles.max(b.hbm_read_cycles));
+    }
+
+    #[test]
+    fn stack_latency_equals_single_layer_latency() {
+        let dev = FpgaDevice::u55c();
+        for m in ["tiny", "small", "model1", "model2", "model3"] {
+            let cfg = by_name(m).unwrap();
+            for v in KernelVersion::all() {
+                let single = latency_ms(&cfg, v, &dev);
+                let stacked = stack_latency_ms(&cfg, v, &dev);
+                assert_eq!(single, stacked, "{m}/{}", v.name());
+            }
+        }
+    }
+
+    #[test]
+    fn deep_stack_chains_layer_latencies() {
+        let dev = FpgaDevice::u55c();
+        let cfg = by_name("mnist-deep2").unwrap();
+        let bs = stack_breakdown(&cfg, KernelVersion::Train, &dev);
+        assert_eq!(bs.len(), 2);
+        // Inner layers carry no head MACs; only the final layer does.
+        assert!(bs[0].tail_cycles < bs[0].support_cycles);
+        // Whole-stack latency exceeds the slowest layer alone, and the
+        // pipeline bottleneck is one of the layers.
+        let sum: f64 = bs.iter().map(LatencyBreakdown::kernel_s).sum();
+        let bottleneck = stack_bottleneck_s(&cfg, KernelVersion::Train, &dev);
+        assert!(sum > bottleneck);
+        assert!(bs.iter().any(|b| (b.kernel_s() - bottleneck).abs() < 1e-15));
     }
 
     #[test]

@@ -19,8 +19,16 @@
 //! - **Scale-out** (`cluster/`) — the multi-device layer on top of L3:
 //!   a partition planner that shards the hidden layer by hypercolumn
 //!   across N simulated U55C devices (validated against the `fpga`
-//!   resource model), a sharded stream executor, and a replicated
-//!   cluster coordinator with scheduling and failover.
+//!   resource model), a sharded stream executor, a pipeline-parallel
+//!   planner/executor that places whole layers of a stacked network on
+//!   devices, and a replicated cluster coordinator with scheduling and
+//!   failover.
+//!
+//! The network core is a **layer graph** (`bcpnn::layer`): BCPNN as a
+//! stack of hypercolumn layers (`Projection` per fan-in, `LayerGraph`
+//! composing N hidden layers + the classifier head). Single-layer
+//! configs — the paper's topology — are the 1-element special case and
+//! stay bitwise identical to the seed `bcpnn::Network`.
 //!
 //! Modules map to DESIGN.md §3; the experiment index (every paper table
 //! and figure) is DESIGN.md §4.

@@ -38,6 +38,8 @@ COMMANDS:
                     --artifacts DIR)
   table2            Table 2 (modeled) (--models model1,model2,model3)
   table3            Table 3 (estimator) (--models ...)
+  stack             per-layer stack envelopes + pipeline placement
+                    (--models mnist-deep2,toy-deep,model1)
   roofline          Fig 6 operating points (--models ...)
   accuracy          Table 2 accuracy rows: PJRT path vs pure-rust CPU
                     (--config tiny --epochs N)
@@ -75,6 +77,17 @@ fn run(argv: Vec<String>) -> Result<()> {
             let models = models_arg(&args);
             let refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
             println!("{}", report::table3(&refs)?);
+            Ok(())
+        }
+        "stack" => {
+            let models = match args.get("models") {
+                Some(_) => models_arg(&args),
+                None => vec![
+                    "mnist-deep2".into(), "toy-deep".into(), "model1".into(),
+                ],
+            };
+            let refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+            println!("{}", report::stack_table(&refs)?);
             Ok(())
         }
         "roofline" => {
@@ -128,6 +141,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     let n_train = args.get_parse("train-size", spec.train)?;
     let n_test = args.get_parse("test-size", spec.test)?;
 
+    if cfg.n_layers() > 1 {
+        // Stacked configs have no AOT artifacts: train the layer graph
+        // on the reference path, per layer.
+        return cmd_train_graph(args, cfg, epochs, seed, n_train, n_test);
+    }
+
     println!("loading artifacts for {name} (PJRT CPU)...");
     let session = Session::load(&artifacts_dir(args), &name)?;
     println!("platform: {}", session.platform());
@@ -166,6 +185,57 @@ fn cmd_train(args: &Args) -> Result<()> {
         bcpnn_accel::bcpnn::checkpoint::save(
             std::path::Path::new(path), &cfg, &driver.params)?;
         println!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+/// Reference-path training for stacked layer-graph configs: per-layer
+/// latency/rewire accounting, checkpointed in the v2 graph format.
+fn cmd_train_graph(
+    args: &Args, cfg: bcpnn_accel::config::ModelConfig, epochs: usize, seed: u64,
+    n_train: usize, n_test: usize,
+) -> Result<()> {
+    use bcpnn_accel::coordinator::GraphDriver;
+
+    let name = cfg.name.clone();
+    let data = synth::generate(cfg.img_side, cfg.n_classes, n_train + n_test, seed, 0.15);
+    let (train, test) = data.split(n_train);
+    let opts = TrainOptions {
+        epochs,
+        structural: args.flag("struct"),
+        struct_interval: args.get_parse("struct-interval", 4usize)?,
+        seed,
+    };
+    println!(
+        "training {name} (reference path, {} hidden layers): {} train / {} test, \
+         {} epochs, structural={}",
+        cfg.n_layers(),
+        train.len(),
+        test.len(),
+        epochs,
+        opts.structural
+    );
+    let mut driver = GraphDriver::new(cfg, seed);
+    let out = driver.train(&train, &test, &opts)?;
+    println!(
+        "train acc: {:.1}%   test acc: {:.1}%",
+        out.train_acc * 100.0,
+        out.test_acc * 100.0
+    );
+    for l in &out.per_layer {
+        println!(
+            "layer {}: unsup {:.3} ms/img  rewires {} (swaps {})",
+            l.layer, l.unsup.mean_ms, l.rewire_passes, l.rewire_swaps
+        );
+    }
+    println!(
+        "sup {:.3} ms/img  infer {:.3} ms/img  total {:.2} s",
+        out.sup.mean_ms, out.infer.mean_ms, out.total_s
+    );
+    if let Some(path) = args.get("save") {
+        bcpnn_accel::bcpnn::checkpoint::save_graph(
+            std::path::Path::new(path), &driver.graph)?;
+        println!("checkpoint (v2 layer-graph) saved to {path}");
     }
     Ok(())
 }

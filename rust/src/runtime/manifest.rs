@@ -97,22 +97,11 @@ impl Manifest {
 
     fn parse_entry(dir: &Path, key: &str, v: &Json) -> Result<ArtifactSpec> {
         let cfg_json = v.req("config")?;
-        // The manifest stores the resolved config; map back to
-        // ModelConfig (it carries every field we need).
-        let config = ModelConfig {
-            name: cfg_json.req("name")?.as_str()?.to_string(),
-            img_side: cfg_json.req("img_side")?.as_usize()?,
-            hc_h: cfg_json.req("hc_h")?.as_usize()?,
-            mc_h: cfg_json.req("mc_h")?.as_usize()?,
-            n_classes: cfg_json.req("n_classes")?.as_usize()?,
-            nact_hi: cfg_json.req("nact_hi")?.as_usize()?,
-            alpha: cfg_json.req("alpha")?.as_f64()? as f32,
-            batch: cfg_json.req("batch")?.as_usize()?,
-            mc_in: cfg_json.req("mc_in")?.as_usize()?,
-            eps: cfg_json.req("eps")?.as_f64()? as f32,
-            gain: cfg_json.req("gain")?.as_f64()? as f32,
-        };
-        config.validate()?;
+        // The manifest stores the resolved config; map back through the
+        // shared ModelConfig JSON path (validates, and keeps any
+        // `layers` stack intact so Driver::new can reject deep configs
+        // explicitly instead of silently flattening them).
+        let config = ModelConfig::from_json(cfg_json)?;
         let spec = ArtifactSpec {
             key: key.to_string(),
             file: dir.join(v.req("file")?.as_str()?),

@@ -9,8 +9,12 @@
 //! ablation baseline for the paper's "~70% improvement" claim
 //! (`benches/ablation_dataflow.rs`).
 
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
+
+use crate::bcpnn::{LayerGraph, Network};
+use crate::data::encode::encode_image;
 
 use super::fifo::{Fifo, FifoStatsSnapshot};
 
@@ -186,6 +190,36 @@ impl<T: Send + 'static> Pipeline<T> {
     }
 }
 
+/// Build and run the layer-graph inference dataflow: `encode`, then
+/// one `support -> softmax` stage pair per hidden layer, then the
+/// classifier head — every stage on its own thread, chained by FIFOs
+/// of `depth`, exactly how the FPGA would chain one kernel per layer.
+/// Output order matches the input and each probability vector is
+/// bitwise identical to [`LayerGraph::infer`].
+pub fn layer_graph_pipeline(
+    graph: &Arc<LayerGraph>,
+    images: Vec<Vec<f32>>,
+    depth: usize,
+) -> (Vec<Vec<f32>>, PipelineReport) {
+    let mut p: Pipeline<Vec<f32>> = Pipeline::source("images", depth, images)
+        .stage("encode", depth, move |img: Vec<f32>| encode_image(&img));
+    for l in 0..graph.layers.len() {
+        let gs = graph.clone();
+        p = p.stage(&format!("support{l}"), depth, move |x: Vec<f32>| {
+            gs.layers[l].support_masked(&x)
+        });
+        let ga = graph.clone();
+        p = p.stage(&format!("softmax{l}"), depth, move |mut s: Vec<f32>| {
+            let d = ga.layers[l].dims;
+            Network::hc_softmax(&mut s, d.hc_out, d.mc_out, ga.cfg.gain);
+            s
+        });
+    }
+    let gh = graph.clone();
+    p.stage("head", depth, move |y: Vec<f32>| gh.head.activate_dense(&y))
+        .collect()
+}
+
 /// Run the same logical stages strictly sequentially (Fig. 3 left):
 /// each item passes through every function before the next item starts.
 /// This is the paper's "initial unoptimized sequential implementation".
@@ -307,5 +341,22 @@ mod tests {
             .collect();
         assert!(out.is_empty());
         assert_eq!(rep.items, 0);
+    }
+
+    #[test]
+    fn layer_graph_pipeline_has_one_stage_pair_per_layer() {
+        use crate::config::by_name;
+
+        let cfg = by_name("toy-deep").unwrap();
+        let graph = Arc::new(LayerGraph::new(cfg.clone(), 5));
+        let images: Vec<Vec<f32>> =
+            (0..6).map(|i| vec![0.1 * i as f32; cfg.hc_in()]).collect();
+        let (out, rep) = layer_graph_pipeline(&graph, images.clone(), 4);
+        // source + encode + 2*(support, softmax) + head + collect.
+        assert_eq!(rep.stages.len(), 3 + 2 * cfg.n_layers() + 1);
+        assert_eq!(out.len(), images.len());
+        for (img, probs) in images.iter().zip(&out) {
+            assert_eq!(probs, &graph.infer(img), "pipeline diverges");
+        }
     }
 }

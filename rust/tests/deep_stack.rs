@@ -1,0 +1,240 @@
+//! System tests of the layer-graph refactor.
+//!
+//! The load-bearing guarantee: a 1-element [`LayerGraph`] is **bitwise
+//! identical** to the seed [`Network`] — init, inference, and training
+//! — on every single-layer registry config (the seed numerics are the
+//! oracle). On top of that, a stacked config must run end to end:
+//! reference training, the multi-stage dataflow pipeline, and the
+//! pipeline-parallel cluster executor, all agreeing bit for bit.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bcpnn_accel::bcpnn::{LayerGraph, Network};
+use bcpnn_accel::cluster::{plan_pipeline, PipelineParallelExecutor};
+use bcpnn_accel::config::registry;
+use bcpnn_accel::config::by_name;
+use bcpnn_accel::coordinator::{InferenceServer, ServerConfig};
+use bcpnn_accel::data::synth;
+use bcpnn_accel::fpga::device::{FpgaDevice, KernelVersion};
+use bcpnn_accel::stream::pipeline::layer_graph_pipeline;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The bitwise-equality oracle, per config: fresh `Network` vs fresh
+/// 1-layer `LayerGraph` from the same seed — inference on a few
+/// images, then one (size-capped) train batch, then inference again.
+fn assert_graph_matches_network(name: &str) {
+    let cfg = by_name(name).unwrap();
+    assert_eq!(cfg.n_layers(), 1, "{name} is not a single-layer config");
+    let seed = 42u64;
+    let mut net = Network::new(cfg.clone(), seed);
+    let mut graph = LayerGraph::new(cfg.clone(), seed);
+
+    // Identical initial state. (Direct Vec equality: both sides run
+    // the same instruction sequence, so equal values are equal bits;
+    // no NaNs can arise from ln of positive probabilities.)
+    assert_eq!(graph.layers[0].pij, net.params.pij, "{name}: init pij");
+    assert_eq!(graph.layers[0].wij, net.params.wij, "{name}: init wij");
+    assert_eq!(graph.layers[0].mask_hc, net.params.mask_hc, "{name}: init mask");
+    assert_eq!(graph.head.wij, net.params.who, "{name}: init who");
+
+    // Large paper models get a reduced batch so the debug-build test
+    // stays fast; the math is per-image, so coverage is unaffected.
+    let n_imgs = if cfg.n_in() * cfg.n_h() > 1_000_000 { 2 } else { cfg.batch };
+    let d = synth::generate(cfg.img_side, cfg.n_classes, n_imgs.max(4), seed, 0.15);
+
+    for img in &d.images {
+        assert_eq!(
+            bits(&graph.infer(img)),
+            bits(&net.infer(img)),
+            "{name}: inference diverges before training"
+        );
+    }
+
+    // One train batch: unsupervised then supervised, image-parallel.
+    for img in d.images.iter().take(n_imgs) {
+        net.train_unsup_step(img);
+        graph.train_unsup_step(img);
+    }
+    for (img, &l) in d.images.iter().zip(&d.labels).take(n_imgs) {
+        net.train_sup_step(img, l as usize);
+        graph.train_sup_step(img, l as usize);
+    }
+
+    assert_eq!(graph.layers[0].pi, net.params.pi, "{name}: pi");
+    assert_eq!(graph.layers[0].pj, net.params.pj, "{name}: pj");
+    assert_eq!(graph.layers[0].pij, net.params.pij, "{name}: pij");
+    assert_eq!(graph.layers[0].wij, net.params.wij, "{name}: wij");
+    assert_eq!(graph.layers[0].bj, net.params.bj, "{name}: bj");
+    assert_eq!(graph.head.pi, net.params.qi, "{name}: qi");
+    assert_eq!(graph.head.pj, net.params.qk, "{name}: qk");
+    assert_eq!(graph.head.pij, net.params.qik, "{name}: qik");
+    assert_eq!(graph.head.wij, net.params.who, "{name}: who");
+    assert_eq!(graph.head.bj, net.params.bk, "{name}: bk");
+
+    for img in &d.images {
+        assert_eq!(
+            bits(&graph.infer(img)),
+            bits(&net.infer(img)),
+            "{name}: inference diverges after training"
+        );
+    }
+}
+
+#[test]
+fn one_layer_graph_bitwise_equals_network_small_configs() {
+    for name in ["tiny", "small", "edge"] {
+        assert_graph_matches_network(name);
+    }
+}
+
+#[test]
+fn one_layer_graph_bitwise_equals_network_model1() {
+    assert_graph_matches_network("model1");
+}
+
+#[test]
+fn one_layer_graph_bitwise_equals_network_model2() {
+    assert_graph_matches_network("model2");
+}
+
+#[test]
+fn one_layer_graph_bitwise_equals_network_model3() {
+    assert_graph_matches_network("model3");
+}
+
+#[test]
+fn every_registry_config_is_covered_by_the_oracle_or_deep_path() {
+    // The bitwise suite above must track the registry: every
+    // single-layer config is named in one of the oracle tests, every
+    // stacked config exercised by the deep end-to-end tests below.
+    let single: Vec<String> = registry()
+        .values()
+        .filter(|c| c.n_layers() == 1)
+        .map(|c| c.name.clone())
+        .collect();
+    assert_eq!(
+        single,
+        ["edge", "model1", "model2", "model3", "small", "tiny"]
+            .map(String::from)
+            .to_vec()
+    );
+    let deep: Vec<String> = registry()
+        .values()
+        .filter(|c| c.n_layers() > 1)
+        .map(|c| c.name.clone())
+        .collect();
+    assert_eq!(deep, ["mnist-deep2", "toy-deep"].map(String::from).to_vec());
+}
+
+/// A trained deep graph with non-trivial weights in every projection.
+fn trained_deep_graph(seed: u64) -> LayerGraph {
+    let cfg = by_name("toy-deep").unwrap();
+    let mut g = LayerGraph::new(cfg.clone(), seed);
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 96, seed, 0.15);
+    for _ in 0..2 {
+        for img in &d.images {
+            g.train_unsup_step(img);
+        }
+    }
+    for (img, &l) in d.images.iter().zip(&d.labels) {
+        g.train_sup_step(img, l as usize);
+    }
+    g
+}
+
+#[test]
+fn deep_config_trains_and_infers_end_to_end() {
+    let g = trained_deep_graph(42);
+    let cfg = g.cfg.clone();
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 32, 9, 0.15);
+    // Valid probability outputs on fresh data.
+    for img in &d.images {
+        let p = g.infer(img);
+        assert_eq!(p.len(), cfg.n_out());
+        assert!(p.iter().all(|v| v.is_finite() && *v >= 0.0));
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    }
+    // The stacked net still learns: no degenerate constant predictor.
+    let preds: Vec<usize> = d.images.iter().map(|i| g.predict(i)).collect();
+    let first = preds[0];
+    assert!(preds.iter().any(|&p| p != first), "constant predictor");
+}
+
+#[test]
+fn deep_dataflow_pipeline_bitwise_matches_reference() {
+    let g = Arc::new(trained_deep_graph(7));
+    let cfg = g.cfg.clone();
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 24, 3, 0.15);
+    let reference: Vec<Vec<u32>> = d.images.iter().map(|i| bits(&g.infer(i))).collect();
+    let (out, rep) = layer_graph_pipeline(&g, d.images.clone(), 8);
+    assert_eq!(out.len(), reference.len());
+    // One support+softmax stage pair per layer in the report.
+    let stage_names: Vec<&str> = rep.stages.iter().map(|s| s.name.as_str()).collect();
+    for l in 0..cfg.n_layers() {
+        assert!(stage_names.contains(&format!("support{l}").as_str()), "{stage_names:?}");
+        assert!(stage_names.contains(&format!("softmax{l}").as_str()), "{stage_names:?}");
+    }
+    for (i, (got, want)) in out.iter().zip(&reference).enumerate() {
+        assert_eq!(&bits(got), want, "image {i} diverges in the dataflow pipeline");
+    }
+}
+
+#[test]
+fn deep_cluster_pipeline_executor_bitwise_matches_reference() {
+    let g = trained_deep_graph(11);
+    let cfg = g.cfg.clone();
+    let dev = FpgaDevice::u55c();
+    let plan = plan_pipeline(&cfg, KernelVersion::Infer, &dev).unwrap();
+    // Per-layer estimator/timing numbers ride on the plan.
+    assert_eq!(plan.stages.len(), cfg.n_layers());
+    for s in &plan.stages {
+        assert!(s.kernel_s > 0.0);
+        assert!(s.util.luts > 0);
+        assert!(s.hbm_bytes > 0);
+    }
+
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 20, 5, 0.15);
+    let reference: Vec<Vec<u32>> = d.images.iter().map(|i| bits(&g.infer(i))).collect();
+    let exec = PipelineParallelExecutor::new(g, &plan).unwrap();
+    let probs = exec.infer_batch(&d.images).unwrap();
+    for (i, (got, want)) in probs.iter().zip(&reference).enumerate() {
+        assert_eq!(&bits(got), want, "image {i} diverges across devices");
+    }
+    let reports = exec.shutdown();
+    assert_eq!(reports.len(), cfg.n_layers());
+    for r in &reports {
+        assert_eq!(r.items, d.images.len() as u64, "stage {}", r.stage);
+    }
+}
+
+#[test]
+fn serving_layer_drives_pipeline_parallel_backend() {
+    // The generic batching server with a deep pipeline-parallel
+    // backend: the full serving story for stacked configs.
+    let g = trained_deep_graph(13);
+    let cfg = g.cfg.clone();
+    let plan = plan_pipeline(&cfg, KernelVersion::Infer, &FpgaDevice::u55c()).unwrap();
+    let server = InferenceServer::start(
+        move || PipelineParallelExecutor::new(g, &plan),
+        ServerConfig { queue_depth: 64, flush_timeout: Duration::from_millis(2) },
+    )
+    .unwrap();
+
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 30, 8, 0.15);
+    let handles: Vec<_> = d
+        .images
+        .iter()
+        .map(|img| server.submit(img.clone()).unwrap())
+        .collect();
+    for rx in &handles {
+        let probs = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(probs.len(), cfg.n_out());
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    }
+    let rep = server.shutdown();
+    assert_eq!(rep.served, 30);
+}
