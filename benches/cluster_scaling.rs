@@ -19,7 +19,10 @@
 
 use bcpnn_accel::bench_harness as bh;
 use bcpnn_accel::bcpnn::{LayerGraph, Network};
-use bcpnn_accel::cluster::{plan, plan_pipeline, PipelineParallelExecutor, ShardedExecutor};
+use bcpnn_accel::cluster::{
+    plan, plan_hybrid, plan_pipeline, Fleet, HybridExecutor, PipelineParallelExecutor,
+    ShardedExecutor,
+};
 use bcpnn_accel::config::{by_name, ModelConfig};
 use bcpnn_accel::data::synth;
 use bcpnn_accel::fpga::device::{FpgaDevice, KernelVersion};
@@ -186,10 +189,96 @@ fn deep_stack_section(ms_per_case: u64) {
     );
 }
 
+/// Hybrid section: the unified planner against both degenerate
+/// strategies on `mnist-deep2`. Cycle-modeled (deterministic, runs in
+/// `--quick` too) and **asserted**: the hybrid plan's modeled
+/// throughput must be at least the best of pure-pipeline and
+/// pure-shard — CI runs this as the bench-smoke gate. A measured
+/// wall-clock row for the software `HybridExecutor` rides along.
+fn hybrid_section(ms_per_case: u64) {
+    let dev = FpgaDevice::u55c();
+    let cfg = by_name("mnist-deep2").unwrap();
+    println!("\n-- hybrid: pipeline stages x hypercolumn shards (mnist-deep2, 3 devices) --");
+
+    let fleet = Fleet::homogeneous(&dev, 3);
+    let hp = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1).unwrap();
+    for st in &hp.stages {
+        for p in &st.pieces {
+            println!(
+                "stage {} layers {}..{} shard {}: HCs [{:>2},{:>2})  fmax {:>5.1} MHz  kernel {:>8.2} us",
+                st.stage, st.layer_lo, st.layer_hi, p.shard, p.hc_lo, p.hc_hi,
+                p.util.freq_mhz, p.kernel_s * 1e6,
+            );
+        }
+    }
+    let hybrid_tp = hp.throughput_img_s();
+
+    let pipe = plan_pipeline(&cfg, KernelVersion::Infer, &dev).unwrap();
+    let pipe_tp = pipe.throughput_img_s();
+    // Pure hypercolumn sharding cannot express a stacked config at
+    // all — its throughput contribution to "best of" is zero.
+    let shard_tp = match plan(&cfg, 3, KernelVersion::Infer, &dev) {
+        Ok(p) => {
+            let worst = p
+                .shards
+                .iter()
+                .map(|s| timing::breakdown(&s.sub_cfg, KernelVersion::Infer, &dev).kernel_s())
+                .fold(0.0f64, f64::max);
+            1.0 / worst.max(1e-15)
+        }
+        Err(_) => 0.0,
+    };
+    let best_pure = pipe_tp.max(shard_tp);
+    println!(
+        "modeled img/s: hybrid {:.0}  pure-pipeline {:.0}  pure-shard {}",
+        hybrid_tp,
+        pipe_tp,
+        if shard_tp > 0.0 { format!("{shard_tp:.0}") } else { "illegal (stacked)".into() },
+    );
+    println!(
+        "hybrid >= best pure strategy: {}  ({:.2}x)",
+        if hybrid_tp >= best_pure { "PASS" } else { "FAIL" },
+        hybrid_tp / best_pure.max(1e-15),
+    );
+    assert!(
+        hybrid_tp >= best_pure,
+        "hybrid plan must subsume both pure strategies: {hybrid_tp} vs {best_pure}"
+    );
+
+    // Measured: software hybrid executor on the toy stack (3 devices:
+    // one layer sharded, one solo — both fan-out and chaining live).
+    let cfg = by_name("toy-deep").unwrap();
+    let graph = LayerGraph::new(cfg.clone(), 42);
+    let data = synth::generate(cfg.img_side, cfg.n_classes, 64, 7, 0.15);
+    let hp = plan_hybrid(
+        &cfg,
+        &Fleet::homogeneous(&dev, 3),
+        KernelVersion::Infer,
+        0.1,
+    )
+    .unwrap();
+    let exec = HybridExecutor::new(graph, &hp).unwrap();
+    println!("\n{}", bh::header());
+    let r = bh::bench_for(
+        &format!("HybridExecutor x{} imgs (toy-deep, 3 devices)", data.len()),
+        std::time::Duration::from_millis(ms_per_case),
+        || {
+            let out = exec.infer_batch(&data.images).unwrap();
+            std::hint::black_box(out.len());
+        },
+    );
+    println!(
+        "{}  ({:.0} img/s; host-core bound)",
+        r.row(),
+        r.throughput(data.len() as u64)
+    );
+}
+
 fn main() {
     // `--quick` (the CI bench-smoke mode) trims the wall-clock
-    // sections; the cycle-modeled sections are deterministic and run
-    // in full either way.
+    // sections; the cycle-modeled sections — including the asserted
+    // hybrid-vs-pure comparison — are deterministic and run in full
+    // either way.
     let quick = std::env::args().any(|a| a == "--quick");
     let ms_per_case = if quick { 40 } else { 300 };
     println!("== cluster scaling: shard the hidden layer across devices ==");
@@ -198,4 +287,5 @@ fn main() {
     }
     measured_section(ms_per_case);
     deep_stack_section(ms_per_case);
+    hybrid_section(ms_per_case);
 }

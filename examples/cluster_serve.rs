@@ -1,81 +1,115 @@
-//! Cluster serving demo: replicated sharded BCPNN inference with
-//! scheduling and a mid-stream device failure.
+//! Cluster serving demo: replicated *hybrid* BCPNN inference —
+//! pipeline stages × hypercolumn shards — with scheduling and a
+//! mid-stream device failure.
 //!
 //!     cargo run --release --example cluster_serve -- \
-//!         --config small --replicas 3 --shards 2 --requests 512 \
-//!         --policy least --fail 1
+//!         --config mnist-deep2 --fleet u55c:3 --replicas 2 \
+//!         --requests 256 --policy least --fail 1
 //!
-//! Trains briefly (host network), deploys the trained parameters to
-//! every replica, streams requests through the cluster coordinator,
-//! kills one replica halfway, and prints the per-replica / per-shard
-//! report: the scale-out path the single-device `serve` command grows
-//! into.
+//! Trains briefly (host layer graph), deploys the trained graph to
+//! every replica through the placement the hybrid planner picks for
+//! the fleet (on `mnist-deep2` with 3 devices: the bottleneck layer
+//! sharded 2-way, the other layer on its own stage), streams requests
+//! through the cluster coordinator, kills one replica halfway, and
+//! prints the per-replica / per-worker report: the scale-out path the
+//! single-device `serve` command grows into.
 
 use std::time::Duration;
 
 use anyhow::Result;
-use bcpnn_accel::bcpnn::Network;
-use bcpnn_accel::cluster::{ClusterConfig, ClusterServer, SchedulePolicy};
-use bcpnn_accel::config::by_name;
+use bcpnn_accel::bcpnn::LayerGraph;
+use bcpnn_accel::cluster::{
+    plan_hybrid, ClusterConfig, ClusterServer, Fleet, SchedulePolicy,
+};
+use bcpnn_accel::config::{by_name, FleetSpec};
 use bcpnn_accel::data::synth;
+use bcpnn_accel::fpga::device::KernelVersion;
 use bcpnn_accel::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), &[])?;
-    let name = args.get_or("config", "small").to_string();
+    let name = args.get_or("config", "mnist-deep2").to_string();
     let cfg = by_name(&name)?;
-    let replicas: usize = args.get_parse("replicas", 3usize)?;
-    let shards: usize = args.get_parse("shards", 2usize)?;
-    let n_requests: usize = args.get_parse("requests", 512usize)?;
-    let train_n: usize = args.get_parse("train", 128usize)?;
+    let fleet_spec = FleetSpec::parse(args.get_or("fleet", "u55c:3"))?;
+    let replicas: usize = args.get_parse("replicas", 2usize)?;
+    let n_requests: usize = args.get_parse("requests", 256usize)?;
+    let train_n: usize = args.get_parse("train", 96usize)?;
     let seed: u64 = args.get_parse("seed", 42u64)?;
     let fail_replica: i64 = args.get_parse("fail", -1i64)?;
+    let tol: f64 = args.get_parse("tol", 0.10f64)?;
     let policy = match args.get_or("policy", "least") {
         "rr" | "round-robin" => SchedulePolicy::RoundRobin,
         _ => SchedulePolicy::LeastOutstanding,
     };
 
-    // Train on the host, then deploy the trained net fleet-wide — the
-    // paper's train-once / serve-everywhere flow, scaled out.
-    let mut net = Network::new(cfg.clone(), seed);
+    // Train on the host, then deploy the trained graph fleet-wide —
+    // the paper's train-once / serve-everywhere flow, scaled out.
+    let mut graph = LayerGraph::new(cfg.clone(), seed);
     if train_n > 0 {
         let d = synth::generate(cfg.img_side, cfg.n_classes, train_n, seed, 0.15);
         for img in &d.images {
-            net.train_unsup_step(img);
+            graph.train_unsup_step(img);
         }
         for (img, &l) in d.images.iter().zip(&d.labels) {
-            net.train_sup_step(img, l as usize);
+            graph.train_sup_step(img, l as usize);
         }
-        println!("trained on {train_n} images (host)");
+        println!("trained on {train_n} images (host, {} hidden layers)", cfg.n_layers());
     }
 
-    let server = ClusterServer::start_with(
-        net,
+    // One hybrid plan serves every replica: the planner picks the
+    // stage cut and the shard fan-out from the modeled latencies.
+    let fleet = Fleet::resolve(&fleet_spec)?;
+    let plan = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, tol)?;
+    println!(
+        "cluster up: {replicas} replicas x {} devices (fleet [{}]), policy {policy:?}",
+        plan.n_devices_used(),
+        fleet_spec.devices.join(", ")
+    );
+    for st in &plan.stages {
+        for p in &st.pieces {
+            let dev = &plan.fleet[p.device_index];
+            println!(
+                "  stage {} layers {}..{} shard {}: HCs [{}, {}) on {}  fmax {:.0} MHz  \
+                 kernel {:.1} us  HBM {:.1} MB",
+                st.stage,
+                st.layer_lo,
+                st.layer_hi,
+                p.shard,
+                p.hc_lo,
+                p.hc_hi,
+                dev.name,
+                p.util.freq_mhz,
+                p.kernel_s * 1e6,
+                p.hbm_bytes as f64 / 1e6
+            );
+        }
+        println!(
+            "  stage {} interval {:.1} us  skew {:.3}{}",
+            st.stage,
+            st.interval_s() * 1e6,
+            st.skew(),
+            if st.balanced { "" } else { "  [equal-split fallback]" }
+        );
+    }
+    println!(
+        "  modeled: bottleneck {:.1} us -> {:.0} img/s per replica",
+        plan.bottleneck_s() * 1e6,
+        plan.throughput_img_s()
+    );
+
+    let server = ClusterServer::start_hybrid(
+        graph,
+        &plan,
         ClusterConfig {
             replicas,
-            shards_per_replica: shards,
+            // Ignored by start_hybrid — the per-replica topology comes
+            // from the plan; the field only drives start_with.
+            shards_per_replica: plan.n_devices_used(),
             queue_depth: 256,
             flush_timeout: Duration::from_millis(2),
             policy,
         },
     )?;
-    let plan = server.plan();
-    println!(
-        "cluster up: {replicas} replicas x {shards} shards ({} devices), policy {policy:?}",
-        replicas * shards
-    );
-    for s in &plan.shards {
-        println!(
-            "  shard {}: HCs [{}, {})  n_h {}  BRAM {:.1}  fmax {:.0} MHz  HBM {:.1} MB",
-            s.id,
-            s.hc_lo,
-            s.hc_hi,
-            s.n_units(),
-            s.util.brams,
-            s.util.freq_mhz,
-            s.hbm_bytes as f64 / 1e6
-        );
-    }
 
     let data = synth::generate(cfg.img_side, cfg.n_classes, n_requests, seed + 1, 0.15);
     let mut pending = Vec::with_capacity(n_requests);
@@ -148,7 +182,8 @@ fn main() -> Result<()> {
         );
         for s in &r.shards {
             println!(
-                "    shard {}: {} imgs  busy {:.1} ms  queue high-water {}",
+                "    stage {} shard {}: {} imgs  busy {:.1} ms  queue high-water {}",
+                s.stage,
                 s.shard,
                 s.items,
                 s.busy.as_secs_f64() * 1e3,

@@ -168,6 +168,30 @@ impl Projection {
         s
     }
 
+    /// Masked support restricted to output units `[lo, hi)` — the
+    /// shard-local slice of [`Projection::support_masked`]. Each output
+    /// column accumulates in exactly the order the full computation
+    /// uses, so a gather of slices is bitwise identical to the whole
+    /// vector (the hybrid executor's intra-stage fan-out runs on this,
+    /// the way `Network::support_cols` backs the single-layer shards).
+    pub fn support_cols(&self, x: &[f32], lo: usize, hi: usize) -> Vec<f32> {
+        let n_out = self.dims.n_out();
+        debug_assert!(lo <= hi && hi <= n_out);
+        debug_assert_eq!(x.len(), self.dims.n_in());
+        let mut s = self.bj[lo..hi].to_vec();
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let wrow = &self.wij[i * n_out + lo..i * n_out + hi];
+            let mrow = &self.mask_unit[i * n_out + lo..i * n_out + hi];
+            for j in 0..(hi - lo) {
+                s[j] += xi * wrow[j] * mrow[j];
+            }
+        }
+        s
+    }
+
     /// Dense support: s_k = b_k + sum_j y_j w_jk — the head datapath
     /// (`Network::output_activity` before its softmax).
     pub fn support_dense(&self, y: &[f32]) -> Vec<f32> {
@@ -473,6 +497,28 @@ mod tests {
             }
         }
         assert!(g.head.pij.iter().all(|&v| v > 0.0 && v < 1.0));
+    }
+
+    #[test]
+    fn support_cols_slices_bitwise_match_full_support() {
+        let cfg = by_name("toy-deep").unwrap();
+        let g = LayerGraph::new(cfg.clone(), 5);
+        let img = vec![0.3; cfg.hc_in()];
+        let (x, acts) = g.layer_activities(&img);
+        for (l, p) in g.layers.iter().enumerate() {
+            let input: &[f32] = if l == 0 { &x } else { &acts[l - 1] };
+            let full = p.support_masked(input);
+            // Any hypercolumn-aligned split reassembles to the same bits.
+            let mc = p.dims.mc_out;
+            for cut in 1..p.dims.hc_out {
+                let mid = cut * mc;
+                let mut glued = p.support_cols(input, 0, mid);
+                glued.extend(p.support_cols(input, mid, full.len()));
+                let a: Vec<u32> = glued.iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = full.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "layer {l} cut {cut}");
+            }
+        }
     }
 
     #[test]

@@ -4,15 +4,18 @@
 //! Layered on `coordinator::server`: each replica runs the same
 //! dynamic-batching loop (`collect_batch`) the single-device
 //! [`InferenceServer`](crate::coordinator::InferenceServer) runs, but
-//! the backend is a [`ShardedExecutor`] spanning N simulated devices,
-//! and a scheduling layer spreads requests across replicas:
+//! the backend is a [`HybridExecutor`] spanning the devices of a
+//! [`HybridPlan`] — a sharded single-layer network
+//! ([`ClusterServer::start_with`]) or a full two-level stage × shard
+//! placement ([`ClusterServer::start_hybrid`]) — and a scheduling
+//! layer spreads requests across replicas:
 //!
 //! - **round-robin** — cheap, uniform traffic;
 //! - **least-outstanding** — tracks in-flight requests per replica and
 //!   routes to the emptiest queue (better tail latency under skew).
 //!
 //! Failure model: when a replica's executor fails (a simulated device
-//! loss, see [`ShardedExecutor::fail_shard`], or injected via
+//! loss, see [`HybridExecutor::fail_device`], or injected via
 //! [`ClusterServer::fail_replica`]), the replica marks itself
 //! unhealthy, re-routes its entire queue — including the batch it was
 //! about to serve — to the least-loaded healthy peer, and exits.
@@ -25,15 +28,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::bcpnn::Network;
+use crate::bcpnn::{LayerGraph, Network};
 use crate::config::ModelConfig;
 use crate::coordinator::metrics::{LatencyStats, Recorder};
 use crate::coordinator::server::{collect_batch, InferBackend};
 use crate::fpga::device::{FpgaDevice, KernelVersion};
 use crate::stream::fifo::Fifo;
 
-use super::executor::{ShardReport, ShardedExecutor};
-use super::plan::{plan, PartitionPlan};
+use super::hybrid::{HybridExecutor, WorkerReport};
+use super::placement::{pure_shard, HybridPlan};
 
 /// Request scheduling policy across replicas.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,7 +50,9 @@ pub enum SchedulePolicy {
 pub struct ClusterConfig {
     /// Full-model replicas (each spans `shards_per_replica` devices).
     pub replicas: usize,
-    /// Devices one replica's hidden layer is sharded across.
+    /// Devices one replica's hidden layer is sharded across. Only
+    /// [`ClusterServer::start`]/[`start_with`](ClusterServer::start_with)
+    /// read this; `start_hybrid` takes its topology from the plan.
     pub shards_per_replica: usize,
     /// Per-replica request queue depth (backpressure bound).
     pub queue_depth: usize,
@@ -100,8 +105,8 @@ pub struct ReplicaReport {
     /// Requests this replica re-routed to peers after failing.
     pub rerouted_out: u64,
     pub failed: bool,
-    /// Per-shard (per simulated device) execution reports.
-    pub shards: Vec<ShardReport>,
+    /// Per-worker (per placed kernel) execution reports.
+    pub shards: Vec<WorkerReport>,
 }
 
 /// Post-shutdown statistics for the whole cluster.
@@ -141,7 +146,7 @@ pub struct ClusterServer {
     workers: Vec<thread::JoinHandle<(ReplicaReport, Recorder)>>,
     rr: AtomicUsize,
     policy: SchedulePolicy,
-    plan: PartitionPlan,
+    plan: HybridPlan,
 }
 
 impl ClusterServer {
@@ -152,14 +157,30 @@ impl ClusterServer {
         Self::start_with(Network::new(cfg.clone(), seed), ccfg)
     }
 
-    /// Start a cluster serving (replicas of) an existing network —
-    /// e.g. one trained single-device and deployed fleet-wide.
+    /// Start a cluster serving (replicas of) an existing single-layer
+    /// network — e.g. one trained single-device and deployed
+    /// fleet-wide. Each replica spans `shards_per_replica` devices via
+    /// the degenerate 1-stage hybrid plan.
     pub fn start_with(net: Network, ccfg: ClusterConfig) -> Result<ClusterServer> {
+        let dev = FpgaDevice::u55c();
+        let plan = pure_shard(&net.cfg, ccfg.shards_per_replica, KernelVersion::Infer, &dev)?;
+        let graph = LayerGraph::from_params(&net.cfg, &net.params)?;
+        Self::start_hybrid(graph, &plan, ccfg)
+    }
+
+    /// Start a cluster of replicas each executing `graph` across the
+    /// devices of `plan` — the full two-level path: pipeline stages
+    /// with intra-stage shard fan-out, replicated behind one front
+    /// door.
+    pub fn start_hybrid(
+        graph: LayerGraph,
+        plan: &HybridPlan,
+        ccfg: ClusterConfig,
+    ) -> Result<ClusterServer> {
         if ccfg.replicas == 0 {
             bail!("cluster needs at least one replica");
         }
-        let dev = FpgaDevice::u55c();
-        let shard_plan = plan(&net.cfg, ccfg.shards_per_replica, KernelVersion::Infer, &dev)?;
+        plan.validate()?;
 
         let handles: Vec<ReplicaHandle> = (0..ccfg.replicas)
             .map(|_| ReplicaHandle {
@@ -172,7 +193,7 @@ impl ClusterServer {
 
         let mut workers = Vec::with_capacity(ccfg.replicas);
         for id in 0..ccfg.replicas {
-            let exec = ShardedExecutor::new(net.clone(), &shard_plan)?;
+            let exec = HybridExecutor::new(graph.clone(), plan)?;
             let peers = handles.clone();
             let flush = ccfg.flush_timeout;
             workers.push(thread::spawn(move || replica_loop(id, exec, peers, flush)));
@@ -183,11 +204,11 @@ impl ClusterServer {
             workers,
             rr: AtomicUsize::new(0),
             policy: ccfg.policy,
-            plan: shard_plan,
+            plan: plan.clone(),
         })
     }
 
-    pub fn plan(&self) -> &PartitionPlan {
+    pub fn plan(&self) -> &HybridPlan {
         &self.plan
     }
 
@@ -294,7 +315,7 @@ impl Drop for ClusterServer {
 /// failure path that re-routes instead of dropping.
 fn replica_loop(
     id: usize,
-    exec: ShardedExecutor,
+    exec: HybridExecutor,
     peers: Vec<ReplicaHandle>,
     flush_timeout: Duration,
 ) -> (ReplicaReport, Recorder) {

@@ -1,7 +1,13 @@
-//! Sharded executor: one dataflow worker per simulated device.
+//! Sharded executor: the legacy single-layer surface over the hybrid
+//! engine.
 //!
-//! Execution model per image (the multi-device version of the paper's
-//! Fig. 2 stream pipeline):
+//! Since the placement unification this is a thin wrapper: a
+//! [`PartitionPlan`] is the degenerate hybrid plan *1 stage × N
+//! shards* ([`placement::from_partition`](super::placement::from_partition)),
+//! and the actual dataflow — input broadcast, per-shard masked support
+//! slice + shard-local softmax, gather/merge, output projection — runs
+//! on [`HybridExecutor`]. The execution model per image is unchanged
+//! (the multi-device version of the paper's Fig. 2 stream pipeline):
 //!
 //! ```text
 //!            broadcast x            gather y-slices
@@ -10,49 +16,23 @@
 //!        `-> [shard k: ...                        ] -/
 //! ```
 //!
-//! Each shard owns a contiguous hypercolumn range (see
-//! [`super::plan`]), computes its masked support slice with
-//! [`Network::support_cols`] and its *shard-local* per-hypercolumn
-//! softmax, and streams the activity slice to the merge stage over a
-//! bounded [`Fifo`] (the same `hls::stream` analogue the single-device
-//! pipeline uses). The merge stage reassembles the hidden activity and
-//! runs the (tiny) output projection.
-//!
-//! Numerics: the shard slices are computed with the exact accumulation
-//! order of the single-device reference, so sharded inference is
-//! **bitwise identical** to [`Network::infer`] — pinned by
-//! `rust/tests/cluster.rs`.
+//! Numerics: the shard slices keep the exact accumulation order of the
+//! single-device reference, so sharded inference stays **bitwise
+//! identical** to [`Network::infer`] — pinned by `rust/tests/cluster.rs`.
 //!
 //! Failure model: [`ShardedExecutor::fail_shard`] simulates losing a
-//! device. The shard's input queue and the gather stream close, every
-//! in-flight and future `infer_batch` on this executor fails fast, and
-//! the cluster coordinator re-routes traffic to healthy replicas.
+//! device. Every stream closes, all in-flight and future `infer_batch`
+//! calls fail fast, and the cluster coordinator re-routes traffic.
 
-use std::sync::{Arc, Mutex};
-use std::thread;
-use std::time::{Duration, Instant};
+use anyhow::{bail, Result};
 
-use anyhow::{anyhow, bail, Result};
-
-use crate::bcpnn::Network;
+use crate::bcpnn::{LayerGraph, Network};
 use crate::coordinator::server::InferBackend;
-use crate::data::encode::encode_image;
-use crate::stream::fifo::{Fifo, FifoStatsSnapshot};
+use crate::stream::fifo::FifoStatsSnapshot;
 
+use super::hybrid::{HybridExecutor, WorkerReport};
+use super::placement;
 use super::plan::PartitionPlan;
-
-/// Work item broadcast to every shard (encoded input, shared).
-struct ShardJob {
-    seq: u64,
-    x: Arc<Vec<f32>>,
-}
-
-/// One shard's hidden-activity slice for one image.
-struct ShardSlice {
-    seq: u64,
-    shard: usize,
-    y: Vec<f32>,
-}
 
 /// Per-shard execution statistics, returned by
 /// [`ShardedExecutor::shutdown`].
@@ -62,28 +42,36 @@ pub struct ShardReport {
     /// Images processed by this shard.
     pub items: u64,
     /// Time spent computing (support + softmax).
-    pub busy: Duration,
+    pub busy: std::time::Duration,
     /// Wall time of the shard worker thread.
-    pub wall: Duration,
+    pub wall: std::time::Duration,
     /// Stats of the shard's input queue (backpressure visibility).
     pub input_fifo: FifoStatsSnapshot,
+}
+
+impl From<WorkerReport> for ShardReport {
+    fn from(w: WorkerReport) -> ShardReport {
+        ShardReport {
+            shard: w.shard,
+            items: w.items,
+            busy: w.busy,
+            wall: w.wall,
+            input_fifo: w.input_fifo,
+        }
+    }
 }
 
 /// A network sharded across N simulated devices per a
 /// [`PartitionPlan`].
 pub struct ShardedExecutor {
-    net: Arc<Network>,
     plan: PartitionPlan,
-    inputs: Vec<Fifo<ShardJob>>,
-    gather: Fifo<ShardSlice>,
-    workers: Vec<thread::JoinHandle<ShardReport>>,
-    /// Serializes broadcast+gather rounds (slices carry chunk-local
-    /// sequence numbers).
-    io_lock: Mutex<()>,
+    inner: HybridExecutor,
 }
 
 impl ShardedExecutor {
-    /// Spawn one worker thread per shard of `plan` over `net`.
+    /// Spawn one worker thread per shard of `plan` over `net`. The
+    /// network's parameters move into the executor's 1-layer graph
+    /// (one resident copy, not two).
     pub fn new(net: Network, plan: &PartitionPlan) -> Result<ShardedExecutor> {
         plan.validate()?;
         if plan.cfg != net.cfg {
@@ -92,174 +80,66 @@ impl ShardedExecutor {
                 plan.cfg.name, net.cfg.name
             );
         }
-        let net = Arc::new(net);
-        let batch = net.cfg.batch.max(1);
-        let n_shards = plan.n_shards();
-        // Depths sized so one full chunk round never blocks: each input
-        // holds a whole batch, the gather stream a whole batch from
-        // every shard. This is the no-deadlock sizing argument the
-        // paper's cosimulation step makes for its FIFO depths.
-        let inputs: Vec<Fifo<ShardJob>> =
-            (0..n_shards).map(|_| Fifo::with_capacity(batch)).collect();
-        let gather: Fifo<ShardSlice> = Fifo::with_capacity(batch * n_shards);
-
-        let mut workers = Vec::with_capacity(n_shards);
-        for spec in &plan.shards {
-            let net = net.clone();
-            let input = inputs[spec.id].clone();
-            let out = gather.clone();
-            let (id, unit_lo, unit_hi, n_hc) =
-                (spec.id, spec.unit_lo, spec.unit_hi, spec.n_hc());
-            workers.push(thread::spawn(move || {
-                let start = Instant::now();
-                let mut items = 0u64;
-                let mut busy = Duration::ZERO;
-                let (mc_h, gain) = (net.cfg.mc_h, net.cfg.gain);
-                while let Ok(job) = input.recv() {
-                    let t0 = Instant::now();
-                    let mut y = net.support_cols(&job.x, unit_lo, unit_hi);
-                    Network::hc_softmax(&mut y, n_hc, mc_h, gain);
-                    busy += t0.elapsed();
-                    items += 1;
-                    if out
-                        .send(ShardSlice { seq: job.seq, shard: id, y })
-                        .is_err()
-                    {
-                        break; // gather closed: executor failed/shut down
-                    }
-                }
-                ShardReport {
-                    shard: id,
-                    items,
-                    busy,
-                    wall: start.elapsed(),
-                    input_fifo: input.stats(),
-                }
-            }));
-        }
-
-        Ok(ShardedExecutor {
-            net,
-            plan: plan.clone(),
-            inputs,
-            gather,
-            workers,
-            io_lock: Mutex::new(()),
-        })
+        // A Network is a 1-layer graph with the same arrays; the
+        // hybrid engine runs the identical per-column math on them.
+        let graph = LayerGraph::from_params(&net.cfg, &net.params)?;
+        drop(net);
+        let hp = placement::from_partition(plan)?;
+        let inner = HybridExecutor::new(graph, &hp)?;
+        Ok(ShardedExecutor { plan: plan.clone(), inner })
     }
 
     pub fn plan(&self) -> &PartitionPlan {
         &self.plan
     }
 
-    pub fn network(&self) -> &Network {
-        &self.net
+    /// The config being served (the full, unsharded model's).
+    pub fn cfg(&self) -> &crate::config::ModelConfig {
+        &self.plan.cfg
     }
 
     /// Snapshot of every shard's input-queue stats.
     pub fn shard_queue_stats(&self) -> Vec<FifoStatsSnapshot> {
-        self.inputs.iter().map(Fifo::stats).collect()
+        self.inner
+            .stage_input_stats()
+            .into_iter()
+            .next()
+            .unwrap_or_default()
     }
 
     /// Simulate losing shard `id`'s device. Losing any device fails
-    /// the whole executor (a partial hidden layer is useless), so this
-    /// closes *every* queue: workers drain out and all in-flight and
-    /// future inference fails fast — nothing can block on a queue
-    /// whose consumer is gone.
+    /// the whole executor (a partial hidden layer is useless):
+    /// everything closes, workers drain out, and all in-flight and
+    /// future inference fails fast. Out-of-range ids fail nothing.
     pub fn fail_shard(&self, id: usize) {
-        if self.inputs.get(id).is_some() {
-            self.close_all();
+        let stage = &self.inner.plan().stages[0];
+        if let Some(p) = stage.pieces.get(id) {
+            self.inner.fail_device(p.device_index);
         }
-        // Out-of-range id: no such device, nothing fails.
     }
 
     /// True once any shard has failed (or the executor shut down).
     pub fn is_failed(&self) -> bool {
-        self.gather.is_closed() || self.inputs.iter().any(Fifo::is_closed)
+        self.inner.is_failed()
     }
 
     /// Class probabilities for any number of images (dispatched in
     /// batch-sized chunks). Bitwise identical to [`Network::infer`]
     /// per image.
     pub fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let hc_in = self.net.cfg.hc_in();
-        for (i, img) in images.iter().enumerate() {
-            if img.len() != hc_in {
-                bail!(
-                    "image {i} has {} pixels, config {:?} expects {hc_in}",
-                    img.len(), self.net.cfg.name
-                );
-            }
-        }
-        let guard = self.io_lock.lock().unwrap();
-        let mut out = Vec::with_capacity(images.len());
-        for chunk in images.chunks(self.net.cfg.batch.max(1)) {
-            self.infer_chunk(chunk, &mut out)?;
-        }
-        drop(guard);
-        Ok(out)
-    }
-
-    /// One broadcast+gather round for at most `batch` images.
-    fn infer_chunk(&self, imgs: &[Vec<f32>], out: &mut Vec<Vec<f32>>) -> Result<()> {
-        let n_shards = self.plan.n_shards();
-        for (k, img) in imgs.iter().enumerate() {
-            let x = Arc::new(encode_image(img));
-            for input in &self.inputs {
-                if input.send(ShardJob { seq: k as u64, x: x.clone() }).is_err() {
-                    bail!("shard queue closed (simulated device failure)");
-                }
-            }
-        }
-        let n_h = self.net.cfg.n_h();
-        let mut ys = vec![vec![0.0f32; n_h]; imgs.len()];
-        for _ in 0..imgs.len() * n_shards {
-            let slice = self
-                .gather
-                .recv()
-                .map_err(|_| anyhow!("gather stream closed (simulated device failure)"))?;
-            let spec = &self.plan.shards[slice.shard];
-            ys[slice.seq as usize][spec.unit_lo..spec.unit_hi].copy_from_slice(&slice.y);
-        }
-        for y in &ys {
-            out.push(self.net.output_activity(y));
-        }
-        Ok(())
+        self.inner.infer_batch(images)
     }
 
     /// Drain and join all shard workers, returning per-shard reports
     /// (ordered by shard id).
-    pub fn shutdown(mut self) -> Vec<ShardReport> {
-        self.close_all();
-        let mut reports: Vec<ShardReport> = self
-            .workers
-            .drain(..)
-            .map(|h| h.join().expect("shard worker panicked"))
-            .collect();
-        reports.sort_by_key(|r| r.shard);
-        reports
-    }
-
-    fn close_all(&self) {
-        for f in &self.inputs {
-            f.close();
-        }
-        self.gather.close();
-    }
-}
-
-impl Drop for ShardedExecutor {
-    fn drop(&mut self) {
-        self.close_all();
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
+    pub fn shutdown(self) -> Vec<ShardReport> {
+        self.inner.shutdown().into_iter().map(ShardReport::from).collect()
     }
 }
 
 impl InferBackend for ShardedExecutor {
     fn max_batch(&self) -> usize {
-        self.net.cfg.batch
+        self.plan.cfg.batch
     }
 
     fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
@@ -303,7 +183,7 @@ mod tests {
     #[test]
     fn failed_shard_fails_fast_and_reports() {
         let e = exec(2);
-        let img = vec![0.5; e.network().cfg.hc_in()];
+        let img = vec![0.5; e.cfg().hc_in()];
         assert!(e.infer_batch(&[img.clone()]).is_ok());
         assert!(!e.is_failed());
         e.fail_shard(1);
@@ -316,9 +196,16 @@ mod tests {
     }
 
     #[test]
+    fn out_of_range_shard_id_fails_nothing() {
+        let e = exec(2);
+        e.fail_shard(99);
+        assert!(!e.is_failed());
+    }
+
+    #[test]
     fn queue_stats_visible() {
         let e = exec(2);
-        let img = vec![0.25; e.network().cfg.hc_in()];
+        let img = vec![0.25; e.cfg().hc_in()];
         e.infer_batch(&[img.clone(), img]).unwrap();
         for s in e.shard_queue_stats() {
             assert_eq!(s.pushes, 2);

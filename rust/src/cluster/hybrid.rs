@@ -1,0 +1,481 @@
+//! Hybrid executor: one dataflow worker per placed kernel of a
+//! [`HybridPlan`] — per-stage FIFO chaining *and* intra-stage shard
+//! fan-out/merge in one engine.
+//!
+//! Execution model per image:
+//!
+//! ```text
+//!          stage 0 (sharded)                stage 1 (co-located)
+//!        /-> [shard 0: support cols ----\
+//! input ---> [shard 1:  + HC softmax] --+-> merge -> [layers l..m
+//!        \-> [shard k: ...           ]--/             (+ head)]  -> out
+//! ```
+//!
+//! Consecutive stages are chained by bounded [`Fifo`]s (the
+//! inter-device activity streams). A sharded stage broadcasts its
+//! input to every shard's queue, each shard computes its hypercolumn
+//! slice with [`Projection::support_cols`] plus the *shard-local*
+//! per-HC softmax, and a merge worker reassembles the activity (and
+//! runs the classifier head when the stage is last). A co-located
+//! stage runs its consecutive layers in sequence on one worker. Every
+//! FIFO holds a full batch, so one send+drain round can never deadlock
+//! — the same sizing argument both legacy executors made.
+//!
+//! Numerics: shard slices keep the reference accumulation order, so
+//! hybrid inference is **bitwise identical** to [`LayerGraph::infer`]
+//! for every plan shape — pinned across the whole config registry by
+//! `rust/tests/hybrid.rs`. `ShardedExecutor` and
+//! `PipelineParallelExecutor` are now thin wrappers over this engine
+//! with degenerate plans (1 stage × N shards, N stages × 1 shard).
+//!
+//! Failure model: losing any placed device leaves the chain useless,
+//! so [`HybridExecutor::fail_device`] closes every stream — workers
+//! drain out and all in-flight and future inference fails fast.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::bcpnn::{LayerGraph, Network};
+use crate::coordinator::server::InferBackend;
+use crate::data::encode::encode_image;
+use crate::stream::fifo::{Fifo, FifoStatsSnapshot};
+
+use super::placement::HybridPlan;
+
+/// One image's activity flowing between stages (shared for broadcast).
+struct StageJob {
+    seq: u64,
+    y: Arc<Vec<f32>>,
+}
+
+/// One shard's activity slice headed for its stage's merge worker.
+struct SliceJob {
+    seq: u64,
+    shard: usize,
+    y: Vec<f32>,
+}
+
+/// Per-worker execution statistics, returned by
+/// [`HybridExecutor::shutdown`] (compute workers only; merge plumbing
+/// is not reported).
+#[derive(Debug, Clone)]
+pub struct WorkerReport {
+    /// Stage this worker belongs to.
+    pub stage: usize,
+    /// Shard index within the stage (0 for a co-located stage worker).
+    pub shard: usize,
+    /// Images processed by this worker.
+    pub items: u64,
+    /// Time spent computing.
+    pub busy: Duration,
+    /// Wall time of the worker thread.
+    pub wall: Duration,
+    /// Stats of the worker's input stream (backpressure visibility).
+    pub input_fifo: FifoStatsSnapshot,
+}
+
+/// A layer graph executing across the devices of a [`HybridPlan`].
+pub struct HybridExecutor {
+    graph: Arc<LayerGraph>,
+    plan: HybridPlan,
+    /// Per stage: one input stream per shard (one for co-located).
+    stage_inputs: Vec<Vec<Fifo<StageJob>>>,
+    /// Per sharded stage: the shard->merge stream (None when solo).
+    merges: Vec<Option<Fifo<SliceJob>>>,
+    /// Final activity stream back to the caller.
+    result: Fifo<StageJob>,
+    workers: Vec<thread::JoinHandle<WorkerReport>>,
+    plumbers: Vec<thread::JoinHandle<()>>,
+    /// Serializes send+drain rounds (jobs carry chunk-local seqs).
+    io_lock: Mutex<()>,
+}
+
+/// Send one job to every queue of the next hop. Err = downstream
+/// closed (failure/shutdown).
+fn broadcast(outs: &[Fifo<StageJob>], seq: u64, y: Arc<Vec<f32>>) -> Result<(), ()> {
+    for o in outs {
+        if o.send(StageJob { seq, y: y.clone() }).is_err() {
+            return Err(());
+        }
+    }
+    Ok(())
+}
+
+impl HybridExecutor {
+    /// Spawn the worker/merge topology of `plan` over `graph`.
+    pub fn new(graph: LayerGraph, plan: &HybridPlan) -> Result<HybridExecutor> {
+        plan.validate()?;
+        if plan.cfg != graph.cfg {
+            bail!(
+                "plan is for config {:?}, graph is {:?}",
+                plan.cfg.name, graph.cfg.name
+            );
+        }
+        let graph = Arc::new(graph);
+        let n_stages = plan.stages.len();
+        let batch = graph.cfg.batch.max(1);
+
+        let stage_inputs: Vec<Vec<Fifo<StageJob>>> = plan
+            .stages
+            .iter()
+            .map(|st| {
+                let n = if st.sharded() { st.pieces.len() } else { 1 };
+                (0..n).map(|_| Fifo::with_capacity(batch)).collect()
+            })
+            .collect();
+        let result: Fifo<StageJob> = Fifo::with_capacity(batch);
+        let merges: Vec<Option<Fifo<SliceJob>>> = plan
+            .stages
+            .iter()
+            .map(|st| {
+                st.sharded()
+                    .then(|| Fifo::with_capacity(batch * st.pieces.len()))
+            })
+            .collect();
+
+        let mut workers = Vec::new();
+        let mut plumbers = Vec::new();
+        for (si, st) in plan.stages.iter().enumerate() {
+            let downstream: Vec<Fifo<StageJob>> = if si + 1 < n_stages {
+                stage_inputs[si + 1].clone()
+            } else {
+                vec![result.clone()]
+            };
+            let last = si + 1 == n_stages;
+            if st.sharded() {
+                let merge = merges[si].clone().expect("sharded stage has a merge stream");
+                let layer = st.layer_lo;
+                // Shard compute workers.
+                for (k, p) in st.pieces.iter().enumerate() {
+                    let g = graph.clone();
+                    let rx = stage_inputs[si][k].clone();
+                    let tx = merge.clone();
+                    let (unit_lo, unit_hi, n_hc) = (p.unit_lo, p.unit_hi, p.n_hc());
+                    workers.push(thread::spawn(move || {
+                        let start = Instant::now();
+                        let (mut items, mut busy) = (0u64, Duration::ZERO);
+                        let proj = &g.layers[layer];
+                        let (mc, gain) = (proj.dims.mc_out, g.cfg.gain);
+                        while let Ok(job) = rx.recv() {
+                            let t0 = Instant::now();
+                            let mut y = proj.support_cols(&job.y, unit_lo, unit_hi);
+                            Network::hc_softmax(&mut y, n_hc, mc, gain);
+                            busy += t0.elapsed();
+                            items += 1;
+                            if tx.send(SliceJob { seq: job.seq, shard: k, y }).is_err() {
+                                break; // merge closed: failed/shut down
+                            }
+                        }
+                        WorkerReport {
+                            stage: si,
+                            shard: k,
+                            items,
+                            busy,
+                            wall: start.elapsed(),
+                            input_fifo: rx.stats(),
+                        }
+                    }));
+                }
+                // Merge worker: reassemble slices, run the head on the
+                // last stage, feed the next hop.
+                let g = graph.clone();
+                let ranges: Vec<(usize, usize)> =
+                    st.pieces.iter().map(|p| (p.unit_lo, p.unit_hi)).collect();
+                let n_shards = st.pieces.len();
+                let n_units = ranges.last().map(|&(_, hi)| hi).unwrap_or(0);
+                plumbers.push(thread::spawn(move || {
+                    let mut pending: HashMap<u64, (usize, Vec<f32>)> = HashMap::new();
+                    while let Ok(sj) = merge.recv() {
+                        let filled = {
+                            let entry = pending
+                                .entry(sj.seq)
+                                .or_insert_with(|| (0, vec![0.0f32; n_units]));
+                            let (lo, hi) = ranges[sj.shard];
+                            entry.1[lo..hi].copy_from_slice(&sj.y);
+                            entry.0 += 1;
+                            entry.0 == n_shards
+                        };
+                        if filled {
+                            let (_, mut y) =
+                                pending.remove(&sj.seq).expect("entry just filled");
+                            if last {
+                                y = g.head.activate_dense(&y);
+                            }
+                            if broadcast(&downstream, sj.seq, Arc::new(y)).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }));
+            } else {
+                // One worker runs the stage's consecutive layers (and
+                // the head when last) on its single device.
+                let g = graph.clone();
+                let rx = stage_inputs[si][0].clone();
+                let (lo, hi) = (st.layer_lo, st.layer_hi);
+                workers.push(thread::spawn(move || {
+                    let start = Instant::now();
+                    let (mut items, mut busy) = (0u64, Duration::ZERO);
+                    let gain = g.cfg.gain;
+                    while let Ok(job) = rx.recv() {
+                        let t0 = Instant::now();
+                        let mut y = g.layers[lo].activate_masked(&job.y, gain);
+                        for l in lo + 1..hi {
+                            y = g.layers[l].activate_masked(&y, gain);
+                        }
+                        if last {
+                            y = g.head.activate_dense(&y);
+                        }
+                        busy += t0.elapsed();
+                        items += 1;
+                        if broadcast(&downstream, job.seq, Arc::new(y)).is_err() {
+                            break;
+                        }
+                    }
+                    WorkerReport {
+                        stage: si,
+                        shard: 0,
+                        items,
+                        busy,
+                        wall: start.elapsed(),
+                        input_fifo: rx.stats(),
+                    }
+                }));
+            }
+        }
+
+        Ok(HybridExecutor {
+            graph,
+            plan: plan.clone(),
+            stage_inputs,
+            merges,
+            result,
+            workers,
+            plumbers,
+            io_lock: Mutex::new(()),
+        })
+    }
+
+    pub fn plan(&self) -> &HybridPlan {
+        &self.plan
+    }
+
+    pub fn graph(&self) -> &LayerGraph {
+        &self.graph
+    }
+
+    /// Snapshot of every stage's input-stream stats (one per shard).
+    pub fn stage_input_stats(&self) -> Vec<Vec<FifoStatsSnapshot>> {
+        self.stage_inputs
+            .iter()
+            .map(|fs| fs.iter().map(Fifo::stats).collect())
+            .collect()
+    }
+
+    /// Simulate losing the device in fleet slot `index`. A chain
+    /// missing any placed kernel is useless, so this closes *every*
+    /// stream: workers drain out and all in-flight and future
+    /// inference fails fast. Idle or out-of-range slots fail nothing.
+    pub fn fail_device(&self, index: usize) {
+        let placed = self
+            .plan
+            .stages
+            .iter()
+            .any(|st| st.device_group.contains(&index));
+        if placed {
+            self.close_all();
+        }
+    }
+
+    /// True once any device has failed (or the executor shut down).
+    pub fn is_failed(&self) -> bool {
+        self.result.is_closed()
+            || self
+                .stage_inputs
+                .iter()
+                .any(|fs| fs.iter().any(Fifo::is_closed))
+    }
+
+    /// Class probabilities for any number of images (dispatched in
+    /// batch-sized chunks). Bitwise identical to [`LayerGraph::infer`]
+    /// per image.
+    pub fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let hc_in = self.graph.cfg.hc_in();
+        for (i, img) in images.iter().enumerate() {
+            if img.len() != hc_in {
+                bail!(
+                    "image {i} has {} pixels, config {:?} expects {hc_in}",
+                    img.len(), self.graph.cfg.name
+                );
+            }
+        }
+        let guard = self.io_lock.lock().unwrap();
+        let mut out = Vec::with_capacity(images.len());
+        for chunk in images.chunks(self.graph.cfg.batch.max(1)) {
+            self.infer_chunk(chunk, &mut out)?;
+        }
+        drop(guard);
+        Ok(out)
+    }
+
+    /// One send+drain round for at most `batch` images.
+    fn infer_chunk(&self, imgs: &[Vec<f32>], out: &mut Vec<Vec<f32>>) -> Result<()> {
+        for (k, img) in imgs.iter().enumerate() {
+            let x = Arc::new(encode_image(img));
+            if broadcast(&self.stage_inputs[0], k as u64, x).is_err() {
+                bail!("stage stream closed (simulated device failure)");
+            }
+        }
+        let mut probs = vec![Vec::new(); imgs.len()];
+        for _ in 0..imgs.len() {
+            let job = self
+                .result
+                .recv()
+                .map_err(|_| anyhow!("result stream closed (simulated device failure)"))?;
+            probs[job.seq as usize] =
+                Arc::try_unwrap(job.y).unwrap_or_else(|shared| (*shared).clone());
+        }
+        out.extend(probs);
+        Ok(())
+    }
+
+    /// Drain and join everything, returning per-worker reports ordered
+    /// by (stage, shard).
+    pub fn shutdown(mut self) -> Vec<WorkerReport> {
+        self.close_all();
+        let mut reports: Vec<WorkerReport> = self
+            .workers
+            .drain(..)
+            .map(|h| h.join().expect("stage worker panicked"))
+            .collect();
+        for h in self.plumbers.drain(..) {
+            let _ = h.join();
+        }
+        reports.sort_by_key(|r| (r.stage, r.shard));
+        reports
+    }
+
+    fn close_all(&self) {
+        for fs in &self.stage_inputs {
+            for f in fs {
+                f.close();
+            }
+        }
+        for m in self.merges.iter().flatten() {
+            m.close();
+        }
+        self.result.close();
+    }
+}
+
+impl Drop for HybridExecutor {
+    fn drop(&mut self) {
+        self.close_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        for h in self.plumbers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl InferBackend for HybridExecutor {
+    fn max_batch(&self) -> usize {
+        self.graph.cfg.batch
+    }
+
+    fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        HybridExecutor::infer_batch(self, images)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::placement::{plan_hybrid, Fleet};
+    use crate::config::by_name;
+    use crate::data::synth;
+    use crate::fpga::device::{FpgaDevice, KernelVersion};
+
+    fn exec_for(model: &str, n_dev: usize) -> HybridExecutor {
+        let cfg = by_name(model).unwrap();
+        let fleet = Fleet::homogeneous(&FpgaDevice::u55c(), n_dev);
+        let plan = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1).unwrap();
+        HybridExecutor::new(LayerGraph::new(cfg, 7), &plan).unwrap()
+    }
+
+    #[test]
+    fn rejects_mismatched_graph() {
+        let cfg = by_name("toy-deep").unwrap();
+        let fleet = Fleet::homogeneous(&FpgaDevice::u55c(), 2);
+        let plan = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1).unwrap();
+        let other = LayerGraph::new(by_name("tiny").unwrap(), 1);
+        assert!(HybridExecutor::new(other, &plan).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_image_shape() {
+        let e = exec_for("tiny", 2);
+        let err = e.infer_batch(&[vec![0.5; 3]]).unwrap_err().to_string();
+        assert!(err.contains("pixels"), "{err}");
+    }
+
+    #[test]
+    fn sharded_stage_bitwise_matches_reference() {
+        let cfg = by_name("tiny").unwrap();
+        let g = LayerGraph::new(cfg.clone(), 11);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 12, 3, 0.15);
+        let reference: Vec<Vec<u32>> = d
+            .images
+            .iter()
+            .map(|i| g.infer(i).iter().map(|v| v.to_bits()).collect())
+            .collect();
+        for n_dev in [1usize, 2, 3, 4] {
+            let fleet = Fleet::homogeneous(&FpgaDevice::u55c(), n_dev);
+            let plan = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1).unwrap();
+            let e = HybridExecutor::new(g.clone(), &plan).unwrap();
+            let probs = e.infer_batch(&d.images).unwrap();
+            for (i, (got, want)) in probs.iter().zip(&reference).enumerate() {
+                let bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(&bits, want, "image {i} at {n_dev} devices");
+            }
+        }
+    }
+
+    #[test]
+    fn failed_device_fails_fast_and_reports() {
+        let e = exec_for("toy-deep", 3);
+        let img = vec![0.5; e.graph().cfg.hc_in()];
+        assert!(e.infer_batch(&[img.clone()]).is_ok());
+        assert!(!e.is_failed());
+        // An idle / out-of-range device fails nothing.
+        e.fail_device(usize::MAX);
+        assert!(!e.is_failed());
+        e.fail_device(0);
+        assert!(e.is_failed());
+        let err = e.infer_batch(&[img]).unwrap_err().to_string();
+        assert!(err.contains("device failure"), "{err}");
+        let reports = e.shutdown();
+        assert!(reports.len() >= 2);
+        assert!(reports.iter().all(|r| r.items >= 1));
+    }
+
+    #[test]
+    fn queue_stats_visible_per_stage_and_shard() {
+        let e = exec_for("toy-deep", 3);
+        let img = vec![0.25; e.graph().cfg.hc_in()];
+        e.infer_batch(&[img.clone(), img]).unwrap();
+        for (si, stage) in e.stage_input_stats().iter().enumerate() {
+            assert!(!stage.is_empty());
+            for s in stage {
+                assert_eq!(s.pushes, 2, "stage {si}");
+                assert_eq!(s.pops, 2, "stage {si}");
+            }
+        }
+    }
+}

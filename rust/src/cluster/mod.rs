@@ -1,41 +1,49 @@
-//! Scale-out serving: shard one BCPNN network across N simulated U55C
-//! devices and load-balance replicas behind one front door.
+//! Scale-out serving: place one BCPNN across a device fleet and
+//! load-balance replicas behind one front door.
 //!
 //! The paper's accelerator is a single Alveo U55C, capacity-bounded by
 //! its HBM stack and DSP budget; StreamBrain (Podobas et al., HEART
 //! '21) scales the same workload across devices with an MPI backend.
 //! This module is that scale-out spine for the reproduction
-//! (DESIGN.md §5):
+//! (DESIGN.md §5/§6):
 //!
-//! - [`plan`] — the **partition planner**: balanced hypercolumn-aligned
-//!   shards, each validated against the `fpga::estimator` resource
-//!   model and HBM capacity. Hypercolumn alignment makes the
-//!   per-hypercolumn softmax shard-local by construction, so the only
-//!   cross-device traffic is input broadcast + activity gather.
-//! - [`executor`] — the **sharded executor**: one dataflow worker per
-//!   device, connected by bounded [`stream::fifo`](crate::stream::fifo)
-//!   queues; bitwise identical to the single-device reference.
+//! - [`placement`] — the **unified hybrid placement planner**: one
+//!   two-level decomposition (pipeline stages of consecutive layers ×
+//!   hypercolumn shards within a stage) over a mixed U55C/U280 fleet,
+//!   with modeled-latency-balanced (optionally uneven) shard ranges
+//!   and per-device envelope validation. The historical planners are
+//!   degenerate cases: 1 stage × N shards and N stages × 1 shard.
+//! - [`hybrid`] — the **hybrid executor**: one dataflow worker per
+//!   placed kernel, per-stage FIFO chaining with intra-stage shard
+//!   fan-out/merge; bitwise identical to `LayerGraph::infer`.
+//! - [`plan`] — the legacy planner surfaces (`plan`, `plan_pipeline`)
+//!   and plan types, now thin projections of degenerate hybrid plans.
+//! - [`executor`] / [`pipeline`] — the legacy executor surfaces
+//!   (`ShardedExecutor`, `PipelineParallelExecutor`), thin wrappers
+//!   over the hybrid engine.
 //! - [`coordinator`] — the **cluster coordinator**: replica scheduling
-//!   (round-robin / least-outstanding), per-shard and cluster metrics,
-//!   and graceful failure re-routing, layered on the
+//!   (round-robin / least-outstanding), per-worker and cluster
+//!   metrics, and graceful failure re-routing, layered on the
 //!   `coordinator::server` batching path.
-//! - [`pipeline`] — the **pipeline-parallel executor** for stacked
-//!   layer-graph configs: `plan::plan_pipeline` places whole layers on
-//!   devices (each validated against the estimator + HBM capacity) and
-//!   the executor chains one dataflow worker per layer; bitwise
-//!   identical to `LayerGraph::infer`.
 //!
-//! `benches/cluster_scaling.rs` measures throughput at 1/2/4/8 shards;
-//! `examples/cluster_serve.rs` demos the full serving + failover flow.
+//! `benches/cluster_scaling.rs` measures shard/pipeline/hybrid
+//! scaling; `examples/cluster_serve.rs` demos hybrid serving of
+//! `mnist-deep2` with failover; `repro plan` prints a placement.
 
 pub mod coordinator;
 pub mod executor;
+pub mod hybrid;
 pub mod pipeline;
+pub mod placement;
 pub mod plan;
 
 pub use coordinator::{
     pick_replica, ClusterConfig, ClusterReport, ClusterServer, ReplicaReport, SchedulePolicy,
 };
 pub use executor::{ShardReport, ShardedExecutor};
+pub use hybrid::{HybridExecutor, WorkerReport};
 pub use pipeline::{PipelineParallelExecutor, StageExecReport};
+pub use placement::{
+    plan_hybrid, Fleet, HybridPlan, HybridStage, StagePiece, DEFAULT_BALANCE_TOL,
+};
 pub use plan::{plan, plan_pipeline, LayerStage, PartitionPlan, PipelinePlan, ShardSpec};

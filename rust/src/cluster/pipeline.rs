@@ -1,44 +1,35 @@
-//! Pipeline-parallel executor: one dataflow worker per layer, each
-//! standing in for the device a [`PipelinePlan`] stage placed it on.
+//! Pipeline-parallel executor: the legacy whole-layer surface over the
+//! hybrid engine.
 //!
-//! Execution model per image (the multi-device version of chaining
-//! dataflow kernels, stage l owning hidden layer l):
+//! Since the placement unification this is a thin wrapper: a
+//! [`PipelinePlan`] is the degenerate hybrid plan *N stages × 1 shard*
+//! ([`placement::from_pipeline`](super::placement::from_pipeline)), and
+//! the chained per-layer dataflow workers run on [`HybridExecutor`]:
 //!
 //! ```text
 //! input --> [dev 0: layer 0 support+softmax] --> [dev 1: layer 1 ...]
 //!       --> ... --> [dev N-1: layer N-1 + classifier head] --> output
 //! ```
 //!
-//! Stages are connected by bounded [`Fifo`]s (the inter-device activity
-//! streams); every FIFO holds a full batch, so one broadcast+drain
-//! round can never deadlock — the same sizing argument the sharded
-//! executor makes. Each stage runs the *reference* projection code
-//! ([`Projection::activate_masked`](crate::bcpnn::Projection) /
-//! `activate_dense`), so pipelined inference is **bitwise identical**
-//! to [`LayerGraph::infer`] — pinned by `rust/tests/deep_stack.rs`.
+//! Stages stay connected by bounded FIFOs sized to a full batch (one
+//! send+drain round can never deadlock), each stage runs the reference
+//! projection code, and pipelined inference remains **bitwise
+//! identical** to [`LayerGraph::infer`] — pinned by
+//! `rust/tests/deep_stack.rs`.
 //!
-//! Failure model mirrors [`super::executor::ShardedExecutor`]: losing
-//! any stage device leaves the chain useless, so `fail_stage` closes
-//! every queue and all in-flight and future inference fails fast.
+//! Failure model: losing any stage device leaves the chain useless, so
+//! `fail_stage` closes every queue and all in-flight and future
+//! inference fails fast.
 
-use std::sync::{Arc, Mutex};
-use std::thread;
-use std::time::{Duration, Instant};
-
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::bcpnn::LayerGraph;
 use crate::coordinator::server::InferBackend;
-use crate::data::encode::encode_image;
-use crate::stream::fifo::{Fifo, FifoStatsSnapshot};
+use crate::stream::fifo::FifoStatsSnapshot;
 
+use super::hybrid::{HybridExecutor, WorkerReport};
+use super::placement;
 use super::plan::PipelinePlan;
-
-/// One image's activity flowing between stages.
-struct StageJob {
-    seq: u64,
-    y: Vec<f32>,
-}
 
 /// Per-stage execution statistics, returned by
 /// [`PipelineParallelExecutor::shutdown`].
@@ -49,23 +40,29 @@ pub struct StageExecReport {
     /// Images processed by this stage.
     pub items: u64,
     /// Time spent computing (support + softmax, + head on the last).
-    pub busy: Duration,
+    pub busy: std::time::Duration,
     /// Wall time of the stage worker thread.
-    pub wall: Duration,
+    pub wall: std::time::Duration,
     /// Stats of the stage's input stream (backpressure visibility).
     pub input_fifo: FifoStatsSnapshot,
 }
 
+impl From<WorkerReport> for StageExecReport {
+    fn from(w: WorkerReport) -> StageExecReport {
+        StageExecReport {
+            stage: w.stage,
+            items: w.items,
+            busy: w.busy,
+            wall: w.wall,
+            input_fifo: w.input_fifo,
+        }
+    }
+}
+
 /// A layer graph executing across N simulated devices, one layer each.
 pub struct PipelineParallelExecutor {
-    graph: Arc<LayerGraph>,
     plan: PipelinePlan,
-    /// All inter-stage streams: `links[0]` feeds stage 0, `links[l+1]`
-    /// carries stage l's output; the last link is the result stream.
-    links: Vec<Fifo<StageJob>>,
-    workers: Vec<thread::JoinHandle<StageExecReport>>,
-    /// Serializes send+drain rounds (jobs carry chunk-local seqs).
-    io_lock: Mutex<()>,
+    inner: HybridExecutor,
 }
 
 impl PipelineParallelExecutor {
@@ -78,54 +75,9 @@ impl PipelineParallelExecutor {
                 plan.cfg.name, graph.cfg.name
             );
         }
-        let graph = Arc::new(graph);
-        let n_stages = plan.n_devices();
-        let batch = graph.cfg.batch.max(1);
-        // Every link holds a whole chunk: a full send+drain round can
-        // never block with the result stream undrained.
-        let links: Vec<Fifo<StageJob>> =
-            (0..=n_stages).map(|_| Fifo::with_capacity(batch)).collect();
-
-        let mut workers = Vec::with_capacity(n_stages);
-        for stage in 0..n_stages {
-            let g = graph.clone();
-            let rx = links[stage].clone();
-            let tx = links[stage + 1].clone();
-            let last = stage == n_stages - 1;
-            workers.push(thread::spawn(move || {
-                let start = Instant::now();
-                let mut items = 0u64;
-                let mut busy = Duration::ZERO;
-                let gain = g.cfg.gain;
-                while let Ok(job) = rx.recv() {
-                    let t0 = Instant::now();
-                    let mut y = g.layers[stage].activate_masked(&job.y, gain);
-                    if last {
-                        y = g.head.activate_dense(&y);
-                    }
-                    busy += t0.elapsed();
-                    items += 1;
-                    if tx.send(StageJob { seq: job.seq, y }).is_err() {
-                        break; // downstream closed: executor failed/shut down
-                    }
-                }
-                StageExecReport {
-                    stage,
-                    items,
-                    busy,
-                    wall: start.elapsed(),
-                    input_fifo: rx.stats(),
-                }
-            }));
-        }
-
-        Ok(PipelineParallelExecutor {
-            graph,
-            plan: plan.clone(),
-            links,
-            workers,
-            io_lock: Mutex::new(()),
-        })
+        let hp = placement::from_pipeline(plan)?;
+        let inner = HybridExecutor::new(graph, &hp)?;
+        Ok(PipelineParallelExecutor { plan: plan.clone(), inner })
     }
 
     pub fn plan(&self) -> &PipelinePlan {
@@ -133,107 +85,54 @@ impl PipelineParallelExecutor {
     }
 
     pub fn graph(&self) -> &LayerGraph {
-        &self.graph
+        self.inner.graph()
     }
 
     /// Snapshot of every stage's input-stream stats.
     pub fn stage_queue_stats(&self) -> Vec<FifoStatsSnapshot> {
-        self.links[..self.plan.n_devices()]
-            .iter()
-            .map(Fifo::stats)
+        self.inner
+            .stage_input_stats()
+            .into_iter()
+            .map(|mut fs| fs.remove(0))
             .collect()
     }
 
     /// Simulate losing stage `id`'s device. A chain missing any layer
     /// is useless, so this closes *every* stream: workers drain out and
-    /// all in-flight and future inference fails fast.
+    /// all in-flight and future inference fails fast. Out-of-range ids
+    /// fail nothing.
     pub fn fail_stage(&self, id: usize) {
-        if id < self.plan.n_devices() {
-            self.close_all();
+        if let Some(st) = self.inner.plan().stages.get(id) {
+            self.inner.fail_device(st.device_group[0]);
         }
-        // Out-of-range id: no such device, nothing fails.
     }
 
     /// True once any stage has failed (or the executor shut down).
     pub fn is_failed(&self) -> bool {
-        self.links.iter().any(Fifo::is_closed)
+        self.inner.is_failed()
     }
 
     /// Class probabilities for any number of images (dispatched in
     /// batch-sized chunks). Bitwise identical to [`LayerGraph::infer`]
     /// per image.
     pub fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let hc_in = self.graph.cfg.hc_in();
-        for (i, img) in images.iter().enumerate() {
-            if img.len() != hc_in {
-                bail!(
-                    "image {i} has {} pixels, config {:?} expects {hc_in}",
-                    img.len(), self.graph.cfg.name
-                );
-            }
-        }
-        let guard = self.io_lock.lock().unwrap();
-        let mut out = Vec::with_capacity(images.len());
-        for chunk in images.chunks(self.graph.cfg.batch.max(1)) {
-            self.infer_chunk(chunk, &mut out)?;
-        }
-        drop(guard);
-        Ok(out)
-    }
-
-    /// One send+drain round for at most `batch` images.
-    fn infer_chunk(&self, imgs: &[Vec<f32>], out: &mut Vec<Vec<f32>>) -> Result<()> {
-        let input = &self.links[0];
-        for (k, img) in imgs.iter().enumerate() {
-            let x = encode_image(img);
-            if input.send(StageJob { seq: k as u64, y: x }).is_err() {
-                bail!("stage stream closed (simulated device failure)");
-            }
-        }
-        let results = self.links.last().expect("links are never empty");
-        let mut probs = vec![Vec::new(); imgs.len()];
-        for _ in 0..imgs.len() {
-            let job = results
-                .recv()
-                .map_err(|_| anyhow!("result stream closed (simulated device failure)"))?;
-            probs[job.seq as usize] = job.y;
-        }
-        out.extend(probs);
-        Ok(())
+        self.inner.infer_batch(images)
     }
 
     /// Drain and join all stage workers, returning per-stage reports
     /// (ordered by stage).
-    pub fn shutdown(mut self) -> Vec<StageExecReport> {
-        self.close_all();
-        let mut reports: Vec<StageExecReport> = self
-            .workers
-            .drain(..)
-            .map(|h| h.join().expect("stage worker panicked"))
-            .collect();
-        reports.sort_by_key(|r| r.stage);
-        reports
-    }
-
-    fn close_all(&self) {
-        for f in &self.links {
-            f.close();
-        }
-    }
-}
-
-impl Drop for PipelineParallelExecutor {
-    fn drop(&mut self) {
-        self.close_all();
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
+    pub fn shutdown(self) -> Vec<StageExecReport> {
+        self.inner
+            .shutdown()
+            .into_iter()
+            .map(StageExecReport::from)
+            .collect()
     }
 }
 
 impl InferBackend for PipelineParallelExecutor {
     fn max_batch(&self) -> usize {
-        self.graph.cfg.batch
+        self.inner.graph().cfg.batch
     }
 
     fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {

@@ -1,0 +1,1040 @@
+//! Unified hybrid placement planner: pipeline stages × hypercolumn
+//! shards over a device fleet.
+//!
+//! One U55C bounds a BCPNN two ways at once: a stacked config may be
+//! too *deep* for a single dataflow chain (every layer pays its kernel
+//! time in sequence) and a single layer may be too *wide* for one
+//! device (BRAM routing pressure, HBM capacity). The two historical
+//! partitioners each solved one axis — `cluster::plan` sharded one
+//! layer's hypercolumns, `cluster::plan_pipeline` placed whole layers
+//! — and refused the other. This module replaces both with a single
+//! two-level decomposition, the StreamBrain-style split (arXiv
+//! 2106.05373) the ROADMAP calls hybrid parallelism:
+//!
+//! 1. **Stages**: the layer stack is cut into an ordered list of
+//!    pipeline stages, each owning one or more *consecutive* layers.
+//! 2. **Device groups**: every stage owns a group of 1..N fleet
+//!    devices. A multi-layer stage co-locates its layers on one device
+//!    (chained kernels, paying the sum of their kernel times); a
+//!    single-layer stage may fan its layer out across the whole group
+//!    as hypercolumn-aligned shards.
+//!
+//! Shard ranges are sized so *modeled* shard latencies (via
+//! [`fpga::timing::breakdown_layer`](crate::fpga::timing) through
+//! [`layer_kernel_s`]) equalize within a tolerance — on a mixed
+//! U55C/U280 fleet the faster device takes more hypercolumns, the
+//! embedded-BCPNN argument (arXiv 2506.18530) for sizing shards to
+//! per-device envelopes rather than equal HC counts. When the 1-HC
+//! granularity cannot reach the tolerance, the planner falls back to
+//! the plain equal split (`balanced = false` on the stage).
+//!
+//! Every piece (one kernel on one device) is validated against *its*
+//! device's LUT/DSP envelope, the BRAM routability ceiling, and the
+//! device's own HBM capacity; infeasibility errors name the layer and
+//! the device. [`plan_hybrid`] searches the (small) space of stage
+//! compositions × device-group splits exhaustively and returns the
+//! feasible plan with the lowest modeled bottleneck interval.
+//!
+//! The legacy planners survive as degenerate plans: [`pure_shard`]
+//! (1 stage × N shards) backs `cluster::plan`, [`pure_pipeline`]
+//! (N stages × 1 shard) backs `cluster::plan_pipeline`.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{FleetSpec, LayerDims, ModelConfig};
+use crate::fpga::device::{FpgaDevice, KernelVersion};
+use crate::fpga::estimator::{estimate_layer, Utilization, BRAM_CEILING_PCT};
+use crate::fpga::hbm::layer_hbm_bytes;
+use crate::fpga::timing::layer_kernel_s;
+
+/// Default relative tolerance on intra-stage shard-latency skew.
+pub const DEFAULT_BALANCE_TOL: f64 = 0.10;
+
+/// A resolved device fleet: concrete envelopes, in rack order.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    pub devices: Vec<FpgaDevice>,
+}
+
+impl Fleet {
+    /// `n` identical devices.
+    pub fn homogeneous(dev: &FpgaDevice, n: usize) -> Fleet {
+        Fleet { devices: vec![dev.clone(); n] }
+    }
+
+    /// Resolve a config-level [`FleetSpec`] (model names) to envelopes.
+    pub fn resolve(spec: &FleetSpec) -> Result<Fleet> {
+        let devices = spec
+            .devices
+            .iter()
+            .map(|m| FpgaDevice::by_model(m))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Fleet { devices })
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+}
+
+/// One kernel on one device: a whole layer (co-located stage) or a
+/// hypercolumn shard of a layer (sharded stage).
+#[derive(Debug, Clone)]
+pub struct StagePiece {
+    /// Layer this piece computes (index into `cfg.layer_dims()`).
+    pub layer: usize,
+    /// Shard index within the stage's device group (0 for co-located).
+    pub shard: usize,
+    /// Fleet slot this piece occupies.
+    pub device_index: usize,
+    /// Hypercolumns `[hc_lo, hc_hi)` of the layer owned by this piece.
+    pub hc_lo: usize,
+    pub hc_hi: usize,
+    /// Derived unit range `[unit_lo, unit_hi)` (`hc * mc_out`).
+    pub unit_lo: usize,
+    pub unit_hi: usize,
+    /// Shard-local projection dims (`hc_out` reduced to this slice).
+    pub dims: LayerDims,
+    /// Estimated utilization of this piece's kernel on its device.
+    pub util: Utilization,
+    /// Parameter bytes resident in this piece's HBM slice.
+    pub hbm_bytes: u64,
+    /// Modeled steady-state kernel time per image (seconds).
+    pub kernel_s: f64,
+}
+
+impl StagePiece {
+    pub fn n_hc(&self) -> usize {
+        self.hc_hi - self.hc_lo
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.unit_hi - self.unit_lo
+    }
+}
+
+/// One pipeline stage: consecutive layers `[layer_lo, layer_hi)` on a
+/// device group. Sharded stages hold exactly one layer (splitting a
+/// multi-layer stage would put the inter-layer streams on the wire);
+/// co-located stages hold one piece per layer on a single device.
+#[derive(Debug, Clone)]
+pub struct HybridStage {
+    pub stage: usize,
+    pub layer_lo: usize,
+    pub layer_hi: usize,
+    /// Fleet slots this stage occupies (one per shard; co-located
+    /// stages use one device for all their layers).
+    pub device_group: Vec<usize>,
+    /// Co-located: one piece per layer, in layer order. Sharded: one
+    /// piece per shard of the single layer, in HC order.
+    pub pieces: Vec<StagePiece>,
+    /// False when the latency balance fell back to the equal HC split
+    /// (the tolerance was unreachable at 1-HC granularity).
+    pub balanced: bool,
+}
+
+impl HybridStage {
+    pub fn n_layers(&self) -> usize {
+        self.layer_hi - self.layer_lo
+    }
+
+    pub fn n_shards(&self) -> usize {
+        if self.n_layers() == 1 { self.pieces.len() } else { 1 }
+    }
+
+    /// True when the stage fans one layer out across several devices.
+    pub fn sharded(&self) -> bool {
+        self.n_layers() == 1 && self.pieces.len() > 1
+    }
+
+    /// Steady-state per-image interval of the stage: shards run in
+    /// parallel (slowest shard), co-located layers run in sequence on
+    /// their shared device (sum).
+    pub fn interval_s(&self) -> f64 {
+        if self.sharded() {
+            self.pieces.iter().map(|p| p.kernel_s).fold(0.0, f64::max)
+        } else {
+            self.pieces.iter().map(|p| p.kernel_s).sum()
+        }
+    }
+
+    /// Modeled shard-latency skew (slowest / fastest; 1.0 when solo).
+    pub fn skew(&self) -> f64 {
+        if !self.sharded() {
+            return 1.0;
+        }
+        let max = self.pieces.iter().map(|p| p.kernel_s).fold(0.0, f64::max);
+        let min = self.pieces.iter().map(|p| p.kernel_s).fold(f64::INFINITY, f64::min);
+        max / min.max(1e-15)
+    }
+
+    /// Total HBM-resident parameter bytes across the stage.
+    pub fn hbm_bytes(&self) -> u64 {
+        self.pieces.iter().map(|p| p.hbm_bytes).sum()
+    }
+}
+
+/// A validated two-level placement of a layer stack onto a fleet.
+#[derive(Debug, Clone)]
+pub struct HybridPlan {
+    pub cfg: ModelConfig,
+    pub version: KernelVersion,
+    /// The fleet the plan was made for (device order = fleet order).
+    pub fleet: Vec<FpgaDevice>,
+    pub stages: Vec<HybridStage>,
+    /// Fleet slots the plan leaves idle (e.g. a 1-HC layer cannot use
+    /// its whole group — the softmax floor is one hypercolumn).
+    pub idle_devices: Vec<usize>,
+}
+
+impl HybridPlan {
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn n_devices_used(&self) -> usize {
+        self.stages.iter().map(|s| s.device_group.len()).sum()
+    }
+
+    /// The stage interval limiting steady-state throughput.
+    pub fn bottleneck_s(&self) -> f64 {
+        self.stages.iter().map(HybridStage::interval_s).fold(0.0, f64::max)
+    }
+
+    /// Modeled steady-state throughput (images/s), every stage
+    /// pipelining across consecutive images.
+    pub fn throughput_img_s(&self) -> f64 {
+        1.0 / self.bottleneck_s().max(1e-15)
+    }
+
+    /// Modeled per-image latency (seconds, kernel time only): an image
+    /// traverses every stage in sequence.
+    pub fn latency_s(&self) -> f64 {
+        self.stages.iter().map(HybridStage::interval_s).sum()
+    }
+
+    /// Total HBM footprint across the fleet.
+    pub fn total_hbm_bytes(&self) -> u64 {
+        self.stages.iter().map(HybridStage::hbm_bytes).sum()
+    }
+
+    /// Structural + envelope invariants. A plan that validates is one
+    /// the device model says is implementable: contiguous layer
+    /// coverage, hypercolumn-aligned contiguous shard ranges, distinct
+    /// devices, and every piece inside its own device's envelope.
+    pub fn validate(&self) -> Result<()> {
+        let dims = self.cfg.layer_dims();
+        if self.stages.is_empty() {
+            bail!("hybrid plan has no stages");
+        }
+        let mut next_layer = 0usize;
+        let mut used = vec![false; self.fleet.len()];
+        for (si, st) in self.stages.iter().enumerate() {
+            if st.stage != si {
+                bail!("stage {si} carries index {}", st.stage);
+            }
+            if st.layer_lo != next_layer || st.layer_hi <= st.layer_lo {
+                bail!(
+                    "stage {si} layers [{}, {}) not contiguous from {next_layer}",
+                    st.layer_lo, st.layer_hi
+                );
+            }
+            next_layer = st.layer_hi;
+            if st.pieces.is_empty() || st.device_group.is_empty() {
+                bail!("stage {si} has no pieces/devices");
+            }
+            for &di in &st.device_group {
+                if di >= self.fleet.len() {
+                    bail!("stage {si} names device {di} outside the fleet");
+                }
+                if used[di] {
+                    bail!("device {di} assigned twice");
+                }
+                used[di] = true;
+            }
+            if st.n_layers() > 1 {
+                // Co-located: one device, one full-width piece per layer.
+                if st.device_group.len() != 1 || st.pieces.len() != st.n_layers() {
+                    bail!(
+                        "stage {si} co-locates {} layers but has {} devices / {} pieces",
+                        st.n_layers(),
+                        st.device_group.len(),
+                        st.pieces.len()
+                    );
+                }
+                for (k, p) in st.pieces.iter().enumerate() {
+                    let l = st.layer_lo + k;
+                    if p.layer != l || p.hc_lo != 0 || p.hc_hi != dims[l].hc_out {
+                        bail!("stage {si} piece {k} does not cover layer {l}");
+                    }
+                    if p.device_index != st.device_group[0] {
+                        bail!("stage {si} piece {k} off its stage device");
+                    }
+                }
+            } else {
+                // Sharded (or solo): contiguous HC coverage of the layer.
+                let l = st.layer_lo;
+                let d = &dims[l];
+                if st.pieces.len() != st.device_group.len() {
+                    bail!(
+                        "stage {si}: {} shards but {} devices",
+                        st.pieces.len(),
+                        st.device_group.len()
+                    );
+                }
+                let mut next_hc = 0usize;
+                for (k, p) in st.pieces.iter().enumerate() {
+                    if p.layer != l || p.shard != k {
+                        bail!("stage {si} shard {k} mislabeled");
+                    }
+                    if p.hc_lo != next_hc || p.hc_hi <= p.hc_lo {
+                        bail!(
+                            "stage {si} shard {k} range [{}, {}) not contiguous from {next_hc}",
+                            p.hc_lo, p.hc_hi
+                        );
+                    }
+                    if p.unit_lo != p.hc_lo * d.mc_out || p.unit_hi != p.hc_hi * d.mc_out {
+                        bail!("stage {si} shard {k} unit range not hypercolumn-aligned");
+                    }
+                    if p.device_index != st.device_group[k] {
+                        bail!("stage {si} shard {k} off its group device");
+                    }
+                    next_hc = p.hc_hi;
+                }
+                if next_hc != d.hc_out {
+                    bail!(
+                        "stage {si} shards cover {next_hc} of {} hypercolumns of layer {l}",
+                        d.hc_out
+                    );
+                }
+            }
+            // Envelope: every piece inside its own device; per-device
+            // HBM summed across a co-located stage.
+            for p in &st.pieces {
+                check_envelope(&self.cfg, p, &self.fleet[p.device_index])?;
+            }
+            if st.n_layers() > 1 {
+                let dev = &self.fleet[st.device_group[0]];
+                let total = st.hbm_bytes();
+                if total > dev.hbm_capacity_bytes {
+                    bail!(
+                        "{}: layers {}..{} co-located on {}: {total} parameter bytes \
+                         exceed its {:.0} GB HBM — give the stage its own device group",
+                        self.cfg.name,
+                        st.layer_lo,
+                        st.layer_hi,
+                        dev.name,
+                        dev.hbm_capacity_bytes as f64 / 1e9
+                    );
+                }
+            }
+        }
+        if next_layer != dims.len() {
+            bail!("stages cover {next_layer} of {} layers", dims.len());
+        }
+        for &di in &self.idle_devices {
+            if di >= self.fleet.len() || used[di] {
+                bail!("idle device {di} is out of range or also assigned");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Utilization/HBM envelope check for one piece on one device; errors
+/// name the layer, the shard, and the device, so an infeasible mixed
+/// fleet says exactly what does not fit where.
+fn check_envelope(cfg: &ModelConfig, p: &StagePiece, dev: &FpgaDevice) -> Result<()> {
+    let what = format!(
+        "{}: layer {} shard {} ({} HCs) on {}",
+        cfg.name,
+        p.layer,
+        p.shard,
+        p.n_hc(),
+        dev.name
+    );
+    if p.util.luts > dev.luts {
+        bail!("{what}: {} LUTs exceed the device's {}", p.util.luts, dev.luts);
+    }
+    if p.util.dsps > dev.dsps {
+        bail!("{what}: {} DSPs exceed the device's {}", p.util.dsps, dev.dsps);
+    }
+    if p.util.bram_pct(dev) > BRAM_CEILING_PCT {
+        bail!(
+            "{what}: BRAM utilization {:.1}% above the {BRAM_CEILING_PCT}% \
+             routability ceiling — shard further or use a bigger device",
+            p.util.bram_pct(dev)
+        );
+    }
+    if p.hbm_bytes > dev.hbm_capacity_bytes {
+        bail!(
+            "{what}: {} parameter bytes exceed the device's {:.0} GB HBM — shard further",
+            p.hbm_bytes,
+            dev.hbm_capacity_bytes as f64 / 1e9
+        );
+    }
+    Ok(())
+}
+
+/// Build one piece: shard `[hc_lo, hc_hi)` of `layer` on fleet slot
+/// `device_index`, modeled and envelope-checked.
+fn make_piece(
+    cfg: &ModelConfig,
+    layer_dims: &LayerDims,
+    shard: usize,
+    device_index: usize,
+    dev: &FpgaDevice,
+    hc_lo: usize,
+    hc_hi: usize,
+    head_macs: u64,
+    version: KernelVersion,
+) -> Result<StagePiece> {
+    let mut dims = *layer_dims;
+    dims.hc_out = hc_hi - hc_lo;
+    let util = estimate_layer(&dims, version, dev);
+    let hbm_bytes = layer_hbm_bytes(&dims, version);
+    let kernel_s = layer_kernel_s(&dims, head_macs, version, dev);
+    let piece = StagePiece {
+        layer: layer_dims.index,
+        shard,
+        device_index,
+        hc_lo,
+        hc_hi,
+        unit_lo: hc_lo * layer_dims.mc_out,
+        unit_hi: hc_hi * layer_dims.mc_out,
+        dims,
+        util,
+        hbm_bytes,
+        kernel_s,
+    };
+    check_envelope(cfg, &piece, dev)?;
+    Ok(piece)
+}
+
+/// Shard boundaries of an equal HC split (remainder to the first
+/// shards, like the historical partitioner).
+fn equal_bounds(hc: usize, n: usize) -> Vec<usize> {
+    let base = hc / n;
+    let rem = hc % n;
+    let mut bounds = Vec::with_capacity(n + 1);
+    let mut acc = 0usize;
+    bounds.push(0);
+    for i in 0..n {
+        acc += base + usize::from(i < rem);
+        bounds.push(acc);
+    }
+    bounds
+}
+
+/// Head MACs riding on a shard's tail when its stage is the last one:
+/// the shard contributes its own units' rows of the classifier matvec.
+fn shard_head_macs(cfg: &ModelConfig, d: &LayerDims, n_hc: usize, last_stage: bool) -> u64 {
+    if last_stage {
+        (n_hc * d.mc_out) as u64 * cfg.n_out() as u64
+    } else {
+        0
+    }
+}
+
+/// Split `layer` across `devs` (fleet slots) minimizing the modeled
+/// slowest-shard kernel time: hill-climb on the shard boundaries from
+/// the equal split, then fall back to the equal split if the resulting
+/// skew still exceeds `tol`. Returns the pieces plus whether the
+/// balance held.
+fn balance_shards(
+    cfg: &ModelConfig,
+    d: &LayerDims,
+    devs: &[usize],
+    fleet: &Fleet,
+    last_stage: bool,
+    version: KernelVersion,
+    tol: f64,
+) -> Result<(Vec<StagePiece>, bool)> {
+    let n = devs.len();
+    debug_assert!(n >= 1 && n <= d.hc_out);
+    let kernel_of = |n_hc: usize, slot: usize| -> f64 {
+        let mut dims = *d;
+        dims.hc_out = n_hc;
+        let head = shard_head_macs(cfg, d, n_hc, last_stage);
+        layer_kernel_s(&dims, head, version, &fleet.devices[devs[slot]])
+    };
+
+    let mut bounds = equal_bounds(d.hc_out, n);
+    if n > 1 {
+        // Hill-climb: move one interior boundary by one HC while it
+        // strictly lowers the slowest shard. Every accepted move
+        // decreases the max, so this terminates; cap it anyway.
+        for _ in 0..(4 * d.hc_out * n) {
+            let lat: Vec<f64> =
+                (0..n).map(|i| kernel_of(bounds[i + 1] - bounds[i], i)).collect();
+            let cur_max = lat.iter().cloned().fold(0.0, f64::max);
+            let mut best: Option<(usize, isize, f64)> = None;
+            for b in 1..n {
+                for delta in [-1isize, 1] {
+                    let nb = bounds[b] as isize + delta;
+                    // Shards b-1 and b must both keep >= 1 HC.
+                    if nb <= bounds[b - 1] as isize || nb >= bounds[b + 1] as isize {
+                        continue;
+                    }
+                    let left = kernel_of((nb - bounds[b - 1] as isize) as usize, b - 1);
+                    let right = kernel_of((bounds[b + 1] as isize - nb) as usize, b);
+                    let mut new_max = left.max(right);
+                    for (i, &l) in lat.iter().enumerate() {
+                        if i != b - 1 && i != b {
+                            new_max = new_max.max(l);
+                        }
+                    }
+                    let improves_best = match best {
+                        None => true,
+                        Some((_, _, m)) => new_max < m,
+                    };
+                    if new_max < cur_max * (1.0 - 1e-12) && improves_best {
+                        best = Some((b, delta, new_max));
+                    }
+                }
+            }
+            match best {
+                Some((b, delta, _)) => {
+                    bounds[b] = (bounds[b] as isize + delta) as usize;
+                }
+                None => break,
+            }
+        }
+    }
+
+    let lat: Vec<f64> = (0..n).map(|i| kernel_of(bounds[i + 1] - bounds[i], i)).collect();
+    let max = lat.iter().cloned().fold(0.0, f64::max);
+    let min = lat.iter().cloned().fold(f64::INFINITY, f64::min);
+    let balanced = max / min.max(1e-15) <= 1.0 + tol;
+    let climbed = bounds.clone();
+    if !balanced {
+        // Tolerance unreachable at 1-HC granularity: fall back to the
+        // predictable equal split.
+        bounds = equal_bounds(d.hc_out, n);
+    }
+
+    let build = |bounds: &[usize]| -> Result<Vec<StagePiece>> {
+        let mut pieces = Vec::with_capacity(n);
+        for (i, &slot) in devs.iter().enumerate() {
+            let (lo, hi) = (bounds[i], bounds[i + 1]);
+            let head = shard_head_macs(cfg, d, hi - lo, last_stage);
+            pieces.push(make_piece(
+                cfg,
+                d,
+                i,
+                slot,
+                &fleet.devices[slot],
+                lo,
+                hi,
+                head,
+                version,
+            )?);
+        }
+        Ok(pieces)
+    };
+    let pieces = match build(&bounds) {
+        Ok(p) => p,
+        // The equal split can violate a device envelope the hill-climbed
+        // split deliberately moved work away from (a starved device in a
+        // mixed fleet). Feasibility beats predictability: fall back to
+        // the climbed bounds rather than declaring the stage unplaceable.
+        Err(equal_err) if !balanced && climbed != bounds => {
+            build(&climbed).map_err(|_| equal_err)?
+        }
+        Err(e) => return Err(e),
+    };
+    Ok((pieces, balanced))
+}
+
+/// All orderings of `n` devices into `k` positive contiguous parts.
+fn compositions(n: usize, k: usize) -> Vec<Vec<usize>> {
+    if k == 0 || n < k {
+        return Vec::new();
+    }
+    if k == 1 {
+        return vec![vec![n]];
+    }
+    let mut out = Vec::new();
+    for first in 1..=(n - k + 1) {
+        for rest in compositions(n - first, k - 1) {
+            let mut v = Vec::with_capacity(k);
+            v.push(first);
+            v.extend(rest);
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Build one candidate plan: `groups` are the layer ranges per stage,
+/// `dev_comp` how many consecutive fleet devices each stage receives.
+fn build_candidate(
+    cfg: &ModelConfig,
+    dims: &[LayerDims],
+    fleet: &Fleet,
+    version: KernelVersion,
+    tol: f64,
+    groups: &[(usize, usize)],
+    dev_comp: &[usize],
+) -> Result<HybridPlan> {
+    let mut stages = Vec::with_capacity(groups.len());
+    let mut idle = Vec::new();
+    let mut next_dev = 0usize;
+    for (si, &(lo, hi)) in groups.iter().enumerate() {
+        let group: Vec<usize> = (next_dev..next_dev + dev_comp[si]).collect();
+        next_dev += dev_comp[si];
+        let last_stage = si == groups.len() - 1;
+        if hi - lo > 1 {
+            // Co-located: every layer of the stage on the group's
+            // single device, chained.
+            debug_assert_eq!(group.len(), 1);
+            let slot = group[0];
+            let dev = &fleet.devices[slot];
+            let mut pieces = Vec::with_capacity(hi - lo);
+            for l in lo..hi {
+                let d = &dims[l];
+                let head = if last_stage && l == hi - 1 {
+                    d.n_out() as u64 * cfg.n_out() as u64
+                } else {
+                    0
+                };
+                pieces.push(make_piece(cfg, d, 0, slot, dev, 0, d.hc_out, head, version)?);
+            }
+            let total: u64 = pieces.iter().map(|p| p.hbm_bytes).sum();
+            if total > dev.hbm_capacity_bytes {
+                bail!(
+                    "{}: layers {lo}..{hi} co-located on {}: {total} parameter bytes \
+                     exceed its {:.0} GB HBM",
+                    cfg.name,
+                    dev.name,
+                    dev.hbm_capacity_bytes as f64 / 1e9
+                );
+            }
+            stages.push(HybridStage {
+                stage: si,
+                layer_lo: lo,
+                layer_hi: hi,
+                device_group: group,
+                pieces,
+                balanced: true,
+            });
+        } else {
+            // Single layer: fan out across the group, clamped at one
+            // hypercolumn per shard (the softmax floor); surplus
+            // devices idle.
+            let d = &dims[lo];
+            let n_shards = group.len().min(d.hc_out);
+            let devs: Vec<usize> = group[..n_shards].to_vec();
+            idle.extend_from_slice(&group[n_shards..]);
+            let (pieces, balanced) =
+                balance_shards(cfg, d, &devs, fleet, last_stage, version, tol)?;
+            stages.push(HybridStage {
+                stage: si,
+                layer_lo: lo,
+                layer_hi: hi,
+                device_group: devs,
+                pieces,
+                balanced,
+            });
+        }
+    }
+    let plan = HybridPlan {
+        cfg: cfg.clone(),
+        version,
+        fleet: fleet.devices.clone(),
+        stages,
+        idle_devices: idle,
+    };
+    plan.validate()?;
+    Ok(plan)
+}
+
+/// Plan `cfg` across `fleet`: exhaustive search over stage compositions
+/// (consecutive-layer groups) × device-group splits (contiguous fleet
+/// blocks, in order), returning the feasible plan with the lowest
+/// modeled bottleneck interval. Errors only when *no* placement fits,
+/// with the most recent infeasibility (naming layer + device).
+pub fn plan_hybrid(
+    cfg: &ModelConfig,
+    fleet: &Fleet,
+    version: KernelVersion,
+    balance_tol: f64,
+) -> Result<HybridPlan> {
+    cfg.validate()?;
+    if fleet.is_empty() {
+        bail!("{}: cannot place on an empty device fleet", cfg.name);
+    }
+    let dims = cfg.layer_dims();
+    let n_layers = dims.len();
+    let n_dev = fleet.len();
+
+    let mut best: Option<HybridPlan> = None;
+    let mut best_score = f64::INFINITY;
+    let mut last_err: Option<anyhow::Error> = None;
+
+    // Layer compositions: bit i of `cuts` set = stage boundary after
+    // layer i.
+    for cuts in 0u32..(1u32 << (n_layers - 1)) {
+        let mut groups: Vec<(usize, usize)> = Vec::new();
+        let mut lo = 0usize;
+        for l in 0..n_layers {
+            let boundary = l == n_layers - 1 || (cuts >> l) & 1 == 1;
+            if boundary {
+                groups.push((lo, l + 1));
+                lo = l + 1;
+            }
+        }
+        let k = groups.len();
+        if k > n_dev {
+            continue;
+        }
+        for dev_comp in compositions(n_dev, k) {
+            // A multi-layer stage chains its kernels on one device.
+            if groups
+                .iter()
+                .zip(&dev_comp)
+                .any(|(&(glo, ghi), &m)| ghi - glo > 1 && m > 1)
+            {
+                continue;
+            }
+            match build_candidate(cfg, &dims, fleet, version, balance_tol, &groups, &dev_comp)
+            {
+                Ok(plan) => {
+                    let score = plan.bottleneck_s();
+                    if best.is_none() || score < best_score * (1.0 - 1e-9) {
+                        best_score = score;
+                        best = Some(plan);
+                    }
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+    }
+
+    best.ok_or_else(|| {
+        last_err.unwrap_or_else(|| {
+            anyhow!(
+                "{}: no feasible placement on a {}-device fleet",
+                cfg.name,
+                n_dev
+            )
+        })
+    })
+}
+
+/// Degenerate plan: 1 stage × `n_shards` equal-split shards of a
+/// single-layer config on `n_shards` copies of `dev` — what the
+/// historical `cluster::plan` emitted; `ShardedExecutor` runs on this.
+pub fn pure_shard(
+    cfg: &ModelConfig,
+    n_shards: usize,
+    version: KernelVersion,
+    dev: &FpgaDevice,
+) -> Result<HybridPlan> {
+    cfg.validate()?;
+    if cfg.n_layers() != 1 {
+        bail!(
+            "{}: pure hypercolumn sharding needs a single hidden layer; \
+             the config stacks {} — use the hybrid placement planner \
+             (cluster::placement::plan_hybrid)",
+            cfg.name,
+            cfg.n_layers()
+        );
+    }
+    if n_shards == 0 {
+        bail!("cannot partition across 0 devices");
+    }
+    if n_shards > cfg.hc_h {
+        bail!(
+            "{}: {n_shards} shards but only {} hidden hypercolumns \
+             (the per-hypercolumn softmax cannot be split below one HC)",
+            cfg.name, cfg.hc_h
+        );
+    }
+    let fleet = Fleet::homogeneous(dev, n_shards);
+    let dims = cfg.layer_dims();
+    build_candidate(cfg, &dims, &fleet, version, DEFAULT_BALANCE_TOL, &[(0, 1)], &[n_shards])
+}
+
+/// Degenerate plan: one stage per layer, one device each — what the
+/// historical `cluster::plan_pipeline` emitted;
+/// `PipelineParallelExecutor` runs on this.
+pub fn pure_pipeline(
+    cfg: &ModelConfig,
+    version: KernelVersion,
+    dev: &FpgaDevice,
+) -> Result<HybridPlan> {
+    cfg.validate()?;
+    let dims = cfg.layer_dims();
+    let fleet = Fleet::homogeneous(dev, dims.len());
+    let groups: Vec<(usize, usize)> = (0..dims.len()).map(|l| (l, l + 1)).collect();
+    let dev_comp = vec![1usize; dims.len()];
+    build_candidate(cfg, &dims, &fleet, version, DEFAULT_BALANCE_TOL, &groups, &dev_comp)
+}
+
+/// Rebuild the degenerate hybrid plan behind a legacy
+/// [`PartitionPlan`](super::plan::PartitionPlan) — honoring its (possibly
+/// hand-edited) shard ranges — so `ShardedExecutor` can run on the
+/// hybrid executor.
+pub fn from_partition(p: &super::plan::PartitionPlan) -> Result<HybridPlan> {
+    p.validate()?;
+    let dims = p.cfg.layer_dims();
+    if dims.len() != 1 {
+        bail!("partition plan is single-layer by construction");
+    }
+    let d = &dims[0];
+    let fleet = Fleet::homogeneous(&p.device, p.shards.len());
+    let mut pieces = Vec::with_capacity(p.shards.len());
+    for s in &p.shards {
+        let head = shard_head_macs(&p.cfg, d, s.n_hc(), true);
+        pieces.push(make_piece(
+            &p.cfg, d, s.id, s.id, &p.device, s.hc_lo, s.hc_hi, head, p.version,
+        )?);
+    }
+    let device_group: Vec<usize> = (0..p.shards.len()).collect();
+    let plan = HybridPlan {
+        cfg: p.cfg.clone(),
+        version: p.version,
+        fleet: fleet.devices,
+        stages: vec![HybridStage {
+            stage: 0,
+            layer_lo: 0,
+            layer_hi: 1,
+            device_group,
+            pieces,
+            balanced: true,
+        }],
+        idle_devices: Vec::new(),
+    };
+    plan.validate()?;
+    Ok(plan)
+}
+
+/// Rebuild the degenerate hybrid plan behind a legacy
+/// [`PipelinePlan`](super::plan::PipelinePlan) for the hybrid executor.
+pub fn from_pipeline(p: &super::plan::PipelinePlan) -> Result<HybridPlan> {
+    p.validate()?;
+    pure_pipeline(&p.cfg, p.version, &p.device)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+
+    fn u55c() -> FpgaDevice {
+        FpgaDevice::u55c()
+    }
+
+    #[test]
+    fn compositions_enumerate_exactly() {
+        assert_eq!(compositions(3, 1), vec![vec![3]]);
+        let c = compositions(4, 2);
+        assert_eq!(c, vec![vec![1, 3], vec![2, 2], vec![3, 1]]);
+        assert!(compositions(2, 3).is_empty());
+    }
+
+    #[test]
+    fn equal_bounds_match_legacy_split() {
+        assert_eq!(equal_bounds(32, 3), vec![0, 11, 22, 32]);
+        assert_eq!(equal_bounds(4, 4), vec![0, 1, 2, 3, 4]);
+        assert_eq!(equal_bounds(1, 1), vec![0, 1]);
+    }
+
+    #[test]
+    fn single_layer_single_device_is_trivial_plan() {
+        let cfg = by_name("tiny").unwrap();
+        let fleet = Fleet::homogeneous(&u55c(), 1);
+        let p = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1).unwrap();
+        assert_eq!(p.n_stages(), 1);
+        assert_eq!(p.stages[0].pieces.len(), 1);
+        assert!(!p.stages[0].sharded());
+        assert!(p.idle_devices.is_empty());
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn single_layer_fleet_shards_across_all_devices() {
+        let cfg = by_name("model1").unwrap(); // hc_h = 32
+        let fleet = Fleet::homogeneous(&u55c(), 4);
+        let p = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1).unwrap();
+        assert_eq!(p.n_stages(), 1);
+        assert_eq!(p.stages[0].pieces.len(), 4);
+        assert!(p.stages[0].sharded());
+        let total: usize = p.stages[0].pieces.iter().map(StagePiece::n_hc).sum();
+        assert_eq!(total, cfg.hc_h);
+        // Sharding must beat the solo placement.
+        let solo = plan_hybrid(&cfg, &Fleet::homogeneous(&u55c(), 1), KernelVersion::Infer, 0.1)
+            .unwrap();
+        assert!(p.bottleneck_s() < solo.bottleneck_s());
+    }
+
+    #[test]
+    fn deep_config_on_one_device_co_locates_all_layers() {
+        let cfg = by_name("toy-deep").unwrap();
+        let fleet = Fleet::homogeneous(&u55c(), 1);
+        let p = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1).unwrap();
+        assert_eq!(p.n_stages(), 1);
+        assert_eq!(p.stages[0].n_layers(), 2);
+        assert_eq!(p.stages[0].pieces.len(), 2);
+        // Chained layers pay the sum of their kernels.
+        let sum: f64 = p.stages[0].pieces.iter().map(|x| x.kernel_s).sum();
+        assert!((p.stages[0].interval_s() - sum).abs() < 1e-18);
+    }
+
+    #[test]
+    fn hetero_fleet_gives_faster_device_more_hypercolumns() {
+        // A BRAM-starved U55C vs a stock one: the balance must shift
+        // hypercolumns toward the faster device and end inside the
+        // tolerance (uneven ranges, the heterogeneous-shards ROADMAP
+        // item).
+        let cfg = by_name("model2").unwrap(); // hc 32, mc 256
+        let mut slow = u55c();
+        slow.name = "Alveo U55C (starved)".into();
+        slow.brams = 900;
+        let fleet = Fleet { devices: vec![slow, u55c()] };
+        let p = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.25).unwrap();
+        let st = &p.stages[0];
+        assert!(st.sharded());
+        assert!(st.balanced, "skew {}", st.skew());
+        assert!(
+            st.pieces[1].n_hc() > st.pieces[0].n_hc(),
+            "fast device should own more HCs: {:?}",
+            st.pieces.iter().map(StagePiece::n_hc).collect::<Vec<_>>()
+        );
+        assert!(st.skew() <= 1.25, "{}", st.skew());
+    }
+
+    #[test]
+    fn one_hc_layer_idles_surplus_devices() {
+        let mut cfg = by_name("tiny").unwrap();
+        cfg.hc_h = 1;
+        cfg.mc_h = 16;
+        cfg.validate().unwrap();
+        let fleet = Fleet::homogeneous(&u55c(), 3);
+        let p = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1).unwrap();
+        assert_eq!(p.stages[0].pieces.len(), 1);
+        assert_eq!(p.idle_devices.len(), 2);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn unreachable_tolerance_falls_back_to_equal_split() {
+        // 3 HCs on 2 devices: the split is 2/1 whichever way, skew ~2,
+        // far outside a 5% tolerance — the planner must fall back to
+        // the equal split and say so.
+        let mut cfg = by_name("tiny").unwrap();
+        cfg.hc_h = 3;
+        cfg.validate().unwrap();
+        let fleet = Fleet::homogeneous(&u55c(), 2);
+        let p = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.05).unwrap();
+        let st = &p.stages[0];
+        assert!(!st.balanced);
+        assert_eq!(
+            st.pieces.iter().map(StagePiece::n_hc).collect::<Vec<_>>(),
+            vec![2, 1]
+        );
+    }
+
+    #[test]
+    fn infeasible_everywhere_names_layer_and_device() {
+        // Per-shard BRAM blows past the ceiling on both device models.
+        let mut cfg = by_name("small").unwrap();
+        cfg.name = "hybrid-huge".into();
+        cfg.hc_h = 32;
+        cfg.mc_h = 2048; // n_h = 65536; 32768 units/shard on 2 devices
+        cfg.validate().unwrap();
+        let fleet = Fleet { devices: vec![u55c(), FpgaDevice::u280()] };
+        let err = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("layer 0"), "{err}");
+        assert!(err.contains("Alveo"), "{err}");
+        assert!(err.contains("BRAM"), "{err}");
+    }
+
+    #[test]
+    fn pure_shard_matches_legacy_equal_split() {
+        let cfg = by_name("model1").unwrap();
+        let p = pure_shard(&cfg, 3, KernelVersion::Infer, &u55c()).unwrap();
+        assert_eq!(p.n_stages(), 1);
+        assert_eq!(
+            p.stages[0].pieces.iter().map(StagePiece::n_hc).collect::<Vec<_>>(),
+            vec![11, 11, 10]
+        );
+        assert!(pure_shard(&by_name("toy-deep").unwrap(), 2, KernelVersion::Infer, &u55c())
+            .is_err());
+    }
+
+    #[test]
+    fn pure_pipeline_places_one_layer_per_stage() {
+        let cfg = by_name("mnist-deep2").unwrap();
+        let p = pure_pipeline(&cfg, KernelVersion::Infer, &u55c()).unwrap();
+        assert_eq!(p.n_stages(), cfg.n_layers());
+        for (l, st) in p.stages.iter().enumerate() {
+            assert_eq!((st.layer_lo, st.layer_hi), (l, l + 1));
+            assert_eq!(st.pieces.len(), 1);
+        }
+    }
+
+    #[test]
+    fn hybrid_beats_pure_pipeline_on_mnist_deep2() {
+        // The acceptance bar: with one spare device the planner must
+        // shard the bottleneck stage and strictly lower the modeled
+        // bottleneck interval vs whole-layer placement.
+        let cfg = by_name("mnist-deep2").unwrap();
+        let dev = u55c();
+        let pipe = pure_pipeline(&cfg, KernelVersion::Infer, &dev).unwrap();
+        let hybrid =
+            plan_hybrid(&cfg, &Fleet::homogeneous(&dev, 3), KernelVersion::Infer, 0.1).unwrap();
+        assert!(
+            hybrid.bottleneck_s() < pipe.bottleneck_s(),
+            "hybrid {} vs pipeline {}",
+            hybrid.bottleneck_s(),
+            pipe.bottleneck_s()
+        );
+        // And some stage actually fans out.
+        assert!(hybrid.stages.iter().any(HybridStage::sharded));
+    }
+
+    #[test]
+    fn degenerate_plans_roundtrip_from_legacy_types() {
+        use super::super::plan::{plan, plan_pipeline};
+        let dev = u55c();
+        let cfg = by_name("tiny").unwrap();
+        let legacy = plan(&cfg, 3, KernelVersion::Infer, &dev).unwrap();
+        let hp = from_partition(&legacy).unwrap();
+        assert_eq!(hp.n_stages(), 1);
+        assert_eq!(hp.stages[0].pieces.len(), 3);
+        for (s, p) in legacy.shards.iter().zip(&hp.stages[0].pieces) {
+            assert_eq!((s.hc_lo, s.hc_hi), (p.hc_lo, p.hc_hi));
+            assert_eq!(s.hbm_bytes, p.hbm_bytes);
+        }
+        let deep = by_name("toy-deep").unwrap();
+        let pp = plan_pipeline(&deep, KernelVersion::Infer, &dev).unwrap();
+        let hp = from_pipeline(&pp).unwrap();
+        assert_eq!(hp.n_stages(), deep.n_layers());
+        for (a, b) in pp.stages.iter().zip(&hp.stages) {
+            assert_eq!(a.hbm_bytes, b.pieces[0].hbm_bytes);
+            assert!((a.kernel_s - b.pieces[0].kernel_s).abs() < 1e-18);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_double_assigned_devices() {
+        let cfg = by_name("model1").unwrap();
+        let fleet = Fleet::homogeneous(&u55c(), 2);
+        let mut p = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1).unwrap();
+        p.stages[0].device_group = vec![0, 0];
+        for (i, piece) in p.stages[0].pieces.iter_mut().enumerate() {
+            piece.device_index = 0;
+            piece.shard = i;
+        }
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("twice"), "{err}");
+    }
+}

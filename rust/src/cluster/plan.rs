@@ -1,25 +1,31 @@
-//! Partition planner: split one BCPNN network across N simulated U55C
-//! devices by hidden hypercolumn.
+//! Legacy planner surfaces over the unified hybrid placement planner.
 //!
-//! The hypercolumn is the natural shard boundary: the per-hypercolumn
-//! softmax normalizes only within one HC, so a shard that owns whole
-//! HCs computes its support slice *and* its softmax with zero
-//! cross-device traffic — the only communication is the input broadcast
-//! and the activity gather (StreamBrain's MPI decomposition makes the
-//! same cut). The planner produces balanced contiguous HC ranges and
-//! validates every shard against the existing `fpga::estimator`
-//! resource model and the U55C HBM capacity, so a plan that comes back
+//! Both historical partitioners are now degenerate cases of
+//! [`super::placement::plan_hybrid`]:
+//!
+//! - [`plan`] — hypercolumn sharding of one single-layer network
+//!   (1 stage × N shards, [`placement::pure_shard`](super::placement::pure_shard));
+//! - [`plan_pipeline`] — whole layers on devices
+//!   (N stages × 1 shard, [`placement::pure_pipeline`](super::placement::pure_pipeline)).
+//!
+//! The [`PartitionPlan`] / [`PipelinePlan`] types stay as the stable
+//! API the executors, benches and serving layer consume; the shard
+//! balancing, device-envelope validation, and latency modeling live
+//! once, in `cluster::placement`. Hypercolumn alignment keeps the
+//! per-hypercolumn softmax shard-local by construction (StreamBrain's
+//! MPI decomposition makes the same cut), so a plan that comes back
 //! `Ok` is one the device model says is implementable.
 
 use anyhow::{bail, Result};
 
 use crate::config::{LayerDims, ModelConfig};
 use crate::fpga::device::{FpgaDevice, KernelVersion};
-use crate::fpga::estimator::{estimate, estimate_stack, Utilization};
+use crate::fpga::estimator::Utilization;
 use crate::fpga::hbm::layer_hbm_bytes;
-use crate::fpga::timing;
 
-// Device-envelope constants live with the estimator now (the stack
+use super::placement;
+
+// Device-envelope constants live with the estimator (the stack
 // validator uses them too); re-exported here for the existing callers.
 pub use crate::fpga::estimator::{BRAM_CEILING_PCT, HBM_CAPACITY_BYTES};
 
@@ -58,6 +64,8 @@ pub struct PartitionPlan {
     /// The full (unsharded) model being partitioned.
     pub cfg: ModelConfig,
     pub version: KernelVersion,
+    /// The device model every shard was validated against.
+    pub device: FpgaDevice,
     pub shards: Vec<ShardSpec>,
 }
 
@@ -138,8 +146,8 @@ pub fn shard_hbm_bytes(cfg: &ModelConfig, n_units: usize, version: KernelVersion
 
 /// Split `cfg`'s hidden layer into `n_shards` balanced contiguous
 /// hypercolumn ranges and validate each against the device model.
-/// Stacked configs use [`plan_pipeline`] (whole layers per device)
-/// instead — hypercolumn sharding splits *within* one layer.
+/// Stacked configs use the hybrid placement planner
+/// (`cluster::placement::plan_hybrid`), which shards *and* pipelines.
 pub fn plan(
     cfg: &ModelConfig,
     n_shards: usize,
@@ -150,80 +158,40 @@ pub fn plan(
     if cfg.n_layers() > 1 {
         bail!(
             "{}: hypercolumn sharding partitions a single hidden layer; \
-             the config stacks {} — use the pipeline-parallel planner \
-             (plan_pipeline) to place whole layers on devices",
+             the config stacks {} — use the hybrid placement planner \
+             (cluster::placement::plan_hybrid) to place pipeline stages \
+             on device groups and shard within them",
             cfg.name,
             cfg.n_layers()
         );
     }
-    if n_shards == 0 {
-        bail!("cannot partition across 0 devices");
-    }
-    if n_shards > cfg.hc_h {
-        bail!(
-            "{}: {n_shards} shards but only {} hidden hypercolumns \
-             (the per-hypercolumn softmax cannot be split below one HC)",
-            cfg.name, cfg.hc_h
-        );
-    }
-
-    let base = cfg.hc_h / n_shards;
-    let rem = cfg.hc_h % n_shards;
-    let mut shards = Vec::with_capacity(n_shards);
-    let mut hc_lo = 0usize;
-    for id in 0..n_shards {
-        let n_hc = base + usize::from(id < rem);
-        let hc_hi = hc_lo + n_hc;
-
-        let mut sub_cfg = cfg.clone();
-        sub_cfg.name = format!("{}/shard{id}", cfg.name);
-        sub_cfg.hc_h = n_hc;
-        sub_cfg.validate()?;
-
-        let util = estimate(&sub_cfg, version, dev);
-        let hbm_bytes = shard_hbm_bytes(cfg, n_hc * cfg.mc_h, version);
-
-        if util.luts as f64 > dev.luts as f64 {
-            bail!(
-                "{}: {} LUTs exceed the {} on a {}",
-                sub_cfg.name, util.luts, dev.luts, dev.name
-            );
-        }
-        if util.dsps as f64 > dev.dsps as f64 {
-            bail!(
-                "{}: {} DSPs exceed the {} on a {}",
-                sub_cfg.name, util.dsps, dev.dsps, dev.name
-            );
-        }
-        if util.bram_pct(dev) > BRAM_CEILING_PCT {
-            bail!(
-                "{}: BRAM utilization {:.1}% above the {BRAM_CEILING_PCT}% \
-                 routability ceiling — shard further",
-                sub_cfg.name,
-                util.bram_pct(dev)
-            );
-        }
-        if hbm_bytes > HBM_CAPACITY_BYTES {
-            bail!(
-                "{}: {} parameter bytes exceed the 16 GB HBM stack — shard further",
-                sub_cfg.name, hbm_bytes
-            );
-        }
-
-        shards.push(ShardSpec {
-            id,
-            hc_lo,
-            hc_hi,
-            unit_lo: hc_lo * cfg.mc_h,
-            unit_hi: hc_hi * cfg.mc_h,
-            sub_cfg,
-            util,
-            hbm_bytes,
-        });
-        hc_lo = hc_hi;
-    }
-
-    let plan = PartitionPlan { cfg: cfg.clone(), version, shards };
+    let hp = placement::pure_shard(cfg, n_shards, version, dev)?;
+    let stage = &hp.stages[0];
+    let shards = stage
+        .pieces
+        .iter()
+        .map(|p| {
+            let mut sub_cfg = cfg.clone();
+            sub_cfg.name = format!("{}/shard{}", cfg.name, p.shard);
+            sub_cfg.hc_h = p.n_hc();
+            ShardSpec {
+                id: p.shard,
+                hc_lo: p.hc_lo,
+                hc_hi: p.hc_hi,
+                unit_lo: p.unit_lo,
+                unit_hi: p.unit_hi,
+                sub_cfg,
+                util: p.util.clone(),
+                hbm_bytes: p.hbm_bytes,
+            }
+        })
+        .collect();
+    let plan = PartitionPlan {
+        cfg: cfg.clone(),
+        version,
+        device: dev.clone(),
+        shards,
+    };
     plan.validate()?;
     Ok(plan)
 }
@@ -254,6 +222,8 @@ pub struct LayerStage {
 pub struct PipelinePlan {
     pub cfg: ModelConfig,
     pub version: KernelVersion,
+    /// The device model every stage was validated against.
+    pub device: FpgaDevice,
     pub stages: Vec<LayerStage>,
 }
 
@@ -282,7 +252,10 @@ impl PipelinePlan {
         self.stages.iter().map(|s| s.kernel_s).sum()
     }
 
-    /// Structural invariants: one stage per hidden layer, in order.
+    /// Structural invariants (one stage per hidden layer, in order)
+    /// plus the device envelope: a stage whose kernel outgrew its
+    /// device cannot be placed whole — the hybrid placement planner
+    /// can shard it across a device group instead.
     pub fn validate(&self) -> Result<()> {
         if self.stages.len() != self.cfg.n_layers() {
             bail!(
@@ -295,6 +268,20 @@ impl PipelinePlan {
             if s.device != i || s.dims.index != i {
                 bail!("stage {i} misplaced (device {}, layer {})", s.device, s.dims.index);
             }
+            let dev = &self.device;
+            let over = s.util.luts > dev.luts
+                || s.util.dsps > dev.dsps
+                || s.util.bram_pct(dev) > BRAM_CEILING_PCT
+                || s.hbm_bytes > dev.hbm_capacity_bytes;
+            if over {
+                bail!(
+                    "{}: stage {i} (layer {i}) exceeds the {} envelope — use the \
+                     hybrid placement planner (cluster::placement::plan_hybrid) \
+                     to shard this stage across a device group",
+                    self.cfg.name,
+                    dev.name
+                );
+            }
         }
         Ok(())
     }
@@ -302,28 +289,33 @@ impl PipelinePlan {
 
 /// Place every hidden layer of `cfg` on its own simulated device,
 /// validating each layer's kernel against the device envelope and HBM
-/// capacity (errors name the offending layer, via `estimate_stack`).
+/// capacity (errors name the offending layer and device).
 pub fn plan_pipeline(
     cfg: &ModelConfig,
     version: KernelVersion,
     dev: &FpgaDevice,
 ) -> Result<PipelinePlan> {
-    cfg.validate()?;
-    let est = estimate_stack(cfg, version, dev)?;
-    let breakdowns = timing::stack_breakdown(cfg, version, dev);
-    let stages = est
-        .layers
-        .into_iter()
-        .zip(breakdowns)
-        .map(|(l, b)| LayerStage {
-            device: l.dims.index,
-            dims: l.dims,
-            util: l.util,
-            hbm_bytes: l.hbm_bytes,
-            kernel_s: b.kernel_s(),
+    let hp = placement::pure_pipeline(cfg, version, dev)?;
+    let stages = hp
+        .stages
+        .iter()
+        .map(|st| {
+            let p = &st.pieces[0];
+            LayerStage {
+                device: st.stage,
+                dims: p.dims,
+                util: p.util.clone(),
+                hbm_bytes: p.hbm_bytes,
+                kernel_s: p.kernel_s,
+            }
         })
         .collect();
-    let plan = PipelinePlan { cfg: cfg.clone(), version, stages };
+    let plan = PipelinePlan {
+        cfg: cfg.clone(),
+        version,
+        device: dev.clone(),
+        stages,
+    };
     plan.validate()?;
     Ok(plan)
 }
@@ -430,7 +422,21 @@ mod tests {
         let err = plan(&cfg, 2, KernelVersion::Infer, &dev)
             .unwrap_err()
             .to_string();
-        assert!(err.contains("plan_pipeline"), "{err}");
+        assert!(err.contains("plan_hybrid"), "{err}");
+    }
+
+    #[test]
+    fn pipeline_validate_points_oversized_stage_at_hybrid_planner() {
+        // A stage that outgrew its device (here: hand-shrunk to a
+        // device that cannot hold it) must say which stage and point
+        // at the hybrid planner, not just fail opaquely.
+        let dev = FpgaDevice::u55c();
+        let cfg = by_name("toy-deep").unwrap();
+        let mut p = plan_pipeline(&cfg, KernelVersion::Infer, &dev).unwrap();
+        p.stages[1].util.luts = dev.luts * 2;
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("stage 1"), "{err}");
+        assert!(err.contains("plan_hybrid"), "{err}");
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
@@ -292,6 +292,77 @@ impl ModelConfig {
     }
 }
 
+/// Device fleet available to the hybrid placement planner: an ordered
+/// list of device model names ("u55c", "u280"). Config stays
+/// hardware-agnostic — names resolve to `fpga::device::FpgaDevice`
+/// envelopes at planning time (`cluster::placement::Fleet::resolve`).
+/// Order matters: the planner assigns devices to pipeline stages in
+/// fleet order, so list the fleet the way the rack is cabled.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetSpec {
+    pub devices: Vec<String>,
+}
+
+impl FleetSpec {
+    /// `n` identical devices of one model.
+    pub fn homogeneous(model: &str, n: usize) -> FleetSpec {
+        FleetSpec { devices: vec![model.to_string(); n] }
+    }
+
+    /// Parse a CLI fleet spec: comma-separated model names with an
+    /// optional `:count` multiplier — `"u55c:2,u280"` is two U55Cs
+    /// followed by one U280.
+    pub fn parse(s: &str) -> Result<FleetSpec> {
+        let mut devices = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part.split_once(':') {
+                Some((model, count)) => {
+                    let n: usize = count.trim().parse().map_err(|_| {
+                        anyhow!("fleet entry {part:?}: count {count:?} is not a number")
+                    })?;
+                    if n == 0 {
+                        bail!("fleet entry {part:?}: count must be >= 1");
+                    }
+                    devices.extend(std::iter::repeat(model.trim().to_string()).take(n));
+                }
+                None => devices.push(part.to_string()),
+            }
+        }
+        if devices.is_empty() {
+            bail!("fleet spec {s:?} names no devices");
+        }
+        Ok(FleetSpec { devices })
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.devices.iter().map(|d| Json::from(d.as_str())).collect())
+    }
+
+    pub fn from_json(v: &Json) -> Result<FleetSpec> {
+        let devices = v
+            .as_arr()?
+            .iter()
+            .map(|d| Ok(d.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        if devices.is_empty() {
+            bail!("fleet JSON names no devices");
+        }
+        Ok(FleetSpec { devices })
+    }
+}
+
 /// Dataset shape/size spec per config (paper Table 1 right columns).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DatasetSpec {
@@ -512,6 +583,20 @@ mod tests {
         let mut c = by_name("toy-deep").unwrap();
         c.extra_layers[0].mc = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_spec_parses_counts_and_roundtrips() {
+        let f = FleetSpec::parse("u55c:2,u280").unwrap();
+        assert_eq!(f.devices, vec!["u55c", "u55c", "u280"]);
+        assert_eq!(f.len(), 3);
+        let back = FleetSpec::from_json(&Json::parse(&f.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, f);
+        assert_eq!(FleetSpec::parse("u55c").unwrap().len(), 1);
+        assert_eq!(FleetSpec::homogeneous("u55c", 4).len(), 4);
+        assert!(FleetSpec::parse("").is_err());
+        assert!(FleetSpec::parse("u55c:0").is_err());
+        assert!(FleetSpec::parse("u55c:x").is_err());
     }
 
     #[test]

@@ -2,6 +2,11 @@
 //!
 //! Resource totals follow the paper (§4.2: 1,146,240 LUTs, 8,376 DSPs)
 //! and the implied BRAM/FF totals of Table 3's utilization percentages.
+//! The Alveo U280 envelope rides along for mixed-fleet placement
+//! planning (`cluster::placement`): more logic/BRAM, but only half the
+//! HBM stack.
+
+use anyhow::{bail, Result};
 
 /// Which kernel build is on the device (paper Table 3 rows).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -42,6 +47,9 @@ pub struct FpgaDevice {
     pub hbm_channels: u32,
     pub hbm_width_bits: u32,
     pub hbm_freq_hz: f64,
+    /// Total HBM capacity (bytes) — the per-device parameter-memory
+    /// envelope the placement planners validate shards against.
+    pub hbm_capacity_bytes: u64,
     /// Utilization ceiling for the roofline peak (paper: ~80%).
     pub util_ceiling: f64,
     /// Fixed host->device invocation overhead (XRT dispatch), seconds.
@@ -63,11 +71,44 @@ impl FpgaDevice {
             hbm_channels: 32,
             hbm_width_bits: 256,
             hbm_freq_hz: 450e6,
+            hbm_capacity_bytes: 16 * 1024 * 1024 * 1024, // 16 GB HBM2
             util_ceiling: 0.80,
             // Calibrated against Table 2 (see DESIGN.md §Perf):
             // overhead(model) = 62us + 24.7ns*n_h + 44.7ns*hc_in.
             host_invoke_s: 62e-6,
             dma_per_float_s: 24.7e-9 / 2.0, // per float of n_h-sized arrays
+        }
+    }
+
+    /// Alveo U280: the other HBM Alveo generation a mixed fleet is
+    /// likely to hold. More logic and BRAM than the U55C (so less
+    /// routing-pressure fmax derating on big kernels) but only half
+    /// the HBM capacity — exactly the trade-off that makes uneven
+    /// hypercolumn shards worthwhile.
+    pub fn u280() -> FpgaDevice {
+        FpgaDevice {
+            name: "Alveo U280".into(),
+            luts: 1_304_000,
+            ffs: 2_607_000,
+            dsps: 9_024,
+            brams: 2_016,
+            hbm_channels: 32,
+            hbm_width_bits: 256,
+            hbm_freq_hz: 450e6,
+            hbm_capacity_bytes: 8 * 1024 * 1024 * 1024, // 8 GB HBM2
+            util_ceiling: 0.80,
+            host_invoke_s: 62e-6,
+            dma_per_float_s: 24.7e-9 / 2.0,
+        }
+    }
+
+    /// Resolve a fleet-spec model name ("u55c", "u280") to its device
+    /// envelope.
+    pub fn by_model(name: &str) -> Result<FpgaDevice> {
+        match name.to_ascii_lowercase().as_str() {
+            "u55c" | "alveo-u55c" => Ok(FpgaDevice::u55c()),
+            "u280" | "alveo-u280" => Ok(FpgaDevice::u280()),
+            other => bail!("unknown device model {other:?}; known models: u55c, u280"),
         }
     }
 
@@ -109,5 +150,24 @@ mod tests {
     fn version_names() {
         assert_eq!(KernelVersion::Infer.name(), "infer");
         assert_eq!(KernelVersion::all().len(), 3);
+    }
+
+    #[test]
+    fn u280_differs_where_it_should() {
+        let a = FpgaDevice::u55c();
+        let b = FpgaDevice::u280();
+        // Bigger logic/BRAM envelope, same HBM bandwidth, half capacity.
+        assert!(b.luts > a.luts && b.brams > a.brams && b.dsps > a.dsps);
+        assert_eq!(b.hbm_bandwidth(), a.hbm_bandwidth());
+        assert_eq!(b.hbm_capacity_bytes * 2, a.hbm_capacity_bytes);
+        assert_eq!(a.hbm_capacity_bytes, 16 * 1024 * 1024 * 1024);
+    }
+
+    #[test]
+    fn by_model_resolves_and_rejects() {
+        assert_eq!(FpgaDevice::by_model("u55c").unwrap().name, "Alveo U55C");
+        assert_eq!(FpgaDevice::by_model("U280").unwrap().name, "Alveo U280");
+        let err = FpgaDevice::by_model("vu9p").unwrap_err().to_string();
+        assert!(err.contains("u55c"), "{err}");
     }
 }

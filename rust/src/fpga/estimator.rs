@@ -26,7 +26,9 @@ use super::device::{FpgaDevice, KernelVersion};
 use super::hbm::layer_hbm_bytes;
 use super::ops::{total_cost, FpOp};
 
-/// HBM capacity of one U55C stack (16 GB).
+/// HBM capacity of one U55C stack (16 GB). Mixed fleets carry the
+/// capacity per device (`FpgaDevice::hbm_capacity_bytes`); this
+/// constant remains the U55C value for the single-device callers.
 pub const HBM_CAPACITY_BYTES: u64 = 16 * 1024 * 1024 * 1024;
 
 /// BRAM utilization above which the estimator's fmax derating says the
@@ -259,10 +261,12 @@ pub fn estimate_stack(
                 util.bram_pct(dev)
             );
         }
-        if hbm_bytes > HBM_CAPACITY_BYTES {
+        if hbm_bytes > dev.hbm_capacity_bytes {
             bail!(
-                "{what}: {hbm_bytes} parameter bytes exceed the 16 GB HBM stack \
-                 — shard this layer"
+                "{what}: {hbm_bytes} parameter bytes exceed the {:.0} GB HBM stack \
+                 of a {} — shard this layer",
+                dev.hbm_capacity_bytes as f64 / 1e9,
+                dev.name
             );
         }
         layers.push(LayerEstimate { dims, util, hbm_bytes });

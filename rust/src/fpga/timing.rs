@@ -130,6 +130,18 @@ pub fn breakdown_layer(
     }
 }
 
+/// Modeled steady-state kernel time (seconds) of one projection kernel
+/// — a whole layer or a hypercolumn shard of one (`dims` with a
+/// reduced `hc_out`) — with `head_macs` riding on its tail. The hybrid
+/// placement planner sizes device groups by equalizing this quantity
+/// across shards, which is what makes uneven HC ranges on mixed
+/// U55C/U280 fleets meaningful.
+pub fn layer_kernel_s(
+    dims: &LayerDims, head_macs: u64, version: KernelVersion, dev: &FpgaDevice,
+) -> f64 {
+    breakdown_layer(dims, head_macs, version, dev).kernel_s()
+}
+
 /// Build the latency model for one (config, version) on `dev` — the
 /// layer-0 kernel with the classifier head on its tail (the paper's
 /// single-hidden-layer build), plus the host dispatch overhead.
@@ -287,6 +299,24 @@ mod tests {
         let bottleneck = stack_bottleneck_s(&cfg, KernelVersion::Train, &dev);
         assert!(sum > bottleneck);
         assert!(bs.iter().any(|b| (b.kernel_s() - bottleneck).abs() < 1e-15));
+    }
+
+    #[test]
+    fn shard_kernel_time_shrinks_with_hc_slice() {
+        // The planner's balance currency: a half-layer shard must model
+        // strictly faster than the whole layer on the same device.
+        let dev = FpgaDevice::u55c();
+        let cfg = by_name("model1").unwrap();
+        let full = cfg.layer_dims()[0];
+        let mut half = full;
+        half.hc_out = full.hc_out / 2;
+        let t_full = layer_kernel_s(&full, 0, KernelVersion::Infer, &dev);
+        let t_half = layer_kernel_s(&half, 0, KernelVersion::Infer, &dev);
+        assert!(t_half < t_full, "{t_half} vs {t_full}");
+        // And the U280's relaxed BRAM pressure makes the same kernel at
+        // least as fast there.
+        let t_280 = layer_kernel_s(&full, 0, KernelVersion::Infer, &FpgaDevice::u280());
+        assert!(t_280 <= t_full, "{t_280} vs {t_full}");
     }
 
     #[test]

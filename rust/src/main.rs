@@ -40,6 +40,9 @@ COMMANDS:
   table3            Table 3 (estimator) (--models ...)
   stack             per-layer stack envelopes + pipeline placement
                     (--models mnist-deep2,toy-deep,model1)
+  plan              hybrid placement: pipeline stages x hypercolumn
+                    shards on a device fleet (--models mnist-deep2
+                    --fleet u55c:3 --version infer --tol 0.1)
   roofline          Fig 6 operating points (--models ...)
   accuracy          Table 2 accuracy rows: PJRT path vs pure-rust CPU
                     (--config tiny --epochs N)
@@ -90,6 +93,7 @@ fn run(argv: Vec<String>) -> Result<()> {
             println!("{}", report::stack_table(&refs)?);
             Ok(())
         }
+        "plan" => cmd_plan(&args),
         "roofline" => {
             let models = models_arg(&args);
             let refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
@@ -120,6 +124,30 @@ fn models_arg(args: &Args) -> Vec<String> {
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+/// `repro plan`: print the hybrid placement the unified planner picks
+/// for each model on the given device fleet, with per-stage/per-shard
+/// modeled latency, balance skew, and HBM occupancy.
+fn cmd_plan(args: &Args) -> Result<()> {
+    use bcpnn_accel::config::FleetSpec;
+    use bcpnn_accel::fpga::device::KernelVersion;
+
+    let models = match args.get("models") {
+        Some(_) => models_arg(args),
+        None => vec!["mnist-deep2".into(), "model1".into()],
+    };
+    let refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+    let fleet = FleetSpec::parse(args.get_or("fleet", "u55c:3"))?;
+    let version = match args.get_or("version", "infer") {
+        "infer" => KernelVersion::Infer,
+        "train" => KernelVersion::Train,
+        "struct" => KernelVersion::Struct,
+        other => bail!("unknown kernel version {other:?} (infer|train|struct)"),
+    };
+    let tol: f64 = args.get_parse("tol", 0.10f64)?;
+    println!("{}", report::placement_table(&refs, &fleet, version, tol)?);
+    Ok(())
 }
 
 fn cmd_config(args: &Args) -> Result<()> {

@@ -305,6 +305,117 @@ pub fn stack_table(models: &[&str]) -> Result<String> {
     Ok(s)
 }
 
+/// Hybrid placement report (`repro plan`): the chosen two-level
+/// placement of each model on a device fleet — per-stage / per-shard
+/// modeled latency, balance skew, and HBM occupancy — plus the
+/// comparison against the two degenerate strategies (pure pipeline,
+/// pure shard) the hybrid planner subsumes.
+pub fn placement_table(
+    models: &[&str],
+    fleet_spec: &crate::config::FleetSpec,
+    version: KernelVersion,
+    tol: f64,
+) -> Result<String> {
+    use crate::cluster::placement::{plan_hybrid, Fleet};
+    use crate::cluster::plan::{plan, plan_pipeline};
+    use crate::fpga::timing::host_overhead_s;
+
+    let fleet = Fleet::resolve(fleet_spec)?;
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Hybrid placement — fleet [{}], {} build, balance tolerance {:.0}%\n",
+        fleet_spec.devices.join(", "),
+        version.name(),
+        tol * 100.0
+    ));
+    for &m in models {
+        let cfg = by_name(m)?;
+        s.push_str(&format!(
+            "\n{m} ({} hidden layer{}, {} device{}):\n",
+            cfg.n_layers(),
+            if cfg.n_layers() == 1 { "" } else { "s" },
+            fleet.len(),
+            if fleet.len() == 1 { "" } else { "s" },
+        ));
+        let hp = match plan_hybrid(&cfg, &fleet, version, tol) {
+            Ok(p) => p,
+            Err(e) => {
+                s.push_str(&format!("  no feasible placement: {e:#}\n"));
+                continue;
+            }
+        };
+        s.push_str(
+            "  stage layers shard device           HCs       fmax MHz  kernel us   HBM MB (occ)\n",
+        );
+        for st in &hp.stages {
+            for p in &st.pieces {
+                let dev = &hp.fleet[p.device_index];
+                s.push_str(&format!(
+                    "  {:<5} {:<6} {:<5} {:<14} [{:>3},{:>3})  {:>8.1} {:>10.2} {:>8.1} ({:>4.1}%)\n",
+                    st.stage,
+                    format!("{}..{}", st.layer_lo, st.layer_hi),
+                    p.shard,
+                    dev.name,
+                    p.hc_lo,
+                    p.hc_hi,
+                    p.util.freq_mhz,
+                    p.kernel_s * 1e6,
+                    p.hbm_bytes as f64 / 1e6,
+                    100.0 * p.hbm_bytes as f64 / dev.hbm_capacity_bytes as f64,
+                ));
+            }
+            s.push_str(&format!(
+                "        stage {} interval {:.2} us  skew {:.3}{}\n",
+                st.stage,
+                st.interval_s() * 1e6,
+                st.skew(),
+                if st.balanced { "" } else { "  [equal-split fallback]" }
+            ));
+        }
+        if !hp.idle_devices.is_empty() {
+            s.push_str(&format!("  idle fleet slots: {:?}\n", hp.idle_devices));
+        }
+        let dev0 = &hp.fleet[0];
+        s.push_str(&format!(
+            "  bottleneck {:.2} us -> {:.0} img/s modeled; per-image latency {:.3} ms\n",
+            hp.bottleneck_s() * 1e6,
+            hp.throughput_img_s(),
+            (hp.latency_s() + host_overhead_s(&cfg, dev0)) * 1e3,
+        ));
+        // The two degenerate strategies this plan must subsume.
+        match plan_pipeline(&cfg, version, dev0) {
+            Ok(pp) => s.push_str(&format!(
+                "  vs pure pipeline ({} stage(s) x 1 device): bottleneck {:.2} us ({:.2}x)\n",
+                pp.n_devices(),
+                pp.bottleneck().kernel_s * 1e6,
+                pp.bottleneck().kernel_s / hp.bottleneck_s().max(1e-15),
+            )),
+            Err(e) => s.push_str(&format!("  vs pure pipeline: infeasible ({e:#})\n")),
+        }
+        match plan(&cfg, fleet.len().min(cfg.hc_h), version, dev0) {
+            Ok(sp) => {
+                let worst = sp
+                    .shards
+                    .iter()
+                    .map(|sh| {
+                        timing::breakdown(&sh.sub_cfg, version, dev0).kernel_s()
+                    })
+                    .fold(0.0f64, f64::max);
+                s.push_str(&format!(
+                    "  vs pure shard (1 stage x {} device(s)): bottleneck {:.2} us ({:.2}x)\n",
+                    sp.n_shards(),
+                    worst * 1e6,
+                    worst / hp.bottleneck_s().max(1e-15),
+                ));
+            }
+            Err(_) => s.push_str(
+                "  vs pure shard: not legal for this config (stacked layers)\n",
+            ),
+        }
+    }
+    Ok(s)
+}
+
 /// Render a receptive field (Fig. 5) as ASCII art.
 pub fn ascii_field(field: &[f64], side: usize) -> String {
     let ramp = b" .:-=+*#%@";
@@ -389,6 +500,22 @@ mod tests {
         .unwrap_err()
         .to_string();
         assert!(err.contains("layer 1"), "{err}");
+    }
+
+    #[test]
+    fn placement_table_renders_hybrid_and_comparisons() {
+        let fleet = crate::config::FleetSpec::parse("u55c:3").unwrap();
+        let t = placement_table(&["mnist-deep2", "model1"], &fleet, KernelVersion::Infer, 0.1)
+            .unwrap();
+        assert!(t.contains("mnist-deep2"), "{t}");
+        assert!(t.contains("bottleneck"), "{t}");
+        assert!(t.contains("vs pure pipeline"), "{t}");
+        // Stacked config: pure shard is flagged illegal, not printed.
+        assert!(t.contains("not legal"), "{t}");
+        // Mixed fleet renders too.
+        let mixed = crate::config::FleetSpec::parse("u55c,u280").unwrap();
+        let t = placement_table(&["model2"], &mixed, KernelVersion::Infer, 0.25).unwrap();
+        assert!(t.contains("Alveo U280"), "{t}");
     }
 
     #[test]

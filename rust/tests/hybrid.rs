@@ -1,0 +1,241 @@
+//! System tests of the unified hybrid placement planner + executor.
+//!
+//! The load-bearing guarantees:
+//!
+//! 1. **Bitwise identity, registry-wide**: `HybridExecutor::infer_batch`
+//!    equals `LayerGraph::infer` bit for bit on *every* registry
+//!    config, whatever placement the planner picks (sharded, chained,
+//!    co-located). The shard slices keep the reference accumulation
+//!    order; nothing else would survive this pin.
+//! 2. **The hybrid plan dominates the legacy planners** on the ROADMAP
+//!    bottleneck workload: on `mnist-deep2` the chosen placement has a
+//!    strictly lower modeled bottleneck interval than whole-layer
+//!    pipeline placement, while pure hypercolumn sharding cannot
+//!    express the config at all.
+//! 3. Planner edge cases: a 1-HC layer on a many-device fleet, the
+//!    equal-split fallback when the balance tolerance is unreachable,
+//!    and infeasible mixed fleets erroring with the layer and device
+//!    named.
+
+use std::time::Duration;
+
+use bcpnn_accel::bcpnn::LayerGraph;
+use bcpnn_accel::cluster::{
+    plan, plan_hybrid, plan_pipeline, ClusterConfig, ClusterServer, Fleet, HybridExecutor,
+    SchedulePolicy,
+};
+use bcpnn_accel::config::{by_name, registry, FleetSpec};
+use bcpnn_accel::data::synth;
+use bcpnn_accel::fpga::device::{FpgaDevice, KernelVersion};
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn hybrid_executor_bitwise_equals_layer_graph_across_registry() {
+    // The acceptance pin: every registry config, served through
+    // whatever placement the planner picks on a 3-device fleet, must
+    // reproduce the reference inference bit for bit.
+    let dev = FpgaDevice::u55c();
+    let fleet = Fleet::homogeneous(&dev, 3);
+    for (name, cfg) in registry() {
+        let graph = LayerGraph::new(cfg.clone(), 42);
+        // Big paper models get fewer images so the debug-build test
+        // stays fast; the math is per-image, so coverage is unaffected.
+        let n_imgs = if cfg.n_in() * cfg.n_h() > 1_000_000 { 2 } else { 6 };
+        let d = synth::generate(cfg.img_side, cfg.n_classes, n_imgs, 9, 0.15);
+        let reference: Vec<Vec<u32>> =
+            d.images.iter().map(|i| bits(&graph.infer(i))).collect();
+
+        let hp = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1)
+            .unwrap_or_else(|e| panic!("{name}: no placement: {e:#}"));
+        let exec = HybridExecutor::new(graph, &hp).unwrap();
+        let probs = exec.infer_batch(&d.images).unwrap();
+        assert_eq!(probs.len(), reference.len());
+        for (i, (got, want)) in probs.iter().zip(&reference).enumerate() {
+            assert_eq!(
+                &bits(got), want,
+                "{name}: image {i} diverges through the hybrid placement"
+            );
+        }
+    }
+}
+
+#[test]
+fn tiny_bitwise_identity_across_fleet_sizes() {
+    // Same pin across plan shapes: solo, partial shard, full shard.
+    let cfg = by_name("tiny").unwrap(); // hc_h = 4
+    let dev = FpgaDevice::u55c();
+    let graph = LayerGraph::new(cfg.clone(), 7);
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 16, 3, 0.15);
+    let reference: Vec<Vec<u32>> = d.images.iter().map(|i| bits(&graph.infer(i))).collect();
+    for n_dev in [1usize, 2, 3, 4] {
+        let fleet = Fleet::homogeneous(&dev, n_dev);
+        let hp = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1).unwrap();
+        let exec = HybridExecutor::new(graph.clone(), &hp).unwrap();
+        let probs = exec.infer_batch(&d.images).unwrap();
+        for (i, (got, want)) in probs.iter().zip(&reference).enumerate() {
+            assert_eq!(&bits(got), want, "image {i} at {n_dev} devices");
+        }
+    }
+}
+
+#[test]
+fn mnist_deep2_hybrid_strictly_beats_both_legacy_planners() {
+    // ROADMAP's hybrid-parallelism acceptance: with one spare device
+    // the planner shards the bottleneck stage, strictly lowering the
+    // modeled bottleneck vs plan_pipeline, while plan() cannot express
+    // the stacked config at all (no legal single-layer plan exists).
+    let cfg = by_name("mnist-deep2").unwrap();
+    let dev = FpgaDevice::u55c();
+    let pipe = plan_pipeline(&cfg, KernelVersion::Infer, &dev).unwrap();
+    let hybrid =
+        plan_hybrid(&cfg, &Fleet::homogeneous(&dev, 3), KernelVersion::Infer, 0.1).unwrap();
+    assert!(
+        hybrid.bottleneck_s() < pipe.bottleneck().kernel_s,
+        "hybrid bottleneck {} must be strictly below pipeline {}",
+        hybrid.bottleneck_s(),
+        pipe.bottleneck().kernel_s
+    );
+    assert!(hybrid.stages.iter().any(|st| st.sharded()));
+    // And the modeled throughput dominates the best pure strategy.
+    assert!(hybrid.throughput_img_s() > pipe.throughput_img_s());
+    let err = plan(&cfg, 3, KernelVersion::Infer, &dev).unwrap_err().to_string();
+    assert!(err.contains("plan_hybrid"), "{err}");
+}
+
+#[test]
+fn one_hc_layer_on_many_devices_clamps_and_serves() {
+    // Planner edge: a layer with a single hypercolumn cannot shard
+    // below the softmax floor — the plan uses one device, idles the
+    // rest, and still serves bit-identically.
+    let mut cfg = by_name("tiny").unwrap();
+    cfg.hc_h = 1;
+    cfg.mc_h = 16;
+    cfg.validate().unwrap();
+    let fleet = Fleet::homogeneous(&FpgaDevice::u55c(), 4);
+    let hp = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1).unwrap();
+    assert_eq!(hp.stages[0].pieces.len(), 1);
+    assert_eq!(hp.idle_devices.len(), 3);
+
+    let graph = LayerGraph::new(cfg.clone(), 5);
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 8, 1, 0.15);
+    let reference: Vec<Vec<u32>> = d.images.iter().map(|i| bits(&graph.infer(i))).collect();
+    let exec = HybridExecutor::new(graph, &hp).unwrap();
+    for (got, want) in exec.infer_batch(&d.images).unwrap().iter().zip(&reference) {
+        assert_eq!(&bits(got), want);
+    }
+}
+
+#[test]
+fn unreachable_tolerance_reports_equal_split_fallback() {
+    // 3 HCs across 2 devices: skew ~2 whichever boundary is chosen,
+    // so a 5% tolerance is unreachable and the planner must fall back
+    // to the predictable equal split and flag it.
+    let mut cfg = by_name("tiny").unwrap();
+    cfg.hc_h = 3;
+    cfg.validate().unwrap();
+    let fleet = Fleet::homogeneous(&FpgaDevice::u55c(), 2);
+    let hp = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.05).unwrap();
+    let st = &hp.stages[0];
+    assert!(!st.balanced);
+    assert_eq!(
+        st.pieces.iter().map(|p| p.hc_hi - p.hc_lo).collect::<Vec<_>>(),
+        vec![2, 1]
+    );
+}
+
+#[test]
+fn infeasible_mixed_fleet_names_layer_and_device() {
+    // Per-shard BRAM blows past the routability ceiling on both device
+    // models of the fleet: the error must say which layer on which
+    // device, not just "no".
+    let mut cfg = by_name("small").unwrap();
+    cfg.name = "hybrid-huge".into();
+    cfg.hc_h = 32;
+    cfg.mc_h = 2048; // n_h = 65536
+    cfg.validate().unwrap();
+    let fleet = Fleet { devices: vec![FpgaDevice::u55c(), FpgaDevice::u280()] };
+    let err = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("layer 0"), "{err}");
+    assert!(err.contains("Alveo"), "{err}");
+}
+
+#[test]
+fn fleet_spec_resolves_to_mixed_fleet_plan() {
+    // The config-level fleet spec drives a real mixed-device plan.
+    let spec = FleetSpec::parse("u55c,u280").unwrap();
+    let fleet = Fleet::resolve(&spec).unwrap();
+    assert_eq!(fleet.len(), 2);
+    let cfg = by_name("model2").unwrap();
+    let hp = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.25).unwrap();
+    assert_eq!(hp.n_devices_used(), 2);
+    let names: Vec<&str> = hp
+        .stages
+        .iter()
+        .flat_map(|st| st.pieces.iter().map(|p| hp.fleet[p.device_index].name.as_str()))
+        .collect();
+    assert!(names.contains(&"Alveo U280"), "{names:?}");
+}
+
+#[test]
+fn hybrid_cluster_serves_stacked_config_with_failover() {
+    // The serving story end to end: a stacked config behind the
+    // cluster coordinator on a hybrid plan, surviving a replica kill
+    // without losing requests.
+    let cfg = by_name("toy-deep").unwrap();
+    let fleet = Fleet::homogeneous(&FpgaDevice::u55c(), 3);
+    let hp = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1).unwrap();
+    let graph = LayerGraph::new(cfg.clone(), 42);
+    let server = ClusterServer::start_hybrid(
+        graph,
+        &hp,
+        ClusterConfig {
+            replicas: 2,
+            // Ignored by start_hybrid (topology comes from the plan).
+            shards_per_replica: hp.n_devices_used(),
+            queue_depth: 128,
+            flush_timeout: Duration::from_millis(2),
+            policy: SchedulePolicy::LeastOutstanding,
+        },
+    )
+    .unwrap();
+
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 24, 5, 0.15);
+    // Warm traffic on both replicas.
+    let warm: Vec<_> = d.images[..8]
+        .iter()
+        .map(|img| server.submit(img.clone()).unwrap())
+        .collect();
+    for rx in &warm {
+        let probs = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(probs.len(), cfg.n_out());
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    }
+    // Kill one replica; the rest of the stream must still drain.
+    assert!(server.fail_replica(0));
+    assert_eq!(server.healthy_replicas(), 1);
+    let tail: Vec<_> = d.images[8..]
+        .iter()
+        .map(|img| server.submit(img.clone()).unwrap())
+        .collect();
+    for rx in &tail {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let rep = server.shutdown();
+    assert_eq!(rep.served, 24, "no request may be lost");
+    assert!(rep.replicas[0].failed);
+    assert!(!rep.replicas[1].failed);
+    // Worker reports carry the (stage, shard) topology of the plan:
+    // one worker per shard of a sharded stage, one per co-located
+    // stage.
+    let workers: usize = hp
+        .stages
+        .iter()
+        .map(|st| if st.sharded() { st.pieces.len() } else { 1 })
+        .sum();
+    assert_eq!(rep.replicas[1].shards.len(), workers);
+}
