@@ -1,0 +1,147 @@
+//! Active-synapse kernel bench: the dense seed kernels vs the
+//! block-sparse engine, ns/img per registry config — the measured side
+//! of the `hc_in/nact` speedup the machine model predicts
+//! (`fpga::timing::active_synapses` streams `nact * mc_in * n_out`
+//! terms; the dense host loop touched all `n_in * n_out`).
+//!
+//!     cargo bench --bench kernels              # full registry
+//!     cargo bench --bench kernels -- --quick   # CI smoke subset
+//!     cargo bench --bench kernels -- --json    # + BENCH_kernels.json
+//!
+//! In every mode the bench **asserts** block-sparse support is at
+//! least 2x faster than dense on `mnist-deep2` (front layer =
+//! model1-class dims, modeled speedup `hc_in/nact = 784/128 ≈ 6x`),
+//! so the engine cannot silently regress toward the dense baseline
+//! in CI.
+
+use std::hint::black_box;
+use std::path::Path;
+
+use bcpnn_accel::bcpnn::sparse::{dense_support_masked, dense_train_step};
+use bcpnn_accel::bcpnn::{LayerGraph, Workspace};
+use bcpnn_accel::bench_harness as bh;
+use bcpnn_accel::config::{by_name, registry};
+use bcpnn_accel::data::encode::encode_image;
+use bcpnn_accel::data::synth;
+use bcpnn_accel::util::json::Json;
+
+fn ns_per_img(r: &bh::BenchResult, imgs: usize) -> f64 {
+    r.mean.as_nanos() as f64 / imgs.max(1) as f64
+}
+
+fn main() {
+    let opts = bh::BenchOpts::from_args();
+    let names: Vec<String> = if opts.quick {
+        ["tiny", "toy-deep", "mnist-deep2"].map(String::from).to_vec()
+    } else {
+        registry().keys().cloned().collect()
+    };
+    let (n_imgs, warmup, iters) = if opts.quick { (2usize, 1u32, 3u32) } else { (4, 1, 5) };
+
+    println!("== active-synapse kernels: dense seed vs block-sparse ==");
+    println!("{}", bh::header());
+
+    let mut entries: Vec<Json> = Vec::new();
+    for name in &names {
+        let cfg = by_name(name).unwrap();
+        let g = LayerGraph::new(cfg.clone(), 42);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, n_imgs, 7, 0.15);
+        let xs: Vec<Vec<f32>> = d.images.iter().map(|i| encode_image(i)).collect();
+        let l0 = &g.layers[0];
+        let dims = l0.dims;
+        let mask = l0.dense_mask();
+
+        // Support mat-vec, layer 0: the inner loop everything runs on.
+        let r_dense = bh::bench(&format!("{name} support dense"), warmup, iters, || {
+            for x in &xs {
+                black_box(dense_support_masked(&l0.bj, &l0.wij, &mask, x));
+            }
+        });
+        println!("{}", r_dense.row());
+        let mut buf: Vec<f32> = Vec::new();
+        let r_sparse = bh::bench(&format!("{name} support block-sparse"), warmup, iters, || {
+            for x in &xs {
+                l0.support_masked_into(x, &mut buf);
+                black_box(buf.last().copied());
+            }
+        });
+        println!("{}", r_sparse.row());
+        let speedup = ns_per_img(&r_dense, n_imgs) / ns_per_img(&r_sparse, n_imgs).max(1.0);
+
+        // One fused plasticity step (traces dense, weight map sparse).
+        let y0 = l0.activate_masked(&xs[0], cfg.gain);
+        let (mut pi, mut pj, mut pij, mut wij, mut bj) = (
+            l0.pi.clone(), l0.pj.clone(), l0.pij.clone(), l0.wij.clone(), l0.bj.clone(),
+        );
+        let r_tdense = bh::bench(&format!("{name} train dense"), warmup, iters, || {
+            dense_train_step(
+                &mut pi, &mut pj, &mut pij, &mut wij, &mut bj,
+                &xs[0], &y0, cfg.alpha, cfg.eps,
+            );
+        });
+        println!("{}", r_tdense.row());
+        let mut sp = l0.clone();
+        let r_tsparse = bh::bench(&format!("{name} train block-sparse"), warmup, iters, || {
+            sp.train_step(&xs[0], &y0, cfg.alpha, cfg.eps);
+        });
+        println!("{}", r_tsparse.row());
+        let train_speedup =
+            r_tdense.mean.as_secs_f64() / r_tsparse.mean.as_secs_f64().max(1e-12);
+
+        // End-to-end inference through the zero-alloc workspace path.
+        let mut ws = Workspace::new();
+        let r_infer = bh::bench(&format!("{name} infer (workspace)"), warmup, iters, || {
+            for img in &d.images {
+                black_box(g.infer_with(img, &mut ws).last().copied());
+            }
+        });
+        println!("{}", r_infer.row());
+
+        println!(
+            "   -> layer0 {}x{} HC (nact {}): support speedup {speedup:.2}x \
+             (modeled ~{:.1}x), train speedup {train_speedup:.2}x",
+            dims.hc_in, dims.hc_out, dims.nact,
+            dims.hc_in as f64 / dims.nact as f64,
+        );
+
+        if name.as_str() == "mnist-deep2" {
+            // Acceptance gate: modeled speedup is ~6.1x here; demand
+            // the >=2x floor so a real regression can't hide behind
+            // runner noise while a noisy-but-healthy run still passes.
+            assert!(
+                speedup >= 2.0,
+                "block-sparse support only {speedup:.2}x vs dense on mnist-deep2 \
+                 ({:.0} vs {:.0} ns/img) — below the 2x acceptance floor \
+                 (modeled ~6.1x); active-synapse engine regressed",
+                ns_per_img(&r_sparse, n_imgs),
+                ns_per_img(&r_dense, n_imgs),
+            );
+        }
+
+        entries.push(Json::obj(vec![
+            ("config", Json::from(name.as_str())),
+            ("hc_in", Json::from(dims.hc_in)),
+            ("nact", Json::from(dims.nact)),
+            ("modeled_speedup", Json::from(dims.hc_in as f64 / dims.nact as f64)),
+            ("support_dense_ns_per_img", Json::from(ns_per_img(&r_dense, n_imgs))),
+            ("support_sparse_ns_per_img", Json::from(ns_per_img(&r_sparse, n_imgs))),
+            ("support_speedup", Json::from(speedup)),
+            ("train_dense_ns", Json::from(r_tdense.mean.as_nanos() as f64)),
+            ("train_sparse_ns", Json::from(r_tsparse.mean.as_nanos() as f64)),
+            ("train_speedup", Json::from(train_speedup)),
+            ("infer_ws_ns_per_img", Json::from(ns_per_img(&r_infer, n_imgs))),
+        ]));
+    }
+
+    if opts.json {
+        let report = Json::obj(vec![
+            ("bench", Json::from("kernels")),
+            ("source", Json::from("measured")),
+            ("quick", Json::from(opts.quick)),
+            ("configs", Json::Arr(entries)),
+        ]);
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_kernels.json");
+        bh::write_json_report(&path, &report).expect("write BENCH_kernels.json");
+        println!("wrote {}", path.display());
+    }
+}

@@ -2,13 +2,20 @@
 //! overhead, and depth-analysis cost — the L3 hot-path numbers the
 //! §Perf pass tracks.
 //!
-//!     cargo bench --bench stream_runtime
+//!     cargo bench --bench stream_runtime            # stdout tables
+//!     cargo bench --bench stream_runtime -- --json  # + BENCH_stream_runtime.json
+
+use std::path::Path;
 
 use bcpnn_accel::bench_harness as bh;
 use bcpnn_accel::stream::depth::{minimal_depths, simulate, StageSpec};
 use bcpnn_accel::stream::{Fifo, Pipeline};
+use bcpnn_accel::util::json::Json;
 
 fn main() {
+    let opts = bh::BenchOpts::from_args();
+    let mut results: Vec<bh::BenchResult> = Vec::new();
+
     println!("== stream runtime microbenches ==");
     println!("{}", bh::header());
 
@@ -22,6 +29,7 @@ fn main() {
         }
     });
     println!("{}  ({:.0} Mops/s)", r.row(), 2000.0 / r.mean.as_secs_f64() / 1e6);
+    results.push(r);
 
     // Cross-thread streaming throughput.
     let r = bh::bench("fifo producer->consumer (10k items)", 1, 10, || {
@@ -41,6 +49,7 @@ fn main() {
         h.join().unwrap();
     });
     println!("{}  ({:.2} Mitems/s)", r.row(), 10_000.0 / r.mean.as_secs_f64() / 1e6);
+    results.push(r);
 
     // Pipeline dispatch overhead: empty stages.
     for n_stages in [1usize, 2, 4] {
@@ -54,6 +63,7 @@ fn main() {
         });
         println!("{}  ({:.0} ns/item/stage)", r.row(),
                  r.mean.as_nanos() as f64 / 5000.0 / n_stages as f64);
+        results.push(r);
     }
 
     // Depth analysis cost (the build-time cosim analogue).
@@ -66,8 +76,22 @@ fn main() {
         std::hint::black_box(simulate(&stages, &[8, 8], 4096));
     });
     println!("{}", r.row());
+    results.push(r);
     let r = bh::bench("minimal_depths search (3 stages)", 1, 5, || {
         std::hint::black_box(minimal_depths(&stages, 1024, 0.05));
     });
     println!("{}", r.row());
+    results.push(r);
+
+    if opts.json {
+        let report = Json::obj(vec![
+            ("bench", Json::from("stream_runtime")),
+            ("source", Json::from("measured")),
+            ("cases", Json::Arr(results.iter().map(bh::BenchResult::to_json).collect())),
+        ]);
+        let path =
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_stream_runtime.json");
+        bh::write_json_report(&path, &report).expect("write BENCH_stream_runtime.json");
+        println!("wrote {}", path.display());
+    }
 }

@@ -6,23 +6,40 @@
 //! the classifier head into a deep BCPNN, the way StreamBrain (Podobas
 //! et al., 2021) stacks hypercolumn layers.
 //!
+//! The compute kernels are **block-sparse**: instead of the seed's
+//! dense f32 `mask_unit`, each projection carries a
+//! [`BlockIndex`](super::sparse::BlockIndex) — per input HC, the merged
+//! unit-column ranges of its active output HCs — and the support /
+//! plasticity loops touch only active spans, i.e. the
+//! `nact * mc_in * n_out` synapses the FPGA streams
+//! (`fpga::timing::active_synapses`), not all `n_in * n_out`.
+//!
 //! Numerics contract: a 1-element `LayerGraph` is **bitwise identical**
 //! to the seed [`Network`](super::Network) — same RNG streams at init,
 //! same accumulation order in every loop (pinned by
-//! `rust/tests/deep_stack.rs`). The per-projection math is shared with
-//! `Params` through `params::recompute_weights`/`init_mask_dims`.
+//! `rust/tests/deep_stack.rs`) — and the block-sparse kernels are
+//! bitwise identical to the preserved dense seed loops
+//! (`super::sparse::dense_*`, pinned registry-wide by
+//! `rust/tests/kernels.rs`; see `sparse` module docs for why skipping
+//! `+0.0` terms is exact). The weight map is maintained only on active
+//! spans; blocks that become active through rewiring get their weights
+//! re-derived from the (densely maintained) traces in
+//! [`Projection::refresh_mask`] — the same formula over the same trace
+//! values the dense kernel would have applied on its last train step.
 
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::config::{LayerDims, ModelConfig};
-use crate::data::encode::{encode_image, one_hot};
+use crate::data::encode::{encode_image, encode_image_into, one_hot};
 use crate::data::rng::XorShift64;
 
 use super::network::{argmax, Network};
 use super::params::{init_mask_dims, recompute_weights, Params};
+use super::sparse::{expand_mask_dims, BlockIndex};
 use super::structural::StructuralPlasticity;
+use super::workspace::Workspace;
 
 /// Per-layer RNG seed: layer 0 uses the caller's seed verbatim (the
 /// seed network's exact stream); deeper layers decorrelate by
@@ -50,8 +67,10 @@ pub struct Projection {
     pub bj: Vec<f32>,
     /// HC-level structural mask (hc_in, hc_out); all-ones for the head.
     pub mask_hc: Vec<f32>,
-    /// Unit-level mask cache, refreshed on structural updates.
-    mask_unit: Vec<f32>,
+    /// Block-sparse connectivity index, rebuilt on structural updates.
+    index: BlockIndex,
+    /// Scratch table for the hoisted `pj + eps` terms of `train_step`.
+    scratch: Vec<f32>,
 }
 
 impl Projection {
@@ -89,6 +108,7 @@ impl Projection {
         mask_hc: Vec<f32>, eps: f32,
     ) -> Projection {
         let (n_in, n_out) = (dims.n_in(), dims.n_out());
+        let index = BlockIndex::from_dims(&mask_hc, &dims);
         let mut p = Projection {
             dims,
             pi,
@@ -97,15 +117,18 @@ impl Projection {
             wij: vec![0.0; n_in * n_out],
             bj: vec![0.0; n_out],
             mask_hc,
-            mask_unit: Vec::new(),
+            index,
+            scratch: Vec::new(),
         };
+        // Dense derivation at init: every weight (active or not) starts
+        // formula-consistent with the traces.
         recompute_weights(&p.pi, &p.pj, &p.pij, &mut p.wij, &mut p.bj, eps);
-        p.refresh_mask();
         p
     }
 
     /// Rebuild a projection from stored arrays (checkpoint load,
-    /// `Params` import). Lengths are validated against `dims`.
+    /// `Params` import). Lengths are validated against `dims`; the
+    /// stored weights are trusted verbatim (no re-derivation).
     pub fn from_arrays(
         dims: LayerDims, pi: Vec<f32>, pj: Vec<f32>, pij: Vec<f32>,
         wij: Vec<f32>, bj: Vec<f32>, mask_hc: Vec<f32>,
@@ -125,129 +148,141 @@ impl Projection {
                       dims.index);
             }
         }
-        let mut p = Projection { dims, pi, pj, pij, wij, bj, mask_hc, mask_unit: Vec::new() };
-        p.refresh_mask();
-        Ok(p)
+        let index = BlockIndex::from_dims(&mask_hc, &dims);
+        Ok(Projection { dims, pi, pj, pij, wij, bj, mask_hc, index, scratch: Vec::new() })
     }
 
-    /// Re-expand the HC-level mask to unit level (call after rewiring).
-    pub fn refresh_mask(&mut self) {
-        let (n_in, n_out) = (self.dims.n_in(), self.dims.n_out());
-        let mut m = vec![0.0f32; n_in * n_out];
-        for i in 0..n_in {
-            let hc_i = i / self.dims.mc_in;
-            for j in 0..n_out {
-                let hc_j = j / self.dims.mc_out;
-                m[i * n_out + j] = self.mask_hc[hc_i * self.dims.hc_out + hc_j];
-            }
-        }
-        self.mask_unit = m;
+    /// Rebuild the block index after structural (mask) updates.
+    /// Blocks that just became active get their weights re-derived
+    /// from the traces — bitwise the values the dense kernel carried,
+    /// since `train_step` maintains every trace densely and the dense
+    /// weight map applies this exact formula to them each step.
+    pub fn refresh_mask(&mut self, eps: f32) {
+        let dims = self.dims;
+        super::sparse::refresh_activated_weights(
+            &self.pi, &self.pj, &self.pij, &mut self.wij,
+            &self.mask_hc, &self.index, &dims, eps,
+        );
+        self.index = BlockIndex::from_dims(&self.mask_hc, &dims);
     }
 
-    /// Unit-level mask (expanded cache).
-    pub fn mask_unit(&self) -> &[f32] {
-        &self.mask_unit
+    /// The block-sparse connectivity index the kernels iterate.
+    pub fn block_index(&self) -> &BlockIndex {
+        &self.index
+    }
+
+    /// Expand the HC-level mask to a dense unit mask (the seed
+    /// representation — tests and reference kernels only).
+    pub fn dense_mask(&self) -> Vec<f32> {
+        expand_mask_dims(
+            &self.mask_hc, self.dims.hc_in, self.dims.hc_out,
+            self.dims.mc_in, self.dims.mc_out,
+        )
     }
 
     /// Masked support: s_j = b_j + sum_i m_ij w_ij x_i, skipping silent
-    /// inputs — the hidden-layer datapath (`Network::support`).
-    pub fn support_masked(&self, x: &[f32]) -> Vec<f32> {
-        let n_out = self.dims.n_out();
+    /// inputs — the hidden-layer datapath (`Network::support`), walking
+    /// only active spans. Writes into `out` (no allocation).
+    pub fn support_masked_into(&self, x: &[f32], out: &mut Vec<f32>) {
         debug_assert_eq!(x.len(), self.dims.n_in());
-        let mut s = self.bj.clone();
-        for (i, &xi) in x.iter().enumerate() {
-            if xi == 0.0 {
-                continue;
-            }
-            let wrow = &self.wij[i * n_out..(i + 1) * n_out];
-            let mrow = &self.mask_unit[i * n_out..(i + 1) * n_out];
-            for j in 0..n_out {
-                s[j] += xi * wrow[j] * mrow[j];
-            }
-        }
+        super::sparse::support_span_into(&self.bj, &self.wij, &self.index, x, out);
+    }
+
+    /// Allocating wrapper over [`Projection::support_masked_into`].
+    pub fn support_masked(&self, x: &[f32]) -> Vec<f32> {
+        let mut s = Vec::new();
+        self.support_masked_into(x, &mut s);
         s
     }
 
     /// Masked support restricted to output units `[lo, hi)` — the
     /// shard-local slice of [`Projection::support_masked`]. Each output
     /// column accumulates in exactly the order the full computation
-    /// uses, so a gather of slices is bitwise identical to the whole
-    /// vector (the hybrid executor's intra-stage fan-out runs on this,
-    /// the way `Network::support_cols` backs the single-layer shards).
-    pub fn support_cols(&self, x: &[f32], lo: usize, hi: usize) -> Vec<f32> {
-        let n_out = self.dims.n_out();
-        debug_assert!(lo <= hi && hi <= n_out);
+    /// uses (spans clipped to the slice), so a gather of slices is
+    /// bitwise identical to the whole vector (the hybrid executor's
+    /// intra-stage fan-out runs on this, the way `Network::support_cols`
+    /// backs the single-layer shards).
+    pub fn support_cols_into(&self, x: &[f32], lo: usize, hi: usize, out: &mut Vec<f32>) {
         debug_assert_eq!(x.len(), self.dims.n_in());
-        let mut s = self.bj[lo..hi].to_vec();
-        for (i, &xi) in x.iter().enumerate() {
-            if xi == 0.0 {
-                continue;
-            }
-            let wrow = &self.wij[i * n_out + lo..i * n_out + hi];
-            let mrow = &self.mask_unit[i * n_out + lo..i * n_out + hi];
-            for j in 0..(hi - lo) {
-                s[j] += xi * wrow[j] * mrow[j];
-            }
-        }
+        super::sparse::support_span_cols_into(
+            &self.bj, &self.wij, &self.index, x, lo, hi, out,
+        );
+    }
+
+    /// Allocating wrapper over [`Projection::support_cols_into`].
+    pub fn support_cols(&self, x: &[f32], lo: usize, hi: usize) -> Vec<f32> {
+        let mut s = Vec::new();
+        self.support_cols_into(x, lo, hi, &mut s);
         s
     }
 
     /// Dense support: s_k = b_k + sum_j y_j w_jk — the head datapath
-    /// (`Network::output_activity` before its softmax).
-    pub fn support_dense(&self, y: &[f32]) -> Vec<f32> {
+    /// (`Network::output_activity` before its softmax). Writes into
+    /// `out` (no allocation).
+    pub fn support_dense_into(&self, y: &[f32], out: &mut Vec<f32>) {
         let n_out = self.dims.n_out();
         debug_assert_eq!(y.len(), self.dims.n_in());
-        let mut s = self.bj.clone();
+        out.clear();
+        out.extend_from_slice(&self.bj);
         for (j, &yj) in y.iter().enumerate() {
             let row = &self.wij[j * n_out..(j + 1) * n_out];
             for k in 0..n_out {
-                s[k] += yj * row[k];
+                out[k] += yj * row[k];
             }
         }
+    }
+
+    /// Allocating wrapper over [`Projection::support_dense_into`].
+    pub fn support_dense(&self, y: &[f32]) -> Vec<f32> {
+        let mut s = Vec::new();
+        self.support_dense_into(y, &mut s);
         s
+    }
+
+    /// Hidden-layer activation: masked support + per-HC softmax, into
+    /// `out`.
+    pub fn activate_masked_into(&self, x: &[f32], gain: f32, out: &mut Vec<f32>) {
+        self.support_masked_into(x, out);
+        Network::hc_softmax(out, self.dims.hc_out, self.dims.mc_out, gain);
     }
 
     /// Hidden-layer activation: masked support + per-HC softmax.
     pub fn activate_masked(&self, x: &[f32], gain: f32) -> Vec<f32> {
-        let mut s = self.support_masked(x);
-        Network::hc_softmax(&mut s, self.dims.hc_out, self.dims.mc_out, gain);
+        let mut s = Vec::new();
+        self.activate_masked_into(x, gain, &mut s);
         s
+    }
+
+    /// Head activation: dense support + softmax over the output HC,
+    /// into `out`.
+    pub fn activate_dense_into(&self, y: &[f32], out: &mut Vec<f32>) {
+        self.support_dense_into(y, out);
+        Network::hc_softmax(out, self.dims.hc_out, self.dims.mc_out, 1.0);
     }
 
     /// Head activation: dense support + softmax over the output HC.
     pub fn activate_dense(&self, y: &[f32]) -> Vec<f32> {
-        let mut s = self.support_dense(y);
-        Network::hc_softmax(&mut s, self.dims.hc_out, self.dims.mc_out, 1.0);
+        let mut s = Vec::new();
+        self.activate_dense_into(y, &mut s);
         s
     }
 
     /// One fused plasticity step given this projection's input `x` and
-    /// output activity `y`: EMA traces + Bayesian weight recompute in a
-    /// single pass over the joint arrays — the per-projection body of
-    /// `Network::train_unsup_step`/`train_sup_step` (same loop order).
+    /// output activity `y`: EMA traces + Bayesian weight recompute —
+    /// the per-projection body of `Network::train_unsup_step`/
+    /// `train_sup_step` (same loop order). Traces update **densely**
+    /// (structural plasticity scores silent blocks by MI over `pij`);
+    /// the expensive weight map (div + ln) walks only active spans,
+    /// with the `(pj + eps)` terms hoisted into a per-step table — the
+    /// same add on the same operands once instead of per row, so every
+    /// derived weight is bitwise unchanged. (A reciprocal table would
+    /// be faster still but rounds differently; the pinned path keeps
+    /// the division.)
     pub fn train_step(&mut self, x: &[f32], y: &[f32], alpha: f32, eps: f32) {
-        let a = alpha;
-        let n_out = self.dims.n_out();
-        for (pi, &xi) in self.pi.iter_mut().zip(x) {
-            *pi = (1.0 - a) * *pi + a * xi;
-        }
-        for (pj, &yj) in self.pj.iter_mut().zip(y) {
-            *pj = (1.0 - a) * *pj + a * yj;
-        }
-        for i in 0..x.len() {
-            let xi = x[i];
-            let pi_eps = self.pi[i] + eps;
-            let prow = &mut self.pij[i * n_out..(i + 1) * n_out];
-            let wrow = &mut self.wij[i * n_out..(i + 1) * n_out];
-            for j in 0..n_out {
-                let pij_new = (1.0 - a) * prow[j] + a * xi * y[j];
-                prow[j] = pij_new;
-                wrow[j] = ((pij_new + eps * eps) / (pi_eps * (self.pj[j] + eps))).ln();
-            }
-        }
-        for (b, &pj) in self.bj.iter_mut().zip(&self.pj) {
-            *b = (pj + eps).ln();
-        }
+        super::sparse::train_step_span(
+            &mut self.pi, &mut self.pj, &mut self.pij, &mut self.wij, &mut self.bj,
+            &mut self.scratch, &self.index, x, y, alpha, eps,
+        );
     }
 }
 
@@ -351,10 +386,45 @@ impl LayerGraph {
         (x, acts)
     }
 
+    /// Full inference into a reusable [`Workspace`]: encode, layer
+    /// stack, head — zero heap allocation once the workspace is warm.
+    /// The returned slice (borrowing the workspace) is bitwise
+    /// identical to [`LayerGraph::infer`].
+    pub fn infer_with<'w>(&self, img: &[f32], ws: &'w mut Workspace) -> &'w [f32] {
+        encode_image_into(img, &mut ws.x);
+        debug_assert_eq!(ws.x.len(), self.cfg.n_in());
+        let gain = self.cfg.gain;
+        let [a, b] = &mut ws.act;
+        self.layers[0].activate_masked_into(&ws.x, gain, a);
+        let (mut cur, mut spare) = (a, b);
+        for l in 1..self.layers.len() {
+            self.layers[l].activate_masked_into(cur.as_slice(), gain, spare);
+            std::mem::swap(&mut cur, &mut spare);
+        }
+        self.head.activate_dense_into(cur.as_slice(), &mut ws.out);
+        &ws.out
+    }
+
     /// Full inference: class probabilities for one image.
     pub fn infer(&self, img: &[f32]) -> Vec<f32> {
-        let (_, acts) = self.layer_activities(img);
-        self.head.activate_dense(acts.last().expect("graph has >= 1 layer"))
+        let mut ws = Workspace::new();
+        self.infer_with(img, &mut ws).to_vec()
+    }
+
+    /// Class probabilities for a whole batch, reusing one workspace
+    /// across images (allocates only the returned vectors).
+    pub fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut ws = Workspace::new();
+        images
+            .iter()
+            .map(|img| self.infer_with(img, &mut ws).to_vec())
+            .collect()
+    }
+
+    /// Argmax prediction through a caller-held workspace (no per-image
+    /// allocation at all).
+    pub fn predict_with(&self, img: &[f32], ws: &mut Workspace) -> usize {
+        argmax(self.infer_with(img, ws))
     }
 
     /// Argmax prediction.
@@ -362,12 +432,14 @@ impl LayerGraph {
         argmax(&self.infer(img))
     }
 
-    /// Accuracy over a labelled set.
+    /// Accuracy over a labelled set (one workspace for the whole
+    /// sweep; zero per-image allocation).
     pub fn accuracy(&self, images: &[Vec<f32>], labels: &[u32]) -> f64 {
+        let mut ws = Workspace::new();
         let correct = images
             .iter()
             .zip(labels)
-            .filter(|(img, &l)| self.predict(img) as u32 == l)
+            .filter(|(img, &l)| self.predict_with(img, &mut ws) as u32 == l)
             .count();
         correct as f64 / labels.len().max(1) as f64
     }
@@ -412,8 +484,8 @@ impl LayerGraph {
     }
 
     /// One structural-plasticity pass over every hidden projection
-    /// (the head is fully connected and never rewired). Unit masks are
-    /// refreshed in place.
+    /// (the head is fully connected and never rewired). Block indices
+    /// (and reactivated weights) are refreshed in place.
     pub fn rewire(&mut self, sp: &StructuralPlasticity) -> GraphRewireStats {
         let eps = self.cfg.eps;
         self.layers
@@ -422,11 +494,12 @@ impl LayerGraph {
             .collect()
     }
 
-    /// Re-expand every projection's unit mask (after external mask
+    /// Rebuild every projection's block index (after external mask
     /// edits).
     pub fn refresh_masks(&mut self) {
+        let eps = self.cfg.eps;
         for p in self.layers.iter_mut() {
-            p.refresh_mask();
+            p.refresh_mask(eps);
         }
     }
 }
@@ -476,6 +549,44 @@ mod tests {
                 assert!((s - 1.0).abs() < 1e-4, "layer {l}: {s}");
             }
         }
+    }
+
+    #[test]
+    fn workspace_infer_bitwise_matches_allocating_path() {
+        // `infer` delegates to `infer_with`, so the independent oracle
+        // here is the layer_activities + activate_dense chain (fresh
+        // allocations per stage — a genuinely separate code path).
+        for name in ["tiny", "toy-deep"] {
+            let cfg = by_name(name).unwrap();
+            let g = LayerGraph::new(cfg.clone(), 9);
+            let mut ws = Workspace::new();
+            for k in 0..5 {
+                let img = vec![0.13 * k as f32; cfg.hc_in()];
+                let (_, acts) = g.layer_activities(&img);
+                let a = g.head.activate_dense(acts.last().unwrap());
+                let b = g.infer_with(&img, &mut ws);
+                let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, bb, "{name} image {k}");
+                assert_eq!(argmax(&a), argmax(b), "{name} image {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn infer_batch_matches_per_image_infer() {
+        let cfg = by_name("toy-deep").unwrap();
+        let g = LayerGraph::new(cfg.clone(), 4);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 12, 2, 0.15);
+        let batch = g.infer_batch(&d.images);
+        for (img, got) in d.images.iter().zip(&batch) {
+            // Independent oracle: the per-stage allocating chain.
+            let (_, acts) = g.layer_activities(img);
+            let want = g.head.activate_dense(acts.last().unwrap());
+            assert_eq!(got, &want);
+        }
+        let acc = g.accuracy(&d.images, &d.labels);
+        assert!((0.0..=1.0).contains(&acc));
     }
 
     #[test]
@@ -532,6 +643,7 @@ mod tests {
         let g = LayerGraph::from_params(&cfg, &net.params).unwrap();
         let back = g.to_params().unwrap();
         assert_eq!(back.pij, net.params.pij);
+        assert_eq!(back.wij, net.params.wij);
         assert_eq!(back.qik, net.params.qik);
         assert_eq!(back.mask_hc, net.params.mask_hc);
     }

@@ -17,9 +17,13 @@ pub mod checkpoint;
 pub mod layer;
 pub mod network;
 pub mod params;
+pub mod sparse;
 pub mod structural;
+pub mod workspace;
 
 pub use layer::{LayerGraph, Projection};
 pub use network::Network;
 pub use params::Params;
+pub use sparse::BlockIndex;
 pub use structural::{mutual_information, receptive_field, StructuralPlasticity};
+pub use workspace::{BufPool, Workspace};

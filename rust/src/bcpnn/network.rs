@@ -5,69 +5,84 @@
 //! the paper's "CPU implementation, single core, -O3" baseline: a
 //! straightforward sequential implementation with no task parallelism —
 //! deliberately, because Table 2's CPU column is exactly that.
+//!
+//! Kernels are block-sparse: the dense f32 `mask_unit` of the seed is
+//! replaced by a [`BlockIndex`](super::sparse::BlockIndex) over the HC
+//! mask, and support / weight-map loops walk only active spans —
+//! bitwise identical to the dense seed loops (see `super::sparse` for
+//! the exactness argument; pinned by `rust/tests/kernels.rs`).
 
 use crate::config::ModelConfig;
-use crate::data::encode::{encode_image, one_hot};
+use crate::data::encode::{encode_image, encode_image_into, one_hot};
 
 use super::params::Params;
+use super::sparse::BlockIndex;
+use super::workspace::Workspace;
 
 /// A BCPNN network bound to a config; owns its parameter state.
 #[derive(Debug, Clone)]
 pub struct Network {
     pub cfg: ModelConfig,
     pub params: Params,
-    /// Unit-level mask cache, invalidated on structural updates.
-    mask_unit: Vec<f32>,
+    /// Block-sparse connectivity index, rebuilt on structural updates.
+    index: BlockIndex,
+    /// Scratch table for the hoisted `pj + eps` terms of training.
+    scratch: Vec<f32>,
 }
 
 impl Network {
     pub fn new(cfg: ModelConfig, seed: u64) -> Network {
         let params = Params::init(&cfg, seed);
-        let mask_unit = params.expand_mask(&cfg);
-        Network { cfg, params, mask_unit }
+        let index = BlockIndex::from_dims(&params.mask_hc, &cfg.layer_dims()[0]);
+        Network { cfg, params, index, scratch: Vec::new() }
     }
 
-    /// Re-derive the unit-level mask (call after structural rewiring).
+    /// Rebuild the block index (call after structural rewiring).
+    /// Weights of newly activated blocks are re-derived from the
+    /// traces — bitwise the values the dense kernel maintained (see
+    /// [`Projection::refresh_mask`](super::Projection::refresh_mask)).
     pub fn refresh_mask(&mut self) {
-        self.mask_unit = self.params.expand_mask(&self.cfg);
+        let dims = self.cfg.layer_dims()[0];
+        let p = &mut self.params;
+        super::sparse::refresh_activated_weights(
+            &p.pi, &p.pj, &p.pij, &mut p.wij,
+            &p.mask_hc, &self.index, &dims, self.cfg.eps,
+        );
+        self.index = BlockIndex::from_dims(&p.mask_hc, &dims);
+    }
+
+    /// The block-sparse connectivity index the kernels iterate.
+    pub fn block_index(&self) -> &BlockIndex {
+        &self.index
     }
 
     // ------------------------------------------------------ activation
 
+    /// Masked support into `out`: s_j = b_j + sum_i m_ij w_ij x_i,
+    /// walking only active spans (no allocation).
+    pub fn support_into(&self, x: &[f32], out: &mut Vec<f32>) {
+        super::sparse::support_span_into(
+            &self.params.bj, &self.params.wij, &self.index, x, out,
+        );
+    }
+
     /// Masked support: s_j = b_j + sum_i m_ij w_ij x_i.
     pub fn support(&self, x: &[f32]) -> Vec<f32> {
-        let n_h = self.cfg.n_h();
-        let mut s = self.params.bj.clone();
-        for (i, &xi) in x.iter().enumerate() {
-            if xi == 0.0 {
-                continue;
-            }
-            let wrow = &self.params.wij[i * n_h..(i + 1) * n_h];
-            let mrow = &self.mask_unit[i * n_h..(i + 1) * n_h];
-            for j in 0..n_h {
-                s[j] += xi * wrow[j] * mrow[j];
-            }
-        }
+        let mut s = Vec::new();
+        self.support_into(x, &mut s);
         s
     }
 
     /// Masked support restricted to hidden columns `lo..hi` — lets the
     /// dataflow pipeline split the mat-vec across parallel stages the
-    /// way the FPGA splits it across HBM channel groups.
+    /// way the FPGA splits it across HBM channel groups. Spans are
+    /// clipped to the slice, preserving the full computation's
+    /// accumulation order (a gather of slices is bitwise identical).
     pub fn support_cols(&self, x: &[f32], lo: usize, hi: usize) -> Vec<f32> {
-        let n_h = self.cfg.n_h();
-        debug_assert!(lo <= hi && hi <= n_h);
-        let mut s = self.params.bj[lo..hi].to_vec();
-        for (i, &xi) in x.iter().enumerate() {
-            if xi == 0.0 {
-                continue;
-            }
-            let wrow = &self.params.wij[i * n_h + lo..i * n_h + hi];
-            let mrow = &self.mask_unit[i * n_h + lo..i * n_h + hi];
-            for j in 0..(hi - lo) {
-                s[j] += xi * wrow[j] * mrow[j];
-            }
-        }
+        let mut s = Vec::new();
+        super::sparse::support_span_cols_into(
+            &self.params.bj, &self.params.wij, &self.index, x, lo, hi, &mut s,
+        );
         s
     }
 
@@ -100,24 +115,54 @@ impl Network {
         (x, y)
     }
 
-    /// Output probabilities from hidden activity (single output HC).
-    pub fn output_activity(&self, y: &[f32]) -> Vec<f32> {
+    /// Output support into `out` (no allocation; softmax not applied).
+    fn output_support_into(&self, y: &[f32], out: &mut Vec<f32>) {
         let n_out = self.cfg.n_out();
-        let mut s = self.params.bk.clone();
+        out.clear();
+        out.extend_from_slice(&self.params.bk);
         for (j, &yj) in y.iter().enumerate() {
             let row = &self.params.who[j * n_out..(j + 1) * n_out];
             for k in 0..n_out {
-                s[k] += yj * row[k];
+                out[k] += yj * row[k];
             }
         }
-        Self::hc_softmax(&mut s, 1, n_out, 1.0);
+    }
+
+    /// Output probabilities from hidden activity (single output HC).
+    pub fn output_activity(&self, y: &[f32]) -> Vec<f32> {
+        let mut s = Vec::new();
+        self.output_support_into(y, &mut s);
+        Self::hc_softmax(&mut s, 1, self.cfg.n_out(), 1.0);
         s
+    }
+
+    /// Full inference through a reusable [`Workspace`] — zero heap
+    /// allocation once warm; bitwise identical to [`Network::infer`].
+    pub fn infer_with<'w>(&self, img: &[f32], ws: &'w mut Workspace) -> &'w [f32] {
+        encode_image_into(img, &mut ws.x);
+        debug_assert_eq!(ws.x.len(), self.cfg.n_in());
+        let y = &mut ws.act[0];
+        self.support_into(&ws.x, y);
+        Self::hc_softmax(y, self.cfg.hc_h, self.cfg.mc_h, self.cfg.gain);
+        self.output_support_into(y.as_slice(), &mut ws.out);
+        Self::hc_softmax(&mut ws.out, 1, self.cfg.n_out(), 1.0);
+        &ws.out
     }
 
     /// Full inference: class probabilities for one image.
     pub fn infer(&self, img: &[f32]) -> Vec<f32> {
         let (_, y) = self.hidden_activity(img);
         self.output_activity(&y)
+    }
+
+    /// Class probabilities for a whole batch, reusing one workspace
+    /// across images (allocates only the returned vectors).
+    pub fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut ws = Workspace::new();
+        images
+            .iter()
+            .map(|img| self.infer_with(img, &mut ws).to_vec())
+            .collect()
     }
 
     /// Argmax prediction.
@@ -129,38 +174,24 @@ impl Network {
 
     /// One online unsupervised update (input->hidden projection):
     /// EMA traces + fused Bayesian weight recompute — the rust mirror
-    /// of the Pallas plasticity kernel.
+    /// of the Pallas plasticity kernel. The joint trace updates
+    /// densely (rewiring scores silent blocks by MI over `pij`); the
+    /// div+ln weight map walks only active spans, with `(pj + eps)`
+    /// hoisted into a per-step table (same adds on the same operands —
+    /// bitwise identical; see `Projection::train_step`).
     pub fn train_unsup_step(&mut self, img: &[f32]) {
         let (x, y) = self.hidden_activity(img);
-        let a = self.cfg.alpha;
-        let eps = self.cfg.eps;
-        let n_h = self.cfg.n_h();
         let p = &mut self.params;
-        for (pi, &xi) in p.pi.iter_mut().zip(&x) {
-            *pi = (1.0 - a) * *pi + a * xi;
-        }
-        for (pj, &yj) in p.pj.iter_mut().zip(&y) {
-            *pj = (1.0 - a) * *pj + a * yj;
-        }
-        // Fused joint update + weight map (one pass over the big arrays,
-        // exactly like the streamed FPGA pipeline / Pallas kernel).
-        for i in 0..x.len() {
-            let xi = x[i];
-            let pi_eps = p.pi[i] + eps;
-            let prow = &mut p.pij[i * n_h..(i + 1) * n_h];
-            let wrow = &mut p.wij[i * n_h..(i + 1) * n_h];
-            for j in 0..n_h {
-                let pij_new = (1.0 - a) * prow[j] + a * xi * y[j];
-                prow[j] = pij_new;
-                wrow[j] = ((pij_new + eps * eps) / (pi_eps * (p.pj[j] + eps))).ln();
-            }
-        }
-        for (b, &pj) in p.bj.iter_mut().zip(&p.pj) {
-            *b = (pj + eps).ln();
-        }
+        super::sparse::train_step_span(
+            &mut p.pi, &mut p.pj, &mut p.pij, &mut p.wij, &mut p.bj,
+            &mut self.scratch, &self.index, &x, &y,
+            self.cfg.alpha, self.cfg.eps,
+        );
     }
 
-    /// One online supervised update (hidden->output projection).
+    /// One online supervised update (hidden->output projection; fully
+    /// connected, so the weight map is dense — only the `(qk + eps)`
+    /// hoist applies).
     pub fn train_sup_step(&mut self, img: &[f32], label: usize) {
         let (_, y) = self.hidden_activity(img);
         let t = one_hot(label, self.cfg.n_out());
@@ -174,6 +205,8 @@ impl Network {
         for (qk, &tk) in p.qk.iter_mut().zip(&t) {
             *qk = (1.0 - a) * *qk + a * tk;
         }
+        self.scratch.clear();
+        self.scratch.extend(p.qk.iter().map(|&v| v + eps));
         for j in 0..y.len() {
             let yj = y[j];
             let qi_eps = p.qi[j] + eps;
@@ -182,20 +215,22 @@ impl Network {
             for k in 0..n_out {
                 let q_new = (1.0 - a) * qrow[k] + a * yj * t[k];
                 qrow[k] = q_new;
-                wrow[k] = ((q_new + eps * eps) / (qi_eps * (p.qk[k] + eps))).ln();
+                wrow[k] = ((q_new + eps * eps) / (qi_eps * self.scratch[k])).ln();
             }
         }
-        for (b, &qk) in p.bk.iter_mut().zip(&p.qk) {
-            *b = (qk + eps).ln();
+        for (b, &qk_eps) in p.bk.iter_mut().zip(&self.scratch) {
+            *b = qk_eps.ln();
         }
     }
 
-    /// Accuracy over a labelled set.
+    /// Accuracy over a labelled set (one workspace for the whole
+    /// sweep; zero per-image allocation).
     pub fn accuracy(&self, images: &[Vec<f32>], labels: &[u32]) -> f64 {
+        let mut ws = Workspace::new();
         let correct = images
             .iter()
             .zip(labels)
-            .filter(|(img, &l)| self.predict(img) as u32 == l)
+            .filter(|(img, &l)| argmax(self.infer_with(img, &mut ws)) as u32 == l)
             .count();
         correct as f64 / labels.len().max(1) as f64
     }
@@ -244,6 +279,24 @@ mod tests {
     }
 
     #[test]
+    fn workspace_infer_bitwise_matches_allocating_path() {
+        let n = net();
+        let mut ws = Workspace::new();
+        for k in 0..5 {
+            let img = vec![0.2 * k as f32; n.cfg.hc_in()];
+            let a = n.infer(&img);
+            let b = n.infer_with(&img, &mut ws);
+            assert_eq!(
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "image {k}"
+            );
+        }
+        let d = synth::generate(n.cfg.img_side, n.cfg.n_classes, 8, 3, 0.15);
+        assert_eq!(n.infer_batch(&d.images), d.images.iter().map(|i| n.infer(i)).collect::<Vec<_>>());
+    }
+
+    #[test]
     fn softmax_stable_at_extremes() {
         let mut s = vec![1e4, -1e4, 0.0, 30.0];
         Network::hc_softmax(&mut s, 1, 4, 1.0);
@@ -273,14 +326,12 @@ mod tests {
         let p1 = n.infer(&img);
         let mut n2 = n.clone();
         // Corrupt weights where mask = 0; output must be unchanged.
-        let n_h = n2.cfg.n_h();
         let mask = n2.params.expand_mask(&n2.cfg);
         for (idx, w) in n2.params.wij.iter_mut().enumerate() {
             if mask[idx] == 0.0 {
                 *w = 1e3;
             }
         }
-        let _ = n_h;
         let p2 = n2.infer(&img);
         for (a, b) in p1.iter().zip(&p2) {
             assert!((a - b).abs() < 1e-6);

@@ -73,18 +73,13 @@ impl Params {
         recompute_weights(&self.qi, &self.qk, &self.qik, &mut self.who, &mut self.bk, eps);
     }
 
-    /// Expand the HC-level mask to unit level (n_in, n_h) row-major.
+    /// Expand the HC-level mask to unit level (n_in, n_h) row-major —
+    /// the seed's dense representation, kept for the reference kernels
+    /// and tests (the compute paths use `sparse::BlockIndex`).
     pub fn expand_mask(&self, cfg: &ModelConfig) -> Vec<f32> {
-        let (n_in, n_h) = (cfg.n_in(), cfg.n_h());
-        let mut m = vec![0.0f32; n_in * n_h];
-        for i in 0..n_in {
-            let hc_i = i / cfg.mc_in;
-            for j in 0..n_h {
-                let hc_j = j / cfg.mc_h;
-                m[i * n_h + j] = self.mask_hc[hc_i * cfg.hc_h + hc_j];
-            }
-        }
-        m
+        super::sparse::expand_mask_dims(
+            &self.mask_hc, cfg.hc_in(), cfg.hc_h, cfg.mc_in, cfg.mc_h,
+        )
     }
 }
 

@@ -1,0 +1,477 @@
+//! Block-sparse active-synapse engine: the compact HC-block
+//! connectivity index the host kernels iterate instead of a dense
+//! f32 unit mask.
+//!
+//! The structural mask lives at hypercolumn granularity — `mask_hc` is
+//! `(hc_in, hc_out)` with exactly `nact` active input HCs per output HC
+//! — so the unit-level mask is block-constant: input unit `i` connects
+//! to *all* `mc_out` units of output HC `hj` or to none of them. The
+//! seed implementation expanded that structure into a dense
+//! `(n_in, n_out)` f32 `mask_unit` and multiplied every synapse by it,
+//! making the host datapath asymptotically slower (by `~hc_in/nact`)
+//! than the machine model it validates (`fpga::timing::active_synapses`
+//! streams only `nact * mc_in * n_out` terms per image). [`BlockIndex`]
+//! replaces the dense mask: per input HC, the ordered unit-column
+//! ranges of its active output HCs (adjacent blocks merged), in CSR
+//! layout.
+//!
+//! ## Why skipping masked terms is bitwise exact
+//!
+//! The dense kernel accumulates `s[j] += xi * w[i][j] * m[i][j]` with
+//! `m ∈ {0.0, 1.0}`:
+//!
+//! - where `m = 1.0`: `(xi * w) * 1.0` is IEEE-exact, so dropping the
+//!   multiply leaves the product bit-identical;
+//! - where `m = 0.0`: the term is `(xi * w) * 0.0 = ±0.0` (weights are
+//!   finite — `ln` of positive finite ratios — so no `inf * 0 = NaN`
+//!   can arise), and adding `±0.0` to an accumulator `s` returns `s`
+//!   bit-identically unless `s` is `-0.0` (then `-0.0 + 0.0 = +0.0`).
+//!   Accumulators here start at `bj = ln(pj + eps)` and `-0.0` can
+//!   only be produced by `(-0.0) + (-0.0)`, never by `ln` (which
+//!   returns `+0.0` at 1) or by cancellation (which rounds to `+0.0`),
+//!   so `-0.0` never enters the sum.
+//!
+//! Hence iterating only the active spans, in the same i-outer /
+//! j-inner order, reproduces the dense result **bitwise** — pinned
+//! registry-wide by `rust/tests/kernels.rs`, with the dense seed loops
+//! preserved below ([`dense_support_masked`], [`dense_train_step`]) as
+//! the oracle and the measured baseline of `benches/kernels.rs`.
+
+use crate::config::LayerDims;
+
+/// Compact HC-block connectivity index of one projection: for every
+/// input hypercolumn, the ordered, merged `[lo, hi)` unit-column
+/// ranges of its active output hypercolumns (CSR over input HCs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockIndex {
+    /// Minicolumns per input HC (maps unit row -> input HC).
+    mc_in: usize,
+    /// CSR offsets: input HC `h`'s spans are
+    /// `spans[row_ptr[h] .. row_ptr[h+1]]`.
+    row_ptr: Vec<u32>,
+    /// Active unit-column ranges `[lo, hi)`, ascending, adjacent
+    /// output-HC blocks merged into one span.
+    spans: Vec<(u32, u32)>,
+}
+
+impl BlockIndex {
+    /// Build the index from an HC-level mask laid out `(hc_in, hc_out)`
+    /// row-major (the `mask_hc` convention everywhere in this crate).
+    pub fn build(
+        mask_hc: &[f32], hc_in: usize, hc_out: usize, mc_in: usize, mc_out: usize,
+    ) -> BlockIndex {
+        debug_assert_eq!(mask_hc.len(), hc_in * hc_out);
+        let mut row_ptr = Vec::with_capacity(hc_in + 1);
+        let mut spans: Vec<(u32, u32)> = Vec::new();
+        row_ptr.push(0u32);
+        for hi in 0..hc_in {
+            let row = &mask_hc[hi * hc_out..(hi + 1) * hc_out];
+            let row_start = spans.len();
+            for (hj, &m) in row.iter().enumerate() {
+                if m == 0.0 {
+                    continue;
+                }
+                let lo = (hj * mc_out) as u32;
+                let hi_col = ((hj + 1) * mc_out) as u32;
+                // Merge a block adjacent to the tail span (only within
+                // this input HC's own row).
+                let merges = spans.len() > row_start
+                    && spans.last().is_some_and(|l| l.1 == lo);
+                if merges {
+                    spans.last_mut().unwrap().1 = hi_col;
+                } else {
+                    spans.push((lo, hi_col));
+                }
+            }
+            row_ptr.push(spans.len() as u32);
+        }
+        // Trim push-growth slack so `heap_bytes` (len-based) is the
+        // true allocation and the `hbm::block_index_bytes` worst-case
+        // model genuinely bounds it.
+        spans.shrink_to_fit();
+        BlockIndex { mc_in, row_ptr, spans }
+    }
+
+    /// Build from one projection's dims (the usual entry point).
+    pub fn from_dims(mask_hc: &[f32], dims: &LayerDims) -> BlockIndex {
+        Self::build(mask_hc, dims.hc_in, dims.hc_out, dims.mc_in, dims.mc_out)
+    }
+
+    /// Active spans of input *unit* `i` (units of one input HC share
+    /// the row).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[(u32, u32)] {
+        let h = i / self.mc_in;
+        &self.spans[self.row_ptr[h] as usize..self.row_ptr[h + 1] as usize]
+    }
+
+    /// Active spans of input *hypercolumn* `h`.
+    #[inline]
+    pub fn hc_row(&self, h: usize) -> &[(u32, u32)] {
+        &self.spans[self.row_ptr[h] as usize..self.row_ptr[h + 1] as usize]
+    }
+
+    /// Number of input HCs indexed.
+    pub fn n_rows(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    /// Total stored spans (after merging).
+    pub fn n_spans(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Active unit columns of input HC `h` (sum of span widths).
+    pub fn active_cols(&self, h: usize) -> usize {
+        self.hc_row(h).iter().map(|&(lo, hi)| (hi - lo) as usize).sum()
+    }
+
+    /// Exact heap footprint of the index in bytes — the term that
+    /// replaces the dense `4 * n_in * n_out` unit-mask in the host
+    /// memory accounting (`fpga::hbm::block_index_bytes` is the
+    /// worst-case model of this number).
+    pub fn heap_bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.spans.len() * 8
+    }
+}
+
+/// Expand an HC-level mask to a dense `(n_in, n_out)` f32 unit mask —
+/// the seed representation, kept for the dense reference kernels, the
+/// equivalence tests, and `Params::expand_mask`.
+pub fn expand_mask_dims(
+    mask_hc: &[f32], hc_in: usize, hc_out: usize, mc_in: usize, mc_out: usize,
+) -> Vec<f32> {
+    let (n_in, n_out) = (hc_in * mc_in, hc_out * mc_out);
+    let mut m = vec![0.0f32; n_in * n_out];
+    for i in 0..n_in {
+        let hc_i = i / mc_in;
+        for j in 0..n_out {
+            let hc_j = j / mc_out;
+            m[i * n_out + j] = mask_hc[hc_i * hc_out + hc_j];
+        }
+    }
+    m
+}
+
+// ------------------------------------------- shared span kernels
+//
+// The block-sparse inner loops, single-sourced: `Network` (over
+// `Params` arrays) and `Projection` (over its own fields) both run
+// these, so the bitwise `Network == LayerGraph` contract cannot drift
+// by editing one copy. All keep the dense i-outer/j-inner accumulation
+// order (see module docs for why the skipped terms are exact).
+
+/// Masked support over active spans into `out`:
+/// `s_j = b_j + sum_i x_i w_ij`, skipping silent inputs.
+pub(crate) fn support_span_into(
+    bj: &[f32], wij: &[f32], index: &BlockIndex, x: &[f32], out: &mut Vec<f32>,
+) {
+    let n_out = bj.len();
+    out.clear();
+    out.extend_from_slice(bj);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let wrow = &wij[i * n_out..(i + 1) * n_out];
+        for &(lo, hi) in index.row(i) {
+            for j in lo as usize..hi as usize {
+                out[j] += xi * wrow[j];
+            }
+        }
+    }
+}
+
+/// Masked support restricted to output columns `[lo, hi)` (spans
+/// clipped to the slice; a gather of slices is bitwise identical to
+/// the full vector).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn support_span_cols_into(
+    bj: &[f32], wij: &[f32], index: &BlockIndex, x: &[f32],
+    lo: usize, hi: usize, out: &mut Vec<f32>,
+) {
+    let n_out = bj.len();
+    debug_assert!(lo <= hi && hi <= n_out);
+    out.clear();
+    out.extend_from_slice(&bj[lo..hi]);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let wrow = &wij[i * n_out..(i + 1) * n_out];
+        for &(slo, shi) in index.row(i) {
+            let jlo = (slo as usize).max(lo);
+            let jhi = (shi as usize).min(hi);
+            for j in jlo..jhi {
+                out[j - lo] += xi * wrow[j];
+            }
+        }
+    }
+}
+
+/// One fused plasticity step: dense EMA traces (rewiring scores silent
+/// blocks by MI over `pij`), div+ln weight map on active spans only,
+/// with the `(pj + eps)` terms hoisted into `scratch` — the same add
+/// on the same operands once instead of per row, hence bitwise
+/// unchanged. (A reciprocal table would round differently and is
+/// deliberately not used on the pinned path.)
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn train_step_span(
+    pi: &mut [f32], pj: &mut [f32], pij: &mut [f32], wij: &mut [f32], bj: &mut [f32],
+    scratch: &mut Vec<f32>, index: &BlockIndex, x: &[f32], y: &[f32],
+    alpha: f32, eps: f32,
+) {
+    let a = alpha;
+    let n_out = pj.len();
+    for (p, &xi) in pi.iter_mut().zip(x) {
+        *p = (1.0 - a) * *p + a * xi;
+    }
+    for (p, &yj) in pj.iter_mut().zip(y) {
+        *p = (1.0 - a) * *p + a * yj;
+    }
+    scratch.clear();
+    scratch.extend(pj.iter().map(|&p| p + eps));
+    for i in 0..x.len() {
+        let xi = x[i];
+        // Joint trace: dense pass over the row.
+        let prow = &mut pij[i * n_out..(i + 1) * n_out];
+        for j in 0..n_out {
+            prow[j] = (1.0 - a) * prow[j] + a * xi * y[j];
+        }
+        // Weight map: active spans only.
+        let pi_eps = pi[i] + eps;
+        let prow = &pij[i * n_out..(i + 1) * n_out];
+        let wrow = &mut wij[i * n_out..(i + 1) * n_out];
+        for &(lo, hi) in index.row(i) {
+            for j in lo as usize..hi as usize {
+                wrow[j] = ((prow[j] + eps * eps) / (pi_eps * scratch[j])).ln();
+            }
+        }
+    }
+    for (b, &pj_eps) in bj.iter_mut().zip(scratch.iter()) {
+        *b = pj_eps.ln();
+    }
+}
+
+/// Re-derive `wij` for every HC block that is active in `mask_hc` but
+/// was not covered by `old_index` — the single source of the
+/// reactivation path shared by `Projection::refresh_mask` and
+/// `Network::refresh_mask`. The formula is operand-for-operand the one
+/// `recompute_weights` and the train steps apply
+/// (`ln((pij + eps²) / ((pi + eps)(pj + eps)))`), so a block that
+/// rewiring switches on carries bitwise the weights the dense kernel
+/// maintained all along (traces are maintained densely everywhere).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn refresh_activated_weights(
+    pi: &[f32], pj: &[f32], pij: &[f32], wij: &mut [f32],
+    mask_hc: &[f32], old_index: &BlockIndex, dims: &LayerDims, eps: f32,
+) {
+    let n_out = dims.n_out();
+    let mut was_active = vec![false; dims.hc_out];
+    for h in 0..dims.hc_in {
+        was_active.fill(false);
+        for &(lo, hi) in old_index.hc_row(h) {
+            for hj in (lo as usize / dims.mc_out)..(hi as usize / dims.mc_out) {
+                was_active[hj] = true;
+            }
+        }
+        for hj in 0..dims.hc_out {
+            if was_active[hj] || mask_hc[h * dims.hc_out + hj] == 0.0 {
+                continue;
+            }
+            // Newly activated block (h, hj): derive its weights.
+            for a in 0..dims.mc_in {
+                let i = h * dims.mc_in + a;
+                let pi_eps = pi[i] + eps;
+                for b in 0..dims.mc_out {
+                    let j = hj * dims.mc_out + b;
+                    wij[i * n_out + j] =
+                        ((pij[i * n_out + j] + eps * eps) / (pi_eps * (pj[j] + eps))).ln();
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------- dense seed kernels
+//
+// The exact loops the seed `Network`/`Projection` ran, preserved as
+// free functions: the numeric oracle of `rust/tests/kernels.rs` and
+// the measured dense baseline of `benches/kernels.rs`. Not used on any
+// production path.
+
+/// Dense masked support (the seed `Network::support` loop verbatim):
+/// `s_j = b_j + sum_i m_ij w_ij x_i`, skipping silent inputs.
+pub fn dense_support_masked(bj: &[f32], wij: &[f32], mask_unit: &[f32], x: &[f32]) -> Vec<f32> {
+    let n_out = bj.len();
+    let mut s = bj.to_vec();
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let wrow = &wij[i * n_out..(i + 1) * n_out];
+        let mrow = &mask_unit[i * n_out..(i + 1) * n_out];
+        for j in 0..n_out {
+            s[j] += xi * wrow[j] * mrow[j];
+        }
+    }
+    s
+}
+
+/// Dense masked support over output columns `[lo, hi)` (the seed
+/// `support_cols` loop verbatim).
+pub fn dense_support_cols(
+    bj: &[f32], wij: &[f32], mask_unit: &[f32], x: &[f32], lo: usize, hi: usize,
+) -> Vec<f32> {
+    let n_out = bj.len();
+    debug_assert!(lo <= hi && hi <= n_out);
+    let mut s = bj[lo..hi].to_vec();
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let wrow = &wij[i * n_out + lo..i * n_out + hi];
+        let mrow = &mask_unit[i * n_out + lo..i * n_out + hi];
+        for j in 0..(hi - lo) {
+            s[j] += xi * wrow[j] * mrow[j];
+        }
+    }
+    s
+}
+
+/// Dense fused plasticity step (the seed `train_step` loop verbatim):
+/// EMA traces + Bayesian weight recompute over **every** synapse,
+/// including masked-out ones. The block-sparse `train_step` updates
+/// the same traces but derives `wij` only on active spans; the
+/// equivalence tests compare traces everywhere and weights on active
+/// spans.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_train_step(
+    pi: &mut [f32], pj: &mut [f32], pij: &mut [f32], wij: &mut [f32], bj: &mut [f32],
+    x: &[f32], y: &[f32], alpha: f32, eps: f32,
+) {
+    let a = alpha;
+    let n_out = pj.len();
+    for (p, &xi) in pi.iter_mut().zip(x) {
+        *p = (1.0 - a) * *p + a * xi;
+    }
+    for (p, &yj) in pj.iter_mut().zip(y) {
+        *p = (1.0 - a) * *p + a * yj;
+    }
+    for i in 0..x.len() {
+        let xi = x[i];
+        let pi_eps = pi[i] + eps;
+        let prow = &mut pij[i * n_out..(i + 1) * n_out];
+        let wrow = &mut wij[i * n_out..(i + 1) * n_out];
+        for j in 0..n_out {
+            let pij_new = (1.0 - a) * prow[j] + a * xi * y[j];
+            prow[j] = pij_new;
+            wrow[j] = ((pij_new + eps * eps) / (pi_eps * (pj[j] + eps))).ln();
+        }
+    }
+    for (b, &p) in bj.iter_mut().zip(pj.iter()) {
+        *b = (p + eps).ln();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+    use crate::data::rng::XorShift64;
+
+    fn dims_of(name: &str) -> LayerDims {
+        by_name(name).unwrap().layer_dims()[0]
+    }
+
+    fn random_mask(dims: &LayerDims, seed: u64) -> Vec<f32> {
+        let mut rng = XorShift64::new(seed);
+        let mut m = vec![0.0f32; dims.hc_in * dims.hc_out];
+        for h in 0..dims.hc_out {
+            for idx in rng.sample_indices(dims.hc_in, dims.nact) {
+                m[idx * dims.hc_out + h] = 1.0;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn index_matches_dense_expansion() {
+        for name in ["tiny", "small", "toy-deep"] {
+            let dims = dims_of(name);
+            let mask = random_mask(&dims, 7);
+            let idx = BlockIndex::from_dims(&mask, &dims);
+            let dense = expand_mask_dims(&mask, dims.hc_in, dims.hc_out, dims.mc_in, dims.mc_out);
+            let n_out = dims.n_out();
+            for i in 0..dims.n_in() {
+                let mut active = vec![false; n_out];
+                for &(lo, hi) in idx.row(i) {
+                    for j in lo as usize..hi as usize {
+                        assert!(!active[j], "{name}: overlapping spans");
+                        active[j] = true;
+                    }
+                }
+                for j in 0..n_out {
+                    assert_eq!(active[j], dense[i * n_out + j] == 1.0, "{name} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adjacent_blocks_merge() {
+        // 1 input HC, 4 output HCs of 2 units, blocks 0,1,3 active:
+        // columns [0,4) merge, [6,8) stays separate.
+        let dims = LayerDims { index: 0, hc_in: 1, mc_in: 2, hc_out: 4, mc_out: 2, nact: 3 };
+        let mask = vec![1.0, 1.0, 0.0, 1.0];
+        let idx = BlockIndex::from_dims(&mask, &dims);
+        assert_eq!(idx.hc_row(0), &[(0, 4), (6, 8)]);
+        assert_eq!(idx.n_spans(), 2);
+        assert_eq!(idx.active_cols(0), 6);
+    }
+
+    #[test]
+    fn spans_never_merge_across_rows() {
+        // Row 0 ends active at the last block, row 1 starts active at
+        // block 0: the tail span of row 0 must not swallow row 1.
+        let dims = LayerDims { index: 0, hc_in: 2, mc_in: 1, hc_out: 2, mc_out: 2, nact: 1 };
+        let mask = vec![0.0, 1.0, 1.0, 0.0];
+        let idx = BlockIndex::from_dims(&mask, &dims);
+        assert_eq!(idx.hc_row(0), &[(2, 4)]);
+        assert_eq!(idx.hc_row(1), &[(0, 2)]);
+    }
+
+    #[test]
+    fn full_mask_is_one_span_per_row() {
+        let dims = dims_of("tiny");
+        let mask = vec![1.0f32; dims.hc_in * dims.hc_out];
+        let idx = BlockIndex::from_dims(&mask, &dims);
+        assert_eq!(idx.n_spans(), dims.hc_in);
+        for h in 0..dims.hc_in {
+            assert_eq!(idx.hc_row(h), &[(0, dims.n_out() as u32)]);
+        }
+    }
+
+    #[test]
+    fn empty_rows_yield_no_spans() {
+        let dims = LayerDims { index: 0, hc_in: 3, mc_in: 2, hc_out: 2, mc_out: 4, nact: 1 };
+        let mask = vec![0.0, 0.0, 1.0, 0.0, 0.0, 0.0];
+        let idx = BlockIndex::from_dims(&mask, &dims);
+        assert!(idx.hc_row(0).is_empty());
+        assert_eq!(idx.hc_row(1), &[(0, 4)]);
+        assert!(idx.hc_row(2).is_empty());
+        assert_eq!(idx.row(2), idx.hc_row(1)); // unit 2 lives in HC 1
+    }
+
+    #[test]
+    fn heap_bytes_is_tiny_next_to_dense_mask() {
+        let dims = dims_of("model1");
+        let mask = random_mask(&dims, 3);
+        let idx = BlockIndex::from_dims(&mask, &dims);
+        let dense_bytes = 4 * dims.n_in() * dims.n_out();
+        assert!(idx.heap_bytes() * 100 < dense_bytes,
+                "{} vs {dense_bytes}", idx.heap_bytes());
+        // Worst case: every active (input, output) HC pair its own span.
+        assert!(idx.n_spans() <= dims.nact * dims.hc_out);
+    }
+}

@@ -97,7 +97,8 @@ impl StructuralPlasticity {
     }
 
     /// One rewiring pass over a single projection of a layer graph.
-    /// Refreshes the projection's unit-mask cache when wiring changed.
+    /// Refreshes the projection's block index (re-deriving weights of
+    /// newly activated blocks from the traces) when wiring changed.
     pub fn rewire_projection(&self, proj: &mut Projection, eps: f32) -> RewireStats {
         let dims = proj.dims;
         let stats = rewire_arrays(
@@ -105,7 +106,7 @@ impl StructuralPlasticity {
             &dims, eps, self.margin,
         );
         if stats.swaps > 0 {
-            proj.refresh_mask();
+            proj.refresh_mask(eps);
         }
         stats
     }

@@ -1,0 +1,141 @@
+//! Zero-alloc inference scratch: reusable buffers for the host
+//! kernels.
+//!
+//! The seed hot path allocated per image at every step — `bj.clone()`
+//! inside each support call, a fresh activity `Vec` per layer, a fresh
+//! probability vector per inference. [`Workspace`] owns those buffers
+//! once; the `*_into` kernels of [`Projection`](super::Projection) and
+//! [`Network`](super::Network) write into them, so steady-state
+//! inference (`LayerGraph::infer_with`, `infer_batch`, `accuracy`)
+//! performs **zero per-image heap allocation**. [`BufPool`] is the
+//! streaming-side counterpart: a tiny free-list the dataflow pipeline
+//! stages and the hybrid executor's workers recycle their job buffers
+//! through, so the FIFO transport also stops allocating once warm.
+//!
+//! Numerics are untouched: the `_into` kernels run the exact
+//! instruction sequence of their allocating twins, so every pinned
+//! bitwise guarantee carries over.
+
+/// Reusable scratch buffers for one inference stream. Keep one per
+/// thread (methods take `&mut`); cheap to create, and the buffers grow
+/// to the model's high-water mark after the first image.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Encoded-input buffer (n_in).
+    pub(crate) x: Vec<f32>,
+    /// Ping/pong activity buffers (layer fan-out sized).
+    pub(crate) act: [Vec<f32>; 2],
+    /// Output probability buffer (n_classes).
+    pub(crate) out: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Total heap currently held by the scratch buffers (capacity
+    /// bytes) — observability for the serving layer.
+    pub fn heap_bytes(&self) -> usize {
+        4 * (self.x.capacity()
+            + self.act[0].capacity()
+            + self.act[1].capacity()
+            + self.out.capacity())
+    }
+}
+
+/// Free-list of `Vec<f32>` buffers for streaming stages: `get` pops a
+/// recycled buffer (or makes an empty one), `put` returns a spent
+/// buffer. Capacities converge to the stream's high-water mark, after
+/// which the stage allocates nothing per item. Bounded: a worker that
+/// happens to put more than it gets (e.g. reclaiming sole-owner
+/// transport payloads) cannot grow the pool past [`BufPool::MAX`].
+#[derive(Debug)]
+pub struct BufPool {
+    free: Vec<Vec<f32>>,
+    max: usize,
+}
+
+impl Default for BufPool {
+    fn default() -> Self {
+        BufPool { free: Vec::new(), max: Self::MAX }
+    }
+}
+
+impl BufPool {
+    /// Default retention bound; extra `put`s drop their buffer.
+    pub const MAX: usize = 16;
+
+    pub fn new() -> BufPool {
+        BufPool::default()
+    }
+
+    /// Pool retaining up to `max` buffers — size it to the stream's
+    /// in-flight high-water mark (e.g. the dispatch batch) when a full
+    /// round of buffers can come back at once.
+    pub fn with_max(max: usize) -> BufPool {
+        BufPool { free: Vec::new(), max: max.max(1) }
+    }
+
+    /// Pop a recycled buffer (contents unspecified) or a fresh one.
+    pub fn get(&mut self) -> Vec<f32> {
+        self.free.pop().unwrap_or_default()
+    }
+
+    /// Return a buffer to the pool (dropped once the pool is full).
+    pub fn put(&mut self, v: Vec<f32>) {
+        if self.free.len() < self.max {
+            self.free.push(v);
+        }
+    }
+
+    /// Buffers currently pooled.
+    pub fn len(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.free.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_recycles_capacity() {
+        let mut pool = BufPool::new();
+        let mut v = pool.get();
+        assert!(v.is_empty());
+        v.resize(100, 1.0);
+        let cap = v.capacity();
+        pool.put(v);
+        assert_eq!(pool.len(), 1);
+        let v2 = pool.get();
+        assert!(v2.capacity() >= cap);
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let mut pool = BufPool::new();
+        for _ in 0..(BufPool::MAX + 10) {
+            pool.put(vec![0.0; 4]);
+        }
+        assert_eq!(pool.len(), BufPool::MAX);
+        let mut wide = BufPool::with_max(BufPool::MAX + 8);
+        for _ in 0..(BufPool::MAX + 20) {
+            wide.put(vec![0.0; 4]);
+        }
+        assert_eq!(wide.len(), BufPool::MAX + 8);
+    }
+
+    #[test]
+    fn workspace_reports_heap() {
+        let mut ws = Workspace::new();
+        assert_eq!(ws.heap_bytes(), 0);
+        ws.x.resize(10, 0.0);
+        assert!(ws.heap_bytes() >= 40);
+    }
+}

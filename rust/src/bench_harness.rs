@@ -5,7 +5,36 @@
 //! `harness = false` binaries built on this module; output is
 //! markdown-ish rows so `cargo bench | tee bench_output.txt` reads well.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Shared CLI options of the harness-less bench binaries.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BenchOpts {
+    /// Trim to CI smoke length (`--quick`).
+    pub quick: bool,
+    /// Emit a machine-readable `BENCH_*.json` next to the stdout
+    /// tables (`--json`) — the perf-trajectory record.
+    pub json: bool,
+}
+
+impl BenchOpts {
+    /// Parse `--quick` / `--json` from the process args (other args,
+    /// e.g. cargo-bench's filter, pass through untouched).
+    pub fn from_args() -> BenchOpts {
+        let mut o = BenchOpts::default();
+        for a in std::env::args() {
+            match a.as_str() {
+                "--quick" => o.quick = true,
+                "--json" => o.json = true,
+                _ => {}
+            }
+        }
+        o
+    }
+}
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -34,6 +63,25 @@ impl BenchResult {
             self.iters,
         )
     }
+
+    /// Machine-readable form (nanoseconds) for `BENCH_*.json` files.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("iters", Json::from(self.iters as usize)),
+            ("mean_ns", Json::from(self.mean.as_nanos() as f64)),
+            ("stddev_ns", Json::from(self.stddev.as_nanos() as f64)),
+            ("min_ns", Json::from(self.min.as_nanos() as f64)),
+            ("max_ns", Json::from(self.max.as_nanos() as f64)),
+        ])
+    }
+}
+
+/// Write a bench report to `path` (pretty-enough single-line JSON).
+/// Benches call this under `--json`; the committed `BENCH_*.json`
+/// files at the repo root are the perf trajectory across PRs.
+pub fn write_json_report(path: &Path, report: &Json) -> std::io::Result<()> {
+    std::fs::write(path, format!("{report}\n"))
 }
 
 /// Format a duration adaptively (ns/us/ms/s).
@@ -151,5 +199,25 @@ mod tests {
         let r = bench("alignment-check", 0, 1, || {});
         assert_eq!(header().split_whitespace().count() >= 5, true);
         assert!(r.row().contains("alignment-check"));
+    }
+
+    #[test]
+    fn result_json_roundtrips() {
+        let r = bench("json-check", 0, 2, || {});
+        let j = r.to_json().to_string();
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(back.req("name").unwrap().as_str().unwrap(), "json-check");
+        assert_eq!(back.req("iters").unwrap().as_usize().unwrap(), 2);
+        assert!(back.req("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn json_report_written_and_parseable() {
+        let path = std::env::temp_dir().join("bcpnn_bench_harness_test.json");
+        let report = Json::obj(vec![("bench", Json::from("x"))]);
+        write_json_report(&path, &report).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -328,6 +328,9 @@ fn replica_loop(
     let mut fills = 0u64;
     let mut rerouted_out = 0u64;
     let mut failed = false;
+    // Dispatch buffer reused across rounds (steady-state batch path
+    // allocates nothing beyond the backend's own response vectors).
+    let mut imgs: Vec<Vec<f32>> = Vec::new();
 
     while let Ok(first) = rx.recv() {
         let mut reqs = collect_batch(&rx, first, max_batch, flush_timeout);
@@ -338,11 +341,11 @@ fn replica_loop(
             // Move the images out for dispatch (no hot-path clone); on
             // failure put them back — re-routed requests must still
             // carry their image.
-            let imgs: Vec<Vec<f32>> =
-                reqs.iter_mut().map(|r| std::mem::take(&mut r.img)).collect();
+            imgs.clear();
+            imgs.extend(reqs.iter_mut().map(|r| std::mem::take(&mut r.img)));
             let res = exec.infer_batch(&imgs);
             if res.is_err() {
-                for (r, img) in reqs.iter_mut().zip(imgs) {
+                for (r, img) in reqs.iter_mut().zip(imgs.drain(..)) {
                     r.img = img;
                 }
             }

@@ -19,6 +19,10 @@
 //! Numerics: the shard slices keep the exact accumulation order of the
 //! single-device reference, so sharded inference stays **bitwise
 //! identical** to [`Network::infer`] — pinned by `rust/tests/cluster.rs`.
+//! The per-shard compute runs the block-sparse active-synapse kernels
+//! (`Projection::support_cols_into`) with slice buffers recycled
+//! through the hybrid engine's merge->shard return streams, so
+//! steady-state shard workers allocate nothing per job.
 //!
 //! Failure model: [`ShardedExecutor::fail_shard`] simulates losing a
 //! device. Every stream closes, all in-flight and future `infer_batch`

@@ -39,7 +39,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::bcpnn::{LayerGraph, Network};
+use crate::bcpnn::{BufPool, LayerGraph, Network};
 use crate::coordinator::server::InferBackend;
 use crate::data::encode::encode_image;
 use crate::stream::fifo::{Fifo, FifoStatsSnapshot};
@@ -149,11 +149,22 @@ impl HybridExecutor {
             if st.sharded() {
                 let merge = merges[si].clone().expect("sharded stage has a merge stream");
                 let layer = st.layer_lo;
+                // Slice buffers circulate shard -> merge -> back: the
+                // merge worker returns each drained slice vec through
+                // its shard's recycle stream, so steady-state shard
+                // compute allocates nothing per job. Capacity `batch`
+                // bounds the buffers in existence per shard (at most
+                // one per in-flight image), so the return send never
+                // blocks.
+                let recycles: Vec<Fifo<Vec<f32>>> = (0..st.pieces.len())
+                    .map(|_| Fifo::with_capacity(batch))
+                    .collect();
                 // Shard compute workers.
                 for (k, p) in st.pieces.iter().enumerate() {
                     let g = graph.clone();
                     let rx = stage_inputs[si][k].clone();
                     let tx = merge.clone();
+                    let recycle = recycles[k].clone();
                     let (unit_lo, unit_hi, n_hc) = (p.unit_lo, p.unit_hi, p.n_hc());
                     workers.push(thread::spawn(move || {
                         let start = Instant::now();
@@ -162,7 +173,8 @@ impl HybridExecutor {
                         let (mc, gain) = (proj.dims.mc_out, g.cfg.gain);
                         while let Ok(job) = rx.recv() {
                             let t0 = Instant::now();
-                            let mut y = proj.support_cols(&job.y, unit_lo, unit_hi);
+                            let mut y = recycle.try_recv().unwrap_or_default();
+                            proj.support_cols_into(&job.y, unit_lo, unit_hi, &mut y);
                             Network::hc_softmax(&mut y, n_hc, mc, gain);
                             busy += t0.elapsed();
                             items += 1;
@@ -181,7 +193,11 @@ impl HybridExecutor {
                     }));
                 }
                 // Merge worker: reassemble slices, run the head on the
-                // last stage, feed the next hop.
+                // last stage, feed the next hop. Drained slice vecs go
+                // back to their shards; on the last stage the assembly
+                // buffer is pooled too (on an inner stage it departs
+                // downstream as the transport payload — the consumer
+                // reclaims it via Arc::try_unwrap).
                 let g = graph.clone();
                 let ranges: Vec<(usize, usize)> =
                     st.pieces.iter().map(|p| (p.unit_lo, p.unit_hi)).collect();
@@ -189,21 +205,35 @@ impl HybridExecutor {
                 let n_units = ranges.last().map(|&(_, hi)| hi).unwrap_or(0);
                 plumbers.push(thread::spawn(move || {
                     let mut pending: HashMap<u64, (usize, Vec<f32>)> = HashMap::new();
+                    // Up to `batch` assembly buffers can drain back in
+                    // one round; retain them all.
+                    let mut pool = BufPool::with_max(batch.max(BufPool::MAX));
                     while let Ok(sj) = merge.recv() {
                         let filled = {
-                            let entry = pending
-                                .entry(sj.seq)
-                                .or_insert_with(|| (0, vec![0.0f32; n_units]));
+                            let entry = pending.entry(sj.seq).or_insert_with(|| {
+                                let mut buf = pool.get();
+                                buf.clear();
+                                buf.resize(n_units, 0.0);
+                                (0, buf)
+                            });
                             let (lo, hi) = ranges[sj.shard];
                             entry.1[lo..hi].copy_from_slice(&sj.y);
                             entry.0 += 1;
                             entry.0 == n_shards
                         };
+                        // Return the drained slice buffer to its shard
+                        // (dropped if the recycle stream is gone).
+                        let _ = recycles[sj.shard].send(sj.y);
                         if filled {
                             let (_, mut y) =
                                 pending.remove(&sj.seq).expect("entry just filled");
                             if last {
-                                y = g.head.activate_dense(&y);
+                                // Results go back to the caller:
+                                // exact-sized allocation, and the
+                                // assembly buffer returns to the pool.
+                                let out = g.head.activate_dense(&y);
+                                pool.put(y);
+                                y = out;
                             }
                             if broadcast(&downstream, sj.seq, Arc::new(y)).is_err() {
                                 break;
@@ -213,7 +243,9 @@ impl HybridExecutor {
                 }));
             } else {
                 // One worker runs the stage's consecutive layers (and
-                // the head when last) on its single device.
+                // the head when last) on its single device, ping-pong
+                // buffering layer activities through a local pool and
+                // reclaiming sole-owner input payloads into it.
                 let g = graph.clone();
                 let rx = stage_inputs[si][0].clone();
                 let (lo, hi) = (st.layer_lo, st.layer_hi);
@@ -221,18 +253,32 @@ impl HybridExecutor {
                     let start = Instant::now();
                     let (mut items, mut busy) = (0u64, Duration::ZERO);
                     let gain = g.cfg.gain;
+                    let mut pool = BufPool::with_max(batch.max(BufPool::MAX));
                     while let Ok(job) = rx.recv() {
+                        let seq = job.seq;
                         let t0 = Instant::now();
-                        let mut y = g.layers[lo].activate_masked(&job.y, gain);
+                        let mut y = pool.get();
+                        g.layers[lo].activate_masked_into(&job.y, gain, &mut y);
+                        if let Ok(v) = Arc::try_unwrap(job.y) {
+                            pool.put(v); // sole consumer: reclaim transport buffer
+                        }
                         for l in lo + 1..hi {
-                            y = g.layers[l].activate_masked(&y, gain);
+                            let mut next = pool.get();
+                            g.layers[l].activate_masked_into(&y, gain, &mut next);
+                            pool.put(y);
+                            y = next;
                         }
                         if last {
-                            y = g.head.activate_dense(&y);
+                            // Results go back to the caller:
+                            // exact-sized allocation, spent activity
+                            // buffer returns to the pool.
+                            let out = g.head.activate_dense(&y);
+                            pool.put(y);
+                            y = out;
                         }
                         busy += t0.elapsed();
                         items += 1;
-                        if broadcast(&downstream, job.seq, Arc::new(y)).is_err() {
+                        if broadcast(&downstream, seq, Arc::new(y)).is_err() {
                             break;
                         }
                     }

@@ -151,14 +151,17 @@ impl InferenceServer {
             let mut served = 0u64;
             let mut batches = 0u64;
             let mut fills = 0u64;
+            // Dispatch buffer reused across rounds (steady-state batch
+            // path allocates nothing beyond the response vectors).
+            let mut imgs: Vec<Vec<f32>> = Vec::new();
             // Batch loop: block for the first request, then fill
             // greedily until full or flush timeout.
             while let Ok(first) = rx.recv() {
                 let mut reqs = collect_batch(&rx, first, max_batch, cfg.flush_timeout);
                 // Move the images out instead of cloning: nothing reads
                 // `req.img` after dispatch (the serving hot path).
-                let imgs: Vec<Vec<f32>> =
-                    reqs.iter_mut().map(|r| std::mem::take(&mut r.img)).collect();
+                imgs.clear();
+                imgs.extend(reqs.iter_mut().map(|r| std::mem::take(&mut r.img)));
                 match backend.infer_batch(&imgs) {
                     Ok(probs) => {
                         for (req, p) in reqs.into_iter().zip(probs) {

@@ -8,12 +8,36 @@
 /// Output length = 2 * img.len(); each HC's minicolumn pair sums to 1.
 pub fn encode_image(img: &[f32]) -> Vec<f32> {
     let mut x = Vec::with_capacity(img.len() * 2);
+    encode_image_into(img, &mut x);
+    x
+}
+
+/// [`encode_image`] into a reusable buffer (the zero-alloc hot path).
+pub fn encode_image_into(img: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(img.len() * 2);
     for &p in img {
         let v = p.clamp(0.0, 1.0);
-        x.push(v);
-        x.push(1.0 - v);
+        out.push(v);
+        out.push(1.0 - v);
     }
-    x
+}
+
+/// [`encode_image`] expanding the pixel buffer in place: the image vec
+/// *becomes* the activity vec, so the streaming encode stage keeps one
+/// buffer per item end to end (the growth from `n` to `2n` still
+/// reallocates when the vec arrives capacity-exact — same single
+/// allocation as [`encode_image`], but no second live buffer). Walks
+/// backwards so every pixel is read before its slot pair is written;
+/// values are bitwise those of [`encode_image`].
+pub fn encode_image_in_place(buf: &mut Vec<f32>) {
+    let n = buf.len();
+    buf.resize(2 * n, 0.0);
+    for i in (0..n).rev() {
+        let v = buf[i].clamp(0.0, 1.0);
+        buf[2 * i] = v;
+        buf[2 * i + 1] = 1.0 - v;
+    }
 }
 
 /// One-hot label vector of length `n`.
@@ -39,6 +63,25 @@ mod tests {
         assert_eq!(x[0], 0.0);
         assert_eq!(x[2], 0.25);
         assert_eq!(x[4], 1.0);
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer() {
+        let mut buf = vec![9.0; 8];
+        encode_image_into(&[0.5, 1.0], &mut buf);
+        assert_eq!(buf, encode_image(&[0.5, 1.0]));
+    }
+
+    #[test]
+    fn encode_in_place_matches_encode() {
+        let img = vec![0.0, 0.3, 0.77, 1.0, -0.2, 1.4];
+        let mut buf = img.clone();
+        encode_image_in_place(&mut buf);
+        let want = encode_image(&img);
+        assert_eq!(
+            buf.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -23,7 +23,7 @@ use anyhow::{bail, Result};
 use crate::config::{LayerDims, ModelConfig};
 
 use super::device::{FpgaDevice, KernelVersion};
-use super::hbm::layer_hbm_bytes;
+use super::hbm::{layer_hbm_bytes, layer_host_bytes};
 use super::ops::{total_cost, FpOp};
 
 /// HBM capacity of one U55C stack (16 GB). Mixed fleets carry the
@@ -196,6 +196,11 @@ pub struct LayerEstimate {
     pub util: Utilization,
     /// Parameter bytes resident in HBM for this layer's kernel.
     pub hbm_bytes: u64,
+    /// Host-resident bytes of this layer on the reference path:
+    /// parameters + HC mask + the block-sparse connectivity index
+    /// (the dense unit-mask term of the seed host datapath is gone —
+    /// see `fpga::hbm::layer_host_bytes`).
+    pub host_bytes: u64,
 }
 
 /// Per-layer envelopes of a whole stack, one kernel per hidden layer.
@@ -232,6 +237,12 @@ impl StackEstimate {
     pub fn total_hbm_bytes(&self) -> u64 {
         self.layers.iter().map(|l| l.hbm_bytes).sum()
     }
+
+    /// Total host-resident footprint of the reference path across the
+    /// stack (parameters + HC masks + block indices).
+    pub fn total_host_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.host_bytes).sum()
+    }
 }
 
 /// Estimate every layer of `cfg`'s stack and validate each against the
@@ -244,6 +255,7 @@ pub fn estimate_stack(
     for dims in cfg.layer_dims() {
         let util = estimate_layer(&dims, version, dev);
         let hbm_bytes = layer_hbm_bytes(&dims, version);
+        let host_bytes = layer_host_bytes(&dims);
         let what = format!(
             "{}: layer {} ({}x{} HC/MC kernel)",
             cfg.name, dims.index, dims.hc_out, dims.mc_out
@@ -269,7 +281,7 @@ pub fn estimate_stack(
                 dev.name
             );
         }
-        layers.push(LayerEstimate { dims, util, hbm_bytes });
+        layers.push(LayerEstimate { dims, util, hbm_bytes, host_bytes });
     }
     Ok(StackEstimate { version, layers })
 }
@@ -425,6 +437,26 @@ mod tests {
                 assert!(s.total_luts() > s.layers[0].util.luts);
                 assert!(s.total_hbm_bytes() > 0);
                 assert!(s.min_freq_mhz() >= 60.0);
+            }
+        }
+    }
+
+    #[test]
+    fn host_accounting_has_no_dense_mask_term() {
+        // Per layer: host bytes exceed the in-place parameter state
+        // only by the HC mask + block index — far below the dense unit
+        // mask (4 * n_in * n_out) the seed host datapath carried.
+        let dev = FpgaDevice::u55c();
+        for m in ["tiny", "model1", "mnist-deep2"] {
+            let cfg = by_name(m).unwrap();
+            let s = estimate_stack(&cfg, KernelVersion::Infer, &dev).unwrap();
+            assert!(s.total_host_bytes() > 0, "{m}");
+            for l in &s.layers {
+                let extra = l.host_bytes - l.dims.param_bytes() as u64;
+                let dense_mask = 4 * l.dims.n_in() as u64 * l.dims.n_out() as u64;
+                assert!(extra * 10 < dense_mask,
+                        "{m} layer {}: index overhead {extra} vs dense {dense_mask}",
+                        l.dims.index);
             }
         }
     }

@@ -92,6 +92,33 @@ pub fn layer_hbm_bytes(dims: &LayerDims, version: KernelVersion) -> u64 {
     4 * bytes
 }
 
+/// Worst-case bytes of the host-side block-sparse connectivity index
+/// (`bcpnn::BlockIndex`) of one projection: `hc_in + 1` u32 CSR row
+/// offsets plus one `(u32, u32)` unit-column span per active
+/// (input HC, output HC) pair — `nact` actives per output HC, so
+/// `nact * hc_out` spans before adjacent-block merging ever helps.
+/// The actual index (`BlockIndex::heap_bytes`) is at most this.
+pub fn block_index_bytes(dims: &LayerDims) -> u64 {
+    4 * (dims.hc_in as u64 + 1) + 8 * dims.nact as u64 * dims.hc_out as u64
+}
+
+/// Host-resident bytes of one projection on the reference/serving
+/// path: the full trace+weight state a `Projection`/`Network` keeps
+/// (`pij`, `wij`, `pi`, `pj`, `bj` — [`LayerDims::param_bytes`]), the
+/// HC-level mask, and the block-sparse connectivity index. Unlike
+/// [`layer_hbm_bytes`] this is kernel-version independent — the host
+/// updates its arrays in place (no device-style double-buffered
+/// write-back). The seed host datapath additionally carried a dense
+/// f32 unit mask — `4 * n_in * n_out` bytes, as large as the weight
+/// matrix itself; the active-synapse engine replaced it with the
+/// index, whose worst case ([`block_index_bytes`]) is smaller by a
+/// factor of `~ mc_in * mc_out / 2` (tests pin the new numbers).
+pub fn layer_host_bytes(dims: &LayerDims) -> u64 {
+    dims.param_bytes() as u64
+        + 4 * dims.hc_in as u64 * dims.hc_out as u64
+        + block_index_bytes(dims)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,5 +176,59 @@ mod tests {
         let m = HbmModel::paper_partitioned(100e6);
         let t = m.stream_time_s(6400);
         assert!((t - 100.0 / 100e6).abs() < 1e-12, "{t}");
+    }
+
+    #[test]
+    fn host_bytes_pin_model1_numbers() {
+        // model1 layer 0: hc_in=784, mc_in=2, hc_out=32, mc_out=128,
+        // nact=128 -> n_in=1568, n_out=4096.
+        let dims = crate::config::by_name("model1").unwrap().layer_dims()[0];
+        assert_eq!(block_index_bytes(&dims), 4 * 785 + 8 * 128 * 32); // 35,908
+        assert_eq!(
+            layer_host_bytes(&dims),
+            4 * (2 * 1568 * 4096 + 1568 + 2 * 4096) // pij+wij, pi, pj+bj
+                + 4 * 784 * 32                      // HC-level mask
+                + 35_908                            // block index (worst case)
+        );
+        // The dropped dense unit-mask term dwarfs its replacement: the
+        // seed host held params + a 25.7 MB f32 unit mask; the engine
+        // holds params + ~136 KB of mask + index.
+        let dense_mask = 4 * dims.n_in() as u64 * dims.n_out() as u64;
+        assert!(block_index_bytes(&dims) * 100 < dense_mask);
+        let overhead = layer_host_bytes(&dims) - dims.param_bytes() as u64;
+        assert!(overhead * 10 < dense_mask, "{overhead}");
+        assert!(layer_host_bytes(&dims) < dims.param_bytes() as u64 + dense_mask);
+    }
+
+    #[test]
+    fn block_index_model_bounds_actual_index() {
+        use crate::bcpnn::LayerGraph;
+        for name in ["tiny", "small", "edge", "model1", "toy-deep", "mnist-deep2"] {
+            let cfg = crate::config::by_name(name).unwrap();
+            let g = LayerGraph::new(cfg, 11);
+            for p in &g.layers {
+                let actual = p.block_index().heap_bytes() as u64;
+                let model = block_index_bytes(&p.dims);
+                assert!(actual <= model, "{name} layer {}: {actual} > {model}",
+                        p.dims.index);
+            }
+        }
+    }
+
+    #[test]
+    fn host_bytes_version_independent_and_below_seed() {
+        // The host keeps one in-place copy of its arrays regardless of
+        // which kernel build the device runs; the seed datapath's
+        // extra dense-mask term is gone.
+        for name in ["tiny", "model1", "mnist-deep2"] {
+            for dims in crate::config::by_name(name).unwrap().layer_dims() {
+                let host = layer_host_bytes(&dims);
+                let seed_host = dims.param_bytes() as u64
+                    + 4 * dims.hc_in as u64 * dims.hc_out as u64
+                    + 4 * dims.n_in() as u64 * dims.n_out() as u64;
+                assert!(host < seed_host, "{name} layer {}", dims.index);
+                assert!(host > dims.param_bytes() as u64, "{name} layer {}", dims.index);
+            }
+        }
     }
 }

@@ -28,7 +28,12 @@
 //! stack of hypercolumn layers (`Projection` per fan-in, `LayerGraph`
 //! composing N hidden layers + the classifier head). Single-layer
 //! configs — the paper's topology — are the 1-element special case and
-//! stay bitwise identical to the seed `bcpnn::Network`.
+//! stay bitwise identical to the seed `bcpnn::Network`. All host
+//! kernels run on the **block-sparse active-synapse engine**
+//! (`bcpnn::sparse::BlockIndex` + zero-alloc `bcpnn::Workspace`):
+//! they stream only the `nact · mc_in · n_out` active synapses the
+//! FPGA model streams, bitwise identical to the preserved dense seed
+//! loops (DESIGN.md §3.1, `rust/tests/kernels.rs`).
 //!
 //! Modules map to DESIGN.md §3; the experiment index (every paper table
 //! and figure) is DESIGN.md §4.

@@ -13,8 +13,8 @@ use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::bcpnn::{LayerGraph, Network};
-use crate::data::encode::encode_image;
+use crate::bcpnn::{BufPool, LayerGraph, Network};
+use crate::data::encode::encode_image_in_place;
 
 use super::fifo::{Fifo, FifoStatsSnapshot};
 
@@ -196,17 +196,35 @@ impl<T: Send + 'static> Pipeline<T> {
 /// of `depth`, exactly how the FPGA would chain one kernel per layer.
 /// Output order matches the input and each probability vector is
 /// bitwise identical to [`LayerGraph::infer`].
+///
+/// Allocation: the encode stage expands each image *in place* (one
+/// buffer per item end to end — the n -> 2n growth still reallocates
+/// for capacity-exact inputs), the softmax stages run in place, and
+/// the support stages write into buffers recycled from their consumed
+/// inputs via a per-stage [`BufPool`] — a stage allocates only when
+/// its output is wider than every buffer it has pooled (a fresh
+/// transport buffer can't flow back upstream in a pure dataflow
+/// chain). The head allocates its outputs exact-sized (they are
+/// retained by the caller). The seed path's per-image `bj` clone and
+/// dense mask walk are gone everywhere.
 pub fn layer_graph_pipeline(
     graph: &Arc<LayerGraph>,
     images: Vec<Vec<f32>>,
     depth: usize,
 ) -> (Vec<Vec<f32>>, PipelineReport) {
     let mut p: Pipeline<Vec<f32>> = Pipeline::source("images", depth, images)
-        .stage("encode", depth, move |img: Vec<f32>| encode_image(&img));
+        .stage("encode", depth, move |mut img: Vec<f32>| {
+            encode_image_in_place(&mut img);
+            img
+        });
     for l in 0..graph.layers.len() {
         let gs = graph.clone();
+        let mut pool = BufPool::new();
         p = p.stage(&format!("support{l}"), depth, move |x: Vec<f32>| {
-            gs.layers[l].support_masked(&x)
+            let mut s = pool.get();
+            gs.layers[l].support_masked_into(&x, &mut s);
+            pool.put(x);
+            s
         });
         let ga = graph.clone();
         p = p.stage(&format!("softmax{l}"), depth, move |mut s: Vec<f32>| {
@@ -216,6 +234,10 @@ pub fn layer_graph_pipeline(
         });
     }
     let gh = graph.clone();
+    // The head's outputs are retained by `collect` — allocate them
+    // exact-sized (n_classes) instead of recycling wide activity
+    // buffers into them; the spent activity vec ends its transport
+    // loop here.
     p.stage("head", depth, move |y: Vec<f32>| gh.head.activate_dense(&y))
         .collect()
 }

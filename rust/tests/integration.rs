@@ -93,8 +93,21 @@ fn train_unsup_artifact_matches_rust_reference() {
     assert!(max_abs_diff(&driver.params.pi, &net.params.pi) < 1e-5, "pi");
     assert!(max_abs_diff(&driver.params.pj, &net.params.pj) < 1e-5, "pj");
     assert!(max_abs_diff(&driver.params.pij, &net.params.pij) < 1e-5, "pij");
-    // Weights go through log(): slightly looser.
-    assert!(max_abs_diff(&driver.params.wij, &net.params.wij) < 1e-3, "wij");
+    // Weights go through log(): slightly looser. Compare under the
+    // mask: the device kernel maintains every synapse densely while
+    // the block-sparse host path re-derives masked-out weights only
+    // on (re)activation — both agree wherever support can read them.
+    let mask = net.params.expand_mask(&cfg);
+    let wij_diff = driver
+        .params
+        .wij
+        .iter()
+        .zip(&net.params.wij)
+        .zip(&mask)
+        .filter(|(_, &m)| m != 0.0)
+        .map(|((a, b), _)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(wij_diff < 1e-3, "wij (masked): {wij_diff}");
     assert!(max_abs_diff(&driver.params.bj, &net.params.bj) < 1e-4, "bj");
 }
 

@@ -1,0 +1,352 @@
+//! Bitwise-equivalence suite: block-sparse active-synapse kernels vs
+//! the preserved dense seed loops (`bcpnn::sparse::dense_*`), across
+//! the whole config registry.
+//!
+//! The dense loops are the numeric oracle (they are the seed
+//! implementation verbatim); the production kernels walk only active
+//! spans. Everything an external observer can see must be bitwise
+//! identical: inference outputs, support vectors and their shard
+//! slices, every probability trace, and every weight the mask exposes.
+//! Weights of *inactive* synapses are deliberately not maintained by
+//! the sparse path (they are re-derived on activation), so wij is
+//! compared under the mask.
+
+use bcpnn_accel::bcpnn::sparse::{
+    dense_support_cols, dense_support_masked, dense_train_step, expand_mask_dims,
+};
+use bcpnn_accel::bcpnn::{LayerGraph, Network, Projection, StructuralPlasticity};
+use bcpnn_accel::config::{by_name, registry, ModelConfig};
+use bcpnn_accel::data::encode::encode_image;
+use bcpnn_accel::data::synth;
+use bcpnn_accel::testing::prop_check;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Dense mirror of one projection: the seed representation (full
+/// arrays + expanded f32 unit mask), trained with the seed loops.
+struct DenseProj {
+    hc_out: usize,
+    mc_out: usize,
+    pi: Vec<f32>,
+    pj: Vec<f32>,
+    pij: Vec<f32>,
+    wij: Vec<f32>,
+    bj: Vec<f32>,
+    mask_hc: Vec<f32>,
+    mask_unit: Vec<f32>,
+    hc_in: usize,
+    mc_in: usize,
+}
+
+impl DenseProj {
+    fn of(p: &Projection) -> DenseProj {
+        DenseProj {
+            hc_out: p.dims.hc_out,
+            mc_out: p.dims.mc_out,
+            pi: p.pi.clone(),
+            pj: p.pj.clone(),
+            pij: p.pij.clone(),
+            wij: p.wij.clone(),
+            bj: p.bj.clone(),
+            mask_hc: p.mask_hc.clone(),
+            mask_unit: p.dense_mask(),
+            hc_in: p.dims.hc_in,
+            mc_in: p.dims.mc_in,
+        }
+    }
+
+    fn support(&self, x: &[f32]) -> Vec<f32> {
+        dense_support_masked(&self.bj, &self.wij, &self.mask_unit, x)
+    }
+
+    fn activate(&self, x: &[f32], gain: f32) -> Vec<f32> {
+        let mut s = self.support(x);
+        Network::hc_softmax(&mut s, self.hc_out, self.mc_out, gain);
+        s
+    }
+
+    fn train(&mut self, x: &[f32], y: &[f32], alpha: f32, eps: f32) {
+        dense_train_step(
+            &mut self.pi, &mut self.pj, &mut self.pij, &mut self.wij, &mut self.bj,
+            x, y, alpha, eps,
+        );
+    }
+
+    fn set_mask(&mut self, mask_hc: &[f32]) {
+        self.mask_hc = mask_hc.to_vec();
+        self.mask_unit =
+            expand_mask_dims(&self.mask_hc, self.hc_in, self.hc_out, self.mc_in, self.mc_out);
+    }
+}
+
+/// Compare a sparse projection against its dense mirror: traces and
+/// bias everywhere, weights under the mask.
+fn assert_state_matches(p: &Projection, d: &DenseProj, what: &str) {
+    assert_eq!(bits(&p.pi), bits(&d.pi), "{what}: pi");
+    assert_eq!(bits(&p.pj), bits(&d.pj), "{what}: pj");
+    assert_eq!(bits(&p.pij), bits(&d.pij), "{what}: pij");
+    assert_eq!(bits(&p.bj), bits(&d.bj), "{what}: bj");
+    assert_eq!(p.mask_hc, d.mask_hc, "{what}: mask");
+    for (idx, (&w, &m)) in p.wij.iter().zip(&d.mask_unit).enumerate() {
+        if m != 0.0 {
+            assert_eq!(w.to_bits(), d.wij[idx].to_bits(), "{what}: wij[{idx}]");
+        }
+    }
+}
+
+/// Dense forward pass of a whole graph (seed semantics; the head is
+/// unmasked, so its kernels are shared with the sparse path).
+fn dense_forward(g: &LayerGraph, mirrors: &[DenseProj], img: &[f32]) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let x = encode_image(img);
+    let mut acts: Vec<Vec<f32>> = Vec::new();
+    for m in mirrors {
+        let input: &[f32] = if acts.is_empty() { &x } else { acts.last().unwrap() };
+        acts.push(m.activate(input, g.cfg.gain));
+    }
+    (x, acts)
+}
+
+fn imgs_for(cfg: &ModelConfig, seed: u64) -> Vec<Vec<f32>> {
+    // Large paper models get a reduced batch so the debug-build suite
+    // stays fast; the math is per-image, so coverage is unaffected.
+    let n = if cfg.n_in() * cfg.n_h() > 1_000_000 { 2 } else { cfg.batch.clamp(4, 8) };
+    synth::generate(cfg.img_side, cfg.n_classes, n, seed, 0.15).images
+}
+
+/// The full per-config oracle: fresh graph vs dense mirrors through
+/// inference, shard slices, one train batch, and rewire-then-refresh.
+fn assert_config_equivalent(name: &str) {
+    let cfg = by_name(name).unwrap();
+    let mut g = LayerGraph::new(cfg.clone(), 42);
+    let mut mirrors: Vec<DenseProj> = g.layers.iter().map(DenseProj::of).collect();
+    let images = imgs_for(&cfg, 42);
+
+    // --- inference + shard slices before training
+    for (k, img) in images.iter().enumerate() {
+        let (x, acts) = dense_forward(&g, &mirrors, img);
+        let dense_probs = g.head.activate_dense(acts.last().unwrap());
+        assert_eq!(bits(&g.infer(img)), bits(&dense_probs), "{name}: infer pre-train img {k}");
+
+        // Shard slices: every hypercolumn-aligned cut of every layer.
+        for (l, (p, m)) in g.layers.iter().zip(&mirrors).enumerate() {
+            let input: &[f32] = if l == 0 { &x } else { &acts[l - 1] };
+            let n_out = p.dims.n_out();
+            let cuts: Vec<usize> = (1..p.dims.hc_out).take(4).collect();
+            for cut in cuts {
+                let mid = cut * p.dims.mc_out;
+                let lo_s = p.support_cols(input, 0, mid);
+                let hi_s = p.support_cols(input, mid, n_out);
+                let lo_d = dense_support_cols(&m.bj, &m.wij, &m.mask_unit, input, 0, mid);
+                let hi_d = dense_support_cols(&m.bj, &m.wij, &m.mask_unit, input, mid, n_out);
+                assert_eq!(bits(&lo_s), bits(&lo_d), "{name} l{l} cut {cut} lo");
+                assert_eq!(bits(&hi_s), bits(&hi_d), "{name} l{l} cut {cut} hi");
+            }
+        }
+    }
+
+    // --- one train batch (unsupervised greedy layer-wise + head sup),
+    // sparse graph vs dense mirrors running the seed loops.
+    let (alpha, eps, gain) = (cfg.alpha, cfg.eps, cfg.gain);
+    for img in &images {
+        g.train_unsup_step(img);
+        let x = encode_image(img);
+        let mut input = x;
+        for m in mirrors.iter_mut() {
+            let y = m.activate(&input, gain);
+            m.train(&input, &y, alpha, eps);
+            input = y;
+        }
+    }
+    // Head supervised pass runs inside g only: the head is unmasked
+    // (full block index), so its train_step covers every entry — the
+    // dense-vs-sparse question doesn't arise for it.
+    for (k, img) in images.iter().enumerate() {
+        g.train_sup_step(img, k % cfg.n_classes);
+    }
+    for (l, (p, m)) in g.layers.iter().zip(&mirrors).enumerate() {
+        assert_state_matches(p, m, &format!("{name}: layer {l} post-train"));
+    }
+    for (k, img) in images.iter().enumerate() {
+        let (_, acts) = dense_forward(&g, &mirrors, img);
+        let dense_probs = g.head.activate_dense(acts.last().unwrap());
+        assert_eq!(bits(&g.infer(img)), bits(&dense_probs), "{name}: infer post-train img {k}");
+    }
+
+    // --- rewire, then refresh: newly activated blocks must carry the
+    // weights the dense path maintained all along.
+    let stats = g.rewire(&StructuralPlasticity::default());
+    for (l, (p, m)) in g.layers.iter().zip(mirrors.iter_mut()).enumerate() {
+        // The mirror adopts the rewired mask; its dense wij was always
+        // fresh, so no other state changes.
+        m.set_mask(&p.mask_hc);
+        assert_state_matches(p, m, &format!("{name}: layer {l} post-rewire ({stats:?})"));
+    }
+    for (k, img) in images.iter().enumerate() {
+        let (_, acts) = dense_forward(&g, &mirrors, img);
+        let dense_probs = g.head.activate_dense(acts.last().unwrap());
+        assert_eq!(bits(&g.infer(img)), bits(&dense_probs), "{name}: infer post-rewire img {k}");
+    }
+
+    // --- one more training step after the rewire (the sparse weight
+    // map now runs on the new index).
+    let img = &images[0];
+    g.train_unsup_step(img);
+    {
+        let x = encode_image(img);
+        let mut input = x;
+        for m in mirrors.iter_mut() {
+            let y = m.activate(&input, gain);
+            m.train(&input, &y, alpha, eps);
+            input = y;
+        }
+    }
+    for (l, (p, m)) in g.layers.iter().zip(&mirrors).enumerate() {
+        assert_state_matches(p, m, &format!("{name}: layer {l} post-rewire-train"));
+    }
+}
+
+#[test]
+fn registry_small_configs_bitwise_equivalent() {
+    for name in ["tiny", "small", "edge", "toy-deep"] {
+        assert_config_equivalent(name);
+    }
+}
+
+#[test]
+fn registry_model1_bitwise_equivalent() {
+    assert_config_equivalent("model1");
+}
+
+#[test]
+fn registry_model2_bitwise_equivalent() {
+    assert_config_equivalent("model2");
+}
+
+#[test]
+fn registry_model3_bitwise_equivalent() {
+    assert_config_equivalent("model3");
+}
+
+#[test]
+fn registry_mnist_deep2_bitwise_equivalent() {
+    assert_config_equivalent("mnist-deep2");
+}
+
+#[test]
+fn suite_tracks_registry() {
+    // Every registry config must be named in a test above.
+    let covered = [
+        "tiny", "small", "edge", "toy-deep", "model1", "model2", "model3",
+        "mnist-deep2",
+    ];
+    let mut names: Vec<String> = registry().keys().cloned().collect();
+    names.sort();
+    let mut want: Vec<String> = covered.iter().map(|s| s.to_string()).collect();
+    want.sort();
+    assert_eq!(names, want, "registry changed: extend rust/tests/kernels.rs");
+}
+
+#[test]
+fn network_kernels_match_dense_reference() {
+    // The classic two-projection Network runs the same block-sparse
+    // engine; pin its support + train loops against the dense oracle.
+    let cfg = by_name("tiny").unwrap();
+    let mut net = Network::new(cfg.clone(), 5);
+    let images = imgs_for(&cfg, 5);
+    let dims = cfg.layer_dims()[0];
+    let mut mask_unit =
+        expand_mask_dims(&net.params.mask_hc, dims.hc_in, dims.hc_out, dims.mc_in, dims.mc_out);
+    for img in &images {
+        let x = encode_image(img);
+        let want = dense_support_masked(&net.params.bj, &net.params.wij, &mask_unit, &x);
+        assert_eq!(bits(&net.support(&x)), bits(&want));
+        net.train_unsup_step(img);
+        // Dense oracle for the *next* support needs the mirror to
+        // train too; instead of duplicating state, re-expand the mask
+        // (unchanged) and compare against the network's own arrays —
+        // valid because assert_state coverage lives in the graph suite
+        // and Network/LayerGraph equality is pinned by deep_stack.
+        mask_unit = expand_mask_dims(
+            &net.params.mask_hc, dims.hc_in, dims.hc_out, dims.mc_in, dims.mc_out,
+        );
+    }
+    // After rewiring, support must still match the dense loop over the
+    // network's (re-derived) weights.
+    let sp = StructuralPlasticity::default();
+    sp.rewire(&mut net.params, &cfg);
+    net.refresh_mask();
+    mask_unit = expand_mask_dims(
+        &net.params.mask_hc, dims.hc_in, dims.hc_out, dims.mc_in, dims.mc_out,
+    );
+    for img in &images {
+        let x = encode_image(img);
+        let want = dense_support_masked(&net.params.bj, &net.params.wij, &mask_unit, &x);
+        assert_eq!(bits(&net.support(&x)), bits(&want));
+        for cut in 1..dims.hc_out {
+            let mid = cut * dims.mc_out;
+            let want_lo =
+                dense_support_cols(&net.params.bj, &net.params.wij, &mask_unit, &x, 0, mid);
+            assert_eq!(bits(&net.support_cols(&x, 0, mid)), bits(&want_lo), "cut {cut}");
+        }
+    }
+}
+
+#[test]
+fn random_hc_mask_edits_keep_equivalence() {
+    // Property: any hypercolumn-aligned mask edit (random flips of
+    // whole HC blocks), followed by refresh, keeps the block-sparse
+    // kernels bitwise equal to the dense loops — including the weight
+    // re-derivation for blocks the edit switches on.
+    let cfg = by_name("tiny").unwrap();
+    prop_check(
+        "hc-mask-edits-keep-equivalence",
+        0xB10C,
+        12,
+        |rng| {
+            let seed = rng.next_u64();
+            let flips: Vec<usize> = (0..6).map(|_| rng.next_range(64 * 4)).collect();
+            let img: Vec<f32> = (0..64).map(|_| rng.next_f32()).collect();
+            (seed, flips, img)
+        },
+        |(seed, flips, img)| {
+            let cfg = cfg.clone();
+            let mut g = LayerGraph::new(cfg.clone(), *seed);
+            // A little training so traces/weights are non-trivial.
+            let d = synth::generate(cfg.img_side, cfg.n_classes, 6, *seed, 0.15);
+            let mut mirror = DenseProj::of(&g.layers[0]);
+            for timg in &d.images {
+                g.train_unsup_step(timg);
+                let x = encode_image(timg);
+                let y = mirror.activate(&x, cfg.gain);
+                mirror.train(&x, &y, cfg.alpha, cfg.eps);
+            }
+            // Apply the same HC-block flips to both sides.
+            let mut mask = g.layers[0].mask_hc.clone();
+            for &f in flips {
+                mask[f] = 1.0 - mask[f];
+            }
+            g.layers[0].mask_hc.copy_from_slice(&mask);
+            g.refresh_masks();
+            mirror.set_mask(&mask);
+
+            let x = encode_image(img);
+            let got = g.layers[0].support_masked(&x);
+            let want = mirror.support(&x);
+            if bits(&got) != bits(&want) {
+                return Err("support diverged after mask edit".into());
+            }
+            // One more train step on the edited wiring.
+            let y = mirror.activate(&x, cfg.gain);
+            g.layers[0].train_step(&x, &y, cfg.alpha, cfg.eps);
+            mirror.train(&x, &y, cfg.alpha, cfg.eps);
+            let got = g.layers[0].support_masked(&x);
+            let want = mirror.support(&x);
+            if bits(&got) != bits(&want) {
+                return Err("support diverged after post-edit training".into());
+            }
+            Ok(())
+        },
+    );
+}
