@@ -1,28 +1,34 @@
 //! Active-synapse kernel bench: the dense seed kernels vs the
-//! block-sparse engine, ns/img per registry config — the measured side
-//! of the `hc_in/nact` speedup the machine model predicts
-//! (`fpga::timing::active_synapses` streams `nact * mc_in * n_out`
-//! terms; the dense host loop touched all `n_in * n_out`).
+//! block-sparse engine vs the batched AoSoA tile engine, ns/img per
+//! registry config — the measured side of the `hc_in/nact` speedup the
+//! machine model predicts (`fpga::timing::active_synapses` streams
+//! `nact * mc_in * n_out` terms; the dense host loop touched all
+//! `n_in * n_out`) and of the tile amortization
+//! (`fpga::timing::host_tile_img_s` models one weight load per TILE
+//! lanes).
 //!
-//!     cargo bench --bench kernels              # full registry
-//!     cargo bench --bench kernels -- --quick   # CI smoke subset
-//!     cargo bench --bench kernels -- --json    # + BENCH_kernels.json
+//!     cargo bench --bench kernels                 # full registry
+//!     cargo bench --bench kernels -- --quick      # CI smoke subset
+//!     cargo bench --bench kernels -- --json       # + BENCH_kernels.json
+//!     cargo bench --bench kernels -- --threads 4  # threaded tile row
 //!
-//! In every mode the bench **asserts** block-sparse support is at
-//! least 2x faster than dense on `mnist-deep2` (front layer =
-//! model1-class dims, modeled speedup `hc_in/nact = 784/128 ≈ 6x`),
-//! so the engine cannot silently regress toward the dense baseline
-//! in CI.
+//! In every mode the bench **asserts**, on `mnist-deep2`:
+//! - block-sparse support is at least 2x faster than dense (front
+//!   layer = model1-class dims, modeled `hc_in/nact = 784/128 ≈ 6x`);
+//! - batched tile inference throughput ≥ the single-image span loop
+//!   (modeled ~6x from weight-stream amortization) —
+//! so neither engine can silently regress in CI.
 
 use std::hint::black_box;
 use std::path::Path;
 
-use bcpnn_accel::bcpnn::sparse::{dense_support_masked, dense_train_step};
+use bcpnn_accel::bcpnn::sparse::{dense_support_masked, dense_train_step, TILE};
 use bcpnn_accel::bcpnn::{LayerGraph, Workspace};
 use bcpnn_accel::bench_harness as bh;
 use bcpnn_accel::config::{by_name, registry};
 use bcpnn_accel::data::encode::encode_image;
 use bcpnn_accel::data::synth;
+use bcpnn_accel::fpga::timing::host_tile_img_s;
 use bcpnn_accel::util::json::Json;
 
 fn ns_per_img(r: &bh::BenchResult, imgs: usize) -> f64 {
@@ -97,11 +103,59 @@ fn main() {
         });
         println!("{}", r_infer.row());
 
+        // Batched section: single-image span loop vs the AoSoA tile
+        // engine vs tile + thread splitter, on a batch with a ragged
+        // tail (so the pad-lane path is always measured too).
+        let n_batch = if opts.quick { 2 * TILE + 3 } else { 4 * TILE + 3 };
+        let db = synth::generate(cfg.img_side, cfg.n_classes, n_batch, 11, 0.15);
+        let mut bws = Workspace::new();
+        // Every row black-boxes a computed float (not just a length
+        // derivable from the input count), so the optimizer cannot
+        // elide the inference work either side of the CI gate.
+        let probe = |out: &[Vec<f32>]| out.last().and_then(|v| v.last().copied());
+        let r_bsingle =
+            bh::bench(&format!("{name} batch single-image span"), warmup, iters, || {
+                let out: Vec<Vec<f32>> = db
+                    .images
+                    .iter()
+                    .map(|i| g.infer_with(i, &mut bws).to_vec())
+                    .collect();
+                black_box(probe(&out));
+            });
+        println!("{}", r_bsingle.row());
+        // Hoist the tile workspace like the single-image row hoists
+        // `bws`, so the rows compare kernel throughput, not the
+        // allocation asymmetry of a per-iteration fresh workspace.
+        let mut tws = Workspace::new();
+        let r_btile = bh::bench(&format!("{name} batch AoSoA tile"), warmup, iters, || {
+            black_box(probe(&g.infer_batch_with(&db.images, &mut tws)));
+        });
+        println!("{}", r_btile.row());
+        let thr = opts.threads.max(1);
+        let r_bthr = bh::bench(
+            &format!("{name} batch tile x{thr} threads"),
+            warmup,
+            iters,
+            || {
+                black_box(probe(&g.infer_batch_threads(&db.images, thr)));
+            },
+        )
+        .with_threads(thr);
+        println!("{}", r_bthr.row());
+        let tile_speedup = ns_per_img(&r_bsingle, n_batch) / ns_per_img(&r_btile, n_batch).max(1.0);
+        let tile_thr_speedup =
+            ns_per_img(&r_bsingle, n_batch) / ns_per_img(&r_bthr, n_batch).max(1.0);
+
         println!(
             "   -> layer0 {}x{} HC (nact {}): support speedup {speedup:.2}x \
              (modeled ~{:.1}x), train speedup {train_speedup:.2}x",
             dims.hc_in, dims.hc_out, dims.nact,
             dims.hc_in as f64 / dims.nact as f64,
+        );
+        println!(
+            "   -> batch tile speedup {tile_speedup:.2}x (modeled ~{:.1}x), \
+             tile x{thr} threads {tile_thr_speedup:.2}x",
+            host_tile_img_s(&cfg, TILE, 1) / host_tile_img_s(&cfg, 1, 1),
         );
 
         if name.as_str() == "mnist-deep2" {
@@ -115,6 +169,17 @@ fn main() {
                  (modeled ~6.1x); active-synapse engine regressed",
                 ns_per_img(&r_sparse, n_imgs),
                 ns_per_img(&r_dense, n_imgs),
+            );
+            // Acceptance gate: the tile engine must not fall behind
+            // the single-image span loop (modeled ~6x ahead via
+            // weight-stream amortization; >=1x floors out noise).
+            assert!(
+                tile_speedup >= 1.0,
+                "batched tile inference only {tile_speedup:.2}x vs single-image span \
+                 on mnist-deep2 ({:.0} vs {:.0} ns/img) — tile engine regressed \
+                 below the single-image throughput floor (modeled ~6x ahead)",
+                ns_per_img(&r_btile, n_batch),
+                ns_per_img(&r_bsingle, n_batch),
             );
         }
 
@@ -130,6 +195,17 @@ fn main() {
             ("train_sparse_ns", Json::from(r_tsparse.mean.as_nanos() as f64)),
             ("train_speedup", Json::from(train_speedup)),
             ("infer_ws_ns_per_img", Json::from(ns_per_img(&r_infer, n_imgs))),
+            ("batch_images", Json::from(n_batch)),
+            ("batch_single_ns_per_img", Json::from(ns_per_img(&r_bsingle, n_batch))),
+            ("batch_tile_ns_per_img", Json::from(ns_per_img(&r_btile, n_batch))),
+            ("batch_tile_threads_ns_per_img", Json::from(ns_per_img(&r_bthr, n_batch))),
+            ("threads", Json::from(thr)),
+            ("tile_speedup", Json::from(tile_speedup)),
+            ("tile_threads_speedup", Json::from(tile_thr_speedup)),
+            (
+                "modeled_tile_speedup",
+                Json::from(host_tile_img_s(&cfg, TILE, 1) / host_tile_img_s(&cfg, 1, 1)),
+            ),
         ]));
     }
 
@@ -138,6 +214,7 @@ fn main() {
             ("bench", Json::from("kernels")),
             ("source", Json::from("measured")),
             ("quick", Json::from(opts.quick)),
+            ("threads", Json::from(opts.threads)),
             ("configs", Json::Arr(entries)),
         ]);
         let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_kernels.json");

@@ -32,12 +32,14 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::config::{LayerDims, ModelConfig};
-use crate::data::encode::{encode_image, encode_image_into, one_hot};
+use crate::data::encode::{
+    encode_image, encode_image_into, encode_images_tile_into, one_hot, unpack_lane,
+};
 use crate::data::rng::XorShift64;
 
-use super::network::{argmax, Network};
+use super::network::{argmax, argmax_lane, Network};
 use super::params::{init_mask_dims, recompute_weights, Params};
-use super::sparse::{expand_mask_dims, BlockIndex};
+use super::sparse::{expand_mask_dims, BlockIndex, TILE};
 use super::structural::StructuralPlasticity;
 use super::workspace::Workspace;
 
@@ -267,6 +269,51 @@ impl Projection {
         s
     }
 
+    // --------------------------------------------- batched tile twins
+    //
+    // AoSoA kernels: one span walk / weight load per TILE images. Lane
+    // `l` of every tile method is bitwise its scalar twin on image `l`
+    // (lane-private accumulators, unchanged per-lane order — see
+    // `super::sparse` tile-kernel docs; pinned by
+    // `rust/tests/kernels.rs`).
+
+    /// Tile twin of [`Projection::support_masked_into`]: `xt` is the
+    /// lane-interleaved input tile (`n_in * TILE`).
+    pub fn support_masked_tile_into(&self, xt: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(xt.len(), self.dims.n_in() * TILE);
+        super::sparse::support_span_tile_into(&self.bj, &self.wij, &self.index, xt, out);
+    }
+
+    /// Tile twin of [`Projection::support_cols_into`] (the hybrid
+    /// shard workers' slice kernel).
+    pub fn support_cols_tile_into(&self, xt: &[f32], lo: usize, hi: usize, out: &mut Vec<f32>) {
+        debug_assert_eq!(xt.len(), self.dims.n_in() * TILE);
+        super::sparse::support_span_cols_tile_into(
+            &self.bj, &self.wij, &self.index, xt, lo, hi, out,
+        );
+    }
+
+    /// Tile twin of [`Projection::support_dense_into`] (the head
+    /// datapath).
+    pub fn support_dense_tile_into(&self, yt: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(yt.len(), self.dims.n_in() * TILE);
+        super::sparse::support_dense_tile_into(&self.bj, &self.wij, yt, out);
+    }
+
+    /// Tile twin of [`Projection::activate_masked_into`]: masked tile
+    /// support + per-HC lane softmax.
+    pub fn activate_masked_tile_into(&self, xt: &[f32], gain: f32, out: &mut Vec<f32>) {
+        self.support_masked_tile_into(xt, out);
+        Network::hc_softmax_tile(out, self.dims.hc_out, self.dims.mc_out, gain);
+    }
+
+    /// Tile twin of [`Projection::activate_dense_into`] (head support
+    /// + softmax over the output HC, per lane).
+    pub fn activate_dense_tile_into(&self, yt: &[f32], out: &mut Vec<f32>) {
+        self.support_dense_tile_into(yt, out);
+        Network::hc_softmax_tile(out, self.dims.hc_out, self.dims.mc_out, 1.0);
+    }
+
     /// One fused plasticity step given this projection's input `x` and
     /// output activity `y`: EMA traces + Bayesian weight recompute —
     /// the per-projection body of `Network::train_unsup_step`/
@@ -411,14 +458,64 @@ impl LayerGraph {
         self.infer_with(img, &mut ws).to_vec()
     }
 
-    /// Class probabilities for a whole batch, reusing one workspace
-    /// across images (allocates only the returned vectors).
+    /// One image tile (1..=TILE images) through the batched AoSoA
+    /// engine into `ws.out_t`: tile encode, lane-interleaved layer
+    /// stack, tile head — one `BlockIndex` walk and one weight stream
+    /// per tile instead of per image. Lane `l` of the returned tile is
+    /// bitwise identical to [`LayerGraph::infer`]`(&imgs[l])`; ragged
+    /// tiles pad the unused lanes with zero images (lane-private, so
+    /// real lanes are unaffected).
+    pub fn infer_tile_with<'w>(&self, imgs: &[Vec<f32>], ws: &'w mut Workspace) -> &'w [f32] {
+        encode_images_tile_into(imgs, &mut ws.xt);
+        debug_assert_eq!(ws.xt.len(), self.cfg.n_in() * TILE);
+        let gain = self.cfg.gain;
+        let [a, b] = &mut ws.act_t;
+        self.layers[0].activate_masked_tile_into(&ws.xt, gain, a);
+        let (mut cur, mut spare) = (a, b);
+        for l in 1..self.layers.len() {
+            self.layers[l].activate_masked_tile_into(cur.as_slice(), gain, spare);
+            std::mem::swap(&mut cur, &mut spare);
+        }
+        self.head.activate_dense_tile_into(cur.as_slice(), &mut ws.out_t);
+        &ws.out_t
+    }
+
+    /// [`LayerGraph::infer_batch`] into a caller-held workspace —
+    /// serving backends keep one across dispatch rounds, so the
+    /// steady-state batch path allocates nothing beyond the returned
+    /// vectors.
+    pub fn infer_batch_with(&self, images: &[Vec<f32>], ws: &mut Workspace) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(images.len());
+        for chunk in images.chunks(TILE) {
+            let tile = self.infer_tile_with(chunk, ws);
+            for lane in 0..chunk.len() {
+                out.push(unpack_lane(tile, lane));
+            }
+        }
+        out
+    }
+
+    /// Class probabilities for a whole batch through the batched tile
+    /// engine (one workspace for the sweep; allocates only the
+    /// returned vectors). Bitwise identical per image to
+    /// [`LayerGraph::infer`].
     pub fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<Vec<f32>> {
-        let mut ws = Workspace::new();
-        images
-            .iter()
-            .map(|img| self.infer_with(img, &mut ws).to_vec())
-            .collect()
+        self.infer_batch_with(images, &mut Workspace::new())
+    }
+
+    /// [`LayerGraph::infer_batch`] split across `threads` with
+    /// `std::thread::scope` ([`sparse::scoped_tile_chunks`]'s
+    /// contiguous tile-aligned chunks, one workspace per thread,
+    /// results merged in submission order). Deterministic — the output
+    /// is bitwise identical at any thread count (chunking only
+    /// regroups lane-private tiles).
+    pub fn infer_batch_threads(&self, images: &[Vec<f32>], threads: usize) -> Vec<Vec<f32>> {
+        match super::sparse::scoped_tile_chunks(images.len(), threads, |lo, hi| {
+            self.infer_batch(&images[lo..hi])
+        }) {
+            Some(parts) => parts.into_iter().flatten().collect(),
+            None => self.infer_batch(images),
+        }
     }
 
     /// Argmax prediction through a caller-held workspace (no per-image
@@ -432,16 +529,46 @@ impl LayerGraph {
         argmax(&self.infer(img))
     }
 
-    /// Accuracy over a labelled set (one workspace for the whole
-    /// sweep; zero per-image allocation).
-    pub fn accuracy(&self, images: &[Vec<f32>], labels: &[u32]) -> f64 {
+    /// Correct argmax predictions over a labelled set through the tile
+    /// engine (the integer core of [`LayerGraph::accuracy`]).
+    fn correct_count(&self, images: &[Vec<f32>], labels: &[u32]) -> usize {
         let mut ws = Workspace::new();
-        let correct = images
-            .iter()
-            .zip(labels)
-            .filter(|(img, &l)| self.predict_with(img, &mut ws) as u32 == l)
-            .count();
-        correct as f64 / labels.len().max(1) as f64
+        let mut correct = 0usize;
+        for (chunk, lch) in images.chunks(TILE).zip(labels.chunks(TILE)) {
+            let tile = self.infer_tile_with(chunk, &mut ws);
+            for (lane, &l) in lch.iter().enumerate() {
+                if argmax_lane(tile, lane) as u32 == l {
+                    correct += 1;
+                }
+            }
+        }
+        correct
+    }
+
+    /// Accuracy over a labelled set, through the batched tile engine
+    /// (one workspace for the sweep; predictions are bitwise those of
+    /// the per-image path, so the score is identical).
+    pub fn accuracy(&self, images: &[Vec<f32>], labels: &[u32]) -> f64 {
+        self.correct_count(images, labels) as f64 / labels.len().max(1) as f64
+    }
+
+    /// [`LayerGraph::accuracy`] split across `threads` (the same
+    /// deterministic [`sparse::scoped_tile_chunks`] splitter as
+    /// [`LayerGraph::infer_batch_threads`]; the score is exactly the
+    /// single-thread one — per-chunk correct counts sum as integers).
+    pub fn accuracy_threads(&self, images: &[Vec<f32>], labels: &[u32], threads: usize) -> f64 {
+        match super::sparse::scoped_tile_chunks(images.len(), threads, |lo, hi| {
+            // Clamp the label slice: the single-threaded path zips and
+            // truncates a short label set, so the splitter must too
+            // (not panic on the out-of-range slice).
+            let (lo_l, hi_l) = (lo.min(labels.len()), hi.min(labels.len()));
+            self.correct_count(&images[lo..hi], &labels[lo_l..hi_l])
+        }) {
+            Some(parts) => {
+                parts.into_iter().sum::<usize>() as f64 / labels.len().max(1) as f64
+            }
+            None => self.accuracy(images, labels),
+        }
     }
 
     // ------------------------------------------------------ plasticity
@@ -587,6 +714,42 @@ mod tests {
         }
         let acc = g.accuracy(&d.images, &d.labels);
         assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn threaded_batch_bitwise_matches_at_any_thread_count() {
+        // 13 images: one full tile + a ragged 5-lane tail. Every
+        // thread count must reproduce the single-thread tile path (and
+        // hence the per-image path) bitwise; accuracy_threads must
+        // return exactly the single-thread score.
+        let cfg = by_name("toy-deep").unwrap();
+        let g = LayerGraph::new(cfg.clone(), 21);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 13, 6, 0.15);
+        let want: Vec<Vec<u32>> = d
+            .images
+            .iter()
+            .map(|i| g.infer(i).iter().map(|v| v.to_bits()).collect())
+            .collect();
+        let acc_want = g.accuracy(&d.images, &d.labels);
+        for threads in [1usize, 2, 3, 5, 16] {
+            let got = g.infer_batch_threads(&d.images, threads);
+            assert_eq!(got.len(), want.len(), "{threads} threads");
+            for (k, (gv, wv)) in got.iter().zip(&want).enumerate() {
+                let gb: Vec<u32> = gv.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(&gb, wv, "image {k} at {threads} threads");
+            }
+            let acc = g.accuracy_threads(&d.images, &d.labels, threads);
+            assert_eq!(acc, acc_want, "{threads} threads");
+        }
+        // Degenerate inputs stay well-defined.
+        assert!(g.infer_batch_threads(&[], 4).is_empty());
+        // A short label set truncates like the single-threaded zip
+        // (regression: the splitter used to slice labels out of range).
+        let short = &d.labels[..7];
+        assert_eq!(
+            g.accuracy_threads(&d.images, short, 3),
+            g.accuracy(&d.images, short)
+        );
     }
 
     #[test]

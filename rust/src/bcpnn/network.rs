@@ -13,10 +13,12 @@
 //! the exactness argument; pinned by `rust/tests/kernels.rs`).
 
 use crate::config::ModelConfig;
-use crate::data::encode::{encode_image, encode_image_into, one_hot};
+use crate::data::encode::{
+    encode_image, encode_image_into, encode_images_tile_into, one_hot, unpack_lane,
+};
 
 use super::params::Params;
-use super::sparse::BlockIndex;
+use super::sparse::{BlockIndex, TILE};
 use super::workspace::Workspace;
 
 /// A BCPNN network bound to a config; owns its parameter state.
@@ -106,6 +108,36 @@ impl Network {
         }
     }
 
+    /// [`Network::hc_softmax`] over an AoSoA tile (`n_hc * n_mc * TILE`
+    /// values, lane-interleaved). Every lane runs the scalar loop's
+    /// exact per-element operation order — scale+max, exp+sum, divide,
+    /// minicolumns in ascending order — on lane-private `[f32; TILE]`
+    /// reductions, so lane `l` is bitwise `hc_softmax` of lane `l`.
+    pub fn hc_softmax_tile(s: &mut [f32], n_hc: usize, n_mc: usize, gain: f32) {
+        debug_assert_eq!(s.len(), n_hc * n_mc * TILE);
+        for hc in s.chunks_mut(n_mc * TILE) {
+            let mut mx = [f32::NEG_INFINITY; TILE];
+            for row in hc.chunks_exact_mut(TILE) {
+                for l in 0..TILE {
+                    row[l] *= gain;
+                    mx[l] = mx[l].max(row[l]);
+                }
+            }
+            let mut sum = [0.0f32; TILE];
+            for row in hc.chunks_exact_mut(TILE) {
+                for l in 0..TILE {
+                    row[l] = (row[l] - mx[l]).exp();
+                    sum[l] += row[l];
+                }
+            }
+            for row in hc.chunks_exact_mut(TILE) {
+                for l in 0..TILE {
+                    row[l] /= sum[l];
+                }
+            }
+        }
+    }
+
     /// Hidden activity for a raw image: encode -> support -> softmax.
     pub fn hidden_activity(&self, img: &[f32]) -> (Vec<f32>, Vec<f32>) {
         let x = encode_image(img);
@@ -155,14 +187,59 @@ impl Network {
         self.output_activity(&y)
     }
 
-    /// Class probabilities for a whole batch, reusing one workspace
-    /// across images (allocates only the returned vectors).
+    /// Batched masked support over an AoSoA input tile (no allocation)
+    /// — one weight load per `TILE` lanes.
+    pub fn support_tile_into(&self, xt: &[f32], out: &mut Vec<f32>) {
+        super::sparse::support_span_tile_into(
+            &self.params.bj, &self.params.wij, &self.index, xt, out,
+        );
+    }
+
+    /// One image tile (1..=TILE images) through the batched AoSoA
+    /// engine into `ws.out_t`. Lane `l` of the returned tile is
+    /// bitwise identical to [`Network::infer`]`(&imgs[l])`.
+    pub fn infer_tile_with<'w>(&self, imgs: &[Vec<f32>], ws: &'w mut Workspace) -> &'w [f32] {
+        encode_images_tile_into(imgs, &mut ws.xt);
+        debug_assert_eq!(ws.xt.len(), self.cfg.n_in() * TILE);
+        let y = &mut ws.act_t[0];
+        self.support_tile_into(&ws.xt, y);
+        Self::hc_softmax_tile(y, self.cfg.hc_h, self.cfg.mc_h, self.cfg.gain);
+        super::sparse::support_dense_tile_into(
+            &self.params.bk, &self.params.who, y.as_slice(), &mut ws.out_t,
+        );
+        Self::hc_softmax_tile(&mut ws.out_t, 1, self.cfg.n_out(), 1.0);
+        &ws.out_t
+    }
+
+    /// Class probabilities for a whole batch through the batched tile
+    /// engine: one `BlockIndex` walk and one weight stream per `TILE`
+    /// images, one workspace for the sweep (allocates only the
+    /// returned vectors). Bitwise identical per image to
+    /// [`Network::infer`].
     pub fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<Vec<f32>> {
         let mut ws = Workspace::new();
-        images
-            .iter()
-            .map(|img| self.infer_with(img, &mut ws).to_vec())
-            .collect()
+        let mut out = Vec::with_capacity(images.len());
+        for chunk in images.chunks(TILE) {
+            let tile = self.infer_tile_with(chunk, &mut ws);
+            for lane in 0..chunk.len() {
+                out.push(unpack_lane(tile, lane));
+            }
+        }
+        out
+    }
+
+    /// [`Network::infer_batch`] split across `threads` with
+    /// `std::thread::scope` ([`super::sparse::scoped_tile_chunks`]'s
+    /// contiguous tile-aligned chunks, one workspace per thread,
+    /// results merged in submission order) — so the output is bitwise
+    /// identical at any thread count.
+    pub fn infer_batch_threads(&self, images: &[Vec<f32>], threads: usize) -> Vec<Vec<f32>> {
+        match super::sparse::scoped_tile_chunks(images.len(), threads, |lo, hi| {
+            self.infer_batch(&images[lo..hi])
+        }) {
+            Some(parts) => parts.into_iter().flatten().collect(),
+            None => self.infer_batch(images),
+        }
     }
 
     /// Argmax prediction.
@@ -223,17 +300,36 @@ impl Network {
         }
     }
 
-    /// Accuracy over a labelled set (one workspace for the whole
-    /// sweep; zero per-image allocation).
+    /// Accuracy over a labelled set, through the batched tile engine
+    /// (one workspace for the whole sweep; predictions are bitwise
+    /// those of the per-image path, so the score is identical).
     pub fn accuracy(&self, images: &[Vec<f32>], labels: &[u32]) -> f64 {
         let mut ws = Workspace::new();
-        let correct = images
-            .iter()
-            .zip(labels)
-            .filter(|(img, &l)| argmax(self.infer_with(img, &mut ws)) as u32 == l)
-            .count();
+        let mut correct = 0usize;
+        for (chunk, lch) in images.chunks(TILE).zip(labels.chunks(TILE)) {
+            let tile = self.infer_tile_with(chunk, &mut ws);
+            for (lane, &l) in lch.iter().enumerate() {
+                if argmax_lane(tile, lane) as u32 == l {
+                    correct += 1;
+                }
+            }
+        }
         correct as f64 / labels.len().max(1) as f64
     }
+}
+
+/// [`argmax`] over lane `lane` of an AoSoA tile (first on ties, like
+/// the scalar argmax).
+pub(crate) fn argmax_lane(tile: &[f32], lane: usize) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, row) in tile.chunks_exact(TILE).enumerate() {
+        if row[lane] > best_v {
+            best_v = row[lane];
+            best = i;
+        }
+    }
+    best
 }
 
 /// Index of the maximum element (first on ties).
@@ -294,6 +390,36 @@ mod tests {
         }
         let d = synth::generate(n.cfg.img_side, n.cfg.n_classes, 8, 3, 0.15);
         assert_eq!(n.infer_batch(&d.images), d.images.iter().map(|i| n.infer(i)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tile_batch_bitwise_matches_per_image_at_any_thread_count() {
+        // 11 images: one full tile + a ragged 3-lane tail; every
+        // thread count must reproduce the per-image path bitwise.
+        let n = net();
+        let d = synth::generate(n.cfg.img_side, n.cfg.n_classes, 11, 9, 0.15);
+        let want: Vec<Vec<u32>> = d
+            .images
+            .iter()
+            .map(|i| n.infer(i).iter().map(|v| v.to_bits()).collect())
+            .collect();
+        for threads in [1usize, 2, 3, 7] {
+            let got = n.infer_batch_threads(&d.images, threads);
+            assert_eq!(got.len(), want.len());
+            for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                let gb: Vec<u32> = g.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(&gb, w, "image {k} at {threads} threads");
+            }
+        }
+        // Tile-engine accuracy equals the per-image score.
+        let per_image: usize = d
+            .images
+            .iter()
+            .zip(&d.labels)
+            .filter(|(img, &l)| argmax(&n.infer(img)) as u32 == l)
+            .count();
+        let acc = n.accuracy(&d.images, &d.labels);
+        assert!((acc - per_image as f64 / d.labels.len() as f64).abs() < 1e-12);
     }
 
     #[test]

@@ -293,6 +293,171 @@ pub(crate) fn refresh_activated_weights(
     }
 }
 
+// ------------------------------------------------- batched tile kernels
+//
+// AoSoA image-tile kernels: one `BlockIndex` walk serves [`TILE`]
+// images at once. The host's single-image span kernels are weight-
+// bandwidth bound — every image re-streams the same `w[i][j]` spans —
+// so batch throughput is capped at 1 FMA per weight load. The tile
+// kernels load each active weight once and multiply-add it against all
+// `TILE` lanes of a lane-interleaved input tile (`xt[i*TILE + lane] =
+// x_lane[i]`), turning the ratio into `TILE` FMAs per load. The
+// fixed-size `[f32; TILE]` accumulators autovectorize on stable rust
+// (no nightly `std::simd`).
+//
+// ## Why tile results are bitwise identical to the single-image kernels
+//
+// Each lane owns a private accumulator column: lane `l` of
+// `out[j*TILE + l]` is touched only by lane `l`'s inputs, in the exact
+// i-outer / j-inner order of the scalar kernel. Two differences exist
+// and both are bitwise no-ops:
+//
+// - The scalar kernel skips rows with `xi == 0`; the tile kernel skips
+//   a row only when **every** lane is zero. A lane whose `xi` is zero
+//   in a processed row adds `xi * w = ±0.0` (weights finite), and
+//   adding `±0.0` never changes the accumulator's bits here — the
+//   accumulator is never `-0.0` (see the module-level argument: sums
+//   are seeded by `ln(pj + eps)`, which is never `-0.0`, and
+//   cancellation rounds to `+0.0`), and `s + (±0.0) = s` bitwise for
+//   every `s != -0.0`.
+// - Unused lanes of a ragged tail tile (batch % TILE != 0) hold
+//   all-zero inputs; they only pollute their own (discarded) lanes.
+//
+// Hence lane `l` of every tile kernel is bit-for-bit the scalar kernel
+// run on image `l` — pinned registry-wide (including ragged tails and
+// shard slices) by `rust/tests/kernels.rs`.
+
+/// Images per AoSoA tile — defined next to the layout helpers in
+/// `data::encode` (keeping the `data -> bcpnn` layering one-way),
+/// re-exported here beside the kernels that consume it.
+pub use crate::data::encode::TILE;
+
+/// Batched masked support over active spans into `out` (AoSoA):
+/// `out[j*TILE + l] = bj[j] + sum_i xt[i*TILE + l] * w[i][j]`, one
+/// span walk and one weight load per tile. `xt` is the lane-interleaved
+/// input tile (`n_in * TILE`); `out` is resized to `n_out * TILE`.
+pub(crate) fn support_span_tile_into(
+    bj: &[f32], wij: &[f32], index: &BlockIndex, xt: &[f32], out: &mut Vec<f32>,
+) {
+    let n_out = bj.len();
+    debug_assert_eq!(xt.len() % TILE, 0);
+    out.clear();
+    out.extend(bj.iter().flat_map(|&b| [b; TILE]));
+    for (i, xrow) in xt.chunks_exact(TILE).enumerate() {
+        let x: &[f32; TILE] = xrow.try_into().expect("chunk is TILE wide");
+        if x.iter().all(|&v| v == 0.0) {
+            continue;
+        }
+        let wrow = &wij[i * n_out..(i + 1) * n_out];
+        for &(lo, hi) in index.row(i) {
+            for j in lo as usize..hi as usize {
+                let w = wrow[j];
+                let acc: &mut [f32; TILE] =
+                    (&mut out[j * TILE..(j + 1) * TILE]).try_into().expect("TILE wide");
+                for l in 0..TILE {
+                    acc[l] += x[l] * w;
+                }
+            }
+        }
+    }
+}
+
+/// Batched masked support restricted to output columns `[lo, hi)` —
+/// the tile twin of [`support_span_cols_into`] (spans clipped to the
+/// slice; a gather of slices is bitwise identical to the full tile).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn support_span_cols_tile_into(
+    bj: &[f32], wij: &[f32], index: &BlockIndex, xt: &[f32],
+    lo: usize, hi: usize, out: &mut Vec<f32>,
+) {
+    let n_out = bj.len();
+    debug_assert!(lo <= hi && hi <= n_out);
+    out.clear();
+    out.extend(bj[lo..hi].iter().flat_map(|&b| [b; TILE]));
+    for (i, xrow) in xt.chunks_exact(TILE).enumerate() {
+        let x: &[f32; TILE] = xrow.try_into().expect("chunk is TILE wide");
+        if x.iter().all(|&v| v == 0.0) {
+            continue;
+        }
+        let wrow = &wij[i * n_out..(i + 1) * n_out];
+        for &(slo, shi) in index.row(i) {
+            let jlo = (slo as usize).max(lo);
+            let jhi = (shi as usize).min(hi);
+            for j in jlo..jhi {
+                let w = wrow[j];
+                let base = (j - lo) * TILE;
+                let acc: &mut [f32; TILE] =
+                    (&mut out[base..base + TILE]).try_into().expect("TILE wide");
+                for l in 0..TILE {
+                    acc[l] += x[l] * w;
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic tile-aligned batch splitter: divide `n` items into
+/// contiguous chunks of whole tiles (one per thread, at most
+/// `threads`), run `work(lo, hi)` for each chunk on its own scoped
+/// thread, and return the per-chunk results in submission order.
+/// Returns `None` when only one chunk would run — callers take their
+/// single-threaded path, keeping tile grouping identical to it. This
+/// is the single source of the chunking arithmetic the
+/// bitwise-at-any-thread-count contract rests on
+/// (`LayerGraph::infer_batch_threads` / `accuracy_threads`,
+/// `Network::infer_batch_threads`).
+pub(crate) fn scoped_tile_chunks<R, F>(n: usize, threads: usize, work: F) -> Option<Vec<R>>
+where
+    R: Send,
+    F: Fn(usize, usize) -> R + Sync,
+{
+    let n_tiles = n.div_ceil(TILE);
+    let t = threads.max(1).min(n_tiles.max(1));
+    if t <= 1 {
+        return None;
+    }
+    let chunk = n_tiles.div_ceil(t) * TILE;
+    Some(std::thread::scope(|s| {
+        let work = &work;
+        let handles: Vec<_> = (0..n)
+            .step_by(chunk)
+            .map(|lo| {
+                let hi = (lo + chunk).min(n);
+                s.spawn(move || work(lo, hi))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("batch worker panicked"))
+            .collect()
+    }))
+}
+
+/// Batched dense support (the classifier-head datapath, no mask):
+/// `out[k*TILE + l] = bk[k] + sum_j yt[j*TILE + l] * w[j][k]` — the
+/// tile twin of `Projection::support_dense_into` (no zero-row skip, to
+/// mirror the scalar head loop exactly).
+pub(crate) fn support_dense_tile_into(
+    bk: &[f32], wij: &[f32], yt: &[f32], out: &mut Vec<f32>,
+) {
+    let n_out = bk.len();
+    debug_assert_eq!(yt.len() % TILE, 0);
+    out.clear();
+    out.extend(bk.iter().flat_map(|&b| [b; TILE]));
+    for (j, yrow) in yt.chunks_exact(TILE).enumerate() {
+        let y: &[f32; TILE] = yrow.try_into().expect("chunk is TILE wide");
+        let wrow = &wij[j * n_out..(j + 1) * n_out];
+        for k in 0..n_out {
+            let w = wrow[k];
+            let acc: &mut [f32; TILE] =
+                (&mut out[k * TILE..(k + 1) * TILE]).try_into().expect("TILE wide");
+            for l in 0..TILE {
+                acc[l] += y[l] * w;
+            }
+        }
+    }
+}
+
 // ------------------------------------------------- dense seed kernels
 //
 // The exact loops the seed `Network`/`Projection` ran, preserved as
@@ -461,6 +626,98 @@ mod tests {
         assert_eq!(idx.hc_row(1), &[(0, 4)]);
         assert!(idx.hc_row(2).is_empty());
         assert_eq!(idx.row(2), idx.hc_row(1)); // unit 2 lives in HC 1
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Lane-interleave `lanes` input vectors (shorter tiles padded
+    /// with all-zero lanes, like the production pack helpers).
+    fn pack(xs: &[Vec<f32>], n: usize) -> Vec<f32> {
+        let mut t = vec![0.0f32; n * TILE];
+        for (l, x) in xs.iter().enumerate() {
+            for (i, &v) in x.iter().enumerate() {
+                t[i * TILE + l] = v;
+            }
+        }
+        t
+    }
+
+    fn lane(t: &[f32], l: usize) -> Vec<f32> {
+        t.chunks_exact(TILE).map(|r| r[l]).collect()
+    }
+
+    #[test]
+    fn tile_support_bitwise_matches_scalar_per_lane() {
+        let dims = dims_of("small");
+        let mask = random_mask(&dims, 11);
+        let idx = BlockIndex::from_dims(&mask, &dims);
+        let (n_in, n_out) = (dims.n_in(), dims.n_out());
+        let mut rng = XorShift64::new(99);
+        let bj: Vec<f32> = (0..n_out).map(|_| rng.next_f32() - 0.5).collect();
+        let wij: Vec<f32> = (0..n_in * n_out).map(|_| rng.next_f32() - 0.5).collect();
+        // Ragged tile (5 lanes) with plenty of exact zeros, so the
+        // zero-row skip paths of both kernels are exercised.
+        let xs: Vec<Vec<f32>> = (0..5)
+            .map(|_| {
+                (0..n_in)
+                    .map(|_| if rng.next_f32() < 0.4 { 0.0 } else { rng.next_f32() })
+                    .collect()
+            })
+            .collect();
+        let xt = pack(&xs, n_in);
+        let mut tile_out = Vec::new();
+        support_span_tile_into(&bj, &wij, &idx, &xt, &mut tile_out);
+        for (l, x) in xs.iter().enumerate() {
+            let mut want = Vec::new();
+            support_span_into(&bj, &wij, &idx, x, &mut want);
+            assert_eq!(bits(&lane(&tile_out, l)), bits(&want), "lane {l}");
+        }
+        // Padded lanes only ever see zero inputs: they stay at bj.
+        for l in xs.len()..TILE {
+            assert_eq!(bits(&lane(&tile_out, l)), bits(&bj), "pad lane {l}");
+        }
+        // Column slices: every HC-aligned cut, per lane.
+        for cut in 1..dims.hc_out {
+            let mid = cut * dims.mc_out;
+            let mut tile_lo = Vec::new();
+            support_span_cols_tile_into(&bj, &wij, &idx, &xt, 0, mid, &mut tile_lo);
+            let mut tile_hi = Vec::new();
+            support_span_cols_tile_into(&bj, &wij, &idx, &xt, mid, n_out, &mut tile_hi);
+            for (l, x) in xs.iter().enumerate() {
+                let mut want_lo = Vec::new();
+                support_span_cols_into(&bj, &wij, &idx, x, 0, mid, &mut want_lo);
+                assert_eq!(bits(&lane(&tile_lo, l)), bits(&want_lo), "cut {cut} lane {l}");
+                let mut want_hi = Vec::new();
+                support_span_cols_into(&bj, &wij, &idx, x, mid, n_out, &mut want_hi);
+                assert_eq!(bits(&lane(&tile_hi, l)), bits(&want_hi), "cut {cut} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_dense_support_bitwise_matches_scalar_head_loop() {
+        let (n_in, n_out) = (12usize, 5usize);
+        let mut rng = XorShift64::new(7);
+        let bk: Vec<f32> = (0..n_out).map(|_| rng.next_f32() - 0.5).collect();
+        let w: Vec<f32> = (0..n_in * n_out).map(|_| rng.next_f32() - 0.5).collect();
+        let ys: Vec<Vec<f32>> = (0..TILE)
+            .map(|_| (0..n_in).map(|_| rng.next_f32()).collect())
+            .collect();
+        let yt = pack(&ys, n_in);
+        let mut tile_out = Vec::new();
+        support_dense_tile_into(&bk, &w, &yt, &mut tile_out);
+        for (l, y) in ys.iter().enumerate() {
+            // Scalar head loop verbatim (Projection::support_dense_into).
+            let mut want = bk.clone();
+            for (j, &yj) in y.iter().enumerate() {
+                for k in 0..n_out {
+                    want[k] += yj * w[j * n_out + k];
+                }
+            }
+            assert_eq!(bits(&lane(&tile_out, l)), bits(&want), "lane {l}");
+        }
     }
 
     #[test]

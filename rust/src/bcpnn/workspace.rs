@@ -27,6 +27,13 @@ pub struct Workspace {
     pub(crate) act: [Vec<f32>; 2],
     /// Output probability buffer (n_classes).
     pub(crate) out: Vec<f32>,
+    /// AoSoA encoded-input tile (n_in * TILE) — the batched engine's
+    /// lane-interleaved twin of `x`.
+    pub(crate) xt: Vec<f32>,
+    /// Ping/pong activity tiles (layer fan-out * TILE).
+    pub(crate) act_t: [Vec<f32>; 2],
+    /// Output probability tile (n_classes * TILE).
+    pub(crate) out_t: Vec<f32>,
 }
 
 impl Workspace {
@@ -40,7 +47,11 @@ impl Workspace {
         4 * (self.x.capacity()
             + self.act[0].capacity()
             + self.act[1].capacity()
-            + self.out.capacity())
+            + self.out.capacity()
+            + self.xt.capacity()
+            + self.act_t[0].capacity()
+            + self.act_t[1].capacity()
+            + self.out_t.capacity())
     }
 }
 
@@ -80,6 +91,19 @@ impl BufPool {
     /// Pop a recycled buffer (contents unspecified) or a fresh one.
     pub fn get(&mut self) -> Vec<f32> {
         self.free.pop().unwrap_or_default()
+    }
+
+    /// Pop a recycled buffer resized to exactly `len` and zero-filled.
+    /// [`BufPool::get`] hands back whatever length/contents the last
+    /// user left, which is fine for consumers that fully overwrite —
+    /// but a partial writer (e.g. the hybrid merge worker assembling
+    /// shard slices, on the serving dispatch path) would leak one
+    /// job's stale lanes into the next. Use this at those call sites.
+    pub fn get_cleared(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
     }
 
     /// Return a buffer to the pool (dropped once the pool is full).
@@ -137,5 +161,28 @@ mod tests {
         assert_eq!(ws.heap_bytes(), 0);
         ws.x.resize(10, 0.0);
         assert!(ws.heap_bytes() >= 40);
+        ws.xt.resize(80, 0.0);
+        assert!(ws.heap_bytes() >= 40 + 320);
+    }
+
+    #[test]
+    fn get_cleared_never_leaks_stale_lanes() {
+        // Regression: `get` returns the last user's buffer verbatim —
+        // stale length and contents included. `get_cleared` must hand
+        // back exactly `len` zeros whatever was put.
+        let mut pool = BufPool::new();
+        pool.put(vec![7.0; 64]);
+        let v = pool.get_cleared(16);
+        assert_eq!(v.len(), 16);
+        assert!(v.iter().all(|&x| x == 0.0), "stale contents leaked");
+        pool.put(v);
+        // Growing past the recycled length zero-fills the tail too.
+        let w = pool.get_cleared(32);
+        assert_eq!(w.len(), 32);
+        assert!(w.iter().all(|&x| x == 0.0));
+        // And an empty pool still serves a fresh zeroed buffer.
+        let mut empty = BufPool::new();
+        let f = empty.get_cleared(4);
+        assert_eq!(f, vec![0.0; 4]);
     }
 }

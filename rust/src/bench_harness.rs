@@ -11,26 +11,53 @@ use std::time::{Duration, Instant};
 use crate::util::json::Json;
 
 /// Shared CLI options of the harness-less bench binaries.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct BenchOpts {
     /// Trim to CI smoke length (`--quick`).
     pub quick: bool,
     /// Emit a machine-readable `BENCH_*.json` next to the stdout
     /// tables (`--json`) — the perf-trajectory record.
     pub json: bool,
+    /// Batch-splitter thread count for the threaded bench rows
+    /// (`--threads N`, default `BCPNN_THREADS` else 1). Deterministic:
+    /// the splitter's contiguous chunking makes results bitwise
+    /// identical at any value, so this only moves throughput numbers.
+    pub threads: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { quick: false, json: false, threads: crate::util::threads_from_env() }
+    }
 }
 
 impl BenchOpts {
-    /// Parse `--quick` / `--json` from the process args (other args,
-    /// e.g. cargo-bench's filter, pass through untouched).
+    /// Parse `--quick` / `--json` / `--threads N` from the process
+    /// args (other args, e.g. cargo-bench's filter, pass through
+    /// untouched).
     pub fn from_args() -> BenchOpts {
         let mut o = BenchOpts::default();
-        for a in std::env::args() {
-            match a.as_str() {
+        let argv: Vec<String> = std::env::args().collect();
+        let mut i = 0;
+        while i < argv.len() {
+            match argv[i].as_str() {
                 "--quick" => o.quick = true,
                 "--json" => o.json = true,
-                _ => {}
+                "--threads" => {
+                    if let Some(t) = argv.get(i + 1).and_then(|s| s.parse().ok()) {
+                        o.threads = std::cmp::max(t, 1);
+                        i += 1;
+                    }
+                }
+                s => {
+                    if let Some(v) = s.strip_prefix("--threads=") {
+                        if let Ok(t) = v.parse::<usize>() {
+                            o.threads = t.max(1);
+                        }
+                    }
+                }
             }
+            i += 1;
         }
         o
     }
@@ -45,9 +72,19 @@ pub struct BenchResult {
     pub stddev: Duration,
     pub min: Duration,
     pub max: Duration,
+    /// Batch-splitter thread count the case ran with (1 unless set
+    /// via [`BenchResult::with_threads`]); recorded in the JSON so
+    /// threaded rows in `BENCH_*.json` are self-describing.
+    pub threads: u32,
 }
 
 impl BenchResult {
+    /// Tag the result with the thread count it was measured at.
+    pub fn with_threads(mut self, threads: usize) -> BenchResult {
+        self.threads = threads.max(1) as u32;
+        self
+    }
+
     /// Items/sec given items-per-iteration.
     pub fn throughput(&self, items_per_iter: u64) -> f64 {
         items_per_iter as f64 / self.mean.as_secs_f64().max(1e-12)
@@ -69,6 +106,7 @@ impl BenchResult {
         Json::obj(vec![
             ("name", Json::from(self.name.as_str())),
             ("iters", Json::from(self.iters as usize)),
+            ("threads", Json::from(self.threads as usize)),
             ("mean_ns", Json::from(self.mean.as_nanos() as f64)),
             ("stddev_ns", Json::from(self.stddev.as_nanos() as f64)),
             ("min_ns", Json::from(self.min.as_nanos() as f64)),
@@ -155,6 +193,7 @@ fn summarize(name: &str, samples: &[Duration]) -> BenchResult {
         stddev: Duration::from_secs_f64(var.sqrt()),
         min: *samples.iter().min().unwrap(),
         max: *samples.iter().max().unwrap(),
+        threads: 1,
     }
 }
 
@@ -204,10 +243,12 @@ mod tests {
     #[test]
     fn result_json_roundtrips() {
         let r = bench("json-check", 0, 2, || {});
-        let j = r.to_json().to_string();
+        assert_eq!(r.threads, 1);
+        let j = r.with_threads(4).to_json().to_string();
         let back = Json::parse(&j).unwrap();
         assert_eq!(back.req("name").unwrap().as_str().unwrap(), "json-check");
         assert_eq!(back.req("iters").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(back.req("threads").unwrap().as_usize().unwrap(), 4);
         assert!(back.req("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
     }
 

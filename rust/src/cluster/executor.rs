@@ -4,25 +4,28 @@
 //! Since the placement unification this is a thin wrapper: a
 //! [`PartitionPlan`] is the degenerate hybrid plan *1 stage × N
 //! shards* ([`placement::from_partition`](super::placement::from_partition)),
-//! and the actual dataflow — input broadcast, per-shard masked support
-//! slice + shard-local softmax, gather/merge, output projection — runs
-//! on [`HybridExecutor`]. The execution model per image is unchanged
-//! (the multi-device version of the paper's Fig. 2 stream pipeline):
+//! and the actual dataflow — input-tile broadcast, per-shard masked
+//! support slice + shard-local softmax, gather/merge, output
+//! projection — runs on [`HybridExecutor`]. The execution model (the
+//! multi-device version of the paper's Fig. 2 stream pipeline) moves
+//! one AoSoA image tile per job:
 //!
 //! ```text
-//!            broadcast x            gather y-slices
-//! input ---> [shard 0: support(cols) -> hc softmax] ---> merge -> output
-//!       \--> [shard 1: support(cols) -> hc softmax] --/    softmax
-//!        `-> [shard k: ...                        ] -/
+//!            broadcast xt           gather y-tile slices
+//! tile  ---> [shard 0: tile support(cols) -> softmax] ---> merge -> output
+//!       \--> [shard 1: tile support(cols) -> softmax] --/    softmax
+//!        `-> [shard k: ...                          ] -/
 //! ```
 //!
 //! Numerics: the shard slices keep the exact accumulation order of the
-//! single-device reference, so sharded inference stays **bitwise
-//! identical** to [`Network::infer`] — pinned by `rust/tests/cluster.rs`.
-//! The per-shard compute runs the block-sparse active-synapse kernels
-//! (`Projection::support_cols_into`) with slice buffers recycled
-//! through the hybrid engine's merge->shard return streams, so
-//! steady-state shard workers allocate nothing per job.
+//! single-device reference and tile lanes are private, so sharded
+//! inference stays **bitwise identical** to [`Network::infer`] —
+//! pinned by `rust/tests/cluster.rs`. The per-shard compute runs the
+//! batched block-sparse tile kernels
+//! (`Projection::support_cols_tile_into` — one weight stream per TILE
+//! images) with slice buffers recycled through the hybrid engine's
+//! merge->shard return streams, so steady-state shard workers allocate
+//! nothing per job.
 //!
 //! Failure model: [`ShardedExecutor::fail_shard`] simulates losing a
 //! device. Every stream closes, all in-flight and future `infer_batch`
@@ -210,10 +213,11 @@ mod tests {
     fn queue_stats_visible() {
         let e = exec(2);
         let img = vec![0.25; e.cfg().hc_in()];
+        // Transport is per AoSoA tile: 2 images pack into one job.
         e.infer_batch(&[img.clone(), img]).unwrap();
         for s in e.shard_queue_stats() {
-            assert_eq!(s.pushes, 2);
-            assert_eq!(s.pops, 2);
+            assert_eq!(s.pushes, 1);
+            assert_eq!(s.pops, 1);
         }
     }
 }

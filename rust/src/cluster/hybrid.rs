@@ -2,31 +2,36 @@
 //! [`HybridPlan`] — per-stage FIFO chaining *and* intra-stage shard
 //! fan-out/merge in one engine.
 //!
-//! Execution model per image:
+//! Execution model per **image tile** (the transport unit is an AoSoA
+//! tile of up to [`TILE`] lane-interleaved images, so every worker
+//! loads each weight span once per tile instead of once per image):
 //!
 //! ```text
 //!          stage 0 (sharded)                stage 1 (co-located)
-//!        /-> [shard 0: support cols ----\
-//! input ---> [shard 1:  + HC softmax] --+-> merge -> [layers l..m
-//!        \-> [shard k: ...           ]--/             (+ head)]  -> out
+//!        /-> [shard 0: tile support cols --\
+//! tile  ---> [shard 1:  + HC lane softmax]-+-> merge -> [layers l..m
+//!        \-> [shard k: ...               ]-/             (+ head)] -> out tile
 //! ```
 //!
 //! Consecutive stages are chained by bounded [`Fifo`]s (the
 //! inter-device activity streams). A sharded stage broadcasts its
-//! input to every shard's queue, each shard computes its hypercolumn
-//! slice with [`Projection::support_cols`] plus the *shard-local*
-//! per-HC softmax, and a merge worker reassembles the activity (and
-//! runs the classifier head when the stage is last). A co-located
-//! stage runs its consecutive layers in sequence on one worker. Every
-//! FIFO holds a full batch, so one send+drain round can never deadlock
+//! input tile to every shard's queue, each shard computes its
+//! hypercolumn slice with [`Projection::support_cols_tile_into`] plus
+//! the *shard-local* per-HC lane softmax, and a merge worker
+//! reassembles the activity tile (and runs the classifier head when
+//! the stage is last). A co-located stage runs its consecutive layers
+//! in sequence on one worker, on tiles. Every FIFO holds a full
+//! batch's worth of tiles, so one send+drain round can never deadlock
 //! — the same sizing argument both legacy executors made.
 //!
-//! Numerics: shard slices keep the reference accumulation order, so
+//! Numerics: shard slices keep the reference accumulation order and
+//! tile lanes are private (see `bcpnn::sparse` tile-kernel docs), so
 //! hybrid inference is **bitwise identical** to [`LayerGraph::infer`]
-//! for every plan shape — pinned across the whole config registry by
-//! `rust/tests/hybrid.rs`. `ShardedExecutor` and
-//! `PipelineParallelExecutor` are now thin wrappers over this engine
-//! with degenerate plans (1 stage × N shards, N stages × 1 shard).
+//! for every plan shape and batch shape (ragged tail tiles included) —
+//! pinned across the whole config registry by `rust/tests/hybrid.rs`.
+//! `ShardedExecutor` and `PipelineParallelExecutor` are now thin
+//! wrappers over this engine with degenerate plans (1 stage × N
+//! shards, N stages × 1 shard).
 //!
 //! Failure model: losing any placed device leaves the chain useless,
 //! so [`HybridExecutor::fail_device`] closes every stream — workers
@@ -39,23 +44,29 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::bcpnn::sparse::TILE;
 use crate::bcpnn::{BufPool, LayerGraph, Network};
 use crate::coordinator::server::InferBackend;
-use crate::data::encode::encode_image;
+use crate::data::encode::{encode_images_tile_into, unpack_lane};
 use crate::stream::fifo::{Fifo, FifoStatsSnapshot};
 
 use super::placement::HybridPlan;
 
-/// One image's activity flowing between stages (shared for broadcast).
+/// One image tile's activity flowing between stages (shared for
+/// broadcast): `y` is an AoSoA buffer (`n * TILE`), `lanes` of whose
+/// lanes carry real images (ragged tail tiles pad the rest).
 struct StageJob {
     seq: u64,
+    lanes: usize,
     y: Arc<Vec<f32>>,
 }
 
-/// One shard's activity slice headed for its stage's merge worker.
+/// One shard's activity-tile slice headed for its stage's merge
+/// worker.
 struct SliceJob {
     seq: u64,
     shard: usize,
+    lanes: usize,
     y: Vec<f32>,
 }
 
@@ -68,7 +79,8 @@ pub struct WorkerReport {
     pub stage: usize,
     /// Shard index within the stage (0 for a co-located stage worker).
     pub shard: usize,
-    /// Images processed by this worker.
+    /// Images processed by this worker (the sum of real lanes over
+    /// the tiles it computed).
     pub items: u64,
     /// Time spent computing.
     pub busy: Duration,
@@ -94,11 +106,13 @@ pub struct HybridExecutor {
     io_lock: Mutex<()>,
 }
 
-/// Send one job to every queue of the next hop. Err = downstream
+/// Send one tile job to every queue of the next hop. Err = downstream
 /// closed (failure/shutdown).
-fn broadcast(outs: &[Fifo<StageJob>], seq: u64, y: Arc<Vec<f32>>) -> Result<(), ()> {
+fn broadcast(
+    outs: &[Fifo<StageJob>], seq: u64, lanes: usize, y: Arc<Vec<f32>>,
+) -> Result<(), ()> {
     for o in outs {
-        if o.send(StageJob { seq, y: y.clone() }).is_err() {
+        if o.send(StageJob { seq, lanes, y: y.clone() }).is_err() {
             return Err(());
         }
     }
@@ -118,22 +132,26 @@ impl HybridExecutor {
         let graph = Arc::new(graph);
         let n_stages = plan.stages.len();
         let batch = graph.cfg.batch.max(1);
+        // Transport is per tile: one dispatch round moves at most
+        // `tiles` jobs per queue, so tile-sized capacities keep the
+        // full-round no-deadlock argument.
+        let tiles = batch.div_ceil(TILE).max(1);
 
         let stage_inputs: Vec<Vec<Fifo<StageJob>>> = plan
             .stages
             .iter()
             .map(|st| {
                 let n = if st.sharded() { st.pieces.len() } else { 1 };
-                (0..n).map(|_| Fifo::with_capacity(batch)).collect()
+                (0..n).map(|_| Fifo::with_capacity(tiles)).collect()
             })
             .collect();
-        let result: Fifo<StageJob> = Fifo::with_capacity(batch);
+        let result: Fifo<StageJob> = Fifo::with_capacity(tiles);
         let merges: Vec<Option<Fifo<SliceJob>>> = plan
             .stages
             .iter()
             .map(|st| {
                 st.sharded()
-                    .then(|| Fifo::with_capacity(batch * st.pieces.len()))
+                    .then(|| Fifo::with_capacity(tiles * st.pieces.len()))
             })
             .collect();
 
@@ -152,14 +170,15 @@ impl HybridExecutor {
                 // Slice buffers circulate shard -> merge -> back: the
                 // merge worker returns each drained slice vec through
                 // its shard's recycle stream, so steady-state shard
-                // compute allocates nothing per job. Capacity `batch`
+                // compute allocates nothing per job. Capacity `tiles`
                 // bounds the buffers in existence per shard (at most
-                // one per in-flight image), so the return send never
+                // one per in-flight tile), so the return send never
                 // blocks.
                 let recycles: Vec<Fifo<Vec<f32>>> = (0..st.pieces.len())
-                    .map(|_| Fifo::with_capacity(batch))
+                    .map(|_| Fifo::with_capacity(tiles))
                     .collect();
-                // Shard compute workers.
+                // Shard compute workers: one tile span-walk per job —
+                // each weight span streams once per TILE lanes.
                 for (k, p) in st.pieces.iter().enumerate() {
                     let g = graph.clone();
                     let rx = stage_inputs[si][k].clone();
@@ -174,11 +193,13 @@ impl HybridExecutor {
                         while let Ok(job) = rx.recv() {
                             let t0 = Instant::now();
                             let mut y = recycle.try_recv().unwrap_or_default();
-                            proj.support_cols_into(&job.y, unit_lo, unit_hi, &mut y);
-                            Network::hc_softmax(&mut y, n_hc, mc, gain);
+                            proj.support_cols_tile_into(&job.y, unit_lo, unit_hi, &mut y);
+                            Network::hc_softmax_tile(&mut y, n_hc, mc, gain);
                             busy += t0.elapsed();
-                            items += 1;
-                            if tx.send(SliceJob { seq: job.seq, shard: k, y }).is_err() {
+                            items += job.lanes as u64;
+                            let sj =
+                                SliceJob { seq: job.seq, shard: k, lanes: job.lanes, y };
+                            if tx.send(sj).is_err() {
                                 break; // merge closed: failed/shut down
                             }
                         }
@@ -205,37 +226,41 @@ impl HybridExecutor {
                 let n_units = ranges.last().map(|&(_, hi)| hi).unwrap_or(0);
                 plumbers.push(thread::spawn(move || {
                     let mut pending: HashMap<u64, (usize, Vec<f32>)> = HashMap::new();
-                    // Up to `batch` assembly buffers can drain back in
+                    // Up to `tiles` assembly buffers can drain back in
                     // one round; retain them all.
-                    let mut pool = BufPool::with_max(batch.max(BufPool::MAX));
+                    let mut pool = BufPool::with_max(tiles.max(BufPool::MAX));
                     while let Ok(sj) = merge.recv() {
                         let filled = {
+                            // The assembly tile is written slice by
+                            // slice: zero it on checkout so a recycled
+                            // buffer can't leak a previous tile's
+                            // lanes into the gaps.
                             let entry = pending.entry(sj.seq).or_insert_with(|| {
-                                let mut buf = pool.get();
-                                buf.clear();
-                                buf.resize(n_units, 0.0);
-                                (0, buf)
+                                (0, pool.get_cleared(n_units * TILE))
                             });
                             let (lo, hi) = ranges[sj.shard];
-                            entry.1[lo..hi].copy_from_slice(&sj.y);
+                            entry.1[lo * TILE..hi * TILE].copy_from_slice(&sj.y);
                             entry.0 += 1;
                             entry.0 == n_shards
                         };
                         // Return the drained slice buffer to its shard
                         // (dropped if the recycle stream is gone).
+                        let lanes = sj.lanes;
                         let _ = recycles[sj.shard].send(sj.y);
                         if filled {
                             let (_, mut y) =
                                 pending.remove(&sj.seq).expect("entry just filled");
                             if last {
-                                // Results go back to the caller:
+                                // Result tiles go back to the caller:
                                 // exact-sized allocation, and the
                                 // assembly buffer returns to the pool.
-                                let out = g.head.activate_dense(&y);
+                                let mut out = Vec::new();
+                                g.head.activate_dense_tile_into(&y, &mut out);
                                 pool.put(y);
                                 y = out;
                             }
-                            if broadcast(&downstream, sj.seq, Arc::new(y)).is_err() {
+                            if broadcast(&downstream, sj.seq, lanes, Arc::new(y)).is_err()
+                            {
                                 break;
                             }
                         }
@@ -243,9 +268,10 @@ impl HybridExecutor {
                 }));
             } else {
                 // One worker runs the stage's consecutive layers (and
-                // the head when last) on its single device, ping-pong
-                // buffering layer activities through a local pool and
-                // reclaiming sole-owner input payloads into it.
+                // the head when last) on its single device, on whole
+                // tiles — ping-pong buffering activity tiles through a
+                // local pool and reclaiming sole-owner input payloads
+                // into it.
                 let g = graph.clone();
                 let rx = stage_inputs[si][0].clone();
                 let (lo, hi) = (st.layer_lo, st.layer_hi);
@@ -253,32 +279,33 @@ impl HybridExecutor {
                     let start = Instant::now();
                     let (mut items, mut busy) = (0u64, Duration::ZERO);
                     let gain = g.cfg.gain;
-                    let mut pool = BufPool::with_max(batch.max(BufPool::MAX));
+                    let mut pool = BufPool::with_max(tiles.max(BufPool::MAX));
                     while let Ok(job) = rx.recv() {
-                        let seq = job.seq;
+                        let (seq, lanes) = (job.seq, job.lanes);
                         let t0 = Instant::now();
                         let mut y = pool.get();
-                        g.layers[lo].activate_masked_into(&job.y, gain, &mut y);
+                        g.layers[lo].activate_masked_tile_into(&job.y, gain, &mut y);
                         if let Ok(v) = Arc::try_unwrap(job.y) {
                             pool.put(v); // sole consumer: reclaim transport buffer
                         }
                         for l in lo + 1..hi {
                             let mut next = pool.get();
-                            g.layers[l].activate_masked_into(&y, gain, &mut next);
+                            g.layers[l].activate_masked_tile_into(&y, gain, &mut next);
                             pool.put(y);
                             y = next;
                         }
                         if last {
-                            // Results go back to the caller:
+                            // Result tiles go back to the caller:
                             // exact-sized allocation, spent activity
-                            // buffer returns to the pool.
-                            let out = g.head.activate_dense(&y);
+                            // tile returns to the pool.
+                            let mut out = Vec::new();
+                            g.head.activate_dense_tile_into(&y, &mut out);
                             pool.put(y);
                             y = out;
                         }
                         busy += t0.elapsed();
-                        items += 1;
-                        if broadcast(&downstream, seq, Arc::new(y)).is_err() {
+                        items += lanes as u64;
+                        if broadcast(&downstream, seq, lanes, Arc::new(y)).is_err() {
                             break;
                         }
                     }
@@ -368,24 +395,33 @@ impl HybridExecutor {
         Ok(out)
     }
 
-    /// One send+drain round for at most `batch` images.
+    /// One send+drain round for at most `batch` images, dispatched as
+    /// AoSoA tiles of up to [`TILE`] lane-interleaved images (the
+    /// serving batch loop's `collect_batch` output lands here whole).
     fn infer_chunk(&self, imgs: &[Vec<f32>], out: &mut Vec<Vec<f32>>) -> Result<()> {
-        for (k, img) in imgs.iter().enumerate() {
-            let x = Arc::new(encode_image(img));
-            if broadcast(&self.stage_inputs[0], k as u64, x).is_err() {
+        let n_tiles = imgs.len().div_ceil(TILE);
+        for (t, tile_imgs) in imgs.chunks(TILE).enumerate() {
+            let mut xt = Vec::new();
+            encode_images_tile_into(tile_imgs, &mut xt);
+            if broadcast(&self.stage_inputs[0], t as u64, tile_imgs.len(), Arc::new(xt))
+                .is_err()
+            {
                 bail!("stage stream closed (simulated device failure)");
             }
         }
-        let mut probs = vec![Vec::new(); imgs.len()];
-        for _ in 0..imgs.len() {
+        let mut tiles: Vec<(usize, Arc<Vec<f32>>)> = vec![(0, Arc::new(Vec::new())); n_tiles];
+        for _ in 0..n_tiles {
             let job = self
                 .result
                 .recv()
                 .map_err(|_| anyhow!("result stream closed (simulated device failure)"))?;
-            probs[job.seq as usize] =
-                Arc::try_unwrap(job.y).unwrap_or_else(|shared| (*shared).clone());
+            tiles[job.seq as usize] = (job.lanes, job.y);
         }
-        out.extend(probs);
+        for (lanes, y) in tiles {
+            for lane in 0..lanes {
+                out.push(unpack_lane(&y, lane));
+            }
+        }
         Ok(())
     }
 
@@ -515,13 +551,38 @@ mod tests {
     fn queue_stats_visible_per_stage_and_shard() {
         let e = exec_for("toy-deep", 3);
         let img = vec![0.25; e.graph().cfg.hc_in()];
+        // Transport is per tile: 2 images pack into one AoSoA tile, so
+        // every stage queue sees exactly one job; worker item counts
+        // still tally images (lanes).
         e.infer_batch(&[img.clone(), img]).unwrap();
         for (si, stage) in e.stage_input_stats().iter().enumerate() {
             assert!(!stage.is_empty());
             for s in stage {
-                assert_eq!(s.pushes, 2, "stage {si}");
-                assert_eq!(s.pops, 2, "stage {si}");
+                assert_eq!(s.pushes, 1, "stage {si}");
+                assert_eq!(s.pops, 1, "stage {si}");
             }
+        }
+        let reports = e.shutdown();
+        assert!(reports.iter().all(|r| r.items == 2), "{reports:?}");
+    }
+
+    #[test]
+    fn multi_tile_ragged_batch_bitwise_matches_reference() {
+        // TILE+3 images: one full tile + a ragged 3-lane tail through
+        // a sharded plan — per-image bits must equal LayerGraph::infer.
+        let cfg = by_name("tiny").unwrap();
+        let g = LayerGraph::new(cfg.clone(), 23);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, TILE + 3, 5, 0.15);
+        let fleet = Fleet::homogeneous(&FpgaDevice::u55c(), 3);
+        let plan = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1).unwrap();
+        let e = HybridExecutor::new(g.clone(), &plan).unwrap();
+        let probs = e.infer_batch(&d.images).unwrap();
+        assert_eq!(probs.len(), d.images.len());
+        for (i, (got, img)) in probs.iter().zip(&d.images).enumerate() {
+            let want = g.infer(img);
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "image {i}");
         }
     }
 }

@@ -191,10 +191,11 @@ mod tests {
     fn queue_stats_visible() {
         let e = exec();
         let img = vec![0.25; e.graph().cfg.hc_in()];
+        // Transport is per AoSoA tile: 2 images pack into one job.
         e.infer_batch(&[img.clone(), img]).unwrap();
         for s in e.stage_queue_stats() {
-            assert_eq!(s.pushes, 2);
-            assert_eq!(s.pops, 2);
+            assert_eq!(s.pushes, 1);
+            assert_eq!(s.pops, 1);
         }
     }
 }

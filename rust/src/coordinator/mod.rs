@@ -11,4 +11,4 @@ pub use driver::{
     Driver, GraphDriver, GraphTrainOutcome, LayerPhaseStats, TrainOptions, TrainOutcome,
 };
 pub use metrics::{EnergyReport, LatencyStats, Recorder};
-pub use server::{InferBackend, InferenceServer, ServerConfig, ServerReport};
+pub use server::{GraphBackend, InferBackend, InferenceServer, ServerConfig, ServerReport};

@@ -14,12 +14,13 @@
 //! multi-device one, and tests plug in mocks to pin the batching
 //! semantics (see `rust/tests/serving_batching.rs`).
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::bcpnn::{LayerGraph, Workspace};
 use crate::stream::fifo::Fifo;
 
 use super::driver::Driver;
@@ -36,6 +37,12 @@ pub trait InferBackend {
 
     /// Class probabilities for up to `max_batch` images.
     fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+
+    /// Host-splitter thread count this backend spreads a batch across
+    /// (1 = single-threaded; surfaced in the serving metrics).
+    fn threads(&self) -> usize {
+        1
+    }
 }
 
 impl InferBackend for Driver {
@@ -45,6 +52,67 @@ impl InferBackend for Driver {
 
     fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         Driver::infer_batch(self, images)
+    }
+}
+
+/// Pure-host serving backend: a [`LayerGraph`] driven through the
+/// batched AoSoA tile engine, with the collected batch split across
+/// `threads` by the deterministic contiguous-chunk splitter
+/// ([`LayerGraph::infer_batch_threads`]) — responses are bitwise
+/// identical at any thread count. This is the no-artifact edge path:
+/// `repro serve --host` runs it, and it is the simplest way to see the
+/// dynamic batcher (`collect_batch`) feed whole batches to the tile
+/// kernels.
+pub struct GraphBackend {
+    graph: LayerGraph,
+    threads: usize,
+    /// Tile workspace reused across dispatch rounds on the
+    /// single-threaded (default) path, so the serving batch loop stays
+    /// zero-allocation in steady state. (The threaded splitter warms
+    /// one workspace per chunk instead — `infer_batch` takes `&self`,
+    /// hence the mutex; the server drives one dispatch at a time, so
+    /// it is never contended.)
+    ws: Mutex<Workspace>,
+}
+
+impl GraphBackend {
+    /// `threads = 1` keeps the dispatch single-threaded (default
+    /// serving behavior; existing latency pins unaffected).
+    pub fn new(graph: LayerGraph, threads: usize) -> GraphBackend {
+        GraphBackend { graph, threads: threads.max(1), ws: Mutex::new(Workspace::new()) }
+    }
+
+    pub fn graph(&self) -> &LayerGraph {
+        &self.graph
+    }
+}
+
+impl InferBackend for GraphBackend {
+    fn max_batch(&self) -> usize {
+        self.graph.cfg.batch
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let hc_in = self.graph.cfg.hc_in();
+        for (i, img) in images.iter().enumerate() {
+            if img.len() != hc_in {
+                bail!(
+                    "image {i} has {} pixels, config {:?} expects {hc_in}",
+                    img.len(),
+                    self.graph.cfg.name
+                );
+            }
+        }
+        if self.threads <= 1 {
+            let mut ws = self.ws.lock().unwrap();
+            Ok(self.graph.infer_batch_with(images, &mut ws))
+        } else {
+            Ok(self.graph.infer_batch_threads(images, self.threads))
+        }
     }
 }
 
@@ -82,6 +150,8 @@ pub struct ServerReport {
     pub mean_fill: f64,
     /// End-to-end request latency (enqueue -> response ready).
     pub latency: LatencyStats,
+    /// Host-splitter thread count of the backend (1 = single-threaded).
+    pub threads: usize,
 }
 
 /// Greedily fill a batch: `first` was already popped by a blocking
@@ -143,10 +213,12 @@ impl InferenceServer {
                         batches: 0,
                         mean_fill: 0.0,
                         latency: Recorder::new().stats(),
+                        threads: 1,
                     };
                 }
             };
             let max_batch = backend.max_batch();
+            let threads = backend.threads();
             let mut rec = Recorder::new();
             let mut served = 0u64;
             let mut batches = 0u64;
@@ -182,6 +254,7 @@ impl InferenceServer {
                 batches,
                 mean_fill: fills as f64 / batches.max(1) as f64,
                 latency: rec.stats(),
+                threads,
             }
         });
         match ready_rx.recv() {

@@ -40,6 +40,92 @@ pub fn encode_image_in_place(buf: &mut Vec<f32>) {
     }
 }
 
+// ------------------------------------------------- AoSoA image tiles
+//
+// Lane-interleaved tile layout for the batched span kernels: element
+// `i` of lane `l` lives at `tile[i * TILE + l]`, so one weight load
+// serves all lanes. Shorter (ragged-tail) tiles pad the unused lanes
+// with zeros — the kernels' lane-private accumulators never mix
+// lanes, so pads cannot perturb real images. The width constant lives
+// here with the layout; `bcpnn::sparse` re-exports it next to the
+// kernels that consume it.
+
+/// Images per AoSoA tile: the lane count of the batched span kernels
+/// (8 f32 lanes = one AVX2 vector; fixed-size `[f32; TILE]`
+/// accumulators autovectorize on stable rust).
+pub const TILE: usize = 8;
+
+/// Lane-interleave up to [`TILE`] equal-length vectors into `out`
+/// (AoSoA pack). Unused lanes are zero-filled.
+pub fn pack_tile(lanes: &[Vec<f32>], out: &mut Vec<f32>) {
+    assert!(!lanes.is_empty() && lanes.len() <= TILE, "1..=TILE lanes");
+    let n = lanes[0].len();
+    out.clear();
+    out.resize(n * TILE, 0.0);
+    for (l, src) in lanes.iter().enumerate() {
+        debug_assert_eq!(src.len(), n, "tile lanes must be equal length");
+        for (i, &v) in src.iter().enumerate() {
+            out[i * TILE + l] = v;
+        }
+    }
+}
+
+/// Extract lane `lane` of an AoSoA tile into `out`.
+pub fn unpack_lane_into(tile: &[f32], lane: usize, out: &mut Vec<f32>) {
+    debug_assert!(lane < TILE);
+    out.clear();
+    out.extend(tile.chunks_exact(TILE).map(|row| row[lane]));
+}
+
+/// Allocating wrapper over [`unpack_lane_into`] (exact-sized — tile
+/// results handed to callers carry no tile-width capacity).
+pub fn unpack_lane(tile: &[f32], lane: usize) -> Vec<f32> {
+    let mut v = Vec::with_capacity(tile.len() / TILE);
+    v.extend(tile.chunks_exact(TILE).map(|row| row[lane]));
+    v
+}
+
+/// Encode up to [`TILE`] images straight into AoSoA layout: lane `l`
+/// of `out` is bitwise [`encode_image`]`(&imgs[l])`; unused lanes of a
+/// ragged tail are zero-filled (both minicolumn slots), so all-zero
+/// rows still skip in the span kernels.
+pub fn encode_images_tile_into(imgs: &[Vec<f32>], out: &mut Vec<f32>) {
+    assert!(!imgs.is_empty() && imgs.len() <= TILE, "1..=TILE images per tile");
+    let n_px = imgs[0].len();
+    out.clear();
+    out.resize(2 * n_px * TILE, 0.0);
+    for (l, img) in imgs.iter().enumerate() {
+        debug_assert_eq!(img.len(), n_px, "tile images must be equal size");
+        for (p, &pix) in img.iter().enumerate() {
+            let v = pix.clamp(0.0, 1.0);
+            out[(2 * p) * TILE + l] = v;
+            out[(2 * p + 1) * TILE + l] = 1.0 - v;
+        }
+    }
+}
+
+/// [`encode_images_tile_into`] expanding a *packed pixel tile* in
+/// place — the streaming tile-encode stage keeps one buffer per tile
+/// end to end (the `n*TILE -> 2n*TILE` growth still reallocates when
+/// the tile arrives capacity-exact). Walks pixel rows backwards so
+/// every row is read before its slot pair is written; each lane's
+/// values are bitwise those of [`encode_image`]. Note: pad lanes of a
+/// ragged tile encode their zero pixels to `(0, 1)` pairs here (they
+/// entered the pack as pixels), unlike [`encode_images_tile_into`]'s
+/// all-zero pads — both are lane-private and discarded at unpack.
+pub fn encode_tile_in_place(buf: &mut Vec<f32>) {
+    debug_assert_eq!(buf.len() % TILE, 0);
+    let n = buf.len() / TILE;
+    buf.resize(2 * n * TILE, 0.0);
+    for i in (0..n).rev() {
+        for l in (0..TILE).rev() {
+            let v = buf[i * TILE + l].clamp(0.0, 1.0);
+            buf[(2 * i) * TILE + l] = v;
+            buf[(2 * i + 1) * TILE + l] = 1.0 - v;
+        }
+    }
+}
+
 /// One-hot label vector of length `n`.
 pub fn one_hot(label: usize, n: usize) -> Vec<f32> {
     let mut v = vec![0.0; n];
@@ -88,6 +174,88 @@ mod tests {
     fn encode_clips() {
         let x = encode_image(&[-1.0, 2.0]);
         assert_eq!(x, vec![0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn encode_in_place_handles_empty_input() {
+        // Zero-pixel image: stays empty, no panic (the streaming
+        // encode stage can see empty payloads on shutdown drains).
+        let mut buf: Vec<f32> = Vec::new();
+        encode_image_in_place(&mut buf);
+        assert!(buf.is_empty());
+        assert_eq!(encode_image(&[]), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn encode_in_place_is_shape_agnostic() {
+        // The encoder is per-pixel: a non-square pixel count (e.g. a
+        // 3x5 crop flattened to 15) encodes exactly like any other
+        // buffer of the same values — no squareness assumption.
+        let img: Vec<f32> = (0..15).map(|i| i as f32 / 14.0).collect();
+        let mut buf = img.clone();
+        encode_image_in_place(&mut buf);
+        assert_eq!(buf.len(), 30);
+        let want = encode_image(&img);
+        assert_eq!(
+            buf.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn tile_encode_lanes_bitwise_match_scalar_encode() {
+        let imgs: Vec<Vec<f32>> = (0..5)
+            .map(|k| (0..7).map(|i| (k * 7 + i) as f32 / 40.0 - 0.1).collect())
+            .collect();
+        let mut t = Vec::new();
+        encode_images_tile_into(&imgs, &mut t);
+        assert_eq!(t.len(), 14 * TILE);
+        for (l, img) in imgs.iter().enumerate() {
+            let want = encode_image(img);
+            let got = unpack_lane(&t, l);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "lane {l}"
+            );
+        }
+        // Ragged pad lanes are all-zero (both slots), so all-lane-zero
+        // rows still skip in the span kernels.
+        for l in imgs.len()..TILE {
+            assert!(unpack_lane(&t, l).iter().all(|&v| v == 0.0), "pad lane {l}");
+        }
+    }
+
+    #[test]
+    fn tile_in_place_encode_matches_tile_encode_on_real_lanes() {
+        let imgs: Vec<Vec<f32>> = (0..3)
+            .map(|k| vec![0.1 * k as f32, -0.5, 1.5, 0.66])
+            .collect();
+        let mut packed = Vec::new();
+        pack_tile(&imgs, &mut packed);
+        encode_tile_in_place(&mut packed);
+        let mut want = Vec::new();
+        encode_images_tile_into(&imgs, &mut want);
+        for l in 0..imgs.len() {
+            assert_eq!(
+                unpack_lane(&packed, l),
+                unpack_lane(&want, l),
+                "lane {l}"
+            );
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_with_ragged_lanes() {
+        let lanes: Vec<Vec<f32>> = vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]];
+        let mut t = Vec::new();
+        pack_tile(&lanes, &mut t);
+        assert_eq!(t.len(), 3 * TILE);
+        assert_eq!(unpack_lane(&t, 0), lanes[0]);
+        let mut buf = vec![9.0; 99];
+        unpack_lane_into(&t, 1, &mut buf);
+        assert_eq!(buf, lanes[1]);
+        assert_eq!(unpack_lane(&t, 5), vec![0.0; 3]); // pad lane
     }
 
     #[test]

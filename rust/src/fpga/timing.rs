@@ -65,6 +65,47 @@ pub fn active_synapses(cfg: &ModelConfig) -> u64 {
     cfg.nact_hi as u64 * cfg.mc_in as u64 * cfg.n_h() as u64
 }
 
+// ------------------------------------------------ host batched-tile model
+//
+// First-order roofline of the host's batched AoSoA span engine
+// (`bcpnn::sparse::*_tile`), for comparing host tiles against the
+// modeled device streams in `repro plan` / `repro bench`. The host
+// support walk streams every active weight from DRAM (the spans far
+// exceed L2 for the paper models); at tile width 1 each weight load
+// feeds one mul+add, so throughput pins to the memory wall. A tile of
+// `t` lane-interleaved images feeds `t` mul+adds per load, raising the
+// bound until the core's vector FLOPs cap it; the thread splitter then
+// scales the compute bound (bandwidth is socket-shared and does not
+// scale with threads in this model).
+
+/// Modeled sustained host weight-stream bandwidth, bytes/s (one core
+/// streaming sequential f32 spans from DRAM; DESIGN.md §3.2).
+pub const HOST_STREAM_BYTES_S: f64 = 16e9;
+
+/// Modeled per-core mul+add throughput of the autovectorized 8-lane
+/// f32 span kernel, flops/s (8 lanes x 2 ops x ~3 GHz).
+pub const HOST_CORE_FLOPS_S: f64 = 48e9;
+
+/// Active MACs streamed per image across the whole stack (every hidden
+/// projection's active synapses plus the classifier head).
+pub fn stack_active_macs(cfg: &ModelConfig) -> u64 {
+    let dims = cfg.layer_dims();
+    let head = dims.last().map(|d| d.n_out() as u64 * cfg.n_out() as u64).unwrap_or(0);
+    dims.iter().map(LayerDims::active_synapses).sum::<u64>() + head
+}
+
+/// Modeled host batched-tile inference throughput, images/s:
+/// `1 / max(bandwidth_bound / tile, compute_bound / threads)` over the
+/// stack's active MACs. `tile = 1, threads = 1` models the
+/// single-image span engine; `tile = TILE` the AoSoA kernels; larger
+/// `threads` the `std::thread::scope` batch splitter.
+pub fn host_tile_img_s(cfg: &ModelConfig, tile: usize, threads: usize) -> f64 {
+    let macs = stack_active_macs(cfg) as f64;
+    let t_bw = 4.0 * macs / (tile.max(1) as f64) / HOST_STREAM_BYTES_S;
+    let t_fl = 2.0 * macs / (HOST_CORE_FLOPS_S * threads.max(1) as f64);
+    1.0 / t_bw.max(t_fl)
+}
+
 /// Host-side per-invocation overhead: XRT dispatch + DMA of the image
 /// (hc_in floats) and the support/activity readback (n_h floats).
 /// Coefficients calibrated to Table 2 (DESIGN.md §Perf).
@@ -317,6 +358,28 @@ mod tests {
         // least as fast there.
         let t_280 = layer_kernel_s(&full, 0, KernelVersion::Infer, &FpgaDevice::u280());
         assert!(t_280 <= t_full, "{t_280} vs {t_full}");
+    }
+
+    #[test]
+    fn host_tile_model_rooflines() {
+        let cfg = by_name("mnist-deep2").unwrap();
+        let single = host_tile_img_s(&cfg, 1, 1);
+        let tiled = host_tile_img_s(&cfg, 8, 1);
+        // Tiling amortizes the weight stream: strictly faster, capped
+        // by the compute roof (< 8x with these constants).
+        assert!(tiled > single, "{tiled} vs {single}");
+        assert!(tiled / single <= 8.0 + 1e-9);
+        // At tile=1 the engine is bandwidth-bound: threads don't help.
+        assert_eq!(host_tile_img_s(&cfg, 1, 8), single);
+        // At tile=8 the compute roof binds; threads lift it until the
+        // (un-scaled) bandwidth wall returns.
+        let tiled_mt = host_tile_img_s(&cfg, 8, 8);
+        assert!(tiled_mt > tiled);
+        assert!(tiled_mt / single <= 8.0 + 1e-9);
+        // The stack MAC count covers every layer plus the head.
+        let macs = stack_active_macs(&cfg);
+        let l0 = cfg.layer_dims()[0].active_synapses();
+        assert!(macs > l0, "{macs} vs layer0 {l0}");
     }
 
     #[test]

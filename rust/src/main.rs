@@ -35,7 +35,11 @@ COMMANDS:
   train             train via PJRT artifacts (--config tiny --epochs N
                     --struct --seed S --artifacts DIR)
   serve             inference server demo (--config tiny --requests N
-                    --artifacts DIR)
+                    --artifacts DIR); --host serves the pure-rust
+                    batched tile engine instead of PJRT (--threads N)
+  bench             host batched-tile throughput: single-image span vs
+                    AoSoA tile vs tile + threads (--config tiny
+                    --images N --threads N)
   table2            Table 2 (modeled) (--models model1,model2,model3)
   table3            Table 3 (estimator) (--models ...)
   stack             per-layer stack envelopes + pipeline placement
@@ -52,6 +56,11 @@ COMMANDS:
   help              this text
 
   train --save FILE persists a checkpoint; serve --load FILE serves it.
+
+  --threads N (or BCPNN_THREADS): data-parallel batch splitter for the
+  host tile engine. Chunking is deterministic — contiguous tile-aligned
+  chunks merged in submission order — so outputs are bitwise identical
+  at any thread count; the knob only moves throughput.
 ";
 
 fn main() {
@@ -63,12 +72,13 @@ fn main() {
 }
 
 fn run(argv: Vec<String>) -> Result<()> {
-    let args = Args::parse(argv, &["all", "json", "struct", "verbose"])?;
+    let args = Args::parse(argv, &["all", "json", "struct", "verbose", "host"])?;
     let cmd = args.positional().first().cloned().unwrap_or_default();
     match cmd.as_str() {
         "config" => cmd_config(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
         "table2" => {
             let models = models_arg(&args);
             let refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
@@ -328,6 +338,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests: usize = args.get_parse("requests", 512usize)?;
     let seed: u64 = args.get_parse("seed", 42u64)?;
 
+    if args.flag("host") {
+        return cmd_serve_host(args, cfg, n_requests, seed);
+    }
+
     println!("loading infer artifact for {name}...");
     let dir = artifacts_dir(args);
     let name2 = name.clone();
@@ -371,15 +385,146 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let rep = server.shutdown();
+    print_serve_report(&rep, cfg.batch);
+    println!("(untrained net agreement with labels: {agree}/{n_requests})");
+    Ok(())
+}
+
+/// Shared serving summary of `repro serve` (PJRT and `--host` modes
+/// print identical report shapes).
+fn print_serve_report(rep: &bcpnn_accel::coordinator::ServerReport, batch: usize) {
     println!(
-        "served {} requests in {} batches (mean fill {:.1}/{})",
-        rep.served, rep.batches, rep.mean_fill, cfg.batch
+        "served {} requests in {} batches (mean fill {:.1}/{batch}, {} thread(s))",
+        rep.served, rep.batches, rep.mean_fill, rep.threads
     );
     println!(
         "latency: mean {:.3} ms  p50 {:.3} ms  p99 {:.3} ms  max {:.3} ms",
         rep.latency.mean_ms, rep.latency.p50_ms, rep.latency.p99_ms, rep.latency.max_ms
     );
-    println!("(untrained net agreement with labels: {agree}/{n_requests})");
+}
+
+/// `repro serve --host`: the pure-rust serving path — a [`GraphBackend`]
+/// drives the batched AoSoA tile engine, no PJRT artifacts needed.
+/// `--threads N` (or `BCPNN_THREADS`) splits each collected batch
+/// across cores; responses are bitwise identical at any thread count
+/// (deterministic contiguous chunking).
+fn cmd_serve_host(
+    args: &Args, cfg: bcpnn_accel::config::ModelConfig, n_requests: usize, seed: u64,
+) -> Result<()> {
+    use bcpnn_accel::bcpnn::LayerGraph;
+    use bcpnn_accel::coordinator::GraphBackend;
+
+    let threads: usize = args.get_parse("threads", bcpnn_accel::util::threads_from_env())?;
+    let name = cfg.name.clone();
+    let ckpt = args.get("load").map(|s| s.to_string());
+    let cfg_worker = cfg.clone();
+    println!("serving {name} on the host tile engine ({threads} thread(s))...");
+    let server = InferenceServer::start(
+        move || {
+            let graph = match ckpt {
+                Some(path) => {
+                    let g = bcpnn_accel::bcpnn::checkpoint::load_graph(
+                        std::path::Path::new(&path))?;
+                    anyhow::ensure!(
+                        g.cfg.name == cfg_worker.name,
+                        "checkpoint is for config {:?}, serving {:?}",
+                        g.cfg.name, cfg_worker.name
+                    );
+                    println!("loaded checkpoint {path}");
+                    g
+                }
+                None => LayerGraph::new(cfg_worker, seed),
+            };
+            Ok(GraphBackend::new(graph, threads))
+        },
+        ServerConfig::default(),
+    )?;
+
+    let data = synth::generate(cfg.img_side, cfg.n_classes, n_requests, seed, 0.15);
+    let mut pending = Vec::new();
+    for img in &data.images {
+        pending.push(server.submit(img.clone())?);
+    }
+    for rx in &pending {
+        let _ = rx.recv_timeout(Duration::from_secs(30))?;
+    }
+    let rep = server.shutdown();
+    print_serve_report(&rep, cfg.batch);
+    Ok(())
+}
+
+/// `repro bench`: measure the host batch engines side by side —
+/// per-image span kernels vs the batched AoSoA tile engine vs the
+/// tile engine under the `--threads` splitter — and print the modeled
+/// rooflines (`fpga::timing::host_tile_img_s`) and the modeled device
+/// stream for scale.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use bcpnn_accel::bcpnn::sparse::TILE;
+    use bcpnn_accel::bcpnn::{LayerGraph, Workspace};
+    use bcpnn_accel::bench_harness as bh;
+    use bcpnn_accel::fpga::device::{FpgaDevice, KernelVersion};
+    use bcpnn_accel::fpga::timing;
+
+    let name = args.get_or("config", "tiny").to_string();
+    let cfg = by_name(&name)?;
+    let seed: u64 = args.get_parse("seed", 42u64)?;
+    let threads: usize = args.get_parse("threads", bcpnn_accel::util::threads_from_env())?;
+    let n_images: usize = args.get_parse("images", 8 * TILE + 3)?;
+
+    let g = LayerGraph::new(cfg.clone(), seed);
+    let data = synth::generate(cfg.img_side, cfg.n_classes, n_images, seed, 0.15);
+    println!(
+        "host batch engines, {name}: {} images ({} tiles, ragged tail {}), {} thread(s)",
+        n_images,
+        n_images.div_ceil(TILE),
+        n_images % TILE,
+        threads
+    );
+    println!("{}", bh::header());
+
+    // Each row black-boxes a computed probability so the optimizer
+    // cannot elide the inference work being timed.
+    let probe = |out: &[Vec<f32>]| out.last().and_then(|v| v.last().copied());
+    let mut ws = Workspace::new();
+    let r_single = bh::bench("single-image span (infer_with loop)", 1, 5, || {
+        let out: Vec<Vec<f32>> =
+            data.images.iter().map(|i| g.infer_with(i, &mut ws).to_vec()).collect();
+        std::hint::black_box(probe(&out));
+    });
+    println!("{}", r_single.row());
+    let r_tile = bh::bench("AoSoA tile (infer_batch)", 1, 5, || {
+        std::hint::black_box(probe(&g.infer_batch(&data.images)));
+    });
+    println!("{}", r_tile.row());
+    let r_thr = bh::bench(
+        &format!("AoSoA tile + splitter ({threads} threads)"),
+        1,
+        5,
+        || {
+            std::hint::black_box(probe(&g.infer_batch_threads(&data.images, threads)));
+        },
+    )
+    .with_threads(threads);
+    println!("{}", r_thr.row());
+
+    let per = |r: &bh::BenchResult| r.mean.as_secs_f64() / n_images.max(1) as f64;
+    println!(
+        "\nmeasured: tile {:.2}x vs single-image, tile+threads {:.2}x",
+        per(&r_single) / per(&r_tile).max(1e-12),
+        per(&r_single) / per(&r_thr).max(1e-12),
+    );
+    println!(
+        "modeled (roofline): single {:.0} img/s, tile={TILE} {:.0} img/s, \
+         tile={TILE} x{threads} threads {:.0} img/s",
+        timing::host_tile_img_s(&cfg, 1, 1),
+        timing::host_tile_img_s(&cfg, TILE, 1),
+        timing::host_tile_img_s(&cfg, TILE, threads),
+    );
+    println!(
+        "modeled device stream ({}): {:.0} img/s",
+        FpgaDevice::u55c().name,
+        1e3 / timing::stack_latency_ms(&cfg, KernelVersion::Infer, &FpgaDevice::u55c()),
+    );
     Ok(())
 }
 

@@ -382,6 +382,20 @@ pub fn placement_table(
             hp.throughput_img_s(),
             (hp.latency_s() + host_overhead_s(&cfg, dev0)) * 1e3,
         ));
+        // Host batched-tile engine, for scale: where the pure-host
+        // AoSoA kernels land against the device streams this plan
+        // models (single-image span vs tile vs tile + threads).
+        {
+            use crate::bcpnn::sparse::TILE;
+            s.push_str(&format!(
+                "  host tile engine (modeled): single-span {:.0} img/s, tile={TILE} \
+                 {:.0} img/s, tile={TILE} x8 threads {:.0} img/s — device plan {:.0} img/s\n",
+                timing::host_tile_img_s(&cfg, 1, 1),
+                timing::host_tile_img_s(&cfg, TILE, 1),
+                timing::host_tile_img_s(&cfg, TILE, 8),
+                hp.throughput_img_s(),
+            ));
+        }
         // The two degenerate strategies this plan must subsume.
         match plan_pipeline(&cfg, version, dev0) {
             Ok(pp) => s.push_str(&format!(

@@ -13,8 +13,9 @@ use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::bcpnn::sparse::TILE;
 use crate::bcpnn::{BufPool, LayerGraph, Network};
-use crate::data::encode::encode_image_in_place;
+use crate::data::encode::{encode_image_in_place, encode_tile_in_place, pack_tile, unpack_lane};
 
 use super::fifo::{Fifo, FifoStatsSnapshot};
 
@@ -242,6 +243,74 @@ pub fn layer_graph_pipeline(
         .collect()
 }
 
+/// The batched twin of [`layer_graph_pipeline`]: the same stage chain,
+/// but every FIFO item is an AoSoA tile of up to
+/// [`TILE`](crate::bcpnn::sparse::TILE) lane-interleaved images — each
+/// stage walks its weight spans once per tile instead of once per
+/// image, so the stream's weight-bandwidth cost drops by the lane
+/// count while stage overlap stays. Items are `(lanes, tile)` pairs:
+/// the image tiles are packed up front, the encode stage expands the
+/// pixel tile in place, and the tail unpacks per-image results in
+/// order. Output per image is bitwise identical to
+/// [`LayerGraph::infer`] (lane-private kernels; ragged tail tiles pad
+/// with zero lanes).
+pub fn layer_graph_tile_pipeline(
+    graph: &Arc<LayerGraph>,
+    images: Vec<Vec<f32>>,
+    depth: usize,
+) -> (Vec<Vec<f32>>, PipelineReport) {
+    let n = images.len();
+    // Pack lazily inside the source: tiles materialize one at a time
+    // as the pipeline pulls, so peak memory is the input batch plus
+    // the (depth-bounded) in-flight tiles — never a full second copy.
+    let mut pending = images.into_iter();
+    let tiles = std::iter::from_fn(move || {
+        let lanes: Vec<Vec<f32>> = pending.by_ref().take(TILE).collect();
+        if lanes.is_empty() {
+            return None;
+        }
+        let mut buf = Vec::new();
+        pack_tile(&lanes, &mut buf);
+        Some((lanes.len(), buf))
+    });
+    let mut p: Pipeline<(usize, Vec<f32>)> = Pipeline::source("tiles", depth, tiles)
+        .stage("encode", depth, move |(lanes, mut buf): (usize, Vec<f32>)| {
+            encode_tile_in_place(&mut buf);
+            (lanes, buf)
+        });
+    for l in 0..graph.layers.len() {
+        let gs = graph.clone();
+        let mut pool = BufPool::new();
+        p = p.stage(&format!("support{l}"), depth, move |(lanes, x): (usize, Vec<f32>)| {
+            let mut s = pool.get();
+            gs.layers[l].support_masked_tile_into(&x, &mut s);
+            pool.put(x);
+            (lanes, s)
+        });
+        let ga = graph.clone();
+        p = p.stage(&format!("softmax{l}"), depth, move |(lanes, mut s): (usize, Vec<f32>)| {
+            let d = ga.layers[l].dims;
+            Network::hc_softmax_tile(&mut s, d.hc_out, d.mc_out, ga.cfg.gain);
+            (lanes, s)
+        });
+    }
+    let gh = graph.clone();
+    let (tile_out, rep) = p
+        .stage("head", depth, move |(lanes, y): (usize, Vec<f32>)| {
+            let mut out = Vec::new();
+            gh.head.activate_dense_tile_into(&y, &mut out);
+            (lanes, out)
+        })
+        .collect();
+    let mut out = Vec::with_capacity(n);
+    for (lanes, t) in tile_out {
+        for lane in 0..lanes {
+            out.push(unpack_lane(&t, lane));
+        }
+    }
+    (out, rep)
+}
+
 /// Run the same logical stages strictly sequentially (Fig. 3 left):
 /// each item passes through every function before the next item starts.
 /// This is the paper's "initial unoptimized sequential implementation".
@@ -363,6 +432,28 @@ mod tests {
             .collect();
         assert!(out.is_empty());
         assert_eq!(rep.items, 0);
+    }
+
+    #[test]
+    fn tile_pipeline_bitwise_matches_infer_with_ragged_tail() {
+        use crate::config::by_name;
+
+        let cfg = by_name("toy-deep").unwrap();
+        let graph = Arc::new(LayerGraph::new(cfg.clone(), 13));
+        // TILE + 3 images: one full tile + a ragged 3-lane tail.
+        let images: Vec<Vec<f32>> = (0..TILE + 3)
+            .map(|i| vec![0.07 * i as f32; cfg.hc_in()])
+            .collect();
+        let (out, rep) = layer_graph_tile_pipeline(&graph, images.clone(), 4);
+        assert_eq!(rep.stages.len(), 3 + 2 * cfg.n_layers() + 1);
+        assert_eq!(rep.items as usize, 2); // two tiles streamed
+        assert_eq!(out.len(), images.len());
+        for (k, (img, probs)) in images.iter().zip(&out).enumerate() {
+            let want = graph.infer(img);
+            let gb: Vec<u32> = probs.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "image {k}");
+        }
     }
 
     #[test]

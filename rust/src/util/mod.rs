@@ -5,6 +5,19 @@
 pub mod cli;
 pub mod json;
 
+/// Default thread count for the data-parallel batch splitter: the
+/// `BCPNN_THREADS` env var, else 1 (deterministic single-thread; the
+/// splitter chunks batches contiguously and merges in submission
+/// order, so results are bitwise identical at any value — the env var
+/// is purely a throughput knob).
+pub fn threads_from_env() -> usize {
+    std::env::var("BCPNN_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(1)
+}
+
 /// Format a float with engineering-friendly precision (tables).
 pub fn fmt_sig(v: f64, sig: usize) -> String {
     if v == 0.0 || !v.is_finite() {

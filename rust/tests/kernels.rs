@@ -10,13 +10,19 @@
 //! Weights of *inactive* synapses are deliberately not maintained by
 //! the sparse path (they are re-derived on activation), so wij is
 //! compared under the mask.
+//!
+//! The batched AoSoA **tile** engine (`sparse::*_tile`, TILE = 8
+//! lane-interleaved images per span walk) is pinned here too: every
+//! registry config's tile inference, tile shard slices, ragged tails
+//! (batch % TILE != 0), and the `--threads` batch splitter must be
+//! bitwise the single-image span kernels — and hence the dense seed.
 
 use bcpnn_accel::bcpnn::sparse::{
-    dense_support_cols, dense_support_masked, dense_train_step, expand_mask_dims,
+    dense_support_cols, dense_support_masked, dense_train_step, expand_mask_dims, TILE,
 };
-use bcpnn_accel::bcpnn::{LayerGraph, Network, Projection, StructuralPlasticity};
+use bcpnn_accel::bcpnn::{LayerGraph, Network, Projection, StructuralPlasticity, Workspace};
 use bcpnn_accel::config::{by_name, registry, ModelConfig};
-use bcpnn_accel::data::encode::encode_image;
+use bcpnn_accel::data::encode::{encode_image, pack_tile, unpack_lane};
 use bcpnn_accel::data::synth;
 use bcpnn_accel::testing::prop_check;
 
@@ -108,6 +114,58 @@ fn dense_forward(g: &LayerGraph, mirrors: &[DenseProj], img: &[f32]) -> (Vec<f32
     (x, acts)
 }
 
+/// Pin the batched AoSoA tile engine against the dense mirrors: whole-
+/// batch tile inference (ragged tails included — the registry batches
+/// are 2..8 images, so both full and partial tiles occur), the
+/// threaded batch splitter, and the tile shard slices the hybrid
+/// executor runs on.
+fn assert_tiles_equivalent(
+    name: &str, g: &LayerGraph, mirrors: &[DenseProj], images: &[Vec<f32>], what: &str,
+) {
+    // Whole-batch tile inference vs dense per-image probabilities.
+    let batch = g.infer_batch(images);
+    for (k, (img, got)) in images.iter().zip(&batch).enumerate() {
+        let (_, acts) = dense_forward(g, mirrors, img);
+        let want = g.head.activate_dense(acts.last().unwrap());
+        assert_eq!(bits(got), bits(&want), "{name}: tile infer {what} img {k}");
+    }
+    // The data-parallel splitter returns identical bits at any count.
+    for threads in [2usize, 3] {
+        let thr = g.infer_batch_threads(images, threads);
+        assert_eq!(batch, thr, "{name}: {threads}-thread splitter {what}");
+    }
+    // Tile shard slices vs the dense cols oracle, lane by lane.
+    for chunk in images.chunks(TILE) {
+        let mut inputs: Vec<Vec<f32>> = chunk.iter().map(|i| encode_image(i)).collect();
+        for (l, (p, m)) in g.layers.iter().zip(mirrors).enumerate() {
+            let mut xt = Vec::new();
+            pack_tile(&inputs, &mut xt);
+            let n_out = p.dims.n_out();
+            for cut in (1..p.dims.hc_out).take(2) {
+                let mid = cut * p.dims.mc_out;
+                let mut lo_t = Vec::new();
+                p.support_cols_tile_into(&xt, 0, mid, &mut lo_t);
+                let mut hi_t = Vec::new();
+                p.support_cols_tile_into(&xt, mid, n_out, &mut hi_t);
+                for (lane, x) in inputs.iter().enumerate() {
+                    let lo_d = dense_support_cols(&m.bj, &m.wij, &m.mask_unit, x, 0, mid);
+                    let hi_d =
+                        dense_support_cols(&m.bj, &m.wij, &m.mask_unit, x, mid, n_out);
+                    assert_eq!(
+                        bits(&unpack_lane(&lo_t, lane)), bits(&lo_d),
+                        "{name} {what} l{l} cut {cut} lane {lane} lo"
+                    );
+                    assert_eq!(
+                        bits(&unpack_lane(&hi_t, lane)), bits(&hi_d),
+                        "{name} {what} l{l} cut {cut} lane {lane} hi"
+                    );
+                }
+            }
+            inputs = inputs.iter().map(|x| m.activate(x, g.cfg.gain)).collect();
+        }
+    }
+}
+
 fn imgs_for(cfg: &ModelConfig, seed: u64) -> Vec<Vec<f32>> {
     // Large paper models get a reduced batch so the debug-build suite
     // stays fast; the math is per-image, so coverage is unaffected.
@@ -145,6 +203,9 @@ fn assert_config_equivalent(name: &str) {
             }
         }
     }
+
+    // --- batched tile engine, fresh weights.
+    assert_tiles_equivalent(name, &g, &mirrors, &images, "pre-train");
 
     // --- one train batch (unsupervised greedy layer-wise + head sup),
     // sparse graph vs dense mirrors running the seed loops.
@@ -188,6 +249,10 @@ fn assert_config_equivalent(name: &str) {
         let dense_probs = g.head.activate_dense(acts.last().unwrap());
         assert_eq!(bits(&g.infer(img)), bits(&dense_probs), "{name}: infer post-rewire img {k}");
     }
+
+    // --- batched tile engine on the trained-and-rewired weights (the
+    // tile kernels run the rebuilt block index too).
+    assert_tiles_equivalent(name, &g, &mirrors, &images, "post-rewire");
 
     // --- one more training step after the rewire (the sparse weight
     // map now runs on the new index).
@@ -289,6 +354,63 @@ fn network_kernels_match_dense_reference() {
             let want_lo =
                 dense_support_cols(&net.params.bj, &net.params.wij, &mask_unit, &x, 0, mid);
             assert_eq!(bits(&net.support_cols(&x, 0, mid)), bits(&want_lo), "cut {cut}");
+        }
+    }
+}
+
+#[test]
+fn multi_tile_ragged_batches_bitwise_match_per_image() {
+    // Batches spanning several tiles with every tail shape: the tile
+    // grouping (and the threaded splitter's regrouping) must never
+    // show through in the bits.
+    let cfg = by_name("tiny").unwrap();
+    let mut g = LayerGraph::new(cfg.clone(), 31);
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 2 * TILE + 5, 8, 0.15);
+    // Train a little so weights are non-trivial.
+    for img in &d.images[..6] {
+        g.train_unsup_step(img);
+    }
+    for n in [1usize, TILE - 1, TILE, TILE + 1, 2 * TILE + 5] {
+        let imgs = &d.images[..n];
+        let want: Vec<Vec<u32>> = imgs.iter().map(|i| bits(&g.infer(i))).collect();
+        let batch = g.infer_batch(imgs);
+        for (k, (got, w)) in batch.iter().zip(&want).enumerate() {
+            assert_eq!(&bits(got), w, "n={n} img {k}");
+        }
+        for threads in [2usize, 4, 9] {
+            let thr = g.infer_batch_threads(imgs, threads);
+            assert_eq!(batch, thr, "n={n} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn workspace_reuse_across_configs_is_exact() {
+    // One process, one Workspace, three configs with different buffer
+    // shapes (including shrinking back to a smaller model): buffer
+    // resizing must never leak state between models. Exercises both
+    // the scalar and the tile paths.
+    let names = ["tiny", "toy-deep", "small", "tiny"];
+    let mut shared = Workspace::new();
+    for (round, name) in names.iter().enumerate() {
+        let cfg = by_name(name).unwrap();
+        let g = LayerGraph::new(cfg.clone(), 17);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, TILE + 2, round as u64, 0.15);
+        for (k, img) in d.images.iter().enumerate() {
+            let want = g.infer(img); // fresh workspace inside
+            let got = g.infer_with(img, &mut shared);
+            assert_eq!(bits(got), bits(&want), "{name} round {round} img {k} scalar");
+        }
+        for chunk in d.images.chunks(TILE) {
+            let tile = g.infer_tile_with(chunk, &mut shared);
+            for (lane, img) in chunk.iter().enumerate() {
+                let want = g.infer(img);
+                assert_eq!(
+                    bits(&unpack_lane(tile, lane)),
+                    bits(&want),
+                    "{name} round {round} lane {lane} tile"
+                );
+            }
         }
     }
 }
