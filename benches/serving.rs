@@ -1,0 +1,135 @@
+//! Serving-path bench: end-to-end request latency decomposition.
+//!
+//!     cargo bench --bench serving
+//!     cargo bench --bench serving -- --json       # + BENCH_serving.json
+//!
+//! Two sections, both measured on this host (the serving stack is pure
+//! software; the device streams it batches onto are modeled elsewhere):
+//!
+//!  1. **InferenceServer + GraphBackend** — the `repro serve --host`
+//!     path. N requests stream through the batching queue; the
+//!     telemetry histograms decompose each request's end-to-end
+//!     latency into queue wait (enqueue -> batch dispatch) and service
+//!     (the batch's inference, shared by its members). The row printed
+//!     is the `ServerReport` the CLI prints, plus the invariant check
+//!     `e2e ~= wait + service` that `rust/tests/telemetry.rs` pins.
+//!  2. **HybridExecutor** — the per-stage/per-shard queue-vs-compute
+//!     decomposition on a stacked config across 3 simulated devices
+//!     (`report::decomposition_table`).
+//!
+//! `--json` writes `BENCH_serving.json` at the repo root: the server
+//! report and per-worker span stats, machine-readable (`to_json`).
+
+use std::path::Path;
+use std::time::Duration;
+
+use bcpnn_accel::bcpnn::LayerGraph;
+use bcpnn_accel::bench_harness as bh;
+use bcpnn_accel::cluster::{plan_hybrid, Fleet, HybridExecutor};
+use bcpnn_accel::config::by_name;
+use bcpnn_accel::coordinator::{GraphBackend, InferenceServer, ServerConfig, ServerReport};
+use bcpnn_accel::data::synth;
+use bcpnn_accel::fpga::device::{FpgaDevice, KernelVersion};
+use bcpnn_accel::report;
+use bcpnn_accel::util::json::Json;
+
+/// Serve `n_requests` synthetic images through the host tile engine
+/// behind the batching server and return the report.
+fn server_section(n_requests: usize, threads: usize) -> ServerReport {
+    let cfg = by_name("tiny").unwrap();
+    let cfg_worker = cfg.clone();
+    let server = InferenceServer::start(
+        move || Ok(GraphBackend::new(LayerGraph::new(cfg_worker, 42), threads)),
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let data = synth::generate(cfg.img_side, cfg.n_classes, n_requests, 7, 0.15);
+    let pending: Vec<_> = data
+        .images
+        .iter()
+        .map(|img| server.submit(img.clone()).unwrap())
+        .collect();
+    for rx in &pending {
+        let _ = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let rep = server.shutdown();
+    print!("{}", report::serve_decomposition(&rep));
+    // The decomposition contract: per request e2e = queue wait +
+    // service by construction, so the means must line up (slack for
+    // scheduler noise and response-channel overhead).
+    let sum = rep.queue_wait.mean_ms + rep.service.mean_ms;
+    let gap = (rep.latency.mean_ms - sum).abs();
+    let ok = gap <= 0.5 * rep.latency.mean_ms.max(0.5) + 2.0;
+    println!(
+        "  e2e mean {:.3} ms vs wait+service {:.3} ms: {}",
+        rep.latency.mean_ms,
+        sum,
+        if ok { "PASS" } else { "FAIL" }
+    );
+    assert!(ok, "decomposition does not sum to e2e: {rep:?}");
+    rep
+}
+
+/// Run the hybrid executor on a stacked config and return its
+/// per-worker reports (printed as the decomposition table).
+fn hybrid_section(n_images: usize) -> Vec<bcpnn_accel::cluster::WorkerReport> {
+    let cfg = by_name("toy-deep").unwrap();
+    let fleet = Fleet::homogeneous(&FpgaDevice::u55c(), 3);
+    let hp = plan_hybrid(&cfg, &fleet, KernelVersion::Infer, 0.1).unwrap();
+    let exec = HybridExecutor::new(LayerGraph::new(cfg.clone(), 42), &hp).unwrap();
+    let data = synth::generate(cfg.img_side, cfg.n_classes, n_images, 7, 0.15);
+    let r = bh::bench_for(
+        &format!("HybridExecutor x{n_images} imgs (toy-deep, 3 devices)"),
+        Duration::from_millis(60),
+        || {
+            let out = exec.infer_batch(&data.images).unwrap();
+            std::hint::black_box(out.len());
+        },
+    );
+    println!("\n{}", bh::header());
+    println!("{}  ({:.0} img/s; host-core bound)", r.row(), r.throughput(n_images as u64));
+    let workers = exec.shutdown();
+    print!("{}", report::decomposition_table(&workers));
+    workers
+}
+
+fn main() {
+    let opts = bh::BenchOpts::from_args();
+    let n_requests = if opts.quick { 64 } else { 512 };
+    let n_images = if opts.quick { 16 } else { 64 };
+
+    println!("== serving path: queue-vs-compute decomposition ==");
+    println!(
+        "\n-- InferenceServer + GraphBackend (tiny, {n_requests} requests, {} thread(s)) --",
+        opts.threads
+    );
+    let rep = server_section(n_requests, opts.threads);
+
+    println!("\n-- HybridExecutor per-worker decomposition --");
+    let workers = hybrid_section(n_images);
+
+    if opts.json {
+        let report = Json::obj(vec![
+            ("bench", Json::from("serving")),
+            ("source", Json::from("measured")),
+            ("threads", Json::from(opts.threads)),
+            ("requests", Json::from(n_requests)),
+            ("server", rep.to_json()),
+            (
+                "hybrid",
+                Json::obj(vec![
+                    ("config", Json::from("toy-deep")),
+                    ("devices", Json::from(3usize)),
+                    ("images", Json::from(n_images)),
+                    (
+                        "workers",
+                        Json::Arr(workers.iter().map(|w| w.to_json()).collect()),
+                    ),
+                ]),
+            ),
+        ]);
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serving.json");
+        bh::write_json_report(&path, &report).expect("write BENCH_serving.json");
+        println!("\nwrote {}", path.display());
+    }
+}

@@ -162,8 +162,8 @@ fn main() -> Result<()> {
         rep.served, rep.rerouted
     );
     println!(
-        "cluster latency: mean {:.3} ms  p50 {:.3} ms  p99 {:.3} ms",
-        rep.latency.mean_ms, rep.latency.p50_ms, rep.latency.p99_ms
+        "cluster latency: mean {:.3} ms  p50 {:.3} ms  p99 {:.3} ms  p999 {:.3} ms",
+        rep.latency.mean_ms, rep.latency.p50_ms, rep.latency.p99_ms, rep.latency.p999_ms
     );
     for r in &rep.replicas {
         println!(
@@ -182,11 +182,14 @@ fn main() -> Result<()> {
         );
         for s in &r.shards {
             println!(
-                "    stage {} shard {}: {} imgs  busy {:.1} ms  queue high-water {}",
+                "    stage {} shard {}: {} imgs  busy {:.1} ms  wait p99 {:.3} ms  \
+                 svc p99 {:.3} ms  queue high-water {}",
                 s.stage,
                 s.shard,
                 s.items,
                 s.busy.as_secs_f64() * 1e3,
+                s.queue_wait.p99_ms,
+                s.service.p99_ms,
                 s.input_fifo.high_water
             );
         }

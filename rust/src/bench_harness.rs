@@ -72,6 +72,12 @@ pub struct BenchResult {
     pub stddev: Duration,
     pub min: Duration,
     pub max: Duration,
+    /// Exact nearest-rank (ceil) percentiles over the measured
+    /// iterations — the per-iteration distribution, same convention as
+    /// `coordinator::metrics::Recorder::stats`.
+    pub p50: Duration,
+    pub p99: Duration,
+    pub p999: Duration,
     /// Batch-splitter thread count the case ran with (1 unless set
     /// via [`BenchResult::with_threads`]); recorded in the JSON so
     /// threaded rows in `BENCH_*.json` are self-describing.
@@ -111,6 +117,9 @@ impl BenchResult {
             ("stddev_ns", Json::from(self.stddev.as_nanos() as f64)),
             ("min_ns", Json::from(self.min.as_nanos() as f64)),
             ("max_ns", Json::from(self.max.as_nanos() as f64)),
+            ("p50_ns", Json::from(self.p50.as_nanos() as f64)),
+            ("p99_ns", Json::from(self.p99.as_nanos() as f64)),
+            ("p999_ns", Json::from(self.p999.as_nanos() as f64)),
         ])
     }
 }
@@ -186,13 +195,23 @@ fn summarize(name: &str, samples: &[Duration]) -> BenchResult {
         .map(|d| (d.as_secs_f64() - mean_s).powi(2))
         .sum::<f64>()
         / n;
+    let mut sorted: Vec<Duration> = samples.to_vec();
+    sorted.sort();
+    // Nearest-rank with ceil: rank = ceil(p * n), 1-based.
+    let pct = |p: f64| {
+        let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
+    };
     BenchResult {
         name: name.to_string(),
         iters: samples.len() as u32,
         mean: Duration::from_secs_f64(mean_s),
         stddev: Duration::from_secs_f64(var.sqrt()),
-        min: *samples.iter().min().unwrap(),
-        max: *samples.iter().max().unwrap(),
+        min: sorted[0],
+        max: *sorted.last().unwrap(),
+        p50: pct(0.50),
+        p99: pct(0.99),
+        p999: pct(0.999),
         threads: 1,
     }
 }
@@ -208,6 +227,7 @@ mod tests {
         assert_eq!(r.iters, 10);
         assert_eq!(n, 12); // warmup + iters
         assert!(r.min <= r.mean && r.mean <= r.max);
+        assert!(r.min <= r.p50 && r.p50 <= r.p99 && r.p99 <= r.p999 && r.p999 <= r.max);
     }
 
     #[test]
@@ -250,6 +270,19 @@ mod tests {
         assert_eq!(back.req("iters").unwrap().as_usize().unwrap(), 2);
         assert_eq!(back.req("threads").unwrap().as_usize().unwrap(), 4);
         assert!(back.req("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(back.req("p999_ns").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn percentiles_use_ceil_nearest_rank() {
+        // 4 equal-ish samples: p50 must be the 2nd-ranked sample
+        // (ceil(0.5*4) = 2), not the 3rd a round() would pick via 2.0
+        // on 5 samples; pin the exact convention on a synthetic set.
+        let samples: Vec<Duration> = (1..=4).map(Duration::from_millis).collect();
+        let r = summarize("pct", &samples);
+        assert_eq!(r.p50, Duration::from_millis(2));
+        assert_eq!(r.p99, Duration::from_millis(4));
+        assert_eq!(r.p999, Duration::from_millis(4));
     }
 
     #[test]

@@ -30,10 +30,12 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::bcpnn::{LayerGraph, Network};
 use crate::config::ModelConfig;
-use crate::coordinator::metrics::{LatencyStats, Recorder};
+use crate::coordinator::metrics::LatencyStats;
 use crate::coordinator::server::{collect_batch, InferBackend};
 use crate::fpga::device::{FpgaDevice, KernelVersion};
 use crate::stream::fifo::Fifo;
+use crate::telemetry::{LatencyHistogram, MetricsRegistry, TraceContext};
+use crate::util::json::Json;
 
 use super::hybrid::{HybridExecutor, WorkerReport};
 use super::placement::{pure_shard, HybridPlan};
@@ -73,11 +75,13 @@ impl Default for ClusterConfig {
     }
 }
 
-/// One in-flight request (enqueue timestamp survives re-routing, so
-/// latency stats are true end-to-end).
+/// One in-flight request. The trace context's birth instant survives
+/// re-routing (latency stats are true end-to-end); its `sent` instant
+/// is re-stamped per hop, so queue-wait spans measure the last queue
+/// only.
 struct ClusterRequest {
     img: Vec<f32>,
-    enqueued: Instant,
+    trace: TraceContext,
     resp: mpsc::Sender<Vec<f32>>,
 }
 
@@ -102,6 +106,10 @@ pub struct ReplicaReport {
     /// Mean images per *successfully dispatched* batch.
     pub mean_fill: f64,
     pub latency: LatencyStats,
+    /// Time requests sat in this replica's queue before dispatch.
+    pub queue_wait: LatencyStats,
+    /// Executor compute time attributed to each request.
+    pub service: LatencyStats,
     /// Requests this replica re-routed to peers after failing.
     pub rerouted_out: u64,
     pub failed: bool,
@@ -109,14 +117,49 @@ pub struct ReplicaReport {
     pub shards: Vec<WorkerReport>,
 }
 
+impl ReplicaReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("replica", Json::from(self.replica)),
+            ("served", Json::from(self.served as f64)),
+            ("batches", Json::from(self.batches as f64)),
+            ("mean_fill", Json::from(self.mean_fill)),
+            ("rerouted_out", Json::from(self.rerouted_out as f64)),
+            ("failed", Json::from(self.failed)),
+            ("latency", self.latency.to_json()),
+            ("queue_wait", self.queue_wait.to_json()),
+            ("service", self.service.to_json()),
+            (
+                "shards",
+                Json::Arr(self.shards.iter().map(WorkerReport::to_json).collect()),
+            ),
+        ])
+    }
+}
+
 /// Post-shutdown statistics for the whole cluster.
 #[derive(Debug, Clone)]
 pub struct ClusterReport {
     pub served: u64,
     pub rerouted: u64,
-    /// End-to-end latency across every request served anywhere.
+    /// End-to-end latency across every request served anywhere
+    /// (bucket-exact merge of the per-replica histograms).
     pub latency: LatencyStats,
     pub replicas: Vec<ReplicaReport>,
+}
+
+impl ClusterReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("served", Json::from(self.served as f64)),
+            ("rerouted", Json::from(self.rerouted as f64)),
+            ("latency", self.latency.to_json()),
+            (
+                "replicas",
+                Json::Arr(self.replicas.iter().map(ReplicaReport::to_json).collect()),
+            ),
+        ])
+    }
 }
 
 /// Pure scheduling decision — split out so the policies are unit
@@ -143,10 +186,11 @@ pub fn pick_replica(
 /// Handle to a running cluster.
 pub struct ClusterServer {
     handles: Vec<ReplicaHandle>,
-    workers: Vec<thread::JoinHandle<(ReplicaReport, Recorder)>>,
+    workers: Vec<thread::JoinHandle<(ReplicaReport, LatencyHistogram)>>,
     rr: AtomicUsize,
     policy: SchedulePolicy,
     plan: HybridPlan,
+    metrics: Arc<MetricsRegistry>,
 }
 
 impl ClusterServer {
@@ -182,21 +226,35 @@ impl ClusterServer {
         }
         plan.validate()?;
 
+        // One registry for the whole cluster: every replica records
+        // under its own `replica{id}.` prefix, so a single exporter
+        // sees the full per-stage/per-shard decomposition.
+        let metrics = MetricsRegistry::new_arc();
         let handles: Vec<ReplicaHandle> = (0..ccfg.replicas)
-            .map(|_| ReplicaHandle {
-                queue: Fifo::with_capacity(ccfg.queue_depth),
-                outstanding: Arc::new(AtomicUsize::new(0)),
-                healthy: Arc::new(AtomicBool::new(true)),
-                inject_fail: Arc::new(AtomicBool::new(false)),
+            .map(|id| {
+                let queue = Fifo::with_capacity(ccfg.queue_depth);
+                queue.instrument(&metrics, &format!("replica{id}.queue"));
+                ReplicaHandle {
+                    queue,
+                    outstanding: Arc::new(AtomicUsize::new(0)),
+                    healthy: Arc::new(AtomicBool::new(true)),
+                    inject_fail: Arc::new(AtomicBool::new(false)),
+                }
             })
             .collect();
 
         let mut workers = Vec::with_capacity(ccfg.replicas);
         for id in 0..ccfg.replicas {
-            let exec = HybridExecutor::new(graph.clone(), plan)?;
+            let exec = HybridExecutor::with_metrics(
+                graph.clone(),
+                plan,
+                metrics.clone(),
+                &format!("replica{id}."),
+            )?;
             let peers = handles.clone();
             let flush = ccfg.flush_timeout;
-            workers.push(thread::spawn(move || replica_loop(id, exec, peers, flush)));
+            let reg = metrics.clone();
+            workers.push(thread::spawn(move || replica_loop(id, exec, peers, flush, reg)));
         }
 
         Ok(ClusterServer {
@@ -205,7 +263,13 @@ impl ClusterServer {
             rr: AtomicUsize::new(0),
             policy: ccfg.policy,
             plan: plan.clone(),
+            metrics,
         })
+    }
+
+    /// The registry every replica and stage worker records into.
+    pub fn metrics(&self) -> Arc<MetricsRegistry> {
+        self.metrics.clone()
     }
 
     pub fn plan(&self) -> &HybridPlan {
@@ -250,7 +314,7 @@ impl ClusterServer {
             .get(replica)
             .ok_or_else(|| anyhow!("no replica {replica}"))?;
         let (tx, rx) = mpsc::channel();
-        let req = ClusterRequest { img, enqueued: Instant::now(), resp: tx };
+        let req = ClusterRequest { img, trace: TraceContext::start(), resp: tx };
         h.outstanding.fetch_add(1, Ordering::SeqCst);
         if let Err(req) = h.queue.send(req) {
             // The replica already retired (its failure path closed the
@@ -284,15 +348,15 @@ impl ClusterServer {
         for h in &self.handles {
             h.queue.close();
         }
-        let mut merged = Recorder::new();
+        let mut merged = LatencyHistogram::new();
         let mut replicas = Vec::new();
         let mut served = 0u64;
         let mut rerouted = 0u64;
         for w in self.workers.drain(..) {
-            let (rep, rec) = w.join().expect("replica worker panicked");
+            let (rep, hist) = w.join().expect("replica worker panicked");
             served += rep.served;
             rerouted += rep.rerouted_out;
-            merged.merge(&rec);
+            merged.merge(&hist);
             replicas.push(rep);
         }
         replicas.sort_by_key(|r| r.replica);
@@ -318,11 +382,16 @@ fn replica_loop(
     exec: HybridExecutor,
     peers: Vec<ReplicaHandle>,
     flush_timeout: Duration,
-) -> (ReplicaReport, Recorder) {
+    metrics: Arc<MetricsRegistry>,
+) -> (ReplicaReport, LatencyHistogram) {
     let mine = peers[id].clone();
     let rx = mine.queue.clone();
     let max_batch = exec.max_batch();
-    let mut rec = Recorder::new();
+    let e2e_h = metrics.histogram(&format!("replica{id}.e2e_us"));
+    let wait_h = metrics.histogram(&format!("replica{id}.queue_wait_us"));
+    let svc_h = metrics.histogram(&format!("replica{id}.service_us"));
+    let served_ctr = metrics.counter(&format!("replica{id}.served"));
+    let rerouted_ctr = metrics.counter(&format!("replica{id}.rerouted_out"));
     let mut served = 0u64;
     let mut batches = 0u64;
     let mut fills = 0u64;
@@ -335,6 +404,7 @@ fn replica_loop(
     while let Ok(first) = rx.recv() {
         let mut reqs = collect_batch(&rx, first, max_batch, flush_timeout);
         let injected = mine.inject_fail.load(Ordering::SeqCst);
+        let dispatch = Instant::now();
         let outcome = if injected {
             Err(anyhow!("injected replica failure"))
         } else {
@@ -355,6 +425,7 @@ fn replica_loop(
             Ok(probs) => {
                 fills += reqs.len() as u64;
                 batches += 1;
+                let service = dispatch.elapsed();
                 // Decrement `outstanding` for every request regardless
                 // of how many probability vectors came back — a
                 // short-returning backend must not leak the counter
@@ -364,9 +435,12 @@ fn replica_loop(
                 for req in reqs {
                     mine.outstanding.fetch_sub(1, Ordering::SeqCst);
                     if let Some(p) = probs.next() {
-                        rec.record(req.enqueued.elapsed());
+                        wait_h.record(dispatch - req.trace.sent);
+                        svc_h.record(service);
+                        e2e_h.record(req.trace.age());
                         let _ = req.resp.send(p);
                         served += 1;
+                        served_ctr.inc();
                     }
                 }
             }
@@ -383,6 +457,7 @@ fn replica_loop(
                     mine.outstanding.fetch_sub(1, Ordering::SeqCst);
                     if reroute(&peers, id, r) {
                         rerouted_out += 1;
+                        rerouted_ctr.inc();
                     }
                 }
                 break;
@@ -391,25 +466,31 @@ fn replica_loop(
     }
 
     let shards = exec.shutdown();
+    let hist = e2e_h.snapshot();
     let report = ReplicaReport {
         replica: id,
         served,
         batches,
         mean_fill: fills as f64 / batches.max(1) as f64,
-        latency: rec.stats(),
+        latency: hist.stats(),
+        queue_wait: wait_h.stats(),
+        service: svc_h.stats(),
         rerouted_out,
         // A replica killed while idle never reaches the injected-
         // failure branch; still report it as failed, not "ok".
         failed: failed || mine.inject_fail.load(Ordering::SeqCst),
         shards,
     };
-    (report, rec)
+    (report, hist)
 }
 
 /// Hand one request to the least-loaded healthy peer. Returns false if
 /// no peer could take it (the client sees a closed response channel).
 fn reroute(peers: &[ReplicaHandle], from: usize, req: ClusterRequest) -> bool {
     let mut req = req;
+    // A re-routed request starts a fresh queue-wait clock at the peer;
+    // its end-to-end clock (trace.born) keeps running.
+    req.trace.hop();
     loop {
         let healthy: Vec<bool> = peers
             .iter()

@@ -31,11 +31,14 @@
 //! device. Every stream closes, all in-flight and future `infer_batch`
 //! calls fail fast, and the cluster coordinator re-routes traffic.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::bcpnn::{LayerGraph, Network};
 use crate::coordinator::server::InferBackend;
 use crate::stream::fifo::FifoStatsSnapshot;
+use crate::telemetry::{LatencyStats, MetricsRegistry};
 
 use super::hybrid::{HybridExecutor, WorkerReport};
 use super::placement;
@@ -52,6 +55,10 @@ pub struct ShardReport {
     pub busy: std::time::Duration,
     /// Wall time of the shard worker thread.
     pub wall: std::time::Duration,
+    /// Per-job input-queue wait (trace spans).
+    pub queue_wait: LatencyStats,
+    /// Per-job compute time (histogram view of `busy`).
+    pub service: LatencyStats,
     /// Stats of the shard's input queue (backpressure visibility).
     pub input_fifo: FifoStatsSnapshot,
 }
@@ -63,6 +70,8 @@ impl From<WorkerReport> for ShardReport {
             items: w.items,
             busy: w.busy,
             wall: w.wall,
+            queue_wait: w.queue_wait,
+            service: w.service,
             input_fifo: w.input_fifo,
         }
     }
@@ -98,6 +107,11 @@ impl ShardedExecutor {
 
     pub fn plan(&self) -> &PartitionPlan {
         &self.plan
+    }
+
+    /// The registry the inner hybrid engine's spans record into.
+    pub fn metrics(&self) -> Arc<MetricsRegistry> {
+        self.inner.metrics()
     }
 
     /// The config being served (the full, unsharded model's).

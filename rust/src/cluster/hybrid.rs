@@ -49,16 +49,21 @@ use crate::bcpnn::{BufPool, LayerGraph, Network};
 use crate::coordinator::server::InferBackend;
 use crate::data::encode::{encode_images_tile_into, unpack_lane};
 use crate::stream::fifo::{Fifo, FifoStatsSnapshot};
+use crate::telemetry::{Histo, LatencyStats, MetricsRegistry, StageSpans};
+use crate::util::json::Json;
 
 use super::placement::HybridPlan;
 
 /// One image tile's activity flowing between stages (shared for
 /// broadcast): `y` is an AoSoA buffer (`n * TILE`), `lanes` of whose
-/// lanes carry real images (ragged tail tiles pad the rest).
+/// lanes carry real images (ragged tail tiles pad the rest). `sent`
+/// is the enqueue instant — the receiving worker reads its queue wait
+/// off it (per-stage trace span).
 struct StageJob {
     seq: u64,
     lanes: usize,
     y: Arc<Vec<f32>>,
+    sent: Instant,
 }
 
 /// One shard's activity-tile slice headed for its stage's merge
@@ -68,6 +73,7 @@ struct SliceJob {
     shard: usize,
     lanes: usize,
     y: Vec<f32>,
+    sent: Instant,
 }
 
 /// Per-worker execution statistics, returned by
@@ -86,8 +92,28 @@ pub struct WorkerReport {
     pub busy: Duration,
     /// Wall time of the worker thread.
     pub wall: Duration,
+    /// Per-job time spent waiting in the input stream (trace spans).
+    pub queue_wait: LatencyStats,
+    /// Per-job compute time (histogram view of `busy`).
+    pub service: LatencyStats,
     /// Stats of the worker's input stream (backpressure visibility).
     pub input_fifo: FifoStatsSnapshot,
+}
+
+impl WorkerReport {
+    /// Machine-readable form (matching `BenchResult::to_json` naming).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("stage", Json::from(self.stage)),
+            ("shard", Json::from(self.shard)),
+            ("items", Json::from(self.items as f64)),
+            ("busy_ms", Json::from(self.busy.as_secs_f64() * 1e3)),
+            ("wall_ms", Json::from(self.wall.as_secs_f64() * 1e3)),
+            ("queue_wait", self.queue_wait.to_json()),
+            ("service", self.service.to_json()),
+            ("input_fifo", self.input_fifo.to_json()),
+        ])
+    }
 }
 
 /// A layer graph executing across the devices of a [`HybridPlan`].
@@ -104,15 +130,24 @@ pub struct HybridExecutor {
     plumbers: Vec<thread::JoinHandle<()>>,
     /// Serializes send+drain rounds (jobs carry chunk-local seqs).
     io_lock: Mutex<()>,
+    /// Registry all stage spans and FIFO gauges record into.
+    metrics: Arc<MetricsRegistry>,
+    /// Time result tiles sat in the result stream before the caller
+    /// drained them (the last hop of the decomposition).
+    result_wait: Histo,
+    /// Wall time of each whole `infer_chunk` round (per dispatch).
+    infer_h: Histo,
 }
 
-/// Send one tile job to every queue of the next hop. Err = downstream
-/// closed (failure/shutdown).
+/// Send one tile job to every queue of the next hop, stamping the
+/// enqueue instant (queue-wait clock). Err = downstream closed
+/// (failure/shutdown).
 fn broadcast(
     outs: &[Fifo<StageJob>], seq: u64, lanes: usize, y: Arc<Vec<f32>>,
 ) -> Result<(), ()> {
     for o in outs {
-        if o.send(StageJob { seq, lanes, y: y.clone() }).is_err() {
+        let job = StageJob { seq, lanes, y: y.clone(), sent: Instant::now() };
+        if o.send(job).is_err() {
             return Err(());
         }
     }
@@ -120,8 +155,26 @@ fn broadcast(
 }
 
 impl HybridExecutor {
-    /// Spawn the worker/merge topology of `plan` over `graph`.
+    /// Spawn the worker/merge topology of `plan` over `graph`, with a
+    /// private metrics registry.
     pub fn new(graph: LayerGraph, plan: &HybridPlan) -> Result<HybridExecutor> {
+        Self::with_metrics(graph, plan, MetricsRegistry::new_arc(), "")
+    }
+
+    /// Spawn with spans and gauges registered in `metrics` under
+    /// `prefix` (e.g. `"replica0."` — empty for standalone). Names:
+    /// `{prefix}stage{s}.shard{k}.{queue_wait,service}_us` per compute
+    /// worker, `{prefix}stage{s}.merge.*` per merge worker,
+    /// `{prefix}result.queue_wait_us` for the caller-facing result
+    /// stream, `{prefix}infer_us` per dispatch round, plus
+    /// `.input.{depth,high_water,capacity}` gauges on every stage
+    /// FIFO.
+    pub fn with_metrics(
+        graph: LayerGraph,
+        plan: &HybridPlan,
+        metrics: Arc<MetricsRegistry>,
+        prefix: &str,
+    ) -> Result<HybridExecutor> {
         plan.validate()?;
         if plan.cfg != graph.cfg {
             bail!(
@@ -182,6 +235,9 @@ impl HybridExecutor {
                 for (k, p) in st.pieces.iter().enumerate() {
                     let g = graph.clone();
                     let rx = stage_inputs[si][k].clone();
+                    rx.instrument(&metrics, &format!("{prefix}stage{si}.shard{k}.input"));
+                    let spans =
+                        StageSpans::register(&metrics, &format!("{prefix}stage{si}.shard{k}"));
                     let tx = merge.clone();
                     let recycle = recycles[k].clone();
                     let (unit_lo, unit_hi, n_hc) = (p.unit_lo, p.unit_hi, p.n_hc());
@@ -191,14 +247,22 @@ impl HybridExecutor {
                         let proj = &g.layers[layer];
                         let (mc, gain) = (proj.dims.mc_out, g.cfg.gain);
                         while let Ok(job) = rx.recv() {
+                            let wait = job.sent.elapsed();
                             let t0 = Instant::now();
                             let mut y = recycle.try_recv().unwrap_or_default();
                             proj.support_cols_tile_into(&job.y, unit_lo, unit_hi, &mut y);
                             Network::hc_softmax_tile(&mut y, n_hc, mc, gain);
-                            busy += t0.elapsed();
+                            let service = t0.elapsed();
+                            busy += service;
+                            spans.observe(wait, service);
                             items += job.lanes as u64;
-                            let sj =
-                                SliceJob { seq: job.seq, shard: k, lanes: job.lanes, y };
+                            let sj = SliceJob {
+                                seq: job.seq,
+                                shard: k,
+                                lanes: job.lanes,
+                                y,
+                                sent: Instant::now(),
+                            };
                             if tx.send(sj).is_err() {
                                 break; // merge closed: failed/shut down
                             }
@@ -209,6 +273,8 @@ impl HybridExecutor {
                             items,
                             busy,
                             wall: start.elapsed(),
+                            queue_wait: spans.queue_wait.stats(),
+                            service: spans.service.stats(),
                             input_fifo: rx.stats(),
                         }
                     }));
@@ -220,6 +286,9 @@ impl HybridExecutor {
                 // downstream as the transport payload — the consumer
                 // reclaims it via Arc::try_unwrap).
                 let g = graph.clone();
+                merge.instrument(&metrics, &format!("{prefix}stage{si}.merge.input"));
+                let merge_spans =
+                    StageSpans::register(&metrics, &format!("{prefix}stage{si}.merge"));
                 let ranges: Vec<(usize, usize)> =
                     st.pieces.iter().map(|p| (p.unit_lo, p.unit_hi)).collect();
                 let n_shards = st.pieces.len();
@@ -230,6 +299,8 @@ impl HybridExecutor {
                     // one round; retain them all.
                     let mut pool = BufPool::with_max(tiles.max(BufPool::MAX));
                     while let Ok(sj) = merge.recv() {
+                        let wait = sj.sent.elapsed();
+                        let t0 = Instant::now();
                         let filled = {
                             // The assembly tile is written slice by
                             // slice: zero it on checkout so a recycled
@@ -259,10 +330,16 @@ impl HybridExecutor {
                                 pool.put(y);
                                 y = out;
                             }
+                            // Service ends before the (potentially
+                            // backpressured) downstream send — send
+                            // blocking is the next hop's queue time.
+                            merge_spans.observe(wait, t0.elapsed());
                             if broadcast(&downstream, sj.seq, lanes, Arc::new(y)).is_err()
                             {
                                 break;
                             }
+                        } else {
+                            merge_spans.observe(wait, t0.elapsed());
                         }
                     }
                 }));
@@ -274,6 +351,9 @@ impl HybridExecutor {
                 // into it.
                 let g = graph.clone();
                 let rx = stage_inputs[si][0].clone();
+                rx.instrument(&metrics, &format!("{prefix}stage{si}.shard0.input"));
+                let spans =
+                    StageSpans::register(&metrics, &format!("{prefix}stage{si}.shard0"));
                 let (lo, hi) = (st.layer_lo, st.layer_hi);
                 workers.push(thread::spawn(move || {
                     let start = Instant::now();
@@ -282,6 +362,7 @@ impl HybridExecutor {
                     let mut pool = BufPool::with_max(tiles.max(BufPool::MAX));
                     while let Ok(job) = rx.recv() {
                         let (seq, lanes) = (job.seq, job.lanes);
+                        let wait = job.sent.elapsed();
                         let t0 = Instant::now();
                         let mut y = pool.get();
                         g.layers[lo].activate_masked_tile_into(&job.y, gain, &mut y);
@@ -303,7 +384,9 @@ impl HybridExecutor {
                             pool.put(y);
                             y = out;
                         }
-                        busy += t0.elapsed();
+                        let service = t0.elapsed();
+                        busy += service;
+                        spans.observe(wait, service);
                         items += lanes as u64;
                         if broadcast(&downstream, seq, lanes, Arc::new(y)).is_err() {
                             break;
@@ -315,12 +398,17 @@ impl HybridExecutor {
                         items,
                         busy,
                         wall: start.elapsed(),
+                        queue_wait: spans.queue_wait.stats(),
+                        service: spans.service.stats(),
                         input_fifo: rx.stats(),
                     }
                 }));
             }
         }
 
+        result.instrument(&metrics, &format!("{prefix}result"));
+        let result_wait = metrics.histogram(&format!("{prefix}result.queue_wait_us"));
+        let infer_h = metrics.histogram(&format!("{prefix}infer_us"));
         Ok(HybridExecutor {
             graph,
             plan: plan.clone(),
@@ -330,7 +418,15 @@ impl HybridExecutor {
             workers,
             plumbers,
             io_lock: Mutex::new(()),
+            metrics,
+            result_wait,
+            infer_h,
         })
+    }
+
+    /// The registry this executor's spans and gauges record into.
+    pub fn metrics(&self) -> Arc<MetricsRegistry> {
+        self.metrics.clone()
     }
 
     pub fn plan(&self) -> &HybridPlan {
@@ -399,6 +495,7 @@ impl HybridExecutor {
     /// AoSoA tiles of up to [`TILE`] lane-interleaved images (the
     /// serving batch loop's `collect_batch` output lands here whole).
     fn infer_chunk(&self, imgs: &[Vec<f32>], out: &mut Vec<Vec<f32>>) -> Result<()> {
+        let round = Instant::now();
         let n_tiles = imgs.len().div_ceil(TILE);
         for (t, tile_imgs) in imgs.chunks(TILE).enumerate() {
             let mut xt = Vec::new();
@@ -415,6 +512,7 @@ impl HybridExecutor {
                 .result
                 .recv()
                 .map_err(|_| anyhow!("result stream closed (simulated device failure)"))?;
+            self.result_wait.record(job.sent.elapsed());
             tiles[job.seq as usize] = (job.lanes, job.y);
         }
         for (lanes, y) in tiles {
@@ -422,6 +520,7 @@ impl HybridExecutor {
                 out.push(unpack_lane(&y, lane));
             }
         }
+        self.infer_h.record(round.elapsed());
         Ok(())
     }
 
@@ -564,6 +663,40 @@ mod tests {
         }
         let reports = e.shutdown();
         assert!(reports.iter().all(|r| r.items == 2), "{reports:?}");
+    }
+
+    #[test]
+    fn stage_spans_and_gauges_recorded_per_worker() {
+        let e = exec_for("toy-deep", 3);
+        let img = vec![0.4; e.graph().cfg.hc_in()];
+        e.infer_batch(&[img.clone(), img]).unwrap();
+        let reg = e.metrics();
+        // Every stage FIFO got depth gauges; every worker recorded one
+        // span pair for the single tile that flowed through.
+        let names = reg.names();
+        assert!(names.contains(&"stage0.shard0.input.depth".to_string()), "{names:?}");
+        assert!(names.contains(&"result.queue_wait_us".to_string()), "{names:?}");
+        assert_eq!(reg.histogram("infer_us").stats().count, 1);
+        assert_eq!(reg.histogram("result.queue_wait_us").stats().count, 1);
+        for (name, h) in reg.histograms_matching(|n| {
+            n.contains(".shard") && (n.ends_with("queue_wait_us") || n.ends_with("service_us"))
+        }) {
+            assert_eq!(h.stats().count, 1, "{name} should have seen exactly one tile");
+        }
+        // A sharded stage's merge worker observes one span per slice.
+        for (name, h) in reg.histograms_matching(|n| n.contains(".merge.queue_wait_us")) {
+            assert!(h.stats().count >= 1, "{name}");
+        }
+        // Reports carry the same spans.
+        let reports = e.shutdown();
+        for r in &reports {
+            assert_eq!(r.queue_wait.count, 1, "{r:?}");
+            assert_eq!(r.service.count, 1, "{r:?}");
+            let j = r.to_json();
+            assert_eq!(j.req("items").unwrap().as_usize().unwrap(), 2);
+            let wait = j.req("queue_wait").unwrap();
+            assert_eq!(wait.req("count").unwrap().as_usize().unwrap(), 1);
+        }
     }
 
     #[test]

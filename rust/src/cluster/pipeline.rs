@@ -21,11 +21,14 @@
 //! `fail_stage` closes every queue and all in-flight and future
 //! inference fails fast.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::bcpnn::LayerGraph;
 use crate::coordinator::server::InferBackend;
 use crate::stream::fifo::FifoStatsSnapshot;
+use crate::telemetry::{LatencyStats, MetricsRegistry};
 
 use super::hybrid::{HybridExecutor, WorkerReport};
 use super::placement;
@@ -43,6 +46,10 @@ pub struct StageExecReport {
     pub busy: std::time::Duration,
     /// Wall time of the stage worker thread.
     pub wall: std::time::Duration,
+    /// Per-job input-queue wait (trace spans).
+    pub queue_wait: LatencyStats,
+    /// Per-job compute time (histogram view of `busy`).
+    pub service: LatencyStats,
     /// Stats of the stage's input stream (backpressure visibility).
     pub input_fifo: FifoStatsSnapshot,
 }
@@ -54,6 +61,8 @@ impl From<WorkerReport> for StageExecReport {
             items: w.items,
             busy: w.busy,
             wall: w.wall,
+            queue_wait: w.queue_wait,
+            service: w.service,
             input_fifo: w.input_fifo,
         }
     }
@@ -82,6 +91,11 @@ impl PipelineParallelExecutor {
 
     pub fn plan(&self) -> &PipelinePlan {
         &self.plan
+    }
+
+    /// The registry the inner hybrid engine's spans record into.
+    pub fn metrics(&self) -> Arc<MetricsRegistry> {
+        self.inner.metrics()
     }
 
     pub fn graph(&self) -> &LayerGraph {

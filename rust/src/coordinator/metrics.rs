@@ -1,22 +1,20 @@
 //! Latency / throughput / energy accounting for the coordinator.
+//!
+//! [`Recorder`] keeps every sample (unbounded `Vec`) and computes
+//! *exact* nearest-rank percentiles — it is the oracle the bounded
+//! `telemetry::LatencyHistogram` is validated against, and the
+//! compatibility surface for the training driver. Production serving
+//! paths record into registry histograms instead (fixed ~3 KB,
+//! mergeable); `Recorder::histogram()` bridges the two worlds.
 
 use std::time::Duration;
 
-/// Streaming latency recorder (stores all samples; percentile queries).
+pub use crate::telemetry::{LatencyHistogram, LatencyStats};
+
+/// Streaming latency recorder (stores all samples; exact percentiles).
 #[derive(Debug, Clone, Default)]
 pub struct Recorder {
     samples_us: Vec<f64>,
-}
-
-/// Summary statistics over recorded latencies.
-#[derive(Debug, Clone, PartialEq)]
-pub struct LatencyStats {
-    pub count: usize,
-    pub mean_ms: f64,
-    pub p50_ms: f64,
-    pub p99_ms: f64,
-    pub min_ms: f64,
-    pub max_ms: f64,
 }
 
 impl Recorder {
@@ -46,24 +44,36 @@ impl Recorder {
         self.samples_us.is_empty()
     }
 
+    /// Bucket the sample set into a bounded histogram (for merging
+    /// exact recordings into the telemetry registry).
+    pub fn histogram(&self) -> LatencyHistogram {
+        let mut h = LatencyHistogram::new();
+        for &us in &self.samples_us {
+            h.record_us(us);
+        }
+        h
+    }
+
     pub fn stats(&self) -> LatencyStats {
         if self.samples_us.is_empty() {
-            return LatencyStats {
-                count: 0, mean_ms: 0.0, p50_ms: 0.0, p99_ms: 0.0,
-                min_ms: 0.0, max_ms: 0.0,
-            };
+            return LatencyStats::zero();
         }
         let mut sorted = self.samples_us.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Nearest-rank percentile: the value at rank ceil(p * n) — an
+        // actual observed sample. (The previous `((n-1)*p).round()`
+        // over-reported on small counts: for 4 samples it returned the
+        // 3rd-smallest as p50.)
         let pct = |p: f64| -> f64 {
-            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-            sorted[idx] / 1e3
+            let rank = (p * sorted.len() as f64).ceil() as usize;
+            sorted[rank.clamp(1, sorted.len()) - 1] / 1e3
         };
         LatencyStats {
             count: sorted.len(),
             mean_ms: sorted.iter().sum::<f64>() / sorted.len() as f64 / 1e3,
             p50_ms: pct(0.50),
             p99_ms: pct(0.99),
+            p999_ms: pct(0.999),
             min_ms: sorted[0] / 1e3,
             max_ms: sorted[sorted.len() - 1] / 1e3,
         }
@@ -106,6 +116,34 @@ mod tests {
     }
 
     #[test]
+    fn nearest_rank_uses_ceil_not_round() {
+        // 4 samples: rank ceil(0.5 * 4) = 2 -> the 2nd-smallest. The
+        // old `((n-1)*p).round()` indexing returned 3.0 here.
+        let mut r = Recorder::new();
+        for ms in [1.0, 2.0, 3.0, 4.0] {
+            r.record_ms(ms);
+        }
+        let s = r.stats();
+        assert_eq!(s.p50_ms, 2.0);
+        assert_eq!(s.p99_ms, 4.0);
+        assert_eq!(s.p999_ms, 4.0);
+    }
+
+    #[test]
+    fn p999_pinned_on_1000_samples() {
+        // Samples 1..=1000 ms: p99 = rank 990, p999 = rank 999.
+        let mut r = Recorder::new();
+        for i in 1..=1000 {
+            r.record_ms(i as f64);
+        }
+        let s = r.stats();
+        assert_eq!(s.p50_ms, 500.0);
+        assert_eq!(s.p99_ms, 990.0);
+        assert_eq!(s.p999_ms, 999.0);
+        assert_eq!(s.max_ms, 1000.0);
+    }
+
+    #[test]
     fn p99_near_max() {
         let mut r = Recorder::new();
         for i in 0..1000 {
@@ -127,6 +165,28 @@ mod tests {
         let mut r = Recorder::new();
         r.record(Duration::from_millis(5));
         assert!((r.stats().mean_ms - 5.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn histogram_bridge_matches_exact_stats_within_bound() {
+        use crate::telemetry::QUANTILE_REL_ERROR;
+        let mut r = Recorder::new();
+        let mut x = 99u64;
+        for _ in 0..10_000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            r.record_ms(((x >> 45) as f64) / 100.0 + 0.05); // 0.05 .. ~5243 ms
+        }
+        let exact = r.stats();
+        let bucketed = r.histogram().stats();
+        assert_eq!(bucketed.count, exact.count);
+        for (e, b) in [
+            (exact.p50_ms, bucketed.p50_ms),
+            (exact.p99_ms, bucketed.p99_ms),
+            (exact.p999_ms, bucketed.p999_ms),
+        ] {
+            assert!((b - e).abs() / e <= QUANTILE_REL_ERROR, "exact {e} vs bucketed {b}");
+        }
+        assert!((bucketed.max_ms - exact.max_ms).abs() < 1e-3, "max is exact to the us");
     }
 
     #[test]

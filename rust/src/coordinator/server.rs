@@ -14,7 +14,7 @@
 //! multi-device one, and tests plug in mocks to pin the batching
 //! semantics (see `rust/tests/serving_batching.rs`).
 
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -22,9 +22,11 @@ use anyhow::{bail, Result};
 
 use crate::bcpnn::{LayerGraph, Workspace};
 use crate::stream::fifo::Fifo;
+use crate::telemetry::{Counter, MetricsRegistry, TraceContext};
+use crate::util::json::Json;
 
 use super::driver::Driver;
-use super::metrics::{LatencyStats, Recorder};
+use super::metrics::LatencyStats;
 
 /// A batched inference engine the serving layer can drive.
 ///
@@ -119,7 +121,7 @@ impl InferBackend for GraphBackend {
 /// One in-flight request.
 struct Request {
     img: Vec<f32>,
-    enqueued: Instant,
+    trace: TraceContext,
     resp: mpsc::Sender<Vec<f32>>,
 }
 
@@ -150,8 +152,41 @@ pub struct ServerReport {
     pub mean_fill: f64,
     /// End-to-end request latency (enqueue -> response ready).
     pub latency: LatencyStats,
+    /// Time requests sat in the input queue before their batch
+    /// dispatched (`latency ~= queue_wait + service` per request).
+    pub queue_wait: LatencyStats,
+    /// Backend compute time attributed to each request (the whole
+    /// batch's dispatch duration, shared by its members).
+    pub service: LatencyStats,
     /// Host-splitter thread count of the backend (1 = single-threaded).
     pub threads: usize,
+}
+
+impl ServerReport {
+    fn empty(threads: usize) -> ServerReport {
+        ServerReport {
+            served: 0,
+            batches: 0,
+            mean_fill: 0.0,
+            latency: LatencyStats::zero(),
+            queue_wait: LatencyStats::zero(),
+            service: LatencyStats::zero(),
+            threads,
+        }
+    }
+
+    /// Machine-readable form (`repro serve --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("served", Json::from(self.served as f64)),
+            ("batches", Json::from(self.batches as f64)),
+            ("mean_fill", Json::from(self.mean_fill)),
+            ("threads", Json::from(self.threads)),
+            ("latency", self.latency.to_json()),
+            ("queue_wait", self.queue_wait.to_json()),
+            ("service", self.service.to_json()),
+        ])
+    }
 }
 
 /// Greedily fill a batch: `first` was already popped by a blocking
@@ -185,19 +220,48 @@ pub fn collect_batch<T>(
 pub struct InferenceServer {
     queue: Fifo<Request>,
     worker: thread::JoinHandle<ServerReport>,
+    metrics: Arc<MetricsRegistry>,
+    requests: Counter,
 }
 
 impl InferenceServer {
-    /// Start the server. Device handles (e.g. PJRT) are not `Send`, so
-    /// the backend is constructed *inside* the worker thread from the
-    /// given factory (e.g. a closure that loads the session); `start`
-    /// blocks until the factory has run and reports its result.
+    /// Start the server with a private metrics registry. Device
+    /// handles (e.g. PJRT) are not `Send`, so the backend is
+    /// constructed *inside* the worker thread from the given factory
+    /// (e.g. a closure that loads the session); `start` blocks until
+    /// the factory has run and reports its result.
     pub fn start<B, F>(make_backend: F, cfg: ServerConfig) -> Result<InferenceServer>
     where
         B: InferBackend,
         F: FnOnce() -> Result<B> + Send + 'static,
     {
+        Self::start_with_metrics(make_backend, cfg, MetricsRegistry::new_arc())
+    }
+
+    /// Start the server recording into `metrics` under the `serve.*`
+    /// prefix: counters `serve.requests` / `serve.served` /
+    /// `serve.batches` / `serve.backend_errors`, queue gauges
+    /// `serve.queue.{depth,high_water,capacity}`, and histograms
+    /// `serve.{e2e,queue_wait,service}_us` — the per-request
+    /// queue-vs-compute decomposition.
+    pub fn start_with_metrics<B, F>(
+        make_backend: F,
+        cfg: ServerConfig,
+        metrics: Arc<MetricsRegistry>,
+    ) -> Result<InferenceServer>
+    where
+        B: InferBackend,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
         let queue: Fifo<Request> = Fifo::with_capacity(cfg.queue_depth);
+        queue.instrument(&metrics, "serve.queue");
+        let requests = metrics.counter("serve.requests");
+        let served_ctr = metrics.counter("serve.served");
+        let batches_ctr = metrics.counter("serve.batches");
+        let errors_ctr = metrics.counter("serve.backend_errors");
+        let e2e_h = metrics.histogram("serve.e2e_us");
+        let wait_h = metrics.histogram("serve.queue_wait_us");
+        let svc_h = metrics.histogram("serve.service_us");
         let rx = queue.clone();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let worker = thread::spawn(move || {
@@ -208,18 +272,11 @@ impl InferenceServer {
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(format!("{e:#}")));
-                    return ServerReport {
-                        served: 0,
-                        batches: 0,
-                        mean_fill: 0.0,
-                        latency: Recorder::new().stats(),
-                        threads: 1,
-                    };
+                    return ServerReport::empty(1);
                 }
             };
             let max_batch = backend.max_batch();
             let threads = backend.threads();
-            let mut rec = Recorder::new();
             let mut served = 0u64;
             let mut batches = 0u64;
             let mut fills = 0u64;
@@ -234,31 +291,46 @@ impl InferenceServer {
                 // `req.img` after dispatch (the serving hot path).
                 imgs.clear();
                 imgs.extend(reqs.iter_mut().map(|r| std::mem::take(&mut r.img)));
+                // Queue wait ends here: the batch is leaving the queue
+                // for the backend.
+                let dispatch = Instant::now();
+                for req in &reqs {
+                    wait_h.record(dispatch - req.trace.sent);
+                }
                 match backend.infer_batch(&imgs) {
                     Ok(probs) => {
+                        // The batch's compute time is each member's
+                        // service time (they rode the same dispatch).
+                        let service = dispatch.elapsed();
                         for (req, p) in reqs.into_iter().zip(probs) {
-                            rec.record(req.enqueued.elapsed());
+                            svc_h.record(service);
+                            e2e_h.record(req.trace.age());
                             let _ = req.resp.send(p);
                             served += 1;
+                            served_ctr.inc();
                         }
                     }
                     Err(_) => {
                         // Drop responses; clients see a closed channel.
+                        errors_ctr.inc();
                     }
                 }
                 batches += 1;
+                batches_ctr.inc();
                 fills += imgs.len() as u64;
             }
             ServerReport {
                 served,
                 batches,
                 mean_fill: fills as f64 / batches.max(1) as f64,
-                latency: rec.stats(),
+                latency: e2e_h.stats(),
+                queue_wait: wait_h.stats(),
+                service: svc_h.stats(),
                 threads,
             }
         });
         match ready_rx.recv() {
-            Ok(Ok(())) => Ok(InferenceServer { queue, worker }),
+            Ok(Ok(())) => Ok(InferenceServer { queue, worker, metrics, requests }),
             Ok(Err(msg)) => {
                 let _ = worker.join();
                 Err(anyhow::anyhow!("server startup failed: {msg}"))
@@ -270,13 +342,20 @@ impl InferenceServer {
         }
     }
 
+    /// The registry this server records into (feed it to a
+    /// `telemetry::MetricsExporter` for live export).
+    pub fn metrics(&self) -> Arc<MetricsRegistry> {
+        self.metrics.clone()
+    }
+
     /// Submit one image; returns a handle to await the probabilities.
     pub fn submit(&self, img: Vec<f32>) -> Result<mpsc::Receiver<Vec<f32>>> {
         let (tx, rx) = mpsc::channel();
-        let req = Request { img, enqueued: Instant::now(), resp: tx };
+        let req = Request { img, trace: TraceContext::start(), resp: tx };
         self.queue
             .send(req)
             .map_err(|_| anyhow::anyhow!("server shut down"))?;
+        self.requests.inc();
         Ok(rx)
     }
 

@@ -50,6 +50,7 @@ pub mod report;
 pub mod roofline;
 pub mod runtime;
 pub mod stream;
+pub mod telemetry;
 pub mod testing;
 pub mod util;
 

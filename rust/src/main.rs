@@ -36,7 +36,11 @@ COMMANDS:
                     --struct --seed S --artifacts DIR)
   serve             inference server demo (--config tiny --requests N
                     --artifacts DIR); --host serves the pure-rust
-                    batched tile engine instead of PJRT (--threads N)
+                    batched tile engine instead of PJRT (--threads N);
+                    --json prints the report machine-readable;
+                    --metrics PATH|PORT exports live telemetry
+                    (JSON-lines file or Prometheus text on
+                    127.0.0.1:PORT, --metrics-interval MS, default 500)
   bench             host batched-tile throughput: single-image span vs
                     AoSoA tile vs tile + threads (--config tiny
                     --images N --threads N)
@@ -46,7 +50,10 @@ COMMANDS:
                     (--models mnist-deep2,toy-deep,model1)
   plan              hybrid placement: pipeline stages x hypercolumn
                     shards on a device fleet (--models mnist-deep2
-                    --fleet u55c:3 --version infer --tol 0.1)
+                    --fleet u55c:3 --version infer --tol 0.1);
+                    --measure N runs N images through the hybrid
+                    executor on host threads and prints the measured
+                    per-worker queue-vs-compute decomposition
   roofline          Fig 6 operating points (--models ...)
   accuracy          Table 2 accuracy rows: PJRT path vs pure-rust CPU
                     (--config tiny --epochs N)
@@ -121,6 +128,30 @@ fn run(argv: Vec<String>) -> Result<()> {
     }
 }
 
+/// `--metrics PATH|PORT`: attach a live exporter to a server's metric
+/// registry. Returns the running exporter so the caller can stop it
+/// (flushing the final snapshot) after shutdown.
+fn start_exporter(
+    args: &Args,
+    reg: std::sync::Arc<bcpnn_accel::telemetry::MetricsRegistry>,
+) -> Result<Option<bcpnn_accel::telemetry::MetricsExporter>> {
+    use bcpnn_accel::telemetry::{ExportTarget, MetricsExporter};
+    let Some(spec) = args.get("metrics") else {
+        return Ok(None);
+    };
+    let interval_ms: u64 = args.get_parse("metrics-interval", 500u64)?;
+    let ex = MetricsExporter::start(
+        ExportTarget::parse(spec),
+        reg,
+        Duration::from_millis(interval_ms.max(1)),
+    )?;
+    match ex.addr() {
+        Some(addr) => eprintln!("metrics: http://{addr}/metrics"),
+        None => eprintln!("metrics: JSON-lines -> {spec} (every {interval_ms} ms)"),
+    }
+    Ok(Some(ex))
+}
+
 fn models_arg(args: &Args) -> Vec<String> {
     match args.get("models") {
         Some(s) => s
@@ -157,6 +188,40 @@ fn cmd_plan(args: &Args) -> Result<()> {
     };
     let tol: f64 = args.get_parse("tol", 0.10f64)?;
     println!("{}", report::placement_table(&refs, &fleet, version, tol)?);
+
+    // `--measure N`: run the planned placement for real — the hybrid
+    // executor on host threads — and print the measured per-worker
+    // queue-vs-compute decomposition next to the modeled table above.
+    let measure: usize = args.get_parse("measure", 0usize)?;
+    if measure > 0 {
+        use bcpnn_accel::bcpnn::LayerGraph;
+        use bcpnn_accel::cluster::{plan_hybrid, Fleet, HybridExecutor};
+
+        let seed: u64 = args.get_parse("seed", 42u64)?;
+        let resolved = Fleet::resolve(&fleet)?;
+        for &m in &refs {
+            let cfg = by_name(m)?;
+            let hp = match plan_hybrid(&cfg, &resolved, version, tol) {
+                Ok(p) => p,
+                Err(e) => {
+                    println!("{m}: no feasible placement to measure: {e:#}");
+                    continue;
+                }
+            };
+            let exec = HybridExecutor::new(LayerGraph::new(cfg.clone(), seed), &hp)?;
+            let data = synth::generate(cfg.img_side, cfg.n_classes, measure, seed, 0.15);
+            let t0 = std::time::Instant::now();
+            exec.infer_batch(&data.images)?;
+            let wall = t0.elapsed();
+            println!(
+                "{m}: measured {measure} images in {:.1} ms ({:.0} img/s, host threads)",
+                wall.as_secs_f64() * 1e3,
+                measure as f64 / wall.as_secs_f64().max(1e-9),
+            );
+            print!("{}", report::decomposition_table(&exec.shutdown()));
+            println!();
+        }
+    }
     Ok(())
 }
 
@@ -342,7 +407,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return cmd_serve_host(args, cfg, n_requests, seed);
     }
 
-    println!("loading infer artifact for {name}...");
+    eprintln!("loading infer artifact for {name}...");
     let dir = artifacts_dir(args);
     let name2 = name.clone();
     let ckpt = args.get("load").map(|s| s.to_string());
@@ -359,12 +424,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     ccfg.name, name2
                 );
                 driver.set_params(params);
-                println!("loaded checkpoint {path}");
+                eprintln!("loaded checkpoint {path}");
             }
             Ok(driver)
         },
         ServerConfig::default(),
     )?;
+    let exporter = start_exporter(args, server.metrics())?;
 
     let data = synth::generate(cfg.img_side, cfg.n_classes, n_requests, seed, 0.15);
     let mut pending = Vec::new();
@@ -385,22 +451,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let rep = server.shutdown();
-    print_serve_report(&rep, cfg.batch);
-    println!("(untrained net agreement with labels: {agree}/{n_requests})");
+    if let Some(ex) = exporter {
+        ex.stop();
+    }
+    if args.flag("json") {
+        println!("{}", rep.to_json());
+    } else {
+        print_serve_report(&rep, cfg.batch);
+        println!("(untrained net agreement with labels: {agree}/{n_requests})");
+    }
     Ok(())
 }
 
 /// Shared serving summary of `repro serve` (PJRT and `--host` modes
-/// print identical report shapes).
+/// print identical report shapes): the queue-vs-compute latency
+/// decomposition plus the batching capacity in use.
 fn print_serve_report(rep: &bcpnn_accel::coordinator::ServerReport, batch: usize) {
-    println!(
-        "served {} requests in {} batches (mean fill {:.1}/{batch}, {} thread(s))",
-        rep.served, rep.batches, rep.mean_fill, rep.threads
-    );
-    println!(
-        "latency: mean {:.3} ms  p50 {:.3} ms  p99 {:.3} ms  max {:.3} ms",
-        rep.latency.mean_ms, rep.latency.p50_ms, rep.latency.p99_ms, rep.latency.max_ms
-    );
+    print!("{}", report::serve_decomposition(rep));
+    println!("  (batch capacity {batch})");
 }
 
 /// `repro serve --host`: the pure-rust serving path — a [`GraphBackend`]
@@ -418,7 +486,7 @@ fn cmd_serve_host(
     let name = cfg.name.clone();
     let ckpt = args.get("load").map(|s| s.to_string());
     let cfg_worker = cfg.clone();
-    println!("serving {name} on the host tile engine ({threads} thread(s))...");
+    eprintln!("serving {name} on the host tile engine ({threads} thread(s))...");
     let server = InferenceServer::start(
         move || {
             let graph = match ckpt {
@@ -430,7 +498,7 @@ fn cmd_serve_host(
                         "checkpoint is for config {:?}, serving {:?}",
                         g.cfg.name, cfg_worker.name
                     );
-                    println!("loaded checkpoint {path}");
+                    eprintln!("loaded checkpoint {path}");
                     g
                 }
                 None => LayerGraph::new(cfg_worker, seed),
@@ -439,6 +507,7 @@ fn cmd_serve_host(
         },
         ServerConfig::default(),
     )?;
+    let exporter = start_exporter(args, server.metrics())?;
 
     let data = synth::generate(cfg.img_side, cfg.n_classes, n_requests, seed, 0.15);
     let mut pending = Vec::new();
@@ -449,7 +518,14 @@ fn cmd_serve_host(
         let _ = rx.recv_timeout(Duration::from_secs(30))?;
     }
     let rep = server.shutdown();
-    print_serve_report(&rep, cfg.batch);
+    if let Some(ex) = exporter {
+        ex.stop();
+    }
+    if args.flag("json") {
+        println!("{}", rep.to_json());
+    } else {
+        print_serve_report(&rep, cfg.batch);
+    }
     Ok(())
 }
 

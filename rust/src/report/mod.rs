@@ -430,6 +430,58 @@ pub fn placement_table(
     Ok(s)
 }
 
+/// Queue-vs-compute decomposition (`repro serve --host`, `repro plan
+/// --measure`): per stage/shard worker, how long jobs sat in the input
+/// stream vs how long the kernel ran on them — the measured
+/// counterpart of the planner's modeled per-stage intervals. Columns
+/// are milliseconds except items / fifo high-water.
+pub fn decomposition_table(workers: &[crate::cluster::hybrid::WorkerReport]) -> String {
+    let mut s = String::new();
+    s.push_str("Per-worker queue-vs-compute decomposition (measured)\n");
+    s.push_str(
+        "  stage shard  items   busy_ms  wait_p50  wait_p99   svc_p50   svc_p99  fifo_hw\n",
+    );
+    for w in workers {
+        s.push_str(&format!(
+            "  {:<5} {:<5} {:>6} {:>9.2} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>8}\n",
+            w.stage,
+            w.shard,
+            w.items,
+            w.busy.as_secs_f64() * 1e3,
+            w.queue_wait.p50_ms,
+            w.queue_wait.p99_ms,
+            w.service.p50_ms,
+            w.service.p99_ms,
+            w.input_fifo.high_water,
+        ));
+    }
+    s
+}
+
+/// One-block latency decomposition for a serving report: end-to-end
+/// latency next to its queue-wait and service components. `e2e ~=
+/// wait + service` by construction (per request: dispatch delay plus
+/// the batch's inference time), so a gap between the columns points at
+/// untracked overhead.
+pub fn serve_decomposition(r: &crate::coordinator::server::ServerReport) -> String {
+    let row = |label: &str, st: &crate::coordinator::metrics::LatencyStats| {
+        format!(
+            "  {label:<10} {:>7.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3}\n",
+            st.mean_ms, st.p50_ms, st.p99_ms, st.p999_ms, st.max_ms,
+        )
+    };
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Serving latency decomposition — {} images in {} batches (mean fill {:.2}, {} threads)\n",
+        r.served, r.batches, r.mean_fill, r.threads
+    ));
+    s.push_str("  span         mean       p50       p99      p999       max  (ms)\n");
+    s.push_str(&row("e2e", &r.latency));
+    s.push_str(&row("queue_wait", &r.queue_wait));
+    s.push_str(&row("service", &r.service));
+    s
+}
+
 /// Render a receptive field (Fig. 5) as ASCII art.
 pub fn ascii_field(field: &[f64], side: usize) -> String {
     let ramp = b" .:-=+*#%@";
@@ -530,6 +582,48 @@ mod tests {
         let mixed = crate::config::FleetSpec::parse("u55c,u280").unwrap();
         let t = placement_table(&["model2"], &mixed, KernelVersion::Infer, 0.25).unwrap();
         assert!(t.contains("Alveo U280"), "{t}");
+    }
+
+    #[test]
+    fn decomposition_tables_render() {
+        use crate::cluster::hybrid::WorkerReport;
+        use crate::coordinator::metrics::{LatencyHistogram, LatencyStats};
+        use crate::coordinator::server::ServerReport;
+        use std::time::Duration;
+
+        let mut h = LatencyHistogram::new();
+        for ms in [1.0, 2.0, 4.0] {
+            h.record_ms(ms);
+        }
+        let st = h.stats();
+        let w = WorkerReport {
+            stage: 0,
+            shard: 1,
+            items: 3,
+            busy: Duration::from_millis(7),
+            wall: Duration::from_millis(9),
+            queue_wait: st.clone(),
+            service: st.clone(),
+            input_fifo: Default::default(),
+        };
+        let t = decomposition_table(&[w]);
+        assert!(t.contains("wait_p50"), "{t}");
+        assert!(t.contains("  0     1          3"), "{t}");
+
+        let r = ServerReport {
+            served: 3,
+            batches: 2,
+            mean_fill: 1.5,
+            latency: st.clone(),
+            queue_wait: LatencyStats::zero(),
+            service: st,
+            threads: 4,
+        };
+        let s = serve_decomposition(&r);
+        assert!(s.contains("3 images in 2 batches"), "{s}");
+        assert!(s.contains("e2e"), "{s}");
+        assert!(s.contains("queue_wait"), "{s}");
+        assert!(s.contains("service"), "{s}");
     }
 
     #[test]

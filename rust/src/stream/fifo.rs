@@ -9,7 +9,9 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::telemetry::{Gauge, MetricsRegistry};
 
 /// Error returned by `recv` when the channel is closed and drained.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,12 +54,42 @@ pub struct FifoStatsSnapshot {
     pub high_water: u64,
 }
 
+impl FifoStatsSnapshot {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("pushes", Json::from(self.pushes as f64)),
+            ("pops", Json::from(self.pops as f64)),
+            ("write_stalls", Json::from(self.write_stalls as f64)),
+            ("read_stalls", Json::from(self.read_stalls as f64)),
+            ("high_water", Json::from(self.high_water as f64)),
+        ])
+    }
+}
+
+/// Registry gauges mirrored on every push/pop once the FIFO is
+/// [`instrument`](Fifo::instrument)ed: live occupancy and high-water.
+struct FifoGauges {
+    depth: Gauge,
+    high_water: Gauge,
+}
+
 struct Inner<T> {
     q: Mutex<State<T>>,
     not_full: Condvar,
     not_empty: Condvar,
     capacity: usize,
     stats: FifoStats,
+    gauges: OnceLock<FifoGauges>,
+}
+
+impl<T> Inner<T> {
+    fn mirror_depth(&self, occ: usize) {
+        if let Some(g) = self.gauges.get() {
+            g.depth.set(occ as i64);
+            g.high_water.raise(occ as i64);
+        }
+    }
 }
 
 struct State<T> {
@@ -90,12 +122,27 @@ impl<T> Fifo<T> {
                 not_empty: Condvar::new(),
                 capacity,
                 stats: FifoStats::default(),
+                gauges: OnceLock::new(),
             }),
         }
     }
 
     pub fn capacity(&self) -> usize {
         self.inner.capacity
+    }
+
+    /// Attach live occupancy gauges under `prefix` in `reg`:
+    /// `{prefix}.depth` (current occupancy), `{prefix}.high_water`
+    /// (max occupancy seen since instrumentation) and
+    /// `{prefix}.capacity` (static). Idempotent; the first caller
+    /// wins. Uninstrumented FIFOs pay one relaxed atomic load per op.
+    pub fn instrument(&self, reg: &MetricsRegistry, prefix: &str) {
+        let depth = reg.gauge(&format!("{prefix}.depth"));
+        let high_water = reg.gauge(&format!("{prefix}.high_water"));
+        reg.gauge(&format!("{prefix}.capacity")).set(self.inner.capacity as i64);
+        let occ = self.len();
+        let _ = self.inner.gauges.set(FifoGauges { depth, high_water });
+        self.inner.mirror_depth(occ);
     }
 
     /// Blocking push (backpressure). Returns Err(v) if the FIFO closed.
@@ -115,6 +162,7 @@ impl<T> Fifo<T> {
         let occ = st.buf.len() as u64;
         inner.stats.pushes.fetch_add(1, Ordering::Relaxed);
         inner.stats.high_water.fetch_max(occ, Ordering::Relaxed);
+        inner.mirror_depth(occ as usize);
         drop(st);
         inner.not_empty.notify_one();
         Ok(())
@@ -133,6 +181,7 @@ impl<T> Fifo<T> {
         match st.buf.pop_front() {
             Some(v) => {
                 inner.stats.pops.fetch_add(1, Ordering::Relaxed);
+                inner.mirror_depth(st.buf.len());
                 drop(st);
                 inner.not_full.notify_one();
                 Ok(v)
@@ -148,6 +197,7 @@ impl<T> Fifo<T> {
         let v = st.buf.pop_front();
         if v.is_some() {
             inner.stats.pops.fetch_add(1, Ordering::Relaxed);
+            inner.mirror_depth(st.buf.len());
             inner.not_full.notify_one();
         }
         v
@@ -310,5 +360,30 @@ mod tests {
     #[should_panic(expected = "depth must be >= 1")]
     fn zero_capacity_rejected() {
         let _ = Fifo::<u8>::with_capacity(0);
+    }
+
+    #[test]
+    fn instrumented_fifo_mirrors_depth_gauges() {
+        let reg = MetricsRegistry::new();
+        let f = Fifo::with_capacity(4);
+        f.send(1).unwrap(); // pre-instrumentation occupancy picked up
+        f.instrument(&reg, "stage0.shard0.input");
+        assert_eq!(reg.gauge("stage0.shard0.input.depth").get(), 1);
+        assert_eq!(reg.gauge("stage0.shard0.input.capacity").get(), 4);
+        f.send(2).unwrap();
+        f.send(3).unwrap();
+        assert_eq!(reg.gauge("stage0.shard0.input.depth").get(), 3);
+        assert_eq!(reg.gauge("stage0.shard0.input.high_water").get(), 3);
+        f.recv().unwrap();
+        assert_eq!(f.try_recv(), Some(2));
+        assert_eq!(reg.gauge("stage0.shard0.input.depth").get(), 1);
+        // High water is sticky.
+        assert_eq!(reg.gauge("stage0.shard0.input.high_water").get(), 3);
+        // Second instrumentation attempt is a no-op (first wins): ops
+        // keep mirroring into the original gauges.
+        f.instrument(&reg, "other");
+        f.recv().unwrap();
+        assert_eq!(reg.gauge("stage0.shard0.input.depth").get(), 0);
+        assert_eq!(reg.gauge("other.depth").get(), 0, "losing prefix never receives updates");
     }
 }

@@ -1,0 +1,255 @@
+//! Live metrics export: a background snapshot thread emitting either
+//! JSON-lines to a file (one registry snapshot object per line) or a
+//! Prometheus text exposition over a minimal HTTP endpoint —
+//! `repro serve --metrics <path|port>` selects by parsing the value.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use super::registry::MetricsRegistry;
+use crate::util::json::Json;
+
+/// Where `--metrics <value>` sends snapshots: a `u16` parses as an
+/// HTTP port (Prometheus text on `/metrics`), anything else is a
+/// JSON-lines file path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExportTarget {
+    Jsonl(PathBuf),
+    HttpPort(u16),
+}
+
+impl ExportTarget {
+    pub fn parse(s: &str) -> ExportTarget {
+        match s.parse::<u16>() {
+            Ok(port) => ExportTarget::HttpPort(port),
+            Err(_) => ExportTarget::Jsonl(PathBuf::from(s)),
+        }
+    }
+}
+
+/// One registry snapshot as a self-describing JSON line.
+fn snapshot_line(reg: &MetricsRegistry, seq: u64) -> Json {
+    let ts = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default()
+        .as_millis() as f64;
+    match reg.to_json() {
+        Json::Obj(mut m) => {
+            m.insert("seq".to_string(), Json::from(seq as f64));
+            m.insert("ts_unix_ms".to_string(), Json::from(ts));
+            Json::Obj(m)
+        }
+        other => other, // unreachable: to_json always returns an object
+    }
+}
+
+/// Background exporter. `stop()` (or drop) halts the thread; in
+/// JSON-lines mode a final snapshot is flushed on stop so even runs
+/// shorter than one interval leave a complete record.
+pub struct MetricsExporter {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    addr: Option<SocketAddr>,
+}
+
+impl MetricsExporter {
+    pub fn start(
+        target: ExportTarget,
+        reg: Arc<MetricsRegistry>,
+        interval: Duration,
+    ) -> Result<MetricsExporter> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        match target {
+            ExportTarget::Jsonl(path) => {
+                let mut file = std::fs::File::create(&path)
+                    .with_context(|| format!("create metrics file {}", path.display()))?;
+                let handle = thread::Builder::new()
+                    .name("metrics-jsonl".into())
+                    .spawn(move || {
+                        let mut seq = 0u64;
+                        loop {
+                            // Sleep in small slices so stop() returns
+                            // promptly even with long intervals.
+                            let deadline = interval;
+                            let mut slept = Duration::ZERO;
+                            while slept < deadline && !flag.load(Ordering::Relaxed) {
+                                let step = (deadline - slept).min(Duration::from_millis(10));
+                                thread::sleep(step);
+                                slept += step;
+                            }
+                            let stopping = flag.load(Ordering::Relaxed);
+                            let line = snapshot_line(&reg, seq);
+                            seq += 1;
+                            let _ = writeln!(file, "{line}");
+                            let _ = file.flush();
+                            if stopping {
+                                break;
+                            }
+                        }
+                    })
+                    .context("spawn metrics-jsonl thread")?;
+                Ok(MetricsExporter { stop, handle: Some(handle), addr: None })
+            }
+            ExportTarget::HttpPort(port) => {
+                let listener = TcpListener::bind(("127.0.0.1", port))
+                    .with_context(|| format!("bind metrics port {port}"))?;
+                let addr = listener.local_addr().context("metrics listener addr")?;
+                listener.set_nonblocking(true).context("set metrics listener nonblocking")?;
+                let handle = thread::Builder::new()
+                    .name("metrics-http".into())
+                    .spawn(move || {
+                        while !flag.load(Ordering::Relaxed) {
+                            match listener.accept() {
+                                Ok((mut conn, _)) => {
+                                    let _ = conn.set_nonblocking(false);
+                                    let _ = conn
+                                        .set_read_timeout(Some(Duration::from_millis(500)));
+                                    // Drain the request head; content is
+                                    // irrelevant (every path serves the
+                                    // exposition).
+                                    let mut buf = [0u8; 1024];
+                                    let _ = conn.read(&mut buf);
+                                    let body = reg.prometheus();
+                                    let resp = format!(
+                                        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; \
+                                         version=0.0.4\r\nContent-Length: {}\r\nConnection: \
+                                         close\r\n\r\n{body}",
+                                        body.len()
+                                    );
+                                    let _ = conn.write_all(resp.as_bytes());
+                                }
+                                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                    thread::sleep(Duration::from_millis(10));
+                                }
+                                Err(_) => thread::sleep(Duration::from_millis(10)),
+                            }
+                        }
+                    })
+                    .context("spawn metrics-http thread")?;
+                Ok(MetricsExporter { stop, handle: Some(handle), addr: Some(addr) })
+            }
+        }
+    }
+
+    /// Bound address in HTTP mode (reports the real port when 0 was
+    /// requested); `None` in JSON-lines mode.
+    pub fn addr(&self) -> Option<SocketAddr> {
+        self.addr
+    }
+
+    /// Stop the exporter and wait for the thread (final snapshot
+    /// flushed in JSON-lines mode).
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsExporter {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpStream;
+
+    #[test]
+    fn target_parse_port_vs_path() {
+        assert_eq!(ExportTarget::parse("9184"), ExportTarget::HttpPort(9184));
+        assert_eq!(
+            ExportTarget::parse("/tmp/m.jsonl"),
+            ExportTarget::Jsonl(PathBuf::from("/tmp/m.jsonl"))
+        );
+        assert_eq!(
+            ExportTarget::parse("99999"), // > u16::MAX -> path
+            ExportTarget::Jsonl(PathBuf::from("99999"))
+        );
+    }
+
+    #[test]
+    fn jsonl_exporter_writes_parseable_snapshots() {
+        let reg = MetricsRegistry::new_arc();
+        reg.counter("serve.requests").add(7);
+        reg.histogram("serve.e2e_us").record_ms(1.5);
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("bcpnn-metrics-test-{}.jsonl", std::process::id()));
+        let exp = MetricsExporter::start(
+            ExportTarget::Jsonl(path.clone()),
+            reg.clone(),
+            Duration::from_millis(10),
+        )
+        .unwrap();
+        thread::sleep(Duration::from_millis(60));
+        reg.gauge("serve.queue.depth").set(2);
+        exp.stop();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() >= 2, "expected multiple snapshots, got {}", lines.len());
+        for line in &lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.req("ts_unix_ms").unwrap().as_f64().unwrap() > 0.0);
+            let n = j
+                .req("counters")
+                .unwrap()
+                .req("serve.requests")
+                .unwrap()
+                .as_f64()
+                .unwrap();
+            assert_eq!(n, 7.0);
+            let hists = j.req("histograms").unwrap();
+            let h = hists.req("serve.e2e_us").unwrap();
+            assert_eq!(h.req("count").unwrap().as_usize().unwrap(), 1);
+        }
+        // Final (stop-flushed) snapshot saw the late gauge.
+        let last = Json::parse(lines[lines.len() - 1]).unwrap();
+        let depth = last
+            .req("gauges")
+            .unwrap()
+            .req("serve.queue.depth")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(depth, 2.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn http_exporter_serves_prometheus_text() {
+        let reg = MetricsRegistry::new_arc();
+        reg.counter("serve.served").add(3);
+        reg.histogram("serve.e2e_us").record_ms(2.0);
+        let exp = MetricsExporter::start(
+            ExportTarget::HttpPort(0), // ephemeral port
+            reg,
+            Duration::from_millis(100),
+        )
+        .unwrap();
+        let addr = exp.addr().unwrap();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("bcpnn_serve_served 3"), "{resp}");
+        assert!(resp.contains("bcpnn_serve_e2e_us{quantile=\"0.5\"}"), "{resp}");
+        assert!(resp.contains("bcpnn_serve_e2e_us_count 1"), "{resp}");
+        exp.stop();
+    }
+}

@@ -1,0 +1,361 @@
+//! Bounded log-bucketed latency histogram — the fixed-footprint
+//! replacement for `Recorder`'s grow-forever `Vec<f64>`.
+//!
+//! Layout (HdrHistogram-style log-linear, `SUB_BITS = 4`):
+//!
+//! - values are microseconds, clamped to `u64`;
+//! - below 16 us every bucket is exactly 1 us wide (indices 0..16);
+//! - at and above 16 us each power-of-two octave `[2^e, 2^(e+1))` is
+//!   split into 16 linear subbuckets of width `2^(e-4)`, so a value is
+//!   always within half a subbucket (<= 1/32 ~= 3.125%) of the bucket
+//!   midpoint the quantile query reports;
+//! - the top octave is `e = 26`, covering values up to `2^27 - 1` us
+//!   (~134 s); anything larger clamps into the last bucket (the exact
+//!   `max` is still tracked separately, so `p100`/`max` never lie).
+//!
+//! Total: `16 + (26 - 4 + 1) * 16 = 384` buckets of `u64` = 3072 bytes
+//! of counts, allocated once at construction. Recording is O(1) with
+//! zero per-sample allocation; merging is element-wise addition of
+//! bucket counts, which makes the merge *bucket-exact*: merging two
+//! histograms yields bit-identical counts to one histogram fed the
+//! concatenated sample stream.
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Linear subbuckets per octave = `1 << SUB_BITS`.
+const SUB_BITS: u32 = 4;
+const SUB: usize = 1 << SUB_BITS;
+/// Highest octave tracked exactly; values >= 2^(E_MAX+1) us clamp.
+const E_MAX: u32 = 26;
+/// Bucket count: 16 exact 1-us buckets + 16 per octave 4..=26.
+const N_BUCKETS: usize = SUB + (E_MAX - SUB_BITS + 1) as usize * SUB;
+
+/// Relative error bound of quantile queries for in-range values
+/// (>= 16 us, < ~134 s): half of one subbucket width over the octave
+/// base, `2^(e-5) / 2^e = 1/32`. Documented in DESIGN.md §Telemetry.
+pub const QUANTILE_REL_ERROR: f64 = 1.0 / 32.0;
+
+/// Summary statistics over recorded latencies (milliseconds).
+///
+/// Percentiles are *nearest-rank with ceil*: the reported pXX is the
+/// value at rank `ceil(p * count)` of the sorted samples — an actual
+/// observed value (exactly, for `Recorder`; to within
+/// [`QUANTILE_REL_ERROR`] for [`LatencyHistogram`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencyStats {
+    pub fn zero() -> LatencyStats {
+        LatencyStats {
+            count: 0,
+            mean_ms: 0.0,
+            p50_ms: 0.0,
+            p99_ms: 0.0,
+            p999_ms: 0.0,
+            min_ms: 0.0,
+            max_ms: 0.0,
+        }
+    }
+
+    /// Machine-readable form, following `BenchResult::to_json` naming
+    /// (unit-suffixed keys).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::from(self.count)),
+            ("mean_ms", Json::from(self.mean_ms)),
+            ("p50_ms", Json::from(self.p50_ms)),
+            ("p99_ms", Json::from(self.p99_ms)),
+            ("p999_ms", Json::from(self.p999_ms)),
+            ("min_ms", Json::from(self.min_ms)),
+            ("max_ms", Json::from(self.max_ms)),
+        ])
+    }
+}
+
+/// Fixed-footprint latency histogram. See module docs for the bucket
+/// layout and error bound.
+#[derive(Clone)]
+pub struct LatencyHistogram {
+    counts: Box<[u64]>,
+    count: u64,
+    sum_us: f64,
+    min_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram::new()
+    }
+}
+
+impl std::fmt::Debug for LatencyHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LatencyHistogram")
+            .field("count", &self.count)
+            .field("sum_us", &self.sum_us)
+            .field("min_us", &self.min_us)
+            .field("max_us", &self.max_us)
+            .finish()
+    }
+}
+
+/// Bucket index for a microsecond value (total function; clamps).
+fn bucket_index(us: u64) -> usize {
+    if us < SUB as u64 {
+        return us as usize;
+    }
+    let e = 63 - us.leading_zeros(); // floor(log2 us), >= SUB_BITS
+    if e > E_MAX {
+        return N_BUCKETS - 1;
+    }
+    let sub = ((us >> (e - SUB_BITS)) as usize) & (SUB - 1);
+    (e - SUB_BITS + 1) as usize * SUB + sub
+}
+
+/// Inclusive lower bound of bucket `i`, in microseconds.
+fn bucket_lo(i: usize) -> u64 {
+    if i < SUB {
+        return i as u64;
+    }
+    let e = (i / SUB) as u32 - 1 + SUB_BITS;
+    let sub = (i % SUB) as u64;
+    (1u64 << e) + sub * (1u64 << (e - SUB_BITS))
+}
+
+/// Midpoint of bucket `i` (the value quantile queries report).
+fn bucket_mid(i: usize) -> f64 {
+    let lo = bucket_lo(i);
+    let width = if i < SUB { 1 } else { 1u64 << ((i / SUB) as u32 - 1) };
+    lo as f64 + width as f64 / 2.0
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: vec![0u64; N_BUCKETS].into_boxed_slice(),
+            count: 0,
+            sum_us: 0.0,
+            min_us: u64::MAX,
+            max_us: 0,
+        }
+    }
+
+    /// Record one latency sample. O(1), no allocation.
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_micros() as f64);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.record_us(ms * 1e3);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let v = us.max(0.0) as u64; // NaN saturates to 0
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum_us += us.max(0.0);
+        self.min_us = self.min_us.min(v);
+        self.max_us = self.max_us.max(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Sum of all recorded samples, microseconds.
+    pub fn sum_us(&self) -> f64 {
+        self.sum_us
+    }
+
+    /// Heap footprint of the bucket array (fixed for the lifetime of
+    /// the histogram — pinned by a test).
+    pub fn heap_bytes(&self) -> usize {
+        self.counts.len() * std::mem::size_of::<u64>()
+    }
+
+    /// Raw bucket counts (for the bucket-exact merge property test).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Element-wise fold of `other` into `self` — bucket-exact.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Nearest-rank quantile (rank `ceil(q * count)`), microseconds.
+    ///
+    /// Returns the midpoint of the bucket holding the ranked sample,
+    /// clamped into the exact observed `[min, max]` range (so a
+    /// single-sample histogram reports that sample exactly, and q=1.0
+    /// reports the exact max).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        // The rank-1 sample is the exact min and the rank-count sample
+        // the exact max — both tracked outside the buckets.
+        if rank == 1 {
+            return self.min_us as f64;
+        }
+        if rank == self.count {
+            return self.max_us as f64;
+        }
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_mid(i).clamp(self.min_us as f64, self.max_us as f64);
+            }
+        }
+        self.max_us as f64 // unreachable: counts sum to count
+    }
+
+    pub fn stats(&self) -> LatencyStats {
+        if self.count == 0 {
+            return LatencyStats::zero();
+        }
+        LatencyStats {
+            count: self.count as usize,
+            mean_ms: self.sum_us / self.count as f64 / 1e3,
+            p50_ms: self.quantile_us(0.50) / 1e3,
+            p99_ms: self.quantile_us(0.99) / 1e3,
+            p999_ms: self.quantile_us(0.999) / 1e3,
+            min_ms: self.min_us as f64 / 1e3,
+            max_ms: self.max_us as f64 / 1e3,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.stats().to_json()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_exact_below_16us() {
+        for v in 0..16u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_lo(v as usize), v);
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_continuous() {
+        // Walk octave boundaries: index must never decrease and must
+        // advance by exactly 1 across each bucket's upper bound.
+        let mut prev = bucket_index(0);
+        for v in 1..5000u64 {
+            let i = bucket_index(v);
+            assert!(i >= prev, "index regressed at {v}");
+            assert!(i - prev <= 1, "index skipped at {v}");
+            assert!(bucket_lo(i) <= v, "lo({i}) > {v}");
+            prev = i;
+        }
+        // Continuity at octave seams.
+        assert_eq!(bucket_index(15), 15);
+        assert_eq!(bucket_index(16), 16);
+        assert_eq!(bucket_index(31), 31);
+        assert_eq!(bucket_index(32), 32);
+    }
+
+    #[test]
+    fn huge_values_clamp_to_top_bucket_but_max_is_exact() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(1e12); // ~11.6 days, far past the 134 s range cap
+        assert_eq!(h.bucket_counts()[N_BUCKETS - 1], 1);
+        assert_eq!(h.stats().max_ms, 1e9);
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_exact() {
+        let mut h = LatencyHistogram::new();
+        h.record_ms(7.0);
+        let s = h.stats();
+        assert_eq!(s.p50_ms, 7.0);
+        assert_eq!(s.p999_ms, 7.0);
+        assert_eq!(s.min_ms, 7.0);
+        assert_eq!(s.max_ms, 7.0);
+    }
+
+    #[test]
+    fn quantiles_within_documented_error() {
+        let mut h = LatencyHistogram::new();
+        // 1..=10000 us, uniformly: exact pXX is ceil(p * 10000).
+        for v in 1..=10_000u64 {
+            h.record_us(v as f64);
+        }
+        for (q, exact) in [(0.5, 5000.0), (0.99, 9900.0), (0.999, 9990.0)] {
+            let got = h.quantile_us(q);
+            let rel = (got - exact).abs() / exact;
+            assert!(rel <= QUANTILE_REL_ERROR, "q={q}: got {got}, want ~{exact}");
+        }
+        assert_eq!(h.quantile_us(1.0), 10_000.0, "p100 is the exact max");
+    }
+
+    #[test]
+    fn merge_is_bucket_exact() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        let mut x = 12345u64;
+        for i in 0..2000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = (x >> 40) as f64; // 0 .. ~16.7M us
+            if i % 2 == 0 {
+                a.record_us(v);
+            } else {
+                b.record_us(v);
+            }
+            all.record_us(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.bucket_counts(), all.bucket_counts());
+        assert_eq!(a.len(), all.len());
+        assert_eq!(a.stats().p99_ms, all.stats().p99_ms);
+        assert_eq!(a.stats().min_ms, all.stats().min_ms);
+        assert_eq!(a.stats().max_ms, all.stats().max_ms);
+        assert!((a.sum_us() - all.sum_us()).abs() / all.sum_us() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_heap_footprint() {
+        let mut h = LatencyHistogram::new();
+        let before = h.heap_bytes();
+        assert!(before <= 3 * 1024, "footprint {before} exceeds ~3 KB budget");
+        for i in 0..10_000 {
+            h.record_us((i * 37 % 1_000_000) as f64);
+        }
+        assert_eq!(h.heap_bytes(), before, "recording must not allocate");
+    }
+
+    #[test]
+    fn empty_stats_zeroes() {
+        assert_eq!(LatencyHistogram::new().stats(), LatencyStats::zero());
+    }
+}

@@ -1,0 +1,27 @@
+//! Unified telemetry engine: bounded latency histograms, a named
+//! metrics registry, per-request trace contexts, and live export.
+//!
+//! The paper's claims are measured claims (1.3x-5.3x vs A100 at
+//! 2.62x-3.19x less power); this module is the measurement spine of
+//! the reproduction's serving stack. Everything is fixed-footprint —
+//! a [`LatencyHistogram`] is ~3 KB forever — so telemetry can stay on
+//! in production-length runs, unlike the sample-hoarding `Recorder`
+//! (which remains, as the exact-percentile oracle and compatibility
+//! surface).
+//!
+//! - [`hist`] — log-bucketed histogram + [`LatencyStats`] summaries;
+//! - [`registry`] — named counters/gauges/histograms, shared handles;
+//! - [`trace`] — per-request [`TraceContext`] and per-stage
+//!   [`StageSpans`] (queue-wait vs service-time decomposition);
+//! - [`export`] — JSON-lines snapshot thread and Prometheus-style
+//!   HTTP exposition behind `repro serve --metrics <path|port>`.
+
+pub mod export;
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use export::{ExportTarget, MetricsExporter};
+pub use hist::{LatencyHistogram, LatencyStats, QUANTILE_REL_ERROR};
+pub use registry::{Counter, Gauge, Histo, MetricsRegistry};
+pub use trace::{StageSpans, TraceContext};

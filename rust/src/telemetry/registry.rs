@@ -1,0 +1,326 @@
+//! Process-wide metrics registry: named counters, gauges, and bounded
+//! latency histograms, shared across threads by cheap handle clones.
+//!
+//! Naming scheme (documented in DESIGN.md §Telemetry): dotted
+//! lowercase paths, most-significant scope first, unit suffix on
+//! histograms — e.g. `serve.queue_wait_us`,
+//! `replica0.stage1.shard2.service_us`, `serve.queue.depth`. The
+//! Prometheus exposition mangles dots to underscores and prefixes
+//! `bcpnn_`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use super::hist::{LatencyHistogram, LatencyStats};
+use crate::util::json::Json;
+
+/// Monotonically increasing event count. Clone shares the cell.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (queue depth, outstanding requests).
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Raise to `v` if larger (high-water tracking).
+    pub fn raise(&self, v: i64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Shared handle to a bounded latency histogram.
+#[derive(Debug, Clone, Default)]
+pub struct Histo(Arc<Mutex<LatencyHistogram>>);
+
+impl Histo {
+    pub fn record(&self, d: Duration) {
+        self.0.lock().unwrap().record(d);
+    }
+
+    pub fn record_us(&self, us: f64) {
+        self.0.lock().unwrap().record_us(us);
+    }
+
+    pub fn record_ms(&self, ms: f64) {
+        self.0.lock().unwrap().record_ms(ms);
+    }
+
+    /// Consistent point-in-time copy (merge/stats without the lock).
+    pub fn snapshot(&self) -> LatencyHistogram {
+        self.0.lock().unwrap().clone()
+    }
+
+    pub fn stats(&self) -> LatencyStats {
+        self.0.lock().unwrap().stats()
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histo(Histo),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histo(_) => "histogram",
+        }
+    }
+}
+
+/// Registry of named metrics. Handles returned by
+/// [`counter`](MetricsRegistry::counter) /
+/// [`gauge`](MetricsRegistry::gauge) /
+/// [`histogram`](MetricsRegistry::histogram) are get-or-create: the
+/// same name always resolves to the same underlying cell, so producers
+/// in different threads share one metric without coordination.
+///
+/// Registering a name as two different kinds is a programming error
+/// and panics with the conflicting kinds spelled out.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Fresh shared registry (the usual way to construct one).
+    pub fn new_arc() -> Arc<MetricsRegistry> {
+        Arc::new(MetricsRegistry::new())
+    }
+
+    /// The process-global registry. Components default to their own
+    /// registry (test isolation); the CLI passes this one everywhere
+    /// so one exporter sees the whole serving stack.
+    pub fn global() -> Arc<MetricsRegistry> {
+        static GLOBAL: OnceLock<Arc<MetricsRegistry>> = OnceLock::new();
+        GLOBAL.get_or_init(MetricsRegistry::new_arc).clone()
+    }
+
+    fn entry(&self, name: &str, make: impl FnOnce() -> Metric) -> Metric {
+        let mut map = self.inner.lock().unwrap();
+        map.entry(name.to_string()).or_insert_with(make).clone()
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        match self.entry(name, || Metric::Counter(Counter::default())) {
+            Metric::Counter(c) => c,
+            other => panic!("metric `{name}` is a {}, not a counter", other.kind()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        match self.entry(name, || Metric::Gauge(Gauge::default())) {
+            Metric::Gauge(g) => g,
+            other => panic!("metric `{name}` is a {}, not a gauge", other.kind()),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Histo {
+        match self.entry(name, || Metric::Histo(Histo::default())) {
+            Metric::Histo(h) => h,
+            other => panic!("metric `{name}` is a {}, not a histogram", other.kind()),
+        }
+    }
+
+    /// Registered names, sorted (BTreeMap order).
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Histogram handles whose name matches `pred` (snapshot of the
+    /// current registration set).
+    pub fn histograms_matching(&self, pred: impl Fn(&str) -> bool) -> Vec<(String, Histo)> {
+        let map = self.inner.lock().unwrap();
+        map.iter()
+            .filter_map(|(k, v)| match v {
+                Metric::Histo(h) if pred(k) => Some((k.clone(), h.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// One JSON object snapshot:
+    /// `{"counters": {...}, "gauges": {...}, "histograms": {name: stats}}`.
+    pub fn to_json(&self) -> Json {
+        let map = self.inner.lock().unwrap();
+        let mut counters = Vec::new();
+        let mut gauges = Vec::new();
+        let mut hists = Vec::new();
+        for (name, m) in map.iter() {
+            match m {
+                Metric::Counter(c) => counters.push((name.clone(), Json::from(c.get() as f64))),
+                Metric::Gauge(g) => gauges.push((name.clone(), Json::from(g.get() as f64))),
+                Metric::Histo(h) => hists.push((name.clone(), h.stats().to_json())),
+            }
+        }
+        let obj = |kvs: Vec<(String, Json)>| Json::Obj(kvs.into_iter().collect());
+        Json::obj(vec![
+            ("counters", obj(counters)),
+            ("gauges", obj(gauges)),
+            ("histograms", obj(hists)),
+        ])
+    }
+
+    /// Prometheus text exposition (format 0.0.4): counters and gauges
+    /// verbatim, histograms as summaries (quantile lines + _sum/_count
+    /// in microseconds).
+    pub fn prometheus(&self) -> String {
+        let map = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (name, m) in map.iter() {
+            let pn = prom_name(name);
+            match m {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# TYPE {pn} counter\n{pn} {}\n", c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {pn} gauge\n{pn} {}\n", g.get()));
+                }
+                Metric::Histo(h) => {
+                    let snap = h.snapshot();
+                    out.push_str(&format!("# TYPE {pn} summary\n"));
+                    for (q, label) in [(0.5, "0.5"), (0.99, "0.99"), (0.999, "0.999")] {
+                        out.push_str(&format!(
+                            "{pn}{{quantile=\"{label}\"}} {}\n",
+                            snap.quantile_us(q)
+                        ));
+                    }
+                    out.push_str(&format!("{pn}_sum {}\n", snap.sum_us()));
+                    out.push_str(&format!("{pn}_count {}\n", snap.len()));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Mangle a dotted metric name into a Prometheus-legal one.
+fn prom_name(name: &str) -> String {
+    let mut s = String::with_capacity(name.len() + 6);
+    s.push_str("bcpnn_");
+    for ch in name.chars() {
+        if ch.is_ascii_alphanumeric() {
+            s.push(ch.to_ascii_lowercase());
+        } else {
+            s.push('_');
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_share_the_cell() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("serve.requests");
+        let b = reg.counter("serve.requests");
+        a.inc();
+        b.add(2);
+        assert_eq!(reg.counter("serve.requests").get(), 3);
+
+        let g = reg.gauge("serve.queue.depth");
+        g.set(5);
+        g.add(-2);
+        assert_eq!(reg.gauge("serve.queue.depth").get(), 3);
+        g.raise(10);
+        g.raise(7);
+        assert_eq!(g.get(), 10);
+
+        let h = reg.histogram("serve.e2e_us");
+        h.record_us(1000.0);
+        assert_eq!(reg.histogram("serve.e2e_us").stats().count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "is a counter, not a gauge")]
+    fn kind_conflict_panics() {
+        let reg = MetricsRegistry::new();
+        reg.counter("x");
+        reg.gauge("x");
+    }
+
+    #[test]
+    fn names_sorted_and_json_shape() {
+        let reg = MetricsRegistry::new();
+        reg.histogram("b.lat_us").record_ms(2.0);
+        reg.counter("a.n").inc();
+        reg.gauge("c.depth").set(4);
+        assert_eq!(reg.names(), vec!["a.n", "b.lat_us", "c.depth"]);
+        let j = reg.to_json();
+        let get = |o: &Json, k: &str| o.req(k).unwrap().clone();
+        assert_eq!(get(&get(&j, "counters"), "a.n").as_f64().unwrap(), 1.0);
+        assert_eq!(get(&get(&j, "gauges"), "c.depth").as_f64().unwrap(), 4.0);
+        let h = get(&get(&j, "histograms"), "b.lat_us");
+        assert_eq!(h.req("count").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(h.req("p999_ms").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn prometheus_exposition_format() {
+        let reg = MetricsRegistry::new();
+        reg.counter("serve.requests").add(42);
+        reg.gauge("serve.queue.depth").set(3);
+        let h = reg.histogram("serve.e2e_us");
+        for ms in [1.0, 2.0, 3.0] {
+            h.record_ms(ms);
+        }
+        let text = reg.prometheus();
+        assert!(text.contains("# TYPE bcpnn_serve_requests counter\nbcpnn_serve_requests 42\n"));
+        assert!(text.contains("# TYPE bcpnn_serve_queue_depth gauge\nbcpnn_serve_queue_depth 3\n"));
+        assert!(text.contains("# TYPE bcpnn_serve_e2e_us summary\n"));
+        assert!(text.contains("bcpnn_serve_e2e_us{quantile=\"0.99\"}"));
+        assert!(text.contains("bcpnn_serve_e2e_us_count 3\n"));
+        assert!(text.contains("bcpnn_serve_e2e_us_sum 6000\n"));
+    }
+
+    #[test]
+    fn histograms_matching_filters() {
+        let reg = MetricsRegistry::new();
+        reg.histogram("stage0.shard0.queue_wait_us");
+        reg.histogram("stage0.shard0.service_us");
+        reg.counter("served");
+        let waits = reg.histograms_matching(|n| n.ends_with("queue_wait_us"));
+        assert_eq!(waits.len(), 1);
+        assert_eq!(waits[0].0, "stage0.shard0.queue_wait_us");
+    }
+}

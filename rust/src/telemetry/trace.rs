@@ -1,0 +1,109 @@
+//! Lightweight per-request trace context and per-stage span recording.
+//!
+//! Every inference request (and every stage job derived from it)
+//! carries a [`TraceContext`]: its birth instant (for end-to-end
+//! latency, surviving reroutes and stage hops) and the instant of its
+//! last enqueue (for per-hop queue wait). A worker dequeuing a job
+//! reads the wait off the context, times its own compute, and records
+//! both into the stage's [`StageSpans`] histogram pair — giving the
+//! queue-vs-compute decomposition `repro serve` / `repro plan` print.
+
+use std::time::{Duration, Instant};
+
+use super::registry::{Histo, MetricsRegistry};
+
+/// Two timestamps riding along with a request/job. `Copy` — embedding
+/// it in FIFO payloads costs two `Instant`s, no allocation.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceContext {
+    /// When the request entered the system (end-to-end clock).
+    pub born: Instant,
+    /// When the request was last enqueued (per-hop queue-wait clock).
+    pub sent: Instant,
+}
+
+impl Default for TraceContext {
+    fn default() -> TraceContext {
+        TraceContext::start()
+    }
+}
+
+impl TraceContext {
+    /// New context: born and sent both now.
+    pub fn start() -> TraceContext {
+        let now = Instant::now();
+        TraceContext { born: now, sent: now }
+    }
+
+    /// Mark a hop: the request is being enqueued into the next stage
+    /// (or rerouted); resets the queue-wait clock, keeps the birth.
+    pub fn hop(&mut self) {
+        self.sent = Instant::now();
+    }
+
+    /// Queue wait of the hop just completed (call on dequeue).
+    pub fn wait(&self) -> Duration {
+        self.sent.elapsed()
+    }
+
+    /// Total age since birth (end-to-end latency at reply time).
+    pub fn age(&self) -> Duration {
+        self.born.elapsed()
+    }
+}
+
+/// The histogram pair every instrumented stage records into.
+#[derive(Debug, Clone)]
+pub struct StageSpans {
+    /// Time jobs sat in the stage's input FIFO (`{prefix}.queue_wait_us`).
+    pub queue_wait: Histo,
+    /// Time the stage spent computing per job (`{prefix}.service_us`).
+    pub service: Histo,
+}
+
+impl StageSpans {
+    /// Register (get-or-create) the pair under `prefix` in `reg`.
+    pub fn register(reg: &MetricsRegistry, prefix: &str) -> StageSpans {
+        StageSpans {
+            queue_wait: reg.histogram(&format!("{prefix}.queue_wait_us")),
+            service: reg.histogram(&format!("{prefix}.service_us")),
+        }
+    }
+
+    /// Record one dequeue-compute cycle.
+    pub fn observe(&self, wait: Duration, service: Duration) {
+        self.queue_wait.record(wait);
+        self.service.record(service);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn hop_resets_wait_clock_but_not_birth() {
+        let mut t = TraceContext::start();
+        thread::sleep(Duration::from_millis(10));
+        let before_hop = t.wait();
+        t.hop();
+        let after_hop = t.wait();
+        assert!(before_hop >= Duration::from_millis(8), "{before_hop:?}");
+        assert!(after_hop < before_hop);
+        assert!(t.age() >= before_hop, "birth clock must keep running");
+    }
+
+    #[test]
+    fn spans_record_into_named_histograms() {
+        let reg = MetricsRegistry::new();
+        let spans = StageSpans::register(&reg, "stage0.shard1");
+        spans.observe(Duration::from_micros(100), Duration::from_micros(400));
+        spans.observe(Duration::from_micros(200), Duration::from_micros(300));
+        let w = reg.histogram("stage0.shard1.queue_wait_us").stats();
+        let s = reg.histogram("stage0.shard1.service_us").stats();
+        assert_eq!(w.count, 2);
+        assert_eq!(s.count, 2);
+        assert!(w.max_ms <= 0.3 && s.max_ms >= 0.3);
+    }
+}

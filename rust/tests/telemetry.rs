@@ -1,0 +1,225 @@
+//! Telemetry integration tests: the decomposition contract end to end.
+//!
+//! - `serve.*`: per-request end-to-end latency must equal queue wait +
+//!   service (within scheduler slack) — pinned with a sleeping mock
+//!   backend so the components are macroscopic.
+//! - hybrid spans: on a pure-pipeline plan, the per-stage queue-wait +
+//!   service spans (plus the final result-stream hop) must sum to the
+//!   measured per-round latency within tolerance.
+//! - instrumented FIFOs under real multi-producer contention: gauges
+//!   and stats stay consistent (depth returns to 0, high water bounded
+//!   by capacity, pushes == pops).
+
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use bcpnn_accel::bcpnn::LayerGraph;
+use bcpnn_accel::cluster::{plan_pipeline, PipelineParallelExecutor};
+use bcpnn_accel::config::by_name;
+use bcpnn_accel::coordinator::{InferBackend, InferenceServer, ServerConfig};
+use bcpnn_accel::fpga::device::{FpgaDevice, KernelVersion};
+use bcpnn_accel::stream::Fifo;
+use bcpnn_accel::telemetry::MetricsRegistry;
+use bcpnn_accel::util::json::Json;
+
+/// Backend that sleeps a fixed, macroscopic time per batch so the
+/// service component of the decomposition is unmistakable.
+#[derive(Clone)]
+struct SleepBackend {
+    batch: usize,
+    sleep: Duration,
+    calls: Arc<Mutex<u64>>,
+}
+
+impl InferBackend for SleepBackend {
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn infer_batch(&self, images: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        *self.calls.lock().unwrap() += 1;
+        thread::sleep(self.sleep);
+        Ok(images.iter().map(|img| vec![img[0]]).collect())
+    }
+}
+
+#[test]
+fn serve_decomposition_sums_to_e2e() {
+    let sleep_ms = 15.0;
+    let backend = SleepBackend {
+        batch: 4,
+        sleep: Duration::from_millis(sleep_ms as u64),
+        calls: Arc::new(Mutex::new(0)),
+    };
+    let server = InferenceServer::start(
+        move || Ok(backend),
+        ServerConfig { queue_depth: 64, flush_timeout: Duration::from_millis(5) },
+    )
+    .unwrap();
+
+    let n = 16usize;
+    let pending: Vec<_> = (0..n).map(|i| server.submit(vec![i as f32]).unwrap()).collect();
+    for rx in &pending {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+
+    // Registry state while the server is still up: counters named per
+    // the serve.* scheme, all requests accounted for.
+    let reg = server.metrics();
+    assert_eq!(reg.counter("serve.requests").get(), n as u64);
+    assert_eq!(reg.counter("serve.served").get(), n as u64);
+    assert!(reg.counter("serve.batches").get() >= (n / 4) as u64);
+    assert_eq!(reg.counter("serve.backend_errors").get(), 0);
+    let names = reg.names();
+    for want in [
+        "serve.queue.depth",
+        "serve.queue.high_water",
+        "serve.queue.capacity",
+        "serve.e2e_us",
+        "serve.queue_wait_us",
+        "serve.service_us",
+    ] {
+        assert!(names.iter().any(|x| x == want), "missing {want} in {names:?}");
+    }
+
+    let rep = server.shutdown();
+    assert_eq!(rep.served, n as u64);
+    assert_eq!(rep.latency.count, n);
+    assert_eq!(rep.queue_wait.count, n);
+    assert_eq!(rep.service.count, n);
+
+    // The sleep dominates service time and is visible in it.
+    assert!(
+        rep.service.mean_ms >= 0.6 * sleep_ms,
+        "service mean {:.3} ms should carry the {sleep_ms} ms sleep",
+        rep.service.mean_ms
+    );
+    // Decomposition contract: e2e = queue wait + service per request
+    // (slack: scheduler noise, response-channel overhead, histogram
+    // quantization <= 1/32 relative).
+    let sum = rep.queue_wait.mean_ms + rep.service.mean_ms;
+    let gap = (rep.latency.mean_ms - sum).abs();
+    assert!(
+        gap <= 0.3 * rep.latency.mean_ms + 2.0,
+        "e2e mean {:.3} ms vs wait+service {:.3} ms (gap {:.3})",
+        rep.latency.mean_ms,
+        sum,
+        gap
+    );
+    // Percentile ordering holds through the bounded histogram.
+    assert!(rep.latency.p50_ms <= rep.latency.p99_ms);
+    assert!(rep.latency.p99_ms <= rep.latency.p999_ms);
+    assert!(rep.latency.p999_ms <= rep.latency.max_ms + 1e-9);
+
+    // The machine-readable form round-trips with the p999 field.
+    let j = Json::parse(&rep.to_json().to_string()).unwrap();
+    let p999 = j
+        .req("latency")
+        .unwrap()
+        .req("p999_ms")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert!((p999 - rep.latency.p999_ms).abs() < 1e-6);
+}
+
+#[test]
+fn hybrid_pipeline_spans_sum_to_round_latency() {
+    // Pure pipeline (one worker per stage, no shard fan-out, no merge
+    // plumbing) on a stacked config: per round, the critical path is
+    // exactly stage0 wait + stage0 service + stage1 wait + ... +
+    // result-stream wait, so the span means must sum to the measured
+    // round latency within tolerance.
+    let cfg = by_name("toy-deep").unwrap();
+    let pplan = plan_pipeline(&cfg, KernelVersion::Infer, &FpgaDevice::u55c()).unwrap();
+    let n_stages = pplan.stages.len();
+    let exec =
+        PipelineParallelExecutor::new(LayerGraph::new(cfg.clone(), 42), &pplan).unwrap();
+
+    // Single-image rounds: one tile in flight, no pipelining overlap.
+    let img = vec![0.5; cfg.hc_in()];
+    let rounds = 32usize;
+    for _ in 0..rounds {
+        exec.infer_batch(std::slice::from_ref(&img)).unwrap();
+    }
+
+    let reg = exec.metrics();
+    let e2e = reg.histogram("infer_us").stats();
+    assert_eq!(e2e.count, rounds);
+    let result_wait = reg.histogram("result.queue_wait_us").stats();
+    assert_eq!(result_wait.count, rounds);
+
+    let mut sum_ms = result_wait.mean_ms;
+    for si in 0..n_stages {
+        let wait = reg.histogram(&format!("stage{si}.shard0.queue_wait_us")).stats();
+        let svc = reg.histogram(&format!("stage{si}.shard0.service_us")).stats();
+        assert_eq!(wait.count, rounds, "stage {si} wait");
+        assert_eq!(svc.count, rounds, "stage {si} service");
+        sum_ms += wait.mean_ms + svc.mean_ms;
+    }
+    let gap = (e2e.mean_ms - sum_ms).abs();
+    assert!(
+        gap <= 0.5 * e2e.mean_ms + 0.3,
+        "per-stage spans ({sum_ms:.4} ms) should sum to round latency \
+         ({:.4} ms) within tolerance",
+        e2e.mean_ms
+    );
+
+    // Shutdown reports carry the same span stats per stage.
+    let reports = exec.shutdown();
+    assert_eq!(reports.len(), n_stages);
+    for r in &reports {
+        assert_eq!(r.queue_wait.count, rounds);
+        assert_eq!(r.service.count, rounds);
+    }
+}
+
+#[test]
+fn instrumented_fifo_consistent_under_contention() {
+    let reg = MetricsRegistry::new_arc();
+    let f: Fifo<u64> = Fifo::with_capacity(8);
+    f.instrument(&reg, "contended");
+
+    let producers = 4u64;
+    let per_producer = 250u64;
+    let consumers = 2usize;
+
+    let mut handles = Vec::new();
+    for p in 0..producers {
+        let tx = f.clone();
+        handles.push(thread::spawn(move || {
+            for i in 0..per_producer {
+                tx.send(p * per_producer + i).unwrap();
+            }
+        }));
+    }
+    let mut drains = Vec::new();
+    for _ in 0..consumers {
+        let rx = f.clone();
+        drains.push(thread::spawn(move || {
+            let mut got = 0u64;
+            while rx.recv().is_ok() {
+                got += 1;
+            }
+            got
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    f.close();
+    let total: u64 = drains.into_iter().map(|d| d.join().unwrap()).sum();
+    assert_eq!(total, producers * per_producer);
+
+    let s = f.stats();
+    assert_eq!(s.pushes, producers * per_producer);
+    assert_eq!(s.pops, producers * per_producer);
+    assert!(s.high_water >= 1 && s.high_water <= 8, "high water {}", s.high_water);
+
+    // Gauges mirror the stream: empty at rest, high water bounded by
+    // capacity and matching the stats counter.
+    assert_eq!(reg.gauge("contended.depth").get(), 0);
+    assert_eq!(reg.gauge("contended.capacity").get(), 8);
+    assert_eq!(reg.gauge("contended.high_water").get(), s.high_water as i64);
+}
