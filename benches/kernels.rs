@@ -16,8 +16,11 @@
 //! - block-sparse support is at least 2x faster than dense (front
 //!   layer = model1-class dims, modeled `hc_in/nact = 784/128 ≈ 6x`);
 //! - batched tile inference throughput ≥ the single-image span loop
-//!   (modeled ~6x from weight-stream amortization) —
-//! so neither engine can silently regress in CI.
+//!   (modeled ~6x from weight-stream amortization);
+//! - batched-EMA training throughput ≥ the sequential per-image
+//!   trainer (the fold recomputes the div+ln weight map once per span
+//!   per tile instead of once per image) —
+//! so none of the engines can silently regress in CI.
 
 use std::hint::black_box;
 use std::path::Path;
@@ -146,6 +149,42 @@ fn main() {
         let tile_thr_speedup =
             ns_per_img(&r_bsingle, n_batch) / ns_per_img(&r_bthr, n_batch).max(1.0);
 
+        // Training: sequential per-image EMA steps vs the batched-EMA
+        // tile fold vs the fold + data-parallel shard merge. Each row
+        // owns a clone and evolves its traces across iterations
+        // (training mutates state), so all rows time the same work
+        // from the same start.
+        let mut tg_seq = g.clone();
+        let r_tseq = bh::bench(&format!("{name} train seq per-image"), warmup, iters, || {
+            for img in &db.images {
+                tg_seq.train_unsup_step(img);
+            }
+            black_box(tg_seq.layers[0].pi[0]);
+        });
+        println!("{}", r_tseq.row());
+        let mut tg_bat = g.clone();
+        let r_tbat = bh::bench(&format!("{name} train batched-EMA tile"), warmup, iters, || {
+            tg_bat.train_batch(&db.images);
+            black_box(tg_bat.layers[0].pi[0]);
+        });
+        println!("{}", r_tbat.row());
+        let mut tg_thr = g.clone();
+        let r_tthr = bh::bench(
+            &format!("{name} train batched x{thr} threads"),
+            warmup,
+            iters,
+            || {
+                tg_thr.train_batch_threads(&db.images, thr);
+                black_box(tg_thr.layers[0].pi[0]);
+            },
+        )
+        .with_threads(thr);
+        println!("{}", r_tthr.row());
+        let train_tile_speedup =
+            ns_per_img(&r_tseq, n_batch) / ns_per_img(&r_tbat, n_batch).max(1.0);
+        let train_thr_speedup =
+            ns_per_img(&r_tseq, n_batch) / ns_per_img(&r_tthr, n_batch).max(1.0);
+
         println!(
             "   -> layer0 {}x{} HC (nact {}): support speedup {speedup:.2}x \
              (modeled ~{:.1}x), train speedup {train_speedup:.2}x",
@@ -156,6 +195,10 @@ fn main() {
             "   -> batch tile speedup {tile_speedup:.2}x (modeled ~{:.1}x), \
              tile x{thr} threads {tile_thr_speedup:.2}x",
             host_tile_img_s(&cfg, TILE, 1) / host_tile_img_s(&cfg, 1, 1),
+        );
+        println!(
+            "   -> train batched-EMA speedup {train_tile_speedup:.2}x, \
+             batched x{thr} threads {train_thr_speedup:.2}x",
         );
 
         if name.as_str() == "mnist-deep2" {
@@ -181,6 +224,19 @@ fn main() {
                 ns_per_img(&r_btile, n_batch),
                 ns_per_img(&r_bsingle, n_batch),
             );
+            // Acceptance gate: the batched-EMA trainer folds TILE EMA
+            // steps into one span walk and recomputes the div+ln
+            // weight map once per span instead of once per image, so
+            // it must never fall behind the sequential trainer.
+            assert!(
+                train_tile_speedup >= 1.0,
+                "batched-EMA training only {train_tile_speedup:.2}x vs sequential \
+                 per-image steps on mnist-deep2 ({:.0} vs {:.0} ns/img) — tile \
+                 trainer regressed below the sequential throughput floor \
+                 (weight-map amortization is ~TILEx per span)",
+                ns_per_img(&r_tbat, n_batch),
+                ns_per_img(&r_tseq, n_batch),
+            );
         }
 
         entries.push(Json::obj(vec![
@@ -204,6 +260,15 @@ fn main() {
             ("tile_threads_speedup", Json::from(tile_thr_speedup)),
             (
                 "modeled_tile_speedup",
+                Json::from(host_tile_img_s(&cfg, TILE, 1) / host_tile_img_s(&cfg, 1, 1)),
+            ),
+            ("train_seq_ns_per_img", Json::from(ns_per_img(&r_tseq, n_batch))),
+            ("train_batch_ns_per_img", Json::from(ns_per_img(&r_tbat, n_batch))),
+            ("train_batch_threads_ns_per_img", Json::from(ns_per_img(&r_tthr, n_batch))),
+            ("train_batch_speedup", Json::from(train_tile_speedup)),
+            ("train_batch_threads_speedup", Json::from(train_thr_speedup)),
+            (
+                "modeled_train_tile_speedup",
                 Json::from(host_tile_img_s(&cfg, TILE, 1) / host_tile_img_s(&cfg, 1, 1)),
             ),
         ]));

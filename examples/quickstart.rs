@@ -56,7 +56,7 @@ fn main() -> Result<()> {
         let out = driver.train(
             &train,
             &test,
-            &TrainOptions { epochs: 1, structural, struct_interval: 4, seed },
+            &TrainOptions { epochs: 1, structural, struct_interval: 4, seed, threads: 1 },
         )?;
         println!(
             "{e:>5}  {:>12.3}  {:>8.1}%  {:>7.1}%",

@@ -331,6 +331,32 @@ impl Projection {
             &mut self.scratch, &self.index, x, y, alpha, eps,
         );
     }
+
+    /// Tile twin of [`Projection::train_step`]: fold `n_imgs`
+    /// (1..=TILE) EMA steps into one pass over the traces and one
+    /// div+ln weight-map walk per span. `xt`/`yt` are lane-interleaved
+    /// activity tiles in batch order; a batch of one is bitwise
+    /// [`Projection::train_step`] (see `super::sparse` batched-EMA
+    /// docs for the fold and its tolerance for larger tiles).
+    pub fn train_step_tile(&mut self, xt: &[f32], yt: &[f32], n_imgs: usize, alpha: f32, eps: f32) {
+        debug_assert_eq!(xt.len(), self.dims.n_in() * TILE);
+        debug_assert_eq!(yt.len(), self.dims.n_out() * TILE);
+        super::sparse::train_step_tile_span(
+            &mut self.pi, &mut self.pj, &mut self.pij, &mut self.wij, &mut self.bj,
+            &mut self.scratch, &self.index, xt, yt, n_imgs, alpha, eps,
+        );
+    }
+
+    /// Re-derive the weight map (active spans) and bias from the
+    /// current traces — the post-merge step of the data-parallel
+    /// trainers, identical in formula and order to what a train step
+    /// leaves behind.
+    pub(crate) fn recompute_span_weights(&mut self, eps: f32) {
+        super::sparse::recompute_span_weights(
+            &self.pi, &self.pj, &self.pij, &mut self.wij, &mut self.bj,
+            &mut self.scratch, &self.index, eps,
+        );
+    }
 }
 
 /// Per-layer outcome of one structural-plasticity pass over the graph.
@@ -608,6 +634,179 @@ impl LayerGraph {
         let t = one_hot(label, self.cfg.n_out());
         let y = acts.last().expect("graph has >= 1 layer");
         self.head.train_step(y, &t, self.cfg.alpha, self.cfg.eps);
+    }
+
+    // ------------------------------------------- batched-EMA training
+    //
+    // The training twins of the PR 5 inference tile surfaces: a TILE
+    // of images updates every projection's traces in ONE `BlockIndex`
+    // span walk (closed-form geometric-decay fold of the TILE
+    // sequential EMA steps, weight map div+ln once per span after the
+    // fold — `sparse::train_step_tile_span`). Within a tile every
+    // projection computes the whole tile's activity from its tile-start
+    // weights (minibatch semantics, as in StreamBrain); a batch of ONE
+    // image is bitwise the online trainer, and larger tiles are
+    // tolerance-pinned against it (bound derived in DESIGN.md §3.3,
+    // tested registry-wide by `rust/tests/train_batch.rs`).
+
+    /// One batched unsupervised update of a single tile (1..=TILE
+    /// images): per layer, activate the tile from pre-tile weights,
+    /// fold the tile's EMA steps into the traces, feed forward.
+    fn train_unsup_tile_with(&mut self, imgs: &[Vec<f32>], ws: &mut Workspace) {
+        let (alpha, eps, gain) = (self.cfg.alpha, self.cfg.eps, self.cfg.gain);
+        encode_images_tile_into(imgs, &mut ws.xt);
+        debug_assert_eq!(ws.xt.len(), self.cfg.n_in() * TILE);
+        let n = imgs.len();
+        let [a, b] = &mut ws.act_t;
+        self.layers[0].activate_masked_tile_into(&ws.xt, gain, a);
+        self.layers[0].train_step_tile(&ws.xt, a.as_slice(), n, alpha, eps);
+        let (mut cur, mut spare) = (a, b);
+        for l in 1..self.layers.len() {
+            self.layers[l].activate_masked_tile_into(cur.as_slice(), gain, spare);
+            self.layers[l].train_step_tile(cur.as_slice(), spare.as_slice(), n, alpha, eps);
+            std::mem::swap(&mut cur, &mut spare);
+        }
+    }
+
+    /// Batched unsupervised training over a whole batch, tile by tile,
+    /// into a caller-held workspace (zero per-image allocation once
+    /// warm).
+    pub fn train_batch_with(&mut self, images: &[Vec<f32>], ws: &mut Workspace) {
+        for chunk in images.chunks(TILE) {
+            self.train_unsup_tile_with(chunk, ws);
+        }
+    }
+
+    /// Batched twin of repeating [`LayerGraph::train_unsup_step`] over
+    /// `images`: one span walk and one weight-map pass per TILE images.
+    /// A batch of one image per tile is bitwise the online trainer.
+    pub fn train_batch(&mut self, images: &[Vec<f32>]) {
+        self.train_batch_with(images, &mut Workspace::new());
+    }
+
+    /// One batched supervised update of a single tile: frozen hidden
+    /// stack forward (tile activations), lane-interleaved one-hot
+    /// targets, EMA fold into the head.
+    fn train_sup_tile_with(&mut self, imgs: &[Vec<f32>], labels: &[u32], ws: &mut Workspace) {
+        let (alpha, eps, gain) = (self.cfg.alpha, self.cfg.eps, self.cfg.gain);
+        encode_images_tile_into(imgs, &mut ws.xt);
+        let [a, b] = &mut ws.act_t;
+        self.layers[0].activate_masked_tile_into(&ws.xt, gain, a);
+        let (mut cur, mut spare) = (a, b);
+        for l in 1..self.layers.len() {
+            self.layers[l].activate_masked_tile_into(cur.as_slice(), gain, spare);
+            std::mem::swap(&mut cur, &mut spare);
+        }
+        let n_out = self.cfg.n_out();
+        ws.tt.clear();
+        ws.tt.resize(n_out * TILE, 0.0);
+        // Lane-interleaved one-hot targets; out-of-range labels stay
+        // all-zero, matching `one_hot`.
+        for (lane, &label) in labels.iter().enumerate() {
+            if (label as usize) < n_out {
+                ws.tt[label as usize * TILE + lane] = 1.0;
+            }
+        }
+        // Fold only the lanes that carry a labelled image.
+        let n = imgs.len().min(labels.len());
+        self.head.train_step_tile(cur.as_slice(), &ws.tt, n, alpha, eps);
+    }
+
+    /// Batched twin of repeating [`LayerGraph::train_sup_step`] over a
+    /// labelled set (hidden stack frozen; zips and truncates a short
+    /// label set like the accuracy paths).
+    pub fn train_sup_batch(&mut self, images: &[Vec<f32>], labels: &[u32]) {
+        let mut ws = Workspace::new();
+        for (chunk, lch) in images.chunks(TILE).zip(labels.chunks(TILE)) {
+            self.train_sup_tile_with(chunk, lch, &mut ws);
+        }
+    }
+
+    /// Data-parallel [`LayerGraph::train_batch`]: shard the batch
+    /// across `threads` scoped workers (each training a clone of the
+    /// current state on its contiguous tile-aligned chunk), then merge
+    /// the per-chunk traces deterministically — see
+    /// [`LayerGraph::merge_trained_parts`]. A single chunk (one
+    /// thread, or a batch of at most one tile) falls through to the
+    /// sequential tile path bitwise. Deterministic at any fixed thread
+    /// count: chunk boundaries and merge order depend only on
+    /// `(images.len(), threads)`.
+    pub fn train_batch_threads(&mut self, images: &[Vec<f32>], threads: usize) {
+        let base = &*self;
+        match super::sparse::scoped_tile_chunks(images.len(), threads, |lo, hi| {
+            let mut g = base.clone();
+            g.train_batch(&images[lo..hi]);
+            (hi - lo, g)
+        }) {
+            Some(parts) => self.merge_trained_parts(parts),
+            None => self.train_batch(images),
+        }
+    }
+
+    /// Data-parallel [`LayerGraph::train_sup_batch`] (same splitter and
+    /// merge as [`LayerGraph::train_batch_threads`]; each chunk weighs
+    /// into the merge by its labelled-image count).
+    pub fn train_sup_batch_threads(&mut self, images: &[Vec<f32>], labels: &[u32], threads: usize) {
+        let base = &*self;
+        match super::sparse::scoped_tile_chunks(images.len(), threads, |lo, hi| {
+            let (lo_l, hi_l) = (lo.min(labels.len()), hi.min(labels.len()));
+            let mut g = base.clone();
+            g.train_sup_batch(&images[lo..hi], &labels[lo_l..hi_l]);
+            (hi_l - lo_l, g)
+        }) {
+            Some(parts) => self.merge_parts(parts, true),
+            None => self.train_sup_batch(images, labels),
+        }
+    }
+
+    /// Merge the per-chunk models of one data-parallel unsupervised
+    /// round into `self`. Every EMA trace evolves affinely in its
+    /// start value, so chunk `k`'s input-driven contribution is
+    /// recoverable as `part_k - d_k * base` (`d_k = (1-alpha)^{n_k}`),
+    /// and the chunks compose in fixed submission order:
+    /// `merged <- d_k * merged + (part_k - d_k * base)`
+    /// ([`sparse::merge_ema_chunk`]) — a deterministic reduction at
+    /// any thread count. Traces are HC-local under the cluster split,
+    /// so the whole reduction is element-wise; the weight map is then
+    /// re-derived once from the merged traces on active spans. Only
+    /// the hidden projections merge — the unsup round never touches
+    /// the head, so chunk 0's head (bitwise the base head) carries
+    /// over untouched. Workers never rewire, so every part carries the
+    /// base masks and indices unchanged.
+    pub fn merge_trained_parts(&mut self, parts: Vec<(usize, LayerGraph)>) {
+        self.merge_parts(parts, false);
+    }
+
+    fn merge_parts(&mut self, parts: Vec<(usize, LayerGraph)>, sup: bool) {
+        let (alpha, eps) = (self.cfg.alpha, self.cfg.eps);
+        let mut parts = parts.into_iter();
+        let (_, mut acc) = parts.next().expect("merge needs at least one chunk");
+        for (n_k, g_k) in parts {
+            let d_k = super::sparse::ema_decay_pow(alpha, n_k);
+            if sup {
+                Self::merge_proj(&mut acc.head, &self.head, &g_k.head, d_k);
+            } else {
+                for ((pa, p0), pk) in
+                    acc.layers.iter_mut().zip(self.layers.iter()).zip(g_k.layers.iter())
+                {
+                    Self::merge_proj(pa, p0, pk, d_k);
+                }
+            }
+        }
+        if sup {
+            acc.head.recompute_span_weights(eps);
+        } else {
+            for p in acc.layers.iter_mut() {
+                p.recompute_span_weights(eps);
+            }
+        }
+        *self = acc;
+    }
+
+    fn merge_proj(pa: &mut Projection, p0: &Projection, pk: &Projection, d_k: f32) {
+        super::sparse::merge_ema_chunk(&mut pa.pi, &p0.pi, &pk.pi, d_k);
+        super::sparse::merge_ema_chunk(&mut pa.pj, &p0.pj, &pk.pj, d_k);
+        super::sparse::merge_ema_chunk(&mut pa.pij, &p0.pij, &pk.pij, d_k);
     }
 
     /// One structural-plasticity pass over every hidden projection

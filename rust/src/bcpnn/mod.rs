@@ -21,7 +21,7 @@ pub mod sparse;
 pub mod structural;
 pub mod workspace;
 
-pub use layer::{LayerGraph, Projection};
+pub use layer::{GraphRewireStats, LayerGraph, Projection};
 pub use network::Network;
 pub use params::Params;
 pub use sparse::BlockIndex;

@@ -28,6 +28,10 @@ pub struct Network {
     pub params: Params,
     /// Block-sparse connectivity index, rebuilt on structural updates.
     index: BlockIndex,
+    /// All-ones index over the classifier head (hidden -> output is
+    /// fully connected): one span per row, so the shared span kernels
+    /// also drive the supervised projection.
+    head_index: BlockIndex,
     /// Scratch table for the hoisted `pj + eps` terms of training.
     scratch: Vec<f32>,
 }
@@ -36,7 +40,12 @@ impl Network {
     pub fn new(cfg: ModelConfig, seed: u64) -> Network {
         let params = Params::init(&cfg, seed);
         let index = BlockIndex::from_dims(&params.mask_hc, &cfg.layer_dims()[0]);
-        Network { cfg, params, index, scratch: Vec::new() }
+        let head_dims = cfg.head_dims();
+        let head_index = BlockIndex::from_dims(
+            &vec![1.0f32; head_dims.hc_in * head_dims.hc_out],
+            &head_dims,
+        );
+        Network { cfg, params, index, head_index, scratch: Vec::new() }
     }
 
     /// Rebuild the block index (call after structural rewiring).
@@ -267,37 +276,123 @@ impl Network {
     }
 
     /// One online supervised update (hidden->output projection; fully
-    /// connected, so the weight map is dense — only the `(qk + eps)`
-    /// hoist applies).
+    /// connected, so `head_index` has one all-covering span per row —
+    /// only the `(qk + eps)` hoist applies). Shares
+    /// [`super::sparse::train_step_span`] with the unsupervised path
+    /// and `Projection::train_step`: the old fused per-row loop
+    /// (q-trace element then weight element) and the span kernel's
+    /// two-pass row (trace row, then weight row over the full-coverage
+    /// span) apply the same operations to the same operands — no
+    /// element of a row depends on another — so the dedupe is bitwise
+    /// (pinned by `rust/tests/deep_stack.rs`).
     pub fn train_sup_step(&mut self, img: &[f32], label: usize) {
         let (_, y) = self.hidden_activity(img);
         let t = one_hot(label, self.cfg.n_out());
-        let a = self.cfg.alpha;
-        let eps = self.cfg.eps;
-        let n_out = self.cfg.n_out();
         let p = &mut self.params;
-        for (qi, &yj) in p.qi.iter_mut().zip(&y) {
-            *qi = (1.0 - a) * *qi + a * yj;
+        super::sparse::train_step_span(
+            &mut p.qi, &mut p.qk, &mut p.qik, &mut p.who, &mut p.bk,
+            &mut self.scratch, &self.head_index, &y, &t,
+            self.cfg.alpha, self.cfg.eps,
+        );
+    }
+
+    // ------------------------------------------- batched-EMA training
+    //
+    // Training twins of the tile inference surfaces (the single-layer
+    // mirror of `LayerGraph::train_batch*`; see `super::sparse`
+    // batched-EMA docs for the fold). A batch of one image per tile is
+    // bitwise the online trainer; larger tiles are tolerance-pinned
+    // (DESIGN.md §3.3).
+
+    /// One batched unsupervised tile (1..=TILE images): tile encode +
+    /// activation from the tile-start weights, then one EMA fold and
+    /// one weight-map span walk for the whole tile.
+    fn train_unsup_tile_with(&mut self, imgs: &[Vec<f32>], ws: &mut Workspace) {
+        encode_images_tile_into(imgs, &mut ws.xt);
+        debug_assert_eq!(ws.xt.len(), self.cfg.n_in() * TILE);
+        let y = &mut ws.act_t[0];
+        self.support_tile_into(&ws.xt, y);
+        Self::hc_softmax_tile(y, self.cfg.hc_h, self.cfg.mc_h, self.cfg.gain);
+        let p = &mut self.params;
+        super::sparse::train_step_tile_span(
+            &mut p.pi, &mut p.pj, &mut p.pij, &mut p.wij, &mut p.bj,
+            &mut self.scratch, &self.index, &ws.xt, y.as_slice(),
+            imgs.len(), self.cfg.alpha, self.cfg.eps,
+        );
+    }
+
+    /// Batched twin of repeating [`Network::train_unsup_step`] over
+    /// `images`, tile by tile.
+    pub fn train_batch(&mut self, images: &[Vec<f32>]) {
+        let mut ws = Workspace::new();
+        for chunk in images.chunks(TILE) {
+            self.train_unsup_tile_with(chunk, &mut ws);
         }
-        for (qk, &tk) in p.qk.iter_mut().zip(&t) {
-            *qk = (1.0 - a) * *qk + a * tk;
-        }
-        self.scratch.clear();
-        self.scratch.extend(p.qk.iter().map(|&v| v + eps));
-        for j in 0..y.len() {
-            let yj = y[j];
-            let qi_eps = p.qi[j] + eps;
-            let qrow = &mut p.qik[j * n_out..(j + 1) * n_out];
-            let wrow = &mut p.who[j * n_out..(j + 1) * n_out];
-            for k in 0..n_out {
-                let q_new = (1.0 - a) * qrow[k] + a * yj * t[k];
-                qrow[k] = q_new;
-                wrow[k] = ((q_new + eps * eps) / (qi_eps * self.scratch[k])).ln();
+    }
+
+    /// Batched twin of repeating [`Network::train_sup_step`] over a
+    /// labelled set (hidden projection frozen; a short label set
+    /// truncates like the accuracy path).
+    pub fn train_sup_batch(&mut self, images: &[Vec<f32>], labels: &[u32]) {
+        let mut ws = Workspace::new();
+        let n_out = self.cfg.n_out();
+        for (chunk, lch) in images.chunks(TILE).zip(labels.chunks(TILE)) {
+            encode_images_tile_into(chunk, &mut ws.xt);
+            let y = &mut ws.act_t[0];
+            self.support_tile_into(&ws.xt, y);
+            Self::hc_softmax_tile(y, self.cfg.hc_h, self.cfg.mc_h, self.cfg.gain);
+            ws.tt.clear();
+            ws.tt.resize(n_out * TILE, 0.0);
+            for (lane, &label) in lch.iter().enumerate() {
+                if (label as usize) < n_out {
+                    ws.tt[label as usize * TILE + lane] = 1.0;
+                }
             }
+            let n = chunk.len().min(lch.len());
+            let p = &mut self.params;
+            super::sparse::train_step_tile_span(
+                &mut p.qi, &mut p.qk, &mut p.qik, &mut p.who, &mut p.bk,
+                &mut self.scratch, &self.head_index, y.as_slice(), &ws.tt,
+                n, self.cfg.alpha, self.cfg.eps,
+            );
         }
-        for (b, &qk_eps) in p.bk.iter_mut().zip(&self.scratch) {
-            *b = qk_eps.ln();
+    }
+
+    /// Data-parallel [`Network::train_batch`]: contiguous tile-aligned
+    /// chunks across scoped workers, per-chunk traces merged
+    /// deterministically in submission order (the affine-EMA reduction
+    /// of `LayerGraph::merge_trained_parts`), weight map re-derived
+    /// once from the merged traces. One chunk falls through to the
+    /// sequential tile path bitwise.
+    pub fn train_batch_threads(&mut self, images: &[Vec<f32>], threads: usize) {
+        let base = &*self;
+        match super::sparse::scoped_tile_chunks(images.len(), threads, |lo, hi| {
+            let mut n = base.clone();
+            n.train_batch(&images[lo..hi]);
+            (hi - lo, n)
+        }) {
+            Some(parts) => self.merge_trained_parts(parts),
+            None => self.train_batch(images),
         }
+    }
+
+    fn merge_trained_parts(&mut self, parts: Vec<(usize, Network)>) {
+        let (alpha, eps) = (self.cfg.alpha, self.cfg.eps);
+        let mut parts = parts.into_iter();
+        let (_, mut acc) = parts.next().expect("merge needs at least one chunk");
+        for (n_k, net_k) in parts {
+            let d_k = super::sparse::ema_decay_pow(alpha, n_k);
+            let (pa, pk, p0) = (&mut acc.params, &net_k.params, &self.params);
+            super::sparse::merge_ema_chunk(&mut pa.pi, &p0.pi, &pk.pi, d_k);
+            super::sparse::merge_ema_chunk(&mut pa.pj, &p0.pj, &pk.pj, d_k);
+            super::sparse::merge_ema_chunk(&mut pa.pij, &p0.pij, &pk.pij, d_k);
+        }
+        let p = &mut acc.params;
+        super::sparse::recompute_span_weights(
+            &p.pi, &p.pj, &p.pij, &mut p.wij, &mut p.bj,
+            &mut acc.scratch, &acc.index, eps,
+        );
+        *self = acc;
     }
 
     /// Accuracy over a labelled set, through the batched tile engine

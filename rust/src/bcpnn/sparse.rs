@@ -433,6 +433,176 @@ where
     }))
 }
 
+// --------------------------------------------- batched-EMA training
+//
+// The tile twin of `train_step_span`: one `BlockIndex` span walk (and
+// one div+ln weight-map pass) per TILE images instead of per image.
+// T sequential EMA steps `p <- (1-a) p + a u_t` fold into the closed
+// form
+//
+//   p^(T) = d^T p^(0) + sum_t coef[t] u^(t),   d = 1 - a,
+//   coef[t] = a d^(T-1-t),
+//
+// so every trace element is loaded and stored once per tile, and the
+// expensive weight map (div + ln per active synapse) runs once per
+// tile — after the fold — instead of T times. Both `d^T` and `coef[]`
+// are built by repeated multiplication with the same f32 `d` the
+// scalar kernel uses (`coef[T-1] = a`, `coef[t] = coef[t+1] * d`,
+// `d^1 = d` exactly), and the fold accumulates in the scalar kernel's
+// operand order (`d^T * p` first, then `+ (coef[t] * x) * y` per
+// image in batch order), so a batch of ONE image reproduces
+// `train_step_span` **bitwise** — pinned in the tests below and
+// registry-wide by `rust/tests/train_batch.rs`.
+//
+// For T > 1 the fold is the exact real-arithmetic composition of the
+// T sequential trace updates; it differs from T scalar steps only by
+// f32 rounding (one summation order vs T). The *activities* fed to a
+// multi-image fold are computed from the tile-start weights
+// (minibatch semantics, as in StreamBrain), while the sequential
+// trainer refreshes weights after every image — that algorithmic
+// difference is bounded and tolerance-pinned (DESIGN.md §3.3): both
+// states are convex combinations of the same start state and inputs
+// in [0, 1], so after N images the traces can differ by at most
+// `1 - (1-a)^N`.
+
+/// Geometric-decay fold coefficients for `t_imgs` EMA steps:
+/// `(d^T, coef)` with `coef[t] = a * d^(T-1-t)`, both by repeated
+/// multiplication so `t_imgs == 1` yields exactly `(1-a, [a, 0, ..])`.
+fn ema_fold_coeffs(alpha: f32, t_imgs: usize) -> (f32, [f32; TILE]) {
+    debug_assert!((1..=TILE).contains(&t_imgs));
+    let d = 1.0 - alpha;
+    let mut coef = [0.0f32; TILE];
+    coef[t_imgs - 1] = alpha;
+    for t in (0..t_imgs - 1).rev() {
+        coef[t] = coef[t + 1] * d;
+    }
+    let mut d_t = d;
+    for _ in 1..t_imgs {
+        d_t *= d;
+    }
+    (d_t, coef)
+}
+
+/// Batched plasticity: fold `n_imgs` (1..=TILE) sequential EMA steps
+/// into one pass over the traces, then derive the weight map on active
+/// spans once. `xt`/`yt` are lane-interleaved activity tiles (lane `t`
+/// = image `t` of the tile, in batch order); ragged tiles pass the
+/// real lane count in `n_imgs` — pad lanes are never read (a zero pad
+/// lane is *not* an EMA no-op, unlike the support kernels).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn train_step_tile_span(
+    pi: &mut [f32], pj: &mut [f32], pij: &mut [f32], wij: &mut [f32], bj: &mut [f32],
+    scratch: &mut Vec<f32>, index: &BlockIndex, xt: &[f32], yt: &[f32],
+    n_imgs: usize, alpha: f32, eps: f32,
+) {
+    let t_imgs = n_imgs.clamp(1, TILE);
+    let (d_t, coef) = ema_fold_coeffs(alpha, t_imgs);
+    let n_out = pj.len();
+    debug_assert_eq!(xt.len(), pi.len() * TILE);
+    debug_assert_eq!(yt.len(), n_out * TILE);
+    for (i, p) in pi.iter_mut().enumerate() {
+        let xrow = &xt[i * TILE..(i + 1) * TILE];
+        let mut acc = d_t * *p;
+        for t in 0..t_imgs {
+            acc += coef[t] * xrow[t];
+        }
+        *p = acc;
+    }
+    for (j, p) in pj.iter_mut().enumerate() {
+        let yrow = &yt[j * TILE..(j + 1) * TILE];
+        let mut acc = d_t * *p;
+        for t in 0..t_imgs {
+            acc += coef[t] * yrow[t];
+        }
+        *p = acc;
+    }
+    scratch.clear();
+    scratch.extend(pj.iter().map(|&p| p + eps));
+    for i in 0..pi.len() {
+        let xrow = &xt[i * TILE..(i + 1) * TILE];
+        // Joint trace: dense fold over the row — one load/store of the
+        // `pij` row per tile instead of per image.
+        let prow = &mut pij[i * n_out..(i + 1) * n_out];
+        for j in 0..n_out {
+            let yrow = &yt[j * TILE..(j + 1) * TILE];
+            let mut acc = d_t * prow[j];
+            for t in 0..t_imgs {
+                acc += (coef[t] * xrow[t]) * yrow[t];
+            }
+            prow[j] = acc;
+        }
+        // Weight map: div+ln on active spans, once per tile.
+        let pi_eps = pi[i] + eps;
+        let prow = &pij[i * n_out..(i + 1) * n_out];
+        let wrow = &mut wij[i * n_out..(i + 1) * n_out];
+        for &(lo, hi) in index.row(i) {
+            for j in lo as usize..hi as usize {
+                wrow[j] = ((prow[j] + eps * eps) / (pi_eps * scratch[j])).ln();
+            }
+        }
+    }
+    for (b, &pj_eps) in bj.iter_mut().zip(scratch.iter()) {
+        *b = pj_eps.ln();
+    }
+}
+
+/// `(1 - alpha)^n` by repeated multiplication — the decay a chunk of
+/// `n` images applies to a trace's start value. Deliberately not
+/// `powi`: the loop composes the same f32 products the per-tile folds
+/// apply, and is bit-reproducible across platforms.
+pub(crate) fn ema_decay_pow(alpha: f32, n: usize) -> f32 {
+    let d = 1.0 - alpha;
+    let mut d_n = 1.0f32;
+    for _ in 0..n {
+        d_n *= d;
+    }
+    d_n
+}
+
+/// Fold one data-parallel chunk's trained traces into the running
+/// merge. Every EMA trajectory is an affine map of its start value:
+/// chunk `k` (trained from the shared base state `base`) computed
+/// `part = d_k * base + c_k`, so its input-driven contribution is
+/// `c_k = part - d_k * base`, and composing it after the chunks
+/// already merged gives `merged <- d_k * merged + c_k`. Affine
+/// composition is associative, and this runs in fixed chunk order
+/// (submission order of the splitter), so the merged traces are
+/// deterministic at any thread count.
+pub(crate) fn merge_ema_chunk(merged: &mut [f32], base: &[f32], part: &[f32], d_k: f32) {
+    debug_assert_eq!(merged.len(), base.len());
+    debug_assert_eq!(merged.len(), part.len());
+    for ((m, &p0), &pk) in merged.iter_mut().zip(base).zip(part) {
+        *m = d_k * *m + (pk - d_k * p0);
+    }
+}
+
+/// Re-derive the weight map (active spans) and bias from trace arrays
+/// — the post-merge recompute of the data-parallel trainers. Same
+/// formula, hoist, and span order as the train steps, so merged
+/// weights are exactly the map of the merged traces.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn recompute_span_weights(
+    pi: &[f32], pj: &[f32], pij: &[f32], wij: &mut [f32], bj: &mut [f32],
+    scratch: &mut Vec<f32>, index: &BlockIndex, eps: f32,
+) {
+    let n_out = pj.len();
+    scratch.clear();
+    scratch.extend(pj.iter().map(|&p| p + eps));
+    for i in 0..pi.len() {
+        let pi_eps = pi[i] + eps;
+        let prow = &pij[i * n_out..(i + 1) * n_out];
+        let wrow = &mut wij[i * n_out..(i + 1) * n_out];
+        for &(lo, hi) in index.row(i) {
+            for j in lo as usize..hi as usize {
+                wrow[j] = ((prow[j] + eps * eps) / (pi_eps * scratch[j])).ln();
+            }
+        }
+    }
+    for (b, &pj_eps) in bj.iter_mut().zip(scratch.iter()) {
+        *b = pj_eps.ln();
+    }
+}
+
 /// Batched dense support (the classifier-head datapath, no mask):
 /// `out[k*TILE + l] = bk[k] + sum_j yt[j*TILE + l] * w[j][k]` — the
 /// tile twin of `Projection::support_dense_into` (no zero-row skip, to
@@ -730,5 +900,188 @@ mod tests {
                 "{} vs {dense_bytes}", idx.heap_bytes());
         // Worst case: every active (input, output) HC pair its own span.
         assert!(idx.n_spans() <= dims.nact * dims.hc_out);
+    }
+
+    /// Random trace state for a projection-shaped kernel test: traces
+    /// in (0, 1) (probability-like), weights/bias derived from them.
+    #[allow(clippy::type_complexity)]
+    fn random_traces(
+        n_in: usize, n_out: usize, idx: &BlockIndex, eps: f32, seed: u64,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = XorShift64::new(seed);
+        let pi: Vec<f32> = (0..n_in).map(|_| 0.05 + 0.9 * rng.next_f32()).collect();
+        let pj: Vec<f32> = (0..n_out).map(|_| 0.05 + 0.9 * rng.next_f32()).collect();
+        let pij: Vec<f32> = (0..n_in * n_out).map(|_| 0.05 + 0.9 * rng.next_f32()).collect();
+        let mut wij = vec![0.0f32; n_in * n_out];
+        let mut bj = vec![0.0f32; n_out];
+        let mut scratch = Vec::new();
+        recompute_span_weights(&pi, &pj, &pij, &mut wij, &mut bj, &mut scratch, idx, eps);
+        (pi, pj, pij, wij, bj)
+    }
+
+    #[test]
+    fn tile_train_batch_of_one_bitwise_matches_scalar_step() {
+        let dims = dims_of("small");
+        let mask = random_mask(&dims, 21);
+        let idx = BlockIndex::from_dims(&mask, &dims);
+        let (n_in, n_out) = (dims.n_in(), dims.n_out());
+        let (alpha, eps) = (0.01f32, 1e-4f32);
+        let (pi, pj, pij, wij, bj) = random_traces(n_in, n_out, &idx, eps, 5);
+        let mut rng = XorShift64::new(17);
+        let x: Vec<f32> = (0..n_in).map(|_| rng.next_f32()).collect();
+        let y: Vec<f32> = (0..n_out).map(|_| rng.next_f32()).collect();
+
+        let (mut pi_s, mut pj_s, mut pij_s, mut wij_s, mut bj_s) =
+            (pi.clone(), pj.clone(), pij.clone(), wij.clone(), bj.clone());
+        let mut scratch = Vec::new();
+        train_step_span(
+            &mut pi_s, &mut pj_s, &mut pij_s, &mut wij_s, &mut bj_s,
+            &mut scratch, &idx, &x, &y, alpha, eps,
+        );
+
+        let (mut pi_t, mut pj_t, mut pij_t, mut wij_t, mut bj_t) = (pi, pj, pij, wij, bj);
+        let xt = pack(std::slice::from_ref(&x), n_in);
+        let yt = pack(std::slice::from_ref(&y), n_out);
+        train_step_tile_span(
+            &mut pi_t, &mut pj_t, &mut pij_t, &mut wij_t, &mut bj_t,
+            &mut scratch, &idx, &xt, &yt, 1, alpha, eps,
+        );
+        assert_eq!(bits(&pi_s), bits(&pi_t));
+        assert_eq!(bits(&pj_s), bits(&pj_t));
+        assert_eq!(bits(&pij_s), bits(&pij_t));
+        assert_eq!(bits(&wij_s), bits(&wij_t));
+        assert_eq!(bits(&bj_s), bits(&bj_t));
+    }
+
+    #[test]
+    fn tile_train_fold_matches_iterated_ema() {
+        // A full tile folded at once vs TILE scalar steps applied to
+        // the SAME per-image activities: the fold is the closed form
+        // of the iteration, so traces agree to f32 rounding. Also runs
+        // every ragged width to pin that pad lanes are never folded.
+        let dims = dims_of("small");
+        let mask = random_mask(&dims, 31);
+        let idx = BlockIndex::from_dims(&mask, &dims);
+        let (n_in, n_out) = (dims.n_in(), dims.n_out());
+        let (alpha, eps) = (0.05f32, 1e-4f32);
+        for width in 1..=TILE {
+            let (pi, pj, pij, wij, bj) = random_traces(n_in, n_out, &idx, eps, 40 + width as u64);
+            let mut rng = XorShift64::new(100 + width as u64);
+            let xs: Vec<Vec<f32>> =
+                (0..width).map(|_| (0..n_in).map(|_| rng.next_f32()).collect()).collect();
+            let ys: Vec<Vec<f32>> =
+                (0..width).map(|_| (0..n_out).map(|_| rng.next_f32()).collect()).collect();
+
+            let (mut pi_s, mut pj_s, mut pij_s, mut wij_s, mut bj_s) =
+                (pi.clone(), pj.clone(), pij.clone(), wij.clone(), bj.clone());
+            let mut scratch = Vec::new();
+            for (x, y) in xs.iter().zip(&ys) {
+                train_step_span(
+                    &mut pi_s, &mut pj_s, &mut pij_s, &mut wij_s, &mut bj_s,
+                    &mut scratch, &idx, x, y, alpha, eps,
+                );
+            }
+
+            let (mut pi_t, mut pj_t, mut pij_t, mut wij_t, mut bj_t) = (pi, pj, pij, wij, bj);
+            let xt = pack(&xs, n_in);
+            let yt = pack(&ys, n_out);
+            train_step_tile_span(
+                &mut pi_t, &mut pj_t, &mut pij_t, &mut wij_t, &mut bj_t,
+                &mut scratch, &idx, &xt, &yt, width, alpha, eps,
+            );
+            let close = |a: &[f32], b: &[f32], tol: f32, what: &str| {
+                for (k, (&va, &vb)) in a.iter().zip(b).enumerate() {
+                    assert!((va - vb).abs() <= tol, "{what}[{k}] width {width}: {va} vs {vb}");
+                }
+            };
+            close(&pi_s, &pi_t, 2e-5, "pi");
+            close(&pj_s, &pj_t, 2e-5, "pj");
+            close(&pij_s, &pij_t, 2e-5, "pij");
+            close(&bj_s, &bj_t, 1e-3, "bj");
+            close(&wij_s, &wij_t, 1e-2, "wij");
+        }
+    }
+
+    #[test]
+    fn ema_decay_pow_composes_like_fold_coeffs() {
+        let alpha = 0.03f32;
+        for t in 1..=TILE {
+            let (d_t, coef) = ema_fold_coeffs(alpha, t);
+            assert_eq!(d_t.to_bits(), ema_decay_pow(alpha, t).to_bits(), "t = {t}");
+            // coef telescopes: d^t + sum coef[k] == 1 up to rounding.
+            let total: f32 = d_t + coef.iter().sum::<f32>();
+            assert!((total - 1.0).abs() < 1e-5, "t = {t}: mass {total}");
+        }
+        assert_eq!(ema_decay_pow(alpha, 0).to_bits(), 1.0f32.to_bits());
+    }
+
+    #[test]
+    fn merge_ema_chunk_equals_sequential_composition() {
+        // Two chunks trained independently from the same base merge
+        // into exactly the state sequential chunk-after-chunk training
+        // reaches (up to rounding of the d_k reconstruction).
+        let alpha = 0.02f32;
+        let d = 1.0 - alpha;
+        let n = 64usize;
+        let mut rng = XorShift64::new(9);
+        let base: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let inputs_a: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..n).map(|_| rng.next_f32()).collect()).collect();
+        let inputs_b: Vec<Vec<f32>> =
+            (0..7).map(|_| (0..n).map(|_| rng.next_f32()).collect()).collect();
+        let ema = |start: &[f32], inputs: &[Vec<f32>]| {
+            let mut p = start.to_vec();
+            for u in inputs {
+                for (pv, &uv) in p.iter_mut().zip(u) {
+                    *pv = d * *pv + alpha * uv;
+                }
+            }
+            p
+        };
+        let part_a = ema(&base, &inputs_a);
+        let part_b = ema(&base, &inputs_b);
+        let sequential = ema(&part_a, &inputs_b);
+        let mut merged = part_a;
+        merge_ema_chunk(&mut merged, &base, &part_b, ema_decay_pow(alpha, inputs_b.len()));
+        for (k, (&m, &s)) in merged.iter().zip(&sequential).enumerate() {
+            assert!((m - s).abs() < 1e-6, "[{k}]: merged {m} vs sequential {s}");
+        }
+    }
+
+    #[test]
+    fn recompute_span_weights_matches_train_step_map() {
+        // The standalone recompute (used after a thread merge) must
+        // produce bitwise the map a train step would have left behind.
+        let dims = dims_of("small");
+        let mask = random_mask(&dims, 51);
+        let idx = BlockIndex::from_dims(&mask, &dims);
+        let (n_in, n_out) = (dims.n_in(), dims.n_out());
+        let (alpha, eps) = (0.01f32, 1e-4f32);
+        let (mut pi, mut pj, mut pij, mut wij, mut bj) =
+            random_traces(n_in, n_out, &idx, eps, 77);
+        let mut rng = XorShift64::new(78);
+        let x: Vec<f32> = (0..n_in).map(|_| rng.next_f32()).collect();
+        let y: Vec<f32> = (0..n_out).map(|_| rng.next_f32()).collect();
+        let mut scratch = Vec::new();
+        train_step_span(
+            &mut pi, &mut pj, &mut pij, &mut wij, &mut bj,
+            &mut scratch, &idx, &x, &y, alpha, eps,
+        );
+        let (mut wij_r, mut bj_r) = (vec![0.0f32; n_in * n_out], vec![0.0f32; n_out]);
+        recompute_span_weights(&pi, &pj, &pij, &mut wij_r, &mut bj_r, &mut scratch, &idx, eps);
+        assert_eq!(bits(&bj), bits(&bj_r));
+        // Off-span weights are untouched by recompute (stay 0) — only
+        // compare the active columns the train step also wrote.
+        for i in 0..n_in {
+            for &(lo, hi) in idx.row(i) {
+                for j in lo as usize..hi as usize {
+                    assert_eq!(
+                        wij[i * n_out + j].to_bits(),
+                        wij_r[i * n_out + j].to_bits(),
+                        "({i},{j})"
+                    );
+                }
+            }
+        }
     }
 }

@@ -110,6 +110,26 @@ impl StructuralPlasticity {
         }
         stats
     }
+
+    /// One rewiring pass over a whole stack of projections, each on
+    /// its own scoped thread — the sharded trainer's post-merge
+    /// structural step. Deterministic: each projection's pass is a
+    /// pure function of its own (merged) traces, projections share no
+    /// state, and the per-layer stats come back in layer order, so the
+    /// result is bitwise [`StructuralPlasticity::rewire_projection`]
+    /// applied layer by layer.
+    pub fn rewire_layers(&self, projs: &mut [Projection], eps: f32) -> Vec<RewireStats> {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = projs
+                .iter_mut()
+                .map(|p| s.spawn(move || self.rewire_projection(p, eps)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rewire worker panicked"))
+                .collect()
+        })
+    }
 }
 
 /// The MI-swap core shared by the `Params` and `Projection` paths:

@@ -34,6 +34,9 @@ pub struct Workspace {
     pub(crate) act_t: [Vec<f32>; 2],
     /// Output probability tile (n_classes * TILE).
     pub(crate) out_t: Vec<f32>,
+    /// One-hot target tile (n_classes * TILE) — the batched trainer's
+    /// lane-interleaved supervised labels.
+    pub(crate) tt: Vec<f32>,
 }
 
 impl Workspace {
@@ -51,7 +54,8 @@ impl Workspace {
             + self.xt.capacity()
             + self.act_t[0].capacity()
             + self.act_t[1].capacity()
-            + self.out_t.capacity())
+            + self.out_t.capacity()
+            + self.tt.capacity())
     }
 }
 

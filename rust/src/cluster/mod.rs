@@ -25,6 +25,10 @@
 //!   (round-robin / least-outstanding), per-worker and cluster
 //!   metrics, and graceful failure re-routing, layered on the
 //!   `coordinator::server` batching path.
+//! - [`train`] — the **data-parallel sharded trainer**: per-shard
+//!   batched-EMA training with a deterministic affine trace reduction
+//!   and shard-local structural plasticity (StreamBrain's MPI data
+//!   parallelism on the scoped-thread fleet stand-in).
 //!
 //! `benches/cluster_scaling.rs` measures shard/pipeline/hybrid
 //! scaling; `examples/cluster_serve.rs` demos hybrid serving of
@@ -36,6 +40,7 @@ pub mod hybrid;
 pub mod pipeline;
 pub mod placement;
 pub mod plan;
+pub mod train;
 
 pub use coordinator::{
     pick_replica, ClusterConfig, ClusterReport, ClusterServer, ReplicaReport, SchedulePolicy,
@@ -47,3 +52,4 @@ pub use placement::{
     plan_hybrid, Fleet, HybridPlan, HybridStage, StagePiece, DEFAULT_BALANCE_TOL,
 };
 pub use plan::{plan, plan_pipeline, LayerStage, PartitionPlan, PipelinePlan, ShardSpec};
+pub use train::{ShardTrainReport, ShardedTrainer};

@@ -1,0 +1,208 @@
+//! Data-parallel sharded training — the cluster-side twin of the
+//! serving executors.
+//!
+//! StreamBrain (Podobas et al., HEART '21) scales BCPNN training with
+//! data parallelism over the batch: every worker trains the same model
+//! on its shard of the images, then the probability traces are
+//! reduced. This module is that spine for the reproduction, on the
+//! scoped-thread fleet stand-in the rest of `cluster/` uses:
+//!
+//! ```text
+//!            shard images            reduce traces (fixed order)
+//! batch ---> [worker 0: batched-EMA tile trainer] ---> merge ---> rewire
+//!       \--> [worker 1: batched-EMA tile trainer] --/  (affine     (per
+//!        `-> [worker k: ...                     ] -/    fold)      layer)
+//! ```
+//!
+//! Each round shards the batch into contiguous tile-aligned chunks
+//! (`sparse::scoped_tile_chunks` — the same deterministic splitter as
+//! the serving paths), trains a clone of the shared model per shard
+//! through [`LayerGraph::train_batch`], and merges the per-shard
+//! traces with the affine-EMA reduction of
+//! [`LayerGraph::merge_trained_parts`]: fixed chunk order, so the
+//! merged state is bitwise reproducible at any shard count. Traces are
+//! HC-local under the existing cluster split (each hypercolumn's
+//! marginals and joint rows live with its shard), so the reduction is
+//! purely element-wise — only the `pi`/`pj` marginals and the `pij`
+//! joint rows move, never activations.
+//!
+//! Structural plasticity then re-runs *per shard* on the merged traces
+//! ([`StructuralPlasticity::rewire_layers`] — one scoped worker per
+//! projection): the rewiring decision is a pure function of the merged
+//! traces, so every shard recomputes the same masks instead of
+//! broadcasting them, exactly how the paper keeps the rewiring step on
+//! the host between accelerator batches.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::bcpnn::{GraphRewireStats, LayerGraph, StructuralPlasticity};
+use crate::bcpnn::sparse::scoped_tile_chunks;
+
+/// Per-shard accounting of one data-parallel training round.
+#[derive(Debug, Clone)]
+pub struct ShardTrainReport {
+    pub shard: usize,
+    /// Images this shard trained.
+    pub images: usize,
+    /// Wall time of the shard worker (clone + train).
+    pub wall_s: f64,
+    pub img_per_s: f64,
+}
+
+/// Data-parallel trainer over a fixed shard count.
+pub struct ShardedTrainer {
+    /// The shared model (the merged state after each round).
+    pub graph: LayerGraph,
+    shards: usize,
+    structural: StructuralPlasticity,
+}
+
+impl ShardedTrainer {
+    pub fn new(graph: LayerGraph, shards: usize) -> Result<ShardedTrainer> {
+        ensure!(shards >= 1, "sharded trainer needs at least one shard");
+        Ok(ShardedTrainer { graph, shards, structural: StructuralPlasticity::default() })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// One data-parallel unsupervised round over `images`: shard,
+    /// train, merge. Returns per-shard reports in shard order. A batch
+    /// that yields a single chunk trains in place (bitwise the
+    /// single-shard path).
+    pub fn train_batch(&mut self, images: &[Vec<f32>]) -> Vec<ShardTrainReport> {
+        let base = &self.graph;
+        match scoped_tile_chunks(images.len(), self.shards, |lo, hi| {
+            let t0 = Instant::now();
+            let mut g = base.clone();
+            g.train_batch(&images[lo..hi]);
+            (hi - lo, g, t0.elapsed().as_secs_f64())
+        }) {
+            Some(parts) => {
+                let reports = parts
+                    .iter()
+                    .enumerate()
+                    .map(|(shard, (n, _, wall_s))| ShardTrainReport {
+                        shard,
+                        images: *n,
+                        wall_s: *wall_s,
+                        img_per_s: *n as f64 / wall_s.max(1e-9),
+                    })
+                    .collect();
+                let merged: Vec<(usize, LayerGraph)> =
+                    parts.into_iter().map(|(n, g, _)| (n, g)).collect();
+                self.graph.merge_trained_parts(merged);
+                reports
+            }
+            None => {
+                let t0 = Instant::now();
+                self.graph.train_batch(images);
+                let wall_s = t0.elapsed().as_secs_f64();
+                vec![ShardTrainReport {
+                    shard: 0,
+                    images: images.len(),
+                    wall_s,
+                    img_per_s: images.len() as f64 / wall_s.max(1e-9),
+                }]
+            }
+        }
+    }
+
+    /// One data-parallel supervised round (hidden stack frozen, head
+    /// traces reduced the same way).
+    pub fn train_sup_batch(&mut self, images: &[Vec<f32>], labels: &[u32]) {
+        self.graph.train_sup_batch_threads(images, labels, self.shards);
+    }
+
+    /// Structural plasticity on the merged traces, layer-parallel
+    /// (one scoped worker per projection). Deterministic: each
+    /// projection's pass is a pure function of its own traces.
+    pub fn rewire(&mut self) -> GraphRewireStats {
+        let eps = self.graph.cfg.eps;
+        self.structural.rewire_layers(&mut self.graph.layers, eps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+    use crate::data::synth;
+
+    fn bits(g: &LayerGraph) -> Vec<u32> {
+        let mut out = Vec::new();
+        for p in g.layers.iter().chain(std::iter::once(&g.head)) {
+            out.extend(p.pi.iter().map(|v| v.to_bits()));
+            out.extend(p.pj.iter().map(|v| v.to_bits()));
+            out.extend(p.pij.iter().map(|v| v.to_bits()));
+            out.extend(p.wij.iter().map(|v| v.to_bits()));
+            out.extend(p.bj.iter().map(|v| v.to_bits()));
+            out.extend(p.mask_hc.iter().map(|v| v.to_bits()));
+        }
+        out
+    }
+
+    #[test]
+    fn sharded_round_matches_thread_splitter() {
+        // The trainer is the cluster face of train_batch_threads: same
+        // splitter, same merge, so the merged model is bitwise equal.
+        let cfg = by_name("toy-deep").unwrap();
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 24, 3, 0.15);
+        let mut twin = LayerGraph::new(cfg.clone(), 11);
+        let mut st = ShardedTrainer::new(LayerGraph::new(cfg, 11), 3).unwrap();
+        let reports = st.train_batch(&d.images);
+        twin.train_batch_threads(&d.images, 3);
+        assert_eq!(bits(&st.graph), bits(&twin));
+        assert_eq!(reports.len(), 3);
+        assert_eq!(reports.iter().map(|r| r.images).sum::<usize>(), 24);
+        for (k, r) in reports.iter().enumerate() {
+            assert_eq!(r.shard, k);
+            assert!(r.img_per_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn single_shard_falls_through_sequentially() {
+        let cfg = by_name("toy-deep").unwrap();
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 16, 5, 0.15);
+        let mut seq = LayerGraph::new(cfg.clone(), 2);
+        seq.train_batch(&d.images);
+        let mut st = ShardedTrainer::new(LayerGraph::new(cfg, 2), 1).unwrap();
+        let reports = st.train_batch(&d.images);
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].images, 16);
+        assert_eq!(bits(&st.graph), bits(&seq));
+    }
+
+    #[test]
+    fn rewire_runs_layer_parallel_and_matches_sequential() {
+        let cfg = by_name("toy-deep").unwrap();
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 48, 7, 0.15);
+        let mut st = ShardedTrainer::new(LayerGraph::new(cfg.clone(), 7), 2).unwrap();
+        st.train_batch(&d.images);
+        // Sequential oracle on an identical state.
+        let mut twin = st.graph.clone();
+        let sp = StructuralPlasticity::default();
+        let want = twin.rewire(&sp);
+        let got = st.rewire();
+        assert_eq!(got, want);
+        assert_eq!(bits(&st.graph), bits(&twin));
+        assert_eq!(got.len(), 2);
+        for (l, s) in got.iter().enumerate() {
+            assert_eq!(
+                s.swaps + s.stable,
+                st.graph.layers[l].dims.hc_out,
+                "layer {l}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_shards_rejected() {
+        let cfg = by_name("tiny").unwrap();
+        assert!(ShardedTrainer::new(LayerGraph::new(cfg, 1), 0).is_err());
+    }
+}

@@ -18,6 +18,7 @@ use crate::bcpnn::{LayerGraph, Params};
 use crate::config::ModelConfig;
 use crate::data::Dataset;
 use crate::runtime::session::{Session, Tensor};
+use crate::util::json::Json;
 
 use super::metrics::{LatencyStats, Recorder};
 
@@ -30,11 +31,20 @@ pub struct TrainOptions {
     /// Rewire every N unsupervised batches.
     pub struct_interval: usize,
     pub seed: u64,
+    /// Worker threads of the batched trainer
+    /// ([`GraphDriver::train_batched`]); the sequential paths ignore it.
+    pub threads: usize,
 }
 
 impl Default for TrainOptions {
     fn default() -> Self {
-        TrainOptions { epochs: 1, structural: false, struct_interval: 4, seed: 42 }
+        TrainOptions {
+            epochs: 1,
+            structural: false,
+            struct_interval: 4,
+            seed: 42,
+            threads: 1,
+        }
     }
 }
 
@@ -362,6 +372,67 @@ pub struct GraphTrainOutcome {
     pub total_s: f64,
 }
 
+/// Per-epoch accounting of the batched trainer
+/// ([`GraphDriver::train_batched`]).
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    /// Images trained this epoch (drop-remainder batching).
+    pub images: usize,
+    pub wall_s: f64,
+    pub img_per_s: f64,
+    pub rewire_passes: usize,
+    pub rewire_swaps: usize,
+}
+
+impl EpochStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::from(self.epoch)),
+            ("images", Json::from(self.images)),
+            ("wall_s", Json::from(self.wall_s)),
+            ("img_per_s", Json::from(self.img_per_s)),
+            ("rewire_passes", Json::from(self.rewire_passes)),
+            ("rewire_swaps", Json::from(self.rewire_swaps)),
+        ])
+    }
+}
+
+/// Outcome of a batched (tile + data-parallel) train+evaluate run.
+#[derive(Debug, Clone)]
+pub struct BatchTrainOutcome {
+    pub train_acc: f64,
+    pub test_acc: f64,
+    /// Worker threads the run sharded over.
+    pub threads: usize,
+    pub epochs: Vec<EpochStats>,
+    pub sup_wall_s: f64,
+    pub sup_img_per_s: f64,
+    pub infer_img_per_s: f64,
+    pub total_s: f64,
+}
+
+impl BatchTrainOutcome {
+    /// Total rewires performed across all epochs.
+    pub fn rewire_swaps(&self) -> usize {
+        self.epochs.iter().map(|e| e.rewire_swaps).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("train_acc", Json::from(self.train_acc)),
+            ("test_acc", Json::from(self.test_acc)),
+            ("threads", Json::from(self.threads)),
+            ("epochs", Json::Arr(self.epochs.iter().map(EpochStats::to_json).collect())),
+            ("rewire_swaps", Json::from(self.rewire_swaps())),
+            ("sup_wall_s", Json::from(self.sup_wall_s)),
+            ("sup_img_per_s", Json::from(self.sup_img_per_s)),
+            ("infer_img_per_s", Json::from(self.infer_img_per_s)),
+            ("total_s", Json::from(self.total_s)),
+        ])
+    }
+}
+
 /// Reference-path driver for stacked configs: no AOT artifacts exist
 /// for deep topologies, so the coordinator trains the pure-rust
 /// [`LayerGraph`] directly — same phase schedule as [`Driver::train`]
@@ -464,6 +535,83 @@ impl GraphDriver {
             total_s: t_total.elapsed().as_secs_f64(),
         })
     }
+
+    /// Batched twin of [`GraphDriver::train`]: same phase schedule
+    /// (drop-remainder batching, structural plasticity every
+    /// `struct_interval` batches), but each batch runs through the
+    /// batched-EMA tile trainer sharded over `opts.threads` workers
+    /// (`LayerGraph::train_batch_threads` /
+    /// `train_sup_batch_threads`), and evaluation through the threaded
+    /// tile engine. With `threads: 1` each batch is bitwise the
+    /// single-thread tile path; the sequential [`GraphDriver::train`]
+    /// stays available as the per-image oracle.
+    pub fn train_batched(
+        &mut self,
+        train: &Dataset,
+        test: &Dataset,
+        opts: &TrainOptions,
+    ) -> Result<BatchTrainOutcome> {
+        let t_total = Instant::now();
+        let b = self.graph.cfg.batch;
+        let threads = opts.threads.max(1);
+        let mut epochs = Vec::with_capacity(opts.epochs);
+
+        for epoch in 0..opts.epochs {
+            let t0 = Instant::now();
+            let mut images = 0usize;
+            let (mut passes, mut swaps) = (0usize, 0usize);
+            for (bi, (imgs, _)) in batches(train, b).enumerate() {
+                if imgs.len() < b {
+                    continue; // remainder dropped (streaming semantics)
+                }
+                self.graph.train_batch_threads(&imgs, threads);
+                images += imgs.len();
+                if opts.structural && (bi + 1) % opts.struct_interval == 0 {
+                    for stats in self.graph.rewire(&self.structural) {
+                        swaps += stats.swaps;
+                    }
+                    passes += 1;
+                }
+            }
+            let wall_s = t0.elapsed().as_secs_f64();
+            epochs.push(EpochStats {
+                epoch,
+                images,
+                wall_s,
+                img_per_s: images as f64 / wall_s.max(1e-9),
+                rewire_passes: passes,
+                rewire_swaps: swaps,
+            });
+        }
+
+        let t0 = Instant::now();
+        let mut sup_images = 0usize;
+        for (imgs, labels) in batches(train, b) {
+            if imgs.len() < b {
+                continue;
+            }
+            self.graph.train_sup_batch_threads(&imgs, &labels, threads);
+            sup_images += imgs.len();
+        }
+        let sup_wall_s = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let train_acc = self.graph.accuracy_threads(&train.images, &train.labels, threads);
+        let test_acc = self.graph.accuracy_threads(&test.images, &test.labels, threads);
+        let n_eval = train.len() + test.len();
+        let infer_img_per_s = n_eval as f64 / t1.elapsed().as_secs_f64().max(1e-9);
+
+        Ok(BatchTrainOutcome {
+            train_acc,
+            test_acc,
+            threads,
+            epochs,
+            sup_wall_s,
+            sup_img_per_s: sup_images as f64 / sup_wall_s.max(1e-9),
+            infer_img_per_s,
+            total_s: t_total.elapsed().as_secs_f64(),
+        })
+    }
 }
 
 /// Iterate a dataset in batches of `b` (last batch may be short).
@@ -504,6 +652,7 @@ mod tests {
             structural: true,
             struct_interval: 2,
             seed: 42,
+            threads: 1,
         };
         let out = gd.train(&tr, &te, &opts).unwrap();
         assert_eq!(out.per_layer.len(), 2);
@@ -513,6 +662,36 @@ mod tests {
         }
         assert!(out.sup.count > 0);
         assert!((0.0..=1.0).contains(&out.test_acc));
+    }
+
+    #[test]
+    fn batched_driver_matches_schedule_and_exports_json() {
+        let cfg = crate::config::by_name("toy-deep").unwrap();
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 48, 3, 0.15);
+        let (tr, te) = d.split(40);
+        let opts = TrainOptions {
+            epochs: 2,
+            structural: true,
+            struct_interval: 2,
+            seed: 42,
+            threads: 2,
+        };
+        let mut gd = GraphDriver::new(cfg, 42);
+        let out = gd.train_batched(&tr, &te, &opts).unwrap();
+        assert_eq!(out.epochs.len(), 2);
+        for e in &out.epochs {
+            // 40 train images at batch 8: five full batches, rewire
+            // every 2nd -> 2 passes per epoch.
+            assert_eq!(e.images, 40, "epoch {}", e.epoch);
+            assert_eq!(e.rewire_passes, 2, "epoch {}", e.epoch);
+            assert!(e.img_per_s > 0.0);
+        }
+        assert!((0.0..=1.0).contains(&out.train_acc));
+        assert!((0.0..=1.0).contains(&out.test_acc));
+        let js = out.to_json().to_string();
+        for key in ["train_acc", "test_acc", "threads", "epochs", "img_per_s"] {
+            assert!(js.contains(key), "missing {key} in {js}");
+        }
     }
 
     // PJRT-backed driver tests live in rust/tests/integration.rs

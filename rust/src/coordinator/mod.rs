@@ -8,7 +8,8 @@ pub mod metrics;
 pub mod server;
 
 pub use driver::{
-    Driver, GraphDriver, GraphTrainOutcome, LayerPhaseStats, TrainOptions, TrainOutcome,
+    BatchTrainOutcome, Driver, EpochStats, GraphDriver, GraphTrainOutcome, LayerPhaseStats,
+    TrainOptions, TrainOutcome,
 };
 pub use metrics::{EnergyReport, LatencyStats, Recorder};
 pub use server::{GraphBackend, InferBackend, InferenceServer, ServerConfig, ServerReport};

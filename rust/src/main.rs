@@ -33,7 +33,10 @@ USAGE: repro <command> [options]
 COMMANDS:
   config            print configurations (--config NAME | --all) (--json)
   train             train via PJRT artifacts (--config tiny --epochs N
-                    --struct --seed S --artifacts DIR)
+                    --struct --seed S --artifacts DIR); stacked configs
+                    run the batched-EMA tile trainer on the host
+                    (--threads N shards the batch data-parallel;
+                    --json prints the per-epoch report machine-readable)
   serve             inference server demo (--config tiny --requests N
                     --artifacts DIR); --host serves the pure-rust
                     batched tile engine instead of PJRT (--threads N);
@@ -262,6 +265,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         structural: args.flag("struct"),
         struct_interval: args.get_parse("struct-interval", 4usize)?,
         seed,
+        threads: 1, // PJRT dispatch is sequential; --threads is the graph path's
     };
     println!(
         "training {name}: {} train / {} test images, {} epochs, structural={}",
@@ -292,8 +296,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Reference-path training for stacked layer-graph configs: per-layer
-/// latency/rewire accounting, checkpointed in the v2 graph format.
+/// Reference-path training for stacked layer-graph configs, through
+/// the batched-EMA tile trainer (`--threads N` shards each batch
+/// data-parallel; per-epoch img/s + rewire accounting), checkpointed
+/// in the v2 graph format. `--json` routes the report through
+/// `BatchTrainOutcome::to_json` on stdout (progress moves to stderr).
 fn cmd_train_graph(
     args: &Args, cfg: bcpnn_accel::config::ModelConfig, epochs: usize, seed: u64,
     n_train: usize, n_test: usize,
@@ -301,6 +308,8 @@ fn cmd_train_graph(
     use bcpnn_accel::coordinator::GraphDriver;
 
     let name = cfg.name.clone();
+    let threads: usize = args.get_parse("threads", bcpnn_accel::util::threads_from_env())?;
+    let json = args.flag("json");
     let data = synth::generate(cfg.img_side, cfg.n_classes, n_train + n_test, seed, 0.15);
     let (train, test) = data.split(n_train);
     let opts = TrainOptions {
@@ -308,10 +317,11 @@ fn cmd_train_graph(
         structural: args.flag("struct"),
         struct_interval: args.get_parse("struct-interval", 4usize)?,
         seed,
+        threads,
     };
-    println!(
-        "training {name} (reference path, {} hidden layers): {} train / {} test, \
-         {} epochs, structural={}",
+    eprintln!(
+        "training {name} (batched tile trainer, {} hidden layers, {threads} thread(s)): \
+         {} train / {} test, {} epochs, structural={}",
         cfg.n_layers(),
         train.len(),
         test.len(),
@@ -319,26 +329,21 @@ fn cmd_train_graph(
         opts.structural
     );
     let mut driver = GraphDriver::new(cfg, seed);
-    let out = driver.train(&train, &test, &opts)?;
-    println!(
-        "train acc: {:.1}%   test acc: {:.1}%",
-        out.train_acc * 100.0,
-        out.test_acc * 100.0
-    );
-    for l in &out.per_layer {
+    let out = driver.train_batched(&train, &test, &opts)?;
+    if json {
+        println!("{}", out.to_json());
+    } else {
         println!(
-            "layer {}: unsup {:.3} ms/img  rewires {} (swaps {})",
-            l.layer, l.unsup.mean_ms, l.rewire_passes, l.rewire_swaps
+            "train acc: {:.1}%   test acc: {:.1}%",
+            out.train_acc * 100.0,
+            out.test_acc * 100.0
         );
+        print!("{}", report::train_epochs_table(&out));
     }
-    println!(
-        "sup {:.3} ms/img  infer {:.3} ms/img  total {:.2} s",
-        out.sup.mean_ms, out.infer.mean_ms, out.total_s
-    );
     if let Some(path) = args.get("save") {
         bcpnn_accel::bcpnn::checkpoint::save_graph(
             std::path::Path::new(path), &driver.graph)?;
-        println!("checkpoint (v2 layer-graph) saved to {path}");
+        eprintln!("checkpoint (v2 layer-graph) saved to {path}");
     }
     Ok(())
 }

@@ -482,6 +482,28 @@ pub fn serve_decomposition(r: &crate::coordinator::server::ServerReport) -> Stri
     s
 }
 
+/// Per-epoch throughput + rewiring table of the batched trainer
+/// (`repro train --threads`).
+pub fn train_epochs_table(out: &crate::coordinator::BatchTrainOutcome) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Batched-EMA trainer decomposition ({} thread(s))\n",
+        out.threads
+    ));
+    s.push_str("  epoch  images     img/s  rewires  swaps\n");
+    for e in &out.epochs {
+        s.push_str(&format!(
+            "  {:>5} {:>7} {:>9.0} {:>8} {:>6}\n",
+            e.epoch, e.images, e.img_per_s, e.rewire_passes, e.rewire_swaps,
+        ));
+    }
+    s.push_str(&format!(
+        "  sup {:.0} img/s   eval {:.0} img/s   total {:.2} s\n",
+        out.sup_img_per_s, out.infer_img_per_s, out.total_s,
+    ));
+    s
+}
+
 /// Render a receptive field (Fig. 5) as ASCII art.
 pub fn ascii_field(field: &[f64], side: usize) -> String {
     let ramp = b" .:-=+*#%@";
@@ -544,6 +566,32 @@ mod tests {
         assert!(totals.contains("repro stack"), "{totals}");
         let f6 = fig6(&["toy-deep"]).unwrap();
         assert!(f6.contains("stacked config"), "{f6}");
+    }
+
+    #[test]
+    fn train_epochs_table_renders_per_epoch_rows() {
+        let out = crate::coordinator::BatchTrainOutcome {
+            train_acc: 0.9,
+            test_acc: 0.8,
+            threads: 2,
+            epochs: vec![crate::coordinator::EpochStats {
+                epoch: 0,
+                images: 40,
+                wall_s: 0.5,
+                img_per_s: 80.0,
+                rewire_passes: 2,
+                rewire_swaps: 3,
+            }],
+            sup_wall_s: 0.1,
+            sup_img_per_s: 400.0,
+            infer_img_per_s: 1000.0,
+            total_s: 0.7,
+        };
+        let t = train_epochs_table(&out);
+        assert!(t.contains("2 thread(s)"), "{t}");
+        assert!(t.contains("rewires"), "{t}");
+        assert!(t.contains("40"), "{t}");
+        assert!(t.contains("total 0.70 s"), "{t}");
     }
 
     #[test]

@@ -172,6 +172,7 @@ fn driver_with_structural_plasticity_trains() {
                 structural: true,
                 struct_interval: 2,
                 seed: 21,
+                threads: 1,
             },
         )
         .unwrap();

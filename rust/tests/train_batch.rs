@@ -1,0 +1,243 @@
+//! Batched-EMA trainer pin suite: `train_batch`/`train_sup_batch` and
+//! their `_threads` twins vs the sequential per-image trainer, across
+//! the whole config registry.
+//!
+//! Contract (DESIGN.md §3.3):
+//!  - **batch of 1 is bitwise** the scalar step: the fold coefficients
+//!    degenerate to `(1-α, [α])` exactly and the tile kernel replays
+//!    the scalar op order, so feeding images one at a time through the
+//!    batched path reproduces `train_unsup_step`/`train_sup_step` to
+//!    the bit, registry-wide.
+//!  - **full tiles diverge only by the minibatch semantics**: the tile
+//!    computes all TILE activities from tile-start weights, so batched
+//!    and sequential trajectories differ — but both are convex
+//!    combinations of [0,1] inputs anchored at the same p0, so every
+//!    trace stays within `1 - (1-α)^N` of its sequential twin after N
+//!    images (plus fold-rounding slack).
+//!  - **supervised is near-exact**: the hidden stack is frozen during
+//!    the head pass, so activities are identical and only the fold's
+//!    rounding differs (abs ~1e-4 on traces).
+//!  - **threads are deterministic and exact**: `threads = 1` falls
+//!    through bitwise; any shard count merges in fixed chunk order, so
+//!    repeated runs are bitwise identical, and the merged traces obey
+//!    the same EMA bound vs sequential.
+//!  - a batched-trained graph **round-trips the v2 checkpoint**
+//!    bitwise.
+
+use bcpnn_accel::bcpnn::checkpoint::{load_graph, save_graph};
+use bcpnn_accel::bcpnn::{LayerGraph, Projection, StructuralPlasticity};
+use bcpnn_accel::config::{by_name, registry, ModelConfig};
+use bcpnn_accel::data::synth::{self, Dataset};
+
+fn bits(g: &LayerGraph) -> Vec<u32> {
+    let mut out = Vec::new();
+    for p in g.layers.iter().chain(std::iter::once(&g.head)) {
+        out.extend(p.pi.iter().map(|v| v.to_bits()));
+        out.extend(p.pj.iter().map(|v| v.to_bits()));
+        out.extend(p.pij.iter().map(|v| v.to_bits()));
+        out.extend(p.wij.iter().map(|v| v.to_bits()));
+        out.extend(p.bj.iter().map(|v| v.to_bits()));
+        out.extend(p.mask_hc.iter().map(|v| v.to_bits()));
+    }
+    out
+}
+
+fn data_for(cfg: &ModelConfig, seed: u64) -> Dataset {
+    // Large paper models get a reduced set so the debug-build suite
+    // stays fast; the math is per-image, so coverage is unaffected.
+    let n = if cfg.n_in() * cfg.n_h() > 1_000_000 { 2 } else { 2 * cfg.batch.clamp(4, 12) };
+    synth::generate(cfg.img_side, cfg.n_classes, n, seed, 0.15)
+}
+
+/// Sequential-vs-batched EMA drift bound after `n` images (DESIGN.md
+/// §3.3): both trajectories are convex combinations of [0,1] inputs
+/// anchored at the same p0, so they can differ by at most the total
+/// weight the EMA has shifted off p0, `1 - (1-α)^n`, plus rounding
+/// slack for the fold.
+fn ema_bound(alpha: f32, n: usize) -> f32 {
+    (1.0 - (1.0 - alpha as f64).powi(n as i32)) as f32 + 1e-5
+}
+
+fn assert_traces_close(name: &str, what: &str, a: &Projection, b: &Projection, tol: f32) {
+    for (arr, (x, y)) in [
+        ("pi", (&a.pi, &b.pi)),
+        ("pj", (&a.pj, &b.pj)),
+        ("pij", (&a.pij, &b.pij)),
+    ] {
+        assert_eq!(x.len(), y.len(), "{name} {what} {arr} len");
+        for (k, (u, v)) in x.iter().zip(y.iter()).enumerate() {
+            assert!(
+                (u - v).abs() <= tol,
+                "{name} {what} {arr}[{k}]: {u} vs {v} (tol {tol})"
+            );
+        }
+    }
+}
+
+// --- batch of 1 is the scalar step, bitwise, registry-wide ----------
+
+#[test]
+fn batch_of_one_is_bitwise_the_scalar_step() {
+    for name in registry().keys() {
+        let cfg = by_name(name).unwrap();
+        let d = data_for(&cfg, 7);
+        let mut seq = LayerGraph::new(cfg.clone(), 7);
+        let mut bat = LayerGraph::new(cfg, 7);
+        for img in &d.images {
+            seq.train_unsup_step(img);
+            bat.train_batch(std::slice::from_ref(img));
+        }
+        for (img, &label) in d.images.iter().zip(&d.labels) {
+            seq.train_sup_step(img, label as usize);
+            bat.train_sup_batch(std::slice::from_ref(img), &[label]);
+        }
+        assert_eq!(bits(&seq), bits(&bat), "{name}: batch-of-1 drifted from scalar step");
+    }
+}
+
+// --- full tiles: tolerance-pinned vs sequential, registry-wide ------
+
+#[test]
+fn batched_matches_sequential_within_ema_bound() {
+    for name in registry().keys() {
+        let cfg = by_name(name).unwrap();
+        let d = data_for(&cfg, 11);
+        let tol = ema_bound(cfg.alpha, d.images.len());
+        let mut seq = LayerGraph::new(cfg.clone(), 11);
+        let mut bat = LayerGraph::new(cfg, 11);
+        for img in &d.images {
+            seq.train_unsup_step(img);
+        }
+        bat.train_batch(&d.images);
+        for (l, (a, b)) in seq.layers.iter().zip(bat.layers.iter()).enumerate() {
+            assert_traces_close(name, &format!("layer {l}"), a, b, tol);
+        }
+    }
+}
+
+#[test]
+fn batched_matches_sequential_post_rewire() {
+    // Re-anchor after structural plasticity: rewire a shared warm
+    // graph once, then train the clones on; the bound only covers the
+    // post-rewire images.
+    let cfg = by_name("toy-deep").unwrap();
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 32, 3, 0.15);
+    let mut base = LayerGraph::new(cfg.clone(), 3);
+    base.train_batch(&d.images[..16]);
+    let sp = StructuralPlasticity::default();
+    base.rewire(&sp);
+
+    let mut seq = base.clone();
+    let mut bat = base;
+    for img in &d.images[16..] {
+        seq.train_unsup_step(img);
+    }
+    bat.train_batch(&d.images[16..]);
+    let tol = ema_bound(cfg.alpha, 16);
+    for (l, (a, b)) in seq.layers.iter().zip(bat.layers.iter()).enumerate() {
+        assert_traces_close("toy-deep", &format!("post-rewire layer {l}"), a, b, tol);
+        assert_eq!(
+            bits_of(&a.mask_hc),
+            bits_of(&b.mask_hc),
+            "toy-deep post-rewire layer {l}: masks drifted"
+        );
+    }
+}
+
+fn bits_of(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// --- supervised head: near-exact (frozen hidden stack) --------------
+
+#[test]
+fn sup_batched_is_near_exact() {
+    let cfg = by_name("toy-deep").unwrap();
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 24, 9, 0.15);
+    let mut warm = LayerGraph::new(cfg, 9);
+    warm.train_batch(&d.images);
+    let mut seq = warm.clone();
+    let mut bat = warm;
+    for (img, &label) in d.images.iter().zip(&d.labels) {
+        seq.train_sup_step(img, label as usize);
+    }
+    bat.train_sup_batch(&d.images, &d.labels);
+    // Hidden stacks untouched by the head pass: bitwise.
+    for (l, (a, b)) in seq.layers.iter().zip(bat.layers.iter()).enumerate() {
+        assert_traces_close("toy-deep", &format!("sup hidden layer {l}"), a, b, 0.0);
+    }
+    // Head activities are identical (frozen stack), so only the fold's
+    // summation order differs: rounding-level drift.
+    assert_traces_close("toy-deep", "sup head", &seq.head, &bat.head, 1e-4);
+    for (k, (u, v)) in seq.head.bj.iter().zip(bat.head.bj.iter()).enumerate() {
+        assert!((u - v).abs() <= 1e-3, "sup head bj[{k}]: {u} vs {v}");
+    }
+}
+
+// --- threads: bitwise fall-through, determinism, and the bound ------
+
+#[test]
+fn threads_one_is_bitwise_the_batched_path() {
+    for name in ["tiny", "small", "edge", "toy-deep", "mnist-deep2"] {
+        let cfg = by_name(name).unwrap();
+        let d = data_for(&cfg, 13);
+        let mut a = LayerGraph::new(cfg.clone(), 13);
+        let mut b = LayerGraph::new(cfg, 13);
+        a.train_batch(&d.images);
+        b.train_batch_threads(&d.images, 1);
+        a.train_sup_batch(&d.images, &d.labels);
+        b.train_sup_batch_threads(&d.images, &d.labels, 1);
+        assert_eq!(bits(&a), bits(&b), "{name}: threads=1 is not the sequential batched path");
+    }
+}
+
+#[test]
+fn any_thread_count_is_deterministic_and_bounded() {
+    let cfg = by_name("toy-deep").unwrap();
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 40, 17, 0.15);
+    let mut seq = LayerGraph::new(cfg.clone(), 17);
+    for img in &d.images {
+        seq.train_unsup_step(img);
+    }
+    // 2x the EMA bound: batched-vs-sequential drift plus the merge's
+    // re-anchoring of each chunk at the round-start traces.
+    let tol = 2.0 * ema_bound(cfg.alpha, d.images.len());
+    for threads in [1usize, 2, 3, 5, 8] {
+        let mut a = LayerGraph::new(cfg.clone(), 17);
+        let mut b = LayerGraph::new(cfg.clone(), 17);
+        a.train_batch_threads(&d.images, threads);
+        b.train_batch_threads(&d.images, threads);
+        assert_eq!(bits(&a), bits(&b), "threads={threads}: nondeterministic merge");
+        for (l, (s, p)) in seq.layers.iter().zip(a.layers.iter()).enumerate() {
+            assert_traces_close(
+                "toy-deep",
+                &format!("threads={threads} layer {l}"),
+                s,
+                p,
+                tol,
+            );
+        }
+        a.train_sup_batch_threads(&d.images, &d.labels, threads);
+        b.train_sup_batch_threads(&d.images, &d.labels, threads);
+        assert_eq!(bits(&a), bits(&b), "threads={threads}: nondeterministic sup merge");
+    }
+}
+
+// --- checkpoint: batched epoch round-trips the v2 format ------------
+
+#[test]
+fn checkpoint_roundtrips_after_batched_epoch() {
+    let cfg = by_name("toy-deep").unwrap();
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 32, 23, 0.15);
+    let mut g = LayerGraph::new(cfg, 23);
+    g.train_batch_threads(&d.images, 2);
+    g.rewire(&StructuralPlasticity::default());
+    g.train_sup_batch_threads(&d.images, &d.labels, 2);
+
+    let path = std::env::temp_dir().join(format!("bcpnn_tb_{}.ckpt", std::process::id()));
+    save_graph(&path, &g).unwrap();
+    let loaded = load_graph(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(bits(&g), bits(&loaded), "batched-trained graph did not round-trip");
+    assert_eq!(loaded.cfg.name, "toy-deep");
+}
