@@ -4,14 +4,21 @@
 //! the streamed BCPNN state, plus the bandwidth/latency headroom
 //! narrower words buy on the memory-bound kernels.
 //!
+//! Stacked configs (`toy-deep`) route through the `LayerGraph` twin of
+//! `run_experiment`, so the ablation covers the deep quantize-on-write
+//! path as well as the classic two-projection network.
+//!
 //!     cargo bench --bench ablation_precision
+//!     cargo bench --bench ablation_precision -- --quick   # CI smoke
 
+use bcpnn_accel::bench_harness as bh;
 use bcpnn_accel::config::by_name;
 use bcpnn_accel::data::synth;
 use bcpnn_accel::fpga::quant::{run_experiment, Format};
 use bcpnn_accel::fpga::timing::active_synapses;
 
 fn main() {
+    let opts = bh::BenchOpts::from_args();
     println!("== precision ablation (quantize-on-write training) ==\n");
 
     let formats = [
@@ -23,17 +30,24 @@ fn main() {
         Format::Fixed { int_bits: 1, frac_bits: 3 },
     ];
 
-    for name in ["tiny", "edge"] {
+    let names: &[&str] = if opts.quick {
+        &["tiny", "toy-deep"]
+    } else {
+        &["tiny", "edge", "toy-deep"]
+    };
+    let (n_imgs, n_train, epochs) = if opts.quick { (96, 64, 1) } else { (384, 256, 2) };
+
+    for name in names {
         let cfg = by_name(name).unwrap();
-        let d = synth::generate(cfg.img_side, cfg.n_classes, 384, 11, 0.15);
-        let (train, test) = d.split(256);
-        println!("{name} ({} classes, chance {:.0}%):", cfg.n_classes,
-                 100.0 / cfg.n_classes as f64);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, n_imgs, 11, 0.15);
+        let (train, test) = d.split(n_train);
+        println!("{name} ({} classes, chance {:.0}%, {} layer(s)):", cfg.n_classes,
+                 100.0 / cfg.n_classes as f64, cfg.n_layers());
         println!("  format  bits  test_acc  joint-array MB/img (vs f32)");
         let mb_f32 =
             16.0 * active_synapses(&cfg) as f64 / 1e6; // 4 arrays x 4 B
         for fmt in formats {
-            let r = run_experiment(&cfg, &train, &test, 2, fmt, 42);
+            let r = run_experiment(&cfg, &train, &test, epochs, fmt, 42);
             println!(
                 "  {:<6} {:>4}  {:>7.1}%  {:>6.2} ({:.2}x)",
                 r.format.name(),

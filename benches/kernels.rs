@@ -19,19 +19,22 @@
 //!   (modeled ~6x from weight-stream amortization);
 //! - batched-EMA training throughput ≥ the sequential per-image
 //!   trainer (the fold recomputes the div+ln weight map once per span
-//!   per tile instead of once per image) —
+//!   per tile instead of once per image);
+//! - int8 dequant-in-register tile inference ≥ the f32-store tile row
+//!   (1/4 the weight bytes per span walk), and the modeled
+//!   single-stream roofline keeps int8 at ≥ 2x f32 images/s —
 //! so none of the engines can silently regress in CI.
 
 use std::hint::black_box;
 use std::path::Path;
 
 use bcpnn_accel::bcpnn::sparse::{dense_support_masked, dense_train_step, TILE};
-use bcpnn_accel::bcpnn::{LayerGraph, Workspace};
+use bcpnn_accel::bcpnn::{LayerGraph, QuantFormat, Workspace};
 use bcpnn_accel::bench_harness as bh;
 use bcpnn_accel::config::{by_name, registry};
 use bcpnn_accel::data::encode::encode_image;
 use bcpnn_accel::data::synth;
-use bcpnn_accel::fpga::timing::host_tile_img_s;
+use bcpnn_accel::fpga::timing::{host_tile_img_s, host_tile_img_s_bytes};
 use bcpnn_accel::util::json::Json;
 
 fn ns_per_img(r: &bh::BenchResult, imgs: usize) -> f64 {
@@ -149,6 +152,35 @@ fn main() {
         let tile_thr_speedup =
             ns_per_img(&r_bsingle, n_batch) / ns_per_img(&r_bthr, n_batch).max(1.0);
 
+        // Quantized weight-store rows: the dequant-in-register tile
+        // engine per narrow format vs the f32 tile row above — one
+        // narrow weight load per span walk instead of one f32 load.
+        let mut gq_bf16 = g.clone();
+        gq_bf16.set_precision(QuantFormat::Bf16);
+        let mut qws_bf16 = Workspace::new();
+        let r_qbf16 = bh::bench(&format!("{name} batch tile bf16 store"), warmup, iters, || {
+            black_box(probe(&gq_bf16.infer_batch_with(&db.images, &mut qws_bf16)));
+        });
+        println!("{}", r_qbf16.row());
+        let mut gq_int8 = g.clone();
+        gq_int8.set_precision(QuantFormat::Int8);
+        let mut qws_int8 = Workspace::new();
+        let r_qint8 = bh::bench(&format!("{name} batch tile int8 store"), warmup, iters, || {
+            black_box(probe(&gq_int8.infer_batch_with(&db.images, &mut qws_int8)));
+        });
+        println!("{}", r_qint8.row());
+        let bf16_tile_speedup =
+            ns_per_img(&r_btile, n_batch) / ns_per_img(&r_qbf16, n_batch).max(1.0);
+        let int8_tile_speedup =
+            ns_per_img(&r_btile, n_batch) / ns_per_img(&r_qint8, n_batch).max(1.0);
+        // Modeled roofline shift in the single-stream regime (tile=1:
+        // one weight word per MAC streams from memory, so the narrow
+        // store moves the bandwidth wall by bytes-per-weight).
+        let modeled_stream = |fmt: QuantFormat| {
+            host_tile_img_s_bytes(&cfg, 1, 1, fmt.bytes_per_weight())
+                / host_tile_img_s_bytes(&cfg, 1, 1, QuantFormat::F32.bytes_per_weight())
+        };
+
         // Training: sequential per-image EMA steps vs the batched-EMA
         // tile fold vs the fold + data-parallel shard merge. Each row
         // owns a clone and evolves its traces across iterations
@@ -200,6 +232,12 @@ fn main() {
             "   -> train batched-EMA speedup {train_tile_speedup:.2}x, \
              batched x{thr} threads {train_thr_speedup:.2}x",
         );
+        println!(
+            "   -> tile store: bf16 {bf16_tile_speedup:.2}x, int8 {int8_tile_speedup:.2}x \
+             vs f32 (modeled stream {:.1}x / {:.1}x at tile=1)",
+            modeled_stream(QuantFormat::Bf16),
+            modeled_stream(QuantFormat::Int8),
+        );
 
         if name.as_str() == "mnist-deep2" {
             // Acceptance gate: modeled speedup is ~6.1x here; demand
@@ -237,6 +275,27 @@ fn main() {
                 ns_per_img(&r_tbat, n_batch),
                 ns_per_img(&r_tseq, n_batch),
             );
+            // Acceptance gate: int8 streams 1/4 the weight bytes per
+            // span walk, so on this memory-bound model the dequant
+            // tile engine must not fall behind the f32 store.
+            assert!(
+                int8_tile_speedup >= 1.0,
+                "int8 tile inference only {int8_tile_speedup:.2}x vs the f32 store \
+                 on mnist-deep2 ({:.0} vs {:.0} ns/img) — dequant-in-register \
+                 engine regressed below the f32 throughput floor \
+                 (modeled 4x up the bandwidth roof at tile=1)",
+                ns_per_img(&r_qint8, n_batch),
+                ns_per_img(&r_btile, n_batch),
+            );
+            // Acceptance gate: the modeled single-stream roofline must
+            // keep int8 at >= 2x f32 images/s (it is exactly 4x while
+            // tile=1 stays bandwidth-bound).
+            let m_int8 = modeled_stream(QuantFormat::Int8);
+            assert!(
+                m_int8 >= 2.0,
+                "modeled int8 single-stream throughput only {m_int8:.2}x f32 on \
+                 mnist-deep2 — the bytes-per-weight roofline regressed"
+            );
         }
 
         entries.push(Json::obj(vec![
@@ -261,6 +320,18 @@ fn main() {
             (
                 "modeled_tile_speedup",
                 Json::from(host_tile_img_s(&cfg, TILE, 1) / host_tile_img_s(&cfg, 1, 1)),
+            ),
+            ("batch_tile_bf16_ns_per_img", Json::from(ns_per_img(&r_qbf16, n_batch))),
+            ("batch_tile_int8_ns_per_img", Json::from(ns_per_img(&r_qint8, n_batch))),
+            ("bf16_tile_speedup", Json::from(bf16_tile_speedup)),
+            ("int8_tile_speedup", Json::from(int8_tile_speedup)),
+            (
+                "modeled_bf16_stream_speedup",
+                Json::from(modeled_stream(QuantFormat::Bf16)),
+            ),
+            (
+                "modeled_int8_stream_speedup",
+                Json::from(modeled_stream(QuantFormat::Int8)),
             ),
             ("train_seq_ns_per_img", Json::from(ns_per_img(&r_tseq, n_batch))),
             ("train_batch_ns_per_img", Json::from(ns_per_img(&r_tbat, n_batch))),

@@ -30,6 +30,7 @@ use crate::util::json::Json;
 
 use super::layer::{LayerGraph, Projection};
 use super::params::Params;
+use super::sparse::QuantFormat;
 
 const MAGIC: &str = "bcpnn-accel-checkpoint";
 const VERSION: usize = 1;
@@ -207,29 +208,38 @@ fn proj_array<'a>(p: &'a Projection, name: &str) -> &'a Vec<f32> {
 }
 
 /// Save a layer graph to `path` in the v2 format (atomic write).
+///
+/// The weight arrays are always the f32 masters (the quantized store is
+/// a derived view, never persisted); a non-f32 serving precision is
+/// recorded as a `"precision"` header tag so the load side can
+/// requantize. f32 graphs omit the tag — their files stay byte-identical
+/// to pre-precision checkpoints.
 pub fn save_graph(path: &Path, graph: &LayerGraph) -> Result<()> {
     let arrays = graph_arrays(graph);
-    let header = Json::obj(vec![
+    let mut fields = vec![
         ("magic", Json::from(MAGIC)),
         ("version", Json::from(VERSION_GRAPH)),
         ("n_layers", Json::from(graph.n_layers())),
         ("config", graph.cfg.to_json()),
-        (
-            "arrays",
-            Json::Arr(
-                arrays
-                    .iter()
-                    .map(|(n, v)| {
-                        Json::obj(vec![
-                            ("name", Json::from(n.as_str())),
-                            ("len", Json::from(v.len())),
-                        ])
-                    })
-                    .collect(),
-            ),
+    ];
+    if graph.precision() != QuantFormat::F32 {
+        fields.push(("precision", Json::from(graph.precision().name())));
+    }
+    fields.push((
+        "arrays",
+        Json::Arr(
+            arrays
+                .iter()
+                .map(|(n, v)| {
+                    Json::obj(vec![
+                        ("name", Json::from(n.as_str())),
+                        ("len", Json::from(v.len())),
+                    ])
+                })
+                .collect(),
         ),
-    ])
-    .to_string();
+    ));
+    let header = Json::obj(fields).to_string();
 
     let tmp = path.with_extension("tmp");
     {
@@ -371,7 +381,18 @@ fn load_graph_v2(f: &mut std::fs::File, header: &Json) -> Result<LayerGraph> {
     if f.read(&mut extra)? != 0 {
         bail!("trailing bytes after checkpoint arrays");
     }
-    Ok(LayerGraph { cfg, layers, head })
+    let mut graph = LayerGraph { cfg, layers, head };
+    // Requantize-on-load: the binary section always holds f32 masters;
+    // an optional header tag restores the serving precision. Absent key
+    // (every pre-precision checkpoint) means f32 — old files keep
+    // loading bitwise-unchanged.
+    if let Some(tag) = header.get("precision") {
+        let name = tag.as_str().context("precision header tag")?;
+        let fmt = QuantFormat::parse(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown precision tag {name:?}"))?;
+        graph.set_precision(fmt);
+    }
+    Ok(graph)
 }
 
 #[cfg(test)]
@@ -492,6 +513,66 @@ mod tests {
         save_graph(&path, &g).unwrap();
         let g2 = load_graph(&path).unwrap();
         assert_eq!(g2.layers[0].wij, g.layers[0].wij);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_precision_tag_roundtrips_and_requantizes_on_load() {
+        let cfg = by_name("toy-deep").unwrap();
+        let mut g = LayerGraph::new(cfg.clone(), 29);
+        g.set_precision(QuantFormat::Int8);
+        let path = tmpfile("v2_precision");
+        save_graph(&path, &g).unwrap();
+        let g2 = load_graph(&path).unwrap();
+        assert_eq!(g2.precision(), QuantFormat::Int8);
+        // f32 masters persisted exactly; the rebuilt store infers
+        // bitwise like the original quantized graph.
+        for (a, b) in g.layers.iter().zip(&g2.layers) {
+            assert_eq!(a.wij, b.wij);
+        }
+        let img = vec![0.4; cfg.hc_in()];
+        assert_eq!(g.infer(&img), g2.infer(&img));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_f32_graph_omits_precision_tag() {
+        // The default format writes no tag, so f32 checkpoints stay
+        // byte-identical to pre-precision ones and load as f32.
+        let cfg = by_name("tiny").unwrap();
+        let g = LayerGraph::new(cfg, 5);
+        let path = tmpfile("v2_no_tag");
+        save_graph(&path, &g).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        let hlen = u64::from_le_bytes(raw[..8].try_into().unwrap()) as usize;
+        let header = std::str::from_utf8(&raw[8..8 + hlen]).unwrap();
+        assert!(!header.contains("precision"), "{header}");
+        assert_eq!(load_graph(&path).unwrap().precision(), QuantFormat::F32);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_rejects_unknown_precision_tag() {
+        let cfg = by_name("tiny").unwrap();
+        let mut g = LayerGraph::new(cfg, 5);
+        g.set_precision(QuantFormat::Bf16);
+        let path = tmpfile("v2_bad_tag");
+        save_graph(&path, &g).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        let patched: Vec<u8> = {
+            let hlen = u64::from_le_bytes(raw[..8].try_into().unwrap()) as usize;
+            let header = std::str::from_utf8(&raw[8..8 + hlen]).unwrap();
+            // Same-length tag keeps the length prefix valid.
+            let bad = header.replace("\"bf16\"", "\"q4.4\"");
+            assert_ne!(bad, header);
+            let mut out = raw[..8].to_vec();
+            out.extend_from_slice(bad.as_bytes());
+            out.extend_from_slice(&raw[8 + hlen..]);
+            out
+        };
+        std::fs::write(&path, &patched).unwrap();
+        let err = load_graph(&path).unwrap_err().to_string();
+        assert!(err.contains("precision"), "{err}");
         std::fs::remove_file(&path).ok();
     }
 

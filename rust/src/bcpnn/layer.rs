@@ -39,7 +39,7 @@ use crate::data::rng::XorShift64;
 
 use super::network::{argmax, argmax_lane, Network};
 use super::params::{init_mask_dims, recompute_weights, Params};
-use super::sparse::{expand_mask_dims, BlockIndex, TILE};
+use super::sparse::{expand_mask_dims, BlockIndex, QuantFormat, QuantStore, TILE};
 use super::structural::StructuralPlasticity;
 use super::workspace::Workspace;
 
@@ -71,6 +71,13 @@ pub struct Projection {
     pub mask_hc: Vec<f32>,
     /// Block-sparse connectivity index, rebuilt on structural updates.
     index: BlockIndex,
+    /// Narrow weight store (`None` ⇔ f32): a derived, rebuildable view
+    /// of `wij` in span order, requantized after every train step /
+    /// mask refresh. When present, the support kernels run the
+    /// dequant-in-register twins; when absent (the default) the
+    /// original f32 kernels run untouched — bitwise identity by
+    /// construction.
+    store: Option<QuantStore>,
     /// Scratch table for the hoisted `pj + eps` terms of `train_step`.
     scratch: Vec<f32>,
 }
@@ -120,6 +127,7 @@ impl Projection {
             bj: vec![0.0; n_out],
             mask_hc,
             index,
+            store: None,
             scratch: Vec::new(),
         };
         // Dense derivation at init: every weight (active or not) starts
@@ -151,7 +159,9 @@ impl Projection {
             }
         }
         let index = BlockIndex::from_dims(&mask_hc, &dims);
-        Ok(Projection { dims, pi, pj, pij, wij, bj, mask_hc, index, scratch: Vec::new() })
+        Ok(Projection {
+            dims, pi, pj, pij, wij, bj, mask_hc, index, store: None, scratch: Vec::new(),
+        })
     }
 
     /// Rebuild the block index after structural (mask) updates.
@@ -159,6 +169,7 @@ impl Projection {
     /// from the traces — bitwise the values the dense kernel carried,
     /// since `train_step` maintains every trace densely and the dense
     /// weight map applies this exact formula to them each step.
+    /// A narrow store is requantized over the refreshed spans.
     pub fn refresh_mask(&mut self, eps: f32) {
         let dims = self.dims;
         super::sparse::refresh_activated_weights(
@@ -166,6 +177,41 @@ impl Projection {
             &self.mask_hc, &self.index, &dims, eps,
         );
         self.index = BlockIndex::from_dims(&self.mask_hc, &dims);
+        self.requantize();
+    }
+
+    /// Select the storage precision of this projection's weights:
+    /// `F32` drops the narrow store (the default f32 kernels run
+    /// bitwise untouched); any other format builds the span-ordered
+    /// [`QuantStore`] the dequant kernels stream. Training state stays
+    /// f32 either way — the store is re-derived after every update.
+    pub fn set_precision(&mut self, fmt: QuantFormat) {
+        self.store = match fmt {
+            QuantFormat::F32 => None,
+            fmt => Some(QuantStore::build(
+                fmt, &self.wij, &self.index, self.dims.n_in(), self.dims.n_out(),
+            )),
+        };
+    }
+
+    /// The active storage precision (`F32` when no store is held).
+    pub fn precision(&self) -> QuantFormat {
+        self.store.as_ref().map_or(QuantFormat::F32, |s| s.format())
+    }
+
+    /// The narrow weight store, when one is selected.
+    pub fn quant_store(&self) -> Option<&QuantStore> {
+        self.store.as_ref()
+    }
+
+    /// Rebuild the narrow store from the current `wij`/index — a no-op
+    /// on the default f32 path.
+    fn requantize(&mut self) {
+        if let Some(s) = &self.store {
+            self.store = Some(QuantStore::build(
+                s.format(), &self.wij, &self.index, self.dims.n_in(), self.dims.n_out(),
+            ));
+        }
     }
 
     /// The block-sparse connectivity index the kernels iterate.
@@ -187,7 +233,10 @@ impl Projection {
     /// only active spans. Writes into `out` (no allocation).
     pub fn support_masked_into(&self, x: &[f32], out: &mut Vec<f32>) {
         debug_assert_eq!(x.len(), self.dims.n_in());
-        super::sparse::support_span_into(&self.bj, &self.wij, &self.index, x, out);
+        match &self.store {
+            Some(store) => super::sparse::support_span_q_into(&self.bj, store, &self.index, x, out),
+            None => super::sparse::support_span_into(&self.bj, &self.wij, &self.index, x, out),
+        }
     }
 
     /// Allocating wrapper over [`Projection::support_masked_into`].
@@ -206,9 +255,14 @@ impl Projection {
     /// backs the single-layer shards).
     pub fn support_cols_into(&self, x: &[f32], lo: usize, hi: usize, out: &mut Vec<f32>) {
         debug_assert_eq!(x.len(), self.dims.n_in());
-        super::sparse::support_span_cols_into(
-            &self.bj, &self.wij, &self.index, x, lo, hi, out,
-        );
+        match &self.store {
+            Some(store) => super::sparse::support_span_cols_q_into(
+                &self.bj, store, &self.index, x, lo, hi, out,
+            ),
+            None => super::sparse::support_span_cols_into(
+                &self.bj, &self.wij, &self.index, x, lo, hi, out,
+            ),
+        }
     }
 
     /// Allocating wrapper over [`Projection::support_cols_into`].
@@ -224,6 +278,10 @@ impl Projection {
     pub fn support_dense_into(&self, y: &[f32], out: &mut Vec<f32>) {
         let n_out = self.dims.n_out();
         debug_assert_eq!(y.len(), self.dims.n_in());
+        if let Some(store) = &self.store {
+            super::sparse::support_dense_q_into(&self.bj, store, y, out);
+            return;
+        }
         out.clear();
         out.extend_from_slice(&self.bj);
         for (j, &yj) in y.iter().enumerate() {
@@ -281,23 +339,36 @@ impl Projection {
     /// lane-interleaved input tile (`n_in * TILE`).
     pub fn support_masked_tile_into(&self, xt: &[f32], out: &mut Vec<f32>) {
         debug_assert_eq!(xt.len(), self.dims.n_in() * TILE);
-        super::sparse::support_span_tile_into(&self.bj, &self.wij, &self.index, xt, out);
+        match &self.store {
+            Some(store) => {
+                super::sparse::support_span_tile_q_into(&self.bj, store, &self.index, xt, out)
+            }
+            None => super::sparse::support_span_tile_into(&self.bj, &self.wij, &self.index, xt, out),
+        }
     }
 
     /// Tile twin of [`Projection::support_cols_into`] (the hybrid
     /// shard workers' slice kernel).
     pub fn support_cols_tile_into(&self, xt: &[f32], lo: usize, hi: usize, out: &mut Vec<f32>) {
         debug_assert_eq!(xt.len(), self.dims.n_in() * TILE);
-        super::sparse::support_span_cols_tile_into(
-            &self.bj, &self.wij, &self.index, xt, lo, hi, out,
-        );
+        match &self.store {
+            Some(store) => super::sparse::support_span_cols_tile_q_into(
+                &self.bj, store, &self.index, xt, lo, hi, out,
+            ),
+            None => super::sparse::support_span_cols_tile_into(
+                &self.bj, &self.wij, &self.index, xt, lo, hi, out,
+            ),
+        }
     }
 
     /// Tile twin of [`Projection::support_dense_into`] (the head
     /// datapath).
     pub fn support_dense_tile_into(&self, yt: &[f32], out: &mut Vec<f32>) {
         debug_assert_eq!(yt.len(), self.dims.n_in() * TILE);
-        super::sparse::support_dense_tile_into(&self.bj, &self.wij, yt, out);
+        match &self.store {
+            Some(store) => super::sparse::support_dense_tile_q_into(&self.bj, store, yt, out),
+            None => super::sparse::support_dense_tile_into(&self.bj, &self.wij, yt, out),
+        }
     }
 
     /// Tile twin of [`Projection::activate_masked_into`]: masked tile
@@ -330,6 +401,7 @@ impl Projection {
             &mut self.pi, &mut self.pj, &mut self.pij, &mut self.wij, &mut self.bj,
             &mut self.scratch, &self.index, x, y, alpha, eps,
         );
+        self.requantize();
     }
 
     /// Tile twin of [`Projection::train_step`]: fold `n_imgs`
@@ -345,6 +417,7 @@ impl Projection {
             &mut self.pi, &mut self.pj, &mut self.pij, &mut self.wij, &mut self.bj,
             &mut self.scratch, &self.index, xt, yt, n_imgs, alpha, eps,
         );
+        self.requantize();
     }
 
     /// Re-derive the weight map (active spans) and bias from the
@@ -356,6 +429,7 @@ impl Projection {
             &self.pi, &self.pj, &self.pij, &mut self.wij, &mut self.bj,
             &mut self.scratch, &self.index, eps,
         );
+        self.requantize();
     }
 }
 
@@ -442,6 +516,32 @@ impl LayerGraph {
 
     pub fn n_layers(&self) -> usize {
         self.layers.len()
+    }
+
+    /// Select the storage precision of every projection (hidden stack
+    /// and head) — see [`Projection::set_precision`]. `F32` restores
+    /// the direct kernels bitwise.
+    pub fn set_precision(&mut self, fmt: QuantFormat) {
+        for p in self.layers.iter_mut() {
+            p.set_precision(fmt);
+        }
+        self.head.set_precision(fmt);
+    }
+
+    /// The active storage precision (the head's — `set_precision` keeps
+    /// every projection in the same format).
+    pub fn precision(&self) -> QuantFormat {
+        self.head.precision()
+    }
+
+    /// Narrow-store heap bytes across the graph (0 on the f32 path) —
+    /// the measured twin of the `fpga::hbm` store-byte model.
+    pub fn quant_store_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .chain(std::iter::once(&self.head))
+            .filter_map(|p| p.quant_store().map(|s| s.heap_bytes()))
+            .sum()
     }
 
     // ------------------------------------------------------ activation
@@ -1017,6 +1117,74 @@ mod tests {
         let p = Params::init(&tiny, 1);
         let err = LayerGraph::from_params(&deep, &p).unwrap_err().to_string();
         assert!(err.contains("hidden layers"), "{err}");
+    }
+
+    #[test]
+    fn set_precision_roundtrips_to_bitwise_f32() {
+        // Narrow formats perturb the outputs but stay distributions;
+        // switching back to f32 drops the store and reproduces the
+        // original kernels bitwise.
+        let cfg = by_name("toy-deep").unwrap();
+        let mut g = LayerGraph::new(cfg.clone(), 13);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 10, 3, 0.15);
+        let want: Vec<Vec<u32>> = d
+            .images
+            .iter()
+            .map(|i| g.infer(i).iter().map(|v| v.to_bits()).collect())
+            .collect();
+        for fmt in [QuantFormat::Bf16, QuantFormat::F16, QuantFormat::Int8] {
+            g.set_precision(fmt);
+            assert_eq!(g.precision(), fmt);
+            assert!(g.quant_store_bytes() > 0);
+            for (k, img) in d.images.iter().enumerate() {
+                let p = g.infer(img);
+                assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-4, "{} img {k}", fmt.name());
+            }
+            // The quantized tile path agrees with the quantized scalar
+            // path bitwise (lane-privacy holds for dequant kernels too).
+            let batch = g.infer_batch(&d.images);
+            for (k, (img, got)) in d.images.iter().zip(&batch).enumerate() {
+                let a: Vec<u32> = g.infer(img).iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "{} img {k}", fmt.name());
+            }
+        }
+        g.set_precision(QuantFormat::F32);
+        assert_eq!(g.precision(), QuantFormat::F32);
+        assert_eq!(g.quant_store_bytes(), 0);
+        for (k, img) in d.images.iter().enumerate() {
+            let back: Vec<u32> = g.infer(img).iter().map(|v| v.to_bits()).collect();
+            assert_eq!(back, want[k], "image {k}");
+        }
+    }
+
+    #[test]
+    fn quantized_store_tracks_training_and_rewire() {
+        // The store is a derived view: after train steps and a rewire
+        // pass it must equal a fresh quantization of the live wij (and
+        // inference through it must match a freshly-quantized clone).
+        let cfg = by_name("toy-deep").unwrap();
+        let mut g = LayerGraph::new(cfg.clone(), 17);
+        g.set_precision(QuantFormat::Int8);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 24, 4, 0.15);
+        g.train_batch(&d.images);
+        g.rewire(&StructuralPlasticity::default());
+        let mut fresh = g.clone();
+        fresh.set_precision(QuantFormat::Int8);
+        for (k, img) in d.images.iter().enumerate() {
+            let a: Vec<u32> = g.infer(img).iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = fresh.infer(img).iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "image {k}");
+        }
+        // Data-parallel training keeps the store in sync through the
+        // merge path as well (merge_parts rebuilds via recompute).
+        let mut h = g.clone();
+        h.train_batch_threads(&d.images, 3);
+        let mut fresh_h = h.clone();
+        fresh_h.set_precision(QuantFormat::Int8);
+        let a: Vec<u32> = h.infer(&d.images[0]).iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = fresh_h.infer(&d.images[0]).iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
     }
 
     #[test]

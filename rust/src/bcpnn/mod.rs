@@ -24,6 +24,6 @@ pub mod workspace;
 pub use layer::{GraphRewireStats, LayerGraph, Projection};
 pub use network::Network;
 pub use params::Params;
-pub use sparse::BlockIndex;
+pub use sparse::{BlockIndex, QuantFormat, QuantStore};
 pub use structural::{mutual_information, receptive_field, StructuralPlasticity};
 pub use workspace::{BufPool, Workspace};

@@ -18,7 +18,7 @@ use crate::data::encode::{
 };
 
 use super::params::Params;
-use super::sparse::{BlockIndex, TILE};
+use super::sparse::{BlockIndex, QuantFormat, QuantStore, TILE};
 use super::workspace::Workspace;
 
 /// A BCPNN network bound to a config; owns its parameter state.
@@ -32,6 +32,12 @@ pub struct Network {
     /// fully connected): one span per row, so the shared span kernels
     /// also drive the supervised projection.
     head_index: BlockIndex,
+    /// Narrow store over `wij` (`None` ⇔ f32) — see
+    /// [`Projection`](super::Projection)'s field of the same name.
+    store: Option<QuantStore>,
+    /// Narrow store over `who` (the head streams through the same
+    /// machinery via its full-coverage `head_index`).
+    head_store: Option<QuantStore>,
     /// Scratch table for the hoisted `pj + eps` terms of training.
     scratch: Vec<f32>,
 }
@@ -45,13 +51,18 @@ impl Network {
             &vec![1.0f32; head_dims.hc_in * head_dims.hc_out],
             &head_dims,
         );
-        Network { cfg, params, index, head_index, scratch: Vec::new() }
+        Network {
+            cfg, params, index, head_index,
+            store: None, head_store: None,
+            scratch: Vec::new(),
+        }
     }
 
     /// Rebuild the block index (call after structural rewiring).
     /// Weights of newly activated blocks are re-derived from the
     /// traces — bitwise the values the dense kernel maintained (see
     /// [`Projection::refresh_mask`](super::Projection::refresh_mask)).
+    /// A narrow store is requantized over the refreshed spans.
     pub fn refresh_mask(&mut self) {
         let dims = self.cfg.layer_dims()[0];
         let p = &mut self.params;
@@ -60,6 +71,7 @@ impl Network {
             &p.mask_hc, &self.index, &dims, self.cfg.eps,
         );
         self.index = BlockIndex::from_dims(&p.mask_hc, &dims);
+        self.requantize();
     }
 
     /// The block-sparse connectivity index the kernels iterate.
@@ -67,14 +79,65 @@ impl Network {
         &self.index
     }
 
+    /// Select the storage precision of both projections (`wij` and
+    /// `who`): `F32` drops the stores and restores the direct kernels
+    /// bitwise; narrow formats build the span-ordered stores the
+    /// dequant kernels stream. Training state stays f32 either way.
+    pub fn set_precision(&mut self, fmt: QuantFormat) {
+        if fmt == QuantFormat::F32 {
+            self.store = None;
+            self.head_store = None;
+            return;
+        }
+        let dims = self.cfg.layer_dims()[0];
+        self.store = Some(QuantStore::build(
+            fmt, &self.params.wij, &self.index, dims.n_in(), dims.n_out(),
+        ));
+        let hd = self.cfg.head_dims();
+        self.head_store = Some(QuantStore::build(
+            fmt, &self.params.who, &self.head_index, hd.n_in(), hd.n_out(),
+        ));
+    }
+
+    /// The active storage precision (`F32` when no store is held).
+    pub fn precision(&self) -> QuantFormat {
+        self.store.as_ref().map_or(QuantFormat::F32, |s| s.format())
+    }
+
+    /// Rebuild the hidden-projection store from the live `wij` (no-op
+    /// on the f32 path).
+    fn requantize(&mut self) {
+        if let Some(s) = &self.store {
+            let dims = self.cfg.layer_dims()[0];
+            self.store = Some(QuantStore::build(
+                s.format(), &self.params.wij, &self.index, dims.n_in(), dims.n_out(),
+            ));
+        }
+    }
+
+    /// Rebuild the head store from the live `who` (no-op on f32).
+    fn requantize_head(&mut self) {
+        if let Some(s) = &self.head_store {
+            let hd = self.cfg.head_dims();
+            self.head_store = Some(QuantStore::build(
+                s.format(), &self.params.who, &self.head_index, hd.n_in(), hd.n_out(),
+            ));
+        }
+    }
+
     // ------------------------------------------------------ activation
 
     /// Masked support into `out`: s_j = b_j + sum_i m_ij w_ij x_i,
     /// walking only active spans (no allocation).
     pub fn support_into(&self, x: &[f32], out: &mut Vec<f32>) {
-        super::sparse::support_span_into(
-            &self.params.bj, &self.params.wij, &self.index, x, out,
-        );
+        match &self.store {
+            Some(store) => super::sparse::support_span_q_into(
+                &self.params.bj, store, &self.index, x, out,
+            ),
+            None => super::sparse::support_span_into(
+                &self.params.bj, &self.params.wij, &self.index, x, out,
+            ),
+        }
     }
 
     /// Masked support: s_j = b_j + sum_i m_ij w_ij x_i.
@@ -91,9 +154,14 @@ impl Network {
     /// accumulation order (a gather of slices is bitwise identical).
     pub fn support_cols(&self, x: &[f32], lo: usize, hi: usize) -> Vec<f32> {
         let mut s = Vec::new();
-        super::sparse::support_span_cols_into(
-            &self.params.bj, &self.params.wij, &self.index, x, lo, hi, &mut s,
-        );
+        match &self.store {
+            Some(store) => super::sparse::support_span_cols_q_into(
+                &self.params.bj, store, &self.index, x, lo, hi, &mut s,
+            ),
+            None => super::sparse::support_span_cols_into(
+                &self.params.bj, &self.params.wij, &self.index, x, lo, hi, &mut s,
+            ),
+        }
         s
     }
 
@@ -159,6 +227,10 @@ impl Network {
     /// Output support into `out` (no allocation; softmax not applied).
     fn output_support_into(&self, y: &[f32], out: &mut Vec<f32>) {
         let n_out = self.cfg.n_out();
+        if let Some(store) = &self.head_store {
+            super::sparse::support_dense_q_into(&self.params.bk, store, y, out);
+            return;
+        }
         out.clear();
         out.extend_from_slice(&self.params.bk);
         for (j, &yj) in y.iter().enumerate() {
@@ -199,9 +271,14 @@ impl Network {
     /// Batched masked support over an AoSoA input tile (no allocation)
     /// — one weight load per `TILE` lanes.
     pub fn support_tile_into(&self, xt: &[f32], out: &mut Vec<f32>) {
-        super::sparse::support_span_tile_into(
-            &self.params.bj, &self.params.wij, &self.index, xt, out,
-        );
+        match &self.store {
+            Some(store) => super::sparse::support_span_tile_q_into(
+                &self.params.bj, store, &self.index, xt, out,
+            ),
+            None => super::sparse::support_span_tile_into(
+                &self.params.bj, &self.params.wij, &self.index, xt, out,
+            ),
+        }
     }
 
     /// One image tile (1..=TILE images) through the batched AoSoA
@@ -213,9 +290,14 @@ impl Network {
         let y = &mut ws.act_t[0];
         self.support_tile_into(&ws.xt, y);
         Self::hc_softmax_tile(y, self.cfg.hc_h, self.cfg.mc_h, self.cfg.gain);
-        super::sparse::support_dense_tile_into(
-            &self.params.bk, &self.params.who, y.as_slice(), &mut ws.out_t,
-        );
+        match &self.head_store {
+            Some(store) => super::sparse::support_dense_tile_q_into(
+                &self.params.bk, store, y.as_slice(), &mut ws.out_t,
+            ),
+            None => super::sparse::support_dense_tile_into(
+                &self.params.bk, &self.params.who, y.as_slice(), &mut ws.out_t,
+            ),
+        }
         Self::hc_softmax_tile(&mut ws.out_t, 1, self.cfg.n_out(), 1.0);
         &ws.out_t
     }
@@ -273,6 +355,7 @@ impl Network {
             &mut self.scratch, &self.index, &x, &y,
             self.cfg.alpha, self.cfg.eps,
         );
+        self.requantize();
     }
 
     /// One online supervised update (hidden->output projection; fully
@@ -294,6 +377,7 @@ impl Network {
             &mut self.scratch, &self.head_index, &y, &t,
             self.cfg.alpha, self.cfg.eps,
         );
+        self.requantize_head();
     }
 
     // ------------------------------------------- batched-EMA training
@@ -319,6 +403,7 @@ impl Network {
             &mut self.scratch, &self.index, &ws.xt, y.as_slice(),
             imgs.len(), self.cfg.alpha, self.cfg.eps,
         );
+        self.requantize();
     }
 
     /// Batched twin of repeating [`Network::train_unsup_step`] over
@@ -356,6 +441,10 @@ impl Network {
                 n, self.cfg.alpha, self.cfg.eps,
             );
         }
+        // Nothing reads the head store inside the loop (the frozen
+        // hidden projection drives the tiles), so one requantize after
+        // the sweep keeps it in sync.
+        self.requantize_head();
     }
 
     /// Data-parallel [`Network::train_batch`]: contiguous tile-aligned
@@ -392,6 +481,7 @@ impl Network {
             &p.pi, &p.pj, &p.pij, &mut p.wij, &mut p.bj,
             &mut acc.scratch, &acc.index, eps,
         );
+        acc.requantize();
         *self = acc;
     }
 
@@ -583,5 +673,73 @@ mod tests {
     fn argmax_ties_take_first() {
         assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
         assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn set_precision_covers_both_projections_and_roundtrips() {
+        let n0 = net();
+        let d = synth::generate(n0.cfg.img_side, n0.cfg.n_classes, 11, 5, 0.15);
+        let want: Vec<Vec<u32>> = d
+            .images
+            .iter()
+            .map(|i| n0.infer(i).iter().map(|v| v.to_bits()).collect())
+            .collect();
+        for fmt in [QuantFormat::Bf16, QuantFormat::F16, QuantFormat::Int8] {
+            let mut n = n0.clone();
+            n.set_precision(fmt);
+            assert_eq!(n.precision(), fmt);
+            // Scalar, tile, and threaded paths all agree bitwise on the
+            // quantized store (lane privacy holds for dequant kernels).
+            let batch = n.infer_batch_threads(&d.images, 3);
+            for (k, (img, got)) in d.images.iter().zip(&batch).enumerate() {
+                let a: Vec<u32> = n.infer(img).iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "{} image {k}", fmt.name());
+                let s: f32 = got.iter().sum();
+                assert!((s - 1.0).abs() < 1e-4, "{} image {k}: {s}", fmt.name());
+            }
+            // Column slices glue together bitwise under the store too.
+            let x = crate::data::encode::encode_image(&d.images[0]);
+            let full = n.support(&x);
+            let mid = (n.cfg.hc_h / 2) * n.cfg.mc_h;
+            let mut glued = n.support_cols(&x, 0, mid);
+            glued.extend(n.support_cols(&x, mid, full.len()));
+            assert_eq!(
+                glued.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                full.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{}", fmt.name()
+            );
+            // Back to f32: the direct kernels return bitwise.
+            n.set_precision(QuantFormat::F32);
+            for (k, img) in d.images.iter().enumerate() {
+                let back: Vec<u32> = n.infer(img).iter().map(|v| v.to_bits()).collect();
+                assert_eq!(back, want[k], "image {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_store_tracks_network_training() {
+        // Stores stay a derived view of the live weights through the
+        // scalar trainers, the batched trainers, and refresh_mask.
+        let mut n = net();
+        n.set_precision(QuantFormat::Bf16);
+        let d = synth::generate(n.cfg.img_side, n.cfg.n_classes, 16, 8, 0.15);
+        for img in &d.images[..4] {
+            n.train_unsup_step(img);
+        }
+        n.train_batch(&d.images[4..]);
+        for (img, &l) in d.images.iter().zip(&d.labels).take(4) {
+            n.train_sup_step(img, l as usize);
+        }
+        n.train_sup_batch(&d.images, &d.labels);
+        n.refresh_mask();
+        let mut fresh = n.clone();
+        fresh.set_precision(QuantFormat::Bf16);
+        for (k, img) in d.images.iter().enumerate() {
+            let a: Vec<u32> = n.infer(img).iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = fresh.infer(img).iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "image {k}");
+        }
     }
 }

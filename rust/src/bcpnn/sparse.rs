@@ -628,6 +628,523 @@ pub(crate) fn support_dense_tile_into(
     }
 }
 
+// ------------------------------------------- quantized weight store
+//
+// The narrow storage datapath: span-ordered weight payloads in
+// bf16 / f16 / int8 words, widened to f32 *in register* by dequant
+// twins of the span kernels above. The tile kernels are
+// weight-bandwidth bound (one weight load feeds TILE lane FMAs), so
+// halving or quartering bytes-per-weight raises the images-per-byte
+// roofline by the same factor (`fpga::timing::host_tile_img_s_bytes`).
+// Training stays f32 — the EMA traces need the dynamic range — and the
+// store is a derived, rebuildable view of `wij`: owners requantize
+// after every train step / mask refresh, so `QuantStore` never feeds
+// back into the learning state.
+
+/// Storage precision of a projection's span-ordered weight payload.
+/// `F32` is the default and the bitwise oracle: projections hold no
+/// narrow store at all and run the direct f32 kernels, so the f32 path
+/// is bitwise-identical to a build without quantization by
+/// construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QuantFormat {
+    /// Direct f32 arrays (no store) — the bitwise baseline.
+    #[default]
+    F32,
+    /// bfloat16: f32 with the low 16 mantissa bits truncated; dequant
+    /// is a 16-bit shift (exact, no rounding at load).
+    Bf16,
+    /// IEEE binary16: round-to-nearest-even including subnormals,
+    /// values beyond ±65504 saturated at quantize time.
+    F16,
+    /// int8 with one f32 scale per stored span (span `max_abs / 127`);
+    /// dequant is one integer widen and one multiply per weight.
+    Int8,
+}
+
+impl QuantFormat {
+    /// Every format, in ascending-compression order.
+    pub const ALL: [QuantFormat; 4] =
+        [QuantFormat::F32, QuantFormat::Bf16, QuantFormat::F16, QuantFormat::Int8];
+
+    /// The CLI / checkpoint tag of this format.
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantFormat::F32 => "f32",
+            QuantFormat::Bf16 => "bf16",
+            QuantFormat::F16 => "f16",
+            QuantFormat::Int8 => "int8",
+        }
+    }
+
+    /// Parse a CLI / checkpoint tag (`f32 | bf16 | f16 | int8`).
+    pub fn parse(s: &str) -> Option<QuantFormat> {
+        QuantFormat::ALL.into_iter().find(|f| f.name() == s)
+    }
+
+    /// Stored bits per weight word (int8's per-span scales are
+    /// amortized over `mc_out`-wide spans and not counted here).
+    pub fn bits_per_weight(self) -> u32 {
+        match self {
+            QuantFormat::F32 => 32,
+            QuantFormat::Bf16 | QuantFormat::F16 => 16,
+            QuantFormat::Int8 => 8,
+        }
+    }
+
+    /// Bytes per streamed weight — the bandwidth-roofline parameter
+    /// (`fpga::timing::host_tile_img_s_bytes`).
+    pub fn bytes_per_weight(self) -> f64 {
+        f64::from(self.bits_per_weight()) / 8.0
+    }
+}
+
+/// Bit-exact `f32 -> IEEE binary16` conversion: round-to-nearest-even
+/// including subnormal results; values below half the smallest f16
+/// subnormal (`2^-25`) round to zero; overflow goes to ±inf, so
+/// callers that want saturation clamp to ±65504 first
+/// ([`QuantStore::build`] and `fpga::quant::Format::F16` both do).
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN (quiet bit forced so a NaN never collapses to inf).
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    if exp == 0 {
+        // f32 subnormals are below 2^-126 — far under f16's floor.
+        return sign;
+    }
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1F {
+        return sign | 0x7C00;
+    }
+    // 24-bit significand with the implicit one. Normal results drop 13
+    // mantissa bits; subnormal results (e16 <= 0) additionally shift
+    // out the exponent deficit so the encoding is `0.m * 2^-14`.
+    let sig = u64::from(man | 0x0080_0000);
+    let (shift, exp_field) = if e16 > 0 {
+        (13u32, (e16 - 1) as u64)
+    } else {
+        ((14 - e16) as u32, 0u64)
+    };
+    if shift > 24 {
+        // |v| < 2^-25: under half the smallest subnormal.
+        return sign;
+    }
+    let base = (exp_field << 10) + (sig >> shift);
+    let rem = sig & ((1u64 << shift) - 1);
+    let half = 1u64 << (shift - 1);
+    let rounded = base + u64::from(rem > half || (rem == half && base & 1 == 1));
+    // A mantissa carry walks into the exponent field by construction;
+    // past the largest normal it saturates to inf.
+    if rounded >= 0x7C00 {
+        return sign | 0x7C00;
+    }
+    sign | rounded as u16
+}
+
+/// Bit-exact `IEEE binary16 -> f32` widening (every f16 value,
+/// subnormals included, is exactly representable in f32).
+pub fn f16_bits_to_f32(bits: u16) -> f32 {
+    let sign = (u32::from(bits) & 0x8000) << 16;
+    let exp = u32::from((bits >> 10) & 0x1F);
+    let man = u32::from(bits & 0x03FF);
+    if exp == 0x1F {
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        // Zero or subnormal: `man * 2^-24`, exact in f32 (an integer
+        // <= 1023 times a power of two, far above f32's own floor).
+        let mag = man as f32 * f32::from_bits(0x3380_0000);
+        return if sign != 0 { -mag } else { mag };
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// Truncate f32 to bfloat16 bits (the high half-word; bf16 keeps
+/// f32's exponent range, so no clamping is needed).
+pub fn f32_to_bf16_bits(v: f32) -> u16 {
+    (v.to_bits() >> 16) as u16
+}
+
+/// Widen bfloat16 bits back to f32 (exact: a 16-bit shift).
+pub fn bf16_bits_to_f32(bits: u16) -> f32 {
+    f32::from_bits(u32::from(bits) << 16)
+}
+
+/// Narrow storage of one projection's weights: the span-ordered
+/// payload of every active span quantized to [`QuantFormat`]-width
+/// words, plus the per-row offsets the dequant kernels walk. A
+/// *derived, rebuildable view* of the f32 `wij` array — training and
+/// structural plasticity keep updating the f32 state, and owners
+/// requantize the refreshed spans afterwards
+/// (`Projection::refresh_mask` and the train steps), so the store
+/// never feeds back into learning.
+#[derive(Debug, Clone)]
+pub struct QuantStore {
+    format: QuantFormat,
+    /// Per unit-row payload offsets (`n_in + 1`), in weights: row
+    /// `i`'s words are `w16|w8[row_off[i]..row_off[i+1]]`, in span
+    /// walk order.
+    row_off: Vec<u32>,
+    /// Per unit-row offsets (`n_in + 1`) into `scales`.
+    scale_off: Vec<u32>,
+    /// 16-bit payload (bf16 / f16); empty for int8.
+    w16: Vec<u16>,
+    /// 8-bit payload (int8); empty for the 16-bit formats.
+    w8: Vec<i8>,
+    /// Per-(row, span) dequant scales (int8 only): span
+    /// `max_abs / 127`, `0.0` for all-zero spans.
+    scales: Vec<f32>,
+}
+
+impl QuantStore {
+    /// Quantize the active spans of a `(n_in, n_out)` weight array
+    /// into narrow words. int8 derives one scale per (row, span):
+    /// `max_abs / 127` over the span's weights, symmetric
+    /// round-to-nearest — the per-block scheme of the Pallas
+    /// quantization guides.
+    pub fn build(
+        format: QuantFormat, wij: &[f32], index: &BlockIndex, n_in: usize, n_out: usize,
+    ) -> QuantStore {
+        assert_ne!(format, QuantFormat::F32, "f32 keeps the direct arrays (no store)");
+        debug_assert_eq!(wij.len(), n_in * n_out);
+        let mut row_off = Vec::with_capacity(n_in + 1);
+        let mut scale_off = Vec::with_capacity(n_in + 1);
+        row_off.push(0u32);
+        scale_off.push(0u32);
+        let mut w16: Vec<u16> = Vec::new();
+        let mut w8: Vec<i8> = Vec::new();
+        let mut scales: Vec<f32> = Vec::new();
+        for i in 0..n_in {
+            let wrow = &wij[i * n_out..(i + 1) * n_out];
+            for &(lo, hi) in index.row(i) {
+                let span = &wrow[lo as usize..hi as usize];
+                match format {
+                    QuantFormat::Bf16 => w16.extend(span.iter().map(|&w| f32_to_bf16_bits(w))),
+                    QuantFormat::F16 => w16.extend(
+                        span.iter().map(|&w| f32_to_f16_bits(w.clamp(-65504.0, 65504.0))),
+                    ),
+                    QuantFormat::Int8 => {
+                        let max = span.iter().fold(0.0f32, |m, &w| m.max(w.abs()));
+                        let scale = if max > 0.0 { max / 127.0 } else { 0.0 };
+                        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+                        scales.push(scale);
+                        w8.extend(span.iter().map(
+                            |&w| (w * inv).round().clamp(-127.0, 127.0) as i8,
+                        ));
+                    }
+                    QuantFormat::F32 => unreachable!(),
+                }
+            }
+            row_off.push(w16.len().max(w8.len()) as u32);
+            scale_off.push(scales.len() as u32);
+        }
+        w16.shrink_to_fit();
+        w8.shrink_to_fit();
+        scales.shrink_to_fit();
+        QuantStore { format, row_off, scale_off, w16, w8, scales }
+    }
+
+    pub fn format(&self) -> QuantFormat {
+        self.format
+    }
+
+    /// Stored weight words (= active synapses of the index).
+    pub fn n_weights(&self) -> usize {
+        self.w16.len().max(self.w8.len())
+    }
+
+    /// Exact heap footprint of the store in bytes — the narrow-payload
+    /// term of the host byte accounting (`fpga::hbm::layer_store_bytes`
+    /// is the worst-case model of this number).
+    pub fn heap_bytes(&self) -> usize {
+        (self.row_off.len() + self.scale_off.len() + self.scales.len()) * 4
+            + self.w16.len() * 2
+            + self.w8.len()
+    }
+
+    /// Expand the payload back to a dense `(n_in, n_out)` f32 array
+    /// (off-span entries zero) — the oracle of the dequant kernels:
+    /// every quantized kernel below is bitwise the f32 kernel run on
+    /// this array (pinned in the tests here and registry-wide by
+    /// `rust/tests/kernels.rs`).
+    pub fn dequantize(&self, index: &BlockIndex, n_out: usize) -> Vec<f32> {
+        let n_in = self.row_off.len() - 1;
+        let mut w = vec![0.0f32; n_in * n_out];
+        for (i, wrow) in w.chunks_exact_mut(n_out).enumerate() {
+            let mut cur = self.row_off[i] as usize;
+            let mut sc = self.scale_off[i] as usize;
+            for &(lo, hi) in index.row(i) {
+                for slot in wrow[lo as usize..hi as usize].iter_mut() {
+                    *slot = match self.format {
+                        QuantFormat::Bf16 => bf16_bits_to_f32(self.w16[cur]),
+                        QuantFormat::F16 => f16_bits_to_f32(self.w16[cur]),
+                        QuantFormat::Int8 => f32::from(self.w8[cur]) * self.scales[sc],
+                        QuantFormat::F32 => unreachable!(),
+                    };
+                    cur += 1;
+                }
+                sc += 1;
+            }
+        }
+        w
+    }
+}
+
+// --------------------------- dequant-in-register span kernel twins
+//
+// Twins of the f32 span kernels above, walking the narrow payload
+// instead of the f32 `wij` rows: same seeding, same zero-row skip,
+// same i-outer / j-inner accumulation order, each narrow word widened
+// to f32 in register right before its FMA. The contract: every
+// quantized kernel is bitwise the corresponding f32 kernel run on
+// `store.dequantize(..)` — quantization error enters only through the
+// stored words, never through the kernel arithmetic (lane accumulators
+// stay f32).
+
+#[inline(always)]
+fn deq_bf16(s: &QuantStore, k: usize, _sc: usize) -> f32 {
+    bf16_bits_to_f32(s.w16[k])
+}
+
+#[inline(always)]
+fn deq_f16(s: &QuantStore, k: usize, _sc: usize) -> f32 {
+    f16_bits_to_f32(s.w16[k])
+}
+
+#[inline(always)]
+fn deq_int8(s: &QuantStore, k: usize, sc: usize) -> f32 {
+    f32::from(s.w8[k]) * s.scales[sc]
+}
+
+/// Monomorphize a quantized kernel body over the store's format (one
+/// `deq` widening function per format, inlined into the span loop).
+macro_rules! dispatch_q {
+    ($store:expr, $impl:ident($($arg:expr),*)) => {
+        match $store.format {
+            QuantFormat::Bf16 => $impl($($arg),*, deq_bf16),
+            QuantFormat::F16 => $impl($($arg),*, deq_f16),
+            QuantFormat::Int8 => $impl($($arg),*, deq_int8),
+            QuantFormat::F32 => unreachable!("f32 projections hold no store"),
+        }
+    };
+}
+
+fn support_q_impl<D: Fn(&QuantStore, usize, usize) -> f32>(
+    bj: &[f32], store: &QuantStore, index: &BlockIndex, x: &[f32],
+    out: &mut Vec<f32>, deq: D,
+) {
+    out.clear();
+    out.extend_from_slice(bj);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let mut cur = store.row_off[i] as usize;
+        let mut sc = store.scale_off[i] as usize;
+        for &(lo, hi) in index.row(i) {
+            for j in lo as usize..hi as usize {
+                out[j] += xi * deq(store, cur, sc);
+                cur += 1;
+            }
+            sc += 1;
+        }
+    }
+}
+
+/// Dequant twin of [`support_span_into`].
+pub(crate) fn support_span_q_into(
+    bj: &[f32], store: &QuantStore, index: &BlockIndex, x: &[f32], out: &mut Vec<f32>,
+) {
+    dispatch_q!(store, support_q_impl(bj, store, index, x, out))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn support_cols_q_impl<D: Fn(&QuantStore, usize, usize) -> f32>(
+    bj: &[f32], store: &QuantStore, index: &BlockIndex, x: &[f32],
+    lo: usize, hi: usize, out: &mut Vec<f32>, deq: D,
+) {
+    let n_out = bj.len();
+    debug_assert!(lo <= hi && hi <= n_out);
+    out.clear();
+    out.extend_from_slice(&bj[lo..hi]);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let mut cur = store.row_off[i] as usize;
+        let mut sc = store.scale_off[i] as usize;
+        for &(slo, shi) in index.row(i) {
+            let jlo = (slo as usize).max(lo);
+            let jhi = (shi as usize).min(hi);
+            for j in jlo..jhi {
+                out[j - lo] += xi * deq(store, cur + (j - slo as usize), sc);
+            }
+            cur += (shi - slo) as usize;
+            sc += 1;
+        }
+    }
+}
+
+/// Dequant twin of [`support_span_cols_into`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn support_span_cols_q_into(
+    bj: &[f32], store: &QuantStore, index: &BlockIndex, x: &[f32],
+    lo: usize, hi: usize, out: &mut Vec<f32>,
+) {
+    dispatch_q!(store, support_cols_q_impl(bj, store, index, x, lo, hi, out))
+}
+
+fn support_tile_q_impl<D: Fn(&QuantStore, usize, usize) -> f32>(
+    bj: &[f32], store: &QuantStore, index: &BlockIndex, xt: &[f32],
+    out: &mut Vec<f32>, deq: D,
+) {
+    debug_assert_eq!(xt.len() % TILE, 0);
+    out.clear();
+    out.extend(bj.iter().flat_map(|&b| [b; TILE]));
+    for (i, xrow) in xt.chunks_exact(TILE).enumerate() {
+        let x: &[f32; TILE] = xrow.try_into().expect("chunk is TILE wide");
+        if x.iter().all(|&v| v == 0.0) {
+            continue;
+        }
+        let mut cur = store.row_off[i] as usize;
+        let mut sc = store.scale_off[i] as usize;
+        for &(lo, hi) in index.row(i) {
+            for j in lo as usize..hi as usize {
+                let w = deq(store, cur, sc);
+                cur += 1;
+                let acc: &mut [f32; TILE] =
+                    (&mut out[j * TILE..(j + 1) * TILE]).try_into().expect("TILE wide");
+                for l in 0..TILE {
+                    acc[l] += x[l] * w;
+                }
+            }
+            sc += 1;
+        }
+    }
+}
+
+/// Dequant twin of [`support_span_tile_into`]: one *narrow* weight
+/// load per span walk feeds all TILE lane FMAs.
+pub(crate) fn support_span_tile_q_into(
+    bj: &[f32], store: &QuantStore, index: &BlockIndex, xt: &[f32], out: &mut Vec<f32>,
+) {
+    dispatch_q!(store, support_tile_q_impl(bj, store, index, xt, out))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn support_cols_tile_q_impl<D: Fn(&QuantStore, usize, usize) -> f32>(
+    bj: &[f32], store: &QuantStore, index: &BlockIndex, xt: &[f32],
+    lo: usize, hi: usize, out: &mut Vec<f32>, deq: D,
+) {
+    let n_out = bj.len();
+    debug_assert!(lo <= hi && hi <= n_out);
+    debug_assert_eq!(xt.len() % TILE, 0);
+    out.clear();
+    out.extend(bj[lo..hi].iter().flat_map(|&b| [b; TILE]));
+    for (i, xrow) in xt.chunks_exact(TILE).enumerate() {
+        let x: &[f32; TILE] = xrow.try_into().expect("chunk is TILE wide");
+        if x.iter().all(|&v| v == 0.0) {
+            continue;
+        }
+        let mut cur = store.row_off[i] as usize;
+        let mut sc = store.scale_off[i] as usize;
+        for &(slo, shi) in index.row(i) {
+            let jlo = (slo as usize).max(lo);
+            let jhi = (shi as usize).min(hi);
+            for j in jlo..jhi {
+                let w = deq(store, cur + (j - slo as usize), sc);
+                let base = (j - lo) * TILE;
+                let acc: &mut [f32; TILE] =
+                    (&mut out[base..base + TILE]).try_into().expect("TILE wide");
+                for l in 0..TILE {
+                    acc[l] += x[l] * w;
+                }
+            }
+            cur += (shi - slo) as usize;
+            sc += 1;
+        }
+    }
+}
+
+/// Dequant twin of [`support_span_cols_tile_into`] (the hybrid shard
+/// workers' slice kernel).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn support_span_cols_tile_q_into(
+    bj: &[f32], store: &QuantStore, index: &BlockIndex, xt: &[f32],
+    lo: usize, hi: usize, out: &mut Vec<f32>,
+) {
+    dispatch_q!(store, support_cols_tile_q_impl(bj, store, index, xt, lo, hi, out))
+}
+
+fn support_dense_q_impl<D: Fn(&QuantStore, usize, usize) -> f32>(
+    bk: &[f32], store: &QuantStore, y: &[f32], out: &mut Vec<f32>, deq: D,
+) {
+    let n_out = bk.len();
+    out.clear();
+    out.extend_from_slice(bk);
+    for (j, &yj) in y.iter().enumerate() {
+        let cur = store.row_off[j] as usize;
+        let sc = store.scale_off[j] as usize;
+        debug_assert_eq!(
+            store.row_off[j + 1] as usize - cur, n_out,
+            "dense kernels need a full-coverage store (the head's all-ones mask)"
+        );
+        for k in 0..n_out {
+            out[k] += yj * deq(store, cur + k, sc);
+        }
+    }
+}
+
+/// Dequant twin of the scalar dense head loop
+/// (`Projection::support_dense_into`; no zero-row skip, to mirror it
+/// exactly). The store must cover every column — true for the head,
+/// whose mask is all ones (one span per row, one int8 scale per row).
+pub(crate) fn support_dense_q_into(
+    bk: &[f32], store: &QuantStore, y: &[f32], out: &mut Vec<f32>,
+) {
+    dispatch_q!(store, support_dense_q_impl(bk, store, y, out))
+}
+
+fn support_dense_tile_q_impl<D: Fn(&QuantStore, usize, usize) -> f32>(
+    bk: &[f32], store: &QuantStore, yt: &[f32], out: &mut Vec<f32>, deq: D,
+) {
+    let n_out = bk.len();
+    debug_assert_eq!(yt.len() % TILE, 0);
+    out.clear();
+    out.extend(bk.iter().flat_map(|&b| [b; TILE]));
+    for (j, yrow) in yt.chunks_exact(TILE).enumerate() {
+        let y: &[f32; TILE] = yrow.try_into().expect("chunk is TILE wide");
+        let cur = store.row_off[j] as usize;
+        let sc = store.scale_off[j] as usize;
+        debug_assert_eq!(
+            store.row_off[j + 1] as usize - cur, n_out,
+            "dense kernels need a full-coverage store (the head's all-ones mask)"
+        );
+        for k in 0..n_out {
+            let w = deq(store, cur + k, sc);
+            let acc: &mut [f32; TILE] =
+                (&mut out[k * TILE..(k + 1) * TILE]).try_into().expect("TILE wide");
+            for l in 0..TILE {
+                acc[l] += y[l] * w;
+            }
+        }
+    }
+}
+
+/// Dequant twin of [`support_dense_tile_into`] (the tile head
+/// datapath; full-coverage store required, like
+/// [`support_dense_q_into`]).
+pub(crate) fn support_dense_tile_q_into(
+    bk: &[f32], store: &QuantStore, yt: &[f32], out: &mut Vec<f32>,
+) {
+    dispatch_q!(store, support_dense_tile_q_impl(bk, store, yt, out))
+}
+
 // ------------------------------------------------- dense seed kernels
 //
 // The exact loops the seed `Network`/`Projection` ran, preserved as
@@ -1083,5 +1600,213 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn quant_format_tags_and_widths() {
+        for fmt in QuantFormat::ALL {
+            assert_eq!(QuantFormat::parse(fmt.name()), Some(fmt));
+        }
+        assert_eq!(QuantFormat::parse("fp64"), None);
+        assert_eq!(QuantFormat::F32.bytes_per_weight(), 4.0);
+        assert_eq!(QuantFormat::Bf16.bytes_per_weight(), 2.0);
+        assert_eq!(QuantFormat::F16.bytes_per_weight(), 2.0);
+        assert_eq!(QuantFormat::Int8.bytes_per_weight(), 1.0);
+        assert_eq!(QuantFormat::default(), QuantFormat::F32);
+    }
+
+    #[test]
+    fn f16_bits_roundtrip_every_pattern() {
+        // Every f16 value is exactly representable in f32, so
+        // widen-then-narrow must be the identity on all 65536 bit
+        // patterns (NaNs keep NaN-ness; the payload may canonicalize).
+        for b in 0..=u16::MAX {
+            let exp = (b >> 10) & 0x1F;
+            let man = b & 0x3FF;
+            let wide = f16_bits_to_f32(b);
+            if exp == 0x1F && man != 0 {
+                assert!(wide.is_nan(), "{b:#06x}");
+                let back = f32_to_f16_bits(wide);
+                assert_eq!((back >> 10) & 0x1F, 0x1F, "{b:#06x}");
+                assert_ne!(back & 0x3FF, 0, "{b:#06x} lost NaN-ness");
+            } else {
+                assert_eq!(f32_to_f16_bits(wide), b, "{b:#06x} (wide {wide})");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_narrowing_rounds_to_nearest_even() {
+        // Exact powers of two (quotients by powers of two are exact).
+        let p11 = 1.0f32 / 2048.0; // 2^-11
+        let p24 = f32::from_bits(0x3380_0000); // 2^-24, smallest f16 subnormal
+        let p25 = f32::from_bits(0x3300_0000); // 2^-25
+        // Normal ties: 1 + 3*2^-11 sits exactly between mantissa 1 and
+        // 2 — RNE picks the even one; 1 + 2^-11 ties down to 1.0.
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(1.0 + p11), 0x3C00);
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * p11), 0x3C02);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        // Largest normal and the overflow boundary: 65504 is exact;
+        // anything below the 65520 midpoint rounds back down to it;
+        // the midpoint itself ties up (0x7BFF is odd) to inf.
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF);
+        assert_eq!(f32_to_f16_bits(65519.0), 0x7BFF);
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00);
+        assert_eq!(f16_bits_to_f32(0x7BFF), 65504.0);
+        // Subnormals: 2^-24 is the smallest; 2^-25 ties to even (zero),
+        // 1.5 * 2^-25 rounds up to one ulp; interior subnormal ties
+        // also go to even. (Scaling by small integers stays exact.)
+        assert_eq!(f32_to_f16_bits(p24), 0x0001);
+        assert_eq!(f32_to_f16_bits(p25), 0x0000);
+        assert_eq!(f32_to_f16_bits(1.5 * p25), 0x0001);
+        assert_eq!(f32_to_f16_bits(2.5 * p24), 0x0002);
+        assert_eq!(f32_to_f16_bits(3.5 * p24), 0x0004);
+        // Below half the smallest subnormal: flushed to (signed) zero.
+        assert_eq!(f32_to_f16_bits(0.5 * p25), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.03125 * p25), 0x8000);
+        assert_eq!(f32_to_f16_bits(f32::MIN_POSITIVE / 2.0), 0x0000);
+    }
+
+    #[test]
+    fn int8_store_derives_per_span_scales() {
+        // 1 input HC of 2 units, 4 output HCs of 2 units, blocks 0, 1,
+        // 3 active: spans [0, 4) and [6, 8) per row (the merge case).
+        let dims = LayerDims { index: 0, hc_in: 1, mc_in: 2, hc_out: 4, mc_out: 2, nact: 3 };
+        let mask = vec![1.0, 1.0, 0.0, 1.0];
+        let idx = BlockIndex::from_dims(&mask, &dims);
+        #[rustfmt::skip]
+        let wij = vec![
+            // row 0: span [0,4) max_abs 2.0, cols 4-5 inactive, span [6,8) max_abs 0.5
+            1.0, -2.0, 0.5, 0.0,   9.0, 9.0,   -0.5, 0.25,
+            // row 1: span [0,4) all zero, span [6,8) max_abs 1.27
+            0.0, 0.0, 0.0, 0.0,    9.0, 9.0,   1.27, -1.27,
+        ];
+        let store = QuantStore::build(QuantFormat::Int8, &wij, &idx, 2, 8);
+        assert_eq!(store.format(), QuantFormat::Int8);
+        assert_eq!(store.n_weights(), 12); // 6 active columns per row
+        assert_eq!(store.scales.len(), 4); // 2 spans per row
+        assert_eq!(store.scales[0], 2.0 / 127.0);
+        assert_eq!(store.scales[1], 0.5 / 127.0);
+        assert_eq!(store.scales[2], 0.0); // all-zero span
+        assert_eq!(store.scales[3], 1.27 / 127.0);
+        // The span maximum hits the ±127 rail exactly; the all-zero
+        // span stores zero words (and dequantizes to exact zeros).
+        assert_eq!(store.w8[1], -127);
+        assert_eq!(store.w8[4], -127);
+        assert_eq!(&store.w8[6..10], &[0, 0, 0, 0]);
+        let deq = store.dequantize(&idx, 8);
+        assert_eq!(deq[1], -2.0);
+        assert_eq!(deq[4], 0.0); // inactive column never materializes
+        assert_eq!(deq[8], 0.0);
+        // 12 int8 words + 4 scales + 2 * (n_in + 1) u32 offsets.
+        assert_eq!(store.heap_bytes(), 12 + 4 * 4 + 2 * 3 * 4);
+    }
+
+    #[test]
+    fn quant_kernels_bitwise_match_f32_kernels_on_dequantized_payload() {
+        // The dequant-in-register contract: for every format, each
+        // quantized kernel is bitwise the f32 kernel run on the
+        // dequantized payload — the kernel arithmetic adds no error
+        // beyond the stored words themselves.
+        let dims = dims_of("small");
+        let mask = random_mask(&dims, 61);
+        let idx = BlockIndex::from_dims(&mask, &dims);
+        let (n_in, n_out) = (dims.n_in(), dims.n_out());
+        let (_, _, _, wij, bj) = random_traces(n_in, n_out, &idx, 1e-4, 62);
+        let mut rng = XorShift64::new(63);
+        let xs: Vec<Vec<f32>> = (0..5)
+            .map(|_| {
+                (0..n_in)
+                    .map(|_| if rng.next_f32() < 0.4 { 0.0 } else { rng.next_f32() })
+                    .collect()
+            })
+            .collect();
+        let xt = pack(&xs, n_in);
+        let mid = (dims.hc_out / 2).max(1) * dims.mc_out;
+        for fmt in [QuantFormat::Bf16, QuantFormat::F16, QuantFormat::Int8] {
+            let store = QuantStore::build(fmt, &wij, &idx, n_in, n_out);
+            let deq = store.dequantize(&idx, n_out);
+            let (mut got, mut want) = (Vec::new(), Vec::new());
+            for x in &xs {
+                support_span_q_into(&bj, &store, &idx, x, &mut got);
+                support_span_into(&bj, &deq, &idx, x, &mut want);
+                assert_eq!(bits(&got), bits(&want), "{} scalar", fmt.name());
+                support_span_cols_q_into(&bj, &store, &idx, x, mid, n_out, &mut got);
+                support_span_cols_into(&bj, &deq, &idx, x, mid, n_out, &mut want);
+                assert_eq!(bits(&got), bits(&want), "{} cols", fmt.name());
+            }
+            support_span_tile_q_into(&bj, &store, &idx, &xt, &mut got);
+            support_span_tile_into(&bj, &deq, &idx, &xt, &mut want);
+            assert_eq!(bits(&got), bits(&want), "{} tile", fmt.name());
+            support_span_cols_tile_q_into(&bj, &store, &idx, &xt, 0, mid, &mut got);
+            support_span_cols_tile_into(&bj, &deq, &idx, &xt, 0, mid, &mut want);
+            assert_eq!(bits(&got), bits(&want), "{} cols tile", fmt.name());
+        }
+    }
+
+    #[test]
+    fn quant_dense_head_kernels_match_f32_on_dequantized_payload() {
+        // The head's mask is all ones — one full-coverage span per row
+        // — so `who` flows through the same store machinery.
+        let dims = LayerDims { index: 0, hc_in: 4, mc_in: 3, hc_out: 1, mc_out: 5, nact: 4 };
+        let (n_in, n_out) = (dims.n_in(), dims.n_out());
+        let mask = vec![1.0f32; dims.hc_in * dims.hc_out];
+        let idx = BlockIndex::from_dims(&mask, &dims);
+        let mut rng = XorShift64::new(71);
+        let bk: Vec<f32> = (0..n_out).map(|_| rng.next_f32() - 0.5).collect();
+        let who: Vec<f32> = (0..n_in * n_out).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+        let ys: Vec<Vec<f32>> =
+            (0..TILE).map(|_| (0..n_in).map(|_| rng.next_f32()).collect()).collect();
+        let yt = pack(&ys, n_in);
+        for fmt in [QuantFormat::Bf16, QuantFormat::F16, QuantFormat::Int8] {
+            let store = QuantStore::build(fmt, &who, &idx, n_in, n_out);
+            let deq = store.dequantize(&idx, n_out);
+            let (mut got, mut want) = (Vec::new(), Vec::new());
+            for y in &ys {
+                support_dense_q_into(&bk, &store, y, &mut got);
+                // Scalar head loop verbatim (Projection::support_dense_into).
+                want.clear();
+                want.extend_from_slice(&bk);
+                for (j, &yj) in y.iter().enumerate() {
+                    for k in 0..n_out {
+                        want[k] += yj * deq[j * n_out + k];
+                    }
+                }
+                assert_eq!(bits(&got), bits(&want), "{} scalar head", fmt.name());
+            }
+            support_dense_tile_q_into(&bk, &store, &yt, &mut got);
+            support_dense_tile_into(&bk, &deq, &yt, &mut want);
+            assert_eq!(bits(&got), bits(&want), "{} tile head", fmt.name());
+        }
+    }
+
+    #[test]
+    fn bf16_payload_truncates_and_halves_bytes() {
+        let dims = dims_of("small");
+        let mask = random_mask(&dims, 81);
+        let idx = BlockIndex::from_dims(&mask, &dims);
+        let (n_in, n_out) = (dims.n_in(), dims.n_out());
+        let (_, _, _, wij, _) = random_traces(n_in, n_out, &idx, 1e-4, 82);
+        let store = QuantStore::build(QuantFormat::Bf16, &wij, &idx, n_in, n_out);
+        let deq = store.dequantize(&idx, n_out);
+        for i in 0..n_in {
+            for &(lo, hi) in idx.row(i) {
+                for j in lo as usize..hi as usize {
+                    let w = wij[i * n_out + j];
+                    assert_eq!(
+                        deq[i * n_out + j].to_bits(),
+                        w.to_bits() & 0xFFFF_0000,
+                        "({i},{j})"
+                    );
+                }
+            }
+        }
+        // Narrow payload: 2 bytes per active weight (+ offsets), vs 4
+        // for the f32 span rows it shadows.
+        assert_eq!(store.n_weights(), (0..n_in).map(|i| {
+            idx.row(i).iter().map(|&(lo, hi)| (hi - lo) as usize).sum::<usize>()
+        }).sum::<usize>());
+        assert!(store.heap_bytes() < 4 * store.n_weights() + 8 * (n_in + 1));
     }
 }

@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::bcpnn::{LayerGraph, Workspace};
+use crate::bcpnn::{LayerGraph, QuantFormat, Workspace};
 use crate::stream::fifo::Fifo;
 use crate::telemetry::{Counter, MetricsRegistry, TraceContext};
 use crate::util::json::Json;
@@ -44,6 +44,12 @@ pub trait InferBackend {
     /// (1 = single-threaded; surfaced in the serving metrics).
     fn threads(&self) -> usize {
         1
+    }
+
+    /// Weight-store format this backend serves from (f32 unless the
+    /// backend holds a quantized store; echoed in [`ServerReport`]).
+    fn precision(&self) -> QuantFormat {
+        QuantFormat::F32
     }
 }
 
@@ -96,6 +102,10 @@ impl InferBackend for GraphBackend {
 
     fn threads(&self) -> usize {
         self.threads
+    }
+
+    fn precision(&self) -> QuantFormat {
+        self.graph.precision()
     }
 
     fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
@@ -160,6 +170,8 @@ pub struct ServerReport {
     pub service: LatencyStats,
     /// Host-splitter thread count of the backend (1 = single-threaded).
     pub threads: usize,
+    /// Weight-store format the backend served from.
+    pub precision: QuantFormat,
 }
 
 impl ServerReport {
@@ -172,6 +184,7 @@ impl ServerReport {
             queue_wait: LatencyStats::zero(),
             service: LatencyStats::zero(),
             threads,
+            precision: QuantFormat::F32,
         }
     }
 
@@ -182,6 +195,7 @@ impl ServerReport {
             ("batches", Json::from(self.batches as f64)),
             ("mean_fill", Json::from(self.mean_fill)),
             ("threads", Json::from(self.threads)),
+            ("precision", Json::from(self.precision.name())),
             ("latency", self.latency.to_json()),
             ("queue_wait", self.queue_wait.to_json()),
             ("service", self.service.to_json()),
@@ -277,6 +291,7 @@ impl InferenceServer {
             };
             let max_batch = backend.max_batch();
             let threads = backend.threads();
+            let precision = backend.precision();
             let mut served = 0u64;
             let mut batches = 0u64;
             let mut fills = 0u64;
@@ -327,6 +342,7 @@ impl InferenceServer {
                 queue_wait: wait_h.stats(),
                 service: svc_h.stats(),
                 threads,
+                precision,
             }
         });
         match ready_rx.recv() {

@@ -22,8 +22,10 @@ use anyhow::{bail, Result};
 
 use crate::config::{LayerDims, ModelConfig};
 
+use crate::bcpnn::QuantFormat;
+
 use super::device::{FpgaDevice, KernelVersion};
-use super::hbm::{layer_hbm_bytes, layer_host_bytes};
+use super::hbm::{layer_hbm_bytes, layer_host_bytes, layer_store_bytes};
 use super::ops::{total_cost, FpOp};
 
 /// HBM capacity of one U55C stack (16 GB). Mixed fleets carry the
@@ -243,6 +245,24 @@ impl StackEstimate {
     pub fn total_host_bytes(&self) -> u64 {
         self.layers.iter().map(|l| l.host_bytes).sum()
     }
+
+    /// Extra host bytes of the quantized serving store at `fmt` across
+    /// the stack (0 for f32 — the store is a derived view on top of
+    /// the f32 masters; see `fpga::hbm::layer_store_bytes`).
+    pub fn total_store_bytes(&self, fmt: QuantFormat) -> u64 {
+        self.layers.iter().map(|l| layer_store_bytes(&l.dims, fmt)).sum()
+    }
+
+    /// Host bytes *streamed* per image at `fmt` — the bandwidth-side
+    /// counterpart of [`Self::total_store_bytes`]: active weights times
+    /// the narrow word width (the quantity `host_tile_img_s_bytes`
+    /// divides by the stream bandwidth).
+    pub fn streamed_bytes_per_img(&self, fmt: QuantFormat) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.dims.active_synapses() * u64::from(fmt.bits_per_weight()) / 8)
+            .sum()
+    }
 }
 
 /// Estimate every layer of `cfg`'s stack and validate each against the
@@ -459,6 +479,24 @@ mod tests {
                         l.dims.index);
             }
         }
+    }
+
+    #[test]
+    fn store_accounting_scales_with_format_width() {
+        let dev = FpgaDevice::u55c();
+        let cfg = by_name("mnist-deep2").unwrap();
+        let s = estimate_stack(&cfg, KernelVersion::Infer, &dev).unwrap();
+        assert_eq!(s.total_store_bytes(QuantFormat::F32), 0);
+        let bf16 = s.total_store_bytes(QuantFormat::Bf16);
+        let int8 = s.total_store_bytes(QuantFormat::Int8);
+        assert!(bf16 > 0 && int8 > 0);
+        // int8 payload is half of bf16's; scales + offsets keep it
+        // from a clean 2x but it must stay well below.
+        assert!(int8 < bf16, "{int8} vs {bf16}");
+        // Streamed bytes per image follow the word width exactly.
+        let f32_stream = s.streamed_bytes_per_img(QuantFormat::F32);
+        assert_eq!(s.streamed_bytes_per_img(QuantFormat::Bf16) * 2, f32_stream);
+        assert_eq!(s.streamed_bytes_per_img(QuantFormat::Int8) * 4, f32_stream);
     }
 
     #[test]

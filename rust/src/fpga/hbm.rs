@@ -7,6 +7,7 @@
 //! `p` partitioned channels into a `16*p`-float stream packet (p=4 ->
 //! the 64-float packets processed by the unrolled datapath).
 
+use crate::bcpnn::QuantFormat;
 use crate::config::LayerDims;
 
 use super::device::{FpgaDevice, KernelVersion};
@@ -119,6 +120,31 @@ pub fn layer_host_bytes(dims: &LayerDims) -> u64 {
         + block_index_bytes(dims)
 }
 
+/// Worst-case extra host bytes of the quantized serving store
+/// (`bcpnn::QuantStore`) of one projection: the span-ordered narrow
+/// payload (one word per active synapse), two `u32` offset tables
+/// (payload + scale cursors, one entry per unit row), and — int8 only —
+/// one f32 scale per (unit row, span) pair. Zero for f32: the store is
+/// a derived view and the f32 masters stay resident either way, so the
+/// narrow formats *add* these bytes but shrink the *streamed* bytes per
+/// image by `4 / bytes_per_weight` ([`super::timing::host_tile_img_s_bytes`]).
+/// The actual store (`QuantStore::heap_bytes`) is at most this —
+/// adjacent-block span merging only shrinks the span count.
+pub fn layer_store_bytes(dims: &LayerDims, fmt: QuantFormat) -> u64 {
+    if fmt == QuantFormat::F32 {
+        return 0;
+    }
+    let payload =
+        dims.active_synapses() * u64::from(fmt.bits_per_weight()) / 8;
+    let offsets = 8 * (dims.n_in() as u64 + 1);
+    let scales = if fmt == QuantFormat::Int8 {
+        4 * dims.nact as u64 * dims.hc_out as u64 * dims.mc_in as u64
+    } else {
+        0
+    };
+    payload + offsets + scales
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +238,37 @@ mod tests {
                 assert!(actual <= model, "{name} layer {}: {actual} > {model}",
                         p.dims.index);
             }
+        }
+    }
+
+    #[test]
+    fn store_bytes_model_bounds_actual_store() {
+        use crate::bcpnn::LayerGraph;
+        for name in ["tiny", "small", "toy-deep", "mnist-deep2"] {
+            let cfg = crate::config::by_name(name).unwrap();
+            for fmt in [QuantFormat::Bf16, QuantFormat::F16, QuantFormat::Int8] {
+                let mut g = LayerGraph::new(cfg.clone(), 11);
+                g.set_precision(fmt);
+                let mut actual = 0u64;
+                let mut model = 0u64;
+                for p in &g.layers {
+                    actual += p.quant_store().expect("store built").heap_bytes() as u64;
+                    model += layer_store_bytes(&p.dims, fmt);
+                }
+                assert!(actual <= model, "{name}/{}: {actual} > {model}", fmt.name());
+                // Tight enough to mean something: within 2x.
+                assert!(model <= actual * 2, "{name}/{}: {actual} vs {model}", fmt.name());
+            }
+            assert_eq!(
+                layer_store_bytes(&cfg.layer_dims()[0], QuantFormat::F32),
+                0
+            );
+        }
+        // Narrow stores cost less residency than the f32 masters they
+        // shadow: the payload is 2-4x narrower than wij alone.
+        let dims = crate::config::by_name("model1").unwrap().layer_dims()[0];
+        for fmt in [QuantFormat::Bf16, QuantFormat::F16, QuantFormat::Int8] {
+            assert!(layer_store_bytes(&dims, fmt) < layer_host_bytes(&dims) / 2);
         }
     }
 

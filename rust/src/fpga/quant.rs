@@ -11,7 +11,8 @@
 //! kernels up the roofline. `benches/ablation_precision.rs` runs the
 //! accuracy-vs-format sweep.
 
-use crate::bcpnn::Network;
+use crate::bcpnn::sparse::{f16_bits_to_f32, f32_to_f16_bits};
+use crate::bcpnn::{LayerGraph, Network};
 use crate::config::ModelConfig;
 use crate::data::Dataset;
 
@@ -54,17 +55,17 @@ impl Format {
             Format::F32 => v,
             Format::Bf16 => f32::from_bits(v.to_bits() & 0xFFFF_0000),
             Format::F16 => {
-                // Simulated IEEE f16 round-trip: clamp to range, then
-                // truncate mantissa to 10 bits with exponent handling
-                // via powers of two.
-                if v == 0.0 || !v.is_finite() {
+                // Bit-exact IEEE binary16 round-trip (saturating): the
+                // old log2/exp2 simulation mis-rounded subnormal
+                // results (|v| < 2^-14, where the representable grid is
+                // fixed-point, not relative) and broke ties away from
+                // even. Clamp keeps the historical saturate-at-±65504
+                // behaviour instead of overflowing to inf.
+                if !v.is_finite() {
                     return v;
                 }
-                let max = 65504.0f32;
-                let c = v.clamp(-max, max);
-                let exp = c.abs().log2().floor();
-                let scale = (10.0 - exp).exp2();
-                (c * scale).round() / scale
+                let c = v.clamp(-65504.0, 65504.0);
+                f16_bits_to_f32(f32_to_f16_bits(c))
             }
             Format::Fixed { int_bits, frac_bits } => {
                 let scale = (*frac_bits as f32).exp2();
@@ -90,6 +91,26 @@ pub fn quantize_state(net: &mut Network, fmt: Format) {
     }
 }
 
+/// [`quantize_state`] twin for stacked models: quantize every hidden
+/// projection's streamed arrays plus the classifier head's (the head's
+/// `pij`/`wij`/`bj` are what `Params` calls `qik`/`who`/`bk`).
+pub fn quantize_state_graph(graph: &mut LayerGraph, fmt: Format) {
+    for l in 0..graph.n_layers() {
+        let p = &mut graph.layers[l];
+        for arr in [&mut p.pij, &mut p.wij, &mut p.bj] {
+            for v in arr.iter_mut() {
+                *v = fmt.quantize(*v);
+            }
+        }
+    }
+    let h = &mut graph.head;
+    for arr in [&mut h.pij, &mut h.wij, &mut h.bj] {
+        for v in arr.iter_mut() {
+            *v = fmt.quantize(*v);
+        }
+    }
+}
+
 /// Result of one precision experiment.
 #[derive(Debug, Clone)]
 pub struct PrecisionResult {
@@ -101,6 +122,11 @@ pub struct PrecisionResult {
 
 /// Train with state quantized after every update ("quantize-on-write",
 /// what a narrow HBM word gives you), then evaluate.
+///
+/// Single-layer configs run the classic [`Network`] path (bitwise what
+/// this experiment always measured); stacked configs route through the
+/// [`LayerGraph`] twin, so `mnist-deep2` is no longer silently excluded
+/// from the precision ablation.
 pub fn run_experiment(
     cfg: &ModelConfig,
     train: &Dataset,
@@ -109,20 +135,36 @@ pub fn run_experiment(
     fmt: Format,
     seed: u64,
 ) -> PrecisionResult {
-    let mut net = Network::new(cfg.clone(), seed);
-    for _ in 0..epochs {
-        for img in &train.images {
-            net.train_unsup_step(img);
+    let test_acc = if cfg.n_layers() == 1 {
+        let mut net = Network::new(cfg.clone(), seed);
+        for _ in 0..epochs {
+            for img in &train.images {
+                net.train_unsup_step(img);
+                quantize_state(&mut net, fmt);
+            }
+        }
+        for (img, &l) in train.images.iter().zip(&train.labels) {
+            net.train_sup_step(img, l as usize);
             quantize_state(&mut net, fmt);
         }
-    }
-    for (img, &l) in train.images.iter().zip(&train.labels) {
-        net.train_sup_step(img, l as usize);
-        quantize_state(&mut net, fmt);
-    }
+        net.accuracy(&test.images, &test.labels)
+    } else {
+        let mut graph = LayerGraph::new(cfg.clone(), seed);
+        for _ in 0..epochs {
+            for img in &train.images {
+                graph.train_unsup_step(img);
+                quantize_state_graph(&mut graph, fmt);
+            }
+        }
+        for (img, &l) in train.images.iter().zip(&train.labels) {
+            graph.train_sup_step(img, l as usize);
+            quantize_state_graph(&mut graph, fmt);
+        }
+        graph.accuracy(&test.images, &test.labels)
+    };
     PrecisionResult {
         format: fmt,
-        test_acc: net.accuracy(&test.images, &test.labels),
+        test_acc,
         traffic_ratio: fmt.bits() as f64 / 32.0,
     }
 }
@@ -167,6 +209,75 @@ mod tests {
         assert!(Format::F16.quantize(1e6) <= 65504.0);
     }
 
+    /// Independent bit-exact reference: decode every finite f16
+    /// pattern through plain f64 arithmetic (exact — no shared code
+    /// with `sparse::f32_to_f16_bits`) and pick the nearest, breaking
+    /// ties toward the pattern with an even mantissa lsb. Saturates at
+    /// ±65504 like `Format::F16::quantize`.
+    fn ref_f16_quantize(v: f32) -> f32 {
+        fn f16_value(bits: u16) -> f64 {
+            let s = if bits & 0x8000 != 0 { -1.0 } else { 1.0 };
+            let e = i32::from((bits >> 10) & 0x1F);
+            let m = f64::from(bits & 0x3FF);
+            if e == 0 {
+                s * m * 2.0f64.powi(-24)
+            } else {
+                s * (1024.0 + m) * 2.0f64.powi(e - 25)
+            }
+        }
+        if v.is_nan() {
+            return v;
+        }
+        // Search magnitudes only and reapply the sign at the end: the
+        // grid is symmetric, and this preserves the sign of zero (IEEE
+        // keeps it when a tiny value rounds to zero magnitude).
+        let mag = f64::from(v.clamp(-65504.0, 65504.0)).abs();
+        let mut best = (f64::INFINITY, 0u16);
+        for bits in 0u16..0x7C00 {
+            let err = (f16_value(bits) - mag).abs();
+            // Strictly-better, or equal-error with an even lsb (RNE).
+            if err < best.0 || (err == best.0 && bits & 1 == 0 && best.1 & 1 == 1) {
+                best = (err, bits);
+            }
+        }
+        let out = f16_value(best.1) as f32;
+        if v.is_sign_negative() { -out } else { out }
+    }
+
+    #[test]
+    fn f16_quantize_matches_bit_exact_reference() {
+        use crate::data::rng::XorShift64;
+        // Edge cases the old log2/exp2 simulation got wrong: the
+        // subnormal band (|v| < 2^-14), half-the-smallest-subnormal
+        // ties, and the top of the normal range near 65504.
+        let p24 = f32::from_bits(0x3380_0000); // 2^-24
+        let p25 = f32::from_bits(0x3300_0000); // 2^-25
+        let edges = [
+            0.0f32, -0.0, 1.0, -1.0, 65504.0, 65503.0, 65520.0, 70000.0,
+            -65519.9, 6.0e-5, -6.1e-5, 6.103515625e-5 /* 2^-14 */,
+            p24, p25, 1.5 * p25, 2.5 * p24, 0.5 * p25, -3.5 * p24,
+            f32::MIN_POSITIVE, f32::MIN_POSITIVE / 2.0, 1e-30, -1e-42,
+        ];
+        for &v in &edges {
+            let got = Format::F16.quantize(v);
+            let want = ref_f16_quantize(v);
+            assert_eq!(got.to_bits(), want.to_bits(), "edge {v:e}: got {got:e} want {want:e}");
+        }
+        // Property sweep: random signs/mantissas across the full
+        // exponent range that matters for f16 (deep subnormal flush
+        // through saturation), pinned bitwise against the reference.
+        let mut rng = XorShift64::new(0xF16F16);
+        for _ in 0..400 {
+            let exp = (rng.next_range(48) as i32) - 30; // 2^-30 .. 2^17
+            let frac = 1.0 + rng.next_f32();
+            let sign = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+            let v = sign * frac * 2.0f32.powi(exp);
+            let got = Format::F16.quantize(v);
+            let want = ref_f16_quantize(v);
+            assert_eq!(got.to_bits(), want.to_bits(), "{v:e}: got {got:e} want {want:e}");
+        }
+    }
+
     #[test]
     fn fixed_point_saturates_and_rounds() {
         let f = Format::Fixed { int_bits: 2, frac_bits: 4 };
@@ -193,6 +304,40 @@ mod tests {
             bf16_res.test_acc, f32_res.test_acc
         );
         assert_eq!(bf16_res.traffic_ratio, 0.5);
+    }
+
+    #[test]
+    fn stacked_config_runs_through_layer_graph_twin() {
+        // The ablation used to skip stacked registry names silently;
+        // now `run_experiment` routes them through the LayerGraph
+        // quantize-on-write path and bf16 must track f32 there too.
+        let cfg = by_name("toy-deep").unwrap();
+        assert!(cfg.n_layers() > 1);
+        let d = synth::generate(cfg.img_side, cfg.n_classes, 96, 17, 0.15);
+        let (train, test) = d.split(64);
+        let f32_res = run_experiment(&cfg, &train, &test, 1, Format::F32, 42);
+        let bf16_res = run_experiment(&cfg, &train, &test, 1, Format::Bf16, 42);
+        assert!((0.0..=1.0).contains(&f32_res.test_acc));
+        assert!(
+            bf16_res.test_acc > f32_res.test_acc - 0.1,
+            "bf16 {} vs f32 {}",
+            bf16_res.test_acc, f32_res.test_acc
+        );
+    }
+
+    #[test]
+    fn graph_state_quantizer_touches_every_projection() {
+        let cfg = by_name("toy-deep").unwrap();
+        let mut g = LayerGraph::new(cfg, 7);
+        quantize_state_graph(&mut g, Format::Bf16);
+        for p in g.layers.iter().chain(std::iter::once(&g.head)) {
+            for arr in [&p.pij, &p.wij, &p.bj] {
+                assert!(
+                    arr.iter().all(|v| v.to_bits() & 0xFFFF == 0),
+                    "low mantissa bits survived bf16 quantize-on-write"
+                );
+            }
+        }
     }
 
     #[test]

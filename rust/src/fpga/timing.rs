@@ -100,8 +100,19 @@ pub fn stack_active_macs(cfg: &ModelConfig) -> u64 {
 /// single-image span engine; `tile = TILE` the AoSoA kernels; larger
 /// `threads` the `std::thread::scope` batch splitter.
 pub fn host_tile_img_s(cfg: &ModelConfig, tile: usize, threads: usize) -> f64 {
+    host_tile_img_s_bytes(cfg, tile, threads, 4.0)
+}
+
+/// [`host_tile_img_s`] with bytes-per-weight as a roofline parameter —
+/// the quantized weight store (`bcpnn::sparse::QuantStore`) streams 2-
+/// or 1-byte words instead of f32, moving the bandwidth wall while the
+/// compute roof stays put (dequant widens in-register; the mul+add
+/// count is unchanged). Pass `QuantFormat::bytes_per_weight()`.
+pub fn host_tile_img_s_bytes(
+    cfg: &ModelConfig, tile: usize, threads: usize, bytes_per_weight: f64,
+) -> f64 {
     let macs = stack_active_macs(cfg) as f64;
-    let t_bw = 4.0 * macs / (tile.max(1) as f64) / HOST_STREAM_BYTES_S;
+    let t_bw = bytes_per_weight * macs / (tile.max(1) as f64) / HOST_STREAM_BYTES_S;
     let t_fl = 2.0 * macs / (HOST_CORE_FLOPS_S * threads.max(1) as f64);
     1.0 / t_bw.max(t_fl)
 }
@@ -380,6 +391,32 @@ mod tests {
         let macs = stack_active_macs(&cfg);
         let l0 = cfg.layer_dims()[0].active_synapses();
         assert!(macs > l0, "{macs} vs layer0 {l0}");
+    }
+
+    #[test]
+    fn narrow_weights_move_the_bandwidth_wall() {
+        let cfg = by_name("mnist-deep2").unwrap();
+        // f32 = 4 bytes/weight is the existing model, bitwise.
+        assert_eq!(
+            host_tile_img_s_bytes(&cfg, 8, 4, 4.0),
+            host_tile_img_s(&cfg, 8, 4)
+        );
+        // Bandwidth-bound regimes scale with bytes-per-weight: the
+        // ISSUE's modeled floor is int8 >= 2x f32 on mnist-deep2.
+        let f32_single = host_tile_img_s_bytes(&cfg, 1, 1, 4.0);
+        let int8_single = host_tile_img_s_bytes(&cfg, 1, 1, 1.0);
+        assert!(int8_single >= 2.0 * f32_single, "{int8_single} vs {f32_single}");
+        // With the tile+thread engine the f32 wall returns at 8 threads
+        // (host_tile_model_rooflines above); int8 lifts it 4x.
+        let f32_mt = host_tile_img_s_bytes(&cfg, 8, 8, 4.0);
+        let int8_mt = host_tile_img_s_bytes(&cfg, 8, 8, 1.0);
+        assert!(int8_mt >= 2.0 * f32_mt, "{int8_mt} vs {f32_mt}");
+        // The compute roof is format-independent: at one thread the
+        // tiled engine is compute-bound, so bf16 changes nothing.
+        assert_eq!(
+            host_tile_img_s_bytes(&cfg, 8, 1, 2.0),
+            host_tile_img_s_bytes(&cfg, 8, 1, 4.0)
+        );
     }
 
     #[test]

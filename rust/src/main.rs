@@ -39,14 +39,17 @@ COMMANDS:
                     --json prints the per-epoch report machine-readable)
   serve             inference server demo (--config tiny --requests N
                     --artifacts DIR); --host serves the pure-rust
-                    batched tile engine instead of PJRT (--threads N);
+                    batched tile engine instead of PJRT (--threads N;
+                    --precision f32|bf16|f16|int8 selects the serving
+                    weight store, echoed in the report);
                     --json prints the report machine-readable;
                     --metrics PATH|PORT exports live telemetry
                     (JSON-lines file or Prometheus text on
                     127.0.0.1:PORT, --metrics-interval MS, default 500)
   bench             host batched-tile throughput: single-image span vs
                     AoSoA tile vs tile + threads (--config tiny
-                    --images N --threads N)
+                    --images N --threads N); prints the modeled
+                    roofline per weight format (bytes/weight axis)
   table2            Table 2 (modeled) (--models model1,model2,model3)
   table3            Table 3 (estimator) (--models ...)
   stack             per-layer stack envelopes + pipeline placement
@@ -191,6 +194,36 @@ fn cmd_plan(args: &Args) -> Result<()> {
     };
     let tol: f64 = args.get_parse("tol", 0.10f64)?;
     println!("{}", report::placement_table(&refs, &fleet, version, tol)?);
+
+    // Host-side counterpart of the placement table: the tile engine's
+    // modeled roofline per weight-store format (bytes-per-weight axis).
+    {
+        use bcpnn_accel::bcpnn::sparse::TILE;
+        use bcpnn_accel::bcpnn::QuantFormat;
+        use bcpnn_accel::fpga::timing;
+        let threads: usize =
+            args.get_parse("threads", bcpnn_accel::util::threads_from_env())?;
+        for &m in &refs {
+            let cfg = by_name(m)?;
+            let per_fmt: Vec<String> = QuantFormat::ALL
+                .iter()
+                .map(|fmt| {
+                    format!(
+                        "{} {:.0}",
+                        fmt.name(),
+                        timing::host_tile_img_s_bytes(
+                            &cfg, TILE, threads, fmt.bytes_per_weight(),
+                        )
+                    )
+                })
+                .collect();
+            println!(
+                "{m}: host tile roofline (tile={TILE} x{threads} threads), img/s by format: {}",
+                per_fmt.join(", ")
+            );
+        }
+        println!();
+    }
 
     // `--measure N`: run the planned placement for real — the hybrid
     // executor on host threads — and print the measured per-worker
@@ -488,13 +521,24 @@ fn cmd_serve_host(
     use bcpnn_accel::coordinator::GraphBackend;
 
     let threads: usize = args.get_parse("threads", bcpnn_accel::util::threads_from_env())?;
+    // `--precision <fmt>` selects the serving weight store. No flag
+    // means "leave the graph alone": a fresh graph serves f32, and a
+    // checkpoint keeps whatever precision tag it was saved with.
+    let precision = match args.get("precision") {
+        Some(s) => Some(
+            bcpnn_accel::bcpnn::QuantFormat::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("unknown precision {s:?} (f32|bf16|f16|int8)")
+            })?,
+        ),
+        None => None,
+    };
     let name = cfg.name.clone();
     let ckpt = args.get("load").map(|s| s.to_string());
     let cfg_worker = cfg.clone();
     eprintln!("serving {name} on the host tile engine ({threads} thread(s))...");
     let server = InferenceServer::start(
         move || {
-            let graph = match ckpt {
+            let mut graph = match ckpt {
                 Some(path) => {
                     let g = bcpnn_accel::bcpnn::checkpoint::load_graph(
                         std::path::Path::new(&path))?;
@@ -508,6 +552,10 @@ fn cmd_serve_host(
                 }
                 None => LayerGraph::new(cfg_worker, seed),
             };
+            if let Some(fmt) = precision {
+                graph.set_precision(fmt);
+                eprintln!("serving store: {} weights", fmt.name());
+            }
             Ok(GraphBackend::new(graph, threads))
         },
         ServerConfig::default(),
@@ -601,6 +649,16 @@ fn cmd_bench(args: &Args) -> Result<()> {
         timing::host_tile_img_s(&cfg, TILE, 1),
         timing::host_tile_img_s(&cfg, TILE, threads),
     );
+    // Bytes-per-weight is a roofline parameter: narrow stores move the
+    // bandwidth wall while the compute roof stays put.
+    for fmt in bcpnn_accel::bcpnn::QuantFormat::ALL {
+        println!(
+            "modeled (roofline, {} weights, {} B/w): tile={TILE} x{threads} threads {:.0} img/s",
+            fmt.name(),
+            fmt.bytes_per_weight(),
+            timing::host_tile_img_s_bytes(&cfg, TILE, threads, fmt.bytes_per_weight()),
+        );
+    }
     println!(
         "modeled device stream ({}): {:.0} img/s",
         FpgaDevice::u55c().name,

@@ -472,8 +472,8 @@ pub fn serve_decomposition(r: &crate::coordinator::server::ServerReport) -> Stri
     };
     let mut s = String::new();
     s.push_str(&format!(
-        "Serving latency decomposition — {} images in {} batches (mean fill {:.2}, {} threads)\n",
-        r.served, r.batches, r.mean_fill, r.threads
+        "Serving latency decomposition — {} images in {} batches (mean fill {:.2}, {} threads, {} weights)\n",
+        r.served, r.batches, r.mean_fill, r.threads, r.precision.name()
     ));
     s.push_str("  span         mean       p50       p99      p999       max  (ms)\n");
     s.push_str(&row("e2e", &r.latency));
@@ -666,9 +666,11 @@ mod tests {
             queue_wait: LatencyStats::zero(),
             service: st,
             threads: 4,
+            precision: crate::bcpnn::QuantFormat::Bf16,
         };
         let s = serve_decomposition(&r);
         assert!(s.contains("3 images in 2 batches"), "{s}");
+        assert!(s.contains("bf16 weights"), "{s}");
         assert!(s.contains("e2e"), "{s}");
         assert!(s.contains("queue_wait"), "{s}");
         assert!(s.contains("service"), "{s}");

@@ -17,10 +17,13 @@
 //! (batch % TILE != 0), and the `--threads` batch splitter must be
 //! bitwise the single-image span kernels — and hence the dense seed.
 
+use bcpnn_accel::bcpnn::checkpoint::{load_graph, save_graph};
 use bcpnn_accel::bcpnn::sparse::{
     dense_support_cols, dense_support_masked, dense_train_step, expand_mask_dims, TILE,
 };
-use bcpnn_accel::bcpnn::{LayerGraph, Network, Projection, StructuralPlasticity, Workspace};
+use bcpnn_accel::bcpnn::{
+    LayerGraph, Network, Projection, QuantFormat, StructuralPlasticity, Workspace,
+};
 use bcpnn_accel::config::{by_name, registry, ModelConfig};
 use bcpnn_accel::data::encode::{encode_image, pack_tile, unpack_lane};
 use bcpnn_accel::data::synth;
@@ -411,6 +414,155 @@ fn workspace_reuse_across_configs_is_exact() {
                     "{name} round {round} lane {lane} tile"
                 );
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Quantized weight-store suite. The narrow store is a derived view of
+// the f32 masters: selecting `F32` must leave every kernel above
+// bitwise untouched (it drops the store), and each narrow format must
+// track the f32 probabilities within a named epsilon on every registry
+// config — on fresh weights, and again after training + rewire (the
+// requantize hooks rebuild the store over the refreshed spans).
+
+/// Max |p_quant - p_f32| allowed over output probabilities, per
+/// format. All registry configs run gain = 1.0, so a support error d
+/// moves a probability by at most ~d/2; these bounds carry an order of
+/// magnitude of headroom over the worst weight-rounding drift observed
+/// in the registry regime (fresh-to-lightly-trained weights, |w| well
+/// under 1), while a broken dequant path shows diffs near 1.0.
+const BF16_PROB_EPS: f32 = 0.03;
+const F16_PROB_EPS: f32 = 0.03;
+const INT8_PROB_EPS: f32 = 0.10;
+
+fn prob_eps(fmt: QuantFormat) -> f32 {
+    match fmt {
+        QuantFormat::F32 => 0.0,
+        QuantFormat::Bf16 => BF16_PROB_EPS,
+        QuantFormat::F16 => F16_PROB_EPS,
+        QuantFormat::Int8 => INT8_PROB_EPS,
+    }
+}
+
+/// Per-config oracle: f32-format selection is bitwise inert; every
+/// narrow format stays within its probability epsilon of f32 on the
+/// scalar path, and its tile/threaded batch paths are bitwise the
+/// scalar quantized path (dequant is per-weight, so lane grouping must
+/// not show through — same contract the f32 engine pins above).
+fn assert_quantized_tracks_f32(name: &str) {
+    let cfg = by_name(name).unwrap();
+    let mut g = LayerGraph::new(cfg.clone(), 42);
+    let images = imgs_for(&cfg, 97);
+
+    let check = |g: &LayerGraph, what: &str| {
+        let want: Vec<Vec<f32>> = images.iter().map(|i| g.infer(i)).collect();
+
+        // Explicitly selecting F32 drops the store: bitwise identical
+        // to a graph that never touched precision.
+        let mut gf = g.clone();
+        gf.set_precision(QuantFormat::F32);
+        assert_eq!(gf.precision(), QuantFormat::F32);
+        for (k, (img, w)) in images.iter().zip(&want).enumerate() {
+            assert_eq!(bits(&gf.infer(img)), bits(w), "{name} {what}: f32 format img {k}");
+        }
+
+        for fmt in [QuantFormat::Bf16, QuantFormat::F16, QuantFormat::Int8] {
+            let mut gq = g.clone();
+            gq.set_precision(fmt);
+            assert_eq!(gq.precision(), fmt);
+            let eps = prob_eps(fmt);
+            let scalar: Vec<Vec<f32>> = images.iter().map(|i| gq.infer(i)).collect();
+            for (k, (got, w)) in scalar.iter().zip(&want).enumerate() {
+                let d = got
+                    .iter()
+                    .zip(w.iter())
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(
+                    d <= eps,
+                    "{name} {what}: {} img {k} drifted {d:e} > {eps:e} from f32",
+                    fmt.name()
+                );
+            }
+            let batch = gq.infer_batch(&images);
+            for (k, (got, s)) in batch.iter().zip(&scalar).enumerate() {
+                assert_eq!(bits(got), bits(s), "{name} {what}: {} tile img {k}", fmt.name());
+            }
+            for threads in [2usize, 3] {
+                let thr = gq.infer_batch_threads(&images, threads);
+                assert_eq!(batch, thr, "{name} {what}: {} x{threads} threads", fmt.name());
+            }
+        }
+    };
+
+    check(&g, "pre-train");
+
+    // Short train batch + rewire, then re-check: the narrow stores are
+    // rebuilt from the refreshed spans (set_precision on the trained
+    // graph exercises the same build the requantize hooks run).
+    for (k, img) in images.iter().enumerate() {
+        g.train_unsup_step(img);
+        g.train_sup_step(img, k % cfg.n_classes);
+    }
+    g.rewire(&StructuralPlasticity::default());
+    check(&g, "post-rewire");
+}
+
+#[test]
+fn quantized_small_configs_track_f32() {
+    for name in ["tiny", "small", "edge", "toy-deep"] {
+        assert_quantized_tracks_f32(name);
+    }
+}
+
+#[test]
+fn quantized_model1_tracks_f32() {
+    assert_quantized_tracks_f32("model1");
+}
+
+#[test]
+fn quantized_model2_tracks_f32() {
+    assert_quantized_tracks_f32("model2");
+}
+
+#[test]
+fn quantized_model3_tracks_f32() {
+    assert_quantized_tracks_f32("model3");
+}
+
+#[test]
+fn quantized_mnist_deep2_tracks_f32() {
+    assert_quantized_tracks_f32("mnist-deep2");
+}
+
+#[test]
+fn quantized_checkpoint_roundtrip_preserves_format() {
+    // A quantized graph checkpoints its f32 masters plus the precision
+    // tag; loading rebuilds the narrow store and must reproduce the
+    // quantized inference bitwise.
+    let cfg = by_name("toy-deep").unwrap();
+    let mut g = LayerGraph::new(cfg.clone(), 7);
+    let images = imgs_for(&cfg, 7);
+    for (k, img) in images.iter().enumerate() {
+        g.train_unsup_step(img);
+        g.train_sup_step(img, k % cfg.n_classes);
+    }
+    for fmt in [QuantFormat::Bf16, QuantFormat::F16, QuantFormat::Int8] {
+        g.set_precision(fmt);
+        let mut path = std::env::temp_dir();
+        path.push(format!("bcpnn_kernels_q_{}_{}", fmt.name(), std::process::id()));
+        save_graph(&path, &g).unwrap();
+        let loaded = load_graph(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.precision(), fmt, "format tag survives the roundtrip");
+        for (k, img) in images.iter().enumerate() {
+            assert_eq!(
+                bits(&loaded.infer(img)),
+                bits(&g.infer(img)),
+                "{} img {k}: loaded store diverged",
+                fmt.name()
+            );
         }
     }
 }
