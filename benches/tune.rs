@@ -1,0 +1,97 @@
+//! Autotuner bench: wall-clock cost of the deployment search and the
+//! "never worse than a pure strategy" invariant, per config.
+//!
+//!     cargo bench --bench tune
+//!     cargo bench --bench tune -- --quick --json   # + BENCH_tune.json
+//!
+//! Each row runs the full `tune::tune` search (FPGA replica slices x
+//! plan_hybrid x precision, plus the host tile family) with no
+//! workload constraints and reports: search wall time, candidates
+//! costed vs pruned, the winner's modeled operating point, and the
+//! winner-vs-baseline throughput ratios. The invariant asserted here
+//! is the same one `rust/tests/tune.rs` gates CI on: the winner's
+//! modeled throughput is >= every feasible pure strategy.
+//!
+//! `--json` writes `BENCH_tune.json` at the repo root (the committed
+//! copy is a modeled-seed snapshot: the numbers are deterministic
+//! model evaluations, so they don't drift with host load).
+
+use std::path::Path;
+
+use bcpnn_accel::bench_harness as bh;
+use bcpnn_accel::config::by_name;
+use bcpnn_accel::tune::{tune, TuneOptions, Workload};
+use bcpnn_accel::util::json::Json;
+
+fn main() {
+    let opts = bh::BenchOpts::from_args();
+    let names: &[&str] = if opts.quick {
+        &["tiny", "mnist-deep2"]
+    } else {
+        &["tiny", "model1", "model2", "mnist-deep2", "toy-deep"]
+    };
+    let (warmup, iters) = if opts.quick { (1, 3) } else { (2, 5) };
+
+    println!("== deployment autotuner: search cost + invariant ==");
+    println!("{}", bh::header());
+
+    let mut entries: Vec<Json> = Vec::new();
+    for &name in names {
+        let cfg = by_name(name).unwrap();
+        let topts = TuneOptions::default();
+        let w = Workload::default();
+        let r = bh::bench(&format!("tune {name} (u55c:3, host+fpga)"), warmup, iters, || {
+            std::hint::black_box(tune(&cfg, &w, &topts).unwrap().evaluated);
+        });
+        println!("{}", r.row());
+
+        let out = tune(&cfg, &w, &topts).unwrap();
+        let tp = out.spec.modeled.throughput_img_s;
+        for b in &out.baselines {
+            if let Some(base) = b.throughput_img_s {
+                assert!(
+                    tp >= base * (1.0 - 1e-9),
+                    "{name}: tuner {tp:.0} img/s below {} {base:.0} img/s",
+                    b.name
+                );
+            }
+        }
+        let searched = out.evaluated + out.pruned;
+        println!(
+            "  winner: {} {:.0} img/s, {:.1} W  ({} costed / {} searched, {} feasible)",
+            out.spec.backend.name(),
+            tp,
+            out.spec.modeled.power_w,
+            out.evaluated,
+            searched,
+            out.feasible,
+        );
+        let baselines = Json::obj(
+            out.baselines
+                .iter()
+                .map(|b| (b.name, b.throughput_img_s.map(Json::from).unwrap_or(Json::Null)))
+                .collect(),
+        );
+        entries.push(Json::obj(vec![
+            ("config", Json::from(name)),
+            ("search", r.to_json()),
+            ("evaluated", Json::from(out.evaluated)),
+            ("pruned", Json::from(out.pruned)),
+            ("feasible", Json::from(out.feasible)),
+            ("winner", out.spec.to_json()),
+            ("baselines", baselines),
+        ]));
+    }
+
+    if opts.json {
+        let report = Json::obj(vec![
+            ("bench", Json::from("tune")),
+            ("source", Json::from("measured")),
+            ("fleet", Json::from("u55c:3")),
+            ("configs", Json::Arr(entries)),
+        ]);
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_tune.json");
+        bh::write_json_report(&path, &report).expect("write BENCH_tune.json");
+        println!("\nwrote {}", path.display());
+    }
+}

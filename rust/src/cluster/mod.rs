@@ -49,7 +49,8 @@ pub use executor::{ShardReport, ShardedExecutor};
 pub use hybrid::{HybridExecutor, WorkerReport};
 pub use pipeline::{PipelineParallelExecutor, StageExecReport};
 pub use placement::{
-    plan_hybrid, Fleet, HybridPlan, HybridStage, StagePiece, DEFAULT_BALANCE_TOL,
+    compositions, envelope_min_devices, envelope_min_shards, plan_hybrid, pure_pipeline,
+    pure_shard, Fleet, HybridPlan, HybridStage, StagePiece, DEFAULT_BALANCE_TOL,
 };
 pub use plan::{plan, plan_pipeline, LayerStage, PartitionPlan, PipelinePlan, ShardSpec};
 pub use train::{ShardTrainReport, ShardedTrainer};

@@ -550,8 +550,13 @@ fn balance_shards(
     Ok((pieces, balanced))
 }
 
-/// All orderings of `n` devices into `k` positive contiguous parts.
-fn compositions(n: usize, k: usize) -> Vec<Vec<usize>> {
+/// All orderings of `n` devices into `k` positive contiguous parts —
+/// the planner's device-split enumeration, public so the deployment
+/// autotuner (`crate::tune`) can reuse it to slice a fleet into
+/// replica groups. Deterministic order (first part ascending,
+/// recursively), which the tuner's byte-identical-spec guarantee
+/// relies on.
+pub fn compositions(n: usize, k: usize) -> Vec<Vec<usize>> {
     if k == 0 || n < k {
         return Vec::new();
     }
@@ -568,6 +573,70 @@ fn compositions(n: usize, k: usize) -> Vec<Vec<usize>> {
         }
     }
     out
+}
+
+/// Does a `hc_out`-reduced shard of `dims` fit `dev`'s envelope? Same
+/// checks as [`check_envelope`], boolean form for the bound below.
+fn layer_shard_fits(dims: &LayerDims, version: KernelVersion, dev: &FpgaDevice) -> bool {
+    let util = estimate_layer(dims, version, dev);
+    util.luts <= dev.luts
+        && util.dsps <= dev.dsps
+        && util.bram_pct(dev) <= BRAM_CEILING_PCT
+        && layer_hbm_bytes(dims, version) <= dev.hbm_capacity_bytes
+}
+
+/// Fewest equal-split shards of `dims` whose *largest* shard
+/// (`ceil(hc_out / s)` hypercolumns) fits one `dev` envelope, or
+/// `None` if even a single-hypercolumn shard does not fit. Every
+/// resource term (LUT/DSP/BRAM/HBM) is monotone non-decreasing in the
+/// shard's HC count, so the first fitting `s` is the minimum.
+pub fn envelope_min_shards(
+    dims: &LayerDims, version: KernelVersion, dev: &FpgaDevice,
+) -> Option<usize> {
+    for s in 1..=dims.hc_out {
+        let mut shard = *dims;
+        shard.hc_out = dims.hc_out.div_ceil(s);
+        if layer_shard_fits(&shard, version, dev) {
+            return Some(s);
+        }
+    }
+    None
+}
+
+/// Envelope lower bound on the fleet size any feasible `plan_hybrid`
+/// placement of `cfg` needs on a homogeneous fleet of `dev` — the
+/// subtree-pruning bound the deployment autotuner rejects whole fleet
+/// slices with, *without* running the planner.
+///
+/// Soundness: a layer whose minimal shard count is `s >= 2` cannot be
+/// co-located (co-location gives the whole layer to one device, which
+/// by `s >= 2` does not fit) and cannot shard across `p < s` devices
+/// (any `p`-way split has a largest shard of at least `ceil(hc / p)`
+/// hypercolumns, which the scan in [`envelope_min_shards`] already
+/// found infeasible; fitting is monotone in the shard's HC count), so
+/// it needs `>= s` dedicated devices, and sharded stages never share
+/// devices. Layers with `s == 1` need at least one device between
+/// them. The bound ignores co-location HBM-sum limits, so it is a
+/// lower bound only — the planner still decides true feasibility.
+pub fn envelope_min_devices(
+    cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice,
+) -> Result<usize> {
+    let mut sharded = 0usize;
+    let mut any_single = false;
+    for d in cfg.layer_dims() {
+        match envelope_min_shards(&d, version, dev) {
+            Some(1) => any_single = true,
+            Some(s) => sharded += s,
+            None => bail!(
+                "{}: layer {} does not fit a {} even as a single-hypercolumn \
+                 shard — no fleet of this device can place it",
+                cfg.name,
+                d.index,
+                dev.name
+            ),
+        }
+    }
+    Ok((sharded + usize::from(any_single)).max(1))
 }
 
 /// Build one candidate plan: `groups` are the layer ranges per stage,
@@ -836,6 +905,51 @@ mod tests {
         let c = compositions(4, 2);
         assert_eq!(c, vec![vec![1, 3], vec![2, 2], vec![3, 1]]);
         assert!(compositions(2, 3).is_empty());
+    }
+
+    #[test]
+    fn envelope_bound_is_sound_and_tight_enough() {
+        let dev = u55c();
+        for name in ["tiny", "model1", "mnist-deep2", "toy-deep"] {
+            let cfg = by_name(name).unwrap();
+            for v in KernelVersion::all() {
+                let lb = envelope_min_devices(&cfg, v, &dev).unwrap();
+                assert!(lb >= 1, "{name}/{}", v.name());
+                // Sound: below the bound the planner must also fail...
+                for n in 1..lb {
+                    assert!(
+                        plan_hybrid(&cfg, &Fleet::homogeneous(&dev, n), v, 0.10).is_err(),
+                        "{name}/{}: planner found a {n}-device plan under lb {lb}",
+                        v.name()
+                    );
+                }
+                // ...and at the bound, every registry config here fits
+                // (the bound is exact for them — single-device or
+                // shard-limited cases).
+                assert!(
+                    plan_hybrid(&cfg, &Fleet::homogeneous(&dev, lb), v, 0.10).is_ok(),
+                    "{name}/{}: infeasible at lb {lb}",
+                    v.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn min_shards_monotone_under_device_shrink() {
+        // A device with less BRAM can only need >= as many shards.
+        let big = u55c();
+        let cfg = by_name("model3").unwrap();
+        let d = cfg.layer_dims()[0];
+        let s_big = envelope_min_shards(&d, KernelVersion::Struct, &big);
+        let mut small = big.clone();
+        small.brams /= 4;
+        let s_small = envelope_min_shards(&d, KernelVersion::Struct, &small);
+        match (s_big, s_small) {
+            (Some(a), Some(b)) => assert!(b >= a, "{b} < {a}"),
+            (Some(_), None) => {}
+            (None, other) => assert!(other.is_none()),
+        }
     }
 
     #[test]

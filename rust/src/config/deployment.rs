@@ -1,0 +1,338 @@
+//! Tuned deployment specs — the artifact `repro tune` emits and
+//! `repro serve` / `repro plan` load (`--spec <file>`).
+//!
+//! A spec pins every axis the tuner searched: backend family (host
+//! tile engine vs FPGA fleet), kernel version, serving precision,
+//! tile/thread count, replica count and per-replica device slices,
+//! plus the host-roofline constants the numbers were modeled with
+//! (measured by `--calibrate`, defaults otherwise) and the modeled
+//! operating point itself, so a loaded spec is auditable against what
+//! the search promised. JSON on disk, hand-rolled `util::json` like
+//! every other artifact in this repo — deterministic key order, so
+//! byte-identical specs mean identical deployments.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bcpnn::QuantFormat;
+use crate::fpga::device::KernelVersion;
+use crate::fpga::timing::HostRoofline;
+use crate::util::json::Json;
+
+use super::FleetSpec;
+
+/// Which execution family the spec deploys on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The batched AoSoA tile engine behind `InferenceServer` +
+    /// `GraphBackend` (`repro serve --host`).
+    Host,
+    /// A `plan_hybrid` stage/shard placement per replica behind
+    /// `ClusterServer` (`repro serve`'s cluster path).
+    Fpga,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Host => "host",
+            BackendKind::Fpga => "fpga",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "host" => Some(BackendKind::Host),
+            "fpga" => Some(BackendKind::Fpga),
+            _ => None,
+        }
+    }
+}
+
+/// The modeled operating point the tuner selected the spec at.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModeledPoint {
+    /// Aggregate images/s across replicas.
+    pub throughput_img_s: f64,
+    /// Per-image latency, milliseconds (worst replica).
+    pub latency_ms: f64,
+    /// Total deployment power draw, watts.
+    pub power_w: f64,
+    /// Energy per image, millijoules.
+    pub energy_mj: f64,
+}
+
+impl ModeledPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("throughput_img_s", Json::from(self.throughput_img_s)),
+            ("latency_ms", Json::from(self.latency_ms)),
+            ("power_w", Json::from(self.power_w)),
+            ("energy_mj", Json::from(self.energy_mj)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModeledPoint> {
+        Ok(ModeledPoint {
+            throughput_img_s: j.req("throughput_img_s")?.as_f64()?,
+            latency_ms: j.req("latency_ms")?.as_f64()?,
+            power_w: j.req("power_w")?.as_f64()?,
+            energy_mj: j.req("energy_mj")?.as_f64()?,
+        })
+    }
+}
+
+/// A complete, loadable deployment: every knob `repro serve` needs,
+/// plus provenance (calibration constants, modeled point).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentSpec {
+    /// Registry config name the deployment serves.
+    pub config: String,
+    pub backend: BackendKind,
+    pub version: KernelVersion,
+    /// Serving weight-store precision.
+    pub precision: QuantFormat,
+    /// Host backend: batch-splitter thread count. 0 for FPGA specs
+    /// (the hybrid executor runs one worker per placed kernel).
+    pub threads: usize,
+    /// Host backend: AoSoA tile width the engine batches at. 0 for
+    /// FPGA specs.
+    pub tile: usize,
+    /// Replica count (1 for host specs).
+    pub replicas: usize,
+    /// FPGA specs: the devices the deployment actually uses, in
+    /// replica-major order (replica 0's slice first). None for host.
+    pub fleet: Option<FleetSpec>,
+    /// FPGA specs: devices per replica slice; `len == replicas` and
+    /// the entries sum to `fleet.len()`. Empty for host.
+    pub devices_per_replica: Vec<usize>,
+    /// Shard-balance tolerance `plan_hybrid` was run with.
+    pub balance_tol: f64,
+    /// Host-roofline constants the modeled numbers used (measured
+    /// under `--calibrate`, `HostRoofline::default()` otherwise).
+    pub calibration: HostRoofline,
+    pub modeled: ModeledPoint,
+}
+
+impl DeploymentSpec {
+    /// Structural sanity — every loader runs this, so a hand-edited
+    /// spec fails with a named complaint instead of a panic later.
+    pub fn validate(&self) -> Result<()> {
+        if self.replicas == 0 {
+            bail!("deployment spec: replicas must be >= 1");
+        }
+        match self.backend {
+            BackendKind::Host => {
+                if self.threads == 0 || self.tile == 0 {
+                    bail!("host deployment spec: threads and tile must be >= 1");
+                }
+                if self.fleet.is_some() || !self.devices_per_replica.is_empty() {
+                    bail!("host deployment spec: must not name an FPGA fleet");
+                }
+            }
+            BackendKind::Fpga => {
+                let fleet = self
+                    .fleet
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("fpga deployment spec: missing fleet"))?;
+                if self.devices_per_replica.len() != self.replicas {
+                    bail!(
+                        "fpga deployment spec: {} replica slices for {} replicas",
+                        self.devices_per_replica.len(),
+                        self.replicas
+                    );
+                }
+                let used: usize = self.devices_per_replica.iter().sum();
+                if used != fleet.len() || self.devices_per_replica.contains(&0) {
+                    bail!(
+                        "fpga deployment spec: replica slices {:?} do not tile the \
+                         {}-device fleet",
+                        self.devices_per_replica,
+                        fleet.len()
+                    );
+                }
+            }
+        }
+        if !(self.balance_tol >= 0.0 && self.balance_tol < 1.0) {
+            bail!("deployment spec: balance_tol {} outside [0, 1)", self.balance_tol);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("config", Json::from(self.config.as_str())),
+            ("backend", Json::from(self.backend.name())),
+            ("version", Json::from(self.version.name())),
+            ("precision", Json::from(self.precision.name())),
+            ("threads", Json::from(self.threads)),
+            ("tile", Json::from(self.tile)),
+            ("replicas", Json::from(self.replicas)),
+            (
+                "devices_per_replica",
+                Json::Arr(self.devices_per_replica.iter().map(|&n| Json::from(n)).collect()),
+            ),
+            ("balance_tol", Json::from(self.balance_tol)),
+            ("calibration", self.calibration.to_json()),
+            ("modeled", self.modeled.to_json()),
+        ];
+        if let Some(fleet) = &self.fleet {
+            pairs.push(("fleet", fleet.to_json()));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<DeploymentSpec> {
+        let backend_name = j.req("backend")?.as_str()?;
+        let backend = BackendKind::parse(backend_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown backend {backend_name:?} (host|fpga)"))?;
+        let version_name = j.req("version")?.as_str()?;
+        let version = KernelVersion::parse(version_name).ok_or_else(|| {
+            anyhow::anyhow!("unknown kernel version {version_name:?} (infer|train|struct)")
+        })?;
+        let precision_name = j.req("precision")?.as_str()?;
+        let precision = QuantFormat::parse(precision_name).ok_or_else(|| {
+            anyhow::anyhow!("unknown precision {precision_name:?} (f32|bf16|f16|int8)")
+        })?;
+        let spec = DeploymentSpec {
+            config: j.req("config")?.as_str()?.to_string(),
+            backend,
+            version,
+            precision,
+            threads: j.req("threads")?.as_usize()?,
+            tile: j.req("tile")?.as_usize()?,
+            replicas: j.req("replicas")?.as_usize()?,
+            fleet: match j.get("fleet") {
+                Some(f) => Some(FleetSpec::from_json(f)?),
+                None => None,
+            },
+            devices_per_replica: j
+                .req("devices_per_replica")?
+                .as_arr()?
+                .iter()
+                .map(Json::as_usize)
+                .collect::<Result<Vec<_>>>()?,
+            balance_tol: j.req("balance_tol")?.as_f64()?,
+            calibration: HostRoofline::from_json(j.req("calibration")?)?,
+            modeled: ModeledPoint::from_json(j.req("modeled")?)?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Write the spec as one JSON line (deterministic key order —
+    /// identical specs are byte-identical files).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing deployment spec {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<DeploymentSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading deployment spec {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing deployment spec {}", path.display()))?;
+        DeploymentSpec::from_json(&j)
+            .with_context(|| format!("in deployment spec {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn host_spec() -> DeploymentSpec {
+        DeploymentSpec {
+            config: "mnist-deep2".to_string(),
+            backend: BackendKind::Host,
+            version: KernelVersion::Infer,
+            precision: QuantFormat::Int8,
+            threads: 4,
+            tile: 8,
+            replicas: 1,
+            fleet: None,
+            devices_per_replica: Vec::new(),
+            balance_tol: 0.10,
+            calibration: HostRoofline::default(),
+            modeled: ModeledPoint {
+                throughput_img_s: 12345.0,
+                latency_ms: 0.5,
+                power_w: 95.0,
+                energy_mj: 7.7,
+            },
+        }
+    }
+
+    fn fpga_spec() -> DeploymentSpec {
+        DeploymentSpec {
+            config: "model1".to_string(),
+            backend: BackendKind::Fpga,
+            version: KernelVersion::Infer,
+            precision: QuantFormat::F32,
+            threads: 0,
+            tile: 0,
+            replicas: 2,
+            fleet: Some(FleetSpec::homogeneous("u55c", 4)),
+            devices_per_replica: vec![2, 2],
+            balance_tol: 0.10,
+            calibration: HostRoofline::default(),
+            modeled: ModeledPoint {
+                throughput_img_s: 7100.0,
+                latency_ms: 0.3,
+                power_w: 108.0,
+                energy_mj: 15.2,
+            },
+        }
+    }
+
+    #[test]
+    fn round_trips_both_backends() {
+        for spec in [host_spec(), fpga_spec()] {
+            let text = spec.to_json().to_string();
+            let back = DeploymentSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, spec);
+            // Determinism: serialize -> parse -> serialize is bytewise.
+            assert_eq!(back.to_json().to_string(), text);
+        }
+    }
+
+    #[test]
+    fn save_load_round_trips() {
+        let path = std::env::temp_dir().join("bcpnn_deployment_spec_test.json");
+        let spec = fpga_spec();
+        spec.save(&path).unwrap();
+        let back = DeploymentSpec::load(&path).unwrap();
+        assert_eq!(back, spec);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn validate_rejects_malformed_specs() {
+        let mut s = fpga_spec();
+        s.devices_per_replica = vec![3, 2]; // does not tile the 4-device fleet
+        assert!(s.validate().is_err());
+        let mut s = fpga_spec();
+        s.fleet = None;
+        assert!(s.validate().is_err());
+        let mut s = host_spec();
+        s.threads = 0;
+        assert!(s.validate().is_err());
+        let mut s = host_spec();
+        s.fleet = Some(FleetSpec::homogeneous("u55c", 1));
+        assert!(s.validate().is_err());
+        let mut s = host_spec();
+        s.replicas = 0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_names_error_with_choices() {
+        let mut j = host_spec().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("precision".to_string(), Json::from("fp4"));
+        }
+        let err = DeploymentSpec::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("fp4") && err.contains("int8"), "{err}");
+    }
+}

@@ -14,6 +14,10 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
+pub mod deployment;
+
+pub use deployment::{BackendKind, DeploymentSpec, ModeledPoint};
+
 /// One hidden layer of a stacked BCPNN: hypercolumn count, minicolumns
 /// per hypercolumn, and active incoming HC connections per output HC
 /// (structural sparsity, the per-layer "nactHi").

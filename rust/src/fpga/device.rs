@@ -32,6 +32,12 @@ impl KernelVersion {
             KernelVersion::Struct => "struct",
         }
     }
+
+    /// Inverse of [`Self::name`] (deployment specs and `--version`
+    /// flags store the lowercase name).
+    pub fn parse(s: &str) -> Option<KernelVersion> {
+        KernelVersion::all().into_iter().find(|v| v.name() == s)
+    }
 }
 
 /// Device resource envelope + memory system parameters.

@@ -265,6 +265,18 @@ impl StackEstimate {
     }
 }
 
+/// Weight bytes streamed per image at `fmt` across the whole stack —
+/// the envelope-free twin of [`StackEstimate::streamed_bytes_per_img`]
+/// for callers (the power `_q` twins, the tuner's energy objective)
+/// that need the traffic number even when a layer busts the device
+/// envelope.
+pub fn streamed_weight_bytes_per_img(cfg: &ModelConfig, fmt: QuantFormat) -> u64 {
+    cfg.layer_dims()
+        .iter()
+        .map(|d| d.active_synapses() * u64::from(fmt.bits_per_weight()) / 8)
+        .sum()
+}
+
 /// Estimate every layer of `cfg`'s stack and validate each against the
 /// device envelope. Errors name the offending layer, so an unbuildable
 /// stack says *which* kernel to shrink or shard.

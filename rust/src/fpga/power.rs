@@ -7,10 +7,11 @@
 //! measures 26.1-28.1 W across all models/builds — a narrow band this
 //! reproduces).
 
+use crate::bcpnn::QuantFormat;
 use crate::config::ModelConfig;
 
 use super::device::{FpgaDevice, KernelVersion};
-use super::estimator::estimate;
+use super::estimator::{estimate, streamed_weight_bytes_per_img, Utilization};
 use super::timing;
 
 /// Static draw of shell + HBM stack under XRT, watts.
@@ -21,13 +22,24 @@ pub const K_LUT: f64 = 7.6e-14;
 pub const K_DSP: f64 = 1.9e-12;
 /// Dynamic watts per (BRAM36 * Hz).
 pub const K_BRAM: f64 = 2.4e-12;
+/// HBM2 I/O energy per byte moved (~3.7 pJ/bit ≈ 30 pJ/B) — the
+/// precision-sensitive slice of the dynamic term: quantized stores
+/// stream fewer weight bytes per image, so the `_q` twins below credit
+/// `E_HBM_J_PER_BYTE * saved_bytes` back against the f32 baseline.
+pub const E_HBM_J_PER_BYTE: f64 = 30e-12;
 
-/// Board power for one (config, version), watts.
-pub fn power_watts(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> f64 {
-    let u = estimate(cfg, version, dev);
+/// Dynamic + static board power for an already-computed utilization.
+/// The hook the tuner uses to cost a sharded piece (whose utilization
+/// came from `estimate_layer`, not the whole-config `estimate`).
+pub fn utilization_power_watts(u: &Utilization) -> f64 {
     let f = u.freq_mhz * 1e6;
     P_STATIC_W + K_LUT * u.luts as f64 * f + K_DSP * u.dsps as f64 * f
         + K_BRAM * u.brams * f
+}
+
+/// Board power for one (config, version), watts.
+pub fn power_watts(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> f64 {
+    utilization_power_watts(&estimate(cfg, version, dev))
 }
 
 /// Energy per image in millijoules: board power x per-image latency.
@@ -35,6 +47,38 @@ pub fn power_watts(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) 
 /// 83.2 W x 1.495 ms = 124.4 mJ.)
 pub fn energy_per_image_mj(cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice) -> f64 {
     power_watts(cfg, version, dev) * timing::latency_ms(cfg, version, dev)
+}
+
+/// Weight-stream bytes saved per image by serving at `fmt` instead of
+/// the f32 masters (0 for f32 by construction).
+fn saved_stream_bytes(cfg: &ModelConfig, fmt: QuantFormat) -> f64 {
+    let f32_bytes = streamed_weight_bytes_per_img(cfg, QuantFormat::F32);
+    let fmt_bytes = streamed_weight_bytes_per_img(cfg, fmt);
+    f32_bytes.saturating_sub(fmt_bytes) as f64
+}
+
+/// Precision-aware twin of [`energy_per_image_mj`]: the f32 energy
+/// minus the HBM I/O energy of the weight bytes a narrow store never
+/// streams. At `QuantFormat::F32` this equals the base model bitwise
+/// (saved bytes = 0), so the Table 2 pins are untouched; at int8 the
+/// 4x smaller weight stream shows up as a per-image credit.
+pub fn energy_per_image_mj_q(
+    cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice, fmt: QuantFormat,
+) -> f64 {
+    energy_per_image_mj(cfg, version, dev)
+        - E_HBM_J_PER_BYTE * saved_stream_bytes(cfg, fmt) * 1e3
+}
+
+/// Precision-aware twin of [`power_watts`]: the same per-image HBM
+/// credit expressed as average watts at the build's one-image-in-flight
+/// rate, so `power_watts_q * latency_ms == energy_per_image_mj_q`
+/// holds exactly (mJ = W x ms), mirroring the base model's identity.
+pub fn power_watts_q(
+    cfg: &ModelConfig, version: KernelVersion, dev: &FpgaDevice, fmt: QuantFormat,
+) -> f64 {
+    let latency_s = timing::latency_ms(cfg, version, dev) * 1e-3;
+    power_watts(cfg, version, dev)
+        - E_HBM_J_PER_BYTE * saved_stream_bytes(cfg, fmt) / latency_s
 }
 
 #[cfg(test)]
@@ -99,5 +143,95 @@ mod tests {
         let p = power_watts(&cfg, KernelVersion::Train, &dev);
         let l = timing::latency_ms(&cfg, KernelVersion::Train, &dev);
         assert!((e - p * l).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f32_twins_equal_base_model_bitwise() {
+        // saved bytes = 0 at f32, so the `_q` twins must not perturb
+        // the calibrated Table 2 numbers at all.
+        let dev = FpgaDevice::u55c();
+        for m in ["model1", "model2", "model3", "mnist-deep2"] {
+            let cfg = by_name(m).unwrap();
+            for v in KernelVersion::all() {
+                assert_eq!(
+                    power_watts_q(&cfg, v, &dev, QuantFormat::F32),
+                    power_watts(&cfg, v, &dev),
+                    "{m}/{}", v.name()
+                );
+                assert_eq!(
+                    energy_per_image_mj_q(&cfg, v, &dev, QuantFormat::F32),
+                    energy_per_image_mj(&cfg, v, &dev),
+                    "{m}/{}", v.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn narrower_formats_draw_no_more_power_or_energy() {
+        // QuantFormat::ALL is widest-first; both twins must be monotone
+        // non-increasing along it, and int8 strictly below f32 (the 4x
+        // weight-stream saving must be visible to the tuner's energy
+        // objective).
+        let dev = FpgaDevice::u55c();
+        for m in ["model1", "model3", "mnist-deep2"] {
+            let cfg = by_name(m).unwrap();
+            for v in KernelVersion::all() {
+                let ps: Vec<f64> = QuantFormat::ALL
+                    .iter()
+                    .map(|&f| power_watts_q(&cfg, v, &dev, f))
+                    .collect();
+                let es: Vec<f64> = QuantFormat::ALL
+                    .iter()
+                    .map(|&f| energy_per_image_mj_q(&cfg, v, &dev, f))
+                    .collect();
+                for w in ps.windows(2) {
+                    assert!(w[1] <= w[0] + 1e-12, "{m}/{}: power {w:?}", v.name());
+                }
+                for w in es.windows(2) {
+                    assert!(w[1] <= w[0] + 1e-12, "{m}/{}: energy {w:?}", v.name());
+                }
+                assert!(
+                    es[es.len() - 1] < es[0],
+                    "{m}/{}: int8 energy {} not below f32 {}",
+                    v.name(), es[es.len() - 1], es[0]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_energy_is_quantized_power_times_latency() {
+        // The base model's identity survives the precision credit:
+        // mJ = W x ms exactly, per format.
+        let dev = FpgaDevice::u55c();
+        let cfg = by_name("mnist-deep2").unwrap();
+        for v in KernelVersion::all() {
+            let l = timing::latency_ms(&cfg, v, &dev);
+            for &fmt in QuantFormat::ALL.iter() {
+                let e = energy_per_image_mj_q(&cfg, v, &dev, fmt);
+                let p = power_watts_q(&cfg, v, &dev, fmt);
+                assert!((e - p * l).abs() < 1e-9, "{}/{}", v.name(), fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn precision_credit_stays_small_vs_board_power() {
+        // Sanity-bound the new term: the weight stream can never
+        // exceed UNROLL_IH lanes * 4 B/cycle (~115 GB/s at 450 MHz),
+        // so the int8 credit is capped near 30 pJ/B * 3/4 * 115 GB/s
+        // ~ 2.6 W — always a small fraction of board power.
+        let dev = FpgaDevice::u55c();
+        for m in ["model1", "model2", "model3"] {
+            let cfg = by_name(m).unwrap();
+            for v in KernelVersion::all() {
+                let base = power_watts(&cfg, v, &dev);
+                let q = power_watts_q(&cfg, v, &dev, QuantFormat::Int8);
+                let credit = base - q;
+                assert!(credit >= 0.0, "{m}/{}", v.name());
+                assert!(credit < 0.15 * base, "{m}/{}: credit {credit:.2} W", v.name());
+            }
+        }
     }
 }

@@ -10,7 +10,10 @@
 //! Model-1 train latency land at ~0.42 ms; streaming the full joint
 //! arrays would already exceed it on bandwidth alone).
 
+use anyhow::Result;
+
 use crate::config::{LayerDims, ModelConfig};
+use crate::util::json::Json;
 
 use super::device::{FpgaDevice, KernelVersion};
 use super::estimator::{estimate_layer, UNROLL_HO, UNROLL_IH, UNROLL_SM};
@@ -86,6 +89,52 @@ pub const HOST_STREAM_BYTES_S: f64 = 16e9;
 /// f32 span kernel, flops/s (8 lanes x 2 ops x ~3 GHz).
 pub const HOST_CORE_FLOPS_S: f64 = 48e9;
 
+/// The two host roofline constants as a value, so the deployment
+/// autotuner can carry *measured* constants (fit by `repro tune
+/// --calibrate` from short tile-kernel micro-benches) through a
+/// `DeploymentSpec` instead of the hardcoded defaults above.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostRoofline {
+    /// Sustained weight-stream bandwidth, bytes/s.
+    pub stream_bytes_s: f64,
+    /// Per-thread mul+add throughput, flops/s.
+    pub core_flops_s: f64,
+}
+
+impl Default for HostRoofline {
+    fn default() -> Self {
+        HostRoofline { stream_bytes_s: HOST_STREAM_BYTES_S, core_flops_s: HOST_CORE_FLOPS_S }
+    }
+}
+
+impl HostRoofline {
+    /// [`host_tile_img_s_bytes`] evaluated at this roofline's
+    /// constants. With `HostRoofline::default()` this is bitwise the
+    /// free function (same expression, same operand order).
+    pub fn img_s(
+        &self, cfg: &ModelConfig, tile: usize, threads: usize, bytes_per_weight: f64,
+    ) -> f64 {
+        let macs = stack_active_macs(cfg) as f64;
+        let t_bw = bytes_per_weight * macs / (tile.max(1) as f64) / self.stream_bytes_s;
+        let t_fl = 2.0 * macs / (self.core_flops_s * threads.max(1) as f64);
+        1.0 / t_bw.max(t_fl)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("stream_bytes_s", Json::from(self.stream_bytes_s)),
+            ("core_flops_s", Json::from(self.core_flops_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<HostRoofline> {
+        Ok(HostRoofline {
+            stream_bytes_s: j.req("stream_bytes_s")?.as_f64()?,
+            core_flops_s: j.req("core_flops_s")?.as_f64()?,
+        })
+    }
+}
+
 /// Active MACs streamed per image across the whole stack (every hidden
 /// projection's active synapses plus the classifier head).
 pub fn stack_active_macs(cfg: &ModelConfig) -> u64 {
@@ -111,10 +160,7 @@ pub fn host_tile_img_s(cfg: &ModelConfig, tile: usize, threads: usize) -> f64 {
 pub fn host_tile_img_s_bytes(
     cfg: &ModelConfig, tile: usize, threads: usize, bytes_per_weight: f64,
 ) -> f64 {
-    let macs = stack_active_macs(cfg) as f64;
-    let t_bw = bytes_per_weight * macs / (tile.max(1) as f64) / HOST_STREAM_BYTES_S;
-    let t_fl = 2.0 * macs / (HOST_CORE_FLOPS_S * threads.max(1) as f64);
-    1.0 / t_bw.max(t_fl)
+    HostRoofline::default().img_s(cfg, tile, threads, bytes_per_weight)
 }
 
 /// Host-side per-invocation overhead: XRT dispatch + DMA of the image
@@ -417,6 +463,23 @@ mod tests {
             host_tile_img_s_bytes(&cfg, 8, 1, 2.0),
             host_tile_img_s_bytes(&cfg, 8, 1, 4.0)
         );
+    }
+
+    #[test]
+    fn roofline_value_matches_free_functions() {
+        // The default-constants value type must be bitwise the module
+        // functions (it IS the implementation now), and its JSON form
+        // must round-trip exactly.
+        let cfg = by_name("mnist-deep2").unwrap();
+        let r = HostRoofline::default();
+        assert_eq!(r.img_s(&cfg, 8, 4, 4.0), host_tile_img_s(&cfg, 8, 4));
+        assert_eq!(r.img_s(&cfg, 1, 1, 1.0), host_tile_img_s_bytes(&cfg, 1, 1, 1.0));
+        let fitted = HostRoofline { stream_bytes_s: 21.7e9, core_flops_s: 63.1e9 };
+        let back = HostRoofline::from_json(&Json::parse(&fitted.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back, fitted);
+        // A faster measured machine models faster throughput.
+        assert!(fitted.img_s(&cfg, 8, 4, 4.0) > r.img_s(&cfg, 8, 4, 4.0));
     }
 
     #[test]

@@ -52,6 +52,7 @@ pub mod runtime;
 pub mod stream;
 pub mod telemetry;
 pub mod testing;
+pub mod tune;
 pub mod util;
 
 /// Crate-wide result type (anyhow-based: substrates attach context).

@@ -4,6 +4,7 @@
 //!   config           print model configurations (Table 1)
 //!   train            full pipeline via PJRT artifacts on synthetic data
 //!   serve            streaming inference server demo (edge path)
+//!   tune             roofline-driven deployment autotuner
 //!   table2           Table 2 reproduction (modeled columns)
 //!   table3           Table 3 reproduction (resource estimator)
 //!   roofline         Fig. 6 reproduction (roofline points)
@@ -45,7 +46,10 @@ COMMANDS:
                     --json prints the report machine-readable;
                     --metrics PATH|PORT exports live telemetry
                     (JSON-lines file or Prometheus text on
-                    127.0.0.1:PORT, --metrics-interval MS, default 500)
+                    127.0.0.1:PORT, --metrics-interval MS, default 500);
+                    --spec FILE serves a tuned deployment spec from
+                    `repro tune --out` (backend, fleet, threads,
+                    precision all come from the spec)
   bench             host batched-tile throughput: single-image span vs
                     AoSoA tile vs tile + threads (--config tiny
                     --images N --threads N); prints the modeled
@@ -59,7 +63,24 @@ COMMANDS:
                     --fleet u55c:3 --version infer --tol 0.1);
                     --measure N runs N images through the hybrid
                     executor on host threads and prints the measured
-                    per-worker queue-vs-compute decomposition
+                    per-worker queue-vs-compute decomposition;
+                    --spec FILE prints the placement a tuned
+                    deployment spec resolves to instead
+  tune              roofline-driven deployment autotuner: search fleet
+                    slices x plan_hybrid placements x replicas x
+                    precision (FPGA family) and tile x threads x
+                    precision (host family) for the highest-throughput
+                    point meeting the workload (--config mnist-deep2
+                    --fleet u55c:3 --version infer --tol 0.1
+                    --target IMG_S --p99 MS --power-budget W
+                    --energy-budget MJ --replicas N --threads N
+                    --family both|host|fpga --quick);
+                    --calibrate fits the host roofline from measured
+                    micro-benches (--calibrate-images N, default 256)
+                    instead of the 16 GB/s / 48 GFLOP/s defaults;
+                    --out FILE writes the winning DeploymentSpec
+                    (loadable by serve/plan --spec); --json prints the
+                    outcome machine-readable
   roofline          Fig 6 operating points (--models ...)
   accuracy          Table 2 accuracy rows: PJRT path vs pure-rust CPU
                     (--config tiny --epochs N)
@@ -85,7 +106,8 @@ fn main() {
 }
 
 fn run(argv: Vec<String>) -> Result<()> {
-    let args = Args::parse(argv, &["all", "json", "struct", "verbose", "host"])?;
+    let args =
+        Args::parse(argv, &["all", "json", "struct", "verbose", "host", "calibrate", "quick"])?;
     let cmd = args.positional().first().cloned().unwrap_or_default();
     match cmd.as_str() {
         "config" => cmd_config(&args),
@@ -117,6 +139,7 @@ fn run(argv: Vec<String>) -> Result<()> {
             Ok(())
         }
         "plan" => cmd_plan(&args),
+        "tune" => cmd_tune(&args),
         "roofline" => {
             let models = models_arg(&args);
             let refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
@@ -176,9 +199,22 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 /// `repro plan`: print the hybrid placement the unified planner picks
 /// for each model on the given device fleet, with per-stage/per-shard
 /// modeled latency, balance skew, and HBM occupancy.
+fn parse_version(s: &str) -> Result<bcpnn_accel::fpga::device::KernelVersion> {
+    bcpnn_accel::fpga::device::KernelVersion::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown kernel version {s:?} (infer|train|struct)"))
+}
+
 fn cmd_plan(args: &Args) -> Result<()> {
     use bcpnn_accel::config::FleetSpec;
     use bcpnn_accel::fpga::device::KernelVersion;
+
+    // `--spec FILE`: print the placement a tuned deployment spec
+    // resolves to (same planner, same knobs the tuner recorded).
+    if let Some(path) = args.get("spec") {
+        let spec = bcpnn_accel::config::DeploymentSpec::load(std::path::Path::new(path))?;
+        println!("{}", report::deployment_table(&spec)?);
+        return Ok(());
+    }
 
     let models = match args.get("models") {
         Some(_) => models_arg(args),
@@ -436,10 +472,15 @@ fn cmd_accuracy(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let name = args.get_or("config", "tiny").to_string();
-    let cfg = by_name(&name)?;
     let n_requests: usize = args.get_parse("requests", 512usize)?;
     let seed: u64 = args.get_parse("seed", 42u64)?;
+
+    if let Some(path) = args.get("spec") {
+        return cmd_serve_spec(args, path, n_requests, seed);
+    }
+
+    let name = args.get_or("config", "tiny").to_string();
+    let cfg = by_name(&name)?;
 
     if args.flag("host") {
         return cmd_serve_host(args, cfg, n_requests, seed);
@@ -578,6 +619,169 @@ fn cmd_serve_host(
         println!("{}", rep.to_json());
     } else {
         print_serve_report(&rep, cfg.batch);
+    }
+    Ok(())
+}
+
+/// `repro serve --spec FILE`: serve a tuned [`DeploymentSpec`] exactly
+/// as the autotuner modeled it — host specs drive the tile engine with
+/// the spec's thread count and serving precision; FPGA specs rebuild
+/// the per-replica `plan_hybrid` placements and put `ClusterServer`
+/// replicas behind the front door. (On a mixed fleet with several
+/// replicas the server replicates replica 0's plan — the uniform
+/// slices the tuner emits make the plans identical on homogeneous
+/// fleets, which is also the only case the tuner searches replicas
+/// on.)
+fn cmd_serve_spec(args: &Args, path: &str, n_requests: usize, seed: u64) -> Result<()> {
+    use bcpnn_accel::bcpnn::{LayerGraph, QuantFormat};
+    use bcpnn_accel::cluster::{ClusterConfig, ClusterServer};
+    use bcpnn_accel::config::{BackendKind, DeploymentSpec};
+    use bcpnn_accel::coordinator::GraphBackend;
+
+    let spec = DeploymentSpec::load(std::path::Path::new(path))?;
+    let cfg = by_name(&spec.config)?;
+    eprintln!(
+        "serving deployment spec {path}: {} on the {} backend \
+         (modeled {:.0} img/s, {:.1} W)",
+        spec.config,
+        spec.backend.name(),
+        spec.modeled.throughput_img_s,
+        spec.modeled.power_w,
+    );
+    let data = synth::generate(cfg.img_side, cfg.n_classes, n_requests, seed, 0.15);
+    match spec.backend {
+        BackendKind::Host => {
+            let (threads, precision) = (spec.threads, spec.precision);
+            let cfg_worker = cfg.clone();
+            let server = InferenceServer::start(
+                move || {
+                    let mut graph = LayerGraph::new(cfg_worker, seed);
+                    if precision != QuantFormat::F32 {
+                        graph.set_precision(precision);
+                    }
+                    Ok(GraphBackend::new(graph, threads))
+                },
+                ServerConfig::default(),
+            )?;
+            let exporter = start_exporter(args, server.metrics())?;
+            let mut pending = Vec::new();
+            for img in &data.images {
+                pending.push(server.submit(img.clone())?);
+            }
+            for rx in &pending {
+                let _ = rx.recv_timeout(Duration::from_secs(30))?;
+            }
+            let rep = server.shutdown();
+            if let Some(ex) = exporter {
+                ex.stop();
+            }
+            if args.flag("json") {
+                println!("{}", rep.to_json());
+            } else {
+                print_serve_report(&rep, cfg.batch);
+            }
+        }
+        BackendKind::Fpga => {
+            let plans = bcpnn_accel::tune::plans_for_spec(&spec)?;
+            let ccfg = ClusterConfig { replicas: spec.replicas, ..ClusterConfig::default() };
+            let server =
+                ClusterServer::start_hybrid(LayerGraph::new(cfg.clone(), seed), &plans[0], ccfg)?;
+            let exporter = start_exporter(args, server.metrics())?;
+            let mut pending = Vec::new();
+            for img in &data.images {
+                pending.push(server.submit(img.clone())?);
+            }
+            for rx in &pending {
+                let _ = rx.recv_timeout(Duration::from_secs(30))?;
+            }
+            let rep = server.shutdown();
+            if let Some(ex) = exporter {
+                ex.stop();
+            }
+            if args.flag("json") {
+                println!("{}", rep.to_json());
+            } else {
+                println!(
+                    "cluster served {} requests across {} replica(s) \
+                     ({} devices/replica, {} weights)",
+                    rep.served,
+                    rep.replicas.len(),
+                    spec.devices_per_replica.first().copied().unwrap_or(0),
+                    spec.precision.name(),
+                );
+                println!(
+                    "  e2e latency: mean {:.3} ms  p99 {:.3} ms",
+                    rep.latency.mean_ms, rep.latency.p99_ms
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `repro tune`: search the deployment space (see `tune::tune`) and
+/// print / save the winning spec.
+fn cmd_tune(args: &Args) -> Result<()> {
+    use bcpnn_accel::config::FleetSpec;
+    use bcpnn_accel::tune::{self, TuneOptions, Workload};
+
+    let name = args.get_or("config", "mnist-deep2").to_string();
+    let cfg = by_name(&name)?;
+    let seed: u64 = args.get_parse("seed", 42u64)?;
+    let mut opts =
+        if args.flag("quick") { TuneOptions::quick() } else { TuneOptions::default() };
+    opts.fleet = FleetSpec::parse(args.get_or("fleet", "u55c:3"))?;
+    opts.version = parse_version(args.get_or("version", "infer"))?;
+    opts.balance_tol = args.get_parse("tol", opts.balance_tol)?;
+    opts.max_replicas = args.get_parse("replicas", opts.max_replicas)?;
+    opts.max_threads = args.get_parse("threads", opts.max_threads)?;
+    match args.get_or("family", "both") {
+        "both" => {}
+        "host" => opts.include_fpga = false,
+        "fpga" => opts.include_host = false,
+        other => bail!("unknown --family {other:?} (both|host|fpga)"),
+    }
+
+    let opt_f64 = |key: &str| -> Result<Option<f64>> {
+        match args.get(key) {
+            None => Ok(None),
+            Some(s) => Ok(Some(s.parse().map_err(|_| {
+                anyhow::anyhow!("--{key} {s:?} is not a number")
+            })?)),
+        }
+    };
+    let workload = Workload {
+        target_img_s: args.get_parse("target", 0.0f64)?,
+        p99_ms: opt_f64("p99")?,
+        power_budget_w: opt_f64("power-budget")?,
+        energy_budget_mj: opt_f64("energy-budget")?,
+    };
+
+    if args.flag("calibrate") {
+        let images: usize = args.get_parse("calibrate-images", 256usize)?;
+        eprintln!("calibrating host roofline on {name} ({images} images)...");
+        let rep = tune::calibrate_host(&cfg, images, seed)?;
+        eprintln!(
+            "calibrated: stream {:.1} GB/s, {:.1} GFLOP/s/thread \
+             (measured single {:.0} img/s, tile {:.0} img/s over {} images)",
+            rep.roofline.stream_bytes_s / 1e9,
+            rep.roofline.core_flops_s / 1e9,
+            rep.single_img_s,
+            rep.tile_img_s,
+            rep.images,
+        );
+        opts.calibration = rep.roofline;
+    }
+
+    let outcome = tune::tune(&cfg, &workload, &opts)?;
+    if let Some(out) = args.get("out") {
+        outcome.spec.save(std::path::Path::new(out))?;
+        eprintln!("deployment spec written to {out}");
+    }
+    if args.flag("json") {
+        println!("{}", outcome.to_json());
+    } else {
+        println!("{}", report::tune_table(&outcome));
     }
     Ok(())
 }

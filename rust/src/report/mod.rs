@@ -520,6 +520,141 @@ pub fn ascii_field(field: &[f64], side: usize) -> String {
     s
 }
 
+/// `repro tune` summary: the winning deployment point, the search
+/// counters, and the pure strategies the tuner had to beat.
+pub fn tune_table(out: &crate::tune::TuneOutcome) -> String {
+    use crate::config::BackendKind;
+
+    let spec = &out.spec;
+    let m = spec.modeled;
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Deployment autotuner — {} ({} build)\n",
+        spec.config,
+        spec.version.name()
+    ));
+    let w = &out.workload;
+    let fmt_bound = |v: Option<f64>, unit: &str| match v {
+        Some(b) => format!("{b} {unit}"),
+        None => "-".to_string(),
+    };
+    s.push_str(&format!(
+        "workload: target {:.0} img/s  p99 {}  power {}  energy {}\n",
+        w.target_img_s,
+        fmt_bound(w.p99_ms, "ms"),
+        fmt_bound(w.power_budget_w, "W"),
+        fmt_bound(w.energy_budget_mj, "mJ/img"),
+    ));
+    s.push_str(&format!(
+        "searched: {} candidates costed, {} pruned by bounds, {} feasible\n\n",
+        out.evaluated, out.pruned, out.feasible
+    ));
+    match spec.backend {
+        BackendKind::Host => s.push_str(&format!(
+            "winner: host tile engine — tile {} x {} thread(s), {} weights \
+             (roofline {:.1} GB/s, {:.1} GFLOP/s/thread)\n",
+            spec.tile,
+            spec.threads,
+            spec.precision.name(),
+            spec.calibration.stream_bytes_s / 1e9,
+            spec.calibration.core_flops_s / 1e9,
+        )),
+        BackendKind::Fpga => s.push_str(&format!(
+            "winner: FPGA fleet [{}] — {} replica(s) x {} device(s), {} weights, \
+             balance tol {:.0}%\n",
+            spec.fleet.as_ref().map(|f| f.devices.join(", ")).unwrap_or_default(),
+            spec.replicas,
+            spec.devices_per_replica.first().copied().unwrap_or(0),
+            spec.precision.name(),
+            spec.balance_tol * 100.0,
+        )),
+    }
+    s.push_str(&format!(
+        "modeled: {:.0} img/s  {:.3} ms/img  {:.1} W  {:.3} mJ/img\n",
+        m.throughput_img_s, m.latency_ms, m.power_w, m.energy_mj
+    ));
+    s.push_str("\nvs pure strategies (same pool):\n");
+    for b in &out.baselines {
+        match b.throughput_img_s {
+            Some(tp) => s.push_str(&format!(
+                "  {:<15} {:>10.0} img/s  ({:+.1}%)\n",
+                b.name,
+                tp,
+                100.0 * (m.throughput_img_s / tp - 1.0)
+            )),
+            None => s.push_str(&format!("  {:<15} infeasible/n-a\n", b.name)),
+        }
+    }
+    s
+}
+
+/// `repro plan --spec`: what a saved [`DeploymentSpec`] resolves to —
+/// the recorded axes and modeled point, plus (for FPGA specs) the
+/// per-replica placement rebuilt by the same planner the tuner ran.
+pub fn deployment_table(spec: &crate::config::DeploymentSpec) -> Result<String> {
+    use crate::config::BackendKind;
+
+    spec.validate()?;
+    let m = spec.modeled;
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Deployment spec — {} on the {} backend ({} build, {} weights)\n",
+        spec.config,
+        spec.backend.name(),
+        spec.version.name(),
+        spec.precision.name(),
+    ));
+    s.push_str(&format!(
+        "modeled: {:.0} img/s  {:.3} ms/img  {:.1} W  {:.3} mJ/img\n",
+        m.throughput_img_s, m.latency_ms, m.power_w, m.energy_mj
+    ));
+    match spec.backend {
+        BackendKind::Host => {
+            s.push_str(&format!(
+                "host tile engine: tile {} x {} thread(s); calibrated roofline \
+                 {:.1} GB/s stream, {:.1} GFLOP/s/thread\n",
+                spec.tile,
+                spec.threads,
+                spec.calibration.stream_bytes_s / 1e9,
+                spec.calibration.core_flops_s / 1e9,
+            ));
+        }
+        BackendKind::Fpga => {
+            s.push_str(&format!(
+                "fleet: [{}] as {} replica slice(s) of {:?} device(s)\n",
+                spec.fleet.as_ref().map(|f| f.devices.join(", ")).unwrap_or_default(),
+                spec.replicas,
+                spec.devices_per_replica,
+            ));
+            // Rebuild replica 0's placement with the recorded knobs;
+            // the tuner's uniform slices make every replica identical
+            // on homogeneous fleets.
+            let plans = crate::tune::plans_for_spec(spec)?;
+            let slice_models: Vec<String> = spec
+                .fleet
+                .as_ref()
+                .map(|f| f.devices[..spec.devices_per_replica[0]].to_vec())
+                .unwrap_or_default();
+            let slice = crate::config::FleetSpec { devices: slice_models };
+            s.push('\n');
+            s.push_str(&placement_table(
+                &[spec.config.as_str()],
+                &slice,
+                spec.version,
+                spec.balance_tol,
+            )?);
+            if plans.len() > 1 {
+                s.push_str(&format!(
+                    "(x{} replicas -> {:.0} img/s aggregate)\n",
+                    plans.len(),
+                    plans.iter().map(|p| p.throughput_img_s()).sum::<f64>(),
+                ));
+            }
+        }
+    }
+    Ok(s)
+}
+
 /// Config dump (one or all) as JSON.
 pub fn config_json(name: Option<&str>) -> Result<String> {
     match name {
@@ -630,6 +765,36 @@ mod tests {
         let mixed = crate::config::FleetSpec::parse("u55c,u280").unwrap();
         let t = placement_table(&["model2"], &mixed, KernelVersion::Infer, 0.25).unwrap();
         assert!(t.contains("Alveo U280"), "{t}");
+    }
+
+    #[test]
+    fn tune_and_deployment_tables_render() {
+        use crate::config::FleetSpec;
+        use crate::tune::{tune, TuneOptions, Workload};
+
+        let cfg = by_name("mnist-deep2").unwrap();
+        let out = tune(&cfg, &Workload::default(), &TuneOptions::quick()).unwrap();
+        let t = tune_table(&out);
+        assert!(t.contains("Deployment autotuner"), "{t}");
+        assert!(t.contains("hybrid-default"), "{t}");
+        assert!(t.contains("candidates costed"), "{t}");
+        let d = deployment_table(&out.spec).unwrap();
+        assert!(d.contains("Deployment spec"), "{d}");
+
+        // FPGA-family spec exercises the per-replica placement path.
+        let fpga = tune(
+            &cfg,
+            &Workload::default(),
+            &TuneOptions {
+                include_host: false,
+                fleet: FleetSpec::homogeneous("u55c", 2),
+                ..TuneOptions::default()
+            },
+        )
+        .unwrap();
+        let d = deployment_table(&fpga.spec).unwrap();
+        assert!(d.contains("fleet:"), "{d}");
+        assert!(d.contains("Hybrid placement"), "{d}");
     }
 
     #[test]

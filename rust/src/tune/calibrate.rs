@@ -1,0 +1,130 @@
+//! Measured host-roofline calibration (`repro tune --calibrate`).
+//!
+//! The modeled host constants (`timing::HOST_STREAM_BYTES_S` = 16 GB/s,
+//! `timing::HOST_CORE_FLOPS_S` = 48 GFLOP/s) describe a nominal
+//! machine; the actual build host can differ by 2-3x either way. Two
+//! short micro-benches pin them down the same way the roofline model
+//! uses them:
+//!
+//! - **single-image span loop** (`LayerGraph::infer_with`, tile width
+//!   1): each streamed weight feeds one mul+add, so the loop runs at
+//!   the memory wall — `stream_bytes_s = 4 bytes * macs / t_single`.
+//! - **AoSoA tile engine** (`LayerGraph::infer_batch`, tile width
+//!   `TILE`, one thread): the weight stream amortizes over `TILE`
+//!   lanes and the compute roof binds —
+//!   `core_flops_s = 2 * macs / t_tile`.
+//!
+//! Both fits are clamped to physically-plausible bands so a noisy
+//! 50 ms sample can never produce a roofline that makes the tuner
+//! promise nonsense. Calibration is *measured* and therefore not
+//! deterministic — `repro tune` without `--calibrate` stays
+//! byte-reproducible on the default constants.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::bcpnn::sparse::TILE;
+use crate::bcpnn::{LayerGraph, Workspace};
+use crate::config::ModelConfig;
+use crate::data::synth;
+use crate::fpga::timing::{stack_active_macs, HostRoofline};
+use crate::util::json::Json;
+
+/// Plausibility clamp for the fitted stream bandwidth (1-1000 GB/s).
+pub const STREAM_FIT_BAND: (f64, f64) = (1e9, 1e12);
+/// Plausibility clamp for the fitted per-thread FLOP rate
+/// (1-10000 GFLOP/s).
+pub const FLOPS_FIT_BAND: (f64, f64) = (1e9, 1e13);
+
+/// What a calibration pass measured and fitted.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibrationReport {
+    /// The fitted constants the tuner should model with.
+    pub roofline: HostRoofline,
+    /// Measured single-image span-loop throughput, images/s.
+    pub single_img_s: f64,
+    /// Measured one-thread tile-engine throughput, images/s.
+    pub tile_img_s: f64,
+    /// Images per timed pass.
+    pub images: usize,
+}
+
+impl CalibrationReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("roofline", self.roofline.to_json()),
+            ("single_img_s", Json::from(self.single_img_s)),
+            ("tile_img_s", Json::from(self.tile_img_s)),
+            ("images", Json::from(self.images)),
+        ])
+    }
+}
+
+/// Run the two micro-benches on `cfg` and fit a [`HostRoofline`].
+/// `images` is rounded up to a whole number of tiles; a warmup pass of
+/// each kernel runs untimed first.
+pub fn calibrate_host(cfg: &ModelConfig, images: usize, seed: u64) -> Result<CalibrationReport> {
+    let n = images.max(TILE).div_ceil(TILE) * TILE;
+    let g = LayerGraph::new(cfg.clone(), seed);
+    let data = synth::generate(cfg.img_side, cfg.n_classes, n, seed, 0.15);
+    let macs = stack_active_macs(cfg) as f64;
+
+    // Warmup: touch every weight span once through both engines.
+    let mut ws = Workspace::new();
+    let mut acc = 0.0f64;
+    for img in data.images.iter().take(TILE) {
+        acc += f64::from(g.infer_with(img, &mut ws).last().copied().unwrap_or(0.0));
+    }
+    acc += f64::from(
+        g.infer_batch(&data.images[..TILE]).last().and_then(|o| o.last().copied()).unwrap_or(0.0),
+    );
+
+    // Bandwidth probe: the tile-1 span loop.
+    let t0 = Instant::now();
+    for img in &data.images {
+        acc += f64::from(g.infer_with(img, &mut ws).last().copied().unwrap_or(0.0));
+    }
+    let t_single = t0.elapsed().as_secs_f64() / n as f64;
+
+    // Compute probe: the tile engine, one thread.
+    let t0 = Instant::now();
+    let outs = g.infer_batch(&data.images);
+    let t_tile = t0.elapsed().as_secs_f64() / n as f64;
+    acc += f64::from(outs.last().and_then(|o| o.last().copied()).unwrap_or(0.0));
+    // Keep the accumulator live so the optimizer cannot elide a probe.
+    std::hint::black_box(acc);
+
+    if !(t_single > 0.0 && t_tile > 0.0) {
+        bail!("calibration produced a non-positive sample (clock went backwards?)");
+    }
+    let roofline = HostRoofline {
+        stream_bytes_s: (4.0 * macs / t_single).clamp(STREAM_FIT_BAND.0, STREAM_FIT_BAND.1),
+        core_flops_s: (2.0 * macs / t_tile).clamp(FLOPS_FIT_BAND.0, FLOPS_FIT_BAND.1),
+    };
+    Ok(CalibrationReport {
+        roofline,
+        single_img_s: 1.0 / t_single,
+        tile_img_s: 1.0 / t_tile,
+        images: n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+
+    #[test]
+    fn calibration_fits_inside_the_clamp_bands() {
+        let cfg = by_name("tiny").unwrap();
+        let rep = calibrate_host(&cfg, 4, 42).unwrap();
+        assert_eq!(rep.images % TILE, 0);
+        assert!(rep.single_img_s > 0.0 && rep.tile_img_s > 0.0);
+        let r = rep.roofline;
+        assert!((STREAM_FIT_BAND.0..=STREAM_FIT_BAND.1).contains(&r.stream_bytes_s), "{r:?}");
+        assert!((FLOPS_FIT_BAND.0..=FLOPS_FIT_BAND.1).contains(&r.core_flops_s), "{r:?}");
+        let j = rep.to_json().to_string();
+        assert!(j.contains("stream_bytes_s"), "{j}");
+    }
+}

@@ -1,0 +1,759 @@
+//! Roofline-driven deployment autotuner (`repro tune`).
+//!
+//! Every ingredient of the paper's performance model is already in
+//! code — `plan_hybrid` stage/shard placement, per-device
+//! LUT/DSP/BRAM/HBM envelopes, the host tile roofline, the
+//! precision-aware power model — but the operator still hand-picks
+//! config, fleet, plan, tile/threads, replicas, and precision. This
+//! module closes that loop: search the full deployment space against a
+//! target workload and emit the throughput-maximal feasible point as a
+//! loadable [`DeploymentSpec`].
+//!
+//! **Search space.** Two families share one objective:
+//! - *FPGA*: replica slices of the fleet (`s` devices per replica x
+//!   `r` replicas, consecutive in fleet order), each slice placed by
+//!   `plan_hybrid` (which itself searches stage cuts x device
+//!   compositions x balanced HC shards), crossed with `QuantFormat`.
+//! - *Host*: the batched AoSoA tile engine — tile width x thread count
+//!   x `QuantFormat` — under the (optionally `--calibrate`-measured)
+//!   [`HostRoofline`].
+//!
+//! **Pruning** uses the monotone structure, not brute force:
+//! - [`envelope_min_devices`] rejects every fleet slice smaller than
+//!   the envelope lower bound without running the planner;
+//! - on homogeneous fleets the best bottleneck is monotone
+//!   non-increasing in slice size (tested in `tests/tune.rs`), so a
+//!   slice that did not improve on its predecessor dominates nothing
+//!   and its whole `(r, format)` subtree is skipped;
+//! - FPGA throughput is precision-independent, so the format axis
+//!   collapses to "widest format inside the power/energy budgets";
+//! - the host roofline is monotone in threads with a hard bandwidth
+//!   plateau: once another thread stops helping, the rest are skipped.
+//!
+//! **Determinism.** No RNG, `BTreeMap` memoization, fixed generation
+//! order, strictly-better replacement: two identical `tune` calls
+//! return byte-identical specs (CI-gated). Calibration is measured and
+//! therefore excluded from that guarantee.
+
+mod calibrate;
+
+pub use calibrate::{calibrate_host, CalibrationReport, FLOPS_FIT_BAND, STREAM_FIT_BAND};
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::bcpnn::sparse::TILE;
+use crate::bcpnn::QuantFormat;
+use crate::cluster::placement::{envelope_min_devices, plan_hybrid, Fleet, HybridPlan};
+use crate::config::{BackendKind, DeploymentSpec, FleetSpec, ModelConfig, ModeledPoint};
+use crate::fpga::device::KernelVersion;
+use crate::fpga::estimator::streamed_weight_bytes_per_img;
+use crate::fpga::power::{utilization_power_watts, E_HBM_J_PER_BYTE, P_STATIC_W};
+use crate::fpga::timing::HostRoofline;
+use crate::util::json::Json;
+
+/// Modeled idle draw of the host serving box, watts.
+pub const HOST_IDLE_W: f64 = 35.0;
+/// Modeled incremental draw per busy host thread, watts.
+pub const HOST_CORE_W: f64 = 15.0;
+
+/// Constraint names, in binding-priority order — error messages and
+/// the infeasibility report use exactly these strings.
+pub const CONSTRAINT_NAMES: [&str; 4] =
+    ["target throughput", "p99 latency bound", "power budget", "energy budget"];
+
+/// What the deployment must achieve. `target_img_s = 0` plus all-None
+/// bounds means "just maximize throughput".
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Workload {
+    /// Required aggregate throughput, images/s.
+    pub target_img_s: f64,
+    /// Upper bound on modeled per-image service latency, ms. (The
+    /// model has no queueing term; this bounds the p99 floor.)
+    pub p99_ms: Option<f64>,
+    /// Upper bound on total deployment power, watts.
+    pub power_budget_w: Option<f64>,
+    /// Upper bound on energy per image, millijoules.
+    pub energy_budget_mj: Option<f64>,
+}
+
+impl Workload {
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::from).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("target_img_s", Json::from(self.target_img_s)),
+            ("p99_ms", opt(self.p99_ms)),
+            ("power_budget_w", opt(self.power_budget_w)),
+            ("energy_budget_mj", opt(self.energy_budget_mj)),
+        ])
+    }
+
+    /// Constraints `m` violates, in [`CONSTRAINT_NAMES`] order.
+    pub fn violations(&self, m: &ModeledPoint) -> Vec<&'static str> {
+        let mut v = Vec::new();
+        if m.throughput_img_s < self.target_img_s * (1.0 - 1e-9) {
+            v.push(CONSTRAINT_NAMES[0]);
+        }
+        if self.p99_ms.is_some_and(|b| m.latency_ms > b * (1.0 + 1e-9)) {
+            v.push(CONSTRAINT_NAMES[1]);
+        }
+        if self.power_budget_w.is_some_and(|b| m.power_w > b * (1.0 + 1e-9)) {
+            v.push(CONSTRAINT_NAMES[2]);
+        }
+        if self.energy_budget_mj.is_some_and(|b| m.energy_mj > b * (1.0 + 1e-9)) {
+            v.push(CONSTRAINT_NAMES[3]);
+        }
+        v
+    }
+}
+
+/// Search-space knobs.
+#[derive(Debug, Clone)]
+pub struct TuneOptions {
+    /// Device pool for the FPGA family (replica slices are consecutive
+    /// prefixes of it; surplus devices stay out of the deployment).
+    pub fleet: FleetSpec,
+    pub version: KernelVersion,
+    /// Shard-balance tolerance handed to `plan_hybrid`.
+    pub balance_tol: f64,
+    /// Replica-count ceiling for the FPGA family.
+    pub max_replicas: usize,
+    /// Thread-count ceiling for the host family.
+    pub max_threads: usize,
+    /// Formats to consider, widest first — on the FPGA family ties
+    /// resolve to the earliest entry inside the budgets.
+    pub formats: Vec<QuantFormat>,
+    pub include_host: bool,
+    pub include_fpga: bool,
+    /// Host roofline the host family models with (measured under
+    /// `--calibrate`, defaults otherwise).
+    pub calibration: HostRoofline,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions {
+            fleet: FleetSpec::homogeneous("u55c", 3),
+            version: KernelVersion::Infer,
+            balance_tol: 0.10,
+            max_replicas: 4,
+            max_threads: 8,
+            formats: QuantFormat::ALL.to_vec(),
+            include_host: true,
+            include_fpga: true,
+            calibration: HostRoofline::default(),
+        }
+    }
+}
+
+impl TuneOptions {
+    /// CI-smoke-sized search (`repro tune --quick`).
+    pub fn quick() -> TuneOptions {
+        TuneOptions { max_replicas: 2, max_threads: 4, ..TuneOptions::default() }
+    }
+}
+
+/// A modeled pure strategy the tuner subsumes, for the "never worse"
+/// CI gate. `None` throughput = that strategy is inapplicable or
+/// infeasible here (e.g. pure HC sharding of a stacked config).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Baseline {
+    pub name: &'static str,
+    pub throughput_img_s: Option<f64>,
+}
+
+/// The search result: the winning spec plus audit counters.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    pub spec: DeploymentSpec,
+    pub workload: Workload,
+    /// Candidates fully costed.
+    pub evaluated: usize,
+    /// Candidates skipped by a monotonicity/envelope/dominance bound.
+    pub pruned: usize,
+    /// Costed candidates meeting every constraint.
+    pub feasible: usize,
+    pub baselines: Vec<Baseline>,
+}
+
+impl TuneOutcome {
+    pub fn to_json(&self) -> Json {
+        let baselines = Json::obj(
+            self.baselines
+                .iter()
+                .map(|b| {
+                    (b.name, b.throughput_img_s.map(Json::from).unwrap_or(Json::Null))
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("config", Json::from(self.spec.config.as_str())),
+            ("workload", self.workload.to_json()),
+            ("evaluated", Json::from(self.evaluated)),
+            ("pruned", Json::from(self.pruned)),
+            ("feasible", Json::from(self.feasible)),
+            ("spec", self.spec.to_json()),
+            ("baselines", baselines),
+        ])
+    }
+}
+
+/// Static + per-kernel dynamic draw of one replica's plan, before the
+/// precision credit. Idle slice devices still burn shell power —
+/// wasteful slices pay for it in the energy objective.
+fn plan_base_power_w(plan: &HybridPlan) -> f64 {
+    let static_w = P_STATIC_W * plan.fleet.len() as f64;
+    let dyn_w: f64 = plan
+        .stages
+        .iter()
+        .flat_map(|st| st.pieces.iter())
+        .map(|p| utilization_power_watts(&p.util) - P_STATIC_W)
+        .sum();
+    static_w + dyn_w
+}
+
+/// `a` strictly better than `b`: throughput first (relative 1e-9 tie
+/// band), then fewer devices, fewer replicas, fewer threads, lower
+/// energy. Strict, so the first-generated of true ties wins —
+/// generation order is fixed, keeping the search deterministic.
+fn better(a: &DeploymentSpec, b: &DeploymentSpec) -> bool {
+    let (ta, tb) = (a.modeled.throughput_img_s, b.modeled.throughput_img_s);
+    if ta > tb * (1.0 + 1e-9) {
+        return true;
+    }
+    if ta < tb * (1.0 - 1e-9) {
+        return false;
+    }
+    let (da, db) = (
+        a.fleet.as_ref().map_or(0, FleetSpec::len),
+        b.fleet.as_ref().map_or(0, FleetSpec::len),
+    );
+    if da != db {
+        return da < db;
+    }
+    if a.replicas != b.replicas {
+        return a.replicas < b.replicas;
+    }
+    if a.threads != b.threads {
+        return a.threads < b.threads;
+    }
+    a.modeled.energy_mj < b.modeled.energy_mj * (1.0 - 1e-9)
+}
+
+/// Plan one consecutive `len`-device slice starting at `offset`,
+/// memoized (`None` = planner found the slice infeasible; the error
+/// text lands in `plan_err`).
+#[allow(clippy::too_many_arguments)]
+fn plan_slice(
+    memo: &mut BTreeMap<(usize, usize), Option<HybridPlan>>,
+    plan_err: &mut Option<String>,
+    cfg: &ModelConfig,
+    fleet: &Fleet,
+    version: KernelVersion,
+    tol: f64,
+    offset: usize,
+    len: usize,
+) -> Option<HybridPlan> {
+    if let Some(cached) = memo.get(&(offset, len)) {
+        return cached.clone();
+    }
+    let slice = Fleet { devices: fleet.devices[offset..offset + len].to_vec() };
+    let planned = match plan_hybrid(cfg, &slice, version, tol) {
+        Ok(p) => Some(p),
+        Err(e) => {
+            *plan_err = Some(format!("{e:#}"));
+            None
+        }
+    };
+    memo.insert((offset, len), planned.clone());
+    planned
+}
+
+/// Pure strategies on the same pool, for the outcome report and the
+/// CI "tuner never worse" gate. Meaningful on homogeneous fleets
+/// (each uses the pool's first device model).
+pub fn baselines(
+    cfg: &ModelConfig, fleet: &Fleet, version: KernelVersion,
+) -> Vec<Baseline> {
+    let n_dev = fleet.len();
+    let dev0 = &fleet.devices[0];
+    let tp = |p: HybridPlan| p.throughput_img_s();
+    let shard = if cfg.n_layers() == 1 {
+        crate::cluster::placement::pure_shard(cfg, n_dev.min(cfg.hc_h), version, dev0)
+            .ok()
+            .map(tp)
+    } else {
+        None
+    };
+    let pipe = if cfg.n_layers() <= n_dev {
+        crate::cluster::placement::pure_pipeline(cfg, version, dev0).ok().map(tp)
+    } else {
+        None
+    };
+    let hybrid = plan_hybrid(cfg, fleet, version, crate::cluster::DEFAULT_BALANCE_TOL)
+        .ok()
+        .map(tp);
+    vec![
+        Baseline { name: "pure-pipeline", throughput_img_s: pipe },
+        Baseline { name: "pure-shard", throughput_img_s: shard },
+        Baseline { name: "hybrid-default", throughput_img_s: hybrid },
+    ]
+}
+
+/// Rebuild the per-replica `plan_hybrid` placements an FPGA spec
+/// deploys — `repro serve --spec` / `repro plan --spec` execute these.
+/// Deterministic planner + recorded fleet/tol = the same plans the
+/// tuner modeled.
+pub fn plans_for_spec(spec: &DeploymentSpec) -> Result<Vec<HybridPlan>> {
+    if spec.backend != BackendKind::Fpga {
+        bail!("deployment spec for {} is a host deployment — no FPGA plans", spec.config);
+    }
+    spec.validate()?;
+    let cfg = crate::config::by_name(&spec.config)?;
+    let fleet = Fleet::resolve(spec.fleet.as_ref().expect("validated fpga spec has a fleet"))?;
+    let mut plans = Vec::with_capacity(spec.replicas);
+    let mut offset = 0usize;
+    for &len in &spec.devices_per_replica {
+        let slice = Fleet { devices: fleet.devices[offset..offset + len].to_vec() };
+        plans.push(plan_hybrid(&cfg, &slice, spec.version, spec.balance_tol)?);
+        offset += len;
+    }
+    Ok(plans)
+}
+
+/// Search the deployment space of `cfg` and return the
+/// throughput-maximal point satisfying `workload`, or an error naming
+/// the binding constraint.
+pub fn tune(cfg: &ModelConfig, workload: &Workload, opts: &TuneOptions) -> Result<TuneOutcome> {
+    cfg.validate()?;
+    if !opts.include_fpga && !opts.include_host {
+        bail!("tune: both deployment families disabled — nothing to search");
+    }
+    if opts.formats.is_empty() {
+        bail!("tune: empty format list");
+    }
+    if opts.max_replicas == 0 || opts.max_threads == 0 {
+        bail!("tune: max_replicas and max_threads must be >= 1");
+    }
+
+    let mut evaluated = 0usize;
+    let mut pruned = 0usize;
+    let mut feasible = 0usize;
+    let mut winner: Option<DeploymentSpec> = None;
+    // For the infeasibility report: constraints seen as a candidate's
+    // *sole* violation, and the best-throughput candidate overall.
+    let mut sole_violations: Vec<&'static str> = Vec::new();
+    let mut best_infeasible: Option<(DeploymentSpec, Vec<&'static str>)> = None;
+    let mut family_errors: Vec<String> = Vec::new();
+
+    let mut consider = |spec: DeploymentSpec,
+                        feasible: &mut usize,
+                        winner: &mut Option<DeploymentSpec>| {
+        let v = workload.violations(&spec.modeled);
+        if v.is_empty() {
+            *feasible += 1;
+            let replace = match winner {
+                None => true,
+                Some(w) => better(&spec, w),
+            };
+            if replace {
+                *winner = Some(spec);
+            }
+        } else {
+            if v.len() == 1 && !sole_violations.contains(&v[0]) {
+                sole_violations.push(v[0]);
+            }
+            let replace = match &best_infeasible {
+                None => true,
+                Some((b, _)) => spec.modeled.throughput_img_s > b.modeled.throughput_img_s,
+            };
+            if replace {
+                best_infeasible = Some((spec, v));
+            }
+        }
+    };
+
+    // ------------------------------------------------- FPGA family
+    let mut fpga_baselines: Vec<Baseline> = Vec::new();
+    if opts.include_fpga && !opts.fleet.is_empty() {
+        let fleet = Fleet::resolve(&opts.fleet)?;
+        let n_dev = fleet.len();
+        let homogeneous = opts.fleet.devices.windows(2).all(|w| w[0] == w[1]);
+        fpga_baselines = baselines(cfg, &fleet, opts.version);
+        // Envelope lower bound: slices below it cannot place the model
+        // at all — prune the whole (replicas x formats) subtree per
+        // skipped size.
+        let lb = if homogeneous {
+            match envelope_min_devices(cfg, opts.version, &fleet.devices[0]) {
+                Ok(l) => l,
+                Err(e) => {
+                    family_errors.push(format!("{e:#}"));
+                    n_dev + 1 // nothing to search in this family
+                }
+            }
+        } else {
+            1
+        };
+        let mut memo: BTreeMap<(usize, usize), Option<HybridPlan>> = BTreeMap::new();
+        let mut plan_err: Option<String> = None;
+        let mut prev_bottleneck: Option<f64> = None;
+        for s in 1..=n_dev {
+            let max_r = opts.max_replicas.min(n_dev / s);
+            if s < lb {
+                pruned += max_r * opts.formats.len();
+                continue;
+            }
+            let replica_plans: Vec<Vec<HybridPlan>> = if homogeneous {
+                match plan_slice(
+                    &mut memo, &mut plan_err, cfg, &fleet, opts.version, opts.balance_tol, 0, s,
+                ) {
+                    None => continue,
+                    Some(plan) => {
+                        let b = plan.bottleneck_s();
+                        if let Some(pb) = prev_bottleneck {
+                            if b > pb * (1.0 - 1e-9) {
+                                // The extra device bought no bottleneck
+                                // improvement: every (s, r) candidate is
+                                // dominated by (s-1, r) — same throughput,
+                                // fewer devices. Skip the subtree.
+                                pruned += max_r * opts.formats.len();
+                                continue;
+                            }
+                        }
+                        prev_bottleneck = Some(b);
+                        (1..=max_r).map(|r| vec![plan.clone(); r]).collect()
+                    }
+                }
+            } else {
+                // Mixed fleet: each consecutive slice plans on its own
+                // devices; a replica set exists only if every slice fits.
+                (1..=max_r)
+                    .filter_map(|r| {
+                        (0..r)
+                            .map(|b| {
+                                plan_slice(
+                                    &mut memo,
+                                    &mut plan_err,
+                                    cfg,
+                                    &fleet,
+                                    opts.version,
+                                    opts.balance_tol,
+                                    b * s,
+                                    s,
+                                )
+                            })
+                            .collect::<Option<Vec<_>>>()
+                    })
+                    .collect()
+            };
+            for plans in replica_plans {
+                let r = plans.len();
+                let tp: f64 = plans.iter().map(HybridPlan::throughput_img_s).sum();
+                let latency_ms =
+                    plans.iter().map(HybridPlan::latency_s).fold(0.0, f64::max) * 1e3;
+                let base_power: f64 = plans.iter().map(plan_base_power_w).sum();
+                let f32_bytes = streamed_weight_bytes_per_img(cfg, QuantFormat::F32);
+                // Precision axis: plan latency/throughput are
+                // format-independent on the device, so the axis
+                // collapses to "widest format whose power/energy fit
+                // the budgets"; later formats are dominated and pruned.
+                for (fi, &fmt) in opts.formats.iter().enumerate() {
+                    evaluated += 1;
+                    let saved =
+                        f32_bytes.saturating_sub(streamed_weight_bytes_per_img(cfg, fmt)) as f64;
+                    let power_w = (base_power - E_HBM_J_PER_BYTE * saved * tp).max(0.0);
+                    let energy_mj = power_w / tp.max(1e-15) * 1e3;
+                    let in_budget = !workload
+                        .power_budget_w
+                        .is_some_and(|b| power_w > b * (1.0 + 1e-9))
+                        && !workload
+                            .energy_budget_mj
+                            .is_some_and(|b| energy_mj > b * (1.0 + 1e-9));
+                    let last = fi == opts.formats.len() - 1;
+                    if !in_budget && !last {
+                        continue;
+                    }
+                    let spec = DeploymentSpec {
+                        config: cfg.name.clone(),
+                        backend: BackendKind::Fpga,
+                        version: opts.version,
+                        precision: fmt,
+                        threads: 0,
+                        tile: 0,
+                        replicas: r,
+                        fleet: Some(FleetSpec {
+                            devices: opts.fleet.devices[..r * s].to_vec(),
+                        }),
+                        devices_per_replica: vec![s; r],
+                        balance_tol: opts.balance_tol,
+                        calibration: opts.calibration,
+                        modeled: ModeledPoint {
+                            throughput_img_s: tp,
+                            latency_ms,
+                            power_w,
+                            energy_mj,
+                        },
+                    };
+                    consider(spec, &mut feasible, &mut winner);
+                    if in_budget {
+                        pruned += opts.formats.len() - 1 - fi;
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(e) = plan_err {
+            family_errors.push(e);
+        }
+    }
+
+    // ------------------------------------------------- host family
+    if opts.include_host {
+        for &fmt in &opts.formats {
+            // Wider tile first: on throughput ties (compute-bound both
+            // ways) the real engine's tile width wins.
+            for tile in [TILE, 1usize] {
+                let mut prev: Option<f64> = None;
+                for threads in 1..=opts.max_threads {
+                    let img_s =
+                        opts.calibration.img_s(cfg, tile, threads, fmt.bytes_per_weight());
+                    if prev.is_some_and(|p| img_s <= p * (1.0 + 1e-12)) {
+                        // Bandwidth plateau: the roofline is monotone in
+                        // threads, so no further count can help either.
+                        pruned += opts.max_threads - threads + 1;
+                        break;
+                    }
+                    prev = Some(img_s);
+                    evaluated += 1;
+                    let power_w = HOST_IDLE_W + HOST_CORE_W * threads as f64;
+                    let spec = DeploymentSpec {
+                        config: cfg.name.clone(),
+                        backend: BackendKind::Host,
+                        version: opts.version,
+                        precision: fmt,
+                        threads,
+                        tile,
+                        replicas: 1,
+                        fleet: None,
+                        devices_per_replica: Vec::new(),
+                        balance_tol: opts.balance_tol,
+                        calibration: opts.calibration,
+                        modeled: ModeledPoint {
+                            throughput_img_s: img_s,
+                            latency_ms: tile as f64 / img_s * 1e3,
+                            power_w,
+                            energy_mj: power_w / img_s * 1e3,
+                        },
+                    };
+                    consider(spec, &mut feasible, &mut winner);
+                }
+            }
+        }
+    }
+
+    match winner {
+        Some(spec) => Ok(TuneOutcome {
+            spec,
+            workload: *workload,
+            evaluated,
+            pruned,
+            feasible,
+            baselines: fpga_baselines,
+        }),
+        None => match best_infeasible {
+            Some((best, violations)) => {
+                // Binding constraint: the highest-priority constraint
+                // some candidate violated *alone* (relaxing it alone
+                // would admit that candidate); if every candidate
+                // violates several, the best candidate's first.
+                let binding = CONSTRAINT_NAMES
+                    .iter()
+                    .find(|c| sole_violations.contains(*c))
+                    .copied()
+                    .unwrap_or(violations[0]);
+                let m = best.modeled;
+                bail!(
+                    "{}: no feasible deployment: binding constraint: {binding} \
+                     (best candidate reached {:.1} img/s at {:.3} ms, {:.1} W, \
+                     {:.3} mJ/img against target {:.1} img/s{}{}{})",
+                    cfg.name,
+                    m.throughput_img_s,
+                    m.latency_ms,
+                    m.power_w,
+                    m.energy_mj,
+                    workload.target_img_s,
+                    workload
+                        .p99_ms
+                        .map(|b| format!(", p99 <= {b} ms"))
+                        .unwrap_or_default(),
+                    workload
+                        .power_budget_w
+                        .map(|b| format!(", power <= {b} W"))
+                        .unwrap_or_default(),
+                    workload
+                        .energy_budget_mj
+                        .map(|b| format!(", energy <= {b} mJ"))
+                        .unwrap_or_default(),
+                )
+            }
+            None => bail!(
+                "{}: no deployment candidate could be modeled at all{}",
+                cfg.name,
+                if family_errors.is_empty() {
+                    String::new()
+                } else {
+                    format!(" ({})", family_errors.join("; "))
+                }
+            ),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+
+    fn fpga_only(fleet: FleetSpec) -> TuneOptions {
+        TuneOptions { fleet, include_host: false, ..TuneOptions::default() }
+    }
+
+    #[test]
+    fn unconstrained_tune_finds_a_winner_every_config() {
+        for (name, cfg) in crate::config::registry() {
+            let out = tune(&cfg, &Workload::default(), &TuneOptions::quick()).unwrap();
+            assert!(out.feasible > 0, "{name}");
+            assert!(out.spec.modeled.throughput_img_s > 0.0, "{name}");
+            assert!(out.evaluated > 0, "{name}");
+            out.spec.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn tuner_never_worse_than_subsumed_strategies() {
+        for (name, cfg) in crate::config::registry() {
+            let out = tune(&cfg, &Workload::default(), &TuneOptions::default()).unwrap();
+            let tp = out.spec.modeled.throughput_img_s;
+            for b in &out.baselines {
+                if let Some(base) = b.throughput_img_s {
+                    assert!(
+                        tp >= base * (1.0 - 1e-9),
+                        "{name}: tuner {tp} img/s below {} {base} img/s",
+                        b.name
+                    );
+                }
+            }
+            // The default hybrid plan is literally in the search space,
+            // so it must always be present as a floor.
+            assert!(
+                out.baselines.iter().any(|b| b.name == "hybrid-default"
+                    && b.throughput_img_s.is_some()),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn fpga_family_prunes_part_of_the_space() {
+        let cfg = by_name("mnist-deep2").unwrap();
+        let out = tune(
+            &cfg,
+            &Workload::default(),
+            &fpga_only(FleetSpec::homogeneous("u55c", 4)),
+        )
+        .unwrap();
+        assert!(out.pruned > 0, "search did no pruning: {out:?}");
+    }
+
+    #[test]
+    fn infeasible_power_budget_names_the_binding_constraint() {
+        let cfg = by_name("model1").unwrap();
+        let w = Workload { power_budget_w: Some(1.0), ..Workload::default() };
+        let err = tune(&cfg, &w, &TuneOptions::default()).unwrap_err().to_string();
+        assert!(err.contains("binding constraint: power budget"), "{err}");
+    }
+
+    #[test]
+    fn unreachable_target_names_throughput() {
+        let cfg = by_name("model1").unwrap();
+        let w = Workload { target_img_s: 1e12, ..Workload::default() };
+        let err = tune(&cfg, &w, &TuneOptions::default()).unwrap_err().to_string();
+        assert!(err.contains("binding constraint: target throughput"), "{err}");
+    }
+
+    #[test]
+    fn energy_budget_flips_the_precision() {
+        // FPGA throughput is precision-independent, so unconstrained
+        // the tuner keeps the widest format; an energy budget between
+        // the f32 and int8 operating points must flip it narrow.
+        let cfg = by_name("model1").unwrap();
+        let opts = fpga_only(FleetSpec::homogeneous("u55c", 1));
+        let free = tune(&cfg, &Workload::default(), &opts).unwrap();
+        assert_eq!(free.spec.precision, QuantFormat::F32);
+        let int8_only = tune(
+            &cfg,
+            &Workload::default(),
+            &TuneOptions { formats: vec![QuantFormat::Int8], ..opts.clone() },
+        )
+        .unwrap();
+        let (e_wide, e_narrow) =
+            (free.spec.modeled.energy_mj, int8_only.spec.modeled.energy_mj);
+        assert!(e_narrow < e_wide, "{e_narrow} vs {e_wide}");
+        let budget = 0.5 * (e_wide + e_narrow);
+        let pinched = tune(
+            &cfg,
+            &Workload { energy_budget_mj: Some(budget), ..Workload::default() },
+            &opts,
+        )
+        .unwrap();
+        assert!(pinched.spec.precision != QuantFormat::F32, "{:?}", pinched.spec);
+        assert!(pinched.spec.modeled.energy_mj <= budget * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn spec_plans_rebuild_the_modeled_point() {
+        let cfg = by_name("mnist-deep2").unwrap();
+        let out = tune(
+            &cfg,
+            &Workload::default(),
+            &fpga_only(FleetSpec::homogeneous("u55c", 2)),
+        )
+        .unwrap();
+        let plans = plans_for_spec(&out.spec).unwrap();
+        assert_eq!(plans.len(), out.spec.replicas);
+        let tp: f64 = plans.iter().map(HybridPlan::throughput_img_s).sum();
+        let rel = (tp - out.spec.modeled.throughput_img_s).abs()
+            / out.spec.modeled.throughput_img_s;
+        assert!(rel < 1e-9, "{tp} vs {}", out.spec.modeled.throughput_img_s);
+    }
+
+    #[test]
+    fn host_candidates_respect_the_calibrated_roofline() {
+        // A machine measured 2x faster must model >= throughput and
+        // win by at least as much.
+        let cfg = by_name("mnist-deep2").unwrap();
+        let base = TuneOptions {
+            include_fpga: false,
+            fleet: FleetSpec::homogeneous("u55c", 1),
+            ..TuneOptions::default()
+        };
+        let slow = tune(&cfg, &Workload::default(), &base).unwrap();
+        let fast = tune(
+            &cfg,
+            &Workload::default(),
+            &TuneOptions {
+                calibration: HostRoofline { stream_bytes_s: 32e9, core_flops_s: 96e9 },
+                ..base.clone()
+            },
+        )
+        .unwrap();
+        assert!(
+            fast.spec.modeled.throughput_img_s > slow.spec.modeled.throughput_img_s,
+            "{} vs {}",
+            fast.spec.modeled.throughput_img_s,
+            slow.spec.modeled.throughput_img_s
+        );
+        assert_eq!(fast.spec.calibration.stream_bytes_s, 32e9);
+    }
+}

@@ -1,0 +1,248 @@
+//! Autotuner system tests (DESIGN.md §9):
+//!
+//! - the monotone structure the pruning relies on: `plan_hybrid`'s
+//!   best bottleneck never gets worse when a homogeneous fleet grows
+//!   by one device;
+//! - determinism: two identical `tune` runs emit byte-identical
+//!   outcome JSON (and byte-identical saved specs);
+//! - the CI-gated "never worse" invariant: for every registry config
+//!   the winner's modeled throughput is >= every pure strategy the
+//!   search subsumes (pure pipeline, pure shard, default hybrid);
+//! - infeasible workloads fail with the binding constraint named;
+//! - spec round-trips: tune -> save -> load -> identical spec, and
+//!   spec -> serve -> report with the spec's threads / precision /
+//!   replica topology actually in effect.
+
+use std::time::Duration;
+
+use bcpnn_accel::bcpnn::{LayerGraph, QuantFormat};
+use bcpnn_accel::cluster::{plan_hybrid, ClusterConfig, ClusterServer, Fleet};
+use bcpnn_accel::config::{by_name, registry, BackendKind, DeploymentSpec, FleetSpec};
+use bcpnn_accel::coordinator::{GraphBackend, InferenceServer, ServerConfig};
+use bcpnn_accel::data::synth;
+use bcpnn_accel::fpga::device::{FpgaDevice, KernelVersion};
+use bcpnn_accel::tune::{plans_for_spec, tune, TuneOptions, Workload};
+
+#[test]
+fn hybrid_bottleneck_monotone_in_fleet_size() {
+    // The tuner's dominance prune assumes: on a homogeneous fleet,
+    // adding a device never increases the best bottleneck (the planner
+    // can always leave the new device idle). Verified across the
+    // registry's shapes, all kernel versions, up to 6 devices.
+    let dev = FpgaDevice::u55c();
+    for name in ["tiny", "model1", "mnist-deep2", "toy-deep"] {
+        let cfg = by_name(name).unwrap();
+        for version in KernelVersion::all() {
+            let mut prev: Option<f64> = None;
+            for n in 1..=6usize {
+                let fleet = Fleet::homogeneous(&dev, n);
+                match plan_hybrid(&cfg, &fleet, version, 0.10) {
+                    Ok(plan) => {
+                        let b = plan.bottleneck_s();
+                        if let Some(p) = prev {
+                            // 1e-8 band: plan_hybrid keeps the incumbent
+                            // unless a candidate improves by > 1e-9 rel.
+                            assert!(
+                                b <= p * (1.0 + 1e-8),
+                                "{name}/{}: bottleneck rose {p} -> {b} at {n} devices",
+                                version.name()
+                            );
+                        }
+                        prev = Some(b);
+                    }
+                    Err(e) => assert!(
+                        prev.is_none(),
+                        "{name}/{}: feasible at {} devices but not {n}: {e:#}",
+                        version.name(),
+                        n - 1
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tune_is_deterministic() {
+    // No RNG, BTreeMap memoization, fixed generation order: the same
+    // inputs must produce byte-identical outcome JSON. (--calibrate is
+    // measured and intentionally outside this guarantee.)
+    let cfg = by_name("mnist-deep2").unwrap();
+    let w = Workload { target_img_s: 100.0, ..Workload::default() };
+    let opts = TuneOptions::default();
+    let a = tune(&cfg, &w, &opts).unwrap();
+    let b = tune(&cfg, &w, &opts).unwrap();
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    assert_eq!(a.spec, b.spec);
+}
+
+#[test]
+fn tuner_beats_every_pure_strategy_registry_wide() {
+    // The CI-gated invariant: the full-fleet single-replica candidate
+    // is plan_hybrid's own search space, so the tuner can never fall
+    // below pure pipeline, pure shard, or the default hybrid plan.
+    for (name, cfg) in registry() {
+        let out = tune(&cfg, &Workload::default(), &TuneOptions::default()).unwrap();
+        let tp = out.spec.modeled.throughput_img_s;
+        for b in &out.baselines {
+            if let Some(base) = b.throughput_img_s {
+                assert!(
+                    tp >= base * (1.0 - 1e-9),
+                    "{name}: winner {tp:.0} img/s < {} {base:.0} img/s",
+                    b.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn infeasible_budgets_name_the_binding_constraint() {
+    let cfg = by_name("model1").unwrap();
+    let e = tune(
+        &cfg,
+        &Workload { power_budget_w: Some(0.5), ..Workload::default() },
+        &TuneOptions::default(),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("binding constraint: power budget"), "{e}");
+
+    let e = tune(
+        &cfg,
+        &Workload { target_img_s: 1e15, ..Workload::default() },
+        &TuneOptions::default(),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("binding constraint: target throughput"), "{e}");
+
+    let e = tune(
+        &cfg,
+        &Workload { p99_ms: Some(1e-9), ..Workload::default() },
+        &TuneOptions::default(),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("binding constraint: p99 latency bound"), "{e}");
+}
+
+#[test]
+fn winning_spec_saves_and_loads_byte_identical() {
+    let cfg = by_name("mnist-deep2").unwrap();
+    let out = tune(&cfg, &Workload::default(), &TuneOptions::quick()).unwrap();
+    let path = std::env::temp_dir().join("bcpnn_tune_roundtrip_spec.json");
+    out.spec.save(&path).unwrap();
+    let back = DeploymentSpec::load(&path).unwrap();
+    assert_eq!(back, out.spec);
+    assert_eq!(back.to_json().to_string(), out.spec.to_json().to_string());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn host_spec_serves_with_its_threads_and_precision() {
+    // spec -> serve -> report round-trip, host family: the server must
+    // actually run with the spec's thread count and weight store.
+    let cfg = by_name("tiny").unwrap();
+    let out = tune(
+        &cfg,
+        &Workload::default(),
+        &TuneOptions { include_fpga: false, ..TuneOptions::quick() },
+    )
+    .unwrap();
+    let spec = out.spec.clone();
+    assert_eq!(spec.backend, BackendKind::Host);
+    assert!(spec.threads >= 1 && spec.tile >= 1);
+
+    let (threads, precision) = (spec.threads, spec.precision);
+    let cfg_worker = cfg.clone();
+    let server = InferenceServer::start(
+        move || {
+            let mut graph = LayerGraph::new(cfg_worker, 42);
+            if precision != QuantFormat::F32 {
+                graph.set_precision(precision);
+            }
+            Ok(GraphBackend::new(graph, threads))
+        },
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let data = synth::generate(cfg.img_side, cfg.n_classes, 24, 42, 0.15);
+    let pending: Vec<_> =
+        data.images.iter().map(|img| server.submit(img.clone()).unwrap()).collect();
+    for rx in &pending {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let rep = server.shutdown();
+    assert_eq!(rep.served, 24);
+    assert_eq!(rep.threads, spec.threads);
+    assert_eq!(rep.precision, spec.precision);
+}
+
+#[test]
+fn fpga_spec_serves_with_its_replica_topology() {
+    // spec -> serve -> report round-trip, FPGA family: the rebuilt
+    // per-replica plans drive a ClusterServer with the spec's replica
+    // count, and every device the spec names is covered by the slices.
+    let cfg = by_name("mnist-deep2").unwrap();
+    let out = tune(
+        &cfg,
+        &Workload::default(),
+        &TuneOptions {
+            include_host: false,
+            fleet: FleetSpec::homogeneous("u55c", 2),
+            max_replicas: 2,
+            ..TuneOptions::default()
+        },
+    )
+    .unwrap();
+    let spec = out.spec.clone();
+    assert_eq!(spec.backend, BackendKind::Fpga);
+    let fleet_len = spec.fleet.as_ref().unwrap().len();
+    assert_eq!(spec.devices_per_replica.iter().sum::<usize>(), fleet_len);
+
+    let plans = plans_for_spec(&spec).unwrap();
+    assert_eq!(plans.len(), spec.replicas);
+    let modeled: f64 = plans.iter().map(|p| p.throughput_img_s()).sum();
+    let rel = (modeled - spec.modeled.throughput_img_s).abs() / modeled;
+    assert!(rel < 1e-9, "rebuilt plans model {modeled}, spec says {}", spec.modeled.throughput_img_s);
+
+    let ccfg = ClusterConfig { replicas: spec.replicas, ..ClusterConfig::default() };
+    let server =
+        ClusterServer::start_hybrid(LayerGraph::new(cfg.clone(), 42), &plans[0], ccfg).unwrap();
+    let data = synth::generate(cfg.img_side, cfg.n_classes, 16, 42, 0.15);
+    let pending: Vec<_> =
+        data.images.iter().map(|img| server.submit(img.clone()).unwrap()).collect();
+    for rx in &pending {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let rep = server.shutdown();
+    assert_eq!(rep.served, 16);
+    assert_eq!(rep.replicas.len(), spec.replicas);
+}
+
+#[test]
+fn tighter_budgets_never_raise_throughput() {
+    // Sanity on the objective: adding a constraint can only shrink the
+    // feasible set, so the constrained winner cannot out-run the
+    // unconstrained one.
+    let cfg = by_name("model1").unwrap();
+    let opts = TuneOptions::default();
+    let free = tune(&cfg, &Workload::default(), &opts).unwrap();
+    let capped = tune(
+        &cfg,
+        &Workload {
+            power_budget_w: Some(free.spec.modeled.power_w),
+            ..Workload::default()
+        },
+        &opts,
+    )
+    .unwrap();
+    assert!(
+        capped.spec.modeled.throughput_img_s
+            <= free.spec.modeled.throughput_img_s * (1.0 + 1e-9),
+        "{} vs {}",
+        capped.spec.modeled.throughput_img_s,
+        free.spec.modeled.throughput_img_s
+    );
+}
