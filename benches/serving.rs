@@ -3,8 +3,9 @@
 //!     cargo bench --bench serving
 //!     cargo bench --bench serving -- --json       # + BENCH_serving.json
 //!
-//! Two sections, both measured on this host (the serving stack is pure
-//! software; the device streams it batches onto are modeled elsewhere):
+//! Three sections, all measured on this host (the serving stack is
+//! pure software; the device streams it batches onto are modeled
+//! elsewhere):
 //!
 //!  1. **InferenceServer + GraphBackend** — the `repro serve --host`
 //!     path. N requests stream through the batching queue; the
@@ -13,7 +14,13 @@
 //!     (the batch's inference, shared by its members). The row printed
 //!     is the `ServerReport` the CLI prints, plus the invariant check
 //!     `e2e ~= wait + service` that `rust/tests/telemetry.rs` pins.
-//!  2. **HybridExecutor** — the per-stage/per-shard queue-vs-compute
+//!  2. **Overload + shed admission** — an open-loop arrival stream at
+//!     2x the backend's service rate against a short queue with
+//!     `Admission::Shed`: the front door must reject the excess with
+//!     typed `Overloaded` while the accepted requests keep a bounded
+//!     p99 (the queue can never hold more than `queue_depth` of
+//!     backlog). Reports shed rate and p99-with-shedding.
+//!  3. **HybridExecutor** — the per-stage/per-shard queue-vs-compute
 //!     decomposition on a stacked config across 3 simulated devices
 //!     (`report::decomposition_table`).
 //!
@@ -21,13 +28,15 @@
 //! report and per-worker span stats, machine-readable (`to_json`).
 
 use std::path::Path;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use bcpnn_accel::bcpnn::LayerGraph;
 use bcpnn_accel::bench_harness as bh;
 use bcpnn_accel::cluster::{plan_hybrid, Fleet, HybridExecutor};
 use bcpnn_accel::config::by_name;
-use bcpnn_accel::coordinator::{GraphBackend, InferenceServer, ServerConfig, ServerReport};
+use bcpnn_accel::coordinator::{
+    Admission, GraphBackend, InferBackend, InferenceServer, ServeError, ServerConfig, ServerReport,
+};
 use bcpnn_accel::data::synth;
 use bcpnn_accel::fpga::device::{FpgaDevice, KernelVersion};
 use bcpnn_accel::report;
@@ -70,6 +79,98 @@ fn server_section(n_requests: usize, threads: usize) -> ServerReport {
     rep
 }
 
+/// Fixed-cost backend for the overload section: the service rate is
+/// known exactly (`batch` images per `sleep`), so the offered load can
+/// be set to a precise multiple of it.
+struct FixedCostBackend {
+    batch: usize,
+    sleep: Duration,
+}
+
+impl InferBackend for FixedCostBackend {
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn infer_batch(&self, images: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.sleep);
+        Ok(images.iter().map(|img| vec![img[0]]).collect())
+    }
+}
+
+/// Overload stats returned for the JSON report.
+struct OverloadStats {
+    offered: u64,
+    served: u64,
+    shed: u64,
+    p99_ms: f64,
+    queue_depth: usize,
+}
+
+/// Open-loop arrivals at 2x the service rate against a short queue
+/// with shed admission: measure the shed rate and the p99 of what was
+/// actually served.
+fn overload_section(n_requests: usize) -> OverloadStats {
+    let batch = 4usize;
+    let sleep = Duration::from_millis(2);
+    let queue_depth = 16usize;
+    // Capacity: batch/sleep = 2000 img/s. Offer 2x that.
+    let interval = sleep / (2 * batch as u32);
+    let server = InferenceServer::start(
+        move || Ok(FixedCostBackend { batch, sleep }),
+        ServerConfig {
+            queue_depth,
+            flush_timeout: Duration::from_micros(500),
+            admission: Admission::Shed,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+
+    let mut tickets = Vec::with_capacity(n_requests);
+    let mut shed = 0u64;
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        // Open loop: arrivals keep their schedule no matter how far
+        // behind the server falls — the defining trait of overload.
+        while t0.elapsed() < interval * i as u32 {
+            std::hint::spin_loop();
+        }
+        match server.submit(vec![i as f32]) {
+            Ok(t) => tickets.push(t),
+            Err(ServeError::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    for t in &tickets {
+        t.wait().expect("accepted request must be answered");
+    }
+    let rep = server.shutdown();
+    let stats = OverloadStats {
+        offered: n_requests as u64,
+        served: rep.served,
+        shed,
+        p99_ms: rep.latency.p99_ms,
+        queue_depth,
+    };
+    println!(
+        "  offered {} at 2x capacity (queue {}): served {}  shed {} ({:.1}%)",
+        stats.offered,
+        stats.queue_depth,
+        stats.served,
+        stats.shed,
+        100.0 * stats.shed as f64 / stats.offered as f64
+    );
+    println!(
+        "  p99 with shedding {:.3} ms (queue bound: {} img backlog x {:.1} ms/batch)",
+        stats.p99_ms,
+        stats.queue_depth,
+        sleep.as_secs_f64() * 1e3
+    );
+    assert_eq!(stats.served + stats.shed, stats.offered, "typed sheds must partition arrivals");
+    stats
+}
+
 /// Run the hybrid executor on a stacked config and return its
 /// per-worker reports (printed as the decomposition table).
 fn hybrid_section(n_images: usize) -> Vec<bcpnn_accel::cluster::WorkerReport> {
@@ -105,6 +206,10 @@ fn main() {
     );
     let rep = server_section(n_requests, opts.threads);
 
+    let n_overload = if opts.quick { 200 } else { 400 };
+    println!("\n-- overload: open-loop 2x capacity, shed admission --");
+    let overload = overload_section(n_overload);
+
     println!("\n-- HybridExecutor per-worker decomposition --");
     let workers = hybrid_section(n_images);
 
@@ -115,6 +220,20 @@ fn main() {
             ("threads", Json::from(opts.threads)),
             ("requests", Json::from(n_requests)),
             ("server", rep.to_json()),
+            (
+                "overload",
+                Json::obj(vec![
+                    ("offered", Json::from(overload.offered as f64)),
+                    ("served", Json::from(overload.served as f64)),
+                    ("shed", Json::from(overload.shed as f64)),
+                    (
+                        "shed_rate",
+                        Json::from(overload.shed as f64 / overload.offered as f64),
+                    ),
+                    ("p99_with_shedding_ms", Json::from(overload.p99_ms)),
+                    ("queue_depth", Json::from(overload.queue_depth)),
+                ]),
+            ),
             (
                 "hybrid",
                 Json::obj(vec![

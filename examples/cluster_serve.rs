@@ -108,6 +108,7 @@ fn main() -> Result<()> {
             queue_depth: 256,
             flush_timeout: Duration::from_millis(2),
             policy,
+            ..ClusterConfig::default()
         },
     )?;
 
@@ -167,8 +168,9 @@ fn main() -> Result<()> {
     );
     for r in &rep.replicas {
         println!(
-            "replica {}: served {:>5} in {:>4} batches (fill {:.1})  p99 {:.3} ms  {}{}",
+            "replica {}.{}: served {:>5} in {:>4} batches (fill {:.1})  p99 {:.3} ms  {}{}",
             r.replica,
+            r.incarnation,
             r.served,
             r.batches,
             r.mean_fill,

@@ -61,7 +61,11 @@ fn main() -> Result<()> {
             d.set_params(trained);
             Ok(d)
         },
-        ServerConfig { queue_depth: 256, flush_timeout: Duration::from_millis(1) },
+        ServerConfig {
+            queue_depth: 256,
+            flush_timeout: Duration::from_millis(1),
+            ..ServerConfig::default()
+        },
     )?;
 
     let reqs = synth::generate(cfg.img_side, cfg.n_classes, n_requests, seed + 1, 0.15);

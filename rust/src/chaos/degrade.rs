@@ -1,0 +1,207 @@
+//! Graceful-degradation ladder — the policy the serving loops walk
+//! when tail latency stays above target (DESIGN.md §10.3).
+//!
+//! The ladder is a pure, deterministic state machine: it sees one
+//! latency sample per dispatched batch (the batch's worst end-to-end
+//! age) and answers "which degradation level should the server run
+//! at". Escalation needs `breach_rounds` *consecutive* over-target
+//! samples, de-escalation `recover_rounds` consecutive under-target
+//! samples, so a single slow batch never flips the serving mode and
+//! recovery is sticky enough to avoid oscillation. All policy lives
+//! here; the serving loops only apply the level:
+//!
+//! - [`DegradeLevel::Quantized`] — serve from the int8 store (PR 8
+//!   quantized datapath): ~4× fewer weight bytes per span walk.
+//! - [`DegradeLevel::ShortFlush`] — quarter the batcher's
+//!   `flush_timeout`: smaller batches, lower queueing delay, at the
+//!   cost of throughput.
+//! - [`DegradeLevel::Shedding`] — on top of the above, requests whose
+//!   queue wait already exceeds the p99 target are answered
+//!   [`Overloaded`](crate::coordinator::ServeError::Overloaded)
+//!   instead of dispatched: protect the requests that can still make
+//!   it.
+
+/// Degradation levels, mildest first. Ordered: a level implies every
+/// measure below it (int8 stays on while shedding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DegradeLevel {
+    /// Normal serving: configured precision, configured flush timeout.
+    Full,
+    /// Weight store dropped to int8 (where the backend can requantize).
+    Quantized,
+    /// Batcher flush timeout quartered (latency over fill).
+    ShortFlush,
+    /// Stale requests shed with a typed `Overloaded` error.
+    Shedding,
+}
+
+impl DegradeLevel {
+    pub fn index(self) -> usize {
+        match self {
+            DegradeLevel::Full => 0,
+            DegradeLevel::Quantized => 1,
+            DegradeLevel::ShortFlush => 2,
+            DegradeLevel::Shedding => 3,
+        }
+    }
+
+    /// Inverse of [`index`](Self::index); saturates above the top rung.
+    pub fn from_index(i: usize) -> DegradeLevel {
+        match i {
+            0 => DegradeLevel::Full,
+            1 => DegradeLevel::Quantized,
+            2 => DegradeLevel::ShortFlush,
+            _ => DegradeLevel::Shedding,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DegradeLevel::Full => "full",
+            DegradeLevel::Quantized => "quantized",
+            DegradeLevel::ShortFlush => "short-flush",
+            DegradeLevel::Shedding => "shedding",
+        }
+    }
+
+    fn up(self) -> DegradeLevel {
+        DegradeLevel::from_index(self.index() + 1)
+    }
+
+    fn down(self) -> DegradeLevel {
+        DegradeLevel::from_index(self.index().saturating_sub(1))
+    }
+}
+
+/// Ladder tuning.
+#[derive(Debug, Clone)]
+pub struct DegradeConfig {
+    /// Tail-latency target: a batch whose worst end-to-end age exceeds
+    /// this counts as a breach.
+    pub p99_target_ms: f64,
+    /// Consecutive breached batches before escalating one level.
+    pub breach_rounds: u32,
+    /// Consecutive healthy batches before de-escalating one level
+    /// (deliberately larger than `breach_rounds`: recover slowly).
+    pub recover_rounds: u32,
+}
+
+impl DegradeConfig {
+    pub fn new(p99_target_ms: f64) -> DegradeConfig {
+        DegradeConfig { p99_target_ms, breach_rounds: 3, recover_rounds: 8 }
+    }
+}
+
+/// The state machine. One instance per serving loop; never shared.
+#[derive(Debug, Clone)]
+pub struct DegradeLadder {
+    cfg: DegradeConfig,
+    level: DegradeLevel,
+    breaches: u32,
+    clears: u32,
+}
+
+impl DegradeLadder {
+    pub fn new(cfg: DegradeConfig) -> DegradeLadder {
+        DegradeLadder { cfg, level: DegradeLevel::Full, breaches: 0, clears: 0 }
+    }
+
+    pub fn level(&self) -> DegradeLevel {
+        self.level
+    }
+
+    pub fn config(&self) -> &DegradeConfig {
+        &self.cfg
+    }
+
+    /// Feed one batch's worst end-to-end latency; returns the new
+    /// level when (and only when) this sample causes a transition.
+    pub fn observe(&mut self, sample_ms: f64) -> Option<DegradeLevel> {
+        if sample_ms > self.cfg.p99_target_ms {
+            self.clears = 0;
+            self.breaches += 1;
+            if self.breaches >= self.cfg.breach_rounds && self.level < DegradeLevel::Shedding {
+                self.breaches = 0;
+                self.level = self.level.up();
+                return Some(self.level);
+            }
+        } else {
+            self.breaches = 0;
+            self.clears += 1;
+            if self.clears >= self.cfg.recover_rounds && self.level > DegradeLevel::Full {
+                self.clears = 0;
+                self.level = self.level.down();
+                return Some(self.level);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DegradeConfig {
+        DegradeConfig { p99_target_ms: 10.0, breach_rounds: 3, recover_rounds: 4 }
+    }
+
+    #[test]
+    fn escalates_only_on_consecutive_breaches() {
+        let mut l = DegradeLadder::new(cfg());
+        assert_eq!(l.observe(50.0), None);
+        assert_eq!(l.observe(50.0), None);
+        // A single healthy batch resets the breach streak.
+        assert_eq!(l.observe(1.0), None);
+        assert_eq!(l.observe(50.0), None);
+        assert_eq!(l.observe(50.0), None);
+        assert_eq!(l.observe(50.0), Some(DegradeLevel::Quantized));
+        assert_eq!(l.level(), DegradeLevel::Quantized);
+    }
+
+    #[test]
+    fn walks_to_the_top_and_saturates() {
+        let mut l = DegradeLadder::new(cfg());
+        let mut transitions = vec![];
+        for _ in 0..20 {
+            if let Some(t) = l.observe(99.0) {
+                transitions.push(t);
+            }
+        }
+        assert_eq!(
+            transitions,
+            vec![DegradeLevel::Quantized, DegradeLevel::ShortFlush, DegradeLevel::Shedding]
+        );
+        assert_eq!(l.level(), DegradeLevel::Shedding, "top rung saturates");
+    }
+
+    #[test]
+    fn recovers_one_level_per_clear_streak() {
+        let mut l = DegradeLadder::new(cfg());
+        for _ in 0..9 {
+            l.observe(99.0);
+        }
+        assert_eq!(l.level(), DegradeLevel::Shedding);
+        let mut downs = vec![];
+        for _ in 0..12 {
+            if let Some(t) = l.observe(1.0) {
+                downs.push(t);
+            }
+        }
+        assert_eq!(
+            downs,
+            vec![DegradeLevel::ShortFlush, DegradeLevel::Quantized, DegradeLevel::Full]
+        );
+        // Fully recovered: further healthy samples are no-ops.
+        assert_eq!(l.observe(1.0), None);
+        assert_eq!(l.level(), DegradeLevel::Full);
+    }
+
+    #[test]
+    fn level_index_roundtrips() {
+        for i in 0..4 {
+            assert_eq!(DegradeLevel::from_index(i).index(), i);
+        }
+        assert_eq!(DegradeLevel::from_index(9), DegradeLevel::Shedding);
+    }
+}

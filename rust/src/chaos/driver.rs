@@ -1,0 +1,243 @@
+//! Chaos driver — fires a [`FaultPlan`] against a live
+//! [`ClusterServer`] and accounts for every request's fate.
+//!
+//! The driver is deliberately dumb: it owns no threads and no clocks.
+//! [`ChaosDriver::poll`] is called from the submission loop with the
+//! running request count, fires every event whose trigger point has
+//! been reached (in schedule order), and records a log line per event.
+//! Because triggering is keyed on the submission counter, the sequence
+//! of injected faults relative to the request stream is identical run
+//! to run — the wall-clock timing of each fault may wiggle, but which
+//! requests race which fault does not, and with a crash/revive plan
+//! (no deadlines) the per-request outcomes are exactly reproducible:
+//! [`ChaosOutcome::determinism_key`] is the byte-comparable digest two
+//! runs of the same (plan, traffic) must agree on.
+//!
+//! [`run_chaos`] is the whole harness in one call: submit a request
+//! stream while polling the driver, then collect every ticket and
+//! bucket its outcome by [`ServeError`] variant. Its two hard
+//! invariants — checked by `rust/tests/chaos.rs` over seeded random
+//! plans and asserted by the CI chaos smoke — are:
+//!
+//! - **nothing lost**: every submission ends in exactly one bucket
+//!   (`served` or a typed error); `lost` stays zero while ≥1 replica
+//!   survives;
+//! - **nothing double-answered**: no ticket ever carries a second
+//!   response.
+
+use std::time::Duration;
+
+use crate::cluster::{ClusterReport, ClusterServer};
+use crate::coordinator::ServeError;
+use crate::util::json::Json;
+
+use super::plan::{FaultKind, FaultPlan};
+
+/// Cursor over a [`FaultPlan`], firing events as the submission
+/// counter advances.
+pub struct ChaosDriver {
+    plan: FaultPlan,
+    next: usize,
+    log: Vec<String>,
+}
+
+impl ChaosDriver {
+    pub fn new(plan: FaultPlan) -> ChaosDriver {
+        ChaosDriver { plan, next: 0, log: Vec::new() }
+    }
+
+    /// Fire every not-yet-fired event with `at_request <=
+    /// n_submitted`, in schedule order. Returns how many fired.
+    pub fn poll(&mut self, n_submitted: u64, server: &ClusterServer) -> usize {
+        let mut fired = 0;
+        while let Some(ev) = self.plan.events().get(self.next) {
+            if ev.at_request > n_submitted {
+                break;
+            }
+            let ok = match ev.kind {
+                FaultKind::Crash { replica } => server.fail_replica(replica),
+                FaultKind::DeviceLoss { replica, device } => {
+                    server.fail_replica_device(replica, device)
+                }
+                FaultKind::Slow { replica, delay } => server.set_replica_delay(replica, delay),
+                FaultKind::Stall { replica, hold } => server.stall_replica(replica, hold),
+                FaultKind::Revive { replica } => server.resurrect(replica).is_ok(),
+            };
+            self.log.push(format!(
+                "@{} {}{}",
+                ev.at_request,
+                ev.kind,
+                if ok { "" } else { " [rejected]" }
+            ));
+            self.next += 1;
+            fired += 1;
+        }
+        fired
+    }
+
+    /// True once every event has fired.
+    pub fn exhausted(&self) -> bool {
+        self.next == self.plan.len()
+    }
+
+    /// Deterministic, ordered record of what fired (and what the
+    /// server rejected).
+    pub fn log(&self) -> &[String] {
+        &self.log
+    }
+
+    pub fn into_log(self) -> Vec<String> {
+        self.log
+    }
+}
+
+/// Where every request of a chaos run ended up. `requests ==
+/// served + shed_deadline + shed_overload + all_down + backend_errors
+/// + lost` always — the buckets partition the stream.
+#[derive(Debug, Clone)]
+pub struct ChaosOutcome {
+    pub requests: u64,
+    /// Answered with probabilities.
+    pub served: u64,
+    /// Typed `DeadlineExceeded` (server-side shed or client-side
+    /// deadline clamp).
+    pub shed_deadline: u64,
+    /// Typed `Overloaded` (admission control or shedding rung).
+    pub shed_overload: u64,
+    /// Typed `AllReplicasDown`.
+    pub all_down: u64,
+    /// Typed `Backend`/`Shutdown` errors.
+    pub backend_errors: u64,
+    /// `Lost` — a response channel closed without a reply. The chaos
+    /// invariant: zero while any replica survives.
+    pub lost: u64,
+    /// Tickets that carried a second response. Invariant: zero,
+    /// always.
+    pub double_answered: u64,
+    /// Resurrections the plan performed (from the cluster report).
+    pub resurrections: u64,
+    /// The driver's fired-event log, in order.
+    pub events: Vec<String>,
+    pub report: ClusterReport,
+}
+
+impl ChaosOutcome {
+    /// The run's deterministic digest: everything about the outcome
+    /// that must be byte-identical when the same (plan, traffic,
+    /// config) is replayed. Wall-clock latency stats are excluded by
+    /// construction.
+    pub fn determinism_key(&self) -> String {
+        format!(
+            "requests={} served={} shed_deadline={} shed_overload={} all_down={} \
+             backend_errors={} lost={} double_answered={} resurrections={} events=[{}]",
+            self.requests,
+            self.served,
+            self.shed_deadline,
+            self.shed_overload,
+            self.all_down,
+            self.backend_errors,
+            self.lost,
+            self.double_answered,
+            self.resurrections,
+            self.events.join("; "),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::from(self.requests as f64)),
+            ("served", Json::from(self.served as f64)),
+            ("shed_deadline", Json::from(self.shed_deadline as f64)),
+            ("shed_overload", Json::from(self.shed_overload as f64)),
+            ("all_down", Json::from(self.all_down as f64)),
+            ("backend_errors", Json::from(self.backend_errors as f64)),
+            ("lost", Json::from(self.lost as f64)),
+            ("double_answered", Json::from(self.double_answered as f64)),
+            ("resurrections", Json::from(self.resurrections as f64)),
+            (
+                "events",
+                Json::Arr(self.events.iter().map(|e| Json::from(e.as_str())).collect()),
+            ),
+            ("report", self.report.to_json()),
+        ])
+    }
+}
+
+/// Run `images` through `server` while `plan` fires, wait for every
+/// ticket, and account for every request. Consumes the server (the
+/// outcome embeds its shutdown report).
+///
+/// Submission is closed-loop-ish: all images are submitted first (the
+/// driver polled before each), then all tickets are collected — so
+/// queues genuinely fill and faults land on in-flight traffic.
+/// `deadline` overrides the cluster's configured default per request
+/// when `Some`.
+pub fn run_chaos(
+    server: ClusterServer,
+    plan: FaultPlan,
+    images: &[Vec<f32>],
+    deadline: Option<Duration>,
+) -> ChaosOutcome {
+    let mut driver = ChaosDriver::new(plan);
+    let mut outcome = ChaosOutcome {
+        requests: images.len() as u64,
+        served: 0,
+        shed_deadline: 0,
+        shed_overload: 0,
+        all_down: 0,
+        backend_errors: 0,
+        lost: 0,
+        double_answered: 0,
+        resurrections: 0,
+        events: Vec::new(),
+        report: ClusterReport {
+            served: 0,
+            rerouted: 0,
+            shed_deadline: 0,
+            shed_overload: 0,
+            retries: 0,
+            resurrections: 0,
+            panics: 0,
+            latency: crate::telemetry::LatencyHistogram::new().stats(),
+            replicas: Vec::new(),
+        },
+    };
+    let mut tickets = Vec::with_capacity(images.len());
+    for (n, img) in images.iter().enumerate() {
+        driver.poll(n as u64, &server);
+        let res = match deadline {
+            Some(d) => server.submit_with_deadline(img.clone(), Some(d)),
+            None => server.submit(img.clone()),
+        };
+        match res {
+            Ok(t) => tickets.push(t),
+            Err(e) => bucket(&mut outcome, &e),
+        }
+    }
+    // Fire anything scheduled at/after the last submission.
+    driver.poll(u64::MAX, &server);
+
+    for t in &tickets {
+        match t.recv_timeout(Duration::from_secs(30)) {
+            Ok(_) => outcome.served += 1,
+            Err(e) => bucket(&mut outcome, &e),
+        }
+        if t.extra_response().is_some() {
+            outcome.double_answered += 1;
+        }
+    }
+    outcome.events = driver.into_log();
+    outcome.report = server.shutdown();
+    outcome.resurrections = outcome.report.resurrections;
+    outcome
+}
+
+fn bucket(outcome: &mut ChaosOutcome, e: &ServeError) {
+    match e {
+        ServeError::DeadlineExceeded { .. } => outcome.shed_deadline += 1,
+        ServeError::Overloaded { .. } => outcome.shed_overload += 1,
+        ServeError::AllReplicasDown => outcome.all_down += 1,
+        ServeError::Backend(_) | ServeError::Shutdown => outcome.backend_errors += 1,
+        ServeError::Lost => outcome.lost += 1,
+    }
+}

@@ -1,0 +1,33 @@
+//! Fault-injection chaos plane + graceful-degradation policy
+//! (DESIGN.md §10).
+//!
+//! Three pieces, layered so the serving stack never depends on chaos
+//! and chaos never reaches into serving internals:
+//!
+//! - [`plan`] — scripted, seeded [`FaultPlan`]s keyed on the request
+//!   counter (crash, device loss, slow replica, batcher stall,
+//!   revive), with a CLI spec grammar and a constrained random
+//!   generator for property tests;
+//! - [`driver`] — [`ChaosDriver`] fires a plan against a live
+//!   [`ClusterServer`](crate::cluster::ClusterServer) through its
+//!   public chaos hooks, and [`run_chaos`] is the full harness:
+//!   submit, inject, collect, and account for every request's fate in
+//!   a [`ChaosOutcome`];
+//! - [`degrade`] — the [`DegradeLadder`] state machine the serving
+//!   loops consult to trade accuracy and batch fill for tail latency
+//!   under sustained overload (int8 → short flush → shed).
+//!
+//! Everything here is deterministic by construction: plans are data,
+//! the driver fires them at fixed points in the request stream, and
+//! the ladder is a pure function of its sample sequence. The property
+//! suite (`rust/tests/chaos.rs`) leans on that to assert the serving
+//! invariants — no request lost, none double-answered, typed errors
+//! for every shed — across seeded random fault schedules.
+
+pub mod degrade;
+pub mod driver;
+pub mod plan;
+
+pub use degrade::{DegradeConfig, DegradeLadder, DegradeLevel};
+pub use driver::{run_chaos, ChaosDriver, ChaosOutcome};
+pub use plan::{FaultEvent, FaultKind, FaultPlan};

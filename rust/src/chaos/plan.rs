@@ -1,0 +1,390 @@
+//! Scripted fault plans — the deterministic half of the chaos plane.
+//!
+//! A [`FaultPlan`] is an ordered list of [`FaultEvent`]s keyed by
+//! *request count*, not wall clock: "crash replica 0 after the 100th
+//! submission". Keying on the submission counter is what makes chaos
+//! runs reproducible — the same plan against the same request stream
+//! fires the same faults at the same points regardless of machine
+//! speed, so two runs of `repro serve --chaos <plan>` produce
+//! byte-identical outcome summaries (see
+//! [`ChaosOutcome::determinism_key`](super::driver::ChaosOutcome::determinism_key)).
+//!
+//! Plans round-trip through a compact spec grammar (CLI `--chaos`):
+//!
+//! ```text
+//! crash:replica0@100              kill replica 0 after request 100
+//! devloss:replica1.2@150          fail fleet slot 2 seen by replica 1
+//! slow:replica0@100:5ms           +5ms per dispatch until cleared
+//! stall:replica0@100:10ms         one-shot 10ms batcher stall
+//! revive:replica0@200             resurrect replica 0
+//! ```
+//!
+//! joined with commas: `crash:replica0@100,revive:replica0@200`.
+//! Random plans ([`FaultPlan::random`]) are seeded and constrained so
+//! at least one replica survives at every point — the invariant the
+//! property suite (`rust/tests/chaos.rs`) leans on when it asserts
+//! zero lost requests.
+
+use std::fmt;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::rng::XorShift64;
+
+/// One fault (or recovery) the driver can inject into a cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Kill the replica outright (`inject_fail`): its next batch fails
+    /// and the whole queue re-routes to peers.
+    Crash { replica: usize },
+    /// Fail one fleet slot *through the executor* — the replica
+    /// discovers the loss mid-dispatch, exactly like a real device
+    /// falling off the bus.
+    DeviceLoss { replica: usize, device: usize },
+    /// Persistent extra latency before every dispatch on the replica
+    /// (a straggler, not a corpse). Cleared by `Revive` or never.
+    Slow { replica: usize, delay: Duration },
+    /// One-shot batcher stall: the replica sleeps before collecting
+    /// its next batch, so its queue backs up (deadline/shed pressure).
+    Stall { replica: usize, hold: Duration },
+    /// Resurrect the replica: fresh executor from master weights,
+    /// same queue, back in the scheduler pool.
+    Revive { replica: usize },
+}
+
+impl FaultKind {
+    pub fn replica(&self) -> usize {
+        match *self {
+            FaultKind::Crash { replica }
+            | FaultKind::DeviceLoss { replica, .. }
+            | FaultKind::Slow { replica, .. }
+            | FaultKind::Stall { replica, .. }
+            | FaultKind::Revive { replica } => replica,
+        }
+    }
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            FaultKind::Crash { replica } => write!(f, "crash:replica{replica}"),
+            FaultKind::DeviceLoss { replica, device } => {
+                write!(f, "devloss:replica{replica}.{device}")
+            }
+            FaultKind::Slow { replica, delay } => {
+                write!(f, "slow:replica{replica}:{}us", delay.as_micros())
+            }
+            FaultKind::Stall { replica, hold } => {
+                write!(f, "stall:replica{replica}:{}us", hold.as_micros())
+            }
+            FaultKind::Revive { replica } => write!(f, "revive:replica{replica}"),
+        }
+    }
+}
+
+/// A fault scheduled at a point in the request stream: fires once the
+/// submission counter reaches `at_request` (0 = before any traffic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at_request: u64,
+    pub kind: FaultKind,
+}
+
+/// An ordered, validated fault schedule.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Build from events in any order; they are sorted by trigger
+    /// point (stable, so same-point events keep authoring order).
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultPlan {
+        events.sort_by_key(|e| e.at_request);
+        FaultPlan { events }
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Parse the CLI spec grammar (see module docs). Whitespace around
+    /// commas is tolerated; an empty spec is an empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            events.push(parse_event(part).with_context(|| format!("bad fault spec {part:?}"))?);
+        }
+        Ok(FaultPlan::new(events))
+    }
+
+    /// Render back to the spec grammar (parse ∘ to_spec is identity up
+    /// to event ordering and µs-normalized durations).
+    pub fn to_spec(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| match e.kind {
+                FaultKind::Crash { replica } => format!("crash:replica{replica}@{}", e.at_request),
+                FaultKind::DeviceLoss { replica, device } => {
+                    format!("devloss:replica{replica}.{device}@{}", e.at_request)
+                }
+                FaultKind::Slow { replica, delay } => format!(
+                    "slow:replica{replica}@{}:{}us",
+                    e.at_request,
+                    delay.as_micros()
+                ),
+                FaultKind::Stall { replica, hold } => format!(
+                    "stall:replica{replica}@{}:{}us",
+                    e.at_request,
+                    hold.as_micros()
+                ),
+                FaultKind::Revive { replica } => {
+                    format!("revive:replica{replica}@{}", e.at_request)
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Replica indices this plan touches that are out of range for an
+    /// `n_replicas`-wide cluster (driver-side validation).
+    pub fn check_replicas(&self, n_replicas: usize) -> Result<()> {
+        for e in &self.events {
+            if e.kind.replica() >= n_replicas {
+                bail!(
+                    "fault {} targets replica {} but the cluster has {n_replicas}",
+                    e.kind,
+                    e.kind.replica()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Seeded random plan over `n_requests` submissions to an
+    /// `n_replicas` cluster. Constrained so at least one replica is
+    /// alive at every point in the schedule: a crash/device-loss is
+    /// only scheduled while another replica is up (device loss kills
+    /// its replica too — every placed device is load-bearing), and
+    /// downed replicas may be revived later, re-entering the pool.
+    /// Same (seed, shape) → same plan, always.
+    pub fn random(rng: &mut XorShift64, n_replicas: usize, n_requests: u64) -> FaultPlan {
+        let mut events = Vec::new();
+        if n_replicas == 0 || n_requests == 0 {
+            return FaultPlan::new(events);
+        }
+        let mut down = vec![false; n_replicas];
+        let n_events = 1 + rng.next_range(4); // 1..=4 faults per plan
+        // Draw trigger points first and walk them in schedule order, so
+        // the down-set tracking below reflects the order faults actually
+        // fire (events are sorted by trigger point).
+        let mut points: Vec<u64> = (0..n_events).map(|_| rng.next_u64() % n_requests).collect();
+        points.sort_unstable();
+        for at_request in points {
+            let replica = rng.next_range(n_replicas);
+            let alive_elsewhere = down
+                .iter()
+                .enumerate()
+                .any(|(i, &d)| i != replica && !d);
+            let roll = rng.next_range(5);
+            let kind = match roll {
+                // Lethal faults only while a peer survives.
+                0 if !down[replica] && alive_elsewhere => {
+                    down[replica] = true;
+                    FaultKind::Crash { replica }
+                }
+                1 if !down[replica] && alive_elsewhere => {
+                    down[replica] = true;
+                    FaultKind::DeviceLoss { replica, device: 0 }
+                }
+                2 if down[replica] => {
+                    down[replica] = false;
+                    FaultKind::Revive { replica }
+                }
+                // Benign faults are always safe.
+                3 => FaultKind::Slow {
+                    replica,
+                    delay: Duration::from_micros(100 + rng.next_u64() % 900),
+                },
+                _ => FaultKind::Stall {
+                    replica,
+                    hold: Duration::from_micros(200 + rng.next_u64() % 1800),
+                },
+            };
+            events.push(FaultEvent { at_request, kind });
+        }
+        FaultPlan::new(events)
+    }
+}
+
+fn parse_event(part: &str) -> Result<FaultEvent> {
+    let (verb, rest) = part
+        .split_once(':')
+        .context("expected <verb>:<target>[@N][:dur]")?;
+    match verb {
+        "crash" | "revive" => {
+            let (replica, at_request) = parse_target_at(rest)?;
+            let kind = if verb == "crash" {
+                FaultKind::Crash { replica }
+            } else {
+                FaultKind::Revive { replica }
+            };
+            Ok(FaultEvent { at_request, kind })
+        }
+        "devloss" => {
+            let (target, at) = rest.split_once('@').context("expected @<request>")?;
+            let (replica, device) = {
+                let (r, d) = target
+                    .split_once('.')
+                    .context("expected replica<i>.<device>")?;
+                (parse_replica(r)?, d.parse::<usize>().context("bad device index")?)
+            };
+            let at_request = at.parse::<u64>().context("bad request count")?;
+            Ok(FaultEvent { at_request, kind: FaultKind::DeviceLoss { replica, device } })
+        }
+        "slow" | "stall" => {
+            let (target_at, dur) = rest
+                .rsplit_once(':')
+                .context("expected :<duration> suffix")?;
+            let (replica, at_request) = parse_target_at(target_at)?;
+            let d = parse_duration(dur)?;
+            let kind = if verb == "slow" {
+                FaultKind::Slow { replica, delay: d }
+            } else {
+                FaultKind::Stall { replica, hold: d }
+            };
+            Ok(FaultEvent { at_request, kind })
+        }
+        other => bail!("unknown fault verb {other:?} (crash|devloss|slow|stall|revive)"),
+    }
+}
+
+fn parse_target_at(s: &str) -> Result<(usize, u64)> {
+    let (target, at) = s.split_once('@').context("expected @<request>")?;
+    Ok((parse_replica(target)?, at.parse::<u64>().context("bad request count")?))
+}
+
+fn parse_replica(s: &str) -> Result<usize> {
+    s.strip_prefix("replica")
+        .with_context(|| format!("expected replica<i>, got {s:?}"))?
+        .parse::<usize>()
+        .context("bad replica index")
+}
+
+/// `5ms`, `250us`, `1s` (integer magnitudes only — fault injection
+/// does not need sub-µs resolution).
+fn parse_duration(s: &str) -> Result<Duration> {
+    let (mag, unit) = s
+        .find(|c: char| !c.is_ascii_digit())
+        .map(|i| s.split_at(i))
+        .with_context(|| format!("duration {s:?} needs a unit (us|ms|s)"))?;
+    let n: u64 = mag.parse().with_context(|| format!("bad duration magnitude {mag:?}"))?;
+    match unit {
+        "us" => Ok(Duration::from_micros(n)),
+        "ms" => Ok(Duration::from_millis(n)),
+        "s" => Ok(Duration::from_secs(n)),
+        other => bail!("unknown duration unit {other:?} (us|ms|s)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_verb() {
+        let plan = FaultPlan::parse(
+            "crash:replica0@100, devloss:replica1.2@150, slow:replica0@10:5ms, \
+             stall:replica1@20:250us, revive:replica0@200",
+        )
+        .unwrap();
+        assert_eq!(plan.len(), 5);
+        assert_eq!(
+            plan.events()[0],
+            FaultEvent {
+                at_request: 10,
+                kind: FaultKind::Slow { replica: 0, delay: Duration::from_millis(5) }
+            }
+        );
+        // Sorted by trigger point.
+        let points: Vec<u64> = plan.events().iter().map(|e| e.at_request).collect();
+        assert_eq!(points, vec![10, 20, 100, 150, 200]);
+        assert_eq!(
+            plan.events()[4],
+            FaultEvent { at_request: 200, kind: FaultKind::Revive { replica: 0 } }
+        );
+        assert_eq!(
+            plan.events()[3],
+            FaultEvent { at_request: 150, kind: FaultKind::DeviceLoss { replica: 1, device: 2 } }
+        );
+    }
+
+    #[test]
+    fn spec_roundtrips() {
+        let spec = "stall:replica1@20:250us,crash:replica0@100,revive:replica0@200";
+        let plan = FaultPlan::parse(spec).unwrap();
+        let again = FaultPlan::parse(&plan.to_spec()).unwrap();
+        assert_eq!(plan, again);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "explode:replica0@5",
+            "crash:replica0",
+            "crash:rep0@5",
+            "slow:replica0@5",
+            "slow:replica0@5:3lightyears",
+            "devloss:replica0@5",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn check_replicas_bounds_targets() {
+        let plan = FaultPlan::parse("crash:replica3@1").unwrap();
+        assert!(plan.check_replicas(4).is_ok());
+        assert!(plan.check_replicas(3).is_err());
+    }
+
+    #[test]
+    fn random_plans_are_seeded_and_never_kill_everyone() {
+        for seed in 1..50u64 {
+            let mut a = XorShift64::new(seed);
+            let mut b = XorShift64::new(seed);
+            let pa = FaultPlan::random(&mut a, 3, 200);
+            let pb = FaultPlan::random(&mut b, 3, 200);
+            assert_eq!(pa, pb, "seed {seed} not deterministic");
+            // Replay the schedule: the lethal-fault constraint must
+            // hold at every point.
+            let mut down = [false; 3];
+            for e in pa.events() {
+                match e.kind {
+                    FaultKind::Crash { replica } | FaultKind::DeviceLoss { replica, .. } => {
+                        down[replica] = true;
+                    }
+                    FaultKind::Revive { replica } => down[replica] = false,
+                    _ => {}
+                }
+                assert!(
+                    down.iter().any(|d| !d),
+                    "seed {seed}: plan {} kills every replica",
+                    pa.to_spec()
+                );
+                assert!(e.kind.replica() < 3);
+                assert!(e.at_request < 200);
+            }
+        }
+    }
+}

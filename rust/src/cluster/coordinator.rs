@@ -14,27 +14,39 @@
 //! - **least-outstanding** — tracks in-flight requests per replica and
 //!   routes to the emptiest queue (better tail latency under skew).
 //!
-//! Failure model: when a replica's executor fails (a simulated device
-//! loss, see [`HybridExecutor::fail_device`], or injected via
-//! [`ClusterServer::fail_replica`]), the replica marks itself
-//! unhealthy, re-routes its entire queue — including the batch it was
-//! about to serve — to the least-loaded healthy peer, and exits.
-//! Clients never see a dropped request unless *every* replica is gone.
+//! Failure model (DESIGN.md §10): when a replica's executor fails (a
+//! simulated device loss, see [`HybridExecutor::fail_device`], or
+//! injected via [`ClusterServer::fail_replica`]), the replica marks
+//! itself unhealthy, re-routes its entire queue — including the batch
+//! it was about to serve — to healthy peers under **bounded
+//! retry-with-backoff**, and retires. Every request gets a typed
+//! answer ([`ServeError`]): re-routed, `DeadlineExceeded` if its
+//! budget lapsed in transit, or `AllReplicasDown` when retries
+//! exhaust. A retired replica is not gone for good:
+//! [`ClusterServer::resurrect`] respawns it from the cluster's plan
+//! and master weights (at the current degradation level's precision)
+//! onto its original queue, and it rejoins the scheduler pool — the
+//! chaos plane (`crate::chaos`) scripts crash/resurrect sequences
+//! deterministically against these hooks.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::bcpnn::{LayerGraph, Network};
+use crate::bcpnn::{LayerGraph, Network, QuantFormat};
+use crate::chaos::{DegradeConfig, DegradeLadder, DegradeLevel};
 use crate::config::ModelConfig;
 use crate::coordinator::metrics::LatencyStats;
-use crate::coordinator::server::{collect_batch, InferBackend};
+use crate::coordinator::server::{
+    collect_batch, shed_expired, Admission, InferBackend, ServeError, ServeResult, ShedResponder,
+    Ticket,
+};
 use crate::fpga::device::{FpgaDevice, KernelVersion};
-use crate::stream::fifo::Fifo;
-use crate::telemetry::{LatencyHistogram, MetricsRegistry, TraceContext};
+use crate::stream::fifo::{Fifo, TrySendError};
+use crate::telemetry::{Counter, Gauge, LatencyHistogram, MetricsRegistry, TraceContext};
 use crate::util::json::Json;
 
 use super::hybrid::{HybridExecutor, WorkerReport};
@@ -61,6 +73,23 @@ pub struct ClusterConfig {
     /// Max time a replica batcher waits to fill a batch.
     pub flush_timeout: Duration,
     pub policy: SchedulePolicy,
+    /// Default per-request latency budget stamped at submission
+    /// (`None` = requests carry no deadline).
+    pub deadline: Option<Duration>,
+    /// Front-door admission policy when the chosen replica's queue is
+    /// full: block (backpressure) or shed with `Overloaded`.
+    pub admission: Admission,
+    /// Graceful-degradation ladder, one per replica (`None` =
+    /// disabled). A replica's shared executor cannot requantize live;
+    /// the `Quantized` rung takes effect on flush shrinking/shedding
+    /// immediately and on precision at the next resurrection.
+    pub degrade: Option<DegradeConfig>,
+    /// Bound on re-route placement attempts per request before it is
+    /// answered `AllReplicasDown`.
+    pub max_reroute_attempts: usize,
+    /// Sleep between re-route attempts after a placement raced with a
+    /// peer retiring.
+    pub reroute_backoff: Duration,
 }
 
 impl Default for ClusterConfig {
@@ -71,6 +100,11 @@ impl Default for ClusterConfig {
             queue_depth: 128,
             flush_timeout: Duration::from_millis(2),
             policy: SchedulePolicy::LeastOutstanding,
+            deadline: None,
+            admission: Admission::Block,
+            degrade: None,
+            max_reroute_attempts: 8,
+            reroute_backoff: Duration::from_micros(200),
         }
     }
 }
@@ -78,26 +112,52 @@ impl Default for ClusterConfig {
 /// One in-flight request. The trace context's birth instant survives
 /// re-routing (latency stats are true end-to-end); its `sent` instant
 /// is re-stamped per hop, so queue-wait spans measure the last queue
-/// only.
+/// only; its deadline never resets.
 struct ClusterRequest {
     img: Vec<f32>,
     trace: TraceContext,
-    resp: mpsc::Sender<Vec<f32>>,
+    resp: mpsc::Sender<ServeResult>,
 }
 
-/// Shared per-replica state the scheduler and the workers see.
+impl ShedResponder for ClusterRequest {
+    fn trace(&self) -> &TraceContext {
+        &self.trace
+    }
+
+    fn shed(self, err: ServeError) {
+        let _ = self.resp.send(Err(err));
+    }
+}
+
+/// Shared per-replica state the scheduler, the workers, and the chaos
+/// plane see. The queue outlives replica incarnations (closed on
+/// failure, reopened on resurrection), so peers' handles never go
+/// stale.
 #[derive(Clone)]
 struct ReplicaHandle {
     queue: Fifo<ClusterRequest>,
     outstanding: Arc<AtomicUsize>,
     healthy: Arc<AtomicBool>,
     inject_fail: Arc<AtomicBool>,
+    /// Chaos hook: fleet slot to fail before the next dispatch
+    /// (`usize::MAX` = none pending). One-shot.
+    fail_device: Arc<AtomicUsize>,
+    /// Chaos hook: injected latency before every dispatch, µs
+    /// (0 = none). Persistent until cleared (slow-replica fault).
+    delay_us: Arc<AtomicU64>,
+    /// Chaos hook: one-shot batcher stall, µs — the replica sleeps
+    /// *before* collecting its next batch, so the queue backs up.
+    stall_us: Arc<AtomicU64>,
+    /// Incarnation counter (0 = original spawn; bumped per resurrect).
+    incarnation: Arc<AtomicUsize>,
 }
 
-/// Post-shutdown statistics for one replica.
+/// Post-shutdown statistics for one replica *incarnation*.
 #[derive(Debug, Clone)]
 pub struct ReplicaReport {
     pub replica: usize,
+    /// Which life of this replica the report covers (0 = original).
+    pub incarnation: usize,
     pub served: u64,
     /// Successfully dispatched batches. Unlike `ServerReport`, a
     /// failing replica's final batch is re-routed rather than
@@ -112,7 +172,14 @@ pub struct ReplicaReport {
     pub service: LatencyStats,
     /// Requests this replica re-routed to peers after failing.
     pub rerouted_out: u64,
+    /// Requests this replica answered with a typed shed
+    /// (`DeadlineExceeded` before dispatch or while re-routing,
+    /// `Overloaded` on the ladder's shedding rung).
+    pub shed: u64,
     pub failed: bool,
+    /// True when the worker thread panicked and this report was
+    /// synthesized at join time.
+    pub panicked: bool,
     /// Per-worker (per placed kernel) execution reports.
     pub shards: Vec<WorkerReport>,
 }
@@ -121,11 +188,14 @@ impl ReplicaReport {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("replica", Json::from(self.replica)),
+            ("incarnation", Json::from(self.incarnation)),
             ("served", Json::from(self.served as f64)),
             ("batches", Json::from(self.batches as f64)),
             ("mean_fill", Json::from(self.mean_fill)),
             ("rerouted_out", Json::from(self.rerouted_out as f64)),
+            ("shed", Json::from(self.shed as f64)),
             ("failed", Json::from(self.failed)),
+            ("panicked", Json::from(self.panicked)),
             ("latency", self.latency.to_json()),
             ("queue_wait", self.queue_wait.to_json()),
             ("service", self.service.to_json()),
@@ -142,9 +212,26 @@ impl ReplicaReport {
 pub struct ClusterReport {
     pub served: u64,
     pub rerouted: u64,
+    /// Requests answered `DeadlineExceeded` (shed before dispatch, in
+    /// re-route transit, or client-side via `Ticket`'s deadline clamp
+    /// — counter view: `cluster.shed_deadline`).
+    pub shed_deadline: u64,
+    /// Requests answered `Overloaded` (front-door admission + ladder
+    /// shedding; counter view: `cluster.shed_overload`).
+    pub shed_overload: u64,
+    /// Re-route placement retries after the first attempt raced with a
+    /// retiring peer.
+    pub retries: u64,
+    /// Replica incarnations spawned by [`ClusterServer::resurrect`].
+    pub resurrections: u64,
+    /// Replica worker panics folded into synthesized reports.
+    pub panics: u64,
     /// End-to-end latency across every request served anywhere
-    /// (bucket-exact merge of the per-replica histograms).
+    /// (bucket-exact merge of the per-incarnation histograms).
     pub latency: LatencyStats,
+    /// One entry per replica incarnation, ordered by
+    /// (replica, incarnation) — a resurrected replica shows its failed
+    /// life followed by its healthy one.
     pub replicas: Vec<ReplicaReport>,
 }
 
@@ -153,6 +240,11 @@ impl ClusterReport {
         Json::obj(vec![
             ("served", Json::from(self.served as f64)),
             ("rerouted", Json::from(self.rerouted as f64)),
+            ("shed_deadline", Json::from(self.shed_deadline as f64)),
+            ("shed_overload", Json::from(self.shed_overload as f64)),
+            ("retries", Json::from(self.retries as f64)),
+            ("resurrections", Json::from(self.resurrections as f64)),
+            ("panics", Json::from(self.panics as f64)),
             ("latency", self.latency.to_json()),
             (
                 "replicas",
@@ -183,13 +275,49 @@ pub fn pick_replica(
     }
 }
 
+/// Re-route bounds (from [`ClusterConfig`]).
+#[derive(Clone)]
+struct RerouteCfg {
+    max_attempts: usize,
+    backoff: Duration,
+}
+
+/// Everything one replica incarnation's worker loop needs.
+struct ReplicaCtx {
+    id: usize,
+    incarnation: usize,
+    peers: Vec<ReplicaHandle>,
+    flush: Duration,
+    queue_depth: usize,
+    degrade: Option<DegradeConfig>,
+    /// Cluster-wide degradation level (advisory max across replicas);
+    /// resurrection reads it to pick the respawn precision.
+    shared_level: Arc<AtomicUsize>,
+    reroute: RerouteCfg,
+    metrics: Arc<MetricsRegistry>,
+}
+
 /// Handle to a running cluster.
 pub struct ClusterServer {
     handles: Vec<ReplicaHandle>,
-    workers: Vec<thread::JoinHandle<(ReplicaReport, LatencyHistogram)>>,
+    /// One slot per replica; `None` while a resurrection is swapping
+    /// the worker out. Joined handles of *retired* incarnations move
+    /// to `retired`.
+    workers: Mutex<Vec<Option<thread::JoinHandle<(ReplicaReport, LatencyHistogram)>>>>,
+    retired: Mutex<Vec<(ReplicaReport, LatencyHistogram)>>,
     rr: AtomicUsize,
-    policy: SchedulePolicy,
+    ccfg: ClusterConfig,
     plan: HybridPlan,
+    /// Master weights: resurrection respawns executors from this copy
+    /// (requantized to the degradation level's precision).
+    graph: LayerGraph,
+    shared_level: Arc<AtomicUsize>,
+    panics: AtomicU64,
+    resurrections: Counter,
+    retries: Counter,
+    shed_dl: Counter,
+    shed_ov: Counter,
+    healthy_g: Gauge,
     metrics: Arc<MetricsRegistry>,
 }
 
@@ -239,10 +367,15 @@ impl ClusterServer {
                     outstanding: Arc::new(AtomicUsize::new(0)),
                     healthy: Arc::new(AtomicBool::new(true)),
                     inject_fail: Arc::new(AtomicBool::new(false)),
+                    fail_device: Arc::new(AtomicUsize::new(usize::MAX)),
+                    delay_us: Arc::new(AtomicU64::new(0)),
+                    stall_us: Arc::new(AtomicU64::new(0)),
+                    incarnation: Arc::new(AtomicUsize::new(0)),
                 }
             })
             .collect();
 
+        let shared_level = Arc::new(AtomicUsize::new(0));
         let mut workers = Vec::with_capacity(ccfg.replicas);
         for id in 0..ccfg.replicas {
             let exec = HybridExecutor::with_metrics(
@@ -251,19 +384,41 @@ impl ClusterServer {
                 metrics.clone(),
                 &format!("replica{id}."),
             )?;
-            let peers = handles.clone();
-            let flush = ccfg.flush_timeout;
-            let reg = metrics.clone();
-            workers.push(thread::spawn(move || replica_loop(id, exec, peers, flush, reg)));
+            let ctx = ReplicaCtx {
+                id,
+                incarnation: 0,
+                peers: handles.clone(),
+                flush: ccfg.flush_timeout,
+                queue_depth: ccfg.queue_depth,
+                degrade: ccfg.degrade.clone(),
+                shared_level: shared_level.clone(),
+                reroute: RerouteCfg {
+                    max_attempts: ccfg.max_reroute_attempts,
+                    backoff: ccfg.reroute_backoff,
+                },
+                metrics: metrics.clone(),
+            };
+            workers.push(Some(thread::spawn(move || replica_loop(ctx, exec))));
         }
 
+        let healthy_g = metrics.gauge("cluster.healthy_replicas");
+        healthy_g.set(ccfg.replicas as i64);
         Ok(ClusterServer {
             handles,
-            workers,
+            workers: Mutex::new(workers),
+            retired: Mutex::new(Vec::new()),
             rr: AtomicUsize::new(0),
-            policy: ccfg.policy,
             plan: plan.clone(),
+            graph,
+            shared_level,
+            panics: AtomicU64::new(0),
+            resurrections: metrics.counter("cluster.resurrections"),
+            retries: metrics.counter("cluster.retries"),
+            shed_dl: metrics.counter("cluster.shed_deadline"),
+            shed_ov: metrics.counter("cluster.shed_overload"),
+            healthy_g,
             metrics,
+            ccfg,
         })
     }
 
@@ -287,8 +442,24 @@ impl ClusterServer {
             .count()
     }
 
-    /// Submit one image; the scheduler picks the replica.
-    pub fn submit(&self, img: Vec<f32>) -> Result<mpsc::Receiver<Vec<f32>>> {
+    /// Cluster-wide degradation level (0 = full service).
+    pub fn degrade_level(&self) -> DegradeLevel {
+        DegradeLevel::from_index(self.shared_level.load(Ordering::SeqCst))
+    }
+
+    /// Submit one image under the configured default deadline; the
+    /// scheduler picks the replica.
+    pub fn submit(&self, img: Vec<f32>) -> std::result::Result<Ticket, ServeError> {
+        self.submit_with_deadline(img, self.ccfg.deadline)
+    }
+
+    /// Submit with an explicit latency budget (overrides the config
+    /// default; `None` = no deadline).
+    pub fn submit_with_deadline(
+        &self,
+        img: Vec<f32>,
+        budget: Option<Duration>,
+    ) -> std::result::Result<Ticket, ServeError> {
         let healthy: Vec<bool> = self
             .handles
             .iter()
@@ -300,32 +471,67 @@ impl ClusterServer {
             .map(|h| h.outstanding.load(Ordering::SeqCst))
             .collect();
         let rr_next = self.rr.fetch_add(1, Ordering::Relaxed);
-        let idx = pick_replica(self.policy, &healthy, &outstanding, rr_next)
-            .ok_or_else(|| anyhow!("no healthy replicas"))?;
-        self.submit_to(idx, img)
+        let idx = pick_replica(self.ccfg.policy, &healthy, &outstanding, rr_next)
+            .ok_or(ServeError::AllReplicasDown)?;
+        self.enqueue(idx, img, budget)
     }
 
     /// Submit directly to a specific replica, bypassing the scheduler
     /// (debugging and failover tests; a request landing on a failed
     /// replica is re-routed, not lost).
-    pub fn submit_to(&self, replica: usize, img: Vec<f32>) -> Result<mpsc::Receiver<Vec<f32>>> {
+    pub fn submit_to(
+        &self,
+        replica: usize,
+        img: Vec<f32>,
+    ) -> std::result::Result<Ticket, ServeError> {
+        self.enqueue(replica, img, self.ccfg.deadline)
+    }
+
+    fn enqueue(
+        &self,
+        replica: usize,
+        img: Vec<f32>,
+        budget: Option<Duration>,
+    ) -> std::result::Result<Ticket, ServeError> {
         let h = self
             .handles
             .get(replica)
-            .ok_or_else(|| anyhow!("no replica {replica}"))?;
+            .ok_or_else(|| ServeError::Backend(format!("no replica {replica}")))?;
         let (tx, rx) = mpsc::channel();
-        let req = ClusterRequest { img, trace: TraceContext::start(), resp: tx };
+        let trace = TraceContext::start().with_deadline(budget);
+        let ticket = Ticket::new(rx, &trace);
+        let req = ClusterRequest { img, trace, resp: tx };
         h.outstanding.fetch_add(1, Ordering::SeqCst);
-        if let Err(req) = h.queue.send(req) {
+        let rejected = match self.ccfg.admission {
+            Admission::Block => h.queue.send(req).err(),
+            Admission::Shed => match h.queue.try_send(req) {
+                Ok(()) => None,
+                Err(TrySendError::Full(_)) => {
+                    h.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    self.shed_ov.inc();
+                    return Err(ServeError::Overloaded { queue_depth: h.queue.capacity() });
+                }
+                Err(TrySendError::Closed(r)) => Some(r),
+            },
+        };
+        if let Some(req) = rejected {
             // The replica already retired (its failure path closed the
             // queue). Honor the no-loss contract: hand the request to
             // a healthy peer instead of erroring.
             h.outstanding.fetch_sub(1, Ordering::SeqCst);
-            if !reroute(&self.handles, replica, req) {
-                bail!("no healthy replicas");
+            match reroute(&self.handles, replica, req, &self.reroute_cfg(), &self.retries) {
+                Rerouted::Placed | Rerouted::Shed => {}
+                Rerouted::Down => return Err(ServeError::AllReplicasDown),
             }
         }
-        Ok(rx)
+        Ok(ticket)
+    }
+
+    fn reroute_cfg(&self) -> RerouteCfg {
+        RerouteCfg {
+            max_attempts: self.ccfg.max_reroute_attempts,
+            backoff: self.ccfg.reroute_backoff,
+        }
     }
 
     /// Inject a replica failure (the next batch it picks up is
@@ -337,30 +543,173 @@ impl ClusterServer {
             Some(h) => {
                 h.inject_fail.store(true, Ordering::SeqCst);
                 h.healthy.store(false, Ordering::SeqCst);
+                self.healthy_g.set(self.healthy_replicas() as i64);
                 true
             }
             None => false,
         }
     }
 
-    /// Stop accepting requests, drain every replica, and aggregate.
-    pub fn shutdown(mut self) -> ClusterReport {
+    /// Chaos hook: before its next dispatch, the replica fails fleet
+    /// slot `device` through [`HybridExecutor::fail_device`] — the
+    /// executor discovers the loss itself and the replica walks the
+    /// ordinary failure path (device loss, not process crash).
+    pub fn fail_replica_device(&self, replica: usize, device: usize) -> bool {
+        match self.handles.get(replica) {
+            Some(h) => {
+                h.fail_device.store(device, Ordering::SeqCst);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Chaos hook: inject `delay` of extra latency before every
+    /// dispatch on this replica (a persistently slow replica —
+    /// `Duration::ZERO` clears it).
+    pub fn set_replica_delay(&self, replica: usize, delay: Duration) -> bool {
+        match self.handles.get(replica) {
+            Some(h) => {
+                h.delay_us.store(delay.as_micros() as u64, Ordering::SeqCst);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Chaos hook: one-shot batcher stall — the replica sleeps `hold`
+    /// before collecting its next batch, so its queue backs up.
+    pub fn stall_replica(&self, replica: usize, hold: Duration) -> bool {
+        match self.handles.get(replica) {
+            Some(h) => {
+                h.stall_us.store(hold.as_micros() as u64, Ordering::SeqCst);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Respawn `replica` as a fresh incarnation and return it to the
+    /// scheduler pool. Works on a retired replica (the resurrection
+    /// path proper) and on a live one (forced restart): the current
+    /// incarnation is failed first so its in-flight work re-routes,
+    /// then a new executor is built from the master weights — at int8
+    /// when the cluster's degradation level says `Quantized` or above
+    /// — and attached to the *same* queue (reopened in place, so
+    /// peers' handles stay valid). Blocks until the old incarnation
+    /// has fully retired; a panicked incarnation is folded into the
+    /// retired reports.
+    pub fn resurrect(&self, replica: usize) -> Result<()> {
+        let h = self
+            .handles
+            .get(replica)
+            .ok_or_else(|| anyhow!("no replica {replica}"))?;
+        // Retire the current incarnation: stop new traffic, fail the
+        // loop (idle loops wake via close), let it re-route its queue.
+        h.inject_fail.store(true, Ordering::SeqCst);
+        h.healthy.store(false, Ordering::SeqCst);
+        self.healthy_g.set(self.healthy_replicas() as i64);
+        h.queue.close();
+        let old = {
+            let mut ws = self.workers.lock().unwrap();
+            ws[replica].take()
+        };
+        let old = old.ok_or_else(|| anyhow!("replica {replica} is already being resurrected"))?;
+        let old_inc = h.incarnation.load(Ordering::SeqCst);
+        match old.join() {
+            Ok(entry) => self.retired.lock().unwrap().push(entry),
+            Err(_) => {
+                self.panics.fetch_add(1, Ordering::SeqCst);
+                self.retired
+                    .lock()
+                    .unwrap()
+                    .push((panicked_report(replica, old_inc), LatencyHistogram::new()));
+            }
+        }
+        // Fresh incarnation: clean chaos state, reopened queue, new
+        // executor at the degradation level's precision.
+        let incarnation = h.incarnation.fetch_add(1, Ordering::SeqCst) + 1;
+        h.fail_device.store(usize::MAX, Ordering::SeqCst);
+        h.delay_us.store(0, Ordering::SeqCst);
+        h.stall_us.store(0, Ordering::SeqCst);
+        h.inject_fail.store(false, Ordering::SeqCst);
+        h.queue.reopen();
+        let mut graph = self.graph.clone();
+        if self.degrade_level() >= DegradeLevel::Quantized {
+            graph.set_precision(QuantFormat::Int8);
+        }
+        let exec = HybridExecutor::with_metrics(
+            graph,
+            &self.plan,
+            self.metrics.clone(),
+            &format!("replica{replica}."),
+        )?;
+        let ctx = ReplicaCtx {
+            id: replica,
+            incarnation,
+            peers: self.handles.clone(),
+            flush: self.ccfg.flush_timeout,
+            queue_depth: self.ccfg.queue_depth,
+            degrade: self.ccfg.degrade.clone(),
+            shared_level: self.shared_level.clone(),
+            reroute: self.reroute_cfg(),
+            metrics: self.metrics.clone(),
+        };
+        let worker = thread::spawn(move || replica_loop(ctx, exec));
+        self.workers.lock().unwrap()[replica] = Some(worker);
+        h.healthy.store(true, Ordering::SeqCst);
+        self.healthy_g.set(self.healthy_replicas() as i64);
+        self.resurrections.inc();
+        Ok(())
+    }
+
+    /// Stop accepting requests, drain every replica, and aggregate —
+    /// including every retired incarnation. Panicked workers are
+    /// folded into synthesized failed reports instead of aborting.
+    pub fn shutdown(self) -> ClusterReport {
         for h in &self.handles {
             h.queue.close();
+        }
+        // Drain in place rather than moving the fields out (the type
+        // has a Drop impl); the subsequent Drop sees empty vectors.
+        let mut entries: Vec<(ReplicaReport, LatencyHistogram)> =
+            std::mem::take(&mut *self.retired.lock().unwrap());
+        let workers: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        let mut panics = self.panics.load(Ordering::SeqCst);
+        for (i, w) in workers.into_iter().enumerate() {
+            if let Some(handle) = w {
+                match handle.join() {
+                    Ok(entry) => entries.push(entry),
+                    Err(_) => {
+                        panics += 1;
+                        let inc = self.handles[i].incarnation.load(Ordering::SeqCst);
+                        entries.push((panicked_report(i, inc), LatencyHistogram::new()));
+                    }
+                }
+            }
         }
         let mut merged = LatencyHistogram::new();
         let mut replicas = Vec::new();
         let mut served = 0u64;
         let mut rerouted = 0u64;
-        for w in self.workers.drain(..) {
-            let (rep, hist) = w.join().expect("replica worker panicked");
+        for (rep, hist) in entries {
             served += rep.served;
             rerouted += rep.rerouted_out;
             merged.merge(&hist);
             replicas.push(rep);
         }
-        replicas.sort_by_key(|r| r.replica);
-        ClusterReport { served, rerouted, latency: merged.stats(), replicas }
+        replicas.sort_by_key(|r| (r.replica, r.incarnation));
+        ClusterReport {
+            served,
+            rerouted,
+            shed_deadline: self.shed_dl.get(),
+            shed_overload: self.shed_ov.get(),
+            retries: self.retries.get(),
+            resurrections: self.resurrections.get(),
+            panics,
+            latency: merged.stats(),
+            replicas,
+        }
     }
 }
 
@@ -369,41 +718,120 @@ impl Drop for ClusterServer {
         for h in &self.handles {
             h.queue.close();
         }
-        for w in self.workers.drain(..) {
+        for w in self.workers.lock().unwrap().drain(..).flatten() {
             let _ = w.join();
         }
     }
 }
 
-/// The per-replica worker: the single-device batching loop with a
-/// failure path that re-routes instead of dropping.
-fn replica_loop(
-    id: usize,
-    exec: HybridExecutor,
-    peers: Vec<ReplicaHandle>,
-    flush_timeout: Duration,
-    metrics: Arc<MetricsRegistry>,
-) -> (ReplicaReport, LatencyHistogram) {
+fn panicked_report(replica: usize, incarnation: usize) -> ReplicaReport {
+    ReplicaReport {
+        replica,
+        incarnation,
+        served: 0,
+        batches: 0,
+        mean_fill: 0.0,
+        latency: LatencyStats::zero(),
+        queue_wait: LatencyStats::zero(),
+        service: LatencyStats::zero(),
+        rerouted_out: 0,
+        shed: 0,
+        failed: true,
+        panicked: true,
+        shards: Vec::new(),
+    }
+}
+
+/// The per-replica worker: the single-device batching loop with
+/// chaos-hook application, shed-before-dispatch, a per-replica
+/// degradation ladder, and a failure path that re-routes (bounded)
+/// instead of dropping.
+fn replica_loop(ctx: ReplicaCtx, exec: HybridExecutor) -> (ReplicaReport, LatencyHistogram) {
+    let ReplicaCtx {
+        id,
+        incarnation,
+        peers,
+        flush: base_flush,
+        queue_depth,
+        degrade,
+        shared_level,
+        reroute: rcfg,
+        metrics,
+    } = ctx;
     let mine = peers[id].clone();
     let rx = mine.queue.clone();
     let max_batch = exec.max_batch();
+    // Registry handles accumulate across incarnations (telemetry view);
+    // the local histograms below are this incarnation's own, so its
+    // report — and the cluster merge — never double-counts.
     let e2e_h = metrics.histogram(&format!("replica{id}.e2e_us"));
     let wait_h = metrics.histogram(&format!("replica{id}.queue_wait_us"));
     let svc_h = metrics.histogram(&format!("replica{id}.service_us"));
     let served_ctr = metrics.counter(&format!("replica{id}.served"));
     let rerouted_ctr = metrics.counter(&format!("replica{id}.rerouted_out"));
+    let shed_dl_ctr = metrics.counter("cluster.shed_deadline");
+    let shed_ov_ctr = metrics.counter("cluster.shed_overload");
+    let retries_ctr = metrics.counter("cluster.retries");
+    let degrade_g = metrics.gauge("cluster.degrade_level");
+    let healthy_g = metrics.gauge("cluster.healthy_replicas");
+    let mut my_e2e = LatencyHistogram::new();
+    let mut my_wait = LatencyHistogram::new();
+    let mut my_svc = LatencyHistogram::new();
+    let mut ladder = degrade.map(DegradeLadder::new);
+    let mut level = DegradeLevel::Full;
+    let mut flush = base_flush;
     let mut served = 0u64;
     let mut batches = 0u64;
     let mut fills = 0u64;
     let mut rerouted_out = 0u64;
+    let mut shed = 0u64;
     let mut failed = false;
     // Dispatch buffer reused across rounds (steady-state batch path
     // allocates nothing beyond the backend's own response vectors).
     let mut imgs: Vec<Vec<f32>> = Vec::new();
 
     while let Ok(first) = rx.recv() {
-        let mut reqs = collect_batch(&rx, first, max_batch, flush_timeout);
+        // Chaos hook: one-shot batcher stall — the queue backs up
+        // behind the sleeping batcher.
+        let stall = mine.stall_us.swap(0, Ordering::SeqCst);
+        if stall > 0 {
+            thread::sleep(Duration::from_micros(stall));
+        }
+        let reqs = collect_batch(&rx, first, max_batch, flush);
+        // Chaos hook: pending device loss fires through the
+        // executor's own failure surface, so the loop discovers it
+        // exactly like a real mid-dispatch loss.
+        let dev = mine.fail_device.swap(usize::MAX, Ordering::SeqCst);
+        if dev != usize::MAX {
+            exec.fail_device(dev);
+        }
+        // Shed-before-dispatch: expired deadlines always; stale queue
+        // waits only on the ladder's shedding rung.
+        let stale_after = (level == DegradeLevel::Shedding)
+            .then(|| {
+                ladder
+                    .as_ref()
+                    .map(|l| Duration::from_secs_f64(l.config().p99_target_ms / 1e3))
+            })
+            .flatten();
+        let (mut reqs, n_dl, n_ov) = shed_expired(reqs, stale_after, queue_depth);
+        if n_dl + n_ov > 0 {
+            for _ in 0..n_dl + n_ov {
+                mine.outstanding.fetch_sub(1, Ordering::SeqCst);
+            }
+            shed += n_dl + n_ov;
+            shed_dl_ctr.add(n_dl);
+            shed_ov_ctr.add(n_ov);
+        }
+        if reqs.is_empty() {
+            continue;
+        }
         let injected = mine.inject_fail.load(Ordering::SeqCst);
+        // Chaos hook: persistent slow-replica latency injection.
+        let delay = mine.delay_us.load(Ordering::SeqCst);
+        if delay > 0 && !injected {
+            thread::sleep(Duration::from_micros(delay));
+        }
         let dispatch = Instant::now();
         let outcome = if injected {
             Err(anyhow!("injected replica failure"))
@@ -426,27 +854,60 @@ fn replica_loop(
                 fills += reqs.len() as u64;
                 batches += 1;
                 let service = dispatch.elapsed();
+                let mut worst = Duration::ZERO;
                 // Decrement `outstanding` for every request regardless
                 // of how many probability vectors came back — a
                 // short-returning backend must not leak the counter
                 // (it would starve this replica under LeastOutstanding
-                // forever). Unanswered clients see a closed channel.
+                // forever).
                 let mut probs = probs.into_iter();
                 for req in reqs {
                     mine.outstanding.fetch_sub(1, Ordering::SeqCst);
-                    if let Some(p) = probs.next() {
-                        wait_h.record(dispatch - req.trace.sent);
-                        svc_h.record(service);
-                        e2e_h.record(req.trace.age());
-                        let _ = req.resp.send(p);
-                        served += 1;
-                        served_ctr.inc();
+                    match probs.next() {
+                        Some(p) => {
+                            let wait = dispatch - req.trace.sent;
+                            let age = req.trace.age();
+                            worst = worst.max(age);
+                            wait_h.record(wait);
+                            svc_h.record(service);
+                            e2e_h.record(age);
+                            my_wait.record(wait);
+                            my_svc.record(service);
+                            my_e2e.record(age);
+                            let _ = req.resp.send(Ok(p));
+                            served += 1;
+                            served_ctr.inc();
+                        }
+                        None => {
+                            // Typed answer instead of a dropped channel.
+                            let _ = req.resp.send(Err(ServeError::Backend(
+                                "backend returned a short batch".into(),
+                            )));
+                        }
+                    }
+                }
+                // Per-replica degradation ladder: flush shrinking and
+                // shedding apply live; the precision rung is advisory
+                // here (the shared executor cannot requantize in
+                // place) and takes effect at the next resurrection.
+                if let Some(l) = ladder.as_mut() {
+                    if let Some(new_level) = l.observe(worst.as_secs_f64() * 1e3) {
+                        level = new_level;
+                        shared_level.store(level.index(), Ordering::SeqCst);
+                        degrade_g.set(level.index() as i64);
+                        flush = if level >= DegradeLevel::ShortFlush {
+                            base_flush / 4
+                        } else {
+                            base_flush
+                        };
                     }
                 }
             }
             Err(_) => {
                 failed = true;
                 mine.healthy.store(false, Ordering::SeqCst);
+                healthy_g
+                    .set(peers.iter().filter(|p| p.healthy.load(Ordering::SeqCst)).count() as i64);
                 // Re-route the batch in hand plus everything queued.
                 let mut to_move = reqs;
                 rx.close();
@@ -455,9 +916,18 @@ fn replica_loop(
                 }
                 for r in to_move {
                     mine.outstanding.fetch_sub(1, Ordering::SeqCst);
-                    if reroute(&peers, id, r) {
-                        rerouted_out += 1;
-                        rerouted_ctr.inc();
+                    match reroute(&peers, id, r, &rcfg, &retries_ctr) {
+                        Rerouted::Placed => {
+                            rerouted_out += 1;
+                            rerouted_ctr.inc();
+                        }
+                        Rerouted::Shed => {
+                            shed += 1;
+                            shed_dl_ctr.inc();
+                        }
+                        // The request got a typed `AllReplicasDown`;
+                        // nothing more this replica can do for it.
+                        Rerouted::Down => {}
                     }
                 }
                 break;
@@ -466,32 +936,64 @@ fn replica_loop(
     }
 
     let shards = exec.shutdown();
-    let hist = e2e_h.snapshot();
+    let worker_panicked = shards.iter().any(|s| s.panicked);
     let report = ReplicaReport {
         replica: id,
+        incarnation,
         served,
         batches,
         mean_fill: fills as f64 / batches.max(1) as f64,
-        latency: hist.stats(),
-        queue_wait: wait_h.stats(),
-        service: svc_h.stats(),
+        latency: my_e2e.stats(),
+        queue_wait: my_wait.stats(),
+        service: my_svc.stats(),
         rerouted_out,
+        shed,
         // A replica killed while idle never reaches the injected-
         // failure branch; still report it as failed, not "ok".
-        failed: failed || mine.inject_fail.load(Ordering::SeqCst),
+        failed: failed || mine.inject_fail.load(Ordering::SeqCst) || worker_panicked,
+        panicked: worker_panicked,
         shards,
     };
-    (report, hist)
+    (report, my_e2e)
 }
 
-/// Hand one request to the least-loaded healthy peer. Returns false if
-/// no peer could take it (the client sees a closed response channel).
-fn reroute(peers: &[ReplicaHandle], from: usize, req: ClusterRequest) -> bool {
+/// Where a re-routed request ended up.
+enum Rerouted {
+    /// Placed on a healthy peer's queue.
+    Placed,
+    /// Deadline lapsed in transit; answered `DeadlineExceeded`.
+    Shed,
+    /// No healthy peer within the attempt bound; answered
+    /// `AllReplicasDown`.
+    Down,
+}
+
+/// Hand one request to the least-loaded healthy peer, with bounded
+/// retry-with-backoff when placements race with peers retiring. Every
+/// outcome answers the client one way or another — a re-routed
+/// request is never silently dropped.
+fn reroute(
+    peers: &[ReplicaHandle],
+    from: usize,
+    req: ClusterRequest,
+    cfg: &RerouteCfg,
+    retries: &Counter,
+) -> Rerouted {
     let mut req = req;
     // A re-routed request starts a fresh queue-wait clock at the peer;
-    // its end-to-end clock (trace.born) keeps running.
+    // its end-to-end clock (trace.born) and deadline keep running.
     req.trace.hop();
-    loop {
+    for attempt in 0..cfg.max_attempts.max(1) {
+        let now = Instant::now();
+        if req.trace.expired_at(now) {
+            let waited_ms = now.saturating_duration_since(req.trace.born).as_millis() as u64;
+            req.shed(ServeError::DeadlineExceeded { waited_ms });
+            return Rerouted::Shed;
+        }
+        if attempt > 0 {
+            retries.inc();
+            thread::sleep(cfg.backoff);
+        }
         let healthy: Vec<bool> = peers
             .iter()
             .enumerate()
@@ -504,11 +1006,11 @@ fn reroute(peers: &[ReplicaHandle], from: usize, req: ClusterRequest) -> bool {
         let Some(target) =
             pick_replica(SchedulePolicy::LeastOutstanding, &healthy, &outstanding, 0)
         else {
-            return false;
+            break;
         };
         peers[target].outstanding.fetch_add(1, Ordering::SeqCst);
         match peers[target].queue.send(req) {
-            Ok(()) => return true,
+            Ok(()) => return Rerouted::Placed,
             Err(r) => {
                 // Lost the race with this peer shutting down; retry
                 // after marking it unhealthy locally via its flag.
@@ -518,6 +1020,8 @@ fn reroute(peers: &[ReplicaHandle], from: usize, req: ClusterRequest) -> bool {
             }
         }
     }
+    req.shed(ServeError::AllReplicasDown);
+    Rerouted::Down
 }
 
 #[cfg(test)]

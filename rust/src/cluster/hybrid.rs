@@ -98,6 +98,10 @@ pub struct WorkerReport {
     pub service: LatencyStats,
     /// Stats of the worker's input stream (backpressure visibility).
     pub input_fifo: FifoStatsSnapshot,
+    /// True when the worker thread panicked and this report was
+    /// synthesized at join time (shutdown folds the panic instead of
+    /// propagating it into the caller).
+    pub panicked: bool,
 }
 
 impl WorkerReport {
@@ -112,6 +116,7 @@ impl WorkerReport {
             ("queue_wait", self.queue_wait.to_json()),
             ("service", self.service.to_json()),
             ("input_fifo", self.input_fifo.to_json()),
+            ("panicked", Json::from(self.panicked)),
         ])
     }
 }
@@ -126,7 +131,9 @@ pub struct HybridExecutor {
     merges: Vec<Option<Fifo<SliceJob>>>,
     /// Final activity stream back to the caller.
     result: Fifo<StageJob>,
-    workers: Vec<thread::JoinHandle<WorkerReport>>,
+    /// `(stage, shard, handle)` — the identity rides outside the
+    /// thread so a panicked worker can still be reported as itself.
+    workers: Vec<(usize, usize, thread::JoinHandle<WorkerReport>)>,
     plumbers: Vec<thread::JoinHandle<()>>,
     /// Serializes send+drain rounds (jobs carry chunk-local seqs).
     io_lock: Mutex<()>,
@@ -241,7 +248,7 @@ impl HybridExecutor {
                     let tx = merge.clone();
                     let recycle = recycles[k].clone();
                     let (unit_lo, unit_hi, n_hc) = (p.unit_lo, p.unit_hi, p.n_hc());
-                    workers.push(thread::spawn(move || {
+                    workers.push((si, k, thread::spawn(move || {
                         let start = Instant::now();
                         let (mut items, mut busy) = (0u64, Duration::ZERO);
                         let proj = &g.layers[layer];
@@ -276,8 +283,9 @@ impl HybridExecutor {
                             queue_wait: spans.queue_wait.stats(),
                             service: spans.service.stats(),
                             input_fifo: rx.stats(),
+                            panicked: false,
                         }
-                    }));
+                    })));
                 }
                 // Merge worker: reassemble slices, run the head on the
                 // last stage, feed the next hop. Drained slice vecs go
@@ -355,7 +363,7 @@ impl HybridExecutor {
                 let spans =
                     StageSpans::register(&metrics, &format!("{prefix}stage{si}.shard0"));
                 let (lo, hi) = (st.layer_lo, st.layer_hi);
-                workers.push(thread::spawn(move || {
+                workers.push((si, 0, thread::spawn(move || {
                     let start = Instant::now();
                     let (mut items, mut busy) = (0u64, Duration::ZERO);
                     let gain = g.cfg.gain;
@@ -401,8 +409,9 @@ impl HybridExecutor {
                         queue_wait: spans.queue_wait.stats(),
                         service: spans.service.stats(),
                         input_fifo: rx.stats(),
+                        panicked: false,
                     }
-                }));
+                })));
             }
         }
 
@@ -525,13 +534,28 @@ impl HybridExecutor {
     }
 
     /// Drain and join everything, returning per-worker reports ordered
-    /// by (stage, shard).
+    /// by (stage, shard). A panicked worker is folded into a
+    /// synthesized report (`panicked = true`) instead of aborting the
+    /// caller — the replica/server layer above turns it into a failed
+    /// entry in its own report.
     pub fn shutdown(mut self) -> Vec<WorkerReport> {
         self.close_all();
         let mut reports: Vec<WorkerReport> = self
             .workers
             .drain(..)
-            .map(|h| h.join().expect("stage worker panicked"))
+            .map(|(stage, shard, h)| {
+                h.join().unwrap_or(WorkerReport {
+                    stage,
+                    shard,
+                    items: 0,
+                    busy: Duration::ZERO,
+                    wall: Duration::ZERO,
+                    queue_wait: LatencyStats::zero(),
+                    service: LatencyStats::zero(),
+                    input_fifo: FifoStatsSnapshot::default(),
+                    panicked: true,
+                })
+            })
             .collect();
         for h in self.plumbers.drain(..) {
             let _ = h.join();
@@ -556,7 +580,7 @@ impl HybridExecutor {
 impl Drop for HybridExecutor {
     fn drop(&mut self) {
         self.close_all();
-        for h in self.workers.drain(..) {
+        for (_, _, h) in self.workers.drain(..) {
             let _ = h.join();
         }
         for h in self.plumbers.drain(..) {

@@ -12,4 +12,8 @@ pub use driver::{
     TrainOptions, TrainOutcome,
 };
 pub use metrics::{EnergyReport, LatencyStats, Recorder};
-pub use server::{GraphBackend, InferBackend, InferenceServer, ServerConfig, ServerReport};
+pub use server::{
+    collect_batch, shed_expired, Admission, GraphBackend, InferBackend, InferenceServer,
+    ServeError, ServeResult, ServerConfig, ServerReport, ShedResponder, Ticket,
+    DEFAULT_CLIENT_WAIT,
+};

@@ -13,7 +13,17 @@
 //! the single-device backend, `cluster::ShardedExecutor` the
 //! multi-device one, and tests plug in mocks to pin the batching
 //! semantics (see `rust/tests/serving_batching.rs`).
+//!
+//! Resilience surface (DESIGN.md §10): every response is a typed
+//! [`ServeResult`] — clients get [`ServeError`] values instead of
+//! silently dropped channels; admission is configurable
+//! ([`Admission::Shed`] rejects with `Overloaded` instead of blocking);
+//! per-request deadlines ride in [`TraceContext`] and expired requests
+//! are shed *before* dispatch ([`shed_expired`]); and an optional
+//! [`DegradeLadder`] walks the serving mode down (int8 store → short
+//! flush → shed) under sustained tail-latency breach.
 
+use std::fmt;
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -21,12 +31,129 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::bcpnn::{LayerGraph, QuantFormat, Workspace};
-use crate::stream::fifo::Fifo;
+use crate::chaos::{DegradeConfig, DegradeLadder, DegradeLevel};
+use crate::stream::fifo::{Fifo, TrySendError};
 use crate::telemetry::{Counter, MetricsRegistry, TraceContext};
 use crate::util::json::Json;
 
 use super::driver::Driver;
 use super::metrics::LatencyStats;
+
+/// Default client-side wait in [`Ticket::wait`] when the request
+/// carries no deadline.
+pub const DEFAULT_CLIENT_WAIT: Duration = Duration::from_secs(30);
+
+/// Why a request did not get a normal answer. Every shed, failure, or
+/// overload is reported as one of these typed values — never a bare
+/// closed channel or an `anyhow` string.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control rejected the request (queue full) or the
+    /// shedding rung of the degradation ladder dropped it.
+    Overloaded {
+        /// Bound of the queue that was full.
+        queue_depth: usize,
+    },
+    /// The request's deadline passed before an answer was produced.
+    DeadlineExceeded {
+        /// How long the request had been in flight when it was shed.
+        waited_ms: u64,
+    },
+    /// The cluster front door found no healthy replica (and bounded
+    /// re-route retries were exhausted).
+    AllReplicasDown,
+    /// The backend failed while computing this request's batch.
+    Backend(String),
+    /// The server is shut down and no longer accepts requests.
+    Shutdown,
+    /// The response channel closed without a reply — a bug if it ever
+    /// surfaces; the chaos property suite asserts it never does.
+    Lost,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Overloaded { queue_depth } => {
+                write!(f, "overloaded: request shed, queue of {queue_depth} full")
+            }
+            ServeError::DeadlineExceeded { waited_ms } => {
+                write!(f, "deadline exceeded after {waited_ms} ms")
+            }
+            ServeError::AllReplicasDown => write!(f, "no healthy replicas"),
+            ServeError::Backend(msg) => write!(f, "backend error: {msg}"),
+            ServeError::Shutdown => write!(f, "server shut down"),
+            ServeError::Lost => write!(f, "request lost: response channel closed without a reply"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a response channel carries: probabilities or a typed error.
+pub type ServeResult = std::result::Result<Vec<f32>, ServeError>;
+
+/// Client-side handle for one submitted request. Wraps the response
+/// channel together with the request's deadline so waiting is
+/// deadline-aware by construction.
+pub struct Ticket {
+    rx: mpsc::Receiver<ServeResult>,
+    born: Instant,
+    deadline: Option<Instant>,
+}
+
+impl Ticket {
+    pub(crate) fn new(rx: mpsc::Receiver<ServeResult>, trace: &TraceContext) -> Ticket {
+        Ticket { rx, born: trace.born, deadline: trace.deadline }
+    }
+
+    /// Absolute deadline stamped at submission, if any.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// Wait up to `timeout` (clamped to the request's own deadline)
+    /// for the response. A timed-out wait is a `DeadlineExceeded`; a
+    /// channel that closed without a reply is `Lost`.
+    pub fn recv_timeout(&self, timeout: Duration) -> ServeResult {
+        let wait = match self.deadline {
+            Some(dl) => dl.saturating_duration_since(Instant::now()).min(timeout),
+            None => timeout,
+        };
+        match self.rx.recv_timeout(wait) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ServeError::DeadlineExceeded {
+                waited_ms: self.born.elapsed().as_millis() as u64,
+            }),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::Lost),
+        }
+    }
+
+    /// Wait until the request's deadline (or [`DEFAULT_CLIENT_WAIT`]
+    /// when it has none).
+    pub fn wait(&self) -> ServeResult {
+        self.recv_timeout(DEFAULT_CLIENT_WAIT)
+    }
+
+    /// Drain a second response if one was (erroneously) produced. The
+    /// chaos suite uses this to assert no request is double-answered.
+    pub fn extra_response(&self) -> Option<ServeResult> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Front-door admission policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Admission {
+    /// Block the submitter when the queue is full (FIFO backpressure —
+    /// the historical behavior, right for closed-loop clients).
+    #[default]
+    Block,
+    /// Reject immediately with [`ServeError::Overloaded`] when the
+    /// queue is full (right for open-loop traffic: overload degrades
+    /// into a measured shed rate instead of unbounded queueing).
+    Shed,
+}
 
 /// A batched inference engine the serving layer can drive.
 ///
@@ -50,6 +177,15 @@ pub trait InferBackend {
     /// backend holds a quantized store; echoed in [`ServerReport`]).
     fn precision(&self) -> QuantFormat {
         QuantFormat::F32
+    }
+
+    /// Switch the live weight store to `fmt` (degradation ladder /
+    /// recovery). Returns `false` when this backend cannot requantize
+    /// in place — e.g. a multi-worker executor whose workers share an
+    /// immutable graph — in which case the ladder level still applies
+    /// its other measures.
+    fn degrade_precision(&mut self, _fmt: QuantFormat) -> bool {
+        false
     }
 }
 
@@ -126,13 +262,21 @@ impl InferBackend for GraphBackend {
             Ok(self.graph.infer_batch_threads(images, self.threads))
         }
     }
+
+    fn degrade_precision(&mut self, fmt: QuantFormat) -> bool {
+        // The worker loop owns the backend exclusively, so the store
+        // swap happens between dispatches — no request ever sees a
+        // half-requantized graph.
+        self.graph.set_precision(fmt);
+        true
+    }
 }
 
 /// One in-flight request.
 struct Request {
     img: Vec<f32>,
     trace: TraceContext,
-    resp: mpsc::Sender<Vec<f32>>,
+    resp: mpsc::Sender<ServeResult>,
 }
 
 /// Server tuning.
@@ -142,6 +286,13 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// Max time the batcher waits to fill a batch before flushing.
     pub flush_timeout: Duration,
+    /// Default per-request latency budget stamped at submission
+    /// (`None` = requests carry no deadline).
+    pub deadline: Option<Duration>,
+    /// What `submit` does when the queue is full.
+    pub admission: Admission,
+    /// Graceful-degradation ladder (`None` = disabled).
+    pub degrade: Option<DegradeConfig>,
 }
 
 impl Default for ServerConfig {
@@ -149,6 +300,9 @@ impl Default for ServerConfig {
         ServerConfig {
             queue_depth: 128,
             flush_timeout: Duration::from_millis(2),
+            deadline: None,
+            admission: Admission::Block,
+            degrade: None,
         }
     }
 }
@@ -170,8 +324,20 @@ pub struct ServerReport {
     pub service: LatencyStats,
     /// Host-splitter thread count of the backend (1 = single-threaded).
     pub threads: usize,
-    /// Weight-store format the backend served from.
+    /// Weight-store format the backend finished serving from (int8
+    /// while the degradation ladder holds `Quantized` or above).
     pub precision: QuantFormat,
+    /// Requests answered `DeadlineExceeded` before dispatch.
+    pub shed_deadline: u64,
+    /// Requests answered `Overloaded` by the worker's shedding rung
+    /// (front-door admission sheds are counted on
+    /// `serve.shed_overload`, not here — they never reach the worker).
+    pub shed_overload: u64,
+    /// Final degradation-ladder level (0 = full service).
+    pub degrade_level: usize,
+    /// True when the worker thread panicked and this report was
+    /// synthesized at join time instead of aborting the caller.
+    pub panicked: bool,
 }
 
 impl ServerReport {
@@ -185,6 +351,10 @@ impl ServerReport {
             service: LatencyStats::zero(),
             threads,
             precision: QuantFormat::F32,
+            shed_deadline: 0,
+            shed_overload: 0,
+            degrade_level: 0,
+            panicked: false,
         }
     }
 
@@ -196,6 +366,10 @@ impl ServerReport {
             ("mean_fill", Json::from(self.mean_fill)),
             ("threads", Json::from(self.threads)),
             ("precision", Json::from(self.precision.name())),
+            ("shed_deadline", Json::from(self.shed_deadline as f64)),
+            ("shed_overload", Json::from(self.shed_overload as f64)),
+            ("degrade_level", Json::from(self.degrade_level)),
+            ("panicked", Json::from(self.panicked)),
             ("latency", self.latency.to_json()),
             ("queue_wait", self.queue_wait.to_json()),
             ("service", self.service.to_json()),
@@ -207,7 +381,10 @@ impl ServerReport {
 /// `recv`; keep pulling until `max_batch` items are collected, the
 /// flush deadline passes, or the queue closes. This is the dynamic
 /// batching policy shared by [`InferenceServer`] and the cluster
-/// replica loop (`cluster::coordinator`).
+/// replica loop (`cluster::coordinator`). Both loops pass the
+/// collected batch through [`shed_expired`] before dispatching, so a
+/// request whose deadline lapsed while queued costs no backend
+/// compute.
 pub fn collect_batch<T>(
     rx: &Fifo<T>,
     first: T,
@@ -230,12 +407,68 @@ pub fn collect_batch<T>(
     items
 }
 
+/// A queued request the shed pass can answer and discard. Implemented
+/// by the server's and the cluster's request types so both batch loops
+/// share one shed policy.
+pub trait ShedResponder {
+    fn trace(&self) -> &TraceContext;
+    /// Consume the request, answering `err` on its response channel.
+    fn shed(self, err: ServeError);
+}
+
+impl ShedResponder for Request {
+    fn trace(&self) -> &TraceContext {
+        &self.trace
+    }
+
+    fn shed(self, err: ServeError) {
+        let _ = self.resp.send(Err(err));
+    }
+}
+
+/// Shed-before-dispatch: walk a collected batch once and answer —
+/// without spending backend compute —
+///
+/// - `DeadlineExceeded` to requests whose deadline already passed;
+/// - `Overloaded` to requests that waited in queue longer than
+///   `stale_after` (only passed when the degradation ladder sits on
+///   its shedding rung).
+///
+/// Returns the surviving requests plus (deadline, overload) shed
+/// counts.
+pub fn shed_expired<T: ShedResponder>(
+    reqs: Vec<T>,
+    stale_after: Option<Duration>,
+    queue_depth: usize,
+) -> (Vec<T>, u64, u64) {
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(reqs.len());
+    let (mut n_deadline, mut n_overload) = (0u64, 0u64);
+    for req in reqs {
+        let t = req.trace();
+        if t.expired_at(now) {
+            let waited_ms = now.saturating_duration_since(t.born).as_millis() as u64;
+            req.shed(ServeError::DeadlineExceeded { waited_ms });
+            n_deadline += 1;
+        } else if stale_after.is_some_and(|s| now.saturating_duration_since(t.sent) >= s) {
+            req.shed(ServeError::Overloaded { queue_depth });
+            n_overload += 1;
+        } else {
+            live.push(req);
+        }
+    }
+    (live, n_deadline, n_overload)
+}
+
 /// Handle to a running server.
 pub struct InferenceServer {
     queue: Fifo<Request>,
     worker: thread::JoinHandle<ServerReport>,
     metrics: Arc<MetricsRegistry>,
     requests: Counter,
+    shed_overload: Counter,
+    deadline: Option<Duration>,
+    admission: Admission,
 }
 
 impl InferenceServer {
@@ -254,8 +487,10 @@ impl InferenceServer {
 
     /// Start the server recording into `metrics` under the `serve.*`
     /// prefix: counters `serve.requests` / `serve.served` /
-    /// `serve.batches` / `serve.backend_errors`, queue gauges
-    /// `serve.queue.{depth,high_water,capacity}`, and histograms
+    /// `serve.batches` / `serve.backend_errors` /
+    /// `serve.shed_deadline` / `serve.shed_overload`, queue gauges
+    /// `serve.queue.{depth,high_water,capacity}`, the degradation
+    /// gauge `serve.degrade_level`, and histograms
     /// `serve.{e2e,queue_wait,service}_us` — the per-request
     /// queue-vs-compute decomposition.
     pub fn start_with_metrics<B, F>(
@@ -273,13 +508,19 @@ impl InferenceServer {
         let served_ctr = metrics.counter("serve.served");
         let batches_ctr = metrics.counter("serve.batches");
         let errors_ctr = metrics.counter("serve.backend_errors");
+        let shed_dl_ctr = metrics.counter("serve.shed_deadline");
+        let shed_ov_ctr = metrics.counter("serve.shed_overload");
+        let degrade_g = metrics.gauge("serve.degrade_level");
         let e2e_h = metrics.histogram("serve.e2e_us");
         let wait_h = metrics.histogram("serve.queue_wait_us");
         let svc_h = metrics.histogram("serve.service_us");
         let rx = queue.clone();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let front_shed = shed_ov_ctr.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+        let wcfg = cfg.clone();
         let worker = thread::spawn(move || {
-            let backend = match make_backend() {
+            let cfg = wcfg;
+            let mut backend = match make_backend() {
                 Ok(b) => {
                     let _ = ready_tx.send(Ok(()));
                     b
@@ -291,17 +532,43 @@ impl InferenceServer {
             };
             let max_batch = backend.max_batch();
             let threads = backend.threads();
-            let precision = backend.precision();
+            let base_precision = backend.precision();
+            let mut ladder = cfg.degrade.clone().map(DegradeLadder::new);
+            let mut level = DegradeLevel::Full;
+            let mut flush = cfg.flush_timeout;
             let mut served = 0u64;
             let mut batches = 0u64;
             let mut fills = 0u64;
+            let mut shed_deadline = 0u64;
+            let mut shed_overload = 0u64;
             // Dispatch buffer reused across rounds (steady-state batch
             // path allocates nothing beyond the response vectors).
             let mut imgs: Vec<Vec<f32>> = Vec::new();
             // Batch loop: block for the first request, then fill
             // greedily until full or flush timeout.
             while let Ok(first) = rx.recv() {
-                let mut reqs = collect_batch(&rx, first, max_batch, cfg.flush_timeout);
+                let reqs = collect_batch(&rx, first, max_batch, flush);
+                // Shed-before-dispatch: expired deadlines always; stale
+                // queue waits only on the ladder's shedding rung.
+                let stale_after = (level == DegradeLevel::Shedding)
+                    .then(|| {
+                        ladder
+                            .as_ref()
+                            .map(|l| Duration::from_secs_f64(l.config().p99_target_ms / 1e3))
+                    })
+                    .flatten();
+                let (mut reqs, n_dl, n_ov) = shed_expired(reqs, stale_after, cfg.queue_depth);
+                shed_deadline += n_dl;
+                shed_overload += n_ov;
+                if n_dl > 0 {
+                    shed_dl_ctr.add(n_dl);
+                }
+                if n_ov > 0 {
+                    shed_ov_ctr.add(n_ov);
+                }
+                if reqs.is_empty() {
+                    continue;
+                }
                 // Move the images out instead of cloning: nothing reads
                 // `req.img` after dispatch (the serving hot path).
                 imgs.clear();
@@ -312,27 +579,69 @@ impl InferenceServer {
                 for req in &reqs {
                     wait_h.record(dispatch - req.trace.sent);
                 }
+                let mut worst = Duration::ZERO;
                 match backend.infer_batch(&imgs) {
                     Ok(probs) => {
                         // The batch's compute time is each member's
                         // service time (they rode the same dispatch).
                         let service = dispatch.elapsed();
-                        for (req, p) in reqs.into_iter().zip(probs) {
+                        let mut probs = probs.into_iter();
+                        for req in reqs {
                             svc_h.record(service);
-                            e2e_h.record(req.trace.age());
-                            let _ = req.resp.send(p);
-                            served += 1;
-                            served_ctr.inc();
+                            let age = req.trace.age();
+                            worst = worst.max(age);
+                            e2e_h.record(age);
+                            match probs.next() {
+                                Some(p) => {
+                                    let _ = req.resp.send(Ok(p));
+                                    served += 1;
+                                    served_ctr.inc();
+                                }
+                                None => {
+                                    errors_ctr.inc();
+                                    let _ = req.resp.send(Err(ServeError::Backend(
+                                        "backend returned a short batch".into(),
+                                    )));
+                                }
+                            }
                         }
                     }
-                    Err(_) => {
-                        // Drop responses; clients see a closed channel.
+                    Err(e) => {
+                        // Typed response instead of a silently dropped
+                        // channel: every member learns what failed.
                         errors_ctr.inc();
+                        let msg = format!("{e:#}");
+                        worst = reqs.iter().map(|r| r.trace.age()).max().unwrap_or_default();
+                        for req in reqs {
+                            let _ = req.resp.send(Err(ServeError::Backend(msg.clone())));
+                        }
                     }
                 }
                 batches += 1;
                 batches_ctr.inc();
                 fills += imgs.len() as u64;
+                // Degradation ladder: one sample per batch (its worst
+                // end-to-end age); apply the level absolutely so
+                // recovery retraces the same rungs.
+                if let Some(l) = ladder.as_mut() {
+                    if let Some(new_level) = l.observe(worst.as_secs_f64() * 1e3) {
+                        level = new_level;
+                        degrade_g.set(level.index() as i64);
+                        flush = if level >= DegradeLevel::ShortFlush {
+                            cfg.flush_timeout / 4
+                        } else {
+                            cfg.flush_timeout
+                        };
+                        let want = if level >= DegradeLevel::Quantized {
+                            QuantFormat::Int8
+                        } else {
+                            base_precision
+                        };
+                        if backend.precision() != want {
+                            backend.degrade_precision(want);
+                        }
+                    }
+                }
             }
             ServerReport {
                 served,
@@ -342,11 +651,23 @@ impl InferenceServer {
                 queue_wait: wait_h.stats(),
                 service: svc_h.stats(),
                 threads,
-                precision,
+                precision: backend.precision(),
+                shed_deadline,
+                shed_overload,
+                degrade_level: level.index(),
+                panicked: false,
             }
         });
         match ready_rx.recv() {
-            Ok(Ok(())) => Ok(InferenceServer { queue, worker, metrics, requests }),
+            Ok(Ok(())) => Ok(InferenceServer {
+                queue,
+                worker,
+                metrics,
+                requests,
+                shed_overload: front_shed,
+                deadline: cfg.deadline,
+                admission: cfg.admission,
+            }),
             Ok(Err(msg)) => {
                 let _ = worker.join();
                 Err(anyhow::anyhow!("server startup failed: {msg}"))
@@ -364,21 +685,52 @@ impl InferenceServer {
         self.metrics.clone()
     }
 
-    /// Submit one image; returns a handle to await the probabilities.
-    pub fn submit(&self, img: Vec<f32>) -> Result<mpsc::Receiver<Vec<f32>>> {
-        let (tx, rx) = mpsc::channel();
-        let req = Request { img, trace: TraceContext::start(), resp: tx };
-        self.queue
-            .send(req)
-            .map_err(|_| anyhow::anyhow!("server shut down"))?;
-        self.requests.inc();
-        Ok(rx)
+    /// Submit one image under the configured default deadline; returns
+    /// a [`Ticket`] to await the probabilities.
+    pub fn submit(&self, img: Vec<f32>) -> std::result::Result<Ticket, ServeError> {
+        self.submit_with_deadline(img, self.deadline)
     }
 
-    /// Stop accepting requests, drain, and return statistics.
+    /// Submit with an explicit latency budget (overrides the config
+    /// default; `None` = no deadline).
+    pub fn submit_with_deadline(
+        &self,
+        img: Vec<f32>,
+        budget: Option<Duration>,
+    ) -> std::result::Result<Ticket, ServeError> {
+        let (tx, rx) = mpsc::channel();
+        let trace = TraceContext::start().with_deadline(budget);
+        let ticket = Ticket::new(rx, &trace);
+        let req = Request { img, trace, resp: tx };
+        match self.admission {
+            Admission::Block => {
+                if self.queue.send(req).is_err() {
+                    return Err(ServeError::Shutdown);
+                }
+            }
+            Admission::Shed => match self.queue.try_send(req) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) => {
+                    self.shed_overload.inc();
+                    return Err(ServeError::Overloaded { queue_depth: self.queue.capacity() });
+                }
+                Err(TrySendError::Closed(_)) => return Err(ServeError::Shutdown),
+            },
+        }
+        self.requests.inc();
+        Ok(ticket)
+    }
+
+    /// Stop accepting requests, drain, and return statistics. A
+    /// panicked worker is folded into the report (`panicked = true`)
+    /// instead of aborting the caller.
     pub fn shutdown(self) -> ServerReport {
         self.queue.close();
-        self.worker.join().expect("server thread panicked")
+        self.worker.join().unwrap_or_else(|_| {
+            let mut r = ServerReport::empty(1);
+            r.panicked = true;
+            r
+        })
     }
 }
 
@@ -386,5 +738,6 @@ impl InferenceServer {
 mod tests {
     // PJRT-backed server tests live in rust/tests/integration.rs;
     // backend-mocked batching-path tests in
-    // rust/tests/serving_batching.rs.
+    // rust/tests/serving_batching.rs; chaos/deadline/degradation
+    // properties in rust/tests/chaos.rs.
 }

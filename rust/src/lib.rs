@@ -41,6 +41,7 @@
 pub mod baseline;
 pub mod bcpnn;
 pub mod bench_harness;
+pub mod chaos;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

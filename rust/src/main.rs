@@ -49,7 +49,14 @@ COMMANDS:
                     127.0.0.1:PORT, --metrics-interval MS, default 500);
                     --spec FILE serves a tuned deployment spec from
                     `repro tune --out` (backend, fleet, threads,
-                    precision all come from the spec)
+                    precision all come from the spec);
+                    --chaos PLAN runs a scripted fault schedule against
+                    a replicated cluster and accounts for every
+                    request (crash:replica0@100,revive:replica0@200;
+                    verbs: crash|devloss|slow|stall|revive;
+                    --replicas N --shards N --queue-depth N
+                    --deadline-ms N --admission block|shed
+                    --p99-target MS enables the degradation ladder)
   bench             host batched-tile throughput: single-image span vs
                     AoSoA tile vs tile + threads (--config tiny
                     --images N --threads N); prints the modeled
@@ -482,6 +489,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.get_or("config", "tiny").to_string();
     let cfg = by_name(&name)?;
 
+    if args.get("chaos").is_some() {
+        return cmd_serve_chaos(args, cfg, n_requests, seed);
+    }
+
     if args.flag("host") {
         return cmd_serve_host(args, cfg, n_requests, seed);
     }
@@ -518,7 +529,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let mut agree = 0usize;
     for (rx, &label) in pending.iter().zip(&data.labels) {
-        let probs = rx.recv_timeout(Duration::from_secs(30))?;
+        // Deadline-aware typed wait: a timeout surfaces as a
+        // `DeadlineExceeded`/`Lost` ServeError, never a blind unwrap.
+        let probs = rx.wait()?;
         let pred = probs
             .iter()
             .enumerate()
@@ -538,6 +551,105 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         print_serve_report(&rep, cfg.batch);
         println!("(untrained net agreement with labels: {agree}/{n_requests})");
+    }
+    Ok(())
+}
+
+/// `repro serve --chaos <plan>`: run a scripted fault schedule against
+/// a replicated cluster serving `--config` and account for every
+/// request's fate. The plan is keyed on the submission counter
+/// (`crash:replica0@100,revive:replica0@200`), so which requests race
+/// which fault is identical run to run; with no deadline the full
+/// outcome digest is byte-reproducible (`determinism key` below).
+fn cmd_serve_chaos(
+    args: &Args, cfg: bcpnn_accel::config::ModelConfig, n_requests: usize, seed: u64,
+) -> Result<()> {
+    use bcpnn_accel::chaos::{run_chaos, DegradeConfig, FaultPlan};
+    use bcpnn_accel::cluster::{ClusterConfig, ClusterServer};
+    use bcpnn_accel::coordinator::Admission;
+
+    let plan = FaultPlan::parse(args.get_or("chaos", ""))?;
+    let replicas: usize = args.get_parse("replicas", 2usize)?;
+    plan.check_replicas(replicas)?;
+    let deadline = match args.get("deadline-ms") {
+        Some(s) => Some(Duration::from_millis(s.parse().map_err(|_| {
+            anyhow::anyhow!("--deadline-ms {s:?} is not an integer")
+        })?)),
+        None => None,
+    };
+    let admission = match args.get_or("admission", "block") {
+        "block" => Admission::Block,
+        "shed" => Admission::Shed,
+        other => bail!("unknown --admission {other:?} (block|shed)"),
+    };
+    let degrade = match args.get("p99-target") {
+        Some(s) => Some(DegradeConfig::new(s.parse().map_err(|_| {
+            anyhow::anyhow!("--p99-target {s:?} is not a number (ms)")
+        })?)),
+        None => None,
+    };
+    let ccfg = ClusterConfig {
+        replicas,
+        shards_per_replica: args.get_parse("shards", 2usize)?,
+        queue_depth: args.get_parse("queue-depth", 128usize)?,
+        deadline,
+        admission,
+        degrade,
+        ..ClusterConfig::default()
+    };
+    eprintln!(
+        "chaos: {} replica(s) of {}, plan [{}]{}",
+        replicas,
+        cfg.name,
+        plan.to_spec(),
+        deadline.map(|d| format!(", {} ms deadline", d.as_millis())).unwrap_or_default(),
+    );
+    let server = ClusterServer::start(&cfg, seed, ccfg)?;
+    let exporter = start_exporter(args, server.metrics())?;
+    let data = synth::generate(cfg.img_side, cfg.n_classes, n_requests, seed, 0.15);
+    let outcome = run_chaos(server, plan, &data.images, None);
+    if let Some(ex) = exporter {
+        ex.stop();
+    }
+    if args.flag("json") {
+        println!("{}", outcome.to_json());
+    } else {
+        println!(
+            "chaos outcome: {} requests -> {} served, {} shed (deadline), \
+             {} shed (overload), {} all-down, {} backend errors, {} lost, \
+             {} double-answered",
+            outcome.requests,
+            outcome.served,
+            outcome.shed_deadline,
+            outcome.shed_overload,
+            outcome.all_down,
+            outcome.backend_errors,
+            outcome.lost,
+            outcome.double_answered,
+        );
+        for ev in &outcome.events {
+            println!("  event {ev}");
+        }
+        println!(
+            "  {} rerouted, {} resurrection(s), {} retries, {} panic(s)",
+            outcome.report.rerouted,
+            outcome.report.resurrections,
+            outcome.report.retries,
+            outcome.report.panics,
+        );
+        for r in &outcome.report.replicas {
+            println!(
+                "  replica {}.{}: served {}, rerouted out {}, shed {}{}{}",
+                r.replica,
+                r.incarnation,
+                r.served,
+                r.rerouted_out,
+                r.shed,
+                if r.failed { ", failed" } else { "" },
+                if r.panicked { ", PANICKED" } else { "" },
+            );
+        }
+        println!("  determinism key: {}", outcome.determinism_key());
     }
     Ok(())
 }
@@ -609,7 +721,7 @@ fn cmd_serve_host(
         pending.push(server.submit(img.clone())?);
     }
     for rx in &pending {
-        let _ = rx.recv_timeout(Duration::from_secs(30))?;
+        let _ = rx.wait()?;
     }
     let rep = server.shutdown();
     if let Some(ex) = exporter {
@@ -669,7 +781,7 @@ fn cmd_serve_spec(args: &Args, path: &str, n_requests: usize, seed: u64) -> Resu
                 pending.push(server.submit(img.clone())?);
             }
             for rx in &pending {
-                let _ = rx.recv_timeout(Duration::from_secs(30))?;
+                let _ = rx.wait()?;
             }
             let rep = server.shutdown();
             if let Some(ex) = exporter {
@@ -692,7 +804,7 @@ fn cmd_serve_spec(args: &Args, path: &str, n_requests: usize, seed: u64) -> Resu
                 pending.push(server.submit(img.clone())?);
             }
             for rx in &pending {
-                let _ = rx.recv_timeout(Duration::from_secs(30))?;
+                let _ = rx.wait()?;
             }
             let rep = server.shutdown();
             if let Some(ex) = exporter {

@@ -818,6 +818,7 @@ mod tests {
             queue_wait: st.clone(),
             service: st.clone(),
             input_fifo: Default::default(),
+            panicked: false,
         };
         let t = decomposition_table(&[w]);
         assert!(t.contains("wait_p50"), "{t}");
@@ -832,6 +833,10 @@ mod tests {
             service: st,
             threads: 4,
             precision: crate::bcpnn::QuantFormat::Bf16,
+            shed_deadline: 0,
+            shed_overload: 0,
+            degrade_level: 0,
+            panicked: false,
         };
         let s = serve_decomposition(&r);
         assert!(s.contains("3 images in 2 batches"), "{s}");

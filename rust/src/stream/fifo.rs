@@ -17,6 +17,18 @@ use crate::telemetry::{Gauge, MetricsRegistry};
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RecvError;
 
+/// Error returned by [`Fifo::try_send`]; carries the rejected value
+/// back so the caller can shed it with a typed response (admission
+/// control) or re-route it.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    /// The FIFO is at capacity. Not counted as a `write_stall`: the
+    /// caller chose not to wait, so no writer was ever stalled.
+    Full(T),
+    /// The FIFO is closed.
+    Closed(T),
+}
+
 /// Instrumentation counters for one FIFO.
 #[derive(Debug, Default)]
 pub struct FifoStats {
@@ -168,6 +180,29 @@ impl<T> Fifo<T> {
         Ok(())
     }
 
+    /// Non-blocking push (admission control). `Full`/`Closed` hand the
+    /// value back untouched; a rejected send is never counted as a
+    /// push or a write stall — the stats see only traffic that
+    /// actually entered the stream.
+    pub fn try_send(&self, v: T) -> Result<(), TrySendError<T>> {
+        let inner = &*self.inner;
+        let mut st = inner.q.lock().unwrap();
+        if st.closed {
+            return Err(TrySendError::Closed(v));
+        }
+        if st.buf.len() >= inner.capacity {
+            return Err(TrySendError::Full(v));
+        }
+        st.buf.push_back(v);
+        let occ = st.buf.len() as u64;
+        inner.stats.pushes.fetch_add(1, Ordering::Relaxed);
+        inner.stats.high_water.fetch_max(occ, Ordering::Relaxed);
+        inner.mirror_depth(occ as usize);
+        drop(st);
+        inner.not_empty.notify_one();
+        Ok(())
+    }
+
     /// Blocking pop. `Err(RecvError)` only after close + drain.
     pub fn recv(&self) -> Result<T, RecvError> {
         let inner = &*self.inner;
@@ -211,6 +246,20 @@ impl<T> Fifo<T> {
         drop(st);
         inner.not_empty.notify_all();
         inner.not_full.notify_all();
+    }
+
+    /// Reverse a `close()`: new sends are accepted again. The channel
+    /// object (and every clone held by peers) keeps working — this is
+    /// what lets a resurrected replica reuse its queue without
+    /// re-plumbing the scheduler. Stats and instrumentation carry
+    /// over; anything left in the buffer stays there.
+    pub fn reopen(&self) {
+        let inner = &*self.inner;
+        let mut st = inner.q.lock().unwrap();
+        st.closed = false;
+        drop(st);
+        // Readers blocked in `recv` were already woken by `close()`;
+        // nobody waits on a closed channel, so no notify is needed.
     }
 
     pub fn is_closed(&self) -> bool {
@@ -354,6 +403,48 @@ mod tests {
         let s = f.stats();
         assert_eq!(s.pushes, 4000);
         assert_eq!(s.pops, 4000);
+    }
+
+    #[test]
+    fn try_send_full_returns_value_without_stall_or_push() {
+        let f = Fifo::with_capacity(2);
+        f.try_send(1).unwrap();
+        f.try_send(2).unwrap();
+        assert_eq!(f.try_send(3), Err(TrySendError::Full(3)));
+        let s = f.stats();
+        assert_eq!(s.pushes, 2, "rejected send must not count as a push");
+        assert_eq!(s.write_stalls, 0, "try_send never stalls");
+        assert_eq!(f.recv(), Ok(1));
+        f.try_send(4).unwrap();
+        assert_eq!(f.recv(), Ok(2));
+        assert_eq!(f.recv(), Ok(4));
+    }
+
+    #[test]
+    fn try_send_closed_returns_value() {
+        let f = Fifo::with_capacity(2);
+        f.close();
+        assert_eq!(f.try_send(9), Err(TrySendError::Closed(9)));
+        assert_eq!(f.stats().pushes, 0);
+    }
+
+    #[test]
+    fn reopen_after_close_accepts_new_traffic_on_old_clones() {
+        let f = Fifo::with_capacity(2);
+        let peer = f.clone(); // a scheduler's long-lived handle
+        f.send(1).unwrap();
+        f.close();
+        assert_eq!(peer.send(2), Err(2));
+        assert_eq!(f.recv(), Ok(1));
+        assert_eq!(f.recv(), Err(RecvError));
+        f.reopen();
+        assert!(!peer.is_closed());
+        peer.send(3).unwrap(); // the old clone works again
+        f.try_send(4).unwrap();
+        assert_eq!(f.recv(), Ok(3));
+        assert_eq!(f.recv(), Ok(4));
+        // Stats accumulate across incarnations of the channel.
+        assert_eq!(f.stats().pushes, 3);
     }
 
     #[test]

@@ -19,5 +19,5 @@ pub mod depth;
 pub mod fifo;
 pub mod pipeline;
 
-pub use fifo::{Fifo, FifoStats, RecvError};
+pub use fifo::{Fifo, FifoStats, RecvError, TrySendError};
 pub use pipeline::{Pipeline, PipelineReport, StageReport};

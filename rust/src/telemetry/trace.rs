@@ -12,14 +12,18 @@ use std::time::{Duration, Instant};
 
 use super::registry::{Histo, MetricsRegistry};
 
-/// Two timestamps riding along with a request/job. `Copy` — embedding
-/// it in FIFO payloads costs two `Instant`s, no allocation.
+/// Timestamps riding along with a request/job. `Copy` — embedding
+/// it in FIFO payloads costs a few `Instant`s, no allocation.
 #[derive(Debug, Clone, Copy)]
 pub struct TraceContext {
     /// When the request entered the system (end-to-end clock).
     pub born: Instant,
     /// When the request was last enqueued (per-hop queue-wait clock).
     pub sent: Instant,
+    /// Absolute deadline, if the client set one. Carried through every
+    /// hop and reroute so any stage can shed the request before
+    /// spending compute on an answer nobody is waiting for.
+    pub deadline: Option<Instant>,
 }
 
 impl Default for TraceContext {
@@ -29,10 +33,22 @@ impl Default for TraceContext {
 }
 
 impl TraceContext {
-    /// New context: born and sent both now.
+    /// New context: born and sent both now, no deadline.
     pub fn start() -> TraceContext {
         let now = Instant::now();
-        TraceContext { born: now, sent: now }
+        TraceContext { born: now, sent: now, deadline: None }
+    }
+
+    /// Attach a relative deadline (measured from birth). `None` leaves
+    /// the request deadline-free.
+    pub fn with_deadline(mut self, budget: Option<Duration>) -> TraceContext {
+        self.deadline = budget.map(|b| self.born + b);
+        self
+    }
+
+    /// True once the deadline (if any) has passed at `now`.
+    pub fn expired_at(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
     }
 
     /// Mark a hop: the request is being enqueued into the next stage
@@ -92,6 +108,19 @@ mod tests {
         assert!(before_hop >= Duration::from_millis(8), "{before_hop:?}");
         assert!(after_hop < before_hop);
         assert!(t.age() >= before_hop, "birth clock must keep running");
+    }
+
+    #[test]
+    fn deadline_survives_hops_and_expires() {
+        let mut t = TraceContext::start().with_deadline(Some(Duration::from_millis(5)));
+        assert!(!t.expired_at(Instant::now()));
+        t.hop(); // reroute resets the wait clock, not the deadline
+        let d = t.deadline.expect("deadline must survive a hop");
+        assert!(t.expired_at(d + Duration::from_micros(1)));
+        thread::sleep(Duration::from_millis(8));
+        assert!(t.expired_at(Instant::now()));
+        let free = TraceContext::start().with_deadline(None);
+        assert!(!free.expired_at(Instant::now() + Duration::from_secs(3600)));
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Chaos-plane system tests: the serving invariants under scripted and
+//! seeded-random fault schedules (DESIGN.md §10).
+//!
+//! The contract these pin, end to end against real clusters:
+//!
+//! - **nothing lost, nothing double-answered** — every submitted
+//!   request ends in exactly one typed outcome while at least one
+//!   replica survives, across random crash/devloss/slow/stall/revive
+//!   schedules;
+//! - **resurrection restores service** — a crashed replica respawned
+//!   mid-traffic rejoins the scheduler pool, serves, and reports a
+//!   clean (failed = false) final incarnation;
+//! - **reproducibility** — the same plan against the same traffic
+//!   yields a byte-identical outcome digest;
+//! - **typed sheds** — deadlines and admission control answer with
+//!   `DeadlineExceeded` / `Overloaded`, never a dropped channel;
+//! - **the degradation ladder** walks a breaching server down to int8
+//!   weights and typed shedding.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bcpnn_accel::chaos::{run_chaos, DegradeConfig, DegradeLevel, FaultPlan};
+use bcpnn_accel::cluster::{ClusterConfig, ClusterServer, SchedulePolicy};
+use bcpnn_accel::config::by_name;
+use bcpnn_accel::coordinator::{
+    Admission, InferBackend, InferenceServer, ServeError, ServerConfig,
+};
+use bcpnn_accel::data::synth;
+use bcpnn_accel::testing::prop_check;
+
+fn tiny_cluster(replicas: usize, ccfg_over: ClusterConfig) -> (ClusterServer, Vec<Vec<f32>>) {
+    let cfg = by_name("tiny").unwrap();
+    let server = ClusterServer::start(
+        &cfg,
+        42,
+        ClusterConfig { replicas, shards_per_replica: 2, ..ccfg_over },
+    )
+    .unwrap();
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 120, 7, 0.15);
+    (server, d.images)
+}
+
+#[test]
+fn seeded_random_plans_lose_nothing() {
+    // Random fault schedules, constrained so >= 1 replica survives at
+    // every point: every request must come back served (no deadlines,
+    // blocking admission), none lost, none double-answered.
+    prop_check(
+        "chaos_no_loss",
+        0xC4A05,
+        4,
+        |rng| FaultPlan::random(rng, 3, 120),
+        |plan| {
+            let (server, images) = tiny_cluster(3, ClusterConfig::default());
+            let outcome = run_chaos(server, plan.clone(), &images, None);
+            if outcome.lost != 0 {
+                return Err(format!(
+                    "{} requests lost: {}",
+                    outcome.lost,
+                    outcome.determinism_key()
+                ));
+            }
+            if outcome.double_answered != 0 {
+                return Err(format!("{} double answers", outcome.double_answered));
+            }
+            if outcome.served != outcome.requests {
+                return Err(format!(
+                    "served {} of {}: {}",
+                    outcome.served,
+                    outcome.requests,
+                    outcome.determinism_key()
+                ));
+            }
+            if outcome.report.served != outcome.served {
+                return Err(format!(
+                    "report counts {} served, clients saw {}",
+                    outcome.report.served, outcome.served
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn crash_and_resurrect_rejoins_and_serves() {
+    let plan = FaultPlan::parse("crash:replica0@40,revive:replica0@80").unwrap();
+    let run = || {
+        let (server, images) = tiny_cluster(
+            2,
+            ClusterConfig { policy: SchedulePolicy::LeastOutstanding, ..ClusterConfig::default() },
+        );
+        let mut images = images;
+        images.extend(images.clone()); // 240 requests: traffic after the revive
+        run_chaos(server, plan.clone(), &images, None)
+    };
+    let outcome = run();
+
+    assert_eq!(outcome.lost, 0, "{}", outcome.determinism_key());
+    assert_eq!(outcome.double_answered, 0);
+    assert_eq!(outcome.served, outcome.requests, "{}", outcome.determinism_key());
+    assert_eq!(outcome.resurrections, 1);
+
+    // Three incarnation reports: replica 0's failed life, its healthy
+    // respawn, and replica 1 — ordered by (replica, incarnation).
+    assert_eq!(outcome.report.replicas.len(), 3);
+    let r0_first = &outcome.report.replicas[0];
+    let r0_second = &outcome.report.replicas[1];
+    let r1 = &outcome.report.replicas[2];
+    assert_eq!((r0_first.replica, r0_first.incarnation), (0, 0));
+    assert_eq!((r0_second.replica, r0_second.incarnation), (0, 1));
+    assert_eq!((r1.replica, r1.incarnation), (1, 0));
+    assert!(r0_first.failed, "first incarnation was crashed");
+    assert!(!r0_first.panicked);
+    assert!(!r0_second.failed, "resurrected incarnation must report healthy");
+    assert!(
+        r0_second.served > 0,
+        "resurrected replica rejoined the pool but served nothing"
+    );
+    assert!(!r1.failed);
+    assert_eq!(outcome.report.panics, 0);
+
+    // Byte-reproducible: same plan, same traffic, same digest.
+    let again = run();
+    assert_eq!(outcome.determinism_key(), again.determinism_key());
+}
+
+#[test]
+fn zero_deadline_sheds_everything_typed() {
+    let (server, images) = tiny_cluster(2, ClusterConfig::default());
+    let outcome = run_chaos(
+        server,
+        FaultPlan::default(),
+        &images[..24],
+        Some(Duration::ZERO),
+    );
+    assert_eq!(outcome.served, 0, "{}", outcome.determinism_key());
+    assert_eq!(outcome.shed_deadline, 24, "every request must get a typed deadline error");
+    assert_eq!(outcome.lost, 0);
+    assert_eq!(outcome.double_answered, 0);
+}
+
+/// Slow backend for overload tests: 1-image batches, fixed sleep.
+struct SlowBackend {
+    sleep: Duration,
+    calls: Arc<AtomicU64>,
+}
+
+impl InferBackend for SlowBackend {
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    fn infer_batch(&self, images: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        std::thread::sleep(self.sleep);
+        Ok(images.iter().map(|img| vec![img[0]]).collect())
+    }
+}
+
+#[test]
+fn shed_admission_rejects_overload_at_the_front_door() {
+    // Queue of 2 + 20 ms service + shed admission: a burst of 30
+    // instant submissions must split into served + typed Overloaded,
+    // with nothing lost and nothing blocked.
+    let server = InferenceServer::start(
+        || {
+            Ok(SlowBackend {
+                sleep: Duration::from_millis(20),
+                calls: Arc::new(AtomicU64::new(0)),
+            })
+        },
+        ServerConfig {
+            queue_depth: 2,
+            flush_timeout: Duration::from_millis(1),
+            admission: Admission::Shed,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+
+    let mut tickets = Vec::new();
+    let mut overloaded = 0u64;
+    for i in 0..30 {
+        match server.submit(vec![i as f32]) {
+            Ok(t) => tickets.push(t),
+            Err(ServeError::Overloaded { queue_depth }) => {
+                assert_eq!(queue_depth, 2);
+                overloaded += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(overloaded > 0, "a 2-deep queue cannot absorb a 30-burst at 20 ms/req");
+
+    let mut served = 0u64;
+    for t in &tickets {
+        t.wait().unwrap();
+        served += 1;
+        assert!(t.extra_response().is_none());
+    }
+    assert_eq!(served + overloaded, 30, "shed + served must partition the burst");
+
+    // Front-door sheds are visible on the metrics counter (they never
+    // reach the worker, so the report's worker-side column stays 0).
+    assert_eq!(server.metrics().counter("serve.shed_overload").get(), overloaded);
+    let rep = server.shutdown();
+    assert_eq!(rep.served, served);
+    assert!(!rep.panicked);
+}
+
+#[test]
+fn degradation_ladder_walks_to_int8_and_shedding() {
+    use bcpnn_accel::bcpnn::{LayerGraph, QuantFormat};
+    use bcpnn_accel::coordinator::GraphBackend;
+
+    // An unmeetable p99 target (1 ns): every batch breaches, so with
+    // breach_rounds = 2 the ladder escalates on batches 2 (int8), 4
+    // (short flush), 6 (shedding); requests after that are shed with
+    // typed Overloaded once their queue wait exceeds the target.
+    let cfg = by_name("tiny").unwrap();
+    let graph = LayerGraph::new(cfg.clone(), 3);
+    let server = InferenceServer::start(
+        move || Ok(GraphBackend::new(graph, 1)),
+        ServerConfig {
+            queue_depth: 64,
+            flush_timeout: Duration::from_micros(200),
+            degrade: Some(DegradeConfig {
+                p99_target_ms: 1e-6,
+                breach_rounds: 2,
+                recover_rounds: 1_000_000,
+            }),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+
+    let d = synth::generate(cfg.img_side, cfg.n_classes, 24, 5, 0.15);
+    let mut served = 0u64;
+    let mut shed = 0u64;
+    // One request at a time -> one batch each -> a deterministic walk
+    // up the ladder.
+    for img in &d.images {
+        let t = server.submit(img.clone()).unwrap();
+        match t.wait() {
+            Ok(probs) => {
+                assert_eq!(probs.len(), cfg.n_out());
+                served += 1;
+            }
+            Err(ServeError::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    let rep = server.shutdown();
+    assert_eq!(served + shed, 24);
+    assert!(served >= 2, "pre-escalation batches serve normally");
+    assert!(shed >= 1, "the shedding rung must shed typed Overloaded");
+    assert_eq!(rep.shed_overload, shed);
+    assert_eq!(
+        rep.degrade_level,
+        DegradeLevel::Shedding.index(),
+        "ladder should sit on the top rung"
+    );
+    assert_eq!(
+        rep.precision,
+        QuantFormat::Int8,
+        "Quantized rung requantizes the live GraphBackend store"
+    );
+}
+
+#[test]
+fn device_loss_reroutes_like_a_crash() {
+    // A devloss fault fires through HybridExecutor::fail_device — the
+    // replica discovers the loss itself and walks the ordinary failure
+    // path; clients never see the difference.
+    let plan = FaultPlan::parse("devloss:replica1.0@30").unwrap();
+    let (server, images) = tiny_cluster(2, ClusterConfig::default());
+    let outcome = run_chaos(server, plan, &images, None);
+    assert_eq!(outcome.lost, 0, "{}", outcome.determinism_key());
+    assert_eq!(outcome.served, outcome.requests);
+    assert_eq!(outcome.double_answered, 0);
+    let r1_failed = outcome
+        .report
+        .replicas
+        .iter()
+        .any(|r| r.replica == 1 && r.failed);
+    assert!(r1_failed, "device loss must retire its replica");
+}

@@ -79,7 +79,11 @@ fn generic_inference_server_drives_sharded_backend() {
     let p = plan(&cfg, 2, KernelVersion::Infer, &FpgaDevice::u55c()).unwrap();
     let server = InferenceServer::start(
         move || ShardedExecutor::new(net, &p),
-        ServerConfig { queue_depth: 64, flush_timeout: Duration::from_millis(2) },
+        ServerConfig {
+            queue_depth: 64,
+            flush_timeout: Duration::from_millis(2),
+            ..ServerConfig::default()
+        },
     )
     .unwrap();
 
@@ -111,6 +115,7 @@ fn cluster_round_robin_spreads_load() {
             queue_depth: 128,
             flush_timeout: Duration::from_millis(2),
             policy: SchedulePolicy::RoundRobin,
+            ..ClusterConfig::default()
         },
     )
     .unwrap();
@@ -156,6 +161,7 @@ fn cluster_failover_reroutes_without_loss() {
             // into one batch before noticing the injected failure.
             flush_timeout: Duration::from_millis(500),
             policy: SchedulePolicy::LeastOutstanding,
+            ..ClusterConfig::default()
         },
     )
     .unwrap();

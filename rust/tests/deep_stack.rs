@@ -220,7 +220,11 @@ fn serving_layer_drives_pipeline_parallel_backend() {
     let plan = plan_pipeline(&cfg, KernelVersion::Infer, &FpgaDevice::u55c()).unwrap();
     let server = InferenceServer::start(
         move || PipelineParallelExecutor::new(g, &plan),
-        ServerConfig { queue_depth: 64, flush_timeout: Duration::from_millis(2) },
+        ServerConfig {
+            queue_depth: 64,
+            flush_timeout: Duration::from_millis(2),
+            ..ServerConfig::default()
+        },
     )
     .unwrap();
 

@@ -198,7 +198,11 @@ fn inference_server_serves_batched_requests() {
             let session = Session::load_modes(&dir, "tiny", &["infer"])?;
             Driver::new(session, "tiny", 1)
         },
-        ServerConfig { queue_depth: 64, flush_timeout: Duration::from_millis(2) },
+        ServerConfig {
+            queue_depth: 64,
+            flush_timeout: Duration::from_millis(2),
+            ..ServerConfig::default()
+        },
     )
     .unwrap();
 

@@ -49,7 +49,7 @@ fn start(mock: MockBackend, flush: Duration) -> InferenceServer {
     let queue_depth = 64;
     InferenceServer::start(
         move || Ok(mock),
-        ServerConfig { queue_depth, flush_timeout: flush },
+        ServerConfig { queue_depth, flush_timeout: flush, ..ServerConfig::default() },
     )
     .unwrap()
 }
@@ -153,7 +153,11 @@ fn graph_backend_serves_tile_engine_bitwise_with_threads() {
         // surfaced in the report.
         let server = InferenceServer::start(
             move || Ok(backend),
-            ServerConfig { queue_depth: 64, flush_timeout: Duration::from_millis(2) },
+            ServerConfig {
+                queue_depth: 64,
+                flush_timeout: Duration::from_millis(2),
+                ..ServerConfig::default()
+            },
         )
         .unwrap();
         let pending: Vec<_> = d

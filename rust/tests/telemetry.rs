@@ -54,7 +54,11 @@ fn serve_decomposition_sums_to_e2e() {
     };
     let server = InferenceServer::start(
         move || Ok(backend),
-        ServerConfig { queue_depth: 64, flush_timeout: Duration::from_millis(5) },
+        ServerConfig {
+            queue_depth: 64,
+            flush_timeout: Duration::from_millis(5),
+            ..ServerConfig::default()
+        },
     )
     .unwrap();
 
